@@ -1,0 +1,115 @@
+//! Design of experiments — §2's "generic tools to explore large parameter
+//! sets": a full-factorial sweep of (diffusion-rate, evaporation-rate)
+//! delegated to a simulated PBS cluster, with the one-line environment
+//! switch of §2.2.
+//!
+//!     cargo run --release --example doe_sweep [-- --env slurm --step 24.75]
+
+use std::sync::Arc;
+
+use molers::cli::Args;
+use molers::environment::cluster::BatchEnvironment;
+use molers::environment::ssh::SshEnvironment;
+use molers::exec::ThreadPool;
+use molers::prelude::*;
+use molers::runtime::best_available_evaluator;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let step = args.f64("step", 24.75).map_err(anyhow::Error::msg)?;
+    let env_name = args.get_or("env", "pbs").to_string();
+
+    let g_diffusion = val_f64("gDiffusionRate");
+    let g_evaporation = val_f64("gEvaporationRate");
+    let seed = val_u32("seed");
+    let food = [val_f64("food1"), val_f64("food2"), val_f64("food3")];
+
+    let (evaluator, kind) = best_available_evaluator(2);
+
+    let model = {
+        let (gd, ge, s, f) = (
+            g_diffusion.clone(),
+            g_evaporation.clone(),
+            seed.clone(),
+            food.clone(),
+        );
+        ClosureTask::new("ants", move |ctx: &Context| {
+            let fit =
+                evaluator.evaluate(&[125.0, ctx.get(&gd)?, ctx.get(&ge)?], ctx.get(&s)?)?;
+            let mut out = Context::new();
+            for (fv, v) in f.iter().zip(fit) {
+                out.set(fv, v);
+            }
+            Ok(out)
+        })
+        .input(&g_diffusion)
+        .input(&g_evaporation)
+        .input(&seed)
+        .default(&seed, 42)
+        .output(&food[0])
+        .output(&food[1])
+        .output(&food[2])
+        .cost(36.0)
+    };
+
+    // DirectSampling: gDiffusionRate x gEvaporationRate grid
+    let sampling = FullFactorial::new(vec![
+        Factor::new(&g_diffusion, 0.0, 99.0, step),
+        Factor::new(&g_evaporation, 0.0, 99.0, step),
+    ]);
+    println!(
+        "model backend: {kind}; sweeping {} points on --env {env_name}",
+        sampling.size()
+    );
+
+    // the one-line environment switch
+    let pool = Arc::new(ThreadPool::default_size());
+    let env: Arc<dyn Environment> = match env_name.as_str() {
+        "local" => Arc::new(LocalEnvironment::with_pool(pool)),
+        "ssh" => Arc::new(SshEnvironment::new("calc01", 8, pool, 7)),
+        "slurm" => Arc::new(BatchEnvironment::slurm(16, pool, 7)),
+        "condor" => Arc::new(BatchEnvironment::condor(16, pool, 7)),
+        _ => Arc::new(BatchEnvironment::pbs(16, pool, 7)),
+    };
+
+    let mut puzzle = Puzzle::new();
+    let entry = puzzle.capsule(Arc::new(IdentityTask::new("entry")));
+    let model_c = puzzle.capsule(Arc::new(model));
+    let collect = puzzle.capsule(Arc::new(IdentityTask::new("collect")));
+    puzzle.explore(entry, Arc::new(sampling), model_c);
+    puzzle.aggregate(model_c, collect);
+    puzzle.on(model_c, Arc::clone(&env));
+    puzzle.hook(
+        collect,
+        Arc::new(CsvHook::new(
+            "/tmp/ants/doe.csv",
+            &["gDiffusionRate", "gEvaporationRate", "food1", "food2", "food3"],
+        )),
+    );
+
+    let result = MoleExecution::new(puzzle, Arc::new(LocalEnvironment::new(2)), 7)
+        .start()?;
+
+    // report the sweep as a table ordered by total foraging time
+    let out = &result.outputs[0];
+    let ds: Vec<f64> = out.get(&g_diffusion.array())?;
+    let es: Vec<f64> = out.get(&g_evaporation.array())?;
+    let f1: Vec<f64> = out.get(&food[0].array())?;
+    let f2: Vec<f64> = out.get(&food[1].array())?;
+    let f3: Vec<f64> = out.get(&food[2].array())?;
+    let mut rows: Vec<(f64, f64, f64, f64, f64)> = (0..ds.len())
+        .map(|i| (ds[i], es[i], f1[i], f2[i], f3[i]))
+        .collect();
+    rows.sort_by(|a, b| (a.2 + a.3 + a.4).partial_cmp(&(b.2 + b.3 + b.4)).unwrap());
+    println!("\n diffusion evaporation |    f1     f2     f3   (best first)");
+    for (d, e, a, b, c) in rows.iter().take(10) {
+        println!(" {d:9.2} {e:11.2} | {a:6.1} {b:6.1} {c:6.1}");
+    }
+    println!(
+        "\n{} jobs, virtual makespan {:.0} s on {}",
+        result.report.jobs,
+        result.report.virtual_makespan,
+        env.name()
+    );
+    Ok(())
+}

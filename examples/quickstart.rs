@@ -1,0 +1,93 @@
+//! Quickstart — paper Listing 2: embed the ant model as a task, run it
+//! once with explicit parameters, observe the outputs through a hook.
+//!
+//!     cargo run --release --example quickstart [-- --render]
+//!
+//! Uses the PJRT-compiled JAX+Pallas model if `make artifacts` was run,
+//! else the pure-Rust twin.
+
+use std::sync::Arc;
+
+use molers::prelude::*;
+use molers::runtime::best_available_evaluator;
+use molers::sim::{render, AntParams, AntSim};
+
+fn main() -> molers::Result<()> {
+    let render_world = std::env::args().any(|a| a == "--render");
+
+    // --- Listing 2's prototypes -------------------------------------------
+    let g_population = val_f64("gPopulation");
+    let g_diffusion = val_f64("gDiffusionRate");
+    let g_evaporation = val_f64("gEvaporationRate");
+    let seed = val_u32("seed");
+    let food1 = val_f64("food1");
+    let food2 = val_f64("food2");
+    let food3 = val_f64("food3");
+
+    // --- the NetLogo task (backed by the AOT JAX+Pallas model) -------------
+    let (evaluator, kind) = best_available_evaluator(1);
+    println!("model backend: {kind}");
+    let ants = {
+        let (gp, gd, ge, s) = (
+            g_population.clone(),
+            g_diffusion.clone(),
+            g_evaporation.clone(),
+            seed.clone(),
+        );
+        let (f1, f2, f3) = (food1.clone(), food2.clone(), food3.clone());
+        ClosureTask::new("ants", move |ctx: &Context| {
+            let fit = evaluator.evaluate(
+                &[ctx.get(&gp)?, ctx.get(&gd)?, ctx.get(&ge)?],
+                ctx.get(&s)?,
+            )?;
+            Ok(Context::new()
+                .with(&f1, fit[0])
+                .with(&f2, fit[1])
+                .with(&f3, fit[2]))
+        })
+        // inputs + defaults exactly as in Listing 2
+        .input(&g_population)
+        .input(&g_diffusion)
+        .input(&g_evaporation)
+        .input(&seed)
+        .default(&seed, 42)
+        .default(&g_population, 125.0)
+        .default(&g_diffusion, 50.0)
+        .default(&g_evaporation, 50.0)
+        .output(&food1)
+        .output(&food2)
+        .output(&food3)
+    };
+
+    // --- hook + single-task workflow ---------------------------------------
+    let display_hook = ToStringHook::new(&["food1", "food2", "food3"]);
+    let mut puzzle = Puzzle::new();
+    let c = puzzle.capsule(Arc::new(ants));
+    puzzle.hook(c, Arc::new(display_hook));
+
+    let env: Arc<dyn Environment> = Arc::new(LocalEnvironment::new(1));
+    let result = MoleExecution::new(puzzle, env, 1).start()?;
+    println!(
+        "workflow finished: {} job(s) in {:?}",
+        result.report.jobs, result.report.wall
+    );
+
+    // --- Figures 1–2: visual representation of the model -------------------
+    if render_world {
+        let mut sim = AntSim::new(
+            AntParams {
+                population: 125.0,
+                diffusion_rate: 50.0,
+                evaporation_rate: 10.0,
+            },
+            42,
+        );
+        for _ in 0..300 {
+            sim.step();
+        }
+        println!("{}", render::ascii(&sim));
+        std::fs::write("ants_world.ppm", render::ppm(&sim, 4))?;
+        println!("wrote ants_world.ppm (Figure 1/2 analogue)");
+    }
+    Ok(())
+}

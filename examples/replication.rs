@@ -1,0 +1,75 @@
+//! Replication — paper Listing 3: run the stochastic ant model under five
+//! independent seeds and aggregate each objective with a median
+//! (`StatisticTask`), all through the workflow engine's explore/aggregate
+//! transitions.
+//!
+//!     cargo run --release --example replication
+
+use std::sync::Arc;
+
+use molers::prelude::*;
+use molers::runtime::best_available_evaluator;
+
+fn main() -> molers::Result<()> {
+    let seed = val_u32("seed");
+    let food = [val_f64("food1"), val_f64("food2"), val_f64("food3")];
+    let med = [
+        val_f64("medNumberFood1"),
+        val_f64("medNumberFood2"),
+        val_f64("medNumberFood3"),
+    ];
+
+    let (evaluator, kind) = best_available_evaluator(1);
+    println!("model backend: {kind}");
+
+    // model capsule (parameters fixed at Listing 2's defaults)
+    let model = {
+        let (s, f) = (seed.clone(), food.clone());
+        ClosureTask::new("ants", move |ctx: &Context| {
+            let fit = evaluator.evaluate(&[125.0, 50.0, 50.0], ctx.get(&s)?)?;
+            let mut out = Context::new();
+            for (fv, v) in f.iter().zip(fit) {
+                out.set(fv, v);
+            }
+            Ok(out)
+        })
+        .input(&seed)
+        .output(&food[0])
+        .output(&food[1])
+        .output(&food[2])
+    };
+
+    // StatisticTask: three medians, as in Listing 3
+    let mut statistic = StatisticTask::new();
+    for (f, m) in food.iter().zip(&med) {
+        statistic = statistic.statistic(f, m, Descriptor::Median);
+    }
+
+    // Replicate(modelCapsule, seedFactor take 5, statisticCapsule)
+    let mut puzzle = Puzzle::new();
+    let (_, model_c, stat_c) = replicate(
+        &mut puzzle,
+        Arc::new(model),
+        &seed,
+        5,
+        Arc::new(statistic),
+    );
+    // displayOutputs / displayMedians hooks
+    puzzle.hook(model_c, Arc::new(ToStringHook::new(&["food1", "food2", "food3"])));
+    puzzle.hook(
+        stat_c,
+        Arc::new(ToStringHook::new(&[
+            "medNumberFood1",
+            "medNumberFood2",
+            "medNumberFood3",
+        ])),
+    );
+
+    let env: Arc<dyn Environment> = Arc::new(LocalEnvironment::new(4));
+    let result = MoleExecution::new(puzzle, env, 42).start()?;
+    println!(
+        "replication workflow: {} jobs (1 entry + 5 models + 1 statistic) in {:?}",
+        result.report.jobs, result.report.wall
+    );
+    Ok(())
+}

@@ -1,0 +1,116 @@
+"""AOT lowering: JAX (L2, calling the L1 Pallas kernel) -> HLO text.
+
+HLO *text* (never ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids, which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text parser
+reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/load_hlo/gen_hlo.py).
+
+Emits into ``artifacts/``:
+  * ``ants_single.hlo.txt``  — fitness(params[3] f32, seed u32) -> ([3] f32,)
+  * ``ants_batch{B}.hlo.txt``— vmapped fitness over B candidates
+  * ``diffuse.hlo.txt``      — the bare L1 kernel (runtime smoke tests)
+  * ``manifest.json``        — shapes/dtypes/settings the Rust runtime reads
+
+Run as ``python -m compile.aot --out ../artifacts`` (the Makefile does this
+once; Python never runs on the request path).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import diffusion
+
+BATCH_SIZES = (8, 32)
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation -> XLA HLO text (return_tuple=True: the Rust
+    side unwraps with ``to_tuple1``)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_single(max_ticks: int) -> str:
+    fn = model.make_fitness_fn(max_ticks=max_ticks)
+    params = jax.ShapeDtypeStruct((3,), jnp.float32)
+    seed = jax.ShapeDtypeStruct((), jnp.uint32)
+    return to_hlo_text(jax.jit(lambda p, s: (fn(p, s),)).lower(params, seed))
+
+
+def lower_batch(batch: int, max_ticks: int) -> str:
+    fn = model.make_batch_fitness_fn(max_ticks=max_ticks)
+    params = jax.ShapeDtypeStruct((batch, 3), jnp.float32)
+    seeds = jax.ShapeDtypeStruct((batch,), jnp.uint32)
+    return to_hlo_text(jax.jit(lambda p, s: (fn(p, s),)).lower(params, seeds))
+
+
+def lower_diffuse() -> str:
+    w = model.WORLD
+    chem = jax.ShapeDtypeStruct((w, w), jnp.float32)
+    rate = jax.ShapeDtypeStruct((), jnp.float32)
+    fn = lambda c, d, e: (diffusion.diffuse_evaporate(c, d, e),)
+    return to_hlo_text(jax.jit(fn).lower(chem, rate, rate))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--max-ticks", type=int, default=model.MAX_TICKS)
+    ap.add_argument("--skip-batches", action="store_true",
+                    help="only emit the single-eval + diffuse artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = {}
+
+    def emit(name: str, text: str, **meta) -> None:
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entries[name] = {"file": f"{name}.hlo.txt", **meta}
+        print(f"wrote {path} ({len(text)} chars)")
+
+    emit("diffuse", lower_diffuse(),
+         inputs=[["f32", [model.WORLD, model.WORLD]], ["f32", []], ["f32", []]],
+         outputs=[["f32", [model.WORLD, model.WORLD]]])
+
+    emit("ants_single", lower_single(args.max_ticks), batch=1,
+         inputs=[["f32", [3]], ["u32", []]], outputs=[["f32", [3]]])
+
+    if not args.skip_batches:
+        for b in BATCH_SIZES:
+            emit(f"ants_batch{b}", lower_batch(b, args.max_ticks), batch=b,
+                 inputs=[["f32", [b, 3]], ["u32", [b]]],
+                 outputs=[["f32", [b, 3]]])
+
+    manifest = {
+        "world": model.WORLD,
+        "max_ants": model.MAX_ANTS,
+        "max_ticks": args.max_ticks,
+        "batch_sizes": [1] + ([] if args.skip_batches else list(BATCH_SIZES)),
+        "objectives": ["final-ticks-food1", "final-ticks-food2",
+                       "final-ticks-food3"],
+        "params": ["gpopulation", "gdiffusion-rate", "gevaporation-rate"],
+        "artifacts": entries,
+    }
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

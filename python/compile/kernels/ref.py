@@ -1,0 +1,62 @@
+"""Pure-jnp correctness oracle for the fused diffusion/evaporation kernel.
+
+NetLogo semantics reproduced here (the L1 Pallas kernel must match this
+bit-for-bit up to float tolerance):
+
+``diffuse chemical d`` — every patch gives ``d/8`` of its value to each of
+its eight Moore neighbours. Patches on the world edge have fewer than eight
+neighbours; the shares destined for missing neighbours are *kept* by the
+patch (NetLogo dictionary: "the patch keeps any leftover shares").
+
+``set chemical chemical * (100 - evaporation-rate) / 100`` — uniform decay,
+applied after diffusion, exactly as in the Ants model's ``go`` procedure.
+
+The fused reference computes, for world-edge-aware neighbour count ``n``:
+
+    out = (x - x * d * n/8 + (d/8) * sum_of_neighbours(x)) * keep
+
+with ``keep = (100 - evaporation_rate) / 100`` and zero-padded neighbour
+sums (the world does not wrap in the Ants model).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def neighbour_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Sum of the 8 Moore neighbours with zero padding (non-wrapping world)."""
+    p = jnp.pad(x, 1)
+    return (
+        p[:-2, :-2] + p[:-2, 1:-1] + p[:-2, 2:]
+        + p[1:-1, :-2] + p[1:-1, 2:]
+        + p[2:, :-2] + p[2:, 1:-1] + p[2:, 2:]
+    )
+
+
+def neighbour_count(shape, dtype=jnp.float32) -> jnp.ndarray:
+    """Number of in-world Moore neighbours of each patch (8 inside, 5 on
+    edges, 3 in corners). Static for a given world shape."""
+    return neighbour_sum(jnp.ones(shape, dtype))
+
+
+def diffuse_evaporate_ref(
+    chemical: jnp.ndarray,
+    diffusion_rate,
+    evaporation_rate,
+) -> jnp.ndarray:
+    """One NetLogo tick of ``diffuse`` + evaporation on the chemical field.
+
+    Args:
+      chemical: ``[H, W]`` float32 pheromone field.
+      diffusion_rate: scalar in ``[0, 100]`` (NetLogo slider units).
+      evaporation_rate: scalar in ``[0, 100]``.
+    Returns:
+      The updated ``[H, W]`` field.
+    """
+    x = chemical
+    d = jnp.asarray(diffusion_rate, x.dtype) / 100.0
+    keep = (100.0 - jnp.asarray(evaporation_rate, x.dtype)) / 100.0
+    n = neighbour_count(x.shape, x.dtype)
+    out = x - x * d * (n / 8.0) + (d / 8.0) * neighbour_sum(x)
+    return out * keep

@@ -1,0 +1,271 @@
+"""L2: the NetLogo "Ants" foraging model as a pure JAX computation.
+
+This is the workload the paper calibrates (§4): a colony of ants forages
+from three food sources at different distances from the nest, dropping a
+pheromone ("chemical") when returning with food. The calibration objective
+is the tick at which each of the three sources becomes empty (lower is
+better); the parameters are ``population``, ``diffusion-rate`` and
+``evaporation-rate``.
+
+Semantics follow Wilensky's ants.nlogo (headless version referenced by the
+paper), with the deviations documented in DESIGN.md §7:
+
+  * agents update synchronously (NetLogo ``ask`` is sequential);
+  * simultaneous pick-ups from one patch may transiently over-pick — the
+    food field is clamped at zero;
+  * the tick loop is a fixed-length ``lax.scan`` (AOT needs static shapes);
+    a source that never empties scores ``max_ticks``.
+
+The per-tick field update (diffusion + evaporation) is delegated to the L1
+Pallas kernel in :mod:`kernels.diffusion`.
+
+Everything here runs at *build* time only: :mod:`aot` lowers the jitted
+functions to HLO text artifacts which the Rust runtime loads via PJRT.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import diffusion, ref
+
+# -- world geometry (NetLogo ants.nlogo defaults) ---------------------------
+WORLD = 71            # patches per side; coordinates span -35..35
+HALF = WORLD // 2     # 35 == max-pxcor == max-pycor
+MAX_ANTS = 200        # static ant-array size; `population` masks the tail
+MAX_TICKS = 1000      # default scan length (overridable per artifact)
+NEST_RADIUS = 5.0
+SOURCE_RADIUS = 5.0
+# food source centres: (x, y) in NetLogo coords (§4.1, ants.nlogo setup)
+SOURCES = ((0.6 * HALF, 0.0), (-0.6 * HALF, -0.6 * HALF), (-0.8 * HALF, 0.8 * HALF))
+CHEMICAL_DROP = 60.0
+SNIFF_THRESHOLD_LOW = 0.05
+SNIFF_THRESHOLD_HIGH = 2.0
+WIGGLE_MAX = 40.0     # rt random 40 / lt random 40
+
+
+class World(NamedTuple):
+    """Patch fields, built once per run from the seed."""
+
+    food: jnp.ndarray           # [W, W] f32, remaining food units
+    source_id: jnp.ndarray      # [W, W] i32, 1..3 or 0
+    nest: jnp.ndarray           # [W, W] bool
+    nest_scent: jnp.ndarray     # [W, W] f32, 200 - distance-to-nest
+
+
+class Ants(NamedTuple):
+    """Agent state arrays, all of length MAX_ANTS."""
+
+    x: jnp.ndarray        # f32, NetLogo x coordinate in [-35, 35]
+    y: jnp.ndarray        # f32
+    heading: jnp.ndarray  # f32 degrees, 0 = north, clockwise (NetLogo)
+    carrying: jnp.ndarray  # bool
+
+
+class Carry(NamedTuple):
+    """``lax.scan`` carry: the mutable simulation state."""
+
+    food: jnp.ndarray
+    chemical: jnp.ndarray
+    ants: Ants
+    # fitness latches: 0 until the source empties, then the emptying tick
+    final_ticks: jnp.ndarray  # [3] f32
+
+
+def _coord_grids():
+    """NetLogo (x, y) coordinates of every patch; grid index [row, col] maps
+    to (x = col - HALF, y = row - HALF)."""
+    ys, xs = jnp.mgrid[0:WORLD, 0:WORLD]
+    return (xs - HALF).astype(jnp.float32), (ys - HALF).astype(jnp.float32)
+
+
+def setup_world(key: jnp.ndarray) -> World:
+    """ants.nlogo ``setup``: nest scent field, three food sources with
+    1-or-2 food units per patch (drawn from the run's RNG, as NetLogo does)."""
+    px, py = _coord_grids()
+    dist_nest = jnp.sqrt(px * px + py * py)
+    nest = dist_nest < NEST_RADIUS
+    nest_scent = 200.0 - dist_nest
+
+    source_id = jnp.zeros((WORLD, WORLD), jnp.int32)
+    for i, (sx, sy) in enumerate(SOURCES):
+        d = jnp.sqrt((px - sx) ** 2 + (py - sy) ** 2)
+        source_id = jnp.where(d < SOURCE_RADIUS, i + 1, source_id)
+
+    # setup-food: set food one-of [1 2]
+    amounts = jax.random.randint(key, (WORLD, WORLD), 1, 3).astype(jnp.float32)
+    food = jnp.where(source_id > 0, amounts, 0.0)
+    return World(food=food, source_id=source_id, nest=nest, nest_scent=nest_scent)
+
+
+def init_ants(key: jnp.ndarray) -> Ants:
+    """population turtles at the origin with random headings."""
+    heading = jax.random.uniform(key, (MAX_ANTS,), jnp.float32, 0.0, 360.0)
+    zeros = jnp.zeros((MAX_ANTS,), jnp.float32)
+    return Ants(x=zeros, y=zeros, heading=heading,
+                carrying=jnp.zeros((MAX_ANTS,), bool))
+
+
+def _patch_index(x, y):
+    """Round NetLogo coordinates to clamped [row, col] grid indices."""
+    col = jnp.clip(jnp.round(x).astype(jnp.int32) + HALF, 0, WORLD - 1)
+    row = jnp.clip(jnp.round(y).astype(jnp.int32) + HALF, 0, WORLD - 1)
+    return row, col
+
+
+def _sample(field, x, y):
+    """Patch value at rounded (x, y), clamped to the world."""
+    row, col = _patch_index(x, y)
+    return field[row, col]
+
+
+def _scent_at_angle(field, ants: Ants, angle):
+    """NetLogo ``chemical-scent-at-angle``: the field one step ahead at
+    heading+angle (patch-rounded)."""
+    rad = jnp.deg2rad(ants.heading + angle)
+    return _sample(field, ants.x + jnp.sin(rad), ants.y + jnp.cos(rad))
+
+
+def _uphill(field, ants: Ants):
+    """NetLogo ``uphill-chemical`` / ``uphill-nest-scent``: turn 45° toward
+    the strongest of ahead / right / left, only if a side beats ahead."""
+    ahead = _scent_at_angle(field, ants, 0.0)
+    right = _scent_at_angle(field, ants, 45.0)
+    left = _scent_at_angle(field, ants, -45.0)
+    turn = jnp.where(right > left, 45.0, -45.0)
+    better_side = (right > ahead) | (left > ahead)
+    return jnp.where(better_side, ants.heading + turn, ants.heading)
+
+
+def _in_world(x, y):
+    return (jnp.abs(x) <= HALF) & (jnp.abs(y) <= HALF)
+
+
+def _step(world_static, carry: Carry, tick, key, population,
+          diffusion_rate, evaporation_rate, diffuse) -> Carry:
+    """One NetLogo ``go`` tick, vectorised over all ants."""
+    source_id, nest, nest_scent = world_static
+    food, chemical, ants, final_ticks = carry
+
+    idx = jnp.arange(MAX_ANTS, dtype=jnp.float32)
+    # `if who >= ticks [ stop ]` — ants leave the nest gradually, and only
+    # the first `population` turtles exist at all.
+    active = (idx < population) & (idx < tick)
+
+    row, col = _patch_index(ants.x, ants.y)
+    food_here = food[row, col]
+    nest_here = nest[row, col]
+    chem_here = chemical[row, col]
+
+    # --- look-for-food (not carrying) -------------------------------------
+    picks_up = active & ~ants.carrying & (food_here > 0.0)
+    sniffing = (
+        active & ~ants.carrying & ~picks_up
+        & (chem_here >= SNIFF_THRESHOLD_LOW) & (chem_here < SNIFF_THRESHOLD_HIGH)
+    )
+    heading_sniff = _uphill(chemical, ants)
+
+    # --- return-to-nest (carrying) -----------------------------------------
+    drops_food = active & ants.carrying & nest_here
+    homing = active & ants.carrying & ~nest_here
+    heading_home = _uphill(nest_scent, ants)
+
+    heading = ants.heading
+    heading = jnp.where(sniffing, heading_sniff, heading)
+    heading = jnp.where(homing, heading_home, heading)
+    heading = jnp.where(picks_up | drops_food, heading + 180.0, heading)
+
+    carrying = (ants.carrying | picks_up) & ~drops_food
+
+    # field writes: food pick-up and chemical drop (scatter-add)
+    food = food.at[row, col].add(jnp.where(picks_up, -1.0, 0.0))
+    food = jnp.maximum(food, 0.0)  # clamp transient over-picks
+    chemical = chemical.at[row, col].add(jnp.where(homing, CHEMICAL_DROP, 0.0))
+
+    # --- wiggle + fd 1 -----------------------------------------------------
+    kr, kl = jax.random.split(key)
+    heading = heading + jax.random.uniform(kr, (MAX_ANTS,), maxval=WIGGLE_MAX)
+    heading = heading - jax.random.uniform(kl, (MAX_ANTS,), maxval=WIGGLE_MAX)
+    rad = jnp.deg2rad(heading)
+    nx, ny = ants.x + jnp.sin(rad), ants.y + jnp.cos(rad)
+    # if not can-move? 1 [ rt 180 ] — bounce off the world edge
+    blocked = ~_in_world(nx, ny)
+    heading = jnp.where(blocked, heading + 180.0, heading)
+    rad = jnp.deg2rad(heading)
+    nx, ny = ants.x + jnp.sin(rad), ants.y + jnp.cos(rad)
+    moved = active & _in_world(nx, ny)
+    x = jnp.where(moved, nx, ants.x)
+    y = jnp.where(moved, ny, ants.y)
+    heading = jnp.mod(heading, 360.0)
+
+    # --- patch updates: L1 fused diffuse + evaporate -----------------------
+    chemical = diffuse(chemical, diffusion_rate, evaporation_rate)
+
+    ants = Ants(x=x, y=y, heading=heading, carrying=carrying)
+
+    # --- fitness latch: compute-fitness (paper Listing 1) -------------------
+    remaining = jnp.stack([
+        jnp.sum(jnp.where(source_id == s, food, 0.0)) for s in (1, 2, 3)
+    ])
+    now_empty = (remaining <= 0.0) & (final_ticks == 0.0)
+    final_ticks = jnp.where(now_empty, tick, final_ticks)
+
+    return Carry(food=food, chemical=chemical, ants=ants, final_ticks=final_ticks)
+
+
+def make_fitness_fn(max_ticks: int = MAX_TICKS, use_pallas: bool = True):
+    """Build the single-evaluation fitness function.
+
+    Returns ``fitness(params, seed) -> [3] f32`` where
+    ``params = [population, diffusion-rate, evaporation-rate]`` (f32) and
+    ``seed`` is a uint32 scalar. Objectives are the first-empty ticks of the
+    three food sources (``max_ticks`` if a source never empties).
+    """
+    diffuse = (diffusion.diffuse_evaporate if use_pallas
+               else ref.diffuse_evaporate_ref)
+
+    def fitness(params: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
+        population = params[0]
+        diffusion_rate = params[1]
+        evaporation_rate = params[2]
+        base = jax.random.PRNGKey(seed)
+        k_world, k_ants, k_run = jax.random.split(base, 3)
+        world = setup_world(k_world)
+        ants = init_ants(k_ants)
+        static = (world.source_id, world.nest, world.nest_scent)
+
+        def body(carry: Carry, tick):
+            key = jax.random.fold_in(k_run, tick)
+            carry = _step(static, carry, tick.astype(jnp.float32), key,
+                          population, diffusion_rate, evaporation_rate, diffuse)
+            return carry, None
+
+        carry0 = Carry(
+            food=world.food,
+            chemical=jnp.zeros((WORLD, WORLD), jnp.float32),
+            ants=ants,
+            final_ticks=jnp.zeros((3,), jnp.float32),
+        )
+        out, _ = jax.lax.scan(body, carry0, jnp.arange(1, max_ticks + 1))
+        # sources that never emptied score max_ticks (penalty)
+        return jnp.where(out.final_ticks == 0.0, float(max_ticks),
+                         out.final_ticks)
+
+    return fitness
+
+
+def make_batch_fitness_fn(max_ticks: int = MAX_TICKS, use_pallas: bool = True):
+    """vmapped fitness: ``(params[B,3], seeds[B]) -> fit[B,3]``.
+
+    The batch size is whatever leading dimension the caller lowers with —
+    :mod:`aot` emits one artifact per batch size in its ``BATCH_SIZES``.
+    """
+    single = make_fitness_fn(max_ticks=max_ticks, use_pallas=use_pallas)
+
+    def batched(params: jnp.ndarray, seeds: jnp.ndarray) -> jnp.ndarray:
+        return jax.vmap(single)(params, seeds)
+
+    return batched

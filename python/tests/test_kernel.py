@@ -1,0 +1,111 @@
+"""L1 correctness: the Pallas fused diffusion/evaporation kernel must match
+the pure-jnp oracle (kernels.ref) — the CORE correctness signal — plus
+NetLogo-semantics invariants of the oracle itself."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import diffusion, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_field(shape, seed=0):
+    return jax.random.uniform(jax.random.PRNGKey(seed), shape,
+                              jnp.float32, 0.0, 100.0)
+
+
+class TestKernelVsRef:
+    @pytest.mark.parametrize("shape", [(71, 71), (8, 8), (1, 1), (3, 17)])
+    @pytest.mark.parametrize("d,e", [(50.0, 10.0), (0.0, 0.0), (100.0, 100.0),
+                                     (99.0, 1.0), (20.0, 15.0)])
+    def test_matches_reference(self, shape, d, e):
+        x = _rand_field(shape)
+        got = diffusion.diffuse_evaporate(x, d, e)
+        want = ref.diffuse_evaporate_ref(x, d, e)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-5)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        h=st.integers(1, 40), w=st.integers(1, 40),
+        d=st.floats(0.0, 100.0, allow_nan=False, width=32),
+        e=st.floats(0.0, 100.0, allow_nan=False, width=32),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_reference_hypothesis(self, h, w, d, e, seed):
+        """Property sweep over shapes and rate ranges."""
+        x = _rand_field((h, w), seed=seed)
+        got = diffusion.diffuse_evaporate(x, d, e)
+        want = ref.diffuse_evaporate_ref(x, d, e)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_jit_and_scan_compose(self):
+        """The kernel must lower inside jit+scan (the L2 usage pattern)."""
+        x = _rand_field((16, 16))
+
+        def body(c, _):
+            return diffusion.diffuse_evaporate(c, 50.0, 10.0), None
+
+        out, _ = jax.jit(lambda c: jax.lax.scan(body, c, None, length=5))(x)
+        want = x
+        for _ in range(5):
+            want = ref.diffuse_evaporate_ref(want, 50.0, 10.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+
+class TestNetLogoSemantics:
+    """Invariants of the oracle, from the NetLogo dictionary."""
+
+    def test_diffusion_conserves_mass_interior(self):
+        """With no evaporation, `diffuse` conserves total chemical: leftover
+        shares at edges are kept by the patch."""
+        x = _rand_field((31, 31), seed=3)
+        out = ref.diffuse_evaporate_ref(x, 70.0, 0.0)
+        np.testing.assert_allclose(float(jnp.sum(out)), float(jnp.sum(x)),
+                                    rtol=1e-5)
+
+    def test_zero_diffusion_is_pure_decay(self):
+        x = _rand_field((9, 9), seed=4)
+        out = ref.diffuse_evaporate_ref(x, 0.0, 25.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x) * 0.75,
+                                   rtol=1e-6)
+
+    def test_full_evaporation_zeroes_field(self):
+        x = _rand_field((9, 9), seed=5)
+        out = ref.diffuse_evaporate_ref(x, 50.0, 100.0)
+        np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+    def test_point_source_spreads_to_8_neighbours(self):
+        x = jnp.zeros((5, 5), jnp.float32).at[2, 2].set(8.0)
+        out = ref.diffuse_evaporate_ref(x, 100.0, 0.0)
+        # centre keeps nothing (interior patch, d=1), each neighbour gets 1
+        assert float(out[2, 2]) == pytest.approx(0.0, abs=1e-6)
+        for dr in (-1, 0, 1):
+            for dc in (-1, 0, 1):
+                if dr or dc:
+                    assert float(out[2 + dr, 2 + dc]) == pytest.approx(1.0, abs=1e-6)
+
+    def test_corner_keeps_leftover_shares(self):
+        """A corner patch has 3 neighbours: with d=1 it keeps 5/8 of its value."""
+        x = jnp.zeros((5, 5), jnp.float32).at[0, 0].set(8.0)
+        out = ref.diffuse_evaporate_ref(x, 100.0, 0.0)
+        assert float(out[0, 0]) == pytest.approx(5.0, abs=1e-6)
+
+    def test_nonnegativity_preserved(self):
+        x = _rand_field((13, 13), seed=6)
+        out = ref.diffuse_evaporate_ref(x, 80.0, 30.0)
+        assert bool(jnp.all(out >= 0.0))
+
+    @settings(max_examples=25, deadline=None)
+    @given(d=st.floats(0.0, 100.0, width=32), seed=st.integers(0, 1000))
+    def test_mass_conservation_property(self, d, seed):
+        x = _rand_field((17, 17), seed=seed)
+        out = ref.diffuse_evaporate_ref(x, d, 0.0)
+        np.testing.assert_allclose(float(jnp.sum(out)), float(jnp.sum(x)),
+                                    rtol=1e-4)

@@ -1,0 +1,217 @@
+"""L2 correctness: shapes, determinism, fitness semantics of the JAX ant
+model, and pallas-vs-ref equivalence of the full simulation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Small configurations keep the test suite fast; artifact-scale settings are
+# covered by the Rust integration tests against the real artifacts.
+FAST_TICKS = 60
+
+
+@pytest.fixture(scope="module")
+def fit_fast():
+    return jax.jit(model.make_fitness_fn(max_ticks=FAST_TICKS))
+
+
+DEFAULT_PARAMS = jnp.array([125.0, 50.0, 50.0], jnp.float32)
+
+
+class TestSetup:
+    def test_world_shapes(self):
+        w = model.setup_world(jax.random.PRNGKey(0))
+        assert w.food.shape == (model.WORLD, model.WORLD)
+        assert w.source_id.shape == (model.WORLD, model.WORLD)
+        assert w.nest.dtype == jnp.bool_
+
+    def test_three_food_sources_present(self):
+        w = model.setup_world(jax.random.PRNGKey(0))
+        for s in (1, 2, 3):
+            patches = int(jnp.sum(w.source_id == s))
+            assert patches > 0, f"source {s} missing"
+            total = float(jnp.sum(jnp.where(w.source_id == s, w.food, 0.0)))
+            # each source patch holds 1 or 2 units
+            assert patches <= total <= 2 * patches
+
+    def test_food_only_in_sources(self):
+        w = model.setup_world(jax.random.PRNGKey(1))
+        assert float(jnp.sum(jnp.where(w.source_id == 0, w.food, 0.0))) == 0.0
+
+    def test_nest_scent_peaks_at_origin(self):
+        w = model.setup_world(jax.random.PRNGKey(0))
+        c = model.HALF
+        assert float(w.nest_scent[c, c]) == pytest.approx(200.0)
+        assert bool(w.nest[c, c])
+        # scent decreases away from the nest
+        assert float(w.nest_scent[c, c]) > float(w.nest_scent[c, c + 10])
+
+    def test_sources_at_different_distances(self):
+        """The paper's Pareto structure comes from sources at 3 distances."""
+        dists = sorted(
+            (sx * sx + sy * sy) ** 0.5 for sx, sy in model.SOURCES
+        )
+        assert dists[0] < dists[1] < dists[2]
+
+    def test_init_ants_at_origin(self):
+        a = model.init_ants(jax.random.PRNGKey(0))
+        assert float(jnp.max(jnp.abs(a.x))) == 0.0
+        assert a.heading.shape == (model.MAX_ANTS,)
+        assert not bool(jnp.any(a.carrying))
+
+
+class TestFitness:
+    def test_shape_and_range(self, fit_fast):
+        f = fit_fast(DEFAULT_PARAMS, jnp.uint32(42))
+        assert f.shape == (3,)
+        assert bool(jnp.all(f >= 1.0)) and bool(jnp.all(f <= FAST_TICKS))
+
+    def test_deterministic_same_seed(self, fit_fast):
+        a = fit_fast(DEFAULT_PARAMS, jnp.uint32(7))
+        b = fit_fast(DEFAULT_PARAMS, jnp.uint32(7))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_seed_changes_outcome(self):
+        """Replications (different seeds) must explore different stochastic
+        realisations — the premise of the paper's §4.4. Checked at a horizon
+        where the near source resolves (evaporation-rate 10, NetLogo default)."""
+        fit = jax.jit(model.make_fitness_fn(max_ticks=350))
+        params = jnp.array([125.0, 50.0, 10.0], jnp.float32)
+        outs = [np.asarray(fit(params, jnp.uint32(s))) for s in range(4)]
+        assert any(not np.array_equal(outs[0], o) for o in outs[1:])
+
+    def test_zero_population_never_empties(self, fit_fast):
+        """With no ants, all sources survive: fitness == max_ticks penalty."""
+        f = fit_fast(jnp.array([0.0, 50.0, 50.0], jnp.float32), jnp.uint32(1))
+        np.testing.assert_array_equal(np.asarray(f),
+                                      [FAST_TICKS, FAST_TICKS, FAST_TICKS])
+
+    def test_full_run_empties_near_source_first(self):
+        """With persistent trails (evaporation-rate 10, the NetLogo slider
+        default) the near source (source 1 at 0.6*35 ≈ 21 from the nest)
+        empties, and no later than the far source (source 3)."""
+        fit = jax.jit(model.make_fitness_fn(max_ticks=600))
+        f = np.asarray(fit(jnp.array([125.0, 50.0, 10.0], jnp.float32),
+                           jnp.uint32(42)))
+        assert f[0] < 600.0, "near source never emptied in 600 ticks"
+        assert f[0] <= f[2]
+
+    def test_pallas_and_ref_paths_agree(self):
+        fp = jax.jit(model.make_fitness_fn(max_ticks=FAST_TICKS, use_pallas=True))
+        fr = jax.jit(model.make_fitness_fn(max_ticks=FAST_TICKS, use_pallas=False))
+        a = fp(DEFAULT_PARAMS, jnp.uint32(3))
+        b = fr(DEFAULT_PARAMS, jnp.uint32(3))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+
+class TestBatch:
+    def test_batch_matches_single(self, fit_fast):
+        batch = jax.jit(model.make_batch_fitness_fn(max_ticks=FAST_TICKS))
+        params = jnp.stack([DEFAULT_PARAMS,
+                            jnp.array([60.0, 20.0, 5.0], jnp.float32)])
+        seeds = jnp.array([42, 43], jnp.uint32)
+        bf = batch(params, seeds)
+        assert bf.shape == (2, 3)
+        s0 = fit_fast(params[0], seeds[0])
+        np.testing.assert_allclose(np.asarray(bf[0]), np.asarray(s0), atol=1e-4)
+
+
+class TestStepInvariants:
+    def _state(self, seed=0):
+        w = model.setup_world(jax.random.PRNGKey(seed))
+        a = model.init_ants(jax.random.PRNGKey(seed + 1))
+        c = model.Carry(food=w.food,
+                        chemical=jnp.zeros((model.WORLD, model.WORLD)),
+                        ants=a, final_ticks=jnp.zeros((3,)))
+        static = (w.source_id, w.nest, w.nest_scent)
+        return static, c
+
+    def _run(self, n, population=125.0, seed=0):
+        from compile.kernels import ref as kref
+        static, c = self._state(seed)
+        for t in range(1, n + 1):
+            key = jax.random.fold_in(jax.random.PRNGKey(99), t)
+            c = model._step(static, c, float(t), key, population,
+                            50.0, 10.0, kref.diffuse_evaporate_ref)
+        return c
+
+    def test_ants_stay_in_world(self):
+        c = self._run(30)
+        assert float(jnp.max(jnp.abs(c.ants.x))) <= model.HALF
+        assert float(jnp.max(jnp.abs(c.ants.y))) <= model.HALF
+
+    def test_food_monotone_nonincreasing(self):
+        c10 = self._run(10)
+        c30 = self._run(30)
+        assert float(jnp.sum(c30.food)) <= float(jnp.sum(c10.food))
+        assert bool(jnp.all(c30.food >= 0.0))
+
+    def test_chemical_nonnegative(self):
+        c = self._run(30)
+        assert bool(jnp.all(c.chemical >= 0.0))
+
+    def test_inactive_ants_do_not_move(self):
+        c = self._run(5, population=3.0)
+        # ants beyond the population never activate
+        assert float(jnp.max(jnp.abs(c.ants.x[10:]))) == 0.0
+
+    def test_staggered_departure(self):
+        """`if who >= ticks [stop]`: after k ticks at most k ants have moved."""
+        c = self._run(4)
+        moved = jnp.sum((jnp.abs(c.ants.x) > 0) | (jnp.abs(c.ants.y) > 0))
+        assert int(moved) <= 4
+
+
+class TestModelProperties:
+    """Hypothesis sweeps over the parameter space (L2 invariants)."""
+
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        pop=st.floats(0.0, 200.0, width=32),
+        d=st.floats(0.0, 99.0, width=32),
+        e=st.floats(0.0, 99.0, width=32),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_fitness_always_in_range(self, pop, d, e, seed):
+        fit = jax.jit(model.make_fitness_fn(max_ticks=40))
+        f = np.asarray(fit(jnp.array([pop, d, e], jnp.float32), jnp.uint32(seed)))
+        assert f.shape == (3,)
+        assert np.all(f >= 1.0) and np.all(f <= 40.0)
+        assert not np.any(np.isnan(f))
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        d=st.floats(0.0, 99.0, width=32),
+        e=st.floats(0.0, 99.0, width=32),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_batch_consistent_with_single(self, d, e, seed):
+        """vmapped evaluation must agree with the scalar path for any
+        parameters — the property the Rust batch packer relies on."""
+        single = jax.jit(model.make_fitness_fn(max_ticks=30))
+        batch = jax.jit(model.make_batch_fitness_fn(max_ticks=30))
+        p = jnp.array([125.0, d, e], jnp.float32)
+        s = jnp.uint32(seed)
+        a = np.asarray(single(p, s))
+        b = np.asarray(batch(p[None, :], s[None]))[0]
+        np.testing.assert_allclose(a, b, atol=1e-4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_world_setup_structure_invariant_to_seed(self, seed):
+        """Only food *amounts* are stochastic; geometry is fixed."""
+        w = model.setup_world(jax.random.PRNGKey(seed))
+        ref_w = model.setup_world(jax.random.PRNGKey(0))
+        np.testing.assert_array_equal(np.asarray(w.source_id),
+                                      np.asarray(ref_w.source_id))
+        np.testing.assert_array_equal(np.asarray(w.nest), np.asarray(ref_w.nest))
+        # amounts in {1, 2} on source patches
+        amounts = np.asarray(w.food)[np.asarray(w.source_id) > 0]
+        assert set(np.unique(amounts)) <= {1.0, 2.0}

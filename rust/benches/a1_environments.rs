@@ -1,0 +1,95 @@
+//! A1 (§2.2): the same 64-evaluation workload on every environment the
+//! paper lists, switched by one line. Reports each environment's virtual
+//! makespan — the latency/queueing trade-offs that motivate choosing an
+//! environment "matched with the application's characteristics".
+
+use std::sync::Arc;
+
+use molers::bench::Bench;
+use molers::environment::cluster::BatchEnvironment;
+use molers::environment::egi::EgiEnvironment;
+use molers::environment::local::LocalEnvironment;
+use molers::environment::ssh::SshEnvironment;
+use molers::environment::{run_all, Environment, Job};
+use molers::exec::ThreadPool;
+use molers::prelude::*;
+
+fn main() {
+    let mut b = Bench::new("a1_environments").warmup(0).samples(1);
+    const JOBS: usize = 64;
+    const NODES: usize = 16;
+
+    let x = val_f64("x");
+    let task = Arc::new(
+        ClosureTask::new("model", {
+            let x = x.clone();
+            move |ctx: &Context| Ok(Context::new().with(&x, ctx.get(&x).unwrap_or(0.0)))
+        })
+        .cost(36.0), // one paper-scale NetLogo run
+    );
+
+    let pool = Arc::new(ThreadPool::default_size());
+    let envs: Vec<Arc<dyn Environment>> = vec![
+        Arc::new(LocalEnvironment::with_pool(Arc::clone(&pool))),
+        Arc::new(SshEnvironment::new("calc01", NODES, Arc::clone(&pool), 1)),
+        Arc::new(BatchEnvironment::pbs(NODES, Arc::clone(&pool), 2)),
+        Arc::new(BatchEnvironment::slurm(NODES, Arc::clone(&pool), 3)),
+        Arc::new(BatchEnvironment::sge(NODES, Arc::clone(&pool), 4)),
+        Arc::new(BatchEnvironment::oar(NODES, Arc::clone(&pool), 5)),
+        Arc::new(BatchEnvironment::condor(NODES, Arc::clone(&pool), 6)),
+        Arc::new(EgiEnvironment::new("biomed", NODES, Arc::clone(&pool), 7)),
+    ];
+
+    println!(
+        "\n{JOBS} jobs x 36 s nominal on {NODES} nodes; ideal exec = {} s\n",
+        36 * JOBS / NODES
+    );
+    for env in &envs {
+        let jobs: Vec<Job> = (0..JOBS)
+            .map(|i| {
+                Job::new(
+                    Arc::clone(&task) as Arc<dyn molers::dsl::Task>,
+                    Context::new().with(&x, i as f64),
+                )
+            })
+            .collect();
+        let mut makespan = 0.0f64;
+        b.case(&format!("submit_{}", env.name()), || {
+            let results = run_all(env.as_ref(), jobs_clone(&jobs, &x, &task));
+            makespan = results
+                .into_iter()
+                .map(|r| r.unwrap().1.virtual_end)
+                .fold(0.0, f64::max);
+        });
+        let stats = env.stats();
+        b.metric(
+            &format!("{}_virtual_makespan", env.name()),
+            makespan,
+            "s",
+        );
+        if stats.resubmissions > 0 {
+            b.metric(
+                &format!("{}_resubmissions", env.name()),
+                stats.resubmissions as f64,
+                "jobs",
+            );
+        }
+    }
+}
+
+fn jobs_clone(
+    jobs: &[Job],
+    x: &molers::core::Val<f64>,
+    task: &Arc<molers::dsl::ClosureTask>,
+) -> Vec<Job> {
+    jobs.iter()
+        .enumerate()
+        .map(|(i, j)| {
+            Job::new(
+                Arc::clone(task) as Arc<dyn molers::dsl::Task>,
+                Context::new().with(x, i as f64),
+            )
+            .released_at(j.virtual_release)
+        })
+        .collect()
+}

@@ -1,0 +1,72 @@
+//! A2 (§4.6): why islands? "The optimisation as we've done so far is not
+//! perfectly suited for this kind of remote environments. In this case,
+//! we'll use the Island model."
+//!
+//! Same evaluation budget, same simulated EGI: the generational GA pays
+//! grid brokering latency on EVERY evaluation wave and synchronises each
+//! generation; the island model pays it once per island. The virtual
+//! makespans should differ by a large factor — the paper's implicit claim.
+
+use std::sync::Arc;
+
+use molers::bench::Bench;
+use molers::environment::egi::EgiEnvironment;
+use molers::evolution::{
+    GenerationalGA, IslandConfig, IslandSteadyGA, Nsga2Config, Zdt1Evaluator,
+};
+use molers::exec::ThreadPool;
+use molers::prelude::*;
+
+fn config(mu: usize) -> Nsga2Config {
+    let x0 = val_f64("x0");
+    let x1 = val_f64("x1");
+    let f1 = val_f64("f1");
+    let f2 = val_f64("f2");
+    Nsga2Config::new(mu, &[(&x0, 0.0, 1.0), (&x1, 0.0, 1.0)], &[&f1, &f2], 0.0).unwrap()
+}
+
+fn main() {
+    let mut b = Bench::new("a2_island_vs_generational").warmup(0).samples(1);
+    const BUDGET: u64 = 640; // evaluations
+    const NODES: usize = 16;
+    // fast analytic fitness so the bench isolates coordination costs;
+    // nominal cost 1 s/eval on the virtual grid
+    let evaluator = Arc::new(Zdt1Evaluator { dim: 2 });
+
+    // generational: mu=16, lambda=16 -> 39 waves of 16 evals + init
+    let pool = Arc::new(ThreadPool::default_size());
+    let env_gen = EgiEnvironment::new("biomed", NODES, Arc::clone(&pool), 21);
+    let ga = GenerationalGA::new(config(16), Arc::clone(&evaluator) as _, 16);
+    let mut gen_makespan = 0.0;
+    b.case("generational_640evals", || {
+        let r = ga.run(&env_gen, (BUDGET / 16 - 1) as u32, 1).unwrap();
+        gen_makespan = r.virtual_makespan;
+    });
+
+    // islands: same budget, 16 concurrent islands of 40 evals each
+    let env_isl = EgiEnvironment::new("biomed", NODES, Arc::clone(&pool), 22);
+    let island = IslandSteadyGA::new(
+        config(16),
+        IslandConfig {
+            concurrent_islands: NODES,
+            total_evaluations: BUDGET,
+            island_sample: 8,
+            evals_per_island: 40,
+        },
+        Arc::clone(&evaluator) as _,
+    );
+    let mut isl_makespan = 0.0;
+    b.case("island_640evals", || {
+        let r = island.run(&env_isl, 1, None).unwrap();
+        isl_makespan = r.virtual_makespan;
+    });
+
+    b.metric("generational_virtual_makespan", gen_makespan, "s");
+    b.metric("island_virtual_makespan", isl_makespan, "s");
+    b.metric("island_speedup", gen_makespan / isl_makespan, "x");
+    assert!(
+        isl_makespan < gen_makespan,
+        "islands must beat generational on a high-latency grid \
+         ({isl_makespan} vs {gen_makespan})"
+    );
+}

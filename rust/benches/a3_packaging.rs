@@ -1,0 +1,62 @@
+//! A3 (§3): the packaging comparison behind OpenMOLE's CDE → CARE switch.
+//! Re-execution success rate of (no packaging | CDE | CARE) across a
+//! heterogeneous simulated grid fleet, plus carball pack/parse throughput.
+
+use molers::bench::Bench;
+use molers::care::{
+    reexec::{fleet_success_rate, Packager, RemoteHost},
+    Archive, Dependency, KernelVersion, Manifest,
+};
+use molers::prelude::Rng;
+
+fn netlogo_manifest(packaged_on: KernelVersion) -> Manifest {
+    Manifest::new(
+        "ants",
+        "java -jar netlogo.jar --headless --model ants.nlogo",
+        packaged_on,
+    )
+    .with(Dependency::lib("/lib/x86_64/libc.so.6", "2.17"))
+    .with(Dependency::lib("/lib/x86_64/libz.so.1", "1.2.8"))
+    .with(Dependency::interpreter("/usr/bin/java", "1.8.0_45"))
+    .with(Dependency::data("/opt/models/ants.nlogo"))
+    .with(Dependency::data("/opt/netlogo/netlogo.jar"))
+}
+
+fn main() {
+    let mut b = Bench::new("a3_packaging").warmup(1).samples(5);
+
+    // fleet: 1000 heterogeneous grid workers
+    let app_new = netlogo_manifest(KernelVersion(3, 10, 0)); // modern desktop
+    let app_sl = netlogo_manifest(KernelVersion::SCIENTIFIC_LINUX); // §3.1 rule
+    let mut rng = Rng::new(42);
+    let fleet: Vec<RemoteHost> = (0..1000)
+        .map(|i| RemoteHost::random_grid_worker(i, &app_new, &mut rng))
+        .collect();
+
+    println!("\nre-execution success over {} simulated grid workers:", fleet.len());
+    for (label, app) in [("packaged_on_3.10", &app_new), ("packaged_on_2.6.32", &app_sl)] {
+        for packager in [Packager::None, Packager::Cde, Packager::Care] {
+            let rate = fleet_success_rate(app, packager, &fleet);
+            b.metric(&format!("{label}/{packager:?}"), rate * 100.0, "% success");
+        }
+    }
+    // the paper's two claims, asserted:
+    assert_eq!(
+        fleet_success_rate(&app_new, Packager::Care, &fleet),
+        1.0,
+        "CARE must re-execute everywhere (syscall emulation)"
+    );
+    assert!(
+        fleet_success_rate(&app_new, Packager::Cde, &fleet)
+            < fleet_success_rate(&app_sl, Packager::Cde, &fleet),
+        "CDE should benefit from the old-kernel packaging rule of thumb"
+    );
+
+    // carball mechanics
+    let archive = Archive::pack(app_new.clone(), true);
+    b.metric("archive_size", archive.size_bytes() as f64, "bytes");
+    b.case("pack", || Archive::pack(app_new.clone(), true));
+    let bytes = archive.to_bytes();
+    b.case("serialize", || archive.to_bytes());
+    b.case("parse", || Archive::from_bytes(&bytes).unwrap());
+}

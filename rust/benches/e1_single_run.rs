@@ -1,0 +1,57 @@
+//! E1 (Listing 2): latency of a single model execution — the unit the
+//! paper's "~36 s on a grid core" cost model builds on. Compares the PJRT
+//! (JAX+Pallas AOT) backend against the pure-Rust twin, plus the workflow
+//! engine's per-job overhead on top.
+
+use std::sync::Arc;
+
+use molers::bench::Bench;
+use molers::evolution::{AntSimEvaluator, Evaluator};
+use molers::prelude::*;
+use molers::runtime::{ArtifactManifest, PjrtEvaluator};
+
+fn main() {
+    let mut b = Bench::new("e1_single_run").warmup(1).samples(7);
+
+    if ArtifactManifest::available() {
+        let pjrt = PjrtEvaluator::from_default_artifacts(1).expect("pjrt");
+        let mut seed = 0u32;
+        b.case("pjrt_eval_1000ticks", || {
+            seed = seed.wrapping_add(1);
+            pjrt.evaluate(&[125.0, 50.0, 10.0], seed).unwrap()
+        });
+    } else {
+        println!("(artifacts not built; skipping pjrt case)");
+    }
+
+    let rust_sim = AntSimEvaluator::new();
+    let mut seed = 0u32;
+    b.case("rust_sim_eval_1000ticks", || {
+        seed = seed.wrapping_add(1);
+        rust_sim.evaluate(&[50.0, 10.0], seed).unwrap()
+    });
+
+    // workflow-engine overhead: the same evaluation as a single-capsule
+    // puzzle (Listing 2 shape) on a local environment
+    let (evaluator, _) = molers::runtime::best_available_evaluator(1);
+    let seed_val = val_u32("seed");
+    let food1 = val_f64("food1");
+    let mut n = 0u32;
+    b.case("workflow_single_task", || {
+        n = n.wrapping_add(1);
+        let ev = Arc::clone(&evaluator);
+        let f1 = food1.clone();
+        let sv = seed_val.clone();
+        let task = ClosureTask::new("ants", move |ctx: &Context| {
+            let fit = ev.evaluate(&[125.0, 50.0, 10.0], ctx.get(&sv)?)?;
+            Ok(Context::new().with(&f1, fit[0]))
+        })
+        .input(&seed_val)
+        .output(&food1);
+        let mut p = Puzzle::new();
+        p.capsule(Arc::new(task));
+        MoleExecution::new(p, Arc::new(LocalEnvironment::new(1)), u64::from(n))
+            .start_with(Context::new().with(&seed_val, n))
+            .unwrap()
+    });
+}

@@ -1,0 +1,69 @@
+//! E2 (Listing 3): the 5-seed replication + median workflow. Measures the
+//! full explore → model×5 → aggregate → statistic pipeline and reports the
+//! stabilisation effect replication buys (spread of single evaluations vs
+//! spread of medians) — the reason §4.4 exists.
+
+use std::sync::Arc;
+
+use molers::bench::Bench;
+use molers::evolution::Evaluator;
+use molers::prelude::*;
+use molers::runtime::best_available_evaluator;
+use molers::util::stats;
+
+fn replication_workflow(
+    evaluator: Arc<dyn Evaluator>,
+    replications: usize,
+    seed: u64,
+) -> Context {
+    let seed_val = val_u32("seed");
+    let food1 = val_f64("food1");
+    let med1 = val_f64("med1");
+    let model = {
+        let (s, f) = (seed_val.clone(), food1.clone());
+        ClosureTask::new("ants", move |ctx: &Context| {
+            let fit = evaluator.evaluate(&[125.0, 50.0, 10.0], ctx.get(&s)?)?;
+            Ok(Context::new().with(&f, fit[0]))
+        })
+        .input(&seed_val)
+        .output(&food1)
+    };
+    let stat = StatisticTask::new().statistic(&food1, &med1, Descriptor::Median);
+    let mut p = Puzzle::new();
+    replicate(&mut p, Arc::new(model), &seed_val, replications, Arc::new(stat));
+    let result = MoleExecution::new(p, Arc::new(LocalEnvironment::new(4)), seed)
+        .start()
+        .unwrap();
+    result.outputs.into_iter().next().unwrap()
+}
+
+fn main() {
+    let mut b = Bench::new("e2_replication").warmup(1).samples(5);
+    let (evaluator, kind) = best_available_evaluator(2);
+    println!("backend: {kind}");
+
+    let mut seed = 0u64;
+    b.case("replicate5_median_workflow", || {
+        seed += 1;
+        replication_workflow(Arc::clone(&evaluator), 5, seed)
+    });
+
+    // the scientific payoff: replication shrinks fitness noise
+    let med1 = val_f64("med1");
+    let singles: Vec<f64> = (0..20)
+        .map(|s| evaluator.evaluate(&[125.0, 50.0, 10.0], s).unwrap()[0])
+        .collect();
+    let medians: Vec<f64> = (0..10)
+        .map(|s| {
+            replication_workflow(Arc::clone(&evaluator), 5, 1000 + s)
+                .get(&med1)
+                .unwrap()
+        })
+        .collect();
+    b.metric("single_eval_stddev", stats::stddev(&singles), "ticks");
+    b.metric("median5_stddev", stats::stddev(&medians), "ticks");
+    assert!(
+        stats::stddev(&medians) <= stats::stddev(&singles) * 1.2,
+        "replication should not increase spread"
+    );
+}

@@ -1,0 +1,70 @@
+//! E3 (Listing 4): generational NSGA-II calibration of the ant model.
+//! Scaled from the paper's (mu=10, lambda=10, 100 generations) to a bench-
+//! friendly generation count; reports end-to-end time, evaluation
+//! throughput, and the Pareto-front shape (the compromise between the
+//! three food sources the paper predicts).
+
+use std::sync::Arc;
+
+use molers::bench::Bench;
+use molers::evolution::{GenerationalGA, Nsga2Config, ReplicatedEvaluator};
+use molers::prelude::*;
+use molers::runtime::best_available_evaluator;
+
+fn main() {
+    let mut b = Bench::new("e3_nsga2").warmup(0).samples(3);
+    let (base, kind) = best_available_evaluator(2);
+    println!("backend: {kind}");
+
+    let d = val_f64("gDiffusionRate");
+    let e = val_f64("gEvaporationRate");
+    let m1 = val_f64("med1");
+    let m2 = val_f64("med2");
+    let m3 = val_f64("med3");
+    let config = Nsga2Config::new(
+        10,
+        &[(&d, 0.0, 99.0), (&e, 0.0, 99.0)],
+        &[&m1, &m2, &m3],
+        0.01,
+    )
+    .unwrap();
+
+    let env = LocalEnvironment::new(
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    );
+
+    // paper-shaped run, generations scaled 100 -> 10 for the bench
+    let evaluator = Arc::new(ReplicatedEvaluator::new(Arc::clone(&base), 3));
+    let ga = GenerationalGA::new(config.clone(), evaluator, 10);
+    let mut seed = 0u64;
+    let mut last = None;
+    b.case("mu10_lambda10_10gens_3reps", || {
+        seed += 1;
+        let r = ga.run(&env, 10, seed).unwrap();
+        last = Some(r.evaluations);
+        r
+    });
+    if let Some(evals) = last {
+        b.metric("evaluations_per_run", evals as f64, "evals");
+    }
+
+    // Pareto-shape check the paper predicts: a compromise front, with the
+    // near source (f1) emptying no later than the far source (f3)
+    let ga_front = GenerationalGA::new(
+        config,
+        Arc::new(ReplicatedEvaluator::new(base, 3)),
+        10,
+    );
+    let result = ga_front.run(&env, 15, 7).unwrap();
+    let ok_order = result
+        .pareto_front
+        .iter()
+        .filter(|i| i.objectives[0] <= i.objectives[2])
+        .count();
+    b.metric(
+        "front_points_near_before_far",
+        ok_order as f64 / result.pareto_front.len().max(1) as f64 * 100.0,
+        "%",
+    );
+    b.metric("front_size", result.pareto_front.len() as f64, "points");
+}

@@ -1,0 +1,93 @@
+//! E4 (Listing 5 + §4.6 headline): the island model on the simulated EGI.
+//!
+//! The paper's claim: 2,000 concurrent 1-hour islands evaluate a 200,000-
+//! individual population in one hour — i.e. sustained throughput of
+//! 200,000 evaluations per hour of virtual grid time. We run scaled
+//! configurations with REAL evaluations, measure virtual throughput, and
+//! check the linear-scaling shape that underlies the extrapolation.
+
+use std::sync::Arc;
+
+use molers::bench::Bench;
+use molers::environment::egi::EgiEnvironment;
+use molers::environment::Environment;
+use molers::evolution::{IslandConfig, IslandSteadyGA, Nsga2Config};
+use molers::exec::ThreadPool;
+use molers::metrics::throughput_per_hour;
+use molers::prelude::*;
+use molers::runtime::best_available_evaluator;
+
+fn config(mu: usize) -> Nsga2Config {
+    let d = val_f64("gDiffusionRate");
+    let e = val_f64("gEvaporationRate");
+    let m1 = val_f64("med1");
+    let m2 = val_f64("med2");
+    let m3 = val_f64("med3");
+    Nsga2Config::new(mu, &[(&d, 0.0, 99.0), (&e, 0.0, 99.0)], &[&m1, &m2, &m3], 0.01)
+        .unwrap()
+}
+
+fn main() {
+    let mut b = Bench::new("e4_island").warmup(0).samples(1);
+    let (evaluator, kind) = best_available_evaluator(2);
+    println!("backend: {kind}");
+
+    let mut results = Vec::new();
+    for &islands in &[8usize, 16, 32] {
+        let pool = Arc::new(ThreadPool::default_size());
+        let env = EgiEnvironment::new("biomed", islands, pool, 11);
+        let ga = IslandSteadyGA::new(
+            config(200),
+            IslandConfig {
+                concurrent_islands: islands,
+                // paper-shaped islands: 100 evaluations x 36 s nominal =
+                // one virtual hour per island (Listing 5's Timed(1 hour)),
+                // one island per slot
+                total_evaluations: islands as u64 * 100,
+                island_sample: 50,
+                evals_per_island: 100,
+            },
+            Arc::clone(&evaluator),
+        );
+        let mut out = None;
+        b.case(&format!("islands_{islands}_real"), || {
+            out = Some(ga.run(&env, 5, None).unwrap());
+        });
+        let r = out.unwrap();
+        let tput = throughput_per_hour(r.evaluations, r.virtual_makespan);
+        b.metric(
+            &format!("islands_{islands}_virtual_tput"),
+            tput,
+            "evals/virtual-hour",
+        );
+        b.metric(
+            &format!("islands_{islands}_extrapolated_2000"),
+            tput * 2000.0 / islands as f64,
+            "evals/hour (paper: 200000)",
+        );
+        // the paper's islands are *timed* (1 h each): a slow worker simply
+        // evaluates less, so stragglers never stretch the wall hour. Our
+        // fixed-eval islands overrun on slow nodes, which deflates the
+        // makespan-based number. Sustained throughput (per-slot busy time)
+        // is the closer mirror of "200,000 evaluated in one hour":
+        let stats = env.stats();
+        let busy_per_slot = stats.virtual_cpu_s / islands as f64;
+        let sustained = throughput_per_hour(r.evaluations, busy_per_slot);
+        b.metric(
+            &format!("islands_{islands}_sustained_2000"),
+            sustained * 2000.0 / islands as f64,
+            "evals/hour sustained (paper: 200000)",
+        );
+        results.push((islands, tput));
+    }
+
+    // the headline's underlying shape: throughput grows ~linearly in islands
+    let (i0, t0) = results[0];
+    let (i1, t1) = results[results.len() - 1];
+    let scaling = (t1 / t0) / (i1 as f64 / i0 as f64);
+    b.metric("scaling_efficiency", scaling * 100.0, "% of linear");
+    assert!(
+        scaling > 0.5,
+        "island throughput should scale near-linearly, got {scaling:.2}"
+    );
+}

@@ -1,0 +1,61 @@
+//! P1 (§Perf): evaluator hot-path throughput. Batch-size sweep of the PJRT
+//! (JAX+Pallas AOT) path — the L1/L2 optimisation target — against the
+//! pure-Rust twin, plus the replication wrapper's batching gain.
+
+use std::sync::Arc;
+
+use molers::bench::Bench;
+use molers::evolution::{AntSimEvaluator, Evaluator, ReplicatedEvaluator};
+use molers::runtime::{ArtifactManifest, PjrtEvaluator};
+
+fn main() {
+    let mut b = Bench::new("p1_evaluator").warmup(1).samples(5);
+
+    let rust_sim = AntSimEvaluator::new();
+    let mut s = 0u32;
+    b.case("rust_sim_single", || {
+        s += 1;
+        rust_sim.evaluate(&[50.0, 10.0], s).unwrap()
+    });
+
+    if !ArtifactManifest::available() {
+        println!("(artifacts not built; pjrt sweep skipped)");
+        return;
+    }
+    let pjrt = PjrtEvaluator::from_default_artifacts(1).expect("pjrt");
+
+    for &batch in &[1usize, 8, 32, 64] {
+        let jobs: Vec<(Vec<f64>, u32)> = (0..batch)
+            .map(|i| (vec![125.0, 30.0 + i as f64, 10.0], 7000 + i as u32))
+            .collect();
+        let m = b.case(&format!("pjrt_batch{batch}"), || {
+            pjrt.evaluate_batch(&jobs).unwrap()
+        });
+        let per_eval = m.median_s() / batch as f64;
+        b.metric(
+            &format!("pjrt_batch{batch}_per_eval"),
+            per_eval * 1e3,
+            "ms/eval",
+        );
+    }
+
+    // the replicated evaluator leans on evaluate_batch: its 5 seeds should
+    // cost well under 5x a single evaluation
+    let single = {
+        let mut s = 100u32;
+        b.case("pjrt_single_again", || {
+            s += 1;
+            pjrt.evaluate(&[50.0, 10.0], s).unwrap()
+        })
+        .median_s()
+    };
+    let replicated = ReplicatedEvaluator::new(Arc::new(pjrt), 5);
+    let mut s2 = 0u32;
+    let five = b
+        .case("pjrt_replicated5", || {
+            s2 += 1;
+            replicated.evaluate(&[50.0, 10.0], s2).unwrap()
+        })
+        .median_s();
+    b.metric("replication5_cost_ratio", five / single, "x (ideal < 5)");
+}

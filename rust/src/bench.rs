@@ -1,0 +1,139 @@
+//! Micro-bench harness for the `cargo bench` targets (criterion is not
+//! vendored in this image — DESIGN.md §3). Provides warmup, repeated
+//! timed runs and robust summary statistics, printed in a stable
+//! `name ... median=…` format that EXPERIMENTS.md quotes.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+}
+
+impl Measurement {
+    pub fn median_s(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn stddev_s(&self) -> f64 {
+        stats::stddev(&self.samples)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} median={} mean={} sd={} (n={})",
+            self.name,
+            human(self.median_s()),
+            human(self.mean_s()),
+            human(self.stddev_s()),
+            self.samples.len()
+        )
+    }
+}
+
+fn human(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
+    }
+}
+
+/// Bench runner: `Bench::new("e1").case("pjrt", || {...})`.
+pub struct Bench {
+    suite: String,
+    warmup: u32,
+    samples: u32,
+    results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        println!("== bench suite: {suite} ==");
+        Bench {
+            suite: suite.to_string(),
+            warmup: 1,
+            samples: 5,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn warmup(mut self, n: u32) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn samples(mut self, n: u32) -> Self {
+        self.samples = n;
+        self
+    }
+
+    /// Time `f` (already containing its own inner loop if wanted).
+    pub fn case<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples as usize);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let m = Measurement {
+            name: format!("{}/{}", self.suite, name),
+            samples,
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally computed metric (e.g. virtual throughput).
+    pub fn metric(&mut self, name: &str, value: f64, unit: &str) {
+        println!("{:<44} {value:.1} {unit}", format!("{}/{}", self.suite, name));
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Time one closure once (for coarse end-to-end numbers).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_samples() {
+        let mut b = Bench::new("t").warmup(0).samples(3);
+        let m = b.case("noop", || 1 + 1);
+        assert_eq!(m.samples.len(), 3);
+        assert!(m.median_s() >= 0.0);
+    }
+
+    #[test]
+    fn human_formats() {
+        assert_eq!(human(2.0), "2.000s");
+        assert_eq!(human(0.002), "2.000ms");
+        assert_eq!(human(2e-6), "2.000µs");
+        assert_eq!(human(5e-9), "5ns");
+    }
+}

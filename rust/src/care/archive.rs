@@ -1,0 +1,218 @@
+//! Self-contained re-executable archives ("carballs").
+//!
+//! A minimal binary container format standing in for CARE's archives: a
+//! header, the manifest, and the packed file entries. Implemented from
+//! scratch (no tar crate in the image) with enough rigour to round-trip
+//! byte-exactly — the property that makes re-execution reproducible.
+
+use crate::care::manifest::{Dependency, DependencyKind, KernelVersion, Manifest};
+use crate::error::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"CARBALL1";
+
+/// A packed file entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Entry {
+    pub path: String,
+    pub contents: Vec<u8>,
+}
+
+/// An in-memory re-executable archive.
+#[derive(Debug, Clone)]
+pub struct Archive {
+    pub manifest: Manifest,
+    pub entries: Vec<Entry>,
+    /// CARE mode: ships the syscall-emulation shim (PRoot); CDE mode does
+    /// not — the §3.2 distinction.
+    pub syscall_emulation: bool,
+}
+
+impl Archive {
+    /// Pack a manifest: one entry per dependency plus the launcher.
+    pub fn pack(manifest: Manifest, syscall_emulation: bool) -> Self {
+        let mut entries: Vec<Entry> = manifest
+            .dependencies
+            .iter()
+            .map(|d| Entry {
+                path: d.path.clone(),
+                contents: synth_contents(d),
+            })
+            .collect();
+        entries.push(Entry {
+            path: "./re-execute.sh".into(),
+            contents: format!("#!/bin/sh\nexec {}\n", manifest.command).into_bytes(),
+        });
+        Archive {
+            manifest,
+            entries,
+            syscall_emulation,
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.path.len() + e.contents.len()).sum()
+    }
+
+    /// Serialise to the carball wire format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.size_bytes() + 256);
+        out.extend_from_slice(MAGIC);
+        out.push(u8::from(self.syscall_emulation));
+        let k = &self.manifest.packaged_on;
+        out.extend_from_slice(&[k.0 as u8, k.1 as u8, (k.2 & 0xff) as u8]);
+        write_str(&mut out, &self.manifest.application);
+        write_str(&mut out, &self.manifest.command);
+        out.extend_from_slice(&(self.manifest.dependencies.len() as u32).to_le_bytes());
+        for d in &self.manifest.dependencies {
+            out.push(match d.kind {
+                DependencyKind::SharedLibrary => 0,
+                DependencyKind::Interpreter => 1,
+                DependencyKind::DataFile => 2,
+                DependencyKind::Executable => 3,
+            });
+            write_str(&mut out, &d.path);
+            write_str(&mut out, d.version.as_deref().unwrap_or(""));
+        }
+        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for e in &self.entries {
+            write_str(&mut out, &e.path);
+            out.extend_from_slice(&(e.contents.len() as u64).to_le_bytes());
+            out.extend_from_slice(&e.contents);
+        }
+        out
+    }
+
+    /// Parse the carball wire format.
+    pub fn from_bytes(data: &[u8]) -> Result<Self> {
+        let mut r = Reader { data, pos: 0 };
+        if r.take(8)? != MAGIC {
+            return Err(Error::Packaging("bad magic".into()));
+        }
+        let syscall_emulation = r.take(1)?[0] != 0;
+        let kv = r.take(3)?;
+        let packaged_on = KernelVersion(kv[0].into(), kv[1].into(), kv[2].into());
+        let application = r.string()?;
+        let command = r.string()?;
+        let mut manifest = Manifest::new(application, command, packaged_on);
+        let n_deps = r.u32()?;
+        for _ in 0..n_deps {
+            let kind = match r.take(1)?[0] {
+                0 => DependencyKind::SharedLibrary,
+                1 => DependencyKind::Interpreter,
+                2 => DependencyKind::DataFile,
+                3 => DependencyKind::Executable,
+                k => return Err(Error::Packaging(format!("bad dep kind {k}"))),
+            };
+            let path = r.string()?;
+            let version = r.string()?;
+            manifest.record(Dependency {
+                kind,
+                path,
+                version: if version.is_empty() { None } else { Some(version) },
+            });
+        }
+        let n_entries = r.u32()?;
+        let mut entries = Vec::with_capacity(n_entries as usize);
+        for _ in 0..n_entries {
+            let path = r.string()?;
+            let len = r.u64()? as usize;
+            let contents = r.take(len)?.to_vec();
+            entries.push(Entry { path, contents });
+        }
+        Ok(Archive {
+            manifest,
+            entries,
+            syscall_emulation,
+        })
+    }
+}
+
+/// Deterministic stand-in contents for a captured dependency.
+fn synth_contents(d: &Dependency) -> Vec<u8> {
+    format!(
+        "{:?} {} {}",
+        d.kind,
+        d.path,
+        d.version.as_deref().unwrap_or("-")
+    )
+    .into_bytes()
+}
+
+fn write_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+struct Reader<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.data.len() {
+            return Err(Error::Packaging("truncated archive".into()));
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        String::from_utf8(self.take(len)?.to_vec())
+            .map_err(|_| Error::Packaging("invalid utf-8 in archive".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest::new(
+            "ants",
+            "netlogo-headless.sh --model ants.nlogo",
+            KernelVersion(3, 10, 0),
+        )
+        .with(Dependency::lib("/lib/libc.so.6", "2.17"))
+        .with(Dependency::interpreter("/usr/bin/java", "1.8"))
+        .with(Dependency::data("/opt/ants.nlogo"))
+    }
+
+    #[test]
+    fn pack_includes_all_dependencies_and_launcher() {
+        let a = Archive::pack(manifest(), true);
+        assert_eq!(a.entries.len(), 4);
+        assert!(a.entries.iter().any(|e| e.path == "./re-execute.sh"));
+    }
+
+    #[test]
+    fn wire_format_roundtrips() {
+        let a = Archive::pack(manifest(), true);
+        let bytes = a.to_bytes();
+        let b = Archive::from_bytes(&bytes).unwrap();
+        assert_eq!(b.manifest.application, "ants");
+        assert_eq!(b.manifest.packaged_on, KernelVersion(3, 10, 0));
+        assert_eq!(b.manifest.dependencies, a.manifest.dependencies);
+        assert_eq!(b.entries, a.entries);
+        assert!(b.syscall_emulation);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let a = Archive::pack(manifest(), false);
+        let mut bytes = a.to_bytes();
+        bytes.truncate(bytes.len() / 2);
+        assert!(Archive::from_bytes(&bytes).is_err());
+        assert!(Archive::from_bytes(b"NOTMAGIC rest").is_err());
+    }
+}

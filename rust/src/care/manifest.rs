@@ -1,0 +1,147 @@
+//! Dependency capture: what a probe run of the application touched.
+
+use std::collections::BTreeSet;
+
+/// Kinds of runtime dependency CDE/CARE capture by tracing the probe run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DependencyKind {
+    /// Shared library (`.so`) resolved by the dynamic linker.
+    SharedLibrary,
+    /// Interpreter (python, java, netlogo, ...).
+    Interpreter,
+    /// Data file opened at runtime.
+    DataFile,
+    /// Another executable spawned by the application.
+    Executable,
+}
+
+/// One captured dependency.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Dependency {
+    pub kind: DependencyKind,
+    pub path: String,
+    /// Version string if the tracer could determine one.
+    pub version: Option<String>,
+}
+
+impl Dependency {
+    pub fn lib(path: &str, version: &str) -> Self {
+        Dependency {
+            kind: DependencyKind::SharedLibrary,
+            path: path.into(),
+            version: Some(version.into()),
+        }
+    }
+
+    pub fn data(path: &str) -> Self {
+        Dependency {
+            kind: DependencyKind::DataFile,
+            path: path.into(),
+            version: None,
+        }
+    }
+
+    pub fn interpreter(path: &str, version: &str) -> Self {
+        Dependency {
+            kind: DependencyKind::Interpreter,
+            path: path.into(),
+            version: Some(version.into()),
+        }
+    }
+}
+
+/// Linux kernel version, ordered — the compatibility axis of §3.2 (CDE
+/// archives only re-execute on kernels at least as old as the packaging
+/// host's; CARE lifts this by syscall emulation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct KernelVersion(pub u16, pub u16, pub u16);
+
+impl KernelVersion {
+    /// The "rule of thumb" packaging kernel of §3.1: Scientific Linux /
+    /// CentOS era 2.6.32.
+    pub const SCIENTIFIC_LINUX: KernelVersion = KernelVersion(2, 6, 32);
+
+    pub fn parse(s: &str) -> Option<Self> {
+        let mut it = s.trim().split('.');
+        let a = it.next()?.parse().ok()?;
+        let b = it.next()?.parse().ok()?;
+        let c = it
+            .next()
+            .and_then(|p| p.split('-').next())
+            .and_then(|p| p.parse().ok())
+            .unwrap_or(0);
+        Some(KernelVersion(a, b, c))
+    }
+}
+
+impl std::fmt::Display for KernelVersion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}.{}.{}", self.0, self.1, self.2)
+    }
+}
+
+/// The package manifest: everything a probe run touched, plus the
+/// packaging host's kernel (which determines CDE compatibility).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub application: String,
+    pub command: String,
+    pub dependencies: BTreeSet<Dependency>,
+    pub packaged_on: KernelVersion,
+}
+
+impl Manifest {
+    pub fn new(
+        application: impl Into<String>,
+        command: impl Into<String>,
+        packaged_on: KernelVersion,
+    ) -> Self {
+        Manifest {
+            application: application.into(),
+            command: command.into(),
+            dependencies: BTreeSet::new(),
+            packaged_on,
+        }
+    }
+
+    /// Record a dependency observed during the probe run.
+    pub fn record(&mut self, dep: Dependency) {
+        self.dependencies.insert(dep);
+    }
+
+    pub fn with(mut self, dep: Dependency) -> Self {
+        self.record(dep);
+        self
+    }
+
+    pub fn libraries(&self) -> impl Iterator<Item = &Dependency> {
+        self.dependencies
+            .iter()
+            .filter(|d| d.kind == DependencyKind::SharedLibrary)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_versions_order() {
+        assert!(KernelVersion(2, 6, 32) < KernelVersion(3, 2, 0));
+        assert!(KernelVersion(4, 19, 0) < KernelVersion(5, 4, 0));
+        assert_eq!(KernelVersion::parse("5.4.0-42-generic"), Some(KernelVersion(5, 4, 0)));
+        assert_eq!(KernelVersion::parse("2.6.32"), Some(KernelVersion(2, 6, 32)));
+        assert_eq!(KernelVersion::parse("junk"), None);
+    }
+
+    #[test]
+    fn manifest_deduplicates() {
+        let mut m = Manifest::new("ants", "netlogo-headless.sh ants.nlogo",
+                                  KernelVersion(3, 10, 0));
+        m.record(Dependency::lib("/lib/libc.so.6", "2.17"));
+        m.record(Dependency::lib("/lib/libc.so.6", "2.17"));
+        m.record(Dependency::data("/opt/model/ants.nlogo"));
+        assert_eq!(m.dependencies.len(), 2);
+        assert_eq!(m.libraries().count(), 1);
+    }
+}

@@ -1,0 +1,20 @@
+//! CARE/CDE-style application packaging (paper §3).
+//!
+//! The paper's §3 problem: shipping an application to heterogeneous remote
+//! hosts fails when dependencies are missing or mismatched. Its solution:
+//! package the application *with* everything it touched during a probe
+//! run (CDE), upgraded to CARE which additionally **emulates missing
+//! syscalls** so archives built on new kernels re-execute on old ones.
+//!
+//! This module reproduces that decision logic as an executable model:
+//! dependency capture ([`manifest`]), archive assembly ([`archive`]) and
+//! re-execution compatibility checking ([`reexec`]), which the packaging
+//! benches (`a3_packaging`) and `SystemExecTask` exercise.
+
+pub mod archive;
+pub mod manifest;
+pub mod reexec;
+
+pub use archive::Archive;
+pub use manifest::{Dependency, DependencyKind, KernelVersion, Manifest};
+pub use reexec::{Packager, ReexecOutcome, RemoteHost};

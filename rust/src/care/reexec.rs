@@ -1,0 +1,251 @@
+//! Re-execution compatibility: the §3 decision logic, executable.
+//!
+//! * **Bare execution** (no packaging): fails wherever a dependency is
+//!   missing or deployed at a different version — including the "silent
+//!   error" case the paper warns about (same library, different version,
+//!   different results).
+//! * **CDE packaging**: dependencies ship with the app, but the archive
+//!   only runs on hosts whose kernel is **at least as new** as the
+//!   packaging host's (no emulation) — hence §3.1's 2.6.32 rule of thumb.
+//! * **CARE packaging**: additionally emulates missing syscalls, so new →
+//!   old kernel re-execution succeeds (at a small overhead).
+
+use crate::care::archive::Archive;
+use crate::care::manifest::{KernelVersion, Manifest};
+use crate::util::Rng;
+
+/// A remote execution host with its own software environment.
+#[derive(Debug, Clone)]
+pub struct RemoteHost {
+    pub name: String,
+    pub kernel: KernelVersion,
+    /// (path, version) of deployed software; absent path = missing.
+    pub deployed: Vec<(String, String)>,
+}
+
+impl RemoteHost {
+    pub fn new(name: impl Into<String>, kernel: KernelVersion) -> Self {
+        RemoteHost {
+            name: name.into(),
+            kernel,
+            deployed: Vec::new(),
+        }
+    }
+
+    pub fn with_software(mut self, path: &str, version: &str) -> Self {
+        self.deployed.push((path.into(), version.into()));
+        self
+    }
+
+    /// A random grid worker: heterogeneous kernels and spotty deployments
+    /// (the paper: "the larger the pool of distributed machines, the more
+    /// heterogeneous they are likely to be").
+    pub fn random_grid_worker(idx: usize, app: &Manifest, rng: &mut Rng) -> Self {
+        let kernels = [
+            KernelVersion(2, 6, 18),
+            KernelVersion(2, 6, 32),
+            KernelVersion(3, 2, 0),
+            KernelVersion(3, 10, 0),
+            KernelVersion(4, 4, 0),
+        ];
+        let mut host = RemoteHost::new(
+            format!("wn{idx:04}.sim.egi.eu"),
+            kernels[rng.usize(kernels.len())],
+        );
+        for dep in &app.dependencies {
+            if let Some(v) = &dep.version {
+                let r = rng.f64();
+                if r < 0.5 {
+                    host = host.with_software(&dep.path, v); // matching deploy
+                } else if r < 0.75 {
+                    host = host.with_software(&dep.path, &format!("{v}-other"));
+                } // else missing entirely
+            } else if rng.bool(0.3) {
+                host = host.with_software(&dep.path, "present");
+            }
+        }
+        host
+    }
+
+    fn lookup(&self, path: &str) -> Option<&str> {
+        self.deployed
+            .iter()
+            .find(|(p, _)| p == path)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Outcome of attempting to run the application on a host.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReexecOutcome {
+    /// Ran and produced the reference results.
+    Success {
+        /// Relative runtime overhead (1.0 = native).
+        overhead: u32, // percent
+    },
+    /// Hard failure: a dependency was missing.
+    MissingDependency(String),
+    /// Hard failure: archive needs a newer kernel than the host has.
+    KernelTooOld {
+        host: KernelVersion,
+        required: KernelVersion,
+    },
+    /// Ran, but a version-skewed dependency silently changed the results —
+    /// the Provenance-breaking case of §3.1.
+    SilentError(String),
+}
+
+impl ReexecOutcome {
+    pub fn is_success(&self) -> bool {
+        matches!(self, ReexecOutcome::Success { .. })
+    }
+
+    /// Success *and* correct (silent errors "run" but are wrong).
+    pub fn is_correct(&self) -> bool {
+        self.is_success()
+    }
+}
+
+/// Packaging strategies compared by bench `a3_packaging`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Packager {
+    /// Ship nothing; rely on the host's deployment.
+    None,
+    /// CDE: archive, no syscall emulation.
+    Cde,
+    /// CARE: archive + syscall emulation.
+    Care,
+}
+
+/// Attempt re-execution of `manifest` on `host` under `packager`.
+pub fn reexecute(manifest: &Manifest, packager: Packager, host: &RemoteHost) -> ReexecOutcome {
+    match packager {
+        Packager::None => {
+            // every dependency must be deployed at the exact version
+            for dep in &manifest.dependencies {
+                match (host.lookup(&dep.path), &dep.version) {
+                    (None, _) => {
+                        return ReexecOutcome::MissingDependency(dep.path.clone())
+                    }
+                    (Some(have), Some(want)) if have != want => {
+                        return ReexecOutcome::SilentError(format!(
+                            "{}: host has {have}, app needs {want}",
+                            dep.path
+                        ))
+                    }
+                    _ => {}
+                }
+            }
+            ReexecOutcome::Success { overhead: 0 }
+        }
+        Packager::Cde | Packager::Care => {
+            let archive = Archive::pack(manifest.clone(), packager == Packager::Care);
+            // dependencies travel with the archive — only the kernel matters
+            if !archive.syscall_emulation && host.kernel < manifest.packaged_on {
+                return ReexecOutcome::KernelTooOld {
+                    host: host.kernel,
+                    required: manifest.packaged_on,
+                };
+            }
+            let overhead = if archive.syscall_emulation && host.kernel < manifest.packaged_on
+            {
+                8 // PRoot-style emulation cost on the old-kernel path
+            } else {
+                2 // ptrace interposition baseline
+            };
+            ReexecOutcome::Success { overhead }
+        }
+    }
+}
+
+/// Run the packaging comparison over a fleet: fraction of correct
+/// re-executions per strategy (the a3 bench's headline number).
+pub fn fleet_success_rate(
+    manifest: &Manifest,
+    packager: Packager,
+    hosts: &[RemoteHost],
+) -> f64 {
+    if hosts.is_empty() {
+        return 0.0;
+    }
+    let ok = hosts
+        .iter()
+        .filter(|h| reexecute(manifest, packager, h).is_correct())
+        .count();
+    ok as f64 / hosts.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::care::manifest::Dependency;
+
+    fn app() -> Manifest {
+        Manifest::new("ants", "./ants", KernelVersion(3, 10, 0))
+            .with(Dependency::lib("/lib/libc.so.6", "2.17"))
+            .with(Dependency::interpreter("/usr/bin/java", "1.8"))
+    }
+
+    #[test]
+    fn bare_execution_fails_on_missing_dep() {
+        let host = RemoteHost::new("h", KernelVersion(3, 10, 0))
+            .with_software("/lib/libc.so.6", "2.17"); // java missing
+        assert!(matches!(
+            reexecute(&app(), Packager::None, &host),
+            ReexecOutcome::MissingDependency(p) if p == "/usr/bin/java"
+        ));
+    }
+
+    #[test]
+    fn bare_execution_silent_error_on_version_skew() {
+        let host = RemoteHost::new("h", KernelVersion(3, 10, 0))
+            .with_software("/lib/libc.so.6", "2.28")
+            .with_software("/usr/bin/java", "1.8");
+        assert!(matches!(
+            reexecute(&app(), Packager::None, &host),
+            ReexecOutcome::SilentError(_)
+        ));
+    }
+
+    #[test]
+    fn cde_fails_new_to_old_kernel() {
+        // packaged on 3.10, host runs 2.6.32 — the exact §3.2 limitation
+        let host = RemoteHost::new("old", KernelVersion(2, 6, 32));
+        assert!(matches!(
+            reexecute(&app(), Packager::Cde, &host),
+            ReexecOutcome::KernelTooOld { .. }
+        ));
+    }
+
+    #[test]
+    fn care_succeeds_new_to_old_kernel_with_overhead() {
+        let host = RemoteHost::new("old", KernelVersion(2, 6, 32));
+        match reexecute(&app(), Packager::Care, &host) {
+            ReexecOutcome::Success { overhead } => assert!(overhead > 2),
+            other => panic!("CARE should emulate: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cde_ok_old_to_new_kernel() {
+        let mut m = app();
+        m.packaged_on = KernelVersion::SCIENTIFIC_LINUX; // the rule of thumb
+        let host = RemoteHost::new("new", KernelVersion(4, 4, 0));
+        assert!(reexecute(&m, Packager::Cde, &host).is_success());
+    }
+
+    #[test]
+    fn fleet_ranking_care_ge_cde_gt_none() {
+        let m = app();
+        let mut rng = crate::util::Rng::new(7);
+        let fleet: Vec<RemoteHost> = (0..200)
+            .map(|i| RemoteHost::random_grid_worker(i, &m, &mut rng))
+            .collect();
+        let none = fleet_success_rate(&m, Packager::None, &fleet);
+        let cde = fleet_success_rate(&m, Packager::Cde, &fleet);
+        let care = fleet_success_rate(&m, Packager::Care, &fleet);
+        assert_eq!(care, 1.0, "CARE must succeed everywhere");
+        assert!(cde < care, "CDE blocked by old kernels");
+        assert!(none < cde, "bare execution worst: {none} vs {cde}");
+    }
+}

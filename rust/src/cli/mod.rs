@@ -1,0 +1,146 @@
+//! Minimal CLI argument parser (clap is not vendored in this image).
+//!
+//! Supports `program <subcommand> --key value --flag` with typed getters
+//! and automatic usage errors — enough surface for the `molers` launcher
+//! and the bench binaries.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("empty option name `--`".into());
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects a number, got `{v}`")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("island --islands 2000 --seed 42 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("island"));
+        assert_eq!(a.usize("islands", 0).unwrap(), 2000);
+        assert_eq!(a.u64("seed", 0).unwrap(), 42);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --env=egi --mu=200");
+        assert_eq!(a.get("env"), Some("egi"));
+        assert_eq!(a.usize("mu", 0).unwrap(), 200);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.usize("mu", 10).unwrap(), 10);
+        assert_eq!(a.f64("rate", 0.5).unwrap(), 0.5);
+        assert_eq!(a.get_or("env", "local"), "local");
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("run --mu abc");
+        assert!(a.usize("mu", 0).is_err());
+    }
+
+    #[test]
+    fn negative_option_values() {
+        let a = parse("run --x -3.5");
+        assert_eq!(a.f64("x", 0.0).unwrap(), -3.5);
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("render out.ppm --ticks 100");
+        assert_eq!(a.positional(), &["out.ppm".to_string()]);
+    }
+}

@@ -1,0 +1,193 @@
+//! The dataflow context: the set of variables flowing between tasks.
+
+use std::collections::BTreeMap;
+
+use crate::core::val::Val;
+use crate::core::variable::{Value, ValueType};
+use crate::error::{Error, Result};
+
+/// An immutable-by-convention bag of named, typed values. Tasks receive a
+/// context, read their declared inputs, and return a context holding their
+/// outputs; the engine merges contexts along transitions.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Context {
+    vars: BTreeMap<String, Value>,
+}
+
+impl Context {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Builder-style insert: `Context::new().with(&seed, 42u32)`.
+    pub fn with<T: ValueType>(mut self, proto: &Val<T>, value: T) -> Self {
+        self.set(proto, value);
+        self
+    }
+
+    pub fn set<T: ValueType>(&mut self, proto: &Val<T>, value: T) {
+        self.vars.insert(proto.name().to_string(), value.into_value());
+    }
+
+    pub fn set_raw(&mut self, name: &str, value: Value) {
+        self.vars.insert(name.to_string(), value);
+    }
+
+    /// Typed read; error if absent or wrong type.
+    pub fn get<T: ValueType>(&self, proto: &Val<T>) -> Result<T> {
+        let v = self
+            .vars
+            .get(proto.name())
+            .ok_or_else(|| Error::MissingVariable(proto.name().to_string()))?;
+        T::from_value(v).ok_or_else(|| Error::TypeMismatch {
+            name: proto.name().to_string(),
+            expected: T::TYPE_NAME,
+            actual: v.type_name(),
+        })
+    }
+
+    pub fn get_raw(&self, name: &str) -> Option<&Value> {
+        self.vars.get(name)
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.vars.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.vars.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.vars.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vars.is_empty()
+    }
+
+    /// Merge `other` into `self`; `other` wins on conflicts (downstream
+    /// tasks see the freshest write, as in OpenMOLE's dataflow).
+    pub fn merge(&mut self, other: &Context) {
+        for (k, v) in &other.vars {
+            self.vars.insert(k.clone(), v.clone());
+        }
+    }
+
+    /// Keep only the named variables (used to narrow a context to a task's
+    /// declared inputs).
+    pub fn filtered(&self, names: &[&str]) -> Context {
+        let mut out = Context::new();
+        for n in names {
+            if let Some(v) = self.vars.get(*n) {
+                out.vars.insert((*n).to_string(), v.clone());
+            }
+        }
+        out
+    }
+
+    /// Fan-in: collapse many contexts into one by turning each variable
+    /// into a `List` of its per-context values (OpenMOLE's aggregation when
+    /// an exploration closes). Variables missing from any context are
+    /// dropped.
+    pub fn aggregate(contexts: &[Context]) -> Context {
+        let mut out = Context::new();
+        if contexts.is_empty() {
+            return out;
+        }
+        'vars: for name in contexts[0].vars.keys() {
+            let mut list = Vec::with_capacity(contexts.len());
+            for c in contexts {
+                match c.vars.get(name) {
+                    Some(v) => list.push(v.clone()),
+                    None => continue 'vars,
+                }
+            }
+            out.vars.insert(name.clone(), Value::List(list));
+        }
+        out
+    }
+
+    /// Render `name=value` pairs (ToStringHook).
+    pub fn display(&self) -> String {
+        self.vars
+            .iter()
+            .map(|(k, v)| format!("{k}={}", v.display()))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::val::{val_f64, val_str, val_u32};
+
+    #[test]
+    fn set_get_roundtrip() {
+        let x = val_f64("x");
+        let ctx = Context::new().with(&x, 2.5);
+        assert_eq!(ctx.get(&x).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn missing_variable_is_error() {
+        let x = val_f64("x");
+        let err = Context::new().get(&x).unwrap_err();
+        assert!(matches!(err, Error::MissingVariable(n) if n == "x"));
+    }
+
+    #[test]
+    fn type_mismatch_is_error() {
+        let s = val_str("x");
+        let ctx = Context::new().with(&val_f64("x"), 1.0);
+        assert!(matches!(
+            ctx.get(&s).unwrap_err(),
+            Error::TypeMismatch { .. }
+        ));
+    }
+
+    #[test]
+    fn merge_last_writer_wins() {
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let mut a = Context::new().with(&x, 1.0);
+        let b = Context::new().with(&x, 2.0).with(&y, 3.0);
+        a.merge(&b);
+        assert_eq!(a.get(&x).unwrap(), 2.0);
+        assert_eq!(a.get(&y).unwrap(), 3.0);
+    }
+
+    #[test]
+    fn aggregate_builds_arrays() {
+        let f = val_f64("food1");
+        let ctxs: Vec<Context> = (0..4)
+            .map(|i| Context::new().with(&f, f64::from(i)))
+            .collect();
+        let agg = Context::aggregate(&ctxs);
+        assert_eq!(
+            agg.get(&f.array()).unwrap(),
+            vec![0.0, 1.0, 2.0, 3.0]
+        );
+    }
+
+    #[test]
+    fn aggregate_drops_partial_variables() {
+        let f = val_f64("f");
+        let g = val_f64("g");
+        let a = Context::new().with(&f, 1.0).with(&g, 1.0);
+        let b = Context::new().with(&f, 2.0);
+        let agg = Context::aggregate(&[a, b]);
+        assert!(agg.contains("f"));
+        assert!(!agg.contains("g"));
+    }
+
+    #[test]
+    fn filtered_narrows() {
+        let ctx = Context::new()
+            .with(&val_f64("a"), 1.0)
+            .with(&val_u32("b"), 2);
+        let narrow = ctx.filtered(&["a"]);
+        assert!(narrow.contains("a") && !narrow.contains("b"));
+    }
+}

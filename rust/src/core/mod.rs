@@ -1,0 +1,10 @@
+//! Typed dataflow core: variable prototypes ([`Val`]), runtime values
+//! ([`Value`]) and the [`Context`] that flows between tasks.
+
+mod context;
+mod val;
+pub mod variable;
+
+pub use context::Context;
+pub use val::{val_f64, val_i64, val_str, val_u32, Val};
+pub use variable::{Value, ValueType};

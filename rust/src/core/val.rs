@@ -1,0 +1,93 @@
+//! Typed variable prototypes — the `Val[T]` of OpenMOLE's DSL.
+//!
+//! A [`Val<T>`] is a named, typed key into the dataflow [`Context`]. Tasks
+//! declare their inputs/outputs as prototypes; the engine checks presence
+//! and type at the task boundary, which is what lets workflows fail fast
+//! instead of silently mis-wiring (paper §2.1: the DSL "denotes all the
+//! types and data used within the workflow").
+//!
+//! [`Context`]: crate::core::Context
+
+use std::marker::PhantomData;
+
+use crate::core::variable::ValueType;
+
+/// A named, typed dataflow variable prototype.
+///
+/// Cloning is cheap; prototypes are identified by name, so two `Val<f64>`
+/// with the same name refer to the same slot.
+#[derive(Debug)]
+pub struct Val<T> {
+    name: String,
+    _ty: PhantomData<fn() -> T>,
+}
+
+impl<T> Clone for Val<T> {
+    fn clone(&self) -> Self {
+        Val {
+            name: self.name.clone(),
+            _ty: PhantomData,
+        }
+    }
+}
+
+impl<T: ValueType> Val<T> {
+    /// Declare a prototype, e.g. `let food1: Val<f64> = Val::new("food1");`
+    pub fn new(name: impl Into<String>) -> Self {
+        Val {
+            name: name.into(),
+            _ty: PhantomData,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The prototype for the array of `T` produced when an exploration or
+    /// replication fans results back in (OpenMOLE's `toArray` semantics).
+    pub fn array(&self) -> Val<Vec<T>> {
+        Val::new(self.name.clone())
+    }
+}
+
+impl<T> PartialEq for Val<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.name == other.name
+    }
+}
+impl<T> Eq for Val<T> {}
+
+/// Convenience constructors for the common prototypes.
+pub fn val_f64(name: &str) -> Val<f64> {
+    Val::new(name)
+}
+pub fn val_i64(name: &str) -> Val<i64> {
+    Val::new(name)
+}
+pub fn val_u32(name: &str) -> Val<u32> {
+    Val::new(name)
+}
+pub fn val_str(name: &str) -> Val<String> {
+    Val::new(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equality_is_by_name() {
+        let a: Val<f64> = Val::new("x");
+        let b: Val<f64> = Val::new("x");
+        let c: Val<f64> = Val::new("y");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn array_prototype_keeps_name() {
+        let a: Val<f64> = Val::new("food1");
+        assert_eq!(a.array().name(), "food1");
+    }
+}

@@ -1,0 +1,180 @@
+//! Dynamic values flowing through the dataflow.
+//!
+//! OpenMOLE's dataflow is typed via Scala generics (`Val[Double]`); here a
+//! closed `Value` enum plays the role of the runtime representation while
+//! [`crate::core::Val`] carries the static type.
+
+/// A value carried by the dataflow.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F64(f64),
+    I64(i64),
+    U32(u32),
+    Bool(bool),
+    Str(String),
+    /// Homogeneous array (exploration fan-ins produce these).
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::F64(_) => "f64",
+            Value::I64(_) => "i64",
+            Value::U32(_) => "u32",
+            Value::Bool(_) => "bool",
+            Value::Str(_) => "string",
+            Value::List(_) => "list",
+        }
+    }
+
+    /// Render for hooks (`ToStringHook`, CSV writers).
+    pub fn display(&self) -> String {
+        match self {
+            Value::F64(v) => format!("{v}"),
+            Value::I64(v) => format!("{v}"),
+            Value::U32(v) => format!("{v}"),
+            Value::Bool(v) => format!("{v}"),
+            Value::Str(v) => v.clone(),
+            Value::List(v) => {
+                let inner: Vec<String> = v.iter().map(Value::display).collect();
+                format!("[{}]", inner.join(", "))
+            }
+        }
+    }
+}
+
+/// Conversion between Rust types and dataflow [`Value`]s.
+pub trait ValueType: Sized + Clone {
+    const TYPE_NAME: &'static str;
+    fn into_value(self) -> Value;
+    fn from_value(v: &Value) -> Option<Self>;
+}
+
+impl ValueType for f64 {
+    const TYPE_NAME: &'static str = "f64";
+    fn into_value(self) -> Value {
+        Value::F64(self)
+    }
+    fn from_value(v: &Value) -> Option<Self> {
+        match v {
+            Value::F64(x) => Some(*x),
+            Value::I64(x) => Some(*x as f64),
+            Value::U32(x) => Some(f64::from(*x)),
+            _ => None,
+        }
+    }
+}
+
+impl ValueType for i64 {
+    const TYPE_NAME: &'static str = "i64";
+    fn into_value(self) -> Value {
+        Value::I64(self)
+    }
+    fn from_value(v: &Value) -> Option<Self> {
+        match v {
+            Value::I64(x) => Some(*x),
+            Value::U32(x) => Some(i64::from(*x)),
+            _ => None,
+        }
+    }
+}
+
+impl ValueType for u32 {
+    const TYPE_NAME: &'static str = "u32";
+    fn into_value(self) -> Value {
+        Value::U32(self)
+    }
+    fn from_value(v: &Value) -> Option<Self> {
+        match v {
+            Value::U32(x) => Some(*x),
+            Value::I64(x) => u32::try_from(*x).ok(),
+            _ => None,
+        }
+    }
+}
+
+impl ValueType for bool {
+    const TYPE_NAME: &'static str = "bool";
+    fn into_value(self) -> Value {
+        Value::Bool(self)
+    }
+    fn from_value(v: &Value) -> Option<Self> {
+        match v {
+            Value::Bool(x) => Some(*x),
+            _ => None,
+        }
+    }
+}
+
+impl ValueType for String {
+    const TYPE_NAME: &'static str = "string";
+    fn into_value(self) -> Value {
+        Value::Str(self)
+    }
+    fn from_value(v: &Value) -> Option<Self> {
+        match v {
+            Value::Str(x) => Some(x.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl<T: ValueType> ValueType for Vec<T> {
+    const TYPE_NAME: &'static str = "list";
+    fn into_value(self) -> Value {
+        Value::List(self.into_iter().map(ValueType::into_value).collect())
+    }
+    fn from_value(v: &Value) -> Option<Self> {
+        match v {
+            Value::List(xs) => xs.iter().map(T::from_value).collect(),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        assert_eq!(f64::from_value(&3.5f64.into_value()), Some(3.5));
+        assert_eq!(i64::from_value(&7i64.into_value()), Some(7));
+        assert_eq!(u32::from_value(&9u32.into_value()), Some(9));
+        assert_eq!(bool::from_value(&true.into_value()), Some(true));
+        assert_eq!(
+            String::from_value(&"x".to_string().into_value()),
+            Some("x".to_string())
+        );
+    }
+
+    #[test]
+    fn numeric_widening() {
+        // i64/u32 read back as f64 (exploration samplings emit f64)
+        assert_eq!(f64::from_value(&Value::I64(4)), Some(4.0));
+        assert_eq!(f64::from_value(&Value::U32(4)), Some(4.0));
+        // but not bool/str
+        assert_eq!(f64::from_value(&Value::Bool(true)), None);
+    }
+
+    #[test]
+    fn roundtrip_lists() {
+        let v = vec![1.0, 2.0, 3.0].into_value();
+        assert_eq!(Vec::<f64>::from_value(&v), Some(vec![1.0, 2.0, 3.0]));
+        let nested = vec![vec![1.0], vec![2.0]].into_value();
+        assert_eq!(
+            Vec::<Vec<f64>>::from_value(&nested),
+            Some(vec![vec![1.0], vec![2.0]])
+        );
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(Value::F64(2.5).display(), "2.5");
+        assert_eq!(
+            vec![1.0, 2.0].into_value().display(),
+            "[1, 2]"
+        );
+    }
+}

@@ -1,0 +1,279 @@
+//! Hooks: the only sanctioned side-effect channel (paper §4.3).
+//!
+//! Tasks are pure; hooks observe task results — display them, save Pareto
+//! fronts, append CSV rows. Hooks run on the coordinator, never on remote
+//! environments.
+
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use crate::core::{Context, Val, ValueType, Value};
+use crate::error::Result;
+
+/// Observer invoked with the output context of a capsule's task.
+pub trait Hook: Send + Sync {
+    fn name(&self) -> &str;
+    fn process(&self, ctx: &Context) -> Result<()>;
+}
+
+/// Where textual hook output goes. Defaults to stdout; tests capture.
+#[derive(Clone)]
+pub enum Sink {
+    Stdout,
+    Capture(Arc<Mutex<Vec<String>>>),
+}
+
+impl Sink {
+    pub fn capture() -> (Sink, Arc<Mutex<Vec<String>>>) {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        (Sink::Capture(Arc::clone(&buf)), buf)
+    }
+
+    fn emit(&self, line: String) {
+        match self {
+            Sink::Stdout => println!("{line}"),
+            Sink::Capture(buf) => buf.lock().unwrap().push(line),
+        }
+    }
+}
+
+/// `ToStringHook(food1, food2, food3)` — print selected variables.
+pub struct ToStringHook {
+    vars: Vec<String>,
+    sink: Sink,
+}
+
+impl ToStringHook {
+    pub fn new(vars: &[&str]) -> Self {
+        ToStringHook {
+            vars: vars.iter().map(|s| s.to_string()).collect(),
+            sink: Sink::Stdout,
+        }
+    }
+
+    pub fn of<T: ValueType>(vals: &[&Val<T>]) -> Self {
+        Self::new(&vals.iter().map(|v| v.name()).collect::<Vec<_>>())
+    }
+
+    pub fn sink(mut self, sink: Sink) -> Self {
+        self.sink = sink;
+        self
+    }
+}
+
+impl Hook for ToStringHook {
+    fn name(&self) -> &str {
+        "ToStringHook"
+    }
+    fn process(&self, ctx: &Context) -> Result<()> {
+        let line = self
+            .vars
+            .iter()
+            .map(|v| {
+                let val = ctx
+                    .get_raw(v)
+                    .map(Value::display)
+                    .unwrap_or_else(|| "<missing>".to_string());
+                format!("{v}={val}")
+            })
+            .collect::<Vec<_>>()
+            .join(", ");
+        self.sink.emit(line);
+        Ok(())
+    }
+}
+
+/// `DisplayHook("Generation ${generation}")` — template interpolation.
+pub struct DisplayHook {
+    template: String,
+    sink: Sink,
+}
+
+impl DisplayHook {
+    pub fn new(template: impl Into<String>) -> Self {
+        DisplayHook {
+            template: template.into(),
+            sink: Sink::Stdout,
+        }
+    }
+
+    pub fn sink(mut self, sink: Sink) -> Self {
+        self.sink = sink;
+        self
+    }
+
+    /// Replace `${name}` with the variable's display value.
+    fn render(&self, ctx: &Context) -> String {
+        let mut out = String::new();
+        let mut rest = self.template.as_str();
+        while let Some(start) = rest.find("${") {
+            out.push_str(&rest[..start]);
+            let after = &rest[start + 2..];
+            match after.find('}') {
+                Some(end) => {
+                    let name = &after[..end];
+                    match ctx.get_raw(name) {
+                        Some(v) => out.push_str(&v.display()),
+                        None => out.push_str("<missing>"),
+                    }
+                    rest = &after[end + 1..];
+                }
+                None => {
+                    out.push_str(&rest[start..]);
+                    rest = "";
+                }
+            }
+        }
+        out.push_str(rest);
+        out
+    }
+}
+
+impl Hook for DisplayHook {
+    fn name(&self) -> &str {
+        "DisplayHook"
+    }
+    fn process(&self, ctx: &Context) -> Result<()> {
+        self.sink.emit(self.render(ctx));
+        Ok(())
+    }
+}
+
+/// `AppendToCSVFileHook` — append one row per processed context.
+pub struct CsvHook {
+    path: PathBuf,
+    vars: Vec<String>,
+    header_written: Mutex<bool>,
+}
+
+impl CsvHook {
+    pub fn new(path: impl Into<PathBuf>, vars: &[&str]) -> Self {
+        CsvHook {
+            path: path.into(),
+            vars: vars.iter().map(|s| s.to_string()).collect(),
+            header_written: Mutex::new(false),
+        }
+    }
+}
+
+impl Hook for CsvHook {
+    fn name(&self) -> &str {
+        "CsvHook"
+    }
+    fn process(&self, ctx: &Context) -> Result<()> {
+        if let Some(dir) = self.path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)?;
+        let mut header = self.header_written.lock().unwrap();
+        if !*header && f.metadata()?.len() == 0 {
+            writeln!(f, "{}", self.vars.join(","))?;
+        }
+        *header = true;
+        let row = self
+            .vars
+            .iter()
+            .map(|v| {
+                ctx.get_raw(v)
+                    .map(Value::display)
+                    .unwrap_or_default()
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        writeln!(f, "{row}")?;
+        Ok(())
+    }
+}
+
+/// Collect every processed context in memory (tests + result harvesting).
+#[derive(Clone, Default)]
+pub struct CaptureHook {
+    seen: Arc<Mutex<Vec<Context>>>,
+}
+
+impl CaptureHook {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn contexts(&self) -> Vec<Context> {
+        self.seen.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.seen.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Hook for CaptureHook {
+    fn name(&self) -> &str {
+        "CaptureHook"
+    }
+    fn process(&self, ctx: &Context) -> Result<()> {
+        self.seen.lock().unwrap().push(ctx.clone());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::val_f64;
+
+    #[test]
+    fn tostring_hook_formats() {
+        let (sink, buf) = Sink::capture();
+        let h = ToStringHook::new(&["a", "b"]).sink(sink);
+        let ctx = Context::new().with(&val_f64("a"), 1.5);
+        h.process(&ctx).unwrap();
+        assert_eq!(buf.lock().unwrap()[0], "a=1.5, b=<missing>");
+    }
+
+    #[test]
+    fn display_hook_interpolates() {
+        let (sink, buf) = Sink::capture();
+        let h = DisplayHook::new("Generation ${g} done").sink(sink);
+        let ctx = Context::new().with(&val_f64("g"), 7.0);
+        h.process(&ctx).unwrap();
+        assert_eq!(buf.lock().unwrap()[0], "Generation 7 done");
+    }
+
+    #[test]
+    fn display_hook_tolerates_unclosed_brace() {
+        let (sink, buf) = Sink::capture();
+        DisplayHook::new("x ${oops").sink(sink).process(&Context::new()).unwrap();
+        assert_eq!(buf.lock().unwrap()[0], "x ${oops");
+    }
+
+    #[test]
+    fn csv_hook_appends_with_header() {
+        let dir = std::env::temp_dir().join(format!("molers-csv-{}", std::process::id()));
+        let path = dir.join("out.csv");
+        let _ = std::fs::remove_file(&path);
+        let h = CsvHook::new(&path, &["a", "b"]);
+        let a = val_f64("a");
+        let b = val_f64("b");
+        h.process(&Context::new().with(&a, 1.0).with(&b, 2.0)).unwrap();
+        h.process(&Context::new().with(&a, 3.0).with(&b, 4.0)).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn capture_hook_collects() {
+        let h = CaptureHook::new();
+        h.process(&Context::new()).unwrap();
+        h.process(&Context::new()).unwrap();
+        assert_eq!(h.len(), 2);
+    }
+}

@@ -1,0 +1,17 @@
+//! The workflow DSL: tasks, hooks, capsules, transitions, puzzles.
+//!
+//! Mirrors the vocabulary of OpenMOLE's Scala DSL (paper §2.1) with Rust
+//! builders: `ClosureTask` ≈ `ScalaTask`, [`puzzle::Puzzle::on`] ≈
+//! `task on env`, [`puzzle::Puzzle::hook`] ≈ `task hook h`.
+
+pub mod hook;
+pub mod puzzle;
+pub mod source;
+pub mod system_exec;
+pub mod task;
+
+pub use hook::{CaptureHook, CsvHook, DisplayHook, Hook, Sink, ToStringHook};
+pub use puzzle::{Capsule, CapsuleId, Puzzle, Transition};
+pub use source::{ConstantSource, CsvSource, Source};
+pub use system_exec::SystemExecTask;
+pub use task::{ClosureTask, IdentityTask, Task};

@@ -1,0 +1,244 @@
+//! The workflow graph — OpenMOLE's "puzzle" (paper §2.1).
+//!
+//! A puzzle is a set of [capsules](Capsule) (task + hooks + execution
+//! environment) linked by transitions:
+//!
+//! * **direct** — plain dataflow edge;
+//! * **explore** — fan-out: a [`Sampling`] expands the incoming context
+//!   into many, and the downstream capsule runs once per sample (this is
+//!   the "natural parallelism construct" the paper emphasises);
+//! * **aggregate** — fan-in barrier: collects every result of the matching
+//!   fan-out and forwards one context whose variables are arrays.
+
+use std::sync::Arc;
+
+use crate::dsl::hook::Hook;
+use crate::dsl::source::Source;
+use crate::dsl::task::Task;
+use crate::environment::Environment;
+use crate::error::{Error, Result};
+use crate::exploration::sampling::Sampling;
+
+/// Index of a capsule within its puzzle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CapsuleId(pub usize);
+
+/// A task plus its sources, observation hooks and (optional) execution
+/// environment.
+pub struct Capsule {
+    pub task: Arc<dyn Task>,
+    pub sources: Vec<Arc<dyn Source>>,
+    pub hooks: Vec<Arc<dyn Hook>>,
+    pub environment: Option<Arc<dyn Environment>>,
+}
+
+/// A dataflow edge.
+pub enum Transition {
+    Direct {
+        from: CapsuleId,
+        to: CapsuleId,
+    },
+    Explore {
+        from: CapsuleId,
+        to: CapsuleId,
+        sampling: Arc<dyn Sampling>,
+    },
+    Aggregate {
+        from: CapsuleId,
+        to: CapsuleId,
+    },
+}
+
+impl Transition {
+    pub fn from(&self) -> CapsuleId {
+        match self {
+            Transition::Direct { from, .. }
+            | Transition::Explore { from, .. }
+            | Transition::Aggregate { from, .. } => *from,
+        }
+    }
+
+    pub fn to(&self) -> CapsuleId {
+        match self {
+            Transition::Direct { to, .. }
+            | Transition::Explore { to, .. }
+            | Transition::Aggregate { to, .. } => *to,
+        }
+    }
+}
+
+/// The workflow graph. Build with the fluent methods, validate, then hand
+/// to [`crate::workflow::MoleExecution`].
+#[derive(Default)]
+pub struct Puzzle {
+    pub capsules: Vec<Capsule>,
+    pub transitions: Vec<Transition>,
+    entry: Option<CapsuleId>,
+}
+
+impl Puzzle {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a capsule wrapping `task`.
+    pub fn capsule(&mut self, task: Arc<dyn Task>) -> CapsuleId {
+        self.capsules.push(Capsule {
+            task,
+            sources: Vec::new(),
+            hooks: Vec::new(),
+            environment: None,
+        });
+        CapsuleId(self.capsules.len() - 1)
+    }
+
+    /// Attach a hook (`capsule hook ToStringHook(...)`).
+    pub fn hook(&mut self, c: CapsuleId, hook: Arc<dyn Hook>) -> &mut Self {
+        self.capsules[c.0].hooks.push(hook);
+        self
+    }
+
+    /// Attach a source (`capsule source CSVSource(...)`): its variables are
+    /// merged into the capsule's incoming context before each run.
+    pub fn source(&mut self, c: CapsuleId, source: Arc<dyn Source>) -> &mut Self {
+        self.capsules[c.0].sources.push(source);
+        self
+    }
+
+    /// Delegate a capsule's jobs to an environment (`island on env` — the
+    /// paper's one-line environment switch).
+    pub fn on(&mut self, c: CapsuleId, env: Arc<dyn Environment>) -> &mut Self {
+        self.capsules[c.0].environment = Some(env);
+        self
+    }
+
+    /// Plain transition (`a -- b`).
+    pub fn direct(&mut self, from: CapsuleId, to: CapsuleId) -> &mut Self {
+        self.transitions.push(Transition::Direct { from, to });
+        self
+    }
+
+    /// Fan-out: run `to` once per sample of `sampling` (`a -< b`).
+    pub fn explore(
+        &mut self,
+        from: CapsuleId,
+        sampling: Arc<dyn Sampling>,
+        to: CapsuleId,
+    ) -> &mut Self {
+        self.transitions.push(Transition::Explore { from, to, sampling });
+        self
+    }
+
+    /// Fan-in barrier (`b >- c`): aggregates the fan-out's results.
+    pub fn aggregate(&mut self, from: CapsuleId, to: CapsuleId) -> &mut Self {
+        self.transitions.push(Transition::Aggregate { from, to });
+        self
+    }
+
+    /// Set the entry capsule. Defaults to capsule 0.
+    pub fn entry(&mut self, c: CapsuleId) -> &mut Self {
+        self.entry = Some(c);
+        self
+    }
+
+    pub fn entry_capsule(&self) -> CapsuleId {
+        self.entry.unwrap_or(CapsuleId(0))
+    }
+
+    pub fn outgoing(&self, c: CapsuleId) -> impl Iterator<Item = &Transition> {
+        self.transitions.iter().filter(move |t| t.from() == c)
+    }
+
+    /// Terminal capsules: results arriving here are execution outputs.
+    pub fn is_terminal(&self, c: CapsuleId) -> bool {
+        self.outgoing(c).next().is_none()
+    }
+
+    /// Structural validation: ids in range, entry exists, no cycles.
+    pub fn validate(&self) -> Result<()> {
+        if self.capsules.is_empty() {
+            return Err(Error::InvalidWorkflow("no capsules".into()));
+        }
+        let n = self.capsules.len();
+        for t in &self.transitions {
+            if t.from().0 >= n || t.to().0 >= n {
+                return Err(Error::InvalidWorkflow(format!(
+                    "transition references capsule out of range ({} -> {})",
+                    t.from().0,
+                    t.to().0
+                )));
+            }
+        }
+        if self.entry_capsule().0 >= n {
+            return Err(Error::InvalidWorkflow("entry out of range".into()));
+        }
+        // cycle detection (transitions are a DAG in this engine)
+        let mut state = vec![0u8; n]; // 0=unvisited 1=on-stack 2=done
+        fn dfs(p: &Puzzle, c: usize, state: &mut [u8]) -> Result<()> {
+            state[c] = 1;
+            for t in p.outgoing(CapsuleId(c)) {
+                let next = t.to().0;
+                match state[next] {
+                    0 => dfs(p, next, state)?,
+                    1 => {
+                        return Err(Error::InvalidWorkflow(format!(
+                            "cycle through capsule {next}"
+                        )))
+                    }
+                    _ => {}
+                }
+            }
+            state[c] = 2;
+            Ok(())
+        }
+        for c in 0..n {
+            if state[c] == 0 {
+                dfs(self, c, &mut state)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::task::IdentityTask;
+
+    fn id_task() -> Arc<dyn Task> {
+        Arc::new(IdentityTask::new("id"))
+    }
+
+    #[test]
+    fn builds_and_validates_linear_chain() {
+        let mut p = Puzzle::new();
+        let a = p.capsule(id_task());
+        let b = p.capsule(id_task());
+        p.direct(a, b);
+        assert!(p.validate().is_ok());
+        assert!(!p.is_terminal(a));
+        assert!(p.is_terminal(b));
+    }
+
+    #[test]
+    fn detects_cycles() {
+        let mut p = Puzzle::new();
+        let a = p.capsule(id_task());
+        let b = p.capsule(id_task());
+        p.direct(a, b);
+        p.direct(b, a);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(Puzzle::new().validate().is_err());
+    }
+
+    #[test]
+    fn entry_defaults_to_first() {
+        let mut p = Puzzle::new();
+        let a = p.capsule(id_task());
+        assert_eq!(p.entry_capsule(), a);
+    }
+}

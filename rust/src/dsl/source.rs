@@ -1,0 +1,170 @@
+//! Sources — the input half of §2.1's dataflow facilities: "OpenMOLE
+//! exposes several facilities to inject data in the dataflow (sources)
+//! and extract useful results at the end of the experiment (hooks)".
+//!
+//! A source runs on the coordinator just before a capsule's task and
+//! merges variables into its incoming context.
+
+use std::path::PathBuf;
+
+use crate::core::{Context, Val, Value, ValueType};
+use crate::error::{Error, Result};
+
+/// Injects variables into a capsule's incoming context.
+pub trait Source: Send + Sync {
+    fn name(&self) -> &str;
+    /// Produce the variables to merge (the incoming context is provided
+    /// for sources parameterised by upstream data).
+    fn inject(&self, incoming: &Context) -> Result<Context>;
+}
+
+/// Fixed-value source (`ConstantSource` — e.g. experiment constants).
+pub struct ConstantSource {
+    values: Context,
+}
+
+impl ConstantSource {
+    pub fn new() -> Self {
+        ConstantSource {
+            values: Context::new(),
+        }
+    }
+
+    pub fn with<T: ValueType>(mut self, v: &Val<T>, value: T) -> Self {
+        self.values.set(v, value);
+        self
+    }
+}
+
+impl Default for ConstantSource {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Source for ConstantSource {
+    fn name(&self) -> &str {
+        "ConstantSource"
+    }
+
+    fn inject(&self, _incoming: &Context) -> Result<Context> {
+        Ok(self.values.clone())
+    }
+}
+
+/// CSV file source: reads numeric columns into `Vec<f64>` variables (the
+/// `CSVSource` of the OpenMOLE DSL). The header row names the columns;
+/// each requested column becomes an array variable of the same name.
+pub struct CsvSource {
+    path: PathBuf,
+    columns: Vec<String>,
+}
+
+impl CsvSource {
+    pub fn new(path: impl Into<PathBuf>, columns: &[&str]) -> Self {
+        CsvSource {
+            path: path.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+impl Source for CsvSource {
+    fn name(&self) -> &str {
+        "CsvSource"
+    }
+
+    fn inject(&self, _incoming: &Context) -> Result<Context> {
+        let text = std::fs::read_to_string(&self.path).map_err(|e| {
+            Error::TaskFailed {
+                task: "CsvSource".into(),
+                message: format!("cannot read {}: {e}", self.path.display()),
+            }
+        })?;
+        let mut lines = text.lines();
+        let header: Vec<&str> = lines
+            .next()
+            .ok_or_else(|| Error::TaskFailed {
+                task: "CsvSource".into(),
+                message: "empty csv".into(),
+            })?
+            .split(',')
+            .map(str::trim)
+            .collect();
+        let mut cols: Vec<(usize, Vec<f64>)> = Vec::new();
+        for want in &self.columns {
+            let idx = header.iter().position(|h| h == want).ok_or_else(|| {
+                Error::TaskFailed {
+                    task: "CsvSource".into(),
+                    message: format!("column `{want}` not in header {header:?}"),
+                }
+            })?;
+            cols.push((idx, Vec::new()));
+        }
+        for (lineno, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+            for (idx, values) in &mut cols {
+                let cell = fields.get(*idx).copied().unwrap_or("");
+                let v: f64 = cell.parse().map_err(|_| Error::TaskFailed {
+                    task: "CsvSource".into(),
+                    message: format!("row {}: `{cell}` is not numeric", lineno + 2),
+                })?;
+                values.push(v);
+            }
+        }
+        let mut out = Context::new();
+        for (name, (_, values)) in self.columns.iter().zip(cols) {
+            out.set_raw(
+                name,
+                Value::List(values.into_iter().map(Value::F64).collect()),
+            );
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::val_f64;
+
+    #[test]
+    fn constant_source_injects() {
+        let x = val_f64("x");
+        let s = ConstantSource::new().with(&x, 9.0);
+        let ctx = s.inject(&Context::new()).unwrap();
+        assert_eq!(ctx.get(&x).unwrap(), 9.0);
+    }
+
+    #[test]
+    fn csv_source_reads_columns() {
+        let path = std::env::temp_dir().join(format!("molers-src-{}.csv", std::process::id()));
+        std::fs::write(&path, "a,b,c\n1,2,3\n4,5,6\n").unwrap();
+        let s = CsvSource::new(&path, &["a", "c"]);
+        let ctx = s.inject(&Context::new()).unwrap();
+        let a = val_f64("a");
+        let c = val_f64("c");
+        assert_eq!(ctx.get(&a.array()).unwrap(), vec![1.0, 4.0]);
+        assert_eq!(ctx.get(&c.array()).unwrap(), vec![3.0, 6.0]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn csv_source_errors_are_descriptive() {
+        let path = std::env::temp_dir().join(format!("molers-src2-{}.csv", std::process::id()));
+        std::fs::write(&path, "a,b\n1,notanumber\n").unwrap();
+        let s = CsvSource::new(&path, &["b"]);
+        let err = s.inject(&Context::new()).unwrap_err();
+        assert!(err.to_string().contains("not numeric"));
+        let missing = CsvSource::new(&path, &["zzz"]);
+        assert!(missing
+            .inject(&Context::new())
+            .unwrap_err()
+            .to_string()
+            .contains("not in header"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,229 @@
+//! `SystemExecTask` — the paper's task type for "any kind of application
+//! as it would be from a command line" (§4.3), i.e. applications packaged
+//! with CARE (§3.2).
+//!
+//! The task renders a command line from its input variables (`${var}`
+//! interpolation), executes it, and exposes exit status / stdout as output
+//! variables. An optional [`Archive`] models the CARE packaging step: when
+//! present, execution goes through the archive's `re-execute.sh` contract
+//! and a kernel-compatibility check against the (simulated) host — the
+//! exact §3 failure modes, surfaced as task errors.
+
+use std::process::Command;
+
+use crate::care::manifest::KernelVersion;
+use crate::care::reexec::{reexecute, Packager, RemoteHost, ReexecOutcome};
+use crate::care::Archive;
+use crate::core::{Context, Val, Value};
+use crate::dsl::task::Task;
+use crate::error::{Error, Result};
+
+/// Runs a shell command as a task.
+pub struct SystemExecTask {
+    name: String,
+    /// Command template; `${var}` is replaced by the input variable.
+    command: String,
+    inputs: Vec<String>,
+    stdout_var: Option<String>,
+    status_var: Option<String>,
+    cost_hint: f64,
+    /// CARE/CDE packaging context (None = run on the bare host).
+    package: Option<(Archive, RemoteHost)>,
+}
+
+impl SystemExecTask {
+    pub fn new(name: impl Into<String>, command: impl Into<String>) -> Self {
+        SystemExecTask {
+            name: name.into(),
+            command: command.into(),
+            inputs: Vec::new(),
+            stdout_var: None,
+            status_var: None,
+            cost_hint: 1.0,
+            package: None,
+        }
+    }
+
+    /// Declare an input used in the command template.
+    pub fn input<T: crate::core::ValueType>(mut self, v: &Val<T>) -> Self {
+        self.inputs.push(v.name().to_string());
+        self
+    }
+
+    /// Capture trimmed stdout into this output variable.
+    pub fn stdout(mut self, v: &Val<String>) -> Self {
+        self.stdout_var = Some(v.name().to_string());
+        self
+    }
+
+    /// Capture the exit status into this output variable.
+    pub fn status(mut self, v: &Val<i64>) -> Self {
+        self.status_var = Some(v.name().to_string());
+        self
+    }
+
+    pub fn cost(mut self, seconds: f64) -> Self {
+        self.cost_hint = seconds;
+        self
+    }
+
+    /// Attach a CARE/CDE archive + target host: execution then honours the
+    /// §3 compatibility rules before the command runs.
+    pub fn packaged(mut self, archive: Archive, host: RemoteHost) -> Self {
+        self.package = Some((archive, host));
+        self
+    }
+
+    fn render(&self, ctx: &Context) -> String {
+        let mut out = self.command.clone();
+        for name in &self.inputs {
+            if let Some(v) = ctx.get_raw(name) {
+                out = out.replace(&format!("${{{name}}}"), &v.display());
+            }
+        }
+        out
+    }
+}
+
+impl Task for SystemExecTask {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn inputs(&self) -> Vec<String> {
+        self.inputs.clone()
+    }
+
+    fn outputs(&self) -> Vec<String> {
+        self.stdout_var
+            .iter()
+            .chain(self.status_var.iter())
+            .cloned()
+            .collect()
+    }
+
+    fn cost_hint(&self) -> f64 {
+        self.cost_hint
+    }
+
+    fn run(&self, ctx: &Context) -> Result<Context> {
+        // packaging gate (§3): the archive must re-execute on the host
+        if let Some((archive, host)) = &self.package {
+            let packager = if archive.syscall_emulation {
+                Packager::Care
+            } else {
+                Packager::Cde
+            };
+            match reexecute(&archive.manifest, packager, host) {
+                ReexecOutcome::Success { .. } => {}
+                failure => {
+                    return Err(Error::TaskFailed {
+                        task: self.name.clone(),
+                        message: format!("re-execution failed on {}: {failure:?}", host.name),
+                    })
+                }
+            }
+        }
+
+        let rendered = self.render(ctx);
+        let output = Command::new("sh")
+            .arg("-c")
+            .arg(&rendered)
+            .output()
+            .map_err(|e| Error::TaskFailed {
+                task: self.name.clone(),
+                message: format!("cannot spawn `{rendered}`: {e}"),
+            })?;
+
+        let mut out = Context::new();
+        if let Some(var) = &self.status_var {
+            out.set_raw(var, Value::I64(i64::from(output.status.code().unwrap_or(-1))));
+        } else if !output.status.success() {
+            return Err(Error::TaskFailed {
+                task: self.name.clone(),
+                message: format!(
+                    "`{rendered}` exited with {}: {}",
+                    output.status,
+                    String::from_utf8_lossy(&output.stderr).trim()
+                ),
+            });
+        }
+        if let Some(var) = &self.stdout_var {
+            out.set_raw(
+                var,
+                Value::Str(String::from_utf8_lossy(&output.stdout).trim().to_string()),
+            );
+        }
+        Ok(out)
+    }
+}
+
+/// The default packaging host for simulated remote execution: an EGI-era
+/// Scientific Linux worker.
+pub fn scientific_linux_host(name: &str) -> RemoteHost {
+    RemoteHost::new(name, KernelVersion::SCIENTIFIC_LINUX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::care::{Dependency, Manifest};
+    use crate::core::{val_f64, val_i64, val_str};
+    use crate::dsl::task::run_checked;
+
+    #[test]
+    fn runs_command_and_captures_stdout() {
+        let sum = val_str("sum");
+        let t = SystemExecTask::new("adder", "expr 19 + 23").stdout(&sum);
+        let out = run_checked(&t, &Context::new()).unwrap();
+        assert_eq!(out.get(&sum).unwrap(), "42");
+    }
+
+    #[test]
+    fn interpolates_input_variables() {
+        let x = val_f64("x");
+        let echoed = val_str("echoed");
+        let t = SystemExecTask::new("echo", "echo value=${x}")
+            .input(&x)
+            .stdout(&echoed);
+        let out = run_checked(&t, &Context::new().with(&x, 2.5)).unwrap();
+        assert_eq!(out.get(&echoed).unwrap(), "value=2.5");
+    }
+
+    #[test]
+    fn nonzero_exit_is_error_unless_status_captured() {
+        let t = SystemExecTask::new("fail", "exit 3");
+        assert!(run_checked(&t, &Context::new()).is_err());
+
+        let code = val_i64("code");
+        let t = SystemExecTask::new("fail", "exit 3").status(&code);
+        let out = run_checked(&t, &Context::new()).unwrap();
+        assert_eq!(out.get(&code).unwrap(), 3);
+    }
+
+    fn manifest(kernel: KernelVersion) -> Manifest {
+        Manifest::new("app", "echo packaged-run", kernel)
+            .with(Dependency::lib("/lib/libc.so.6", "2.17"))
+    }
+
+    #[test]
+    fn care_packaged_task_runs_on_old_kernel() {
+        let archive = Archive::pack(manifest(KernelVersion(4, 4, 0)), true);
+        let host = scientific_linux_host("wn01"); // 2.6.32 < 4.4.0
+        let outv = val_str("out");
+        let t = SystemExecTask::new("packaged", "echo packaged-run")
+            .stdout(&outv)
+            .packaged(archive, host);
+        let out = run_checked(&t, &Context::new()).unwrap();
+        assert_eq!(out.get(&outv).unwrap(), "packaged-run");
+    }
+
+    #[test]
+    fn cde_packaged_task_fails_on_old_kernel() {
+        let archive = Archive::pack(manifest(KernelVersion(4, 4, 0)), false);
+        let host = scientific_linux_host("wn02");
+        let t = SystemExecTask::new("packaged", "echo never").packaged(archive, host);
+        let err = run_checked(&t, &Context::new()).unwrap_err();
+        assert!(err.to_string().contains("KernelTooOld"), "{err}");
+    }
+}

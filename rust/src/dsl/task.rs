@@ -1,0 +1,254 @@
+//! Tasks: the unit of computation a workflow delegates (paper §2.1).
+//!
+//! Tasks are deliberately side-effect free ("mute pieces of software" —
+//! §4.3): they compute outputs from inputs, which is what makes them safe
+//! to delegate to remote environments. All observable effects go through
+//! hooks.
+
+use std::sync::Arc;
+
+use crate::core::{Context, Val, ValueType};
+use crate::error::{Error, Result};
+
+/// The unit of delegated computation.
+pub trait Task: Send + Sync {
+    fn name(&self) -> &str;
+
+    /// Declared input variable names (presence is validated before run).
+    fn inputs(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    /// Declared output variable names (the engine narrows the returned
+    /// context to these, so undeclared writes never leak downstream).
+    fn outputs(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    /// Default values, merged below the incoming context.
+    fn defaults(&self) -> Context {
+        Context::new()
+    }
+
+    /// Execute. Must be deterministic given the context (stochasticity
+    /// enters via explicit seed variables).
+    fn run(&self, ctx: &Context) -> Result<Context>;
+
+    /// Hint for simulated environments: the nominal execution cost of one
+    /// run, in seconds of *remote core time*. Used by the cluster/grid
+    /// simulators to schedule virtual time (the real computation still
+    /// runs locally). Defaults to 1s, the order of one NetLogo ant run.
+    fn cost_hint(&self) -> f64 {
+        1.0
+    }
+}
+
+/// Validate inputs, merge defaults, run, narrow outputs.
+///
+/// This is the single entry point every environment uses to execute a task,
+/// so declared-interface enforcement is uniform across local and simulated
+/// remote execution.
+pub fn run_checked(task: &dyn Task, ctx: &Context) -> Result<Context> {
+    let mut full = task.defaults();
+    full.merge(ctx);
+    for input in task.inputs() {
+        if !full.contains(&input) {
+            return Err(Error::TaskFailed {
+                task: task.name().to_string(),
+                message: format!("missing declared input `{input}`"),
+            });
+        }
+    }
+    let out = task.run(&full)?;
+    let outputs = task.outputs();
+    if outputs.is_empty() {
+        return Ok(out);
+    }
+    for o in &outputs {
+        if !out.contains(o) {
+            return Err(Error::TaskFailed {
+                task: task.name().to_string(),
+                message: format!("declared output `{o}` was not produced"),
+            });
+        }
+    }
+    let names: Vec<&str> = outputs.iter().map(String::as_str).collect();
+    Ok(out.filtered(&names))
+}
+
+type Body = dyn Fn(&Context) -> Result<Context> + Send + Sync;
+
+/// The `ScalaTask` analogue: a task defined by an inline closure.
+pub struct ClosureTask {
+    name: String,
+    inputs: Vec<String>,
+    outputs: Vec<String>,
+    defaults: Context,
+    cost_hint: f64,
+    body: Arc<Body>,
+}
+
+impl ClosureTask {
+    pub fn new(
+        name: impl Into<String>,
+        body: impl Fn(&Context) -> Result<Context> + Send + Sync + 'static,
+    ) -> Self {
+        ClosureTask {
+            name: name.into(),
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+            defaults: Context::new(),
+            cost_hint: 1.0,
+            body: Arc::new(body),
+        }
+    }
+
+    /// Declare an input prototype.
+    pub fn input<T: ValueType>(mut self, v: &Val<T>) -> Self {
+        self.inputs.push(v.name().to_string());
+        self
+    }
+
+    /// Declare an output prototype.
+    pub fn output<T: ValueType>(mut self, v: &Val<T>) -> Self {
+        self.outputs.push(v.name().to_string());
+        self
+    }
+
+    /// Provide a default value (the `:=` of the DSL).
+    pub fn default<T: ValueType>(mut self, v: &Val<T>, value: T) -> Self {
+        self.defaults.set(v, value);
+        self
+    }
+
+    /// Set the simulated-cost hint (seconds of remote core time).
+    pub fn cost(mut self, seconds: f64) -> Self {
+        self.cost_hint = seconds;
+        self
+    }
+}
+
+impl Task for ClosureTask {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn inputs(&self) -> Vec<String> {
+        self.inputs.clone()
+    }
+    fn outputs(&self) -> Vec<String> {
+        self.outputs.clone()
+    }
+    fn defaults(&self) -> Context {
+        self.defaults.clone()
+    }
+    fn cost_hint(&self) -> f64 {
+        self.cost_hint
+    }
+    fn run(&self, ctx: &Context) -> Result<Context> {
+        (self.body)(ctx)
+    }
+}
+
+/// A task that simply copies selected variables through — useful as an
+/// entry/exit anchor in puzzles.
+pub struct IdentityTask {
+    name: String,
+}
+
+impl IdentityTask {
+    pub fn new(name: impl Into<String>) -> Self {
+        IdentityTask { name: name.into() }
+    }
+}
+
+impl Task for IdentityTask {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn run(&self, ctx: &Context) -> Result<Context> {
+        Ok(ctx.clone())
+    }
+    fn cost_hint(&self) -> f64 {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::val_f64;
+
+    #[test]
+    fn closure_task_runs() {
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let t = ClosureTask::new("double", {
+            let (x, y) = (x.clone(), y.clone());
+            move |ctx| {
+                let v = ctx.get(&x)?;
+                Ok(Context::new().with(&y, v * 2.0))
+            }
+        })
+        .input(&x)
+        .output(&y);
+        let out = run_checked(&t, &Context::new().with(&x, 3.0)).unwrap();
+        assert_eq!(out.get(&y).unwrap(), 6.0);
+    }
+
+    #[test]
+    fn missing_input_fails_before_run() {
+        let x = val_f64("x");
+        let t = ClosureTask::new("t", |_| Ok(Context::new())).input(&x);
+        let err = run_checked(&t, &Context::new()).unwrap_err();
+        assert!(err.to_string().contains("missing declared input"));
+    }
+
+    #[test]
+    fn defaults_fill_missing_inputs() {
+        let x = val_f64("x");
+        let t = ClosureTask::new("t", {
+            let x = x.clone();
+            move |ctx| Ok(Context::new().with(&x, ctx.get(&x)? + 1.0))
+        })
+        .input(&x)
+        .default(&x, 41.0)
+        .output(&x);
+        let out = run_checked(&t, &Context::new()).unwrap();
+        assert_eq!(out.get(&x).unwrap(), 42.0);
+    }
+
+    #[test]
+    fn incoming_context_overrides_defaults() {
+        let x = val_f64("x");
+        let t = ClosureTask::new("t", {
+            let x = x.clone();
+            move |ctx| Ok(ctx.clone().with(&x, ctx.get(&x)?))
+        })
+        .input(&x)
+        .default(&x, 1.0)
+        .output(&x);
+        let out = run_checked(&t, &Context::new().with(&x, 9.0)).unwrap();
+        assert_eq!(out.get(&x).unwrap(), 9.0);
+    }
+
+    #[test]
+    fn outputs_are_narrowed() {
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let t = ClosureTask::new("t", {
+            let (x, y) = (x.clone(), y.clone());
+            move |_| Ok(Context::new().with(&x, 1.0).with(&y, 2.0))
+        })
+        .output(&y);
+        let out = run_checked(&t, &Context::new()).unwrap();
+        assert!(!out.contains("x"), "undeclared output leaked");
+        assert_eq!(out.get(&y).unwrap(), 2.0);
+    }
+
+    #[test]
+    fn undeclared_output_is_error() {
+        let y = val_f64("y");
+        let t = ClosureTask::new("t", |_| Ok(Context::new())).output(&y);
+        assert!(run_checked(&t, &Context::new()).is_err());
+    }
+}

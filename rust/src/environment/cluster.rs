@@ -1,0 +1,666 @@
+//! The discrete-event cluster simulator and the batch environments built
+//! on it (PBS / SGE / Slurm / OAR / Condor — paper §2.2).
+//!
+//! Real compute runs locally on the shared thread pool; the simulator
+//! computes *when* the same work would have started and finished on the
+//! modelled infrastructure (submission latency → queue → node execution at
+//! the node's speed, with walltime enforcement and failure injection).
+//! Job submission and monitoring go through the GridScale command layer
+//! ([`crate::gridscale`]) against a [`SimShell`] head node, reproducing
+//! OpenMOLE's CLI-driven delegation end to end.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::dsl::task::run_checked;
+use crate::environment::{EnvStats, Environment, Job, JobHandle, JobReport};
+use crate::error::{Error, Result};
+use crate::exec::ThreadPool;
+use crate::gridscale::shell::{Flavor, SimShell};
+use crate::gridscale::{
+    CondorAdapter, GliteAdapter, JobScript, JobState, OarAdapter, PbsAdapter,
+    SchedulerAdapter, SgeAdapter, Shell, SlurmAdapter,
+};
+use crate::util::Rng;
+
+/// Timing of one scheduled attempt on the simulated cluster.
+#[derive(Debug, Clone, Copy)]
+pub struct Scheduled {
+    pub node: usize,
+    pub start: f64,
+    pub end: f64,
+    /// True if this attempt was injected as a failure.
+    pub failed: bool,
+    /// True if the job was killed at its walltime limit.
+    pub walltime_killed: bool,
+}
+
+struct SimJob {
+    submit_t: f64,
+    start_t: f64,
+    end_t: f64,
+    cancelled: bool,
+    failed: bool,
+}
+
+/// Discrete-event state of one cluster: per-node availability plus a job
+/// table for the CLI surface.
+pub struct SimCluster {
+    /// Execution-time multiplier per node (1.0 = reference speed).
+    speeds: Vec<f64>,
+    /// Virtual time at which each node becomes free.
+    node_free: Vec<f64>,
+    jobs: HashMap<u64, SimJob>,
+    next_id: u64,
+    /// Latest scheduled event (the cluster's "now" for status queries).
+    pub clock: f64,
+}
+
+impl SimCluster {
+    pub fn new(speeds: Vec<f64>) -> Self {
+        let n = speeds.len();
+        SimCluster {
+            speeds,
+            node_free: vec![0.0; n],
+            jobs: HashMap::new(),
+            next_id: 1,
+            clock: 0.0,
+        }
+    }
+
+    /// `n` identical nodes with the given speed multiplier.
+    pub fn homogeneous(n: usize, speed: f64) -> Self {
+        Self::new(vec![speed; n])
+    }
+
+    /// Heterogeneous node speeds drawn lognormally around `median_speed`
+    /// (grid worker nodes differ widely — DESIGN.md §3).
+    pub fn heterogeneous(n: usize, median_speed: f64, sigma: f64, rng: &mut Rng) -> Self {
+        let speeds = (0..n)
+            .map(|_| median_speed * rng.lognormal(0.0, sigma))
+            .collect();
+        Self::new(speeds)
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.speeds.len()
+    }
+
+    /// Register a job (the `qsub` handler).
+    pub fn create_job(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.jobs.insert(
+            id,
+            SimJob {
+                submit_t: self.clock,
+                start_t: f64::INFINITY,
+                end_t: f64::INFINITY,
+                cancelled: false,
+                failed: false,
+            },
+        );
+        id
+    }
+
+    /// Schedule one execution attempt: pick the earliest-free node, run
+    /// for `nominal_exec_s * node_speed` from `release_t`, bounded by
+    /// `walltime_s`; if `fail_at_fraction` is set the node is occupied for
+    /// that fraction and the attempt fails.
+    pub fn schedule(
+        &mut self,
+        id: u64,
+        release_t: f64,
+        nominal_exec_s: f64,
+        walltime_s: f64,
+        fail_at_fraction: Option<f64>,
+    ) -> Result<Scheduled> {
+        // minimum-completion-time placement (ties: lowest index, keeping
+        // FIFO determinism on homogeneous clusters): heterogeneous pools
+        // route work to the node that finishes it first, as batch
+        // schedulers with runtime estimates / backfill effectively do
+        let node = (0..self.node_free.len())
+            .min_by(|&a, &b| {
+                let end_a = self.node_free[a].max(release_t)
+                    + nominal_exec_s * self.speeds[a];
+                let end_b = self.node_free[b].max(release_t)
+                    + nominal_exec_s * self.speeds[b];
+                end_a.partial_cmp(&end_b).unwrap()
+            })
+            .ok_or_else(|| Error::EnvironmentError {
+                environment: "sim-cluster".into(),
+                message: "cluster has no nodes".into(),
+            })?;
+        let start = self.node_free[node].max(release_t);
+        let full_exec = nominal_exec_s * self.speeds[node];
+        let (end, failed, walltime_killed) = match fail_at_fraction {
+            Some(f) => (start + full_exec * f.clamp(0.01, 1.0), true, false),
+            None if full_exec > walltime_s => (start + walltime_s, false, true),
+            None => (start + full_exec, false, false),
+        };
+        self.node_free[node] = end;
+        if end > self.clock {
+            self.clock = end;
+        }
+        if let Some(j) = self.jobs.get_mut(&id) {
+            j.submit_t = j.submit_t.min(release_t);
+            j.start_t = start;
+            j.end_t = end;
+            j.failed = failed || walltime_killed;
+        }
+        Ok(Scheduled {
+            node,
+            start,
+            end,
+            failed,
+            walltime_killed,
+        })
+    }
+
+    /// Job state at the cluster's current clock (the `qstat` handler).
+    pub fn state_now(&self, id: u64) -> Result<JobState> {
+        let j = self.jobs.get(&id).ok_or_else(|| Error::EnvironmentError {
+            environment: "sim-cluster".into(),
+            message: format!("unknown job {id}"),
+        })?;
+        if j.cancelled {
+            return Ok(JobState::Failed);
+        }
+        Ok(if j.start_t.is_infinite() {
+            JobState::Queued
+        } else if j.end_t <= self.clock {
+            if j.failed {
+                JobState::Failed
+            } else {
+                JobState::Done
+            }
+        } else if j.start_t <= self.clock {
+            JobState::Running
+        } else {
+            JobState::Queued
+        })
+    }
+
+    pub fn cancel(&mut self, id: u64) -> Result<()> {
+        self.jobs
+            .get_mut(&id)
+            .map(|j| j.cancelled = true)
+            .ok_or_else(|| Error::EnvironmentError {
+                environment: "sim-cluster".into(),
+                message: format!("unknown job {id}"),
+            })
+    }
+}
+
+/// Failure / latency model for a simulated environment.
+#[derive(Debug, Clone)]
+pub struct InfraModel {
+    /// Median submission latency (s); drawn lognormally.
+    pub submit_latency_median_s: f64,
+    /// Lognormal sigma of the submission latency.
+    pub submit_latency_sigma: f64,
+    /// Probability that one attempt fails mid-run.
+    pub failure_rate: f64,
+    /// Maximum resubmissions after failures.
+    pub max_retries: u32,
+    /// Walltime limit per job (s).
+    pub walltime_s: f64,
+}
+
+impl InfraModel {
+    /// A well-behaved departmental cluster.
+    pub fn cluster() -> Self {
+        InfraModel {
+            submit_latency_median_s: 2.0,
+            submit_latency_sigma: 0.5,
+            failure_rate: 0.005,
+            max_retries: 3,
+            walltime_s: 4.0 * 3600.0,
+        }
+    }
+
+    /// EGI-like: slow brokering, visible failure rate (Listing 5 uses a
+    /// 4 h walltime for 1 h islands precisely because of this).
+    pub fn grid() -> Self {
+        InfraModel {
+            submit_latency_median_s: 120.0,
+            submit_latency_sigma: 1.0,
+            failure_rate: 0.05,
+            max_retries: 5,
+            walltime_s: 4.0 * 3600.0,
+        }
+    }
+
+    /// An SSH server: negligible latency, no failures.
+    pub fn ssh() -> Self {
+        InfraModel {
+            submit_latency_median_s: 0.2,
+            submit_latency_sigma: 0.2,
+            failure_rate: 0.0,
+            max_retries: 0,
+            walltime_s: f64::INFINITY,
+        }
+    }
+}
+
+/// A batch-scheduler environment (PBS/SGE/Slurm/OAR/Condor) or the EGI
+/// grid, over the shared simulator core.
+pub struct BatchEnvironment {
+    name: String,
+    adapter: Arc<dyn SchedulerAdapter>,
+    shell: Arc<dyn Shell>,
+    cluster: Arc<Mutex<SimCluster>>,
+    infra: InfraModel,
+    pool: Arc<ThreadPool>,
+    rng: Mutex<Rng>,
+    stats: Arc<Mutex<EnvStats>>,
+    queue_name: Option<String>,
+}
+
+impl BatchEnvironment {
+    pub fn new(
+        name: impl Into<String>,
+        adapter: Arc<dyn SchedulerAdapter>,
+        flavor: Flavor,
+        cluster: SimCluster,
+        infra: InfraModel,
+        pool: Arc<ThreadPool>,
+        seed: u64,
+    ) -> Self {
+        let cluster = Arc::new(Mutex::new(cluster));
+        BatchEnvironment {
+            name: name.into(),
+            adapter,
+            shell: Arc::new(SimShell::new(flavor, Arc::clone(&cluster))),
+            cluster,
+            infra,
+            pool,
+            rng: Mutex::new(Rng::new(seed)),
+            stats: Arc::new(Mutex::new(EnvStats::default())),
+            queue_name: None,
+        }
+    }
+
+    /// `PBSEnvironment(...)` of the DSL.
+    pub fn pbs(nodes: usize, pool: Arc<ThreadPool>, seed: u64) -> Self {
+        Self::new(
+            format!("pbs({nodes})"),
+            Arc::new(PbsAdapter),
+            Flavor::Pbs,
+            SimCluster::homogeneous(nodes, 1.0),
+            InfraModel::cluster(),
+            pool,
+            seed,
+        )
+    }
+
+    pub fn slurm(nodes: usize, pool: Arc<ThreadPool>, seed: u64) -> Self {
+        Self::new(
+            format!("slurm({nodes})"),
+            Arc::new(SlurmAdapter),
+            Flavor::Slurm,
+            SimCluster::homogeneous(nodes, 1.0),
+            InfraModel::cluster(),
+            pool,
+            seed,
+        )
+    }
+
+    pub fn sge(nodes: usize, pool: Arc<ThreadPool>, seed: u64) -> Self {
+        Self::new(
+            format!("sge({nodes})"),
+            Arc::new(SgeAdapter),
+            Flavor::Sge,
+            SimCluster::homogeneous(nodes, 1.0),
+            InfraModel::cluster(),
+            pool,
+            seed,
+        )
+    }
+
+    pub fn oar(nodes: usize, pool: Arc<ThreadPool>, seed: u64) -> Self {
+        Self::new(
+            format!("oar({nodes})"),
+            Arc::new(OarAdapter),
+            Flavor::Oar,
+            SimCluster::homogeneous(nodes, 1.0),
+            InfraModel::cluster(),
+            pool,
+            seed,
+        )
+    }
+
+    pub fn condor(nodes: usize, pool: Arc<ThreadPool>, seed: u64) -> Self {
+        Self::new(
+            format!("condor({nodes})"),
+            Arc::new(CondorAdapter),
+            Flavor::Condor,
+            SimCluster::homogeneous(nodes, 1.0),
+            InfraModel::cluster(),
+            pool,
+            seed,
+        )
+    }
+
+    /// EGI over gLite with heterogeneous workers (used by
+    /// [`crate::environment::egi::EgiEnvironment`]).
+    pub fn glite(
+        vo: &str,
+        nodes: usize,
+        pool: Arc<ThreadPool>,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::new(seed ^ 0x9e3779b97f4a7c15);
+        let cluster = SimCluster::heterogeneous(nodes, 1.0, 0.35, &mut rng);
+        let mut env = Self::new(
+            format!("egi:{vo}({nodes})"),
+            Arc::new(GliteAdapter::new(vo)),
+            Flavor::Glite,
+            cluster,
+            InfraModel::grid(),
+            pool,
+            seed,
+        );
+        env.queue_name = Some(vo.to_string());
+        env
+    }
+
+    pub fn with_infra(mut self, infra: InfraModel) -> Self {
+        self.infra = infra;
+        self
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.cluster.lock().unwrap().nodes()
+    }
+}
+
+impl Environment for BatchEnvironment {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn submit(&self, job: Job) -> JobHandle {
+        {
+            self.stats.lock().unwrap().submitted += 1;
+        }
+        let mut rng = self.rng.lock().unwrap().fork();
+        let adapter = Arc::clone(&self.adapter);
+        let shell = Arc::clone(&self.shell);
+        let cluster = Arc::clone(&self.cluster);
+        let infra = self.infra.clone();
+        let stats = Arc::clone(&self.stats);
+        let env_name = self.name.clone();
+        let queue = self.queue_name.clone();
+
+        let join = self.pool.submit(move || {
+            let mut run = || -> Result<(crate::core::Context, JobReport)> {
+                // --- GridScale path: script → submit → parse id ------------
+                let mut script = JobScript::new(
+                    job.task.name().to_string(),
+                    format!("./run-task.sh {}", job.task.name()),
+                )
+                .walltime(infra.walltime_s.min(1e9) as u64)
+                .memory(1200);
+                if let Some(q) = &queue {
+                    script = script.queue(q.clone());
+                }
+                let _script_text = adapter.script(&script); // rendered as GridScale would
+                let submit_out = shell.execute(&adapter.submit_command("/tmp/job.sh"))?;
+                let middleware_id = adapter.parse_submit(&submit_out.stdout)?;
+
+                // --- real compute ------------------------------------------
+                let started = Instant::now();
+                let result = run_checked(job.task.as_ref(), &job.context)?;
+                let real = started.elapsed();
+                // nominal remote duration: the task's cost hint, or the real
+                // local duration if no hint is declared
+                let hint = job.task.cost_hint();
+                let nominal = if hint > 0.0 { hint } else { real.as_secs_f64() };
+
+                // --- virtual schedule with failures/retries ----------------
+                let sim_id = {
+                    let c = cluster.lock().unwrap();
+                    // the shell allocated the numeric id; recover it from the
+                    // middleware id (digits of the tail)
+                    let tail = middleware_id.rsplit('/').next().unwrap_or(&middleware_id);
+                    let digits: String =
+                        tail.chars().filter(|ch| ch.is_ascii_digit()).collect();
+                    drop(c);
+                    digits.parse::<u64>().unwrap_or(0)
+                };
+                let mut release = job.virtual_release
+                    + rng.lognormal(
+                        infra.submit_latency_median_s.max(1e-9).ln(),
+                        infra.submit_latency_sigma,
+                    );
+                let submit_delay = release - job.virtual_release;
+                let mut attempts = 0u32;
+                let sched = loop {
+                    attempts += 1;
+                    let fail = rng.bool(infra.failure_rate) && attempts <= infra.max_retries;
+                    let sched = cluster.lock().unwrap().schedule(
+                        sim_id,
+                        release,
+                        nominal,
+                        infra.walltime_s,
+                        fail.then(|| rng.f64()),
+                    )?;
+                    if sched.walltime_killed {
+                        let mut s = stats.lock().unwrap();
+                        s.failed_attempts += 1;
+                        return Err(Error::WallTimeExceeded(infra.walltime_s as u64));
+                    }
+                    if !sched.failed {
+                        break sched;
+                    }
+                    {
+                        let mut s = stats.lock().unwrap();
+                        s.failed_attempts += 1;
+                        s.resubmissions += 1;
+                    }
+                    // resubmit: fresh brokering latency from the failure time
+                    release = sched.end
+                        + rng.lognormal(
+                            infra.submit_latency_median_s.max(1e-9).ln(),
+                            infra.submit_latency_sigma,
+                        );
+                };
+
+                // --- status poll through the CLI layer (sanity) ------------
+                let status_out = shell.execute(&adapter.status_command(&middleware_id))?;
+                let state = adapter.parse_status(&status_out.stdout)?;
+                debug_assert!(
+                    matches!(state, JobState::Done | JobState::Running),
+                    "unexpected post-schedule state {state:?}"
+                );
+
+                let report = JobReport {
+                    environment: env_name.clone(),
+                    node: format!("node{:04}", sched.node),
+                    attempts,
+                    submit_delay_s: submit_delay,
+                    queue_s: (sched.start - job.virtual_release - submit_delay).max(0.0),
+                    exec_s: sched.end - sched.start,
+                    virtual_start: sched.start,
+                    virtual_end: sched.end,
+                    real_exec: real,
+                };
+                {
+                    let mut s = stats.lock().unwrap();
+                    s.completed += 1;
+                    s.virtual_cpu_s += report.exec_s;
+                    if report.virtual_end > s.virtual_makespan {
+                        s.virtual_makespan = report.virtual_end;
+                    }
+                }
+                Ok((result, report))
+            };
+            match run() {
+                Ok((ctx, report)) => (Ok(ctx), report),
+                Err(e) => (
+                    Err(e),
+                    JobReport {
+                        environment: "failed".into(),
+                        node: String::new(),
+                        attempts: 0,
+                        submit_delay_s: 0.0,
+                        queue_s: 0.0,
+                        exec_s: 0.0,
+                        virtual_start: 0.0,
+                        virtual_end: 0.0,
+                        real_exec: std::time::Duration::ZERO,
+                    },
+                ),
+            }
+        });
+        JobHandle::from_join(join)
+    }
+
+    fn stats(&self) -> EnvStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{val_f64, Context};
+    use crate::dsl::task::ClosureTask;
+    use crate::environment::run_all;
+
+    fn task(cost: f64) -> Arc<ClosureTask> {
+        let x = val_f64("x");
+        Arc::new(
+            ClosureTask::new("t", {
+                let x = x.clone();
+                move |ctx| Ok(Context::new().with(&x, ctx.get(&x).unwrap_or(0.0) + 1.0))
+            })
+            .cost(cost),
+        )
+    }
+
+    #[test]
+    fn sim_cluster_fifo_on_one_node() {
+        let mut c = SimCluster::homogeneous(1, 1.0);
+        let a = c.create_job();
+        let b = c.create_job();
+        let s1 = c.schedule(a, 0.0, 10.0, 1e9, None).unwrap();
+        let s2 = c.schedule(b, 0.0, 10.0, 1e9, None).unwrap();
+        assert_eq!(s1.start, 0.0);
+        assert_eq!(s2.start, 10.0); // queued behind job a
+        assert_eq!(s2.end, 20.0);
+    }
+
+    #[test]
+    fn sim_cluster_parallel_nodes() {
+        let mut c = SimCluster::homogeneous(4, 1.0);
+        let ids: Vec<u64> = (0..4).map(|_| c.create_job()).collect();
+        for &id in &ids {
+            let s = c.schedule(id, 0.0, 5.0, 1e9, None).unwrap();
+            assert_eq!(s.start, 0.0); // all start immediately
+        }
+    }
+
+    #[test]
+    fn walltime_kill() {
+        let mut c = SimCluster::homogeneous(1, 1.0);
+        let id = c.create_job();
+        let s = c.schedule(id, 0.0, 100.0, 30.0, None).unwrap();
+        assert!(s.walltime_killed);
+        assert_eq!(s.end, 30.0);
+    }
+
+    #[test]
+    fn slow_node_takes_longer() {
+        let mut c = SimCluster::new(vec![2.0]);
+        let id = c.create_job();
+        let s = c.schedule(id, 0.0, 10.0, 1e9, None).unwrap();
+        assert_eq!(s.end - s.start, 20.0);
+    }
+
+    #[test]
+    fn batch_env_executes_and_simulates() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let env = BatchEnvironment::pbs(4, pool, 1);
+        let results = run_all(
+            &env,
+            (0..8).map(|_| Job::new(task(10.0), Context::new())).collect(),
+        );
+        let mut ends = Vec::new();
+        for r in results {
+            let (_, report) = r.unwrap();
+            assert!(report.exec_s >= 10.0 - 1e-9, "bad report: {report:?}");
+            assert!(report.submit_delay_s > 0.0);
+            ends.push(report.virtual_end);
+        }
+        // 8 jobs, 4 nodes, 10 s each → makespan at least 20 s of exec
+        let makespan = ends.iter().cloned().fold(0.0, f64::max);
+        assert!(makespan >= 20.0, "makespan {makespan}");
+        assert_eq!(env.stats().completed, 8);
+    }
+
+    #[test]
+    fn all_flavors_submit_successfully() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let envs: Vec<BatchEnvironment> = vec![
+            BatchEnvironment::pbs(2, Arc::clone(&pool), 1),
+            BatchEnvironment::slurm(2, Arc::clone(&pool), 2),
+            BatchEnvironment::sge(2, Arc::clone(&pool), 3),
+            BatchEnvironment::oar(2, Arc::clone(&pool), 4),
+            BatchEnvironment::condor(2, Arc::clone(&pool), 5),
+            BatchEnvironment::glite("biomed", 8, Arc::clone(&pool), 6),
+        ];
+        for env in &envs {
+            let (_, report) = env
+                .submit(Job::new(task(1.0), Context::new()))
+                .wait()
+                .unwrap();
+            assert!(report.virtual_end > 0.0, "{} produced no timing", env.name());
+        }
+    }
+
+    #[test]
+    fn walltime_exceeded_surfaces_as_error() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let env = BatchEnvironment::pbs(1, pool, 7).with_infra(InfraModel {
+            walltime_s: 5.0,
+            ..InfraModel::cluster()
+        });
+        let err = env
+            .submit(Job::new(task(100.0), Context::new()))
+            .wait()
+            .unwrap_err();
+        assert!(matches!(err, Error::WallTimeExceeded(_)));
+    }
+
+    #[test]
+    fn failure_injection_causes_resubmissions() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let env = BatchEnvironment::glite("biomed", 16, pool, 11).with_infra(InfraModel {
+            failure_rate: 0.5,
+            max_retries: 10,
+            ..InfraModel::grid()
+        });
+        let results = run_all(
+            &env,
+            (0..30).map(|_| Job::new(task(5.0), Context::new())).collect(),
+        );
+        for r in results {
+            r.unwrap(); // retries must eventually succeed
+        }
+        assert!(env.stats().resubmissions > 0, "no failures injected at 50%");
+    }
+
+    #[test]
+    fn virtual_release_defers_start() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let env = BatchEnvironment::slurm(4, pool, 13);
+        let (_, r) = env
+            .submit(Job::new(task(1.0), Context::new()).released_at(1000.0))
+            .wait()
+            .unwrap();
+        assert!(r.virtual_start >= 1000.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! `LocalEnvironment(threads = n)` — the "test small on your computer"
+//! half of the paper's philosophy (§2.1).
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::dsl::task::run_checked;
+use crate::environment::{EnvStats, Environment, Job, JobHandle};
+use crate::exec::ThreadPool;
+
+/// Executes jobs directly on a local thread pool. Virtual time equals real
+/// time: no submission latency, no queueing beyond pool capacity.
+pub struct LocalEnvironment {
+    name: String,
+    pool: Arc<ThreadPool>,
+    stats: Arc<Mutex<EnvStats>>,
+}
+
+impl LocalEnvironment {
+    pub fn new(threads: usize) -> Self {
+        LocalEnvironment {
+            name: format!("local({threads})"),
+            pool: Arc::new(ThreadPool::new(threads)),
+            stats: Arc::new(Mutex::new(EnvStats::default())),
+        }
+    }
+
+    /// Share an existing pool (environments multiplexing one machine).
+    pub fn with_pool(pool: Arc<ThreadPool>) -> Self {
+        LocalEnvironment {
+            name: format!("local({})", pool.threads()),
+            pool,
+            stats: Arc::new(Mutex::new(EnvStats::default())),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+}
+
+impl Environment for LocalEnvironment {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn submit(&self, job: Job) -> JobHandle {
+        {
+            self.stats.lock().unwrap().submitted += 1;
+        }
+        let stats = Arc::clone(&self.stats);
+        let env_name = self.name.clone();
+        let join = self.pool.submit(move || {
+            let started = Instant::now();
+            let result = run_checked(job.task.as_ref(), &job.context);
+            let real = started.elapsed();
+            let exec_s = real.as_secs_f64();
+            let virtual_start = job.virtual_release;
+            let report = crate::environment::JobReport {
+                environment: env_name,
+                node: "localhost".into(),
+                attempts: 1,
+                submit_delay_s: 0.0,
+                queue_s: 0.0,
+                exec_s,
+                virtual_start,
+                virtual_end: virtual_start + exec_s,
+                real_exec: real,
+            };
+            {
+                let mut s = stats.lock().unwrap();
+                s.completed += 1;
+                s.virtual_cpu_s += exec_s;
+                if report.virtual_end > s.virtual_makespan {
+                    s.virtual_makespan = report.virtual_end;
+                }
+            }
+            (result, report)
+        });
+        JobHandle::from_join(join)
+    }
+
+    fn stats(&self) -> EnvStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{val_f64, Context};
+    use crate::dsl::task::ClosureTask;
+
+    fn double_task() -> Arc<ClosureTask> {
+        let x = val_f64("x");
+        let y = val_f64("y");
+        Arc::new(
+            ClosureTask::new("double", {
+                let (x, y) = (x.clone(), y.clone());
+                move |ctx| Ok(Context::new().with(&y, ctx.get(&x)? * 2.0))
+            })
+            .input(&x)
+            .output(&y),
+        )
+    }
+
+    #[test]
+    fn executes_jobs() {
+        let env = LocalEnvironment::new(2);
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let h = env.submit(Job::new(double_task(), Context::new().with(&x, 21.0)));
+        let (ctx, report) = h.wait().unwrap();
+        assert_eq!(ctx.get(&y).unwrap(), 42.0);
+        assert_eq!(report.attempts, 1);
+        assert_eq!(report.node, "localhost");
+    }
+
+    #[test]
+    fn stats_count_completions() {
+        let env = LocalEnvironment::new(4);
+        let x = val_f64("x");
+        let handles: Vec<_> = (0..10)
+            .map(|i| {
+                env.submit(Job::new(
+                    double_task(),
+                    Context::new().with(&x, f64::from(i)),
+                ))
+            })
+            .collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        let s = env.stats();
+        assert_eq!(s.submitted, 10);
+        assert_eq!(s.completed, 10);
+    }
+
+    #[test]
+    fn task_error_propagates() {
+        let env = LocalEnvironment::new(1);
+        let t = Arc::new(ClosureTask::new("boom", |_| {
+            Err(crate::error::Error::TaskFailed {
+                task: "boom".into(),
+                message: "nope".into(),
+            })
+        }));
+        let err = env.submit(Job::new(t, Context::new())).wait().unwrap_err();
+        assert!(err.to_string().contains("nope"));
+    }
+}

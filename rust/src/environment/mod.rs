@@ -1,0 +1,149 @@
+//! Execution environments: where task workload is delegated (paper §2.2).
+//!
+//! The paper's claim is that switching a workflow from a laptop to a
+//! cluster or to EGI is a one-line change. The [`Environment`] trait is
+//! that line: every implementation accepts [`Job`]s and returns
+//! [`JobHandle`]s, whatever the infrastructure behind it.
+//!
+//! ## Simulated infrastructure + real compute
+//!
+//! This reproduction has no gLite grid to submit to, so remote
+//! environments are *discrete-event simulations* of their infrastructure
+//! (submission latency, queueing, node speed, failures) wrapped around
+//! *real* local execution of the task (PJRT-compiled ant model or any
+//! other task). Each job therefore yields two timelines:
+//!
+//! * the **real** one — how long the computation actually took here;
+//! * the **virtual** one — when the job would have started/finished on the
+//!   simulated infrastructure. Throughput results in EXPERIMENTS.md are
+//!   virtual-time numbers, which is exactly what the substitution rule in
+//!   DESIGN.md §3 calls for.
+//!
+//! Dependencies between jobs enter the virtual timeline through
+//! [`Job::virtual_release`]: a job may not start (in virtual time) before
+//! its inputs existed. Drivers (generational GA, islands) set it to the
+//! virtual end of the jobs they consumed.
+
+pub mod cluster;
+pub mod egi;
+pub mod local;
+pub mod ssh;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::core::Context;
+use crate::dsl::task::Task;
+use crate::error::{Error, Result};
+use crate::exec::JobJoin;
+
+/// A unit of delegated work.
+pub struct Job {
+    pub task: Arc<dyn Task>,
+    pub context: Context,
+    /// Earliest virtual time (s) this job may start on the simulated
+    /// infrastructure — encodes dataflow dependencies in virtual time.
+    pub virtual_release: f64,
+}
+
+impl Job {
+    pub fn new(task: Arc<dyn Task>, context: Context) -> Self {
+        Job {
+            task,
+            context,
+            virtual_release: 0.0,
+        }
+    }
+
+    pub fn released_at(mut self, t: f64) -> Self {
+        self.virtual_release = t;
+        self
+    }
+}
+
+/// Where and when a job ran, in both timelines.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub environment: String,
+    pub node: String,
+    /// 1 + number of resubmissions after simulated failures.
+    pub attempts: u32,
+    /// Virtual seconds spent in submission/brokering.
+    pub submit_delay_s: f64,
+    /// Virtual seconds spent queued before a node was free.
+    pub queue_s: f64,
+    /// Virtual seconds executing on the (possibly slower) remote node.
+    pub exec_s: f64,
+    /// Virtual timestamp at which the job started executing.
+    pub virtual_start: f64,
+    /// Virtual timestamp at which the job completed.
+    pub virtual_end: f64,
+    /// Real wall-clock the computation took locally.
+    pub real_exec: Duration,
+}
+
+/// Handle to a submitted job.
+pub struct JobHandle {
+    join: JobJoin<(Result<Context>, JobReport)>,
+}
+
+impl JobHandle {
+    pub fn from_join(join: JobJoin<(Result<Context>, JobReport)>) -> Self {
+        JobHandle { join }
+    }
+
+    /// Block until the job completes.
+    pub fn wait(self) -> Result<(Context, JobReport)> {
+        match self.join.join() {
+            Ok((Ok(ctx), report)) => Ok((ctx, report)),
+            Ok((Err(e), _)) => Err(e),
+            Err(panic) => Err(Error::EnvironmentError {
+                environment: "<pool>".into(),
+                message: format!("worker panicked: {panic}"),
+            }),
+        }
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<Result<(Context, JobReport)>> {
+        self.join.try_join().map(|r| match r {
+            Ok((Ok(ctx), report)) => Ok((ctx, report)),
+            Ok((Err(e), _)) => Err(e),
+            Err(panic) => Err(Error::EnvironmentError {
+                environment: "<pool>".into(),
+                message: format!("worker panicked: {panic}"),
+            }),
+        })
+    }
+}
+
+/// Aggregate counters every environment maintains.
+#[derive(Debug, Clone, Default)]
+pub struct EnvStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed_attempts: u64,
+    pub resubmissions: u64,
+    /// Latest virtual completion observed (the virtual makespan).
+    pub virtual_makespan: f64,
+    /// Total virtual core-seconds consumed.
+    pub virtual_cpu_s: f64,
+}
+
+/// An execution environment (`LocalEnvironment`, `PBSEnvironment`,
+/// `EGIEnvironment`, ...). Selecting one is the single-line change of
+/// paper §2.2.
+pub trait Environment: Send + Sync {
+    fn name(&self) -> &str;
+    fn submit(&self, job: Job) -> JobHandle;
+    fn stats(&self) -> EnvStats;
+}
+
+/// Submit a batch and wait for everything, preserving order.
+pub fn run_all(
+    env: &dyn Environment,
+    jobs: Vec<Job>,
+) -> Vec<Result<(Context, JobReport)>> {
+    let handles: Vec<JobHandle> = jobs.into_iter().map(|j| env.submit(j)).collect();
+    handles.into_iter().map(JobHandle::wait).collect()
+}

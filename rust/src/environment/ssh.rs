@@ -1,0 +1,126 @@
+//! `SSHEnvironment(user, host, slots)` — remote multi-core server without
+//! a batch system (paper §2.2 "remote servers (through SSH)").
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::dsl::task::run_checked;
+use crate::environment::cluster::{InfraModel, SimCluster};
+use crate::environment::{EnvStats, Environment, Job, JobHandle, JobReport};
+use crate::exec::ThreadPool;
+use crate::util::Rng;
+
+/// GridScale's SSH server: jobs run directly (no middleware), limited by
+/// the server's slot count; small connection latency per submission.
+pub struct SshEnvironment {
+    name: String,
+    cluster: Arc<Mutex<SimCluster>>,
+    infra: InfraModel,
+    pool: Arc<ThreadPool>,
+    rng: Mutex<Rng>,
+    stats: Arc<Mutex<EnvStats>>,
+}
+
+impl SshEnvironment {
+    pub fn new(host: &str, slots: usize, pool: Arc<ThreadPool>, seed: u64) -> Self {
+        SshEnvironment {
+            name: format!("ssh:{host}({slots})"),
+            cluster: Arc::new(Mutex::new(SimCluster::homogeneous(slots, 1.0))),
+            infra: InfraModel::ssh(),
+            pool,
+            rng: Mutex::new(Rng::new(seed)),
+            stats: Arc::new(Mutex::new(EnvStats::default())),
+        }
+    }
+
+    pub fn with_infra(mut self, infra: InfraModel) -> Self {
+        self.infra = infra;
+        self
+    }
+}
+
+impl Environment for SshEnvironment {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn submit(&self, job: Job) -> JobHandle {
+        {
+            self.stats.lock().unwrap().submitted += 1;
+        }
+        let mut rng = self.rng.lock().unwrap().fork();
+        let cluster = Arc::clone(&self.cluster);
+        let infra = self.infra.clone();
+        let stats = Arc::clone(&self.stats);
+        let env_name = self.name.clone();
+        let join = self.pool.submit(move || {
+            let started = Instant::now();
+            let result = run_checked(job.task.as_ref(), &job.context);
+            let real = started.elapsed();
+            let hint = job.task.cost_hint();
+            let nominal = if hint > 0.0 { hint } else { real.as_secs_f64() };
+            let latency = rng.lognormal(
+                infra.submit_latency_median_s.max(1e-9).ln(),
+                infra.submit_latency_sigma,
+            );
+            let release = job.virtual_release + latency;
+            let sched = {
+                let mut c = cluster.lock().unwrap();
+                let id = c.create_job();
+                c.schedule(id, release, nominal, infra.walltime_s, None)
+                    .expect("ssh cluster has slots")
+            };
+            let report = JobReport {
+                environment: env_name,
+                node: "sshd".into(),
+                attempts: 1,
+                submit_delay_s: latency,
+                queue_s: (sched.start - release).max(0.0),
+                exec_s: sched.end - sched.start,
+                virtual_start: sched.start,
+                virtual_end: sched.end,
+                real_exec: real,
+            };
+            {
+                let mut s = stats.lock().unwrap();
+                s.completed += 1;
+                s.virtual_cpu_s += report.exec_s;
+                if report.virtual_end > s.virtual_makespan {
+                    s.virtual_makespan = report.virtual_end;
+                }
+            }
+            (result, report)
+        });
+        JobHandle::from_join(join)
+    }
+
+    fn stats(&self) -> EnvStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Context;
+    use crate::dsl::task::ClosureTask;
+    use crate::environment::run_all;
+
+    #[test]
+    fn slots_serialise_virtual_time() {
+        let pool = Arc::new(ThreadPool::new(4));
+        let env = SshEnvironment::new("calc01", 1, pool, 1);
+        let t = Arc::new(ClosureTask::new("c", |c| Ok(c.clone())).cost(10.0));
+        let results = run_all(
+            &env,
+            (0..3).map(|_| Job::new(Arc::clone(&t) as _, Context::new())).collect(),
+        );
+        let mut ends: Vec<f64> = results
+            .into_iter()
+            .map(|r| r.unwrap().1.virtual_end)
+            .collect();
+        ends.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // one slot → three 10 s jobs must span at least 30 virtual seconds
+        assert!(ends[2] >= 30.0, "makespan {}", ends[2]);
+    }
+}

@@ -1,0 +1,81 @@
+//! Unified error type for the molers crate.
+
+use thiserror::Error;
+
+/// Errors surfaced by the workflow engine and its substrates.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// A task read a variable that is absent from its input context.
+    #[error("missing variable `{0}` in context")]
+    MissingVariable(String),
+
+    /// A variable existed but held a different type than requested.
+    #[error("variable `{name}` has type {actual}, expected {expected}")]
+    TypeMismatch {
+        name: String,
+        expected: &'static str,
+        actual: &'static str,
+    },
+
+    /// Workflow graph is malformed (cycle, dangling transition, ...).
+    #[error("invalid workflow: {0}")]
+    InvalidWorkflow(String),
+
+    /// A task body failed.
+    #[error("task `{task}` failed: {message}")]
+    TaskFailed { task: String, message: String },
+
+    /// Job submission / polling failure on an execution environment.
+    #[error("environment `{environment}` error: {message}")]
+    EnvironmentError {
+        environment: String,
+        message: String,
+    },
+
+    /// A job exceeded its wall time and was killed by the scheduler.
+    #[error("job killed after exceeding wall time ({0} s of simulated time)")]
+    WallTimeExceeded(u64),
+
+    /// A job failed on a remote node (simulated infrastructure fault).
+    #[error("job failed on node `{node}`: {reason}")]
+    NodeFailure { node: String, reason: String },
+
+    /// Packaging / re-execution failure (CARE/CDE substrate).
+    #[error("packaging error: {0}")]
+    Packaging(String),
+
+    /// The PJRT runtime failed to load or execute an artifact.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// artifacts/manifest.json was missing or malformed.
+    #[error("artifact manifest error: {0}")]
+    Manifest(String),
+
+    /// Evolution configuration error (bounds, population sizes, ...).
+    #[error("evolution error: {0}")]
+    Evolution(String),
+
+    /// GridScale command construction/parsing error.
+    #[error("gridscale error: {0}")]
+    GridScale(String),
+
+    #[error("json parse error at byte {offset}: {message}")]
+    Json { offset: usize, message: String },
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    /// Wrapped error from the `xla` crate (PJRT layer).
+    #[error("xla: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,272 @@
+//! Fitness evaluation: the bridge between the GA coordinator and the
+//! model (paper §4.2's fitness function).
+//!
+//! Implementations:
+//! * [`crate::runtime::PjrtEvaluator`] — the production path: the AOT
+//!   JAX+Pallas ant model via PJRT;
+//! * [`AntSimEvaluator`] — the pure-Rust twin (no artifacts needed);
+//! * [`Zdt1Evaluator`] / [`SphereEvaluator`] — analytic benchmarks to test
+//!   GA machinery against known Pareto fronts;
+//! * [`ReplicatedEvaluator`] — wraps any evaluator with n-seed replication
+//!   and a statistical descriptor (the paper's `replicateModel`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::sim::ants::{evaluate as ant_evaluate, AntParams};
+use crate::util::stats::Descriptor;
+
+/// Maps a genome (plus a seed for stochastic models) to minimised
+/// objective values.
+pub trait Evaluator: Send + Sync {
+    /// Number of objectives produced.
+    fn objectives(&self) -> usize;
+
+    /// Evaluate one genome under one seed.
+    fn evaluate(&self, genome: &[f64], seed: u32) -> Result<Vec<f64>>;
+
+    /// Batch evaluation; overridden by the PJRT evaluator to use the
+    /// vmapped artifacts. The default loops.
+    fn evaluate_batch(&self, jobs: &[(Vec<f64>, u32)]) -> Result<Vec<Vec<f64>>> {
+        jobs.iter()
+            .map(|(g, s)| self.evaluate(g, *s))
+            .collect()
+    }
+
+    /// Nominal cost of one evaluation in remote core-seconds — feeds the
+    /// environments' virtual clocks. The NetLogo ant run the paper
+    /// distributes costs ~36 s on a 2015 grid core (1000 ticks).
+    fn nominal_cost_s(&self) -> f64 {
+        36.0
+    }
+}
+
+/// Ant model via the pure-Rust twin; genome = (diffusion, evaporation),
+/// population fixed at the paper's 125 (§4.2 optimises the two rates).
+pub struct AntSimEvaluator {
+    pub population: f64,
+    pub max_ticks: u32,
+}
+
+impl AntSimEvaluator {
+    pub fn new() -> Self {
+        AntSimEvaluator {
+            population: 125.0,
+            max_ticks: 1000,
+        }
+    }
+
+    /// A faster, lower-fidelity setting for tests and quick demos.
+    pub fn fast() -> Self {
+        AntSimEvaluator {
+            population: 125.0,
+            max_ticks: 250,
+        }
+    }
+}
+
+impl Default for AntSimEvaluator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Evaluator for AntSimEvaluator {
+    fn objectives(&self) -> usize {
+        3
+    }
+
+    fn evaluate(&self, genome: &[f64], seed: u32) -> Result<Vec<f64>> {
+        let params = AntParams {
+            population: self.population,
+            diffusion_rate: genome.first().copied().unwrap_or(50.0),
+            evaporation_rate: genome.get(1).copied().unwrap_or(50.0),
+        };
+        Ok(ant_evaluate(params, u64::from(seed), self.max_ticks).to_vec())
+    }
+
+    fn nominal_cost_s(&self) -> f64 {
+        // scale the 36 s/1000-tick reference to this configuration
+        36.0 * f64::from(self.max_ticks) / 1000.0
+    }
+}
+
+/// ZDT1: two-objective benchmark with known Pareto front
+/// (f2 = 1 - sqrt(f1) at g = 1). Genome in [0, 1]^n.
+pub struct Zdt1Evaluator {
+    pub dim: usize,
+}
+
+impl Evaluator for Zdt1Evaluator {
+    fn objectives(&self) -> usize {
+        2
+    }
+
+    fn evaluate(&self, genome: &[f64], _seed: u32) -> Result<Vec<f64>> {
+        let f1 = genome[0];
+        let g = 1.0
+            + 9.0 * genome[1..].iter().sum::<f64>() / (self.dim as f64 - 1.0).max(1.0);
+        let f2 = g * (1.0 - (f1 / g).sqrt());
+        Ok(vec![f1, f2])
+    }
+
+    fn nominal_cost_s(&self) -> f64 {
+        1.0
+    }
+}
+
+/// Single-objective sphere with optional seed noise — for convergence and
+/// replication tests.
+pub struct SphereEvaluator {
+    pub noise: f64,
+}
+
+impl Evaluator for SphereEvaluator {
+    fn objectives(&self) -> usize {
+        1
+    }
+
+    fn evaluate(&self, genome: &[f64], seed: u32) -> Result<Vec<f64>> {
+        let base: f64 = genome.iter().map(|x| x * x).sum();
+        // deterministic per-seed noise
+        let mut s = u64::from(seed);
+        let noise =
+            (crate::util::rng::splitmix64(&mut s) as f64 / u64::MAX as f64 - 0.5)
+                * 2.0
+                * self.noise;
+        Ok(vec![base + noise])
+    }
+
+    fn nominal_cost_s(&self) -> f64 {
+        1.0
+    }
+}
+
+/// Counts evaluations — instrumentation for tests and benches.
+pub struct CountingEvaluator<E> {
+    pub inner: E,
+    count: AtomicU64,
+}
+
+impl<E: Evaluator> CountingEvaluator<E> {
+    pub fn new(inner: E) -> Self {
+        CountingEvaluator {
+            inner,
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+}
+
+impl<E: Evaluator> Evaluator for CountingEvaluator<E> {
+    fn objectives(&self) -> usize {
+        self.inner.objectives()
+    }
+
+    fn evaluate(&self, genome: &[f64], seed: u32) -> Result<Vec<f64>> {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.inner.evaluate(genome, seed)
+    }
+
+    fn nominal_cost_s(&self) -> f64 {
+        self.inner.nominal_cost_s()
+    }
+}
+
+/// The paper's `replicateModel`: evaluate under `n` independent seeds and
+/// summarise each objective with a descriptor (median in §4.4).
+pub struct ReplicatedEvaluator {
+    pub inner: Arc<dyn Evaluator>,
+    pub replications: usize,
+    pub descriptor: Descriptor,
+}
+
+impl ReplicatedEvaluator {
+    pub fn new(inner: Arc<dyn Evaluator>, replications: usize) -> Self {
+        ReplicatedEvaluator {
+            inner,
+            replications: replications.max(1),
+            descriptor: Descriptor::Median,
+        }
+    }
+}
+
+impl Evaluator for ReplicatedEvaluator {
+    fn objectives(&self) -> usize {
+        self.inner.objectives()
+    }
+
+    fn evaluate(&self, genome: &[f64], seed: u32) -> Result<Vec<f64>> {
+        // derive the replication seeds from the job seed
+        let mut s = u64::from(seed) | 0x5851_f42d_0000_0000;
+        let mut per_obj: Vec<Vec<f64>> = vec![Vec::new(); self.objectives()];
+        let batch: Vec<(Vec<f64>, u32)> = (0..self.replications)
+            .map(|_| (genome.to_vec(), crate::util::rng::splitmix64(&mut s) as u32))
+            .collect();
+        for objs in self.inner.evaluate_batch(&batch)? {
+            for (o, v) in per_obj.iter_mut().zip(objs) {
+                o.push(v);
+            }
+        }
+        Ok(per_obj.iter().map(|o| self.descriptor.apply(o)).collect())
+    }
+
+    fn nominal_cost_s(&self) -> f64 {
+        self.inner.nominal_cost_s() * self.replications as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zdt1_known_values() {
+        let e = Zdt1Evaluator { dim: 3 };
+        // on the Pareto front (tail genes 0): f2 = 1 - sqrt(f1)
+        let f = e.evaluate(&[0.25, 0.0, 0.0], 0).unwrap();
+        assert!((f[0] - 0.25).abs() < 1e-12);
+        assert!((f[1] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ant_sim_evaluator_three_objectives() {
+        let e = AntSimEvaluator::fast();
+        let f = e.evaluate(&[50.0, 10.0], 42).unwrap();
+        assert_eq!(f.len(), 3);
+        assert!(f.iter().all(|&t| t > 0.0 && t <= 250.0));
+    }
+
+    #[test]
+    fn replication_tames_noise() {
+        let noisy = Arc::new(SphereEvaluator { noise: 5.0 });
+        let replicated = ReplicatedEvaluator::new(Arc::clone(&noisy) as _, 51);
+        let g = vec![0.0, 0.0];
+        // single evaluations swing by ±5; the 51-seed median is much tighter
+        let reps: Vec<f64> = (0..20)
+            .map(|s| replicated.evaluate(&g, s).unwrap()[0])
+            .collect();
+        let spread = reps.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            - reps.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(spread < 4.0, "median spread {spread} not < raw ±5 noise");
+    }
+
+    #[test]
+    fn counting_counts() {
+        let e = CountingEvaluator::new(Zdt1Evaluator { dim: 2 });
+        for i in 0..7 {
+            e.evaluate(&[0.5, 0.5], i).unwrap();
+        }
+        assert_eq!(e.count(), 7);
+    }
+
+    #[test]
+    fn replicated_cost_scales() {
+        let e = ReplicatedEvaluator::new(Arc::new(Zdt1Evaluator { dim: 2 }), 5);
+        assert_eq!(e.nominal_cost_s(), 5.0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Genomes and bounds for the real-coded GA (paper §4.5: each input is a
+//! `Val` with variation bounds, e.g. `gDiffusionRate -> (0.0, 99.0)`).
+
+use crate::core::Val;
+use crate::error::{Error, Result};
+use crate::util::Rng;
+
+/// Box constraints of the search space, with the variable names they bind
+/// (used to build evaluation contexts and result files).
+#[derive(Debug, Clone)]
+pub struct Bounds {
+    pub names: Vec<String>,
+    pub lo: Vec<f64>,
+    pub hi: Vec<f64>,
+}
+
+impl Bounds {
+    /// `inputs = Seq(gDiffusionRate -> (0.0, 99.0), ...)`.
+    pub fn new(inputs: &[(&Val<f64>, f64, f64)]) -> Result<Self> {
+        if inputs.is_empty() {
+            return Err(Error::Evolution("empty genome bounds".into()));
+        }
+        for (v, lo, hi) in inputs {
+            if !(lo < hi) {
+                return Err(Error::Evolution(format!(
+                    "bad bounds for {}: ({lo}, {hi})",
+                    v.name()
+                )));
+            }
+        }
+        Ok(Bounds {
+            names: inputs.iter().map(|(v, _, _)| v.name().to_string()).collect(),
+            lo: inputs.iter().map(|(_, lo, _)| *lo).collect(),
+            hi: inputs.iter().map(|(_, _, hi)| *hi).collect(),
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.lo.len()
+    }
+
+    /// Uniform random genome inside the box.
+    pub fn random(&self, rng: &mut Rng) -> Vec<f64> {
+        (0..self.dim())
+            .map(|i| rng.range(self.lo[i], self.hi[i]))
+            .collect()
+    }
+
+    /// Clamp a genome into the box.
+    pub fn clamp(&self, genome: &mut [f64]) {
+        for (i, g) in genome.iter_mut().enumerate() {
+            *g = g.clamp(self.lo[i], self.hi[i]);
+        }
+    }
+
+    pub fn contains(&self, genome: &[f64]) -> bool {
+        genome.len() == self.dim()
+            && genome
+                .iter()
+                .enumerate()
+                .all(|(i, g)| (self.lo[i]..=self.hi[i]).contains(g))
+    }
+}
+
+/// An evaluated individual.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Individual {
+    pub genome: Vec<f64>,
+    /// Minimised objective values.
+    pub objectives: Vec<f64>,
+    /// How many times this individual was (re-)evaluated — the paper's
+    /// `reevaluate = 0.01` machinery tracks this to kill lucky evaluations.
+    pub evaluations: u32,
+}
+
+impl Individual {
+    pub fn new(genome: Vec<f64>, objectives: Vec<f64>) -> Self {
+        Individual {
+            genome,
+            objectives,
+            evaluations: 1,
+        }
+    }
+
+    /// Pareto dominance (all ≤, at least one <) for minimisation.
+    pub fn dominates(&self, other: &Individual) -> bool {
+        let mut strictly = false;
+        for (a, b) in self.objectives.iter().zip(&other.objectives) {
+            if a > b {
+                return false;
+            }
+            if a < b {
+                strictly = true;
+            }
+        }
+        strictly
+    }
+
+    /// Merge a re-evaluation: running average of objectives (§4.5's
+    /// defence against over-evaluated stochastic individuals).
+    pub fn absorb_reevaluation(&mut self, fresh: &[f64]) {
+        let n = f64::from(self.evaluations);
+        for (o, f) in self.objectives.iter_mut().zip(fresh) {
+            *o = (*o * n + f) / (n + 1.0);
+        }
+        self.evaluations += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::val_f64;
+
+    fn bounds() -> Bounds {
+        let d = val_f64("d");
+        let e = val_f64("e");
+        Bounds::new(&[(&d, 0.0, 99.0), (&e, 0.0, 99.0)]).unwrap()
+    }
+
+    #[test]
+    fn random_genomes_inside_box() {
+        let b = bounds();
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            assert!(b.contains(&b.random(&mut rng)));
+        }
+    }
+
+    #[test]
+    fn clamp_pulls_back() {
+        let b = bounds();
+        let mut g = vec![-5.0, 120.0];
+        b.clamp(&mut g);
+        assert_eq!(g, vec![0.0, 99.0]);
+    }
+
+    #[test]
+    fn rejects_bad_bounds() {
+        let d = val_f64("d");
+        assert!(Bounds::new(&[(&d, 5.0, 5.0)]).is_err());
+        assert!(Bounds::new(&[]).is_err());
+    }
+
+    #[test]
+    fn dominance() {
+        let a = Individual::new(vec![], vec![1.0, 2.0]);
+        let b = Individual::new(vec![], vec![2.0, 3.0]);
+        let c = Individual::new(vec![], vec![0.5, 4.0]);
+        assert!(a.dominates(&b));
+        assert!(!b.dominates(&a));
+        assert!(!a.dominates(&c) && !c.dominates(&a)); // incomparable
+        assert!(!a.dominates(&a));
+    }
+
+    #[test]
+    fn reevaluation_averages() {
+        let mut a = Individual::new(vec![], vec![10.0]);
+        a.absorb_reevaluation(&[20.0]);
+        assert_eq!(a.objectives, vec![15.0]);
+        assert_eq!(a.evaluations, 2);
+        a.absorb_reevaluation(&[15.0]);
+        assert_eq!(a.objectives, vec![15.0]);
+    }
+}

@@ -1,0 +1,21 @@
+//! Evolutionary model calibration (paper §4): NSGA-II with stochastic
+//! re-evaluation, generational and steady-state drivers, and the island
+//! model for grid-scale distribution.
+
+pub mod evaluator;
+pub mod generational;
+pub mod genome;
+pub mod island;
+pub mod nsga2;
+pub mod operators;
+pub mod steady;
+
+pub use evaluator::{
+    AntSimEvaluator, CountingEvaluator, Evaluator, ReplicatedEvaluator,
+    SphereEvaluator, Zdt1Evaluator,
+};
+pub use generational::{eval_task, EvolutionResult, GenerationalGA, Nsga2Config};
+pub use genome::{Bounds, Individual};
+pub use island::{IslandConfig, IslandSteadyGA};
+pub use operators::Operators;
+pub use steady::{SteadyStateGA, Termination};

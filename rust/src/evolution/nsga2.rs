@@ -1,0 +1,266 @@
+//! NSGA-II (Deb et al. 2002) — the multi-objective engine of paper §4.5:
+//! fast non-dominated sort, crowding distance, environmental selection and
+//! binary tournament.
+
+use crate::evolution::genome::Individual;
+use crate::util::Rng;
+
+/// Fast non-dominated sort: partition indices into Pareto fronts
+/// (front 0 = non-dominated).
+pub fn fast_non_dominated_sort(pop: &[Individual]) -> Vec<Vec<usize>> {
+    let n = pop.len();
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i dominates these
+    let mut domination_count = vec![0usize; n];
+    let mut fronts: Vec<Vec<usize>> = vec![Vec::new()];
+
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            if pop[i].dominates(&pop[j]) {
+                dominated_by[i].push(j);
+            } else if pop[j].dominates(&pop[i]) {
+                domination_count[i] += 1;
+            }
+        }
+        if domination_count[i] == 0 {
+            fronts[0].push(i);
+        }
+    }
+
+    let mut k = 0;
+    while !fronts[k].is_empty() {
+        let mut next = Vec::new();
+        for &i in &fronts[k] {
+            for &j in &dominated_by[i] {
+                domination_count[j] -= 1;
+                if domination_count[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(next);
+        k += 1;
+    }
+    fronts.pop(); // drop the trailing empty front
+    fronts
+}
+
+/// Crowding distance of each member of one front (Deb 2002 §III-B).
+pub fn crowding_distance(pop: &[Individual], front: &[usize]) -> Vec<f64> {
+    let m = front.len();
+    let mut dist = vec![0.0f64; m];
+    if m == 0 {
+        return dist;
+    }
+    if m <= 2 {
+        return vec![f64::INFINITY; m];
+    }
+    let n_obj = pop[front[0]].objectives.len();
+    for obj in 0..n_obj {
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| {
+            pop[front[a]].objectives[obj]
+                .partial_cmp(&pop[front[b]].objectives[obj])
+                .unwrap()
+        });
+        let lo = pop[front[order[0]]].objectives[obj];
+        let hi = pop[front[order[m - 1]]].objectives[obj];
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        let range = hi - lo;
+        if range <= 0.0 {
+            continue;
+        }
+        for w in 1..m - 1 {
+            let prev = pop[front[order[w - 1]]].objectives[obj];
+            let next = pop[front[order[w + 1]]].objectives[obj];
+            dist[order[w]] += (next - prev) / range;
+        }
+    }
+    dist
+}
+
+/// Rank (front index) and crowding for every individual.
+pub fn rank_and_crowding(pop: &[Individual]) -> (Vec<usize>, Vec<f64>) {
+    let fronts = fast_non_dominated_sort(pop);
+    let mut rank = vec![0usize; pop.len()];
+    let mut crowd = vec![0.0f64; pop.len()];
+    for (r, front) in fronts.iter().enumerate() {
+        let d = crowding_distance(pop, front);
+        for (k, &i) in front.iter().enumerate() {
+            rank[i] = r;
+            crowd[i] = d[k];
+        }
+    }
+    (rank, crowd)
+}
+
+/// Environmental selection: keep the best `mu` individuals by
+/// (front rank, crowding distance) — the elitist step of NSGA-II.
+pub fn select(pop: Vec<Individual>, mu: usize) -> Vec<Individual> {
+    if pop.len() <= mu {
+        return pop;
+    }
+    let fronts = fast_non_dominated_sort(&pop);
+    let mut keep: Vec<usize> = Vec::with_capacity(mu);
+    for front in &fronts {
+        if keep.len() + front.len() <= mu {
+            keep.extend_from_slice(front);
+        } else {
+            let d = crowding_distance(&pop, front);
+            let mut order: Vec<usize> = (0..front.len()).collect();
+            order.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap());
+            for &k in order.iter().take(mu - keep.len()) {
+                keep.push(front[k]);
+            }
+            break;
+        }
+    }
+    let mut flags = vec![false; pop.len()];
+    for &i in &keep {
+        flags[i] = true;
+    }
+    pop.into_iter()
+        .zip(flags)
+        .filter_map(|(ind, keep)| keep.then_some(ind))
+        .collect()
+}
+
+/// Binary tournament on (rank, crowding): the parent-selection operator.
+pub fn tournament<'a>(
+    pop: &'a [Individual],
+    rank: &[usize],
+    crowd: &[f64],
+    rng: &mut Rng,
+) -> &'a Individual {
+    let a = rng.usize(pop.len());
+    let b = rng.usize(pop.len());
+    let better = if rank[a] < rank[b] {
+        a
+    } else if rank[b] < rank[a] {
+        b
+    } else if crowd[a] >= crowd[b] {
+        a
+    } else {
+        b
+    };
+    &pop[better]
+}
+
+/// The Pareto front (front 0) of a population.
+pub fn pareto_front(pop: &[Individual]) -> Vec<Individual> {
+    fast_non_dominated_sort(pop)
+        .first()
+        .map(|f| f.iter().map(|&i| pop[i].clone()).collect())
+        .unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ind(objs: &[f64]) -> Individual {
+        Individual::new(vec![], objs.to_vec())
+    }
+
+    #[test]
+    fn sorts_into_fronts() {
+        // front 0: (1,4), (2,2), (4,1); front 1: (3,4), (4,3); front 2: (5,5)
+        let pop = vec![
+            ind(&[1.0, 4.0]),
+            ind(&[2.0, 2.0]),
+            ind(&[4.0, 1.0]),
+            ind(&[3.0, 4.0]),
+            ind(&[4.0, 3.0]),
+            ind(&[5.0, 5.0]),
+        ];
+        let fronts = fast_non_dominated_sort(&pop);
+        assert_eq!(fronts.len(), 3);
+        let mut f0 = fronts[0].clone();
+        f0.sort_unstable();
+        assert_eq!(f0, vec![0, 1, 2]);
+        assert_eq!(fronts[2], vec![5]);
+    }
+
+    #[test]
+    fn crowding_prefers_extremes() {
+        let pop = vec![
+            ind(&[0.0, 4.0]),
+            ind(&[1.0, 3.0]),
+            ind(&[2.0, 2.0]),
+            ind(&[3.0, 1.0]),
+            ind(&[4.0, 0.0]),
+        ];
+        let front: Vec<usize> = (0..5).collect();
+        let d = crowding_distance(&pop, &front);
+        assert!(d[0].is_infinite() && d[4].is_infinite());
+        assert!(d[1] > 0.0 && d[2] > 0.0 && d[3] > 0.0);
+        assert!(d[1].is_finite());
+    }
+
+    #[test]
+    fn select_keeps_first_front_whole_when_it_fits() {
+        let pop = vec![
+            ind(&[1.0, 4.0]),
+            ind(&[2.0, 2.0]),
+            ind(&[4.0, 1.0]),
+            ind(&[5.0, 5.0]),
+            ind(&[6.0, 6.0]),
+        ];
+        let kept = select(pop, 3);
+        assert_eq!(kept.len(), 3);
+        // the three front-0 points survive
+        let objs: Vec<&[f64]> = kept.iter().map(|i| i.objectives.as_slice()).collect();
+        assert!(objs.contains(&[1.0, 4.0].as_slice()));
+        assert!(objs.contains(&[2.0, 2.0].as_slice()));
+        assert!(objs.contains(&[4.0, 1.0].as_slice()));
+    }
+
+    #[test]
+    fn select_truncates_by_crowding() {
+        // one big front of 5, keep 3: extremes must survive
+        let pop = vec![
+            ind(&[0.0, 4.0]),
+            ind(&[1.0, 3.0]),
+            ind(&[1.9, 2.1]), // most crowded middle point
+            ind(&[3.0, 1.0]),
+            ind(&[4.0, 0.0]),
+        ];
+        let kept = select(pop, 3);
+        let objs: Vec<&[f64]> = kept.iter().map(|i| i.objectives.as_slice()).collect();
+        assert!(objs.contains(&[0.0, 4.0].as_slice()));
+        assert!(objs.contains(&[4.0, 0.0].as_slice()));
+    }
+
+    #[test]
+    fn pareto_front_extraction() {
+        let pop = vec![ind(&[1.0, 1.0]), ind(&[2.0, 2.0])];
+        let front = pareto_front(&pop);
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0].objectives, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn tournament_prefers_lower_rank() {
+        let pop = vec![ind(&[1.0, 1.0]), ind(&[5.0, 5.0])];
+        let (rank, crowd) = rank_and_crowding(&pop);
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let w = tournament(&pop, &rank, &crowd, &mut rng);
+            // winner is never strictly dominated by the loser
+            assert!(!pop[1].dominates(w) || w.objectives == pop[1].objectives);
+        }
+    }
+
+    #[test]
+    fn identical_objectives_no_infinite_loop() {
+        let pop = vec![ind(&[1.0, 1.0]); 6];
+        let fronts = fast_non_dominated_sort(&pop);
+        assert_eq!(fronts.len(), 1);
+        assert_eq!(fronts[0].len(), 6);
+        let kept = select(pop, 3);
+        assert_eq!(kept.len(), 3);
+    }
+}

@@ -1,0 +1,179 @@
+//! Real-coded variation operators: SBX crossover and polynomial mutation —
+//! the standard NSGA-II operator suite (Deb et al. 2002).
+
+use crate::evolution::genome::Bounds;
+use crate::util::Rng;
+
+/// Operator parameters. Defaults match the canonical NSGA-II settings.
+#[derive(Debug, Clone)]
+pub struct Operators {
+    /// SBX distribution index (larger = children closer to parents).
+    pub eta_crossover: f64,
+    /// Polynomial-mutation distribution index.
+    pub eta_mutation: f64,
+    /// Per-gene crossover probability once a pair is selected.
+    pub p_crossover: f64,
+    /// Per-gene mutation probability; `None` = 1/dim.
+    pub p_mutation: Option<f64>,
+}
+
+impl Default for Operators {
+    fn default() -> Self {
+        Operators {
+            eta_crossover: 15.0,
+            eta_mutation: 20.0,
+            p_crossover: 0.9,
+            p_mutation: None,
+        }
+    }
+}
+
+impl Operators {
+    /// Simulated binary crossover: produce two children from two parents.
+    pub fn sbx(
+        &self,
+        a: &[f64],
+        b: &[f64],
+        bounds: &Bounds,
+        rng: &mut Rng,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let mut c1 = a.to_vec();
+        let mut c2 = b.to_vec();
+        if rng.f64() < self.p_crossover {
+            for i in 0..a.len() {
+                if rng.f64() < 0.5 && (a[i] - b[i]).abs() > 1e-14 {
+                    let u: f64 = rng.f64();
+                    let beta = if u <= 0.5 {
+                        (2.0 * u).powf(1.0 / (self.eta_crossover + 1.0))
+                    } else {
+                        (1.0 / (2.0 * (1.0 - u))).powf(1.0 / (self.eta_crossover + 1.0))
+                    };
+                    c1[i] = 0.5 * ((1.0 + beta) * a[i] + (1.0 - beta) * b[i]);
+                    c2[i] = 0.5 * ((1.0 - beta) * a[i] + (1.0 + beta) * b[i]);
+                }
+            }
+        }
+        bounds.clamp(&mut c1);
+        bounds.clamp(&mut c2);
+        (c1, c2)
+    }
+
+    /// Polynomial mutation in place.
+    pub fn mutate(&self, genome: &mut [f64], bounds: &Bounds, rng: &mut Rng) {
+        let pm = self
+            .p_mutation
+            .unwrap_or(1.0 / genome.len().max(1) as f64);
+        for i in 0..genome.len() {
+            if rng.f64() < pm {
+                let (lo, hi) = (bounds.lo[i], bounds.hi[i]);
+                let span = hi - lo;
+                let u: f64 = rng.f64();
+                let delta = if u < 0.5 {
+                    (2.0 * u).powf(1.0 / (self.eta_mutation + 1.0)) - 1.0
+                } else {
+                    1.0 - (2.0 * (1.0 - u)).powf(1.0 / (self.eta_mutation + 1.0))
+                };
+                genome[i] += delta * span;
+            }
+        }
+        bounds.clamp(genome);
+    }
+
+    /// Full offspring pipeline: crossover two parents, mutate, return one
+    /// child (the second is discarded, matching OpenMOLE's steady flow).
+    pub fn breed(
+        &self,
+        a: &[f64],
+        b: &[f64],
+        bounds: &Bounds,
+        rng: &mut Rng,
+    ) -> Vec<f64> {
+        let (mut c1, c2) = self.sbx(a, b, bounds, rng);
+        if rng.bool(0.5) {
+            c1 = c2;
+        }
+        let mut child = c1;
+        self.mutate(&mut child, bounds, rng);
+        child
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::val_f64;
+
+    fn bounds() -> Bounds {
+        let x = val_f64("x");
+        let y = val_f64("y");
+        Bounds::new(&[(&x, 0.0, 10.0), (&y, -5.0, 5.0)]).unwrap()
+    }
+
+    #[test]
+    fn sbx_children_in_bounds() {
+        let b = bounds();
+        let ops = Operators::default();
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let p1 = b.random(&mut rng);
+            let p2 = b.random(&mut rng);
+            let (c1, c2) = ops.sbx(&p1, &p2, &b, &mut rng);
+            assert!(b.contains(&c1), "{c1:?}");
+            assert!(b.contains(&c2), "{c2:?}");
+        }
+    }
+
+    #[test]
+    fn sbx_centred_on_parents() {
+        // children's mean ≈ parents' mean (SBX property)
+        let b = bounds();
+        let ops = Operators {
+            p_crossover: 1.0,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(2);
+        let p1 = vec![3.0, 1.0];
+        let p2 = vec![7.0, -1.0];
+        let mut sum = 0.0;
+        let n = 2000;
+        for _ in 0..n {
+            let (c1, c2) = ops.sbx(&p1, &p2, &b, &mut rng);
+            sum += c1[0] + c2[0];
+        }
+        let mean = sum / (2.0 * n as f64);
+        assert!((mean - 5.0).abs() < 0.15, "mean {mean}");
+    }
+
+    #[test]
+    fn mutation_stays_in_bounds_and_perturbs() {
+        let b = bounds();
+        let ops = Operators {
+            p_mutation: Some(1.0),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(3);
+        let mut changed = 0;
+        for _ in 0..100 {
+            let mut g = b.random(&mut rng);
+            let orig = g.clone();
+            ops.mutate(&mut g, &b, &mut rng);
+            assert!(b.contains(&g));
+            if g != orig {
+                changed += 1;
+            }
+        }
+        assert!(changed > 90);
+    }
+
+    #[test]
+    fn breed_produces_valid_child() {
+        let b = bounds();
+        let ops = Operators::default();
+        let mut rng = Rng::new(4);
+        let p1 = b.random(&mut rng);
+        let p2 = b.random(&mut rng);
+        let c = ops.breed(&p1, &p2, &b, &mut rng);
+        assert_eq!(c.len(), 2);
+        assert!(b.contains(&c));
+    }
+}

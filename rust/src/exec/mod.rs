@@ -1,0 +1,12 @@
+//! In-crate execution substrate: a work-stealing-free but fully functional
+//! thread pool with future-like job handles.
+//!
+//! tokio is not vendored in this image (DESIGN.md §3); the engine's needs —
+//! submit closures, await results, bounded parallelism — are covered by
+//! this ~200-line pool built on std threads + channels. Every execution
+//! environment shares one pool sized to the machine, mirroring how
+//! OpenMOLE multiplexes local resources across environments.
+
+mod pool;
+
+pub use pool::{JobJoin, ThreadPool};

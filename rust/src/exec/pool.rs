@@ -1,0 +1,244 @@
+//! A fixed-size thread pool with join handles.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<Queue>,
+    available: Condvar,
+}
+
+struct Queue {
+    jobs: std::collections::VecDeque<Job>,
+    shutdown: bool,
+    in_flight: usize,
+}
+
+/// Handle to a value being computed on the pool.
+pub struct JobJoin<T> {
+    rx: Receiver<std::thread::Result<T>>,
+}
+
+impl<T> JobJoin<T> {
+    /// Block until the job finishes. Panics inside the job are surfaced as
+    /// an `Err` with the panic payload message.
+    pub fn join(self) -> Result<T, String> {
+        match self.rx.recv() {
+            Ok(Ok(v)) => Ok(v),
+            Ok(Err(panic)) => Err(panic_message(panic.as_ref())),
+            Err(_) => Err("worker dropped the job".to_string()),
+        }
+    }
+
+    /// Non-blocking poll; returns `None` while the job is still running.
+    pub fn try_join(&self) -> Option<Result<T, String>> {
+        match self.rx.try_recv() {
+            Ok(Ok(v)) => Some(Ok(v)),
+            Ok(Err(panic)) => Some(Err(panic_message(panic.as_ref()))),
+            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                Some(Err("worker dropped the job".to_string()))
+            }
+        }
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "job panicked".to_string()
+    }
+}
+
+/// Fixed-size thread pool. Dropping the pool waits for queued work.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Create a pool with `threads` workers (>= 1).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue {
+                jobs: Default::default(),
+                shutdown: false,
+                in_flight: 0,
+            }),
+            available: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("molers-worker-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Pool sized to the machine (leaving one core for the coordinator).
+    pub fn default_size() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get().saturating_sub(1).max(1))
+            .unwrap_or(4);
+        Self::new(n)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a closure; returns a join handle for its result.
+    pub fn submit<T, F>(&self, f: F) -> JobJoin<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx): (Sender<std::thread::Result<T>>, _) = channel();
+        let job: Job = Box::new(move || {
+            let result = catch_unwind(AssertUnwindSafe(f));
+            let _ = tx.send(result);
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.jobs.push_back(job);
+        }
+        self.shared.available.notify_one();
+        JobJoin { rx }
+    }
+
+    /// Run all closures and collect results in order.
+    pub fn map<T, F>(&self, fs: Vec<F>) -> Vec<Result<T, String>>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let joins: Vec<_> = fs.into_iter().map(|f| self.submit(f)).collect();
+        joins.into_iter().map(|j| j.join()).collect()
+    }
+
+    /// Number of queued + running jobs.
+    pub fn load(&self) -> usize {
+        let q = self.shared.queue.lock().unwrap();
+        q.jobs.len() + q.in_flight
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    q.in_flight += 1;
+                    break Some(job);
+                }
+                if q.shutdown {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(job) => {
+                job();
+                let mut q = shared.queue.lock().unwrap();
+                q.in_flight -= 1;
+            }
+            None => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_jobs_and_returns_values() {
+        let pool = ThreadPool::new(4);
+        let joins: Vec<_> = (0..32).map(|i| pool.submit(move || i * 2)).collect();
+        let out: Vec<usize> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        assert_eq!(out, (0..32).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallelism_actually_happens() {
+        let pool = ThreadPool::new(4);
+        let running = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let joins: Vec<_> = (0..8)
+            .map(|_| {
+                let (r, p) = (Arc::clone(&running), Arc::clone(&peak));
+                pool.submit(move || {
+                    let now = r.fetch_add(1, Ordering::SeqCst) + 1;
+                    p.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_millis(30));
+                    r.fetch_sub(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) >= 2);
+    }
+
+    #[test]
+    fn panics_are_reported_not_fatal() {
+        let pool = ThreadPool::new(2);
+        let bad = pool.submit(|| panic!("boom"));
+        assert_eq!(bad.join().unwrap_err(), "boom");
+        // the pool still works afterwards
+        assert_eq!(pool.submit(|| 7).join().unwrap(), 7);
+    }
+
+    #[test]
+    fn try_join_polls() {
+        let pool = ThreadPool::new(1);
+        let j = pool.submit(|| {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            1
+        });
+        assert!(j.try_join().is_none());
+        std::thread::sleep(std::time::Duration::from_millis(120));
+        assert_eq!(j.try_join().unwrap().unwrap(), 1);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let fs: Vec<_> = (0..10)
+            .map(|i| move || format!("r{i}"))
+            .collect();
+        let out = pool.map(fs);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.as_ref().unwrap(), &format!("r{i}"));
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Model exploration: samplings (DoE), replication, statistics.
+
+pub mod replication;
+pub mod sampling;
+pub mod statistics;
+
+pub use replication::replicate;
+pub use sampling::{
+    ExplicitSampling, Factor, FullFactorial, LhsSampling, ProductSampling,
+    Sampling, SeedSampling, UniformSampling,
+};
+pub use statistics::StatisticTask;

@@ -1,0 +1,68 @@
+//! `Replicate(model, seedFactor, statistic)` — the stochasticity-management
+//! pattern of paper §4.4: run the model under several independent seeds and
+//! summarise the outputs.
+
+use std::sync::Arc;
+
+use crate::core::Val;
+use crate::dsl::puzzle::{CapsuleId, Puzzle};
+use crate::dsl::task::{IdentityTask, Task};
+use crate::exploration::sampling::SeedSampling;
+
+/// Wire `entry -< model >- statistic` into `puzzle`, exploring `n`
+/// independent seeds. Returns (entry, model, statistic) capsule ids so the
+/// caller can attach hooks or environments.
+pub fn replicate(
+    puzzle: &mut Puzzle,
+    model: Arc<dyn Task>,
+    seed: &Val<u32>,
+    n: usize,
+    statistic: Arc<dyn Task>,
+) -> (CapsuleId, CapsuleId, CapsuleId) {
+    let entry = puzzle.capsule(Arc::new(IdentityTask::new("replicate-entry")));
+    let model_c = puzzle.capsule(model);
+    let stat_c = puzzle.capsule(statistic);
+    puzzle.explore(entry, Arc::new(SeedSampling::new(seed, n)), model_c);
+    puzzle.aggregate(model_c, stat_c);
+    puzzle.entry(entry);
+    (entry, model_c, stat_c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{val_f64, val_u32, Context};
+    use crate::dsl::task::ClosureTask;
+    use crate::environment::local::LocalEnvironment;
+    use crate::exploration::statistics::StatisticTask;
+    use crate::util::stats::Descriptor;
+    use crate::workflow::MoleExecution;
+
+    #[test]
+    fn replication_with_median() {
+        let seed = val_u32("seed");
+        let out = val_f64("out");
+        let med = val_f64("med");
+        // model output = seed mod 7 — deterministic per seed, varied across
+        let model = ClosureTask::new("m", {
+            let (seed, out) = (seed.clone(), out.clone());
+            move |ctx| {
+                let s = ctx.get(&seed)?;
+                Ok(Context::new().with(&out, f64::from(s % 7)))
+            }
+        })
+        .input(&seed)
+        .output(&out);
+        let stat = StatisticTask::new().statistic(&out, &med, Descriptor::Median);
+
+        let mut p = Puzzle::new();
+        replicate(&mut p, Arc::new(model), &seed, 5, Arc::new(stat));
+        let result = MoleExecution::new(p, Arc::new(LocalEnvironment::new(4)), 42)
+            .start()
+            .unwrap();
+        assert_eq!(result.outputs.len(), 1);
+        let m = result.outputs[0].get(&med).unwrap();
+        assert!((0.0..7.0).contains(&m));
+        assert_eq!(result.report.jobs, 1 + 5 + 1);
+    }
+}

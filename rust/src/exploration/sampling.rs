@@ -1,0 +1,343 @@
+//! Samplings: generators of parameter-set contexts (the paper's "generic
+//! tools to explore large parameter sets", §2).
+
+use std::sync::Arc;
+
+use crate::core::{Context, Val};
+use crate::util::Rng;
+
+/// A design of experiments: expands one context into many.
+pub trait Sampling: Send + Sync {
+    fn name(&self) -> &str;
+
+    /// Produce the sample contexts. Each is merged over the incoming
+    /// context by the engine before fan-out.
+    fn sample(&self, base: &Context, rng: &mut Rng) -> Vec<Context>;
+}
+
+/// One factor of a full-factorial design: `x in (lo to hi by step)`.
+#[derive(Clone)]
+pub struct Factor {
+    pub name: String,
+    pub lo: f64,
+    pub hi: f64,
+    pub step: f64,
+}
+
+impl Factor {
+    pub fn new(v: &Val<f64>, lo: f64, hi: f64, step: f64) -> Self {
+        assert!(step > 0.0, "factor step must be positive");
+        Factor {
+            name: v.name().to_string(),
+            lo,
+            hi,
+            step,
+        }
+    }
+
+    fn levels(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        let mut x = self.lo;
+        let eps = self.step * 1e-9;
+        while x <= self.hi + eps {
+            out.push(x.min(self.hi));
+            x += self.step;
+        }
+        out
+    }
+}
+
+/// Cartesian product of factor levels (`DirectSampling` x-product).
+pub struct FullFactorial {
+    factors: Vec<Factor>,
+}
+
+impl FullFactorial {
+    pub fn new(factors: Vec<Factor>) -> Self {
+        FullFactorial { factors }
+    }
+
+    pub fn size(&self) -> usize {
+        self.factors.iter().map(|f| f.levels().len()).product()
+    }
+}
+
+impl Sampling for FullFactorial {
+    fn name(&self) -> &str {
+        "FullFactorial"
+    }
+
+    fn sample(&self, base: &Context, _rng: &mut Rng) -> Vec<Context> {
+        let levels: Vec<Vec<f64>> = self.factors.iter().map(Factor::levels).collect();
+        let mut out = vec![base.clone()];
+        for (f, ls) in self.factors.iter().zip(&levels) {
+            let mut next = Vec::with_capacity(out.len() * ls.len());
+            for ctx in &out {
+                for &v in ls {
+                    let mut c = ctx.clone();
+                    c.set(&Val::<f64>::new(f.name.clone()), v);
+                    next.push(c);
+                }
+            }
+            out = next;
+        }
+        out
+    }
+}
+
+/// `x in UniformDistribution[Double]() take n` over given bounds.
+pub struct UniformSampling {
+    name: String,
+    lo: f64,
+    hi: f64,
+    n: usize,
+}
+
+impl UniformSampling {
+    pub fn new(v: &Val<f64>, lo: f64, hi: f64, n: usize) -> Self {
+        UniformSampling {
+            name: v.name().to_string(),
+            lo,
+            hi,
+            n,
+        }
+    }
+}
+
+impl Sampling for UniformSampling {
+    fn name(&self) -> &str {
+        "UniformSampling"
+    }
+
+    fn sample(&self, base: &Context, rng: &mut Rng) -> Vec<Context> {
+        (0..self.n)
+            .map(|_| {
+                base.clone()
+                    .with(&Val::<f64>::new(self.name.clone()), rng.range(self.lo, self.hi))
+            })
+            .collect()
+    }
+}
+
+/// Latin Hypercube over several dimensions: space-filling DoE.
+pub struct LhsSampling {
+    dims: Vec<(String, f64, f64)>,
+    n: usize,
+}
+
+impl LhsSampling {
+    pub fn new(dims: &[(&Val<f64>, f64, f64)], n: usize) -> Self {
+        LhsSampling {
+            dims: dims
+                .iter()
+                .map(|(v, lo, hi)| (v.name().to_string(), *lo, *hi))
+                .collect(),
+            n,
+        }
+    }
+}
+
+impl Sampling for LhsSampling {
+    fn name(&self) -> &str {
+        "LHS"
+    }
+
+    fn sample(&self, base: &Context, rng: &mut Rng) -> Vec<Context> {
+        // one shuffled stratum assignment per dimension
+        let mut strata: Vec<Vec<usize>> = Vec::with_capacity(self.dims.len());
+        for _ in &self.dims {
+            let mut idx: Vec<usize> = (0..self.n).collect();
+            rng.shuffle(&mut idx);
+            strata.push(idx);
+        }
+        (0..self.n)
+            .map(|i| {
+                let mut c = base.clone();
+                for (d, (name, lo, hi)) in self.dims.iter().enumerate() {
+                    let stratum = strata[d][i] as f64;
+                    let u = (stratum + rng.f64()) / self.n as f64;
+                    c.set(&Val::<f64>::new(name.clone()), lo + u * (hi - lo));
+                }
+                c
+            })
+            .collect()
+    }
+}
+
+/// `seed in (UniformDistribution[Int]() take n)` — the replication
+/// sampling of paper §4.4: n independent model seeds.
+pub struct SeedSampling {
+    name: String,
+    n: usize,
+}
+
+impl SeedSampling {
+    pub fn new(v: &Val<u32>, n: usize) -> Self {
+        SeedSampling {
+            name: v.name().to_string(),
+            n,
+        }
+    }
+}
+
+impl Sampling for SeedSampling {
+    fn name(&self) -> &str {
+        "SeedSampling"
+    }
+
+    fn sample(&self, base: &Context, rng: &mut Rng) -> Vec<Context> {
+        (0..self.n)
+            .map(|_| {
+                base.clone()
+                    .with(&Val::<u32>::new(self.name.clone()), rng.model_seed())
+            })
+            .collect()
+    }
+}
+
+/// Explicit list of contexts (CSV-style sampling).
+pub struct ExplicitSampling {
+    contexts: Vec<Context>,
+}
+
+impl ExplicitSampling {
+    pub fn new(contexts: Vec<Context>) -> Self {
+        ExplicitSampling { contexts }
+    }
+}
+
+impl Sampling for ExplicitSampling {
+    fn name(&self) -> &str {
+        "ExplicitSampling"
+    }
+
+    fn sample(&self, base: &Context, _rng: &mut Rng) -> Vec<Context> {
+        self.contexts
+            .iter()
+            .map(|c| {
+                let mut m = base.clone();
+                m.merge(c);
+                m
+            })
+            .collect()
+    }
+}
+
+/// Cartesian product of two samplings (`x` combinator of the DSL).
+pub struct ProductSampling {
+    a: Arc<dyn Sampling>,
+    b: Arc<dyn Sampling>,
+}
+
+impl ProductSampling {
+    pub fn new(a: Arc<dyn Sampling>, b: Arc<dyn Sampling>) -> Self {
+        ProductSampling { a, b }
+    }
+}
+
+impl Sampling for ProductSampling {
+    fn name(&self) -> &str {
+        "ProductSampling"
+    }
+
+    fn sample(&self, base: &Context, rng: &mut Rng) -> Vec<Context> {
+        let left = self.a.sample(base, rng);
+        let mut out = Vec::new();
+        for l in &left {
+            for r in self.b.sample(l, rng) {
+                out.push(r);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{val_f64, val_u32};
+
+    #[test]
+    fn full_factorial_covers_grid() {
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let s = FullFactorial::new(vec![
+            Factor::new(&x, 0.0, 1.0, 0.5),
+            Factor::new(&y, 0.0, 1.0, 1.0),
+        ]);
+        let mut rng = Rng::new(0);
+        let samples = s.sample(&Context::new(), &mut rng);
+        assert_eq!(samples.len(), 6); // 3 x-levels, 2 y-levels
+        assert_eq!(s.size(), 6);
+        assert!(samples
+            .iter()
+            .any(|c| c.get(&x).unwrap() == 1.0 && c.get(&y).unwrap() == 0.0));
+    }
+
+    #[test]
+    fn uniform_respects_bounds() {
+        let x = val_f64("x");
+        let s = UniformSampling::new(&x, 10.0, 20.0, 100);
+        let mut rng = Rng::new(1);
+        for c in s.sample(&Context::new(), &mut rng) {
+            let v = c.get(&x).unwrap();
+            assert!((10.0..20.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn lhs_stratifies_each_dimension() {
+        let x = val_f64("x");
+        let s = LhsSampling::new(&[(&x, 0.0, 1.0)], 10);
+        let mut rng = Rng::new(2);
+        let samples = s.sample(&Context::new(), &mut rng);
+        // exactly one sample per decile
+        let mut seen = [false; 10];
+        for c in &samples {
+            let v = c.get(&x).unwrap();
+            let bin = ((v * 10.0) as usize).min(9);
+            assert!(!seen[bin], "two samples in decile {bin}");
+            seen[bin] = true;
+        }
+    }
+
+    #[test]
+    fn seed_sampling_unique_seeds() {
+        let seed = val_u32("seed");
+        let s = SeedSampling::new(&seed, 50);
+        let mut rng = Rng::new(3);
+        let seeds: Vec<u32> = s
+            .sample(&Context::new(), &mut rng)
+            .iter()
+            .map(|c| c.get(&seed).unwrap())
+            .collect();
+        let mut dedup = seeds.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), seeds.len());
+    }
+
+    #[test]
+    fn product_is_cartesian() {
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let s = ProductSampling::new(
+            Arc::new(FullFactorial::new(vec![Factor::new(&x, 0.0, 1.0, 1.0)])),
+            Arc::new(FullFactorial::new(vec![Factor::new(&y, 0.0, 2.0, 1.0)])),
+        );
+        let mut rng = Rng::new(4);
+        assert_eq!(s.sample(&Context::new(), &mut rng).len(), 6);
+    }
+
+    #[test]
+    fn sampling_preserves_base_context(){
+        let x = val_f64("x");
+        let z = val_f64("z");
+        let s = UniformSampling::new(&x, 0.0, 1.0, 3);
+        let mut rng = Rng::new(5);
+        let base = Context::new().with(&z, 9.0);
+        for c in s.sample(&base, &mut rng) {
+            assert_eq!(c.get(&z).unwrap(), 9.0);
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! `StatisticTask` — aggregate replicated outputs with statistical
+//! descriptors (paper §4.4, Listing 3).
+
+use crate::core::{Context, Val};
+use crate::dsl::task::Task;
+use crate::error::Result;
+use crate::util::stats::Descriptor;
+
+/// One aggregation rule: `statistics += (food1, medNumberFood1, median)`.
+struct Rule {
+    input: String,
+    output: String,
+    descriptor: Descriptor,
+}
+
+/// Computes summary statistics over array variables produced by a
+/// replication's aggregation barrier.
+pub struct StatisticTask {
+    name: String,
+    rules: Vec<Rule>,
+}
+
+impl StatisticTask {
+    pub fn new() -> Self {
+        StatisticTask {
+            name: "statistic".into(),
+            rules: Vec::new(),
+        }
+    }
+
+    /// `statistics += (input, output, descriptor)`.
+    pub fn statistic(
+        mut self,
+        input: &Val<f64>,
+        output: &Val<f64>,
+        descriptor: Descriptor,
+    ) -> Self {
+        self.rules.push(Rule {
+            input: input.name().to_string(),
+            output: output.name().to_string(),
+            descriptor,
+        });
+        self
+    }
+}
+
+impl Default for StatisticTask {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Task for StatisticTask {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn inputs(&self) -> Vec<String> {
+        self.rules.iter().map(|r| r.input.clone()).collect()
+    }
+
+    fn outputs(&self) -> Vec<String> {
+        self.rules.iter().map(|r| r.output.clone()).collect()
+    }
+
+    fn cost_hint(&self) -> f64 {
+        0.0
+    }
+
+    fn run(&self, ctx: &Context) -> Result<Context> {
+        let mut out = Context::new();
+        for rule in &self.rules {
+            let xs: Vec<f64> = ctx.get(&Val::<Vec<f64>>::new(rule.input.clone()))?;
+            out.set(
+                &Val::<f64>::new(rule.output.clone()),
+                rule.descriptor.apply(&xs),
+            );
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::val_f64;
+    use crate::core::ValueType;
+    use crate::dsl::task::run_checked;
+
+    #[test]
+    fn computes_medians() {
+        let food1 = val_f64("food1");
+        let med1 = val_f64("medFood1");
+        let t = StatisticTask::new().statistic(&food1, &med1, Descriptor::Median);
+        let mut ctx = Context::new();
+        ctx.set_raw("food1", vec![5.0, 1.0, 3.0].into_value());
+        let out = run_checked(&t, &ctx).unwrap();
+        assert_eq!(out.get(&med1).unwrap(), 3.0);
+    }
+
+    #[test]
+    fn multiple_rules() {
+        let f = val_f64("f");
+        let m = val_f64("mean_f");
+        let s = val_f64("sd_f");
+        let t = StatisticTask::new()
+            .statistic(&f, &m, Descriptor::Mean)
+            .statistic(&f, &s, Descriptor::StdDev);
+        let mut ctx = Context::new();
+        ctx.set_raw("f", vec![2.0, 4.0].into_value());
+        let out = run_checked(&t, &ctx).unwrap();
+        assert_eq!(out.get(&m).unwrap(), 3.0);
+        assert!(out.get(&s).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn missing_array_is_error() {
+        let f = val_f64("f");
+        let m = val_f64("m");
+        let t = StatisticTask::new().statistic(&f, &m, Descriptor::Median);
+        assert!(run_checked(&t, &Context::new()).is_err());
+    }
+}

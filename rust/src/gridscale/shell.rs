@@ -1,0 +1,247 @@
+//! The simulated shell: implements each middleware's CLI surface against
+//! the in-process cluster simulator.
+//!
+//! Real GridScale executes `qsub`/`squeue`/... over an SSH connection; the
+//! [`SimShell`] is that connection's stand-in (DESIGN.md §3). It parses
+//! the command lines the adapters build, drives
+//! [`crate::environment::cluster::SimCluster`], and answers in each tool's
+//! authentic output format — so the adapters' parsers are exercised on
+//! both ends.
+
+use std::sync::{Arc, Mutex};
+
+use crate::environment::cluster::SimCluster;
+use crate::error::{Error, Result};
+use crate::gridscale::{CommandOutput, JobState, Shell};
+
+/// Which CLI dialect the simulated head node speaks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Flavor {
+    Pbs,
+    Slurm,
+    Sge,
+    Oar,
+    Condor,
+    Glite,
+}
+
+/// A simulated head node for one cluster.
+pub struct SimShell {
+    pub flavor: Flavor,
+    cluster: Arc<Mutex<SimCluster>>,
+}
+
+impl SimShell {
+    pub fn new(flavor: Flavor, cluster: Arc<Mutex<SimCluster>>) -> Self {
+        SimShell { flavor, cluster }
+    }
+
+    fn format_submit(&self, id: u64) -> String {
+        match self.flavor {
+            Flavor::Pbs => format!("{id}.headnode\n"),
+            Flavor::Slurm => format!("Submitted batch job {id}\n"),
+            Flavor::Sge => format!("Your job {id} (\"molers\") has been submitted\n"),
+            Flavor::Oar => format!("Generate a job key...\nOAR_JOB_ID={id}\n"),
+            Flavor::Condor => {
+                format!("Submitting job(s).\n1 job(s) submitted to cluster {id}.\n")
+            }
+            Flavor::Glite => {
+                format!(
+                    "Connecting to the service...\n\n\
+                     https://wms01.sim.egi.eu:9000/{id}\n"
+                )
+            }
+        }
+    }
+
+    fn format_status(&self, id: u64, state: JobState) -> String {
+        match self.flavor {
+            Flavor::Pbs => {
+                let code = match state {
+                    JobState::Submitted | JobState::Queued => "Q",
+                    JobState::Running => "R",
+                    JobState::Done => "C",
+                    JobState::Failed => "F",
+                };
+                format!("Job Id: {id}.headnode\n    job_state = {code}\n")
+            }
+            Flavor::Slurm => match state {
+                JobState::Submitted | JobState::Queued => "PENDING\n".into(),
+                JobState::Running => "RUNNING\n".into(),
+                JobState::Done => String::new(), // finished jobs leave squeue
+                JobState::Failed => "FAILED\n".into(),
+            },
+            Flavor::Sge => match state {
+                JobState::Submitted | JobState::Queued => {
+                    format!("{id} 0.5 molers user qw 07/10/2026 1\n")
+                }
+                JobState::Running => format!("{id} 0.5 molers user r 07/10/2026 node1 1\n"),
+                JobState::Done => String::new(),
+                JobState::Failed => format!("{id} 0.5 molers user Eqw 07/10/2026 1\n"),
+            },
+            Flavor::Oar => {
+                let s = match state {
+                    JobState::Submitted | JobState::Queued => "Waiting",
+                    JobState::Running => "Running",
+                    JobState::Done => "Terminated",
+                    JobState::Failed => "Error",
+                };
+                format!("{id}: {s}\n")
+            }
+            Flavor::Condor => match state {
+                JobState::Submitted | JobState::Queued => "1".into(),
+                JobState::Running => "2".into(),
+                JobState::Done => "4".into(),
+                JobState::Failed => "5".into(),
+            },
+            Flavor::Glite => {
+                let s = match state {
+                    JobState::Submitted => "Submitted",
+                    JobState::Queued => "Scheduled",
+                    JobState::Running => "Running",
+                    JobState::Done => "Done (Success)",
+                    JobState::Failed => "Aborted",
+                };
+                format!(
+                    "Status info for the Job\nCurrent Status:     {s}\n"
+                )
+            }
+        }
+    }
+
+    fn extract_id(&self, arg: &str) -> Result<u64> {
+        // accept `123`, `123.headnode`, or a gLite https URL ending in the id
+        let tail = arg.rsplit('/').next().unwrap_or(arg);
+        let digits: String = tail.chars().filter(|c| c.is_ascii_digit()).collect();
+        digits
+            .parse()
+            .map_err(|_| Error::GridScale(format!("bad job id `{arg}`")))
+    }
+}
+
+impl Shell for SimShell {
+    fn execute(&self, command: &str) -> Result<CommandOutput> {
+        let tokens: Vec<&str> = command.split_whitespace().collect();
+        let tool = *tokens
+            .first()
+            .ok_or_else(|| Error::GridScale("empty command".into()))?;
+        let ok = |stdout: String| {
+            Ok(CommandOutput {
+                status: 0,
+                stdout,
+                stderr: String::new(),
+            })
+        };
+        match tool {
+            "qsub" | "sbatch" | "oarsub" | "condor_submit" | "glite-wms-job-submit" => {
+                let id = self.cluster.lock().unwrap().create_job();
+                ok(self.format_submit(id))
+            }
+            "qstat" | "squeue" | "oarstat" | "condor_q" | "glite-wms-job-status" => {
+                // the job id is the first non-flag argument (skipping flag values)
+                let mut id_arg = None;
+                let mut skip_next = false;
+                for t in &tokens[1..] {
+                    if skip_next {
+                        skip_next = false;
+                        continue;
+                    }
+                    if t.starts_with('-') {
+                        skip_next = matches!(*t, "-j" | "-o" | "-format" | "-f");
+                        // `-f <id>` / `-j <id>` carry the id as the value
+                        if matches!(*t, "-j" | "-f") {
+                            skip_next = false;
+                        }
+                        continue;
+                    }
+                    id_arg = Some(*t);
+                    break;
+                }
+                let id_arg =
+                    id_arg.ok_or_else(|| Error::GridScale("no job id".into()))?;
+                let id = self.extract_id(id_arg)?;
+                let cluster = self.cluster.lock().unwrap();
+                let state = cluster.state_now(id)?;
+                ok(self.format_status(id, state))
+            }
+            "qdel" | "scancel" | "oardel" | "condor_rm" | "glite-wms-job-cancel" => {
+                let id_arg = tokens
+                    .iter()
+                    .skip(1)
+                    .find(|t| !t.starts_with('-'))
+                    .ok_or_else(|| Error::GridScale("no job id".into()))?;
+                let id = self.extract_id(id_arg)?;
+                self.cluster.lock().unwrap().cancel(id)?;
+                ok(String::new())
+            }
+            other => Err(Error::GridScale(format!("unknown tool `{other}`"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::environment::cluster::SimCluster;
+    use crate::gridscale::{
+        CondorAdapter, GliteAdapter, OarAdapter, PbsAdapter, SchedulerAdapter,
+        SgeAdapter, SlurmAdapter,
+    };
+
+    fn shell(flavor: Flavor) -> SimShell {
+        SimShell::new(flavor, Arc::new(Mutex::new(SimCluster::homogeneous(4, 1.0))))
+    }
+
+    fn submit_via<A: SchedulerAdapter>(adapter: &A, sh: &SimShell) -> String {
+        let out = sh.execute(&adapter.submit_command("/tmp/job.sh")).unwrap();
+        adapter.parse_submit(&out.stdout).unwrap()
+    }
+
+    #[test]
+    fn every_dialect_roundtrips_submit_and_status() {
+        // each (adapter, flavor) pair: submit → id → status → parse
+        let pbs = shell(Flavor::Pbs);
+        let id = submit_via(&PbsAdapter, &pbs);
+        let st = pbs.execute(&PbsAdapter.status_command(&id)).unwrap();
+        PbsAdapter.parse_status(&st.stdout).unwrap();
+
+        let slurm = shell(Flavor::Slurm);
+        let id = submit_via(&SlurmAdapter, &slurm);
+        let st = slurm.execute(&SlurmAdapter.status_command(&id)).unwrap();
+        SlurmAdapter.parse_status(&st.stdout).unwrap();
+
+        let sge = shell(Flavor::Sge);
+        let id = submit_via(&SgeAdapter, &sge);
+        let st = sge.execute(&SgeAdapter.status_command(&id)).unwrap();
+        SgeAdapter.parse_status(&st.stdout).unwrap();
+
+        let oar = shell(Flavor::Oar);
+        let id = submit_via(&OarAdapter, &oar);
+        let st = oar.execute(&OarAdapter.status_command(&id)).unwrap();
+        OarAdapter.parse_status(&st.stdout).unwrap();
+
+        let condor = shell(Flavor::Condor);
+        let id = submit_via(&CondorAdapter, &condor);
+        let st = condor.execute(&CondorAdapter.status_command(&id)).unwrap();
+        CondorAdapter.parse_status(&st.stdout).unwrap();
+
+        let glite = shell(Flavor::Glite);
+        let a = GliteAdapter::new("biomed");
+        let id = submit_via(&a, &glite);
+        assert!(id.starts_with("https://"));
+        let st = glite.execute(&a.status_command(&id)).unwrap();
+        a.parse_status(&st.stdout).unwrap();
+    }
+
+    #[test]
+    fn unknown_tool_rejected() {
+        assert!(shell(Flavor::Pbs).execute("rm -rf /").is_err());
+    }
+
+    #[test]
+    fn cancel_roundtrip() {
+        let sh = shell(Flavor::Slurm);
+        let id = submit_via(&SlurmAdapter, &sh);
+        sh.execute(&SlurmAdapter.cancel_command(&id)).unwrap();
+    }
+}

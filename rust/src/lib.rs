@@ -1,0 +1,57 @@
+//! # molers — an OpenMOLE-class workflow engine in Rust
+//!
+//! Reproduction of *"Model Exploration Using OpenMOLE — a workflow engine
+//! for large scale distributed design of experiments and parameter
+//! tuning"* (Reuillon, Leclaire, Passerat-Palmbach, 2015) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the workflow engine: typed dataflow, DSL,
+//!   DAG scheduler, exploration methods, NSGA-II / island evolution, and
+//!   simulated distributed environments (SSH, PBS/SGE/Slurm/OAR/Condor,
+//!   EGI) behind one [`environment::Environment`] trait.
+//! * **L2** — the NetLogo "Ants" model as a JAX computation, AOT-lowered
+//!   to HLO text (`python/compile/model.py`).
+//! * **L1** — the fused pheromone diffusion/evaporation Pallas kernel
+//!   (`python/compile/kernels/diffusion.py`).
+//!
+//! The [`runtime`] module loads the AOT artifacts via PJRT; Python never
+//! runs at workflow-execution time.
+//!
+//! See DESIGN.md for the full inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod bench;
+pub mod care;
+pub mod cli;
+pub mod core;
+pub mod dsl;
+pub mod environment;
+pub mod error;
+pub mod evolution;
+pub mod exec;
+pub mod exploration;
+pub mod gridscale;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workflow;
+
+pub use error::{Error, Result};
+
+/// Common imports for examples and downstream users.
+pub mod prelude {
+    pub use crate::core::{val_f64, val_i64, val_str, val_u32, Context, Val};
+    pub use crate::dsl::{
+        CaptureHook, ClosureTask, CsvHook, DisplayHook, Hook, IdentityTask,
+        Puzzle, Sink, Task, ToStringHook,
+    };
+    pub use crate::environment::{local::LocalEnvironment, Environment, Job};
+    pub use crate::exploration::{
+        replicate, Factor, FullFactorial, LhsSampling, Sampling, SeedSampling,
+        StatisticTask, UniformSampling,
+    };
+    pub use crate::util::{stats::Descriptor, Rng};
+    pub use crate::workflow::MoleExecution;
+    pub use crate::Result;
+}

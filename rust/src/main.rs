@@ -1,0 +1,351 @@
+//! `molers` — launcher for the OpenMOLE-paper reproduction.
+//!
+//! Subcommands mirror the paper's A-to-Z example (§4):
+//!   run        single model execution            (Listing 2)
+//!   replicate  n-seed replication + medians      (Listing 3)
+//!   calibrate  generational NSGA-II              (Listing 4)
+//!   island     island NSGA-II on a remote env    (Listing 5)
+//!   render     draw the ant world                (Figures 1–2)
+//!   envs       show the available environments
+//!
+//! `--env local|ssh|pbs|slurm|sge|oar|condor|egi` is the paper's
+//! one-line environment switch.
+
+use std::sync::Arc;
+
+use molers::cli::Args;
+use molers::environment::cluster::BatchEnvironment;
+use molers::environment::egi::EgiEnvironment;
+use molers::environment::local::LocalEnvironment;
+use molers::environment::ssh::SshEnvironment;
+use molers::environment::Environment;
+use molers::evolution::{
+    Evaluator, GenerationalGA, IslandConfig, IslandSteadyGA, Nsga2Config,
+    ReplicatedEvaluator,
+};
+use molers::exec::ThreadPool;
+use molers::metrics::throughput_per_hour;
+use molers::prelude::*;
+use molers::runtime::best_available_evaluator;
+use molers::sim::{render, AntParams, AntSim};
+
+fn environment(
+    name: &str,
+    nodes: usize,
+    pool: Arc<ThreadPool>,
+    seed: u64,
+) -> Arc<dyn Environment> {
+    match name {
+        "local" => Arc::new(LocalEnvironment::with_pool(pool)),
+        "ssh" => Arc::new(SshEnvironment::new("calc01", nodes, pool, seed)),
+        "pbs" => Arc::new(BatchEnvironment::pbs(nodes, pool, seed)),
+        "slurm" => Arc::new(BatchEnvironment::slurm(nodes, pool, seed)),
+        "sge" => Arc::new(BatchEnvironment::sge(nodes, pool, seed)),
+        "oar" => Arc::new(BatchEnvironment::oar(nodes, pool, seed)),
+        "condor" => Arc::new(BatchEnvironment::condor(nodes, pool, seed)),
+        "egi" => Arc::new(EgiEnvironment::new("biomed", nodes, pool, seed)),
+        other => {
+            eprintln!("unknown environment `{other}`; using local");
+            Arc::new(LocalEnvironment::with_pool(pool))
+        }
+    }
+}
+
+fn genome_bounds() -> (Val<f64>, Val<f64>, Vec<Val<f64>>) {
+    (
+        val_f64("gDiffusionRate"),
+        val_f64("gEvaporationRate"),
+        vec![
+            val_f64("medNumberFood1"),
+            val_f64("medNumberFood2"),
+            val_f64("medNumberFood3"),
+        ],
+    )
+}
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("replicate") => cmd_replicate(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        Some("island") => cmd_island(&args),
+        Some("render") => cmd_render(&args),
+        Some("envs") => cmd_envs(),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand `{o}`\n");
+            }
+            eprintln!(
+                "usage: molers <run|replicate|calibrate|island|render|envs> [options]\n\
+                 common options: --seed N --env local|ssh|pbs|slurm|sge|oar|condor|egi\n\
+                 run:       --population 125 --diffusion 50 --evaporation 50\n\
+                 replicate: --replications 5\n\
+                 calibrate: --mu 10 --lambda 10 --generations 100 --replications 5\n\
+                 island:    --islands 2000 --total-evals 200000 --sample 50 \
+                 --evals-per-island 100 --nodes 2000\n\
+                 render:    --ticks 400 --out world.ppm"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+type CmdResult = std::result::Result<(), Box<dyn std::error::Error>>;
+
+/// Listing 2: one model execution with explicit parameters.
+fn cmd_run(args: &Args) -> CmdResult {
+    let seed = args.u64("seed", 42)?;
+    let population = args.f64("population", 125.0)?;
+    let diffusion = args.f64("diffusion", 50.0)?;
+    let evaporation = args.f64("evaporation", 50.0)?;
+    let (evaluator, kind) = best_available_evaluator(1);
+    println!("evaluator: {kind}");
+    let t0 = std::time::Instant::now();
+    let fit = evaluator.evaluate(&[population, diffusion, evaporation], seed as u32)?;
+    println!(
+        "final-ticks-food1={} final-ticks-food2={} final-ticks-food3={}  ({:?})",
+        fit[0],
+        fit[1],
+        fit[2],
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+/// Listing 3: replication + median through the workflow engine.
+fn cmd_replicate(args: &Args) -> CmdResult {
+    let seed = args.u64("seed", 42)?;
+    let replications = args.usize("replications", 5)?;
+    let (evaluator, kind) = best_available_evaluator(1);
+    println!("evaluator: {kind}");
+
+    let seed_val = val_u32("seed");
+    let food = [val_f64("food1"), val_f64("food2"), val_f64("food3")];
+    let med = [
+        val_f64("medNumberFood1"),
+        val_f64("medNumberFood2"),
+        val_f64("medNumberFood3"),
+    ];
+    let diffusion = args.f64("diffusion", 50.0)?;
+    let evaporation = args.f64("evaporation", 50.0)?;
+    let population = args.f64("population", 125.0)?;
+
+    let model = {
+        let (seed_c, food_c) = (seed_val.clone(), food.clone());
+        let ev = Arc::clone(&evaluator);
+        ClosureTask::new("ants", move |ctx: &Context| {
+            let s = ctx.get(&seed_c)?;
+            let fit = ev.evaluate(&[population, diffusion, evaporation], s)?;
+            let mut out = Context::new();
+            for (f, v) in food_c.iter().zip(fit) {
+                out.set(f, v);
+            }
+            Ok(out)
+        })
+        .input(&seed_val)
+        .output(&food[0])
+        .output(&food[1])
+        .output(&food[2])
+    };
+    let mut stat = StatisticTask::new();
+    for (f, m) in food.iter().zip(&med) {
+        stat = stat.statistic(f, m, Descriptor::Median);
+    }
+
+    let mut puzzle = Puzzle::new();
+    let (_, model_c, stat_c) =
+        replicate(&mut puzzle, Arc::new(model), &seed_val, replications, Arc::new(stat));
+    puzzle.hook(model_c, Arc::new(ToStringHook::new(&["food1", "food2", "food3"])));
+    puzzle.hook(
+        stat_c,
+        Arc::new(ToStringHook::new(&[
+            "medNumberFood1",
+            "medNumberFood2",
+            "medNumberFood3",
+        ])),
+    );
+    let env: Arc<dyn Environment> = Arc::new(LocalEnvironment::new(4));
+    let result = MoleExecution::new(puzzle, env, seed).start()?;
+    println!("jobs={} wall={:?}", result.report.jobs, result.report.wall);
+    Ok(())
+}
+
+/// Listing 4: generational NSGA-II with replication-median fitness.
+fn cmd_calibrate(args: &Args) -> CmdResult {
+    let seed = args.u64("seed", 42)?;
+    let mu = args.usize("mu", 10)?;
+    let lambda = args.usize("lambda", 10)?;
+    let generations = args.usize("generations", 100)? as u32;
+    let replications = args.usize("replications", 5)?;
+    let nodes = args.usize("nodes", 8)?;
+    let pool = Arc::new(ThreadPool::default_size());
+    let env = environment(args.get_or("env", "local"), nodes, pool, seed);
+
+    let (base, kind) = best_available_evaluator(2);
+    println!("evaluator: {kind}, environment: {}", env.name());
+    let evaluator = Arc::new(ReplicatedEvaluator::new(base, replications));
+
+    let (d, e, objectives) = genome_bounds();
+    let obj_refs: Vec<&Val<f64>> = objectives.iter().collect();
+    let config = Nsga2Config::new(
+        mu,
+        &[(&d, 0.0, 99.0), (&e, 0.0, 99.0)],
+        &obj_refs,
+        0.01,
+    )?;
+    let ga = GenerationalGA::new(config, evaluator, lambda).on_generation(|g, pop| {
+        let best: f64 = pop
+            .iter()
+            .map(|i| i.objectives.iter().sum::<f64>())
+            .fold(f64::INFINITY, f64::min);
+        if g % 10 == 0 {
+            println!("Generation {g}: best objective sum {best:.1}");
+        }
+    });
+    let result = ga.run(env.as_ref(), generations, seed)?;
+    println!(
+        "\nevaluations={} virtual-makespan={:.0}s pareto-front:",
+        result.evaluations, result.virtual_makespan
+    );
+    for ind in &result.pareto_front {
+        println!(
+            "  diffusion={:6.2} evaporation={:6.2} -> [{:6.1} {:6.1} {:6.1}]",
+            ind.genome[0],
+            ind.genome[1],
+            ind.objectives[0],
+            ind.objectives[1],
+            ind.objectives[2]
+        );
+    }
+    Ok(())
+}
+
+/// Listing 5 + §4.6: island NSGA-II on the (simulated) EGI.
+fn cmd_island(args: &Args) -> CmdResult {
+    let seed = args.u64("seed", 42)?;
+    let mu = args.usize("mu", 200)?;
+    let islands = args.usize("islands", 64)?;
+    let total = args.u64("total-evals", 6400)?;
+    let sample = args.usize("sample", 50)?;
+    let per_island = args.u64("evals-per-island", 100)?;
+    let nodes = args.usize("nodes", islands)?;
+    let replications = args.usize("replications", 1)?;
+    let pool = Arc::new(ThreadPool::default_size());
+    let env = environment(args.get_or("env", "egi"), nodes, pool, seed);
+
+    let (base, kind) = best_available_evaluator(2);
+    println!("evaluator: {kind}, environment: {}", env.name());
+    let evaluator: Arc<dyn Evaluator> = if replications > 1 {
+        Arc::new(ReplicatedEvaluator::new(base, replications))
+    } else {
+        base
+    };
+
+    let (d, e, objectives) = genome_bounds();
+    let obj_refs: Vec<&Val<f64>> = objectives.iter().collect();
+    let config = Nsga2Config::new(
+        mu,
+        &[(&d, 0.0, 99.0), (&e, 0.0, 99.0)],
+        &obj_refs,
+        0.01,
+    )?;
+    let ga = IslandSteadyGA::new(
+        config,
+        IslandConfig {
+            concurrent_islands: islands,
+            total_evaluations: total,
+            island_sample: sample,
+            evals_per_island: per_island,
+        },
+        evaluator,
+    );
+    let t0 = std::time::Instant::now();
+    let result = ga.run(
+        env.as_ref(),
+        seed,
+        Some(Arc::new(|done, evals| {
+            if done % 16 == 0 {
+                println!("Generation {done} islands merged, {evals} evaluations");
+            }
+        })),
+    )?;
+    let stats = env.stats();
+    println!(
+        "\nislands={} evaluations={} wall={:?}\nvirtual makespan = {:.0} s \
+         -> {:.0} evaluations/virtual-hour (paper headline: 200,000/h on 2,000 islands)",
+        result.generations,
+        result.evaluations,
+        t0.elapsed(),
+        result.virtual_makespan,
+        throughput_per_hour(result.evaluations, result.virtual_makespan),
+    );
+    println!(
+        "env: submitted={} completed={} resubmissions={}",
+        stats.submitted, stats.completed, stats.resubmissions
+    );
+    println!("pareto front ({} points):", result.pareto_front.len());
+    for ind in result.pareto_front.iter().take(10) {
+        println!(
+            "  diffusion={:6.2} evaporation={:6.2} -> [{:6.1} {:6.1} {:6.1}]",
+            ind.genome[0],
+            ind.genome[1],
+            ind.objectives[0],
+            ind.objectives[1],
+            ind.objectives[2]
+        );
+    }
+    Ok(())
+}
+
+/// Figures 1–2: render the ant world after `--ticks` steps.
+fn cmd_render(args: &Args) -> CmdResult {
+    let seed = args.u64("seed", 42)?;
+    let ticks = args.usize("ticks", 400)?;
+    let params = AntParams {
+        population: args.f64("population", 125.0)?,
+        diffusion_rate: args.f64("diffusion", 50.0)?,
+        evaporation_rate: args.f64("evaporation", 10.0)?,
+    };
+    let mut sim = AntSim::new(params, seed);
+    for _ in 0..ticks {
+        sim.step();
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, render::ppm(&sim, 4))?;
+        println!("wrote {path}");
+    } else {
+        println!("{}", render::ascii(&sim));
+        println!(
+            "tick {} remaining food per source: {:?}",
+            sim.tick,
+            sim.remaining()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_envs() -> CmdResult {
+    println!(
+        "environments (switch with --env NAME — the paper's one-line change):\n\
+         \x20 local   threads on this machine (test small...)\n\
+         \x20 ssh     remote multi-core server over SSH          [simulated]\n\
+         \x20 pbs     PBS/Torque cluster via qsub/qstat          [simulated]\n\
+         \x20 slurm   Slurm cluster via sbatch/squeue            [simulated]\n\
+         \x20 sge     Sun Grid Engine via qsub/qstat             [simulated]\n\
+         \x20 oar     OAR cluster via oarsub/oarstat             [simulated]\n\
+         \x20 condor  HTCondor pool via condor_submit/condor_q   [simulated]\n\
+         \x20 egi     EGI grid via gLite WMS (...scale for free) [simulated]"
+    );
+    Ok(())
+}

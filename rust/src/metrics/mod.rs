@@ -1,0 +1,156 @@
+//! Lightweight metrics: counters, timers and throughput meters used by the
+//! coordinator, environments and the bench harness.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A monotonically increasing counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Online timing statistics (count / total / min / max) in nanoseconds.
+#[derive(Default)]
+pub struct Timer {
+    count: AtomicU64,
+    total_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Timer {
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos() as u64;
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.total_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Time a closure and record its duration.
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(t0.elapsed());
+        out
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn total(&self) -> Duration {
+        Duration::from_nanos(self.total_ns.load(Ordering::Relaxed))
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            Duration::ZERO
+        } else {
+            self.total() / c as u32
+        }
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns.load(Ordering::Relaxed))
+    }
+}
+
+/// Named registry for reporting.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, u64>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&self, name: &str, value: u64) {
+        self.counters.lock().unwrap().insert(name.to_string(), value);
+    }
+
+    pub fn add(&self, name: &str, value: u64) {
+        *self
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(0) += value;
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        self.counters.lock().unwrap().clone()
+    }
+
+    pub fn report(&self) -> String {
+        self.snapshot()
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Evaluations-per-virtual-hour meter — the unit of the paper's headline
+/// claim (200,000 individuals evaluated in one hour on EGI).
+pub fn throughput_per_hour(completed: u64, virtual_makespan_s: f64) -> f64 {
+    if virtual_makespan_s <= 0.0 {
+        return 0.0;
+    }
+    completed as f64 * 3600.0 / virtual_makespan_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_counts() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn timer_records() {
+        let t = Timer::default();
+        t.record(Duration::from_millis(2));
+        t.record(Duration::from_millis(4));
+        assert_eq!(t.count(), 2);
+        assert!(t.mean() >= Duration::from_millis(3));
+        assert!(t.max() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn registry_reports() {
+        let r = Registry::new();
+        r.add("jobs", 2);
+        r.add("jobs", 3);
+        r.set("nodes", 7);
+        assert_eq!(r.report(), "jobs=5 nodes=7");
+    }
+
+    #[test]
+    fn throughput_math() {
+        // 100 evals in 3600 virtual seconds = 100/hour
+        assert_eq!(throughput_per_hour(100, 3600.0), 100.0);
+        assert_eq!(throughput_per_hour(10, 0.0), 0.0);
+    }
+}

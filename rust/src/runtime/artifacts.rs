@@ -1,0 +1,171 @@
+//! Artifact manifest: what `make artifacts` produced (shapes, batch sizes,
+//! file names) — parsed from `artifacts/manifest.json` with the in-crate
+//! JSON parser.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+/// One lowered HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    /// Batch size of the vmapped fitness function (1 for the scalar one).
+    pub batch: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub world: usize,
+    pub max_ants: usize,
+    pub max_ticks: usize,
+    pub params: Vec<String>,
+    pub objectives: Vec<String>,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} (run `make artifacts`?): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let doc = json::parse(text)?;
+        let field = |name: &str| -> Result<&Json> {
+            doc.get(name)
+                .ok_or_else(|| Error::Manifest(format!("missing field `{name}`")))
+        };
+        let usize_field = |name: &str| -> Result<usize> {
+            field(name)?
+                .as_usize()
+                .ok_or_else(|| Error::Manifest(format!("field `{name}` not a number")))
+        };
+        let str_list = |name: &str| -> Result<Vec<String>> {
+            field(name)?
+                .as_arr()
+                .ok_or_else(|| Error::Manifest(format!("field `{name}` not an array")))?
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| Error::Manifest(format!("`{name}` has non-string")))
+                })
+                .collect()
+        };
+
+        let mut entries = Vec::new();
+        let artifacts = field("artifacts")?
+            .as_obj()
+            .ok_or_else(|| Error::Manifest("`artifacts` not an object".into()))?;
+        for (name, entry) in artifacts {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Manifest(format!("artifact `{name}` lacks file")))?;
+            let batch = entry.get("batch").and_then(Json::as_usize).unwrap_or(0);
+            entries.push(ArtifactEntry {
+                name: name.clone(),
+                file: dir.join(file),
+                batch,
+            });
+        }
+        entries.sort_by_key(|e| e.batch);
+
+        Ok(ArtifactManifest {
+            dir,
+            world: usize_field("world")?,
+            max_ants: usize_field("max_ants")?,
+            max_ticks: usize_field("max_ticks")?,
+            params: str_list("params")?,
+            objectives: str_list("objectives")?,
+            entries,
+        })
+    }
+
+    /// Fitness artifacts (batch >= 1), ascending by batch size.
+    pub fn fitness_entries(&self) -> impl Iterator<Item = &ArtifactEntry> {
+        self.entries.iter().filter(|e| e.batch >= 1)
+    }
+
+    /// The largest fitness batch size not exceeding `n` (falls back to the
+    /// smallest artifact).
+    pub fn best_batch_for(&self, n: usize) -> Option<&ArtifactEntry> {
+        self.fitness_entries()
+            .filter(|e| e.batch <= n.max(1))
+            .last()
+            .or_else(|| self.fitness_entries().next())
+    }
+
+    /// Locate the default artifact directory: `$MOLERS_ARTIFACTS` or
+    /// `artifacts/` relative to the working directory / crate root.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("MOLERS_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let cwd = PathBuf::from("artifacts");
+        if cwd.join("manifest.json").exists() {
+            return cwd;
+        }
+        // crate-root fallback (tests run from target dirs)
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// True if artifacts exist at the default location.
+    pub fn available() -> bool {
+        Self::default_dir().join("manifest.json").exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "world": 71, "max_ants": 200, "max_ticks": 1000,
+      "batch_sizes": [1, 8, 32],
+      "objectives": ["final-ticks-food1", "final-ticks-food2", "final-ticks-food3"],
+      "params": ["gpopulation", "gdiffusion-rate", "gevaporation-rate"],
+      "artifacts": {
+        "diffuse": {"file": "diffuse.hlo.txt"},
+        "ants_single": {"file": "ants_single.hlo.txt", "batch": 1},
+        "ants_batch8": {"file": "ants_batch8.hlo.txt", "batch": 8},
+        "ants_batch32": {"file": "ants_batch32.hlo.txt", "batch": 32}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/x")).unwrap();
+        assert_eq!(m.world, 71);
+        assert_eq!(m.max_ticks, 1000);
+        assert_eq!(m.objectives.len(), 3);
+        assert_eq!(m.fitness_entries().count(), 3);
+    }
+
+    #[test]
+    fn batch_selection_picks_largest_fitting() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/x")).unwrap();
+        assert_eq!(m.best_batch_for(100).unwrap().batch, 32);
+        assert_eq!(m.best_batch_for(10).unwrap().batch, 8);
+        assert_eq!(m.best_batch_for(3).unwrap().batch, 1);
+        assert_eq!(m.best_batch_for(0).unwrap().batch, 1);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(ArtifactManifest::parse("{}", PathBuf::from("/x")).is_err());
+    }
+}

@@ -1,0 +1,25 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt` (the AOT-lowered JAX+Pallas
+//! ant model) and serves evaluations to the L3 coordinator. Python never
+//! runs here — the artifacts are self-contained HLO text.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactEntry, ArtifactManifest};
+pub use pjrt::PjrtEvaluator;
+
+use std::sync::Arc;
+
+use crate::evolution::evaluator::{AntSimEvaluator, Evaluator};
+
+/// The production evaluator if artifacts are built, otherwise the
+/// pure-Rust twin — so every example/bench degrades gracefully.
+pub fn best_available_evaluator(workers: usize) -> (Arc<dyn Evaluator>, &'static str) {
+    if ArtifactManifest::available() {
+        match PjrtEvaluator::from_default_artifacts(workers) {
+            Ok(ev) => return (Arc::new(ev), "pjrt"),
+            Err(e) => eprintln!("pjrt unavailable ({e}); falling back to rust sim"),
+        }
+    }
+    (Arc::new(AntSimEvaluator::new()), "rust-sim")
+}

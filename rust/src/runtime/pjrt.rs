@@ -1,0 +1,353 @@
+//! The PJRT model runtime: loads the AOT HLO-text artifacts and serves
+//! fitness evaluations to the coordinator.
+//!
+//! Two constraints shape this module, both observed empirically against
+//! xla_extension 0.5.1 (see EXPERIMENTS.md §Perf):
+//!
+//! 1. the `xla` crate's `PjRtClient` is `Rc`-based — not `Send`;
+//! 2. creating more than one `TfrtCpuClient` in a process (even
+//!    sequentially) silently corrupts subsequent executions.
+//!
+//! So the runtime is a **process-global actor**: one service per artifact
+//! directory, owning one client + the compiled executables on a dedicated
+//! thread, drained through a request channel. The public [`PjrtEvaluator`]
+//! handle is `Send + Sync + Clone`, implements [`Evaluator`], and batches
+//! requests onto the largest fitting vmapped artifact (`ants_batch32` >
+//! `ants_batch8` > `ants_single`).
+
+use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::error::{Error, Result};
+use crate::evolution::evaluator::Evaluator;
+use crate::runtime::artifacts::ArtifactManifest;
+
+struct Request {
+    /// Full `[population, diffusion, evaporation]` genomes with seeds.
+    jobs: Vec<(Vec<f64>, u32)>,
+    reply: Sender<Result<Vec<Vec<f64>>>>,
+}
+
+/// Shared FIFO of pending requests.
+type Queue = Arc<(Mutex<VecDeque<Request>>, Condvar)>;
+
+/// One global service per artifact directory (never torn down — see module
+/// docs for why clients must not be recreated).
+struct Service {
+    queue: Queue,
+    manifest: ArtifactManifest,
+}
+
+fn services() -> &'static Mutex<HashMap<PathBuf, Arc<Service>>> {
+    static SERVICES: OnceLock<Mutex<HashMap<PathBuf, Arc<Service>>>> = OnceLock::new();
+    SERVICES.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn service_for(dir: PathBuf) -> Result<Arc<Service>> {
+    let mut map = services().lock().unwrap();
+    if let Some(s) = map.get(&dir) {
+        return Ok(Arc::clone(s));
+    }
+    let manifest = ArtifactManifest::load(&dir)?;
+    let queue: Queue = Arc::new((Mutex::new(VecDeque::new()), Condvar::new()));
+    let (ready_tx, ready_rx) = channel::<Result<()>>();
+    {
+        let queue = Arc::clone(&queue);
+        let manifest = manifest.clone();
+        std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || worker_main(queue, manifest, ready_tx))
+            .map_err(|e| Error::Runtime(format!("cannot spawn pjrt worker: {e}")))?;
+    }
+    ready_rx
+        .recv()
+        .map_err(|_| Error::Runtime("pjrt worker died during startup".into()))??;
+    let service = Arc::new(Service { queue, manifest });
+    map.insert(dir, Arc::clone(&service));
+    Ok(service)
+}
+
+/// Handle to the PJRT evaluation service. Cheap to clone; all clones share
+/// the process-global service for their artifact directory.
+#[derive(Clone)]
+pub struct PjrtEvaluator {
+    service: Arc<Service>,
+    /// Default ant population when genomes carry only the two §4.2 rates.
+    pub population: f64,
+    nominal_cost_s: f64,
+}
+
+impl PjrtEvaluator {
+    /// Connect to (or start) the service for `dir`. The `workers` argument
+    /// is accepted for API stability but the service is single-client by
+    /// necessity (see module docs).
+    pub fn new(dir: impl Into<PathBuf>, _workers: usize) -> Result<Self> {
+        let service = service_for(dir.into())?;
+        // cost model: nominal remote seconds per evaluation — the ~36 s
+        // NetLogo reference scaled by tick count (DESIGN.md §3)
+        let nominal = 36.0 * service.manifest.max_ticks as f64 / 1000.0;
+        Ok(PjrtEvaluator {
+            service,
+            population: 125.0,
+            nominal_cost_s: nominal,
+        })
+    }
+
+    /// Evaluator over the default artifact directory.
+    pub fn from_default_artifacts(workers: usize) -> Result<Self> {
+        Self::new(ArtifactManifest::default_dir(), workers)
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.service.manifest
+    }
+}
+
+impl Evaluator for PjrtEvaluator {
+    fn objectives(&self) -> usize {
+        self.service.manifest.objectives.len()
+    }
+
+    fn evaluate(&self, genome: &[f64], seed: u32) -> Result<Vec<f64>> {
+        let mut out = self.evaluate_batch(&[(genome.to_vec(), seed)])?;
+        out.pop()
+            .ok_or_else(|| Error::Runtime("empty batch result".into()))
+    }
+
+    fn evaluate_batch(&self, jobs: &[(Vec<f64>, u32)]) -> Result<Vec<Vec<f64>>> {
+        if jobs.is_empty() {
+            return Ok(Vec::new());
+        }
+        // normalise genomes to the full [population, diffusion, evaporation]
+        let jobs: Vec<(Vec<f64>, u32)> = jobs
+            .iter()
+            .map(|(g, s)| {
+                let full = match g.len() {
+                    2 => vec![self.population, g[0], g[1]],
+                    3 => g.clone(),
+                    n => {
+                        return Err(Error::Runtime(format!(
+                            "ant genome must have 2 or 3 parameters, got {n}"
+                        )))
+                    }
+                };
+                Ok((full, *s))
+            })
+            .collect::<Result<_>>()?;
+        let (reply, rx) = channel();
+        {
+            let (q, cv) = &*self.service.queue;
+            q.lock().unwrap().push_back(Request { jobs, reply });
+            cv.notify_one();
+        }
+        rx.recv()
+            .map_err(|_| Error::Runtime("pjrt worker dropped request".into()))?
+    }
+
+    fn nominal_cost_s(&self) -> f64 {
+        self.nominal_cost_s
+    }
+}
+
+/// A compiled fitness executable of one batch size.
+struct Compiled {
+    batch: usize,
+    exe: xla::PjRtLoadedExecutable,
+    /// Measured seconds per evaluation at this batch size (§Perf item 3):
+    /// vmapped artifacts are not automatically faster — on a single-core
+    /// host the batch-strided scatter/gathers make them *slower* per
+    /// evaluation — so the packer uses measured costs, not batch size.
+    per_eval_s: f64,
+}
+
+fn worker_main(queue: Queue, manifest: ArtifactManifest, ready: Sender<Result<()>>) {
+    // the single process-wide client + executables live on this thread
+    let setup = (|| -> Result<Vec<Compiled>> {
+        let client = xla::PjRtClient::cpu()?;
+        let mut compiled = Vec::new();
+        for entry in manifest.fitness_entries() {
+            let proto = xla::HloModuleProto::from_text_file(
+                entry.file.to_str().ok_or_else(|| {
+                    Error::Runtime(format!("non-utf8 path {:?}", entry.file))
+                })?,
+            )?;
+            let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+            compiled.push(Compiled {
+                batch: entry.batch,
+                exe,
+                per_eval_s: f64::INFINITY,
+            });
+        }
+        if compiled.is_empty() {
+            return Err(Error::Runtime("no fitness artifacts in manifest".into()));
+        }
+        // calibration: time one execution per batch size so run_jobs can
+        // pack onto whatever is empirically cheapest per evaluation
+        for c in &mut compiled {
+            let probe: Vec<(Vec<f64>, u32)> = (0..c.batch)
+                .map(|i| (vec![125.0, 50.0, 50.0], i as u32))
+                .collect();
+            let t0 = std::time::Instant::now();
+            execute_chunk(c, &probe)?;
+            c.per_eval_s = t0.elapsed().as_secs_f64() / c.batch as f64;
+        }
+        Ok(compiled)
+    })();
+    let compiled = match setup {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    loop {
+        let request = {
+            let (q, cv) = &*queue;
+            let mut guard = q.lock().unwrap();
+            loop {
+                if let Some(r) = guard.pop_front() {
+                    break r;
+                }
+                guard = cv.wait(guard).unwrap();
+            }
+        };
+        let result = run_jobs(&compiled, &request.jobs);
+        let _ = request.reply.send(result);
+    }
+}
+
+/// Execute a set of jobs, packing them onto the executables with the best
+/// *measured* per-evaluation cost (§Perf item 3). Among batch sizes that
+/// fit the remaining work, choose the cheapest per eval; a bigger batch is
+/// only used when its calibrated cost actually wins.
+fn run_jobs(compiled: &[Compiled], jobs: &[(Vec<f64>, u32)]) -> Result<Vec<Vec<f64>>> {
+    let mut out: Vec<Vec<f64>> = Vec::with_capacity(jobs.len());
+    let mut rest = jobs;
+    while !rest.is_empty() {
+        let c = compiled
+            .iter()
+            .filter(|c| c.batch <= rest.len())
+            .min_by(|a, b| a.per_eval_s.partial_cmp(&b.per_eval_s).unwrap())
+            .or_else(|| compiled.first()) // tail smaller than every batch
+            .unwrap();
+        let take = rest.len().min(c.batch);
+        let (chunk, tail) = rest.split_at(take);
+        out.extend(execute_chunk(c, chunk)?);
+        rest = tail;
+    }
+    Ok(out)
+}
+
+/// Run up to `c.batch` jobs on one executable, padding the tail with the
+/// last job (padding results are discarded).
+fn execute_chunk(c: &Compiled, chunk: &[(Vec<f64>, u32)]) -> Result<Vec<Vec<f64>>> {
+    let b = c.batch;
+    let mut params = Vec::with_capacity(b * 3);
+    let mut seeds: Vec<u32> = Vec::with_capacity(b);
+    for i in 0..b {
+        let (g, s) = &chunk[i.min(chunk.len() - 1)];
+        params.extend(g.iter().map(|&x| x as f32));
+        seeds.push(*s);
+    }
+    let result = if b == 1 {
+        let p = xla::Literal::vec1(&params);
+        let s = xla::Literal::scalar(seeds[0]);
+        c.exe.execute::<xla::Literal>(&[p, s])?
+    } else {
+        let p = xla::Literal::vec1(&params).reshape(&[b as i64, 3])?;
+        let s = xla::Literal::vec1(&seeds);
+        c.exe.execute::<xla::Literal>(&[p, s])?
+    };
+    let literal = result[0][0].to_literal_sync()?.to_tuple1()?;
+    let values = literal.to_vec::<f32>()?;
+    let n_obj = values.len() / b;
+    Ok(chunk
+        .iter()
+        .enumerate()
+        .map(|(i, _)| {
+            values[i * n_obj..(i + 1) * n_obj]
+                .iter()
+                .map(|&v| f64::from(v))
+                .collect()
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn evaluator() -> Option<PjrtEvaluator> {
+        if !ArtifactManifest::available() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(PjrtEvaluator::from_default_artifacts(1).unwrap())
+    }
+
+    #[test]
+    fn single_eval_matches_reference_run() {
+        let Some(ev) = evaluator() else { return };
+        // the value verified against jax in the build smoke test
+        let f = ev.evaluate(&[125.0, 50.0, 10.0], 42).unwrap();
+        assert_eq!(f, vec![175.0, 493.0, 924.0]);
+    }
+
+    #[test]
+    fn two_param_genome_uses_default_population() {
+        let Some(ev) = evaluator() else { return };
+        let f2 = ev.evaluate(&[50.0, 10.0], 42).unwrap();
+        let f3 = ev.evaluate(&[125.0, 50.0, 10.0], 42).unwrap();
+        assert_eq!(f2, f3);
+    }
+
+    #[test]
+    fn batch_results_match_singles() {
+        let Some(ev) = evaluator() else { return };
+        let jobs: Vec<(Vec<f64>, u32)> = (0..5)
+            .map(|i| (vec![125.0, 40.0 + f64::from(i), 10.0], 100 + i))
+            .collect();
+        let batch = ev.evaluate_batch(&jobs).unwrap();
+        for (j, want) in jobs.iter().zip(&batch) {
+            let single = ev.evaluate(&j.0, j.1).unwrap();
+            assert_eq!(&single, want);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let Some(ev) = evaluator() else { return };
+        let a = ev.evaluate(&[125.0, 60.0, 20.0], 7).unwrap();
+        let b = ev.evaluate(&[125.0, 60.0, 20.0], 7).unwrap();
+        assert_eq!(a, b);
+        let c = ev.evaluate(&[125.0, 60.0, 20.0], 8).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn concurrent_evaluations_consistent() {
+        let Some(ev) = evaluator() else { return };
+        let want = ev.evaluate(&[125.0, 50.0, 10.0], 42).unwrap();
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let ev = ev.clone();
+                std::thread::spawn(move || ev.evaluate(&[125.0, 50.0, 10.0], 42).unwrap())
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn bad_genome_length_rejected() {
+        let Some(ev) = evaluator() else { return };
+        assert!(ev.evaluate(&[1.0], 0).is_err());
+    }
+}

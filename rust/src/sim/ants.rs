@@ -1,0 +1,372 @@
+//! Pure-Rust port of the NetLogo "Ants" foraging model (paper §4.1).
+//!
+//! This is the coordinator-side twin of `python/compile/model.py`: same
+//! world geometry, same behaviours, same fitness definition. It serves
+//! three purposes:
+//!
+//! 1. **artifact-free baseline evaluator** — workflows and tests run
+//!    without `make artifacts`;
+//! 2. **cross-validation oracle** — integration tests compare its fitness
+//!    statistics against the PJRT-executed JAX model (different RNGs, so
+//!    the comparison is distributional, not bitwise);
+//! 3. **figure rendering** — Figures 1–2 of the paper are regenerated from
+//!    its state (see [`super::render`]).
+//!
+//! Unlike the JAX port (synchronous agent updates for vectorisation), this
+//! twin follows NetLogo's *sequential* `ask turtles`, which makes it the
+//! closer-to-reference implementation; DESIGN.md §7 discusses the
+//! difference.
+
+use crate::sim::world::Field;
+use crate::util::Rng;
+
+pub const WORLD: usize = 71;
+pub const HALF: i32 = 35;
+pub const MAX_TICKS_DEFAULT: u32 = 1000;
+const NEST_RADIUS: f64 = 5.0;
+const SOURCE_RADIUS: f64 = 5.0;
+/// Food source centres, NetLogo coords — identical to model.py SOURCES.
+pub const SOURCES: [(f64, f64); 3] = [(21.0, 0.0), (-21.0, -21.0), (-28.0, 28.0)];
+const CHEMICAL_DROP: f64 = 60.0;
+const SNIFF_LOW: f64 = 0.05;
+const SNIFF_HIGH: f64 = 2.0;
+const WIGGLE_MAX: f64 = 40.0;
+
+/// Model parameters (the calibration genome of §4.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AntParams {
+    pub population: f64,
+    pub diffusion_rate: f64,
+    pub evaporation_rate: f64,
+}
+
+impl Default for AntParams {
+    /// Paper Listing 2 defaults.
+    fn default() -> Self {
+        AntParams {
+            population: 125.0,
+            diffusion_rate: 50.0,
+            evaporation_rate: 50.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Ant {
+    x: f64,
+    y: f64,
+    heading: f64,
+    carrying: bool,
+}
+
+/// The full mutable simulation state.
+pub struct AntSim {
+    pub params: AntParams,
+    pub food: Field,
+    pub chemical: Field,
+    pub nest: Vec<bool>,
+    pub nest_scent: Field,
+    pub source_id: Vec<u8>,
+    ants: Vec<Ant>,
+    rng: Rng,
+    pub tick: u32,
+    /// First tick each source emptied (0 = not yet).
+    pub final_ticks: [u32; 3],
+}
+
+impl AntSim {
+    /// `setup`: nest, scent gradient, three food sources with 1-or-2 food
+    /// units per patch.
+    pub fn new(params: AntParams, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut food = Field::new(WORLD);
+        let mut nest_scent = Field::new(WORLD);
+        let mut nest = vec![false; WORLD * WORLD];
+        let mut source_id = vec![0u8; WORLD * WORLD];
+
+        for row in 0..WORLD {
+            for col in 0..WORLD {
+                let x = col as f64 - f64::from(HALF);
+                let y = row as f64 - f64::from(HALF);
+                let d_nest = (x * x + y * y).sqrt();
+                nest[row * WORLD + col] = d_nest < NEST_RADIUS;
+                nest_scent.set(row, col, 200.0 - d_nest);
+                for (i, (sx, sy)) in SOURCES.iter().enumerate() {
+                    let d = ((x - sx).powi(2) + (y - sy).powi(2)).sqrt();
+                    if d < SOURCE_RADIUS {
+                        source_id[row * WORLD + col] = i as u8 + 1;
+                    }
+                }
+            }
+        }
+        for row in 0..WORLD {
+            for col in 0..WORLD {
+                if source_id[row * WORLD + col] > 0 {
+                    // set food one-of [1 2]
+                    food.set(row, col, f64::from(rng.usize(2) as u32 + 1));
+                }
+            }
+        }
+
+        let n_ants = params.population.round().max(0.0) as usize;
+        let ants = (0..n_ants)
+            .map(|_| Ant {
+                x: 0.0,
+                y: 0.0,
+                heading: rng.range(0.0, 360.0),
+                carrying: false,
+            })
+            .collect();
+
+        AntSim {
+            params,
+            food,
+            chemical: Field::new(WORLD),
+            nest,
+            nest_scent,
+            source_id,
+            ants,
+            rng,
+            tick: 0,
+            final_ticks: [0; 3],
+        }
+    }
+
+    pub fn n_ants(&self) -> usize {
+        self.ants.len()
+    }
+
+    pub fn ant_positions(&self) -> Vec<(f64, f64, bool)> {
+        self.ants.iter().map(|a| (a.x, a.y, a.carrying)).collect()
+    }
+
+    fn in_world(x: f64, y: f64) -> bool {
+        x.abs() <= f64::from(HALF) && y.abs() <= f64::from(HALF)
+    }
+
+    fn scent_at_angle(field: &Field, ant: &Ant, angle: f64) -> f64 {
+        let rad = (ant.heading + angle).to_radians();
+        field.get_xy(ant.x + rad.sin(), ant.y + rad.cos())
+    }
+
+    /// `uphill-chemical` / `uphill-nest-scent`.
+    fn uphill(field: &Field, ant: &mut Ant) {
+        let ahead = Self::scent_at_angle(field, ant, 0.0);
+        let right = Self::scent_at_angle(field, ant, 45.0);
+        let left = Self::scent_at_angle(field, ant, -45.0);
+        if right > ahead || left > ahead {
+            ant.heading += if right > left { 45.0 } else { -45.0 };
+        }
+    }
+
+    /// One `go` tick: sequential per-ant behaviour, then diffuse/evaporate,
+    /// then the fitness latch (Listing 1's `compute-fitness`).
+    pub fn step(&mut self) {
+        self.tick += 1;
+        let n = self.ants.len();
+        for i in 0..n {
+            // `if who >= ticks [ stop ]` — staggered departure
+            if i as u32 >= self.tick {
+                break;
+            }
+            let mut ant = self.ants[i].clone();
+            let (row, col) = self.food.patch(ant.x, ant.y);
+            if !ant.carrying {
+                // look-for-food
+                if self.food.get(row, col) > 0.0 {
+                    self.food.set(row, col, self.food.get(row, col) - 1.0);
+                    ant.carrying = true;
+                    ant.heading += 180.0;
+                } else {
+                    let chem = self.chemical.get(row, col);
+                    if (SNIFF_LOW..SNIFF_HIGH).contains(&chem) {
+                        Self::uphill(&self.chemical, &mut ant);
+                    }
+                }
+            } else {
+                // return-to-nest
+                if self.nest[row * WORLD + col] {
+                    ant.carrying = false;
+                    ant.heading += 180.0;
+                } else {
+                    self.chemical.add_xy(ant.x, ant.y, CHEMICAL_DROP);
+                    Self::uphill(&self.nest_scent, &mut ant);
+                }
+            }
+            // wiggle
+            ant.heading += self.rng.range(0.0, WIGGLE_MAX);
+            ant.heading -= self.rng.range(0.0, WIGGLE_MAX);
+            // fd 1, bouncing off the world edge
+            let rad = ant.heading.to_radians();
+            let (nx, ny) = (ant.x + rad.sin(), ant.y + rad.cos());
+            if !Self::in_world(nx, ny) {
+                ant.heading += 180.0;
+            }
+            let rad = ant.heading.to_radians();
+            let (nx, ny) = (ant.x + rad.sin(), ant.y + rad.cos());
+            if Self::in_world(nx, ny) {
+                ant.x = nx;
+                ant.y = ny;
+            }
+            ant.heading = ant.heading.rem_euclid(360.0);
+            self.ants[i] = ant;
+        }
+
+        // patch updates
+        self.chemical.diffuse(self.params.diffusion_rate / 100.0);
+        self.chemical
+            .scale((100.0 - self.params.evaporation_rate) / 100.0);
+
+        // fitness latch
+        for s in 0..3u8 {
+            if self.final_ticks[s as usize] == 0 {
+                let remaining = self
+                    .food
+                    .sum_where(|r, c| self.source_id[r * WORLD + c] == s + 1);
+                if remaining <= 0.0 {
+                    self.final_ticks[s as usize] = self.tick;
+                }
+            }
+        }
+    }
+
+    /// Remaining food per source.
+    pub fn remaining(&self) -> [f64; 3] {
+        let mut out = [0.0; 3];
+        for (s, slot) in out.iter_mut().enumerate() {
+            *slot = self
+                .food
+                .sum_where(|r, c| self.source_id[r * WORLD + c] == s as u8 + 1);
+        }
+        out
+    }
+
+    /// Run to `max_ticks` (or all sources empty) and return the three
+    /// objectives: first-empty tick per source, `max_ticks` if never.
+    pub fn run(&mut self, max_ticks: u32) -> [f64; 3] {
+        while self.tick < max_ticks {
+            self.step();
+            if self.final_ticks.iter().all(|&t| t > 0) {
+                break;
+            }
+        }
+        let mut fit = [0.0; 3];
+        for (i, slot) in fit.iter_mut().enumerate() {
+            *slot = if self.final_ticks[i] == 0 {
+                f64::from(max_ticks)
+            } else {
+                f64::from(self.final_ticks[i])
+            };
+        }
+        fit
+    }
+}
+
+/// Convenience: evaluate the three objectives for a parameter set.
+pub fn evaluate(params: AntParams, seed: u64, max_ticks: u32) -> [f64; 3] {
+    AntSim::new(params, seed).run(max_ticks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn good_params() -> AntParams {
+        // persistent trails: the NetLogo slider defaults
+        AntParams {
+            population: 125.0,
+            diffusion_rate: 50.0,
+            evaporation_rate: 10.0,
+        }
+    }
+
+    #[test]
+    fn setup_builds_three_sources() {
+        let sim = AntSim::new(AntParams::default(), 1);
+        let rem = sim.remaining();
+        for (s, r) in rem.iter().enumerate() {
+            assert!(*r > 0.0, "source {s} empty at setup");
+        }
+        assert_eq!(sim.n_ants(), 125);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = evaluate(good_params(), 9, 400);
+        let b = evaluate(good_params(), 9, 400);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn seeds_vary_outcome() {
+        let a = evaluate(good_params(), 1, 400);
+        let b = evaluate(good_params(), 2, 400);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn forages_and_empties_near_source() {
+        let fit = evaluate(good_params(), 42, 800);
+        assert!(fit[0] < 800.0, "near source never emptied: {fit:?}");
+        assert!(fit[0] <= fit[2], "near source should empty first: {fit:?}");
+    }
+
+    #[test]
+    fn zero_population_never_forages() {
+        let p = AntParams {
+            population: 0.0,
+            ..good_params()
+        };
+        assert_eq!(evaluate(p, 3, 100), [100.0, 100.0, 100.0]);
+    }
+
+    #[test]
+    fn food_is_monotone_nonincreasing() {
+        let mut sim = AntSim::new(good_params(), 5);
+        let mut last = sim.food.sum();
+        for _ in 0..200 {
+            sim.step();
+            let now = sim.food.sum();
+            assert!(now <= last + 1e-9);
+            last = now;
+        }
+    }
+
+    #[test]
+    fn chemical_stays_nonnegative() {
+        let mut sim = AntSim::new(good_params(), 6);
+        for _ in 0..200 {
+            sim.step();
+        }
+        for r in 0..WORLD {
+            for c in 0..WORLD {
+                assert!(sim.chemical.get(r, c) >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn ants_remain_in_world() {
+        let mut sim = AntSim::new(good_params(), 7);
+        for _ in 0..300 {
+            sim.step();
+        }
+        for (x, y, _) in sim.ant_positions() {
+            assert!(x.abs() <= 35.0 && y.abs() <= 35.0);
+        }
+    }
+
+    #[test]
+    fn staggered_departure() {
+        let mut sim = AntSim::new(good_params(), 8);
+        for _ in 0..4 {
+            sim.step();
+        }
+        let moved = sim
+            .ant_positions()
+            .iter()
+            .filter(|(x, y, _)| x.abs() > 0.0 || y.abs() > 0.0)
+            .count();
+        assert!(moved <= 4);
+    }
+}

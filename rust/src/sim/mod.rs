@@ -1,0 +1,8 @@
+//! Agent-based simulation substrate + the Rust twin of the ant model.
+
+pub mod ants;
+pub mod render;
+pub mod world;
+
+pub use ants::{evaluate, AntParams, AntSim};
+pub use world::Field;

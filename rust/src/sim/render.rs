@@ -1,0 +1,109 @@
+//! Regenerate the paper's Figures 1–2: a view of the ant world (nest,
+//! three food sources, chemical trails, ants), as ASCII art for the
+//! terminal and as a PPM image for files.
+
+use crate::sim::ants::{AntSim, WORLD};
+
+/// ASCII rendering: `N` nest, `1`..`3` food sources (with food left),
+/// `a`/`A` ants (empty/carrying), `.`:`+`:`*` chemical intensity.
+pub fn ascii(sim: &AntSim) -> String {
+    let mut grid = vec![vec![' '; WORLD]; WORLD];
+    for r in 0..WORLD {
+        for c in 0..WORLD {
+            let chem = sim.chemical.get(r, c);
+            grid[r][c] = if chem > 10.0 {
+                '*'
+            } else if chem > 1.0 {
+                '+'
+            } else if chem > 0.05 {
+                '.'
+            } else {
+                ' '
+            };
+            let src = sim.source_id[r * WORLD + c];
+            if src > 0 && sim.food.get(r, c) > 0.0 {
+                grid[r][c] = char::from(b'0' + src);
+            }
+            if sim.nest[r * WORLD + c] {
+                grid[r][c] = 'N';
+            }
+        }
+    }
+    for (x, y, carrying) in sim.ant_positions() {
+        let (r, c) = sim.food.patch(x, y);
+        grid[r][c] = if carrying { 'A' } else { 'a' };
+    }
+    // flip vertically so +y is up, like NetLogo's view
+    let mut out = String::with_capacity(WORLD * (WORLD + 1));
+    for row in grid.iter().rev() {
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out
+}
+
+/// Binary PPM (P6) rendering at `scale` pixels per patch.
+pub fn ppm(sim: &AntSim, scale: usize) -> Vec<u8> {
+    let w = WORLD * scale;
+    let mut pixels = vec![[0u8, 0, 0]; WORLD * WORLD];
+    for r in 0..WORLD {
+        for c in 0..WORLD {
+            let chem = sim.chemical.get(r, c);
+            let g = (chem * 12.0).min(255.0) as u8;
+            let mut px = [0, g, 0];
+            let src = sim.source_id[r * WORLD + c];
+            if src > 0 && sim.food.get(r, c) > 0.0 {
+                px = match src {
+                    1 => [70, 130, 255],
+                    2 => [255, 200, 60],
+                    _ => [230, 60, 200],
+                };
+            }
+            if sim.nest[r * WORLD + c] {
+                px = [150, 90, 60];
+            }
+            pixels[r * WORLD + c] = px;
+        }
+    }
+    for (x, y, _) in sim.ant_positions() {
+        let (r, c) = sim.food.patch(x, y);
+        pixels[r * WORLD + c] = [255, 0, 0];
+    }
+    let mut out = format!("P6\n{w} {w}\n255\n").into_bytes();
+    for r in (0..WORLD).rev() {
+        for _ in 0..scale {
+            for c in 0..WORLD {
+                for _ in 0..scale {
+                    out.extend_from_slice(&pixels[r * WORLD + c]);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::ants::AntParams;
+
+    #[test]
+    fn ascii_shows_nest_and_sources() {
+        let sim = AntSim::new(AntParams::default(), 1);
+        let art = ascii(&sim);
+        assert!(art.contains('N'));
+        assert!(art.contains('1'));
+        assert!(art.contains('2'));
+        assert!(art.contains('3'));
+        assert_eq!(art.lines().count(), WORLD);
+    }
+
+    #[test]
+    fn ppm_has_correct_header_and_size() {
+        let sim = AntSim::new(AntParams::default(), 1);
+        let img = ppm(&sim, 2);
+        let header = format!("P6\n{0} {0}\n255\n", WORLD * 2);
+        assert!(img.starts_with(header.as_bytes()));
+        assert_eq!(img.len(), header.len() + (WORLD * 2) * (WORLD * 2) * 3);
+    }
+}

@@ -1,0 +1,9 @@
+//! Dependency-free utility substrates: RNG, JSON, statistics.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::Descriptor;

@@ -1,0 +1,118 @@
+//! Statistical descriptors used by `StatisticTask` (paper §4.4) and the
+//! bench harness.
+
+/// A summary statistic over replicated model outputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Descriptor {
+    Median,
+    Mean,
+    Min,
+    Max,
+    StdDev,
+    /// Median absolute deviation — robust spread estimate.
+    Mad,
+    /// q-quantile with 0 <= q <= 1 scaled by 100 (e.g. Quantile(90)).
+    Quantile(u8),
+}
+
+impl Descriptor {
+    pub fn name(&self) -> String {
+        match self {
+            Descriptor::Median => "median".into(),
+            Descriptor::Mean => "mean".into(),
+            Descriptor::Min => "min".into(),
+            Descriptor::Max => "max".into(),
+            Descriptor::StdDev => "stddev".into(),
+            Descriptor::Mad => "mad".into(),
+            Descriptor::Quantile(q) => format!("q{q}"),
+        }
+    }
+
+    /// Apply the descriptor. Empty input yields NaN.
+    pub fn apply(&self, xs: &[f64]) -> f64 {
+        if xs.is_empty() {
+            return f64::NAN;
+        }
+        match self {
+            Descriptor::Median => median(xs),
+            Descriptor::Mean => mean(xs),
+            Descriptor::Min => xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            Descriptor::Max => xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            Descriptor::StdDev => stddev(xs),
+            Descriptor::Mad => mad(xs),
+            Descriptor::Quantile(q) => quantile(xs, f64::from(*q) / 100.0),
+        }
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Median with linear interpolation for even lengths.
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Median absolute deviation.
+pub fn mad(xs: &[f64]) -> f64 {
+    let m = median(xs);
+    let devs: Vec<f64> = xs.iter().map(|x| (x - m).abs()).collect();
+    median(&devs)
+}
+
+/// Linear-interpolated quantile (type-7, the R/numpy default).
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    let h = (v.len() - 1) as f64 * q.clamp(0.0, 1.0);
+    let lo = h.floor() as usize;
+    let hi = h.ceil() as usize;
+    v[lo] + (h - lo as f64) * (v[hi] - v[lo])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs: Vec<f64> = (0..=100).map(f64::from).collect();
+        assert_eq!(quantile(&xs, 0.0), 0.0);
+        assert_eq!(quantile(&xs, 1.0), 100.0);
+        assert_eq!(quantile(&xs, 0.9), 90.0);
+    }
+
+    #[test]
+    fn descriptor_apply() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(Descriptor::Mean.apply(&xs), 2.5);
+        assert_eq!(Descriptor::Min.apply(&xs), 1.0);
+        assert_eq!(Descriptor::Max.apply(&xs), 4.0);
+        assert!((Descriptor::StdDev.apply(&xs) - 1.2909944).abs() < 1e-6);
+        assert!(Descriptor::Median.apply(&[]).is_nan());
+    }
+
+    #[test]
+    fn mad_robust_to_outlier() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 1000.0];
+        assert_eq!(Descriptor::Mad.apply(&xs), 1.0);
+    }
+}

@@ -1,0 +1,5 @@
+//! Workflow execution engine (the "mole execution").
+
+mod scheduler;
+
+pub use scheduler::{ExecutionReport, ExecutionResult, MoleExecution};

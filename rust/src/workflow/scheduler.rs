@@ -1,0 +1,409 @@
+//! The mole execution engine: runs a [`Puzzle`] by propagating dataflow
+//! through its transitions, delegating every task run to an
+//! [`Environment`].
+//!
+//! Fan-out/fan-in bookkeeping uses *tickets*, as in OpenMOLE: every work
+//! item carries a ticket; an explore transition mints a fresh group ticket
+//! and one child per sample; an aggregate transition collects all items
+//! whose nearest group ancestor matches, then resumes with the group's
+//! parent ticket. Nested explorations compose naturally.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::core::Context;
+use crate::dsl::puzzle::{CapsuleId, Puzzle, Transition};
+use crate::environment::{Environment, Job, JobHandle, JobReport};
+use crate::error::{Error, Result};
+use crate::util::Rng;
+
+/// A context waiting to run at a capsule.
+struct WorkItem {
+    capsule: CapsuleId,
+    ctx: Context,
+    ticket: u64,
+    virtual_release: f64,
+}
+
+#[derive(Clone, Copy)]
+struct TicketInfo {
+    parent: u64,
+    is_group: bool,
+}
+
+struct Barrier {
+    expected: usize,
+    members: Vec<Context>,
+    max_virtual_end: f64,
+    resume_ticket: u64,
+}
+
+/// Summary of one workflow execution.
+#[derive(Debug, Clone, Default)]
+pub struct ExecutionReport {
+    pub jobs: u64,
+    /// Max virtual completion time across all jobs (simulated makespan).
+    pub virtual_makespan: f64,
+    /// Sum of real execution durations.
+    pub real_cpu: Duration,
+    /// Real wall-clock of the whole execution.
+    pub wall: Duration,
+}
+
+/// Terminal outputs plus execution metrics.
+pub struct ExecutionResult {
+    pub outputs: Vec<Context>,
+    pub report: ExecutionReport,
+}
+
+/// Executes puzzles. `start(...)` consumes one initial context and runs the
+/// graph to quiescence.
+pub struct MoleExecution {
+    puzzle: Puzzle,
+    default_env: Arc<dyn Environment>,
+    rng: Rng,
+    /// Max jobs in flight at once (backpressure towards environments).
+    pub max_in_flight: usize,
+}
+
+impl MoleExecution {
+    pub fn new(puzzle: Puzzle, default_env: Arc<dyn Environment>, seed: u64) -> Self {
+        MoleExecution {
+            puzzle,
+            default_env,
+            rng: Rng::new(seed),
+            max_in_flight: 4096,
+        }
+    }
+
+    /// Run with an empty initial context.
+    pub fn start(self) -> Result<ExecutionResult> {
+        self.start_with(Context::new())
+    }
+
+    /// Run the puzzle to completion.
+    pub fn start_with(mut self, init: Context) -> Result<ExecutionResult> {
+        self.puzzle.validate()?;
+        let wall_start = std::time::Instant::now();
+
+        let mut tickets: HashMap<u64, TicketInfo> = HashMap::new();
+        let mut next_ticket: u64 = 1;
+        tickets.insert(0, TicketInfo { parent: 0, is_group: false });
+
+        let mut queue: VecDeque<WorkItem> = VecDeque::new();
+        let mut in_flight: Vec<(WorkItem, JobHandle)> = Vec::new();
+        let mut barriers: HashMap<(usize, u64), Barrier> = HashMap::new();
+        let mut group_size: HashMap<u64, usize> = HashMap::new();
+        let mut outputs: Vec<Context> = Vec::new();
+        let mut report = ExecutionReport::default();
+
+        queue.push_back(WorkItem {
+            capsule: self.puzzle.entry_capsule(),
+            ctx: init,
+            ticket: 0,
+            virtual_release: 0.0,
+        });
+
+        while !queue.is_empty() || !in_flight.is_empty() {
+            // submit as much as backpressure allows
+            while in_flight.len() < self.max_in_flight {
+                let Some(mut item) = queue.pop_front() else { break };
+                let capsule = &self.puzzle.capsules[item.capsule.0];
+                // sources run on the coordinator, just before delegation
+                for source in &capsule.sources {
+                    let injected = source.inject(&item.ctx)?;
+                    item.ctx.merge(&injected);
+                }
+                let env = capsule
+                    .environment
+                    .as_ref()
+                    .unwrap_or(&self.default_env)
+                    .clone();
+                let job = Job::new(Arc::clone(&capsule.task), item.ctx.clone())
+                    .released_at(item.virtual_release);
+                let handle = env.submit(job);
+                in_flight.push((item, handle));
+            }
+
+            // poll running jobs
+            let mut completed: Vec<(WorkItem, Context, JobReport)> = Vec::new();
+            let mut idx = 0;
+            while idx < in_flight.len() {
+                match in_flight[idx].1.try_wait() {
+                    Some(Ok((ctx, job_report))) => {
+                        let (item, _) = in_flight.swap_remove(idx);
+                        completed.push((item, ctx, job_report));
+                    }
+                    Some(Err(e)) => return Err(e),
+                    None => idx += 1,
+                }
+            }
+            if completed.is_empty() && !in_flight.is_empty() {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+
+            for (item, out_ctx, job_report) in completed {
+                report.jobs += 1;
+                report.real_cpu += job_report.real_exec;
+                if job_report.virtual_end > report.virtual_makespan {
+                    report.virtual_makespan = job_report.virtual_end;
+                }
+
+                // dataflow result visible downstream: inputs ∪ outputs
+                let mut merged = item.ctx.clone();
+                merged.merge(&out_ctx);
+
+                // hooks observe the merged context
+                for hook in &self.puzzle.capsules[item.capsule.0].hooks {
+                    hook.process(&merged)?;
+                }
+
+                if self.puzzle.is_terminal(item.capsule) {
+                    outputs.push(merged.clone());
+                    continue;
+                }
+
+                let transitions: Vec<usize> = self
+                    .puzzle
+                    .transitions
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| t.from() == item.capsule)
+                    .map(|(i, _)| i)
+                    .collect();
+
+                for t_idx in transitions {
+                    match &self.puzzle.transitions[t_idx] {
+                        Transition::Direct { to, .. } => {
+                            queue.push_back(WorkItem {
+                                capsule: *to,
+                                ctx: merged.clone(),
+                                ticket: item.ticket,
+                                virtual_release: job_report.virtual_end,
+                            });
+                        }
+                        Transition::Explore { to, sampling, .. } => {
+                            let samples = sampling.sample(&merged, &mut self.rng);
+                            let group = next_ticket;
+                            next_ticket += 1;
+                            tickets.insert(
+                                group,
+                                TicketInfo { parent: item.ticket, is_group: true },
+                            );
+                            group_size.insert(group, samples.len());
+                            if samples.is_empty() {
+                                return Err(Error::InvalidWorkflow(format!(
+                                    "sampling `{}` produced no samples",
+                                    sampling.name()
+                                )));
+                            }
+                            for s in samples {
+                                let child = next_ticket;
+                                next_ticket += 1;
+                                tickets.insert(
+                                    child,
+                                    TicketInfo { parent: group, is_group: false },
+                                );
+                                queue.push_back(WorkItem {
+                                    capsule: *to,
+                                    ctx: s,
+                                    ticket: child,
+                                    virtual_release: job_report.virtual_end,
+                                });
+                            }
+                        }
+                        Transition::Aggregate { to, .. } => {
+                            // nearest enclosing group of this item's ticket
+                            let group = nearest_group(&tickets, item.ticket)
+                                .ok_or_else(|| {
+                                    Error::InvalidWorkflow(
+                                        "aggregate reached without an enclosing \
+                                         exploration"
+                                            .into(),
+                                    )
+                                })?;
+                            let expected = *group_size.get(&group).unwrap_or(&0);
+                            let resume_ticket = tickets[&group].parent;
+                            let barrier = barriers
+                                .entry((t_idx, group))
+                                .or_insert_with(|| Barrier {
+                                    expected,
+                                    members: Vec::new(),
+                                    max_virtual_end: 0.0,
+                                    resume_ticket,
+                                });
+                            barrier.members.push(merged.clone());
+                            if job_report.virtual_end > barrier.max_virtual_end {
+                                barrier.max_virtual_end = job_report.virtual_end;
+                            }
+                            if barrier.members.len() == barrier.expected {
+                                let barrier = barriers.remove(&(t_idx, group)).unwrap();
+                                let agg = Context::aggregate(&barrier.members);
+                                queue.push_back(WorkItem {
+                                    capsule: *to,
+                                    ctx: agg,
+                                    ticket: barrier.resume_ticket,
+                                    virtual_release: barrier.max_virtual_end,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        if !barriers.is_empty() {
+            return Err(Error::InvalidWorkflow(
+                "execution finished with unfilled aggregation barriers".into(),
+            ));
+        }
+
+        report.wall = wall_start.elapsed();
+        Ok(ExecutionResult { outputs, report })
+    }
+}
+
+fn nearest_group(tickets: &HashMap<u64, TicketInfo>, mut t: u64) -> Option<u64> {
+    loop {
+        let info = tickets.get(&t)?;
+        if info.is_group {
+            return Some(t);
+        }
+        if t == 0 {
+            return None;
+        }
+        t = info.parent;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{val_f64, val_u32};
+    use crate::dsl::hook::CaptureHook;
+    use crate::dsl::task::{ClosureTask, IdentityTask};
+    use crate::environment::local::LocalEnvironment;
+    use crate::exploration::sampling::{Factor, FullFactorial, SeedSampling};
+
+    fn local() -> Arc<dyn Environment> {
+        Arc::new(LocalEnvironment::new(4))
+    }
+
+    #[test]
+    fn single_task_workflow() {
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let mut p = Puzzle::new();
+        let t = ClosureTask::new("sq", {
+            let (x, y) = (x.clone(), y.clone());
+            move |ctx| Ok(Context::new().with(&y, ctx.get(&x)?.powi(2)))
+        })
+        .input(&x)
+        .output(&y)
+        .default(&x, 5.0);
+        p.capsule(Arc::new(t));
+        let result = MoleExecution::new(p, local(), 1).start().unwrap();
+        assert_eq!(result.outputs.len(), 1);
+        assert_eq!(result.outputs[0].get(&y).unwrap(), 25.0);
+    }
+
+    #[test]
+    fn explore_aggregate_roundtrip() {
+        // entry -< model (x^2) >- collect
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let mut p = Puzzle::new();
+        let entry = p.capsule(Arc::new(IdentityTask::new("entry")));
+        let model = p.capsule(Arc::new(
+            ClosureTask::new("sq", {
+                let (x, y) = (x.clone(), y.clone());
+                move |ctx| Ok(Context::new().with(&y, ctx.get(&x)?.powi(2)))
+            })
+            .input(&x)
+            .output(&y),
+        ));
+        let collect = p.capsule(Arc::new(IdentityTask::new("collect")));
+        let sampling = FullFactorial::new(vec![Factor::new(&x, 0.0, 3.0, 1.0)]);
+        p.explore(entry, Arc::new(sampling), model);
+        p.aggregate(model, collect);
+
+        let result = MoleExecution::new(p, local(), 2).start().unwrap();
+        assert_eq!(result.outputs.len(), 1);
+        let mut ys = result.outputs[0].get(&y.array()).unwrap();
+        ys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(ys, vec![0.0, 1.0, 4.0, 9.0]);
+        assert_eq!(result.report.jobs, 2 + 4); // entry + 4 models + collect
+    }
+
+    #[test]
+    fn hooks_fire_per_job() {
+        let seed = val_u32("seed");
+        let mut p = Puzzle::new();
+        let entry = p.capsule(Arc::new(IdentityTask::new("entry")));
+        let model = p.capsule(Arc::new(IdentityTask::new("model")));
+        let done = p.capsule(Arc::new(IdentityTask::new("done")));
+        let capture = Arc::new(CaptureHook::new());
+        p.hook(model, capture.clone());
+        p.explore(entry, Arc::new(SeedSampling::new(&seed, 5)), model);
+        p.aggregate(model, done);
+        MoleExecution::new(p, local(), 3).start().unwrap();
+        assert_eq!(capture.len(), 5);
+    }
+
+    #[test]
+    fn nested_exploration() {
+        // entry -< mid -< leaf >- inner_agg >- outer_agg
+        let a = val_f64("a");
+        let b = val_f64("b");
+        let mut p = Puzzle::new();
+        let entry = p.capsule(Arc::new(IdentityTask::new("entry")));
+        let mid = p.capsule(Arc::new(IdentityTask::new("mid")));
+        let leaf = p.capsule(Arc::new(IdentityTask::new("leaf")));
+        let inner_agg = p.capsule(Arc::new(IdentityTask::new("inner_agg")));
+        let outer_agg = p.capsule(Arc::new(IdentityTask::new("outer_agg")));
+        p.explore(
+            entry,
+            Arc::new(FullFactorial::new(vec![Factor::new(&a, 0.0, 1.0, 1.0)])),
+            mid,
+        );
+        p.explore(
+            mid,
+            Arc::new(FullFactorial::new(vec![Factor::new(&b, 0.0, 2.0, 1.0)])),
+            leaf,
+        );
+        p.aggregate(leaf, inner_agg);
+        p.aggregate(inner_agg, outer_agg);
+        let result = MoleExecution::new(p, local(), 4).start().unwrap();
+        assert_eq!(result.outputs.len(), 1);
+        // outer aggregation: 2 inner results, each an array of 3 b values
+        let bs = result.outputs[0].get(&b.array().array()).unwrap();
+        assert_eq!(bs.len(), 2);
+        assert_eq!(bs[0].len(), 3);
+    }
+
+    #[test]
+    fn direct_chain_propagates_virtual_time() {
+        let mut p = Puzzle::new();
+        let a = p.capsule(Arc::new(IdentityTask::new("a")));
+        let b = p.capsule(Arc::new(IdentityTask::new("b")));
+        let c = p.capsule(Arc::new(IdentityTask::new("c")));
+        p.direct(a, b);
+        p.direct(b, c);
+        let result = MoleExecution::new(p, local(), 5).start().unwrap();
+        assert_eq!(result.report.jobs, 3);
+        assert_eq!(result.outputs.len(), 1);
+    }
+
+    #[test]
+    fn task_failure_aborts() {
+        let mut p = Puzzle::new();
+        p.capsule(Arc::new(ClosureTask::new("bad", |_| {
+            Err(Error::TaskFailed {
+                task: "bad".into(),
+                message: "expected".into(),
+            })
+        })));
+        assert!(MoleExecution::new(p, local(), 6).start().is_err());
+    }
+}

@@ -1,0 +1,81 @@
+//! End-to-end CLI tests: drive the `molers` launcher binary the way a
+//! user would (paper §4's A-to-Z flow at smoke scale).
+
+use std::process::Command;
+
+fn molers() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_molers"))
+}
+
+#[test]
+fn envs_lists_all_environments() {
+    let out = molers().arg("envs").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for env in ["local", "ssh", "pbs", "slurm", "sge", "oar", "condor", "egi"] {
+        assert!(text.contains(env), "missing env `{env}` in listing");
+    }
+}
+
+#[test]
+fn no_subcommand_prints_usage() {
+    let out = molers().output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("usage: molers"));
+}
+
+#[test]
+fn unknown_subcommand_fails_with_usage() {
+    let out = molers().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+}
+
+#[test]
+fn render_writes_ppm() {
+    let path = std::env::temp_dir().join(format!("molers-cli-{}.ppm", std::process::id()));
+    let out = molers()
+        .args(["render", "--ticks", "60", "--out"])
+        .arg(&path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let bytes = std::fs::read(&path).unwrap();
+    assert!(bytes.starts_with(b"P6\n"), "not a PPM file");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn render_ascii_shows_world() {
+    let out = molers().args(["render", "--ticks", "30"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains('N'), "nest missing from ascii render");
+    assert!(text.contains("remaining food per source"));
+}
+
+#[test]
+fn run_falls_back_without_artifacts() {
+    // point the runtime at an empty artifact dir: the rust-sim twin takes over
+    let out = molers()
+        .env("MOLERS_ARTIFACTS", "/nonexistent-artifacts")
+        .args(["run", "--seed", "7", "--evaporation", "10"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("evaluator: rust-sim"));
+    assert!(text.contains("final-ticks-food1="));
+}
+
+#[test]
+fn bad_option_value_is_a_clean_error() {
+    let out = molers()
+        .env("MOLERS_ARTIFACTS", "/nonexistent-artifacts")
+        .args(["run", "--seed", "notanumber"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("expects an integer"));
+}

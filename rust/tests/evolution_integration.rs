@@ -1,0 +1,201 @@
+//! Integration: evolution drivers against the real ant model (Rust twin)
+//! and the simulated environments — the paper's §4.5/§4.6 claims in shape.
+
+use std::sync::Arc;
+
+use molers::environment::egi::EgiEnvironment;
+use molers::evolution::{
+    AntSimEvaluator, CountingEvaluator, Evaluator, GenerationalGA, IslandConfig,
+    IslandSteadyGA, Nsga2Config, ReplicatedEvaluator, SteadyStateGA, Termination,
+    Zdt1Evaluator,
+};
+use molers::exec::ThreadPool;
+use molers::prelude::*;
+
+fn ant_config(mu: usize) -> Nsga2Config {
+    let d = val_f64("gDiffusionRate");
+    let e = val_f64("gEvaporationRate");
+    let m1 = val_f64("med1");
+    let m2 = val_f64("med2");
+    let m3 = val_f64("med3");
+    Nsga2Config::new(mu, &[(&d, 0.0, 99.0), (&e, 0.0, 99.0)], &[&m1, &m2, &m3], 0.01)
+        .unwrap()
+}
+
+#[test]
+fn calibration_improves_ant_foraging() {
+    // Listing 4 scaled down: the GA must find parameters that forage
+    // dramatically better than the paper's (50, 50) defaults
+    let evaluator = Arc::new(AntSimEvaluator::fast());
+    let default_fit: f64 = evaluator
+        .evaluate(&[50.0, 50.0], 11)
+        .unwrap()
+        .iter()
+        .sum();
+    let env = LocalEnvironment::new(4);
+    let ga = GenerationalGA::new(ant_config(8), evaluator, 8);
+    let result = ga.run(&env, 8, 42).unwrap();
+    let best: f64 = result
+        .population
+        .iter()
+        .map(|i| i.objectives.iter().sum::<f64>())
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        best < default_fit,
+        "calibration ({best}) should beat defaults ({default_fit})"
+    );
+    // calibrated solutions lean on persistent trails: low evaporation
+    let front_best = result
+        .pareto_front
+        .iter()
+        .min_by(|a, b| {
+            a.objectives
+                .iter()
+                .sum::<f64>()
+                .partial_cmp(&b.objectives.iter().sum::<f64>())
+                .unwrap()
+        })
+        .unwrap();
+    assert!(
+        front_best.genome[1] < 50.0,
+        "best evaporation-rate should be below the default: {:?}",
+        front_best.genome
+    );
+}
+
+#[test]
+fn replicated_fitness_is_more_stable_generationally() {
+    // §4.4's rationale inside the GA: median-of-5 fitness varies less
+    // between reevaluations than single-draw fitness
+    let base = Arc::new(AntSimEvaluator::fast());
+    let single = Arc::clone(&base) as Arc<dyn Evaluator>;
+    let replicated: Arc<dyn Evaluator> =
+        Arc::new(ReplicatedEvaluator::new(Arc::clone(&base) as _, 5));
+    let genome = [60.0, 12.0];
+    let spread = |ev: &Arc<dyn Evaluator>| -> f64 {
+        let fits: Vec<f64> = (0..8)
+            .map(|s| ev.evaluate(&genome, s).unwrap()[0])
+            .collect();
+        let max = fits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let min = fits.iter().cloned().fold(f64::INFINITY, f64::min);
+        max - min
+    };
+    assert!(
+        spread(&replicated) <= spread(&single),
+        "replication must not widen the fitness spread"
+    );
+}
+
+#[test]
+fn island_model_runs_ant_calibration_on_egi() {
+    // Listing 5 scaled down, with REAL ant evaluations inside the islands
+    let pool = Arc::new(ThreadPool::new(4));
+    let env = EgiEnvironment::new("biomed", 8, pool, 5);
+    let counting = Arc::new(CountingEvaluator::new(AntSimEvaluator::fast()));
+    let ga = IslandSteadyGA::new(
+        ant_config(20),
+        IslandConfig {
+            concurrent_islands: 8,
+            total_evaluations: 160,
+            island_sample: 10,
+            evals_per_island: 20,
+        },
+        Arc::clone(&counting) as _,
+    );
+    let result = ga.run(&env, 42, None).unwrap();
+    assert_eq!(result.evaluations, 160);
+    assert_eq!(counting.count(), 160);
+    assert_eq!(result.generations, 8, "8 islands of 20 evals");
+    assert!(!result.pareto_front.is_empty());
+    // virtual time: each island ~20 evals x 9 s nominal on heterogeneous
+    // nodes, 8 concurrent -> makespan far below the serial 8x
+    let serial = 160.0 * 9.0;
+    assert!(
+        result.virtual_makespan < serial,
+        "islands must overlap in virtual time: {} vs serial {serial}",
+        result.virtual_makespan
+    );
+}
+
+#[test]
+fn islands_beat_per_evaluation_delegation_on_grid() {
+    // §4.6's actual claim: "Islands are better suited to exploit
+    // distributed computing resources than classical generational genetic
+    // algorithms." The mechanism: an island is ONE grid job bundling many
+    // evaluations, so grid brokering latency (~minutes on EGI) is paid
+    // once per island rather than once per evaluation, and there is no
+    // global generation barrier. Same budget, same grid model — the island
+    // run's virtual makespan must be several times smaller.
+    let budget = 320u64;
+    let nodes = 8usize;
+    let evaluator = Arc::new(Zdt1Evaluator { dim: 2 }); // 1 s nominal/eval
+    let cfg = {
+        let x0 = val_f64("x0");
+        let x1 = val_f64("x1");
+        let f1 = val_f64("f1");
+        let f2 = val_f64("f2");
+        Nsga2Config::new(16, &[(&x0, 0.0, 1.0), (&x1, 0.0, 1.0)], &[&f1, &f2], 0.0)
+            .unwrap()
+    };
+    let pool = Arc::new(ThreadPool::new(4));
+
+    // generational GA delegating every evaluation as its own grid job
+    let env_g = EgiEnvironment::new("biomed", nodes, Arc::clone(&pool), 61);
+    let generational = GenerationalGA::new(cfg.clone(), Arc::clone(&evaluator) as _, 16);
+    let g = generational
+        .run(&env_g, (budget / 16 - 1) as u32, 3)
+        .unwrap()
+        .virtual_makespan;
+
+    // island model: 8 concurrent islands of 40 evaluations each
+    let env_i = EgiEnvironment::new("biomed", nodes, pool, 62);
+    let islands = IslandSteadyGA::new(
+        cfg,
+        IslandConfig {
+            concurrent_islands: nodes,
+            total_evaluations: budget,
+            island_sample: 8,
+            evals_per_island: 40,
+        },
+        Arc::clone(&evaluator) as _,
+    );
+    let i = islands.run(&env_i, 3, None).unwrap().virtual_makespan;
+
+    assert!(
+        i * 2.0 < g,
+        "islands ({i:.0} s) must be at least 2x faster than per-evaluation \
+         generational delegation ({g:.0} s) on the grid"
+    );
+}
+
+#[test]
+fn deterministic_island_runs_under_same_seed() {
+    let evaluator = Arc::new(Zdt1Evaluator { dim: 2 });
+    let run = |seed: u64| {
+        let env = LocalEnvironment::new(1); // single worker: deterministic order
+        let ga = IslandSteadyGA::new(
+            {
+                let x0 = val_f64("x0");
+                let x1 = val_f64("x1");
+                let f1 = val_f64("f1");
+                let f2 = val_f64("f2");
+                Nsga2Config::new(8, &[(&x0, 0.0, 1.0), (&x1, 0.0, 1.0)], &[&f1, &f2], 0.0)
+                    .unwrap()
+            },
+            IslandConfig {
+                concurrent_islands: 1,
+                total_evaluations: 40,
+                island_sample: 4,
+                evals_per_island: 10,
+            },
+            Arc::clone(&evaluator) as _,
+        );
+        let r = ga.run(&env, seed, None).unwrap();
+        let mut objs: Vec<Vec<f64>> =
+            r.population.iter().map(|i| i.objectives.clone()).collect();
+        objs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        objs
+    };
+    assert_eq!(run(9), run(9));
+    assert_ne!(run(9), run(10));
+}

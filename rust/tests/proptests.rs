@@ -1,0 +1,364 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! aggregation, selection). The `proptest` crate is not vendored in this
+//! image, so these use a seeded-random harness: each property is checked
+//! over many generated cases and failures print the offending seed.
+
+use std::sync::Arc;
+
+use molers::care::{reexec, Dependency, KernelVersion, Manifest};
+use molers::environment::cluster::SimCluster;
+use molers::evolution::{nsga2, Bounds, Individual, Operators};
+use molers::prelude::*;
+use molers::util::stats;
+
+/// Run `prop` over `cases` generated inputs; panic with the seed on failure.
+fn forall(cases: u64, prop: impl Fn(&mut Rng)) {
+    for case in 0..cases {
+        let mut rng = Rng::new(0xC0FFEE ^ case);
+        prop(&mut rng); // assertion failures name the case via panic payload
+    }
+}
+
+fn random_population(rng: &mut Rng, n: usize, objectives: usize) -> Vec<Individual> {
+    (0..n)
+        .map(|_| {
+            Individual::new(
+                vec![rng.f64(), rng.f64()],
+                (0..objectives).map(|_| rng.range(0.0, 10.0)).collect(),
+            )
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- NSGA-II
+
+#[test]
+fn prop_fronts_partition_population() {
+    forall(50, |rng| {
+        let (n, m) = (1 + rng.usize(40), 1 + rng.usize(3));
+        let pop = random_population(rng, n, m);
+        let fronts = nsga2::fast_non_dominated_sort(&pop);
+        let mut seen: Vec<usize> = fronts.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..pop.len()).collect::<Vec<_>>(), "partition");
+    });
+}
+
+#[test]
+fn prop_front_zero_is_nondominated_and_earlier_fronts_dominate_later() {
+    forall(50, |rng| {
+        let n = 2 + rng.usize(30);
+        let pop = random_population(rng, n, 2);
+        let fronts = nsga2::fast_non_dominated_sort(&pop);
+        for &i in &fronts[0] {
+            for &j in &fronts[0] {
+                assert!(!pop[i].dominates(&pop[j]) || i == j, "front0 internal dominance");
+            }
+        }
+        // every member of front k>0 is dominated by someone in front k-1
+        for k in 1..fronts.len() {
+            for &j in &fronts[k] {
+                assert!(
+                    fronts[k - 1].iter().any(|&i| pop[i].dominates(&pop[j])),
+                    "front {k} member {j} not dominated by front {}",
+                    k - 1
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_selection_keeps_mu_and_never_drops_front0_when_it_fits() {
+    forall(50, |rng| {
+        let n = 5 + rng.usize(30);
+        let pop = random_population(rng, n, 2);
+        let mu = 1 + rng.usize(pop.len());
+        let front0: Vec<Vec<f64>> = nsga2::pareto_front(&pop)
+            .into_iter()
+            .map(|i| i.objectives)
+            .collect();
+        let kept = nsga2::select(pop, mu);
+        assert_eq!(kept.len(), mu);
+        if front0.len() <= mu {
+            for objs in &front0 {
+                assert!(
+                    kept.iter().any(|i| &i.objectives == objs),
+                    "front-0 member evicted though it fit"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_breeding_respects_bounds() {
+    let d = val_f64("d");
+    let e = val_f64("e");
+    let bounds = Bounds::new(&[(&d, -3.0, 7.0), (&e, 0.0, 99.0)]).unwrap();
+    let ops = Operators::default();
+    forall(200, |rng| {
+        let a = bounds.random(rng);
+        let b = bounds.random(rng);
+        let child = ops.breed(&a, &b, &bounds, rng);
+        assert!(bounds.contains(&child), "child out of bounds: {child:?}");
+    });
+}
+
+// ----------------------------------------------------------- scheduling
+
+#[test]
+fn prop_cluster_schedule_no_node_overlap() {
+    forall(30, |rng| {
+        let nodes = 1 + rng.usize(6);
+        let mut cluster = SimCluster::homogeneous(nodes, 1.0);
+        let mut per_node: Vec<Vec<(f64, f64)>> = vec![Vec::new(); nodes];
+        for _ in 0..40 {
+            let id = cluster.create_job();
+            let release = rng.range(0.0, 50.0);
+            let exec = rng.range(0.1, 20.0);
+            let s = cluster.schedule(id, release, exec, 1e9, None).unwrap();
+            assert!(s.start >= release - 1e-9, "started before release");
+            per_node[s.node].push((s.start, s.end));
+        }
+        for intervals in &mut per_node {
+            intervals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in intervals.windows(2) {
+                assert!(w[0].1 <= w[1].0 + 1e-9, "overlap on a node: {w:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_work_conservation_makespan_bounds() {
+    // makespan of m equal jobs on n nodes is between total/n and
+    // total/n + one job (greedy earliest-free assignment, equal sizes)
+    forall(30, |rng| {
+        let nodes = 1 + rng.usize(8);
+        let jobs = 1 + rng.usize(50);
+        let exec = rng.range(0.5, 10.0);
+        let mut cluster = SimCluster::homogeneous(nodes, 1.0);
+        let mut makespan = 0.0f64;
+        for _ in 0..jobs {
+            let id = cluster.create_job();
+            let s = cluster.schedule(id, 0.0, exec, 1e9, None).unwrap();
+            makespan = makespan.max(s.end);
+        }
+        let lower = exec * jobs as f64 / nodes as f64;
+        assert!(makespan >= lower - 1e-9, "{makespan} < {lower}");
+        assert!(makespan <= lower + exec + 1e-9, "{makespan} > {}", lower + exec);
+    });
+}
+
+// ----------------------------------------------------------- aggregation
+
+#[test]
+fn prop_context_aggregate_preserves_order_and_length() {
+    let v = val_f64("v");
+    forall(50, |rng| {
+        let n = 1 + rng.usize(20);
+        let values: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let ctxs: Vec<Context> = values
+            .iter()
+            .map(|&x| Context::new().with(&v, x))
+            .collect();
+        let agg = Context::aggregate(&ctxs);
+        assert_eq!(agg.get(&v.array()).unwrap(), values);
+    });
+}
+
+#[test]
+fn prop_statistics_descriptors_within_range() {
+    forall(100, |rng| {
+        let n = 1 + rng.usize(30);
+        let xs: Vec<f64> = (0..n).map(|_| rng.range(-100.0, 100.0)).collect();
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        for d in [
+            Descriptor::Median,
+            Descriptor::Mean,
+            Descriptor::Quantile(25),
+            Descriptor::Quantile(90),
+        ] {
+            let v = d.apply(&xs);
+            assert!(
+                (lo - 1e-9..=hi + 1e-9).contains(&v),
+                "{d:?} = {v} outside [{lo}, {hi}]"
+            );
+        }
+        assert!(stats::stddev(&xs) >= 0.0);
+    });
+}
+
+// ----------------------------------------------------------- workflow
+
+#[test]
+fn prop_random_linear_workflows_run_to_completion() {
+    // random chains of add/mul tasks compute the same value as a direct
+    // fold, whatever the chain length
+    let x = val_f64("x");
+    forall(25, |rng| {
+        let len = 1 + rng.usize(8);
+        let ops: Vec<(bool, f64)> = (0..len)
+            .map(|_| (rng.bool(0.5), rng.range(1.0, 3.0)))
+            .collect();
+        let mut p = Puzzle::new();
+        let mut prev = None;
+        for (is_add, k) in ops.clone() {
+            let x2 = x.clone();
+            let c = p.capsule(Arc::new(
+                ClosureTask::new("op", move |ctx: &Context| {
+                    let v = ctx.get(&x2)?;
+                    Ok(Context::new().with(&x2, if is_add { v + k } else { v * k }))
+                })
+                .input(&x)
+                .output(&x),
+            ));
+            if let Some(prev) = prev {
+                p.direct(prev, c);
+            } else {
+                p.entry(c);
+            }
+            prev = Some(c);
+        }
+        let r = MoleExecution::new(p, Arc::new(LocalEnvironment::new(2)), 1)
+            .start_with(Context::new().with(&x, 1.0))
+            .unwrap();
+        let want = ops
+            .iter()
+            .fold(1.0, |v, (add, k)| if *add { v + k } else { v * k });
+        let got = r.outputs[0].get(&x).unwrap();
+        assert!((got - want).abs() < 1e-9, "{got} != {want}");
+    });
+}
+
+// ----------------------------------------------------------- packaging
+
+#[test]
+fn prop_care_always_reexecutes_cde_monotone_in_kernel() {
+    forall(60, |rng| {
+        let kernels = [
+            KernelVersion(2, 6, 18),
+            KernelVersion(2, 6, 32),
+            KernelVersion(3, 10, 0),
+            KernelVersion(4, 4, 0),
+        ];
+        let packaged = kernels[rng.usize(kernels.len())];
+        let manifest = Manifest::new("app", "./app", packaged)
+            .with(Dependency::lib("/lib/libc.so.6", "2.17"));
+        let host_kernel = kernels[rng.usize(kernels.len())];
+        let host = reexec::RemoteHost::new("h", host_kernel);
+        // CARE: always succeeds
+        assert!(reexec::reexecute(&manifest, reexec::Packager::Care, &host).is_success());
+        // CDE: succeeds iff host kernel >= packaging kernel
+        let cde_ok =
+            reexec::reexecute(&manifest, reexec::Packager::Cde, &host).is_success();
+        assert_eq!(cde_ok, host_kernel >= packaged);
+    });
+}
+
+// ----------------------------------------------------------- samplings
+
+#[test]
+fn prop_lhs_stratifies_every_dimension() {
+    use molers::exploration::{LhsSampling, Sampling};
+    let x = val_f64("x");
+    let y = val_f64("y");
+    forall(20, |rng| {
+        let n = 4 + rng.usize(12);
+        let s = LhsSampling::new(&[(&x, 0.0, 1.0), (&y, -5.0, 5.0)], n);
+        let samples = s.sample(&Context::new(), rng);
+        assert_eq!(samples.len(), n);
+        for (val, lo, hi) in [(&x, 0.0, 1.0), (&y, -5.0, 5.0)] {
+            let mut seen = vec![false; n];
+            for c in &samples {
+                let v = c.get(val).unwrap();
+                assert!((lo..hi).contains(&v), "outside bounds");
+                let bin = (((v - lo) / (hi - lo) * n as f64) as usize).min(n - 1);
+                assert!(!seen[bin], "two samples in stratum {bin}");
+                seen[bin] = true;
+            }
+            assert!(seen.iter().all(|&b| b), "stratum unfilled");
+        }
+    });
+}
+
+#[test]
+fn prop_full_factorial_size_matches_level_product() {
+    use molers::exploration::{Factor, FullFactorial, Sampling};
+    let x = val_f64("x");
+    let y = val_f64("y");
+    forall(30, |rng| {
+        let sx = rng.range(0.1, 5.0);
+        let sy = rng.range(0.1, 5.0);
+        let s = FullFactorial::new(vec![
+            Factor::new(&x, 0.0, 10.0, sx),
+            Factor::new(&y, 0.0, 10.0, sy),
+        ]);
+        let samples = s.sample(&Context::new(), rng);
+        assert_eq!(samples.len(), s.size());
+        // no duplicate points
+        let mut pts: Vec<(u64, u64)> = samples
+            .iter()
+            .map(|c| {
+                (
+                    c.get(&x).unwrap().to_bits(),
+                    c.get(&y).unwrap().to_bits(),
+                )
+            })
+            .collect();
+        pts.sort_unstable();
+        let before = pts.len();
+        pts.dedup();
+        assert_eq!(pts.len(), before, "duplicate factorial points");
+    });
+}
+
+#[test]
+fn prop_reevaluation_average_converges_to_true_mean() {
+    use molers::evolution::Individual;
+    forall(40, |rng| {
+        let true_mean = rng.range(-10.0, 10.0);
+        let mut ind = Individual::new(vec![], vec![true_mean + rng.range(-1.0, 1.0)]);
+        let n = 50;
+        let mut sum = ind.objectives[0];
+        for _ in 1..n {
+            let draw = true_mean + rng.range(-1.0, 1.0);
+            sum += draw;
+            ind.absorb_reevaluation(&[draw]);
+        }
+        let expect = sum / n as f64;
+        assert!(
+            (ind.objectives[0] - expect).abs() < 1e-9,
+            "running average drifted: {} vs {expect}",
+            ind.objectives[0]
+        );
+        assert_eq!(ind.evaluations, n);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_trees() {
+    use molers::util::json::{parse, Json};
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.usize(4) } else { rng.usize(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.range(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => Json::Str(format!("s{}-\"quoted\"\n", rng.usize(1000))),
+            4 => Json::Arr((0..rng.usize(4)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.usize(4))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(60, |rng| {
+        let doc = gen(rng, 3);
+        let text = doc.to_string();
+        let parsed = parse(&text).unwrap_or_else(|e| panic!("reparse failed: {e}\n{text}"));
+        assert_eq!(parsed, doc, "roundtrip mismatch for {text}");
+    });
+}

@@ -1,0 +1,241 @@
+//! Integration: the workflow engine over simulated distributed
+//! environments — the paper's Listings 2/3 shapes end to end.
+
+use std::sync::Arc;
+
+use molers::environment::cluster::{BatchEnvironment, InfraModel};
+use molers::environment::egi::EgiEnvironment;
+use molers::environment::ssh::SshEnvironment;
+use molers::exec::ThreadPool;
+use molers::prelude::*;
+use molers::sim::{evaluate, AntParams};
+
+fn ant_task(
+    seed: &Val<u32>,
+    food: &[Val<f64>; 3],
+    max_ticks: u32,
+) -> Arc<ClosureTask> {
+    let (s, f) = (seed.clone(), food.clone());
+    let (s2, f2) = (seed.clone(), food.clone());
+    Arc::new(
+        ClosureTask::new("ants", move |ctx: &Context| {
+            let fit = evaluate(
+                AntParams {
+                    population: 125.0,
+                    diffusion_rate: 50.0,
+                    evaporation_rate: 10.0,
+                },
+                u64::from(ctx.get(&s)?),
+                max_ticks,
+            );
+            let mut out = Context::new();
+            for (fv, v) in f.iter().zip(fit) {
+                out.set(fv, v);
+            }
+            Ok(out)
+        })
+        .input(&s2)
+        .output(&f2[0])
+        .output(&f2[1])
+        .output(&f2[2])
+        .cost(36.0),
+    )
+}
+
+#[test]
+fn listing3_replication_on_slurm_cluster() {
+    // the full Listing 3 workflow, but the model capsule delegated to a
+    // simulated Slurm cluster (the §2.2 one-line switch)
+    let seed = val_u32("seed");
+    let food = [val_f64("food1"), val_f64("food2"), val_f64("food3")];
+    let med = [val_f64("med1"), val_f64("med2"), val_f64("med3")];
+    let mut stat = StatisticTask::new();
+    for (f, m) in food.iter().zip(&med) {
+        stat = stat.statistic(f, m, Descriptor::Median);
+    }
+    let mut p = Puzzle::new();
+    let (_, model_c, _) = replicate(
+        &mut p,
+        ant_task(&seed, &food, 150) as Arc<dyn Task>,
+        &seed,
+        5,
+        Arc::new(stat),
+    );
+    let pool = Arc::new(ThreadPool::new(4));
+    let slurm = Arc::new(BatchEnvironment::slurm(4, pool, 9));
+    p.on(model_c, slurm.clone());
+    let capture = Arc::new(CaptureHook::new());
+    p.hook(model_c, capture.clone());
+
+    let result = MoleExecution::new(p, Arc::new(LocalEnvironment::new(2)), 42)
+        .start()
+        .unwrap();
+
+    assert_eq!(result.outputs.len(), 1);
+    assert_eq!(capture.len(), 5, "five replications ran");
+    let m1 = result.outputs[0].get(&med[0]).unwrap();
+    assert!(m1 > 0.0 && m1 <= 150.0);
+    // the five model jobs went through the cluster, not the local env
+    assert_eq!(slurm.stats().completed, 5);
+    // cluster virtual time includes 5 x 36 s of work on 4 nodes
+    assert!(result.report.virtual_makespan >= 36.0 * 2.0 - 1e-6);
+}
+
+#[test]
+fn doe_fanout_on_egi_with_failures() {
+    // full-factorial exploration delegated to a flaky grid: every sample
+    // must still come back exactly once (resubmission machinery)
+    let x = val_f64("x");
+    let y = val_f64("y");
+    let task = Arc::new(
+        ClosureTask::new("sq", {
+            let (x, y) = (x.clone(), y.clone());
+            move |ctx: &Context| Ok(Context::new().with(&y, ctx.get(&x)?.powi(2)))
+        })
+        .input(&x)
+        .output(&y)
+        .cost(10.0),
+    );
+    let pool = Arc::new(ThreadPool::new(4));
+    let egi = Arc::new(
+        EgiEnvironment::new("biomed", 8, pool, 17).with_infra(InfraModel {
+            failure_rate: 0.3,
+            max_retries: 10,
+            ..InfraModel::grid()
+        }),
+    );
+
+    let mut p = Puzzle::new();
+    let entry = p.capsule(Arc::new(IdentityTask::new("entry")));
+    let model = p.capsule(task);
+    let agg = p.capsule(Arc::new(IdentityTask::new("agg")));
+    p.explore(
+        entry,
+        Arc::new(FullFactorial::new(vec![Factor::new(&x, 0.0, 15.0, 1.0)])),
+        model,
+    );
+    p.aggregate(model, agg);
+    p.on(model, egi.clone());
+
+    let result = MoleExecution::new(p, Arc::new(LocalEnvironment::new(2)), 3)
+        .start()
+        .unwrap();
+    let mut ys: Vec<f64> = result.outputs[0].get(&y.array()).unwrap();
+    ys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let want: Vec<f64> = (0..16).map(|i| f64::from(i * i)).collect();
+    assert_eq!(ys, want, "every sample returned exactly once despite failures");
+    assert!(egi.stats().resubmissions > 0, "failures were injected");
+}
+
+#[test]
+fn ssh_and_local_agree_on_results() {
+    // same workflow, two environments: numerical results identical
+    let seed = val_u32("seed");
+    let food = [val_f64("food1"), val_f64("food2"), val_f64("food3")];
+    let run = |env: Arc<dyn Environment>| -> Vec<f64> {
+        let mut p = Puzzle::new();
+        let c = p.capsule(ant_task(&seed, &food, 120) as Arc<dyn Task>);
+        p.on(c, env);
+        let r = MoleExecution::new(p, Arc::new(LocalEnvironment::new(1)), 5)
+            .start_with(Context::new().with(&seed, 77))
+            .unwrap();
+        food.iter().map(|f| r.outputs[0].get(f).unwrap()).collect()
+    };
+    let pool = Arc::new(ThreadPool::new(2));
+    let local = run(Arc::new(LocalEnvironment::new(2)));
+    let ssh = run(Arc::new(SshEnvironment::new("calc01", 2, pool, 1)));
+    assert_eq!(local, ssh, "environment choice must not change results");
+}
+
+#[test]
+fn csv_hook_records_exploration() {
+    let dir = std::env::temp_dir().join(format!("molers-it-{}", std::process::id()));
+    let path = dir.join("doe.csv");
+    let _ = std::fs::remove_file(&path);
+    let x = val_f64("x");
+    let task = Arc::new(
+        ClosureTask::new("id", {
+            let x = x.clone();
+            move |ctx: &Context| Ok(Context::new().with(&x, ctx.get(&x)?))
+        })
+        .input(&x)
+        .output(&x),
+    );
+    let mut p = Puzzle::new();
+    let entry = p.capsule(Arc::new(IdentityTask::new("entry")));
+    let model = p.capsule(task);
+    p.explore(
+        entry,
+        Arc::new(FullFactorial::new(vec![Factor::new(&x, 0.0, 4.0, 1.0)])),
+        model,
+    );
+    p.hook(model, Arc::new(CsvHook::new(&path, &["x"])));
+    MoleExecution::new(p, Arc::new(LocalEnvironment::new(2)), 1)
+        .start()
+        .unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text.lines().count(), 6); // header + 5 samples
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn virtual_time_chains_through_transitions() {
+    // a -> b on a cluster: b's virtual start must be after a's end
+    let pool = Arc::new(ThreadPool::new(2));
+    let pbs = Arc::new(BatchEnvironment::pbs(2, pool, 31));
+    let t = |name: &str| -> Arc<dyn Task> {
+        Arc::new(
+            ClosureTask::new(name.to_string(), |ctx: &Context| Ok(ctx.clone())).cost(20.0),
+        )
+    };
+    let mut p = Puzzle::new();
+    let a = p.capsule(t("a"));
+    let b = p.capsule(t("b"));
+    p.direct(a, b);
+    p.on(a, pbs.clone());
+    p.on(b, pbs.clone());
+    let r = MoleExecution::new(p, Arc::new(LocalEnvironment::new(1)), 2)
+        .start()
+        .unwrap();
+    // two 20 s jobs chained: makespan >= 40 s plus latencies
+    assert!(
+        r.report.virtual_makespan >= 40.0,
+        "b must queue after a: {}",
+        r.report.virtual_makespan
+    );
+}
+
+#[test]
+fn sources_inject_before_each_run() {
+    use molers::dsl::{ConstantSource, CsvSource};
+    // CSV source feeds an array; constant source feeds a scalar; the task
+    // consumes both
+    let dir = std::env::temp_dir().join(format!("molers-src-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("input.csv");
+    std::fs::write(&csv, "obs\n10\n20\n30\n").unwrap();
+
+    let obs = val_f64("obs");
+    let scale = val_f64("scale");
+    let total = val_f64("total");
+    let task = Arc::new(
+        ClosureTask::new("sum", {
+            let (obs, scale, total) = (obs.clone(), scale.clone(), total.clone());
+            move |ctx: &Context| {
+                let xs: Vec<f64> = ctx.get(&obs.array())?;
+                let k = ctx.get(&scale)?;
+                Ok(Context::new().with(&total, xs.iter().sum::<f64>() * k))
+            }
+        })
+        .output(&total),
+    );
+    let mut p = Puzzle::new();
+    let c = p.capsule(task);
+    p.source(c, Arc::new(CsvSource::new(&csv, &["obs"])));
+    p.source(c, Arc::new(ConstantSource::new().with(&scale, 2.0)));
+    let r = MoleExecution::new(p, Arc::new(LocalEnvironment::new(1)), 1)
+        .start()
+        .unwrap();
+    assert_eq!(r.outputs[0].get(&total).unwrap(), 120.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
