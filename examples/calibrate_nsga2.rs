@@ -10,19 +10,27 @@
 use std::sync::Arc;
 
 use molers::cli::Args;
-use molers::evolution::{GenerationalGA, Nsga2Config, ReplicatedEvaluator};
+use molers::evolution::{
+    GenerationalGA, Nsga2Config, PooledEvaluator, ReplicatedEvaluator,
+};
 use molers::prelude::*;
 use molers::runtime::best_available_evaluator;
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
-    let generations = args.usize("generations", 100).map_err(anyhow::Error::msg)? as u32;
-    let replications = args.usize("replications", 5).map_err(anyhow::Error::msg)?;
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let generations = args.usize("generations", 100)? as u32;
+    let replications = args.usize("replications", 5)?;
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
 
     let (base, kind) = best_available_evaluator(2);
     println!("model backend: {kind}");
-    // replicateModel: 5-seed median fitness (Listing 3 feeding Listing 4)
-    let evaluator = Arc::new(ReplicatedEvaluator::new(base, replications));
+    // replicateModel: 5-seed median fitness (Listing 3 feeding Listing 4).
+    // The replication wrapper flattens genomes × seeds into one batch, and
+    // the pooled layer fans that batch out over the machine's cores.
+    let evaluator = Arc::new(PooledEvaluator::with_threads(
+        Arc::new(ReplicatedEvaluator::new(base, replications)),
+        threads,
+    ));
 
     let g_diffusion = val_f64("gDiffusionRate");
     let g_evaporation = val_f64("gEvaporationRate");
@@ -43,7 +51,9 @@ fn main() -> anyhow::Result<()> {
         "/tmp/ants/population.csv",
         &["generation", "gDiffusionRate", "gEvaporationRate", "f1", "f2", "f3"],
     );
-    let nsga2 = GenerationalGA::new(evolution, evaluator, 10).on_generation(
+    // eval_chunk packs each generation's wave through evaluate_batch, so
+    // the pooled evaluator sees the whole lambda at once (§Perf tentpole)
+    let nsga2 = GenerationalGA::new(evolution, evaluator, 10).eval_chunk(10).on_generation(
         move |generation, population| {
             // DisplayHook("Generation ${generation}")
             println!("Generation {generation}");
@@ -60,9 +70,7 @@ fn main() -> anyhow::Result<()> {
         },
     );
 
-    let env = LocalEnvironment::new(
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
-    );
+    let env = LocalEnvironment::new(threads);
     let result = nsga2.run(&env, generations, 42)?;
 
     println!(
@@ -72,7 +80,7 @@ fn main() -> anyhow::Result<()> {
     );
     println!("  diffusion  evaporation |   f1      f2      f3");
     let mut front = result.pareto_front.clone();
-    front.sort_by(|a, b| a.objectives[0].partial_cmp(&b.objectives[0]).unwrap());
+    front.sort_by(|a, b| a.objectives[0].total_cmp(&b.objectives[0]));
     for ind in &front {
         println!(
             "  {:9.2}  {:11.2} | {:6.1} {:7.1} {:7.1}",

@@ -14,9 +14,9 @@ use molers::exec::ThreadPool;
 use molers::prelude::*;
 use molers::runtime::best_available_evaluator;
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
-    let step = args.f64("step", 24.75).map_err(anyhow::Error::msg)?;
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let step = args.f64("step", 24.75)?;
     let env_name = args.get_or("env", "pbs").to_string();
 
     let g_diffusion = val_f64("gDiffusionRate");
@@ -100,7 +100,7 @@ fn main() -> anyhow::Result<()> {
     let mut rows: Vec<(f64, f64, f64, f64, f64)> = (0..ds.len())
         .map(|i| (ds[i], es[i], f1[i], f2[i], f3[i]))
         .collect();
-    rows.sort_by(|a, b| (a.2 + a.3 + a.4).partial_cmp(&(b.2 + b.3 + b.4)).unwrap());
+    rows.sort_by(|a, b| (a.2 + a.3 + a.4).total_cmp(&(b.2 + b.3 + b.4)));
     println!("\n diffusion evaporation |    f1     f2     f3   (best first)");
     for (d, e, a, b, c) in rows.iter().take(10) {
         println!(" {d:9.2} {e:11.2} | {a:6.1} {b:6.1} {c:6.1}");

@@ -29,14 +29,12 @@ use molers::metrics::throughput_per_hour;
 use molers::prelude::*;
 use molers::runtime::best_available_evaluator;
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
-    let islands = args.usize("islands", 64).map_err(anyhow::Error::msg)?;
-    let per_island = args.u64("evals-per-island", 25).map_err(anyhow::Error::msg)?;
-    let total = args
-        .u64("total-evals", islands as u64 * per_island)
-        .map_err(anyhow::Error::msg)?;
-    let mu = args.usize("mu", 200).map_err(anyhow::Error::msg)?;
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let islands = args.usize("islands", 64)?;
+    let per_island = args.u64("evals-per-island", 25)?;
+    let total = args.u64("total-evals", islands as u64 * per_island)?;
+    let mu = args.usize("mu", 200)?;
 
     let (evaluator, kind) = best_available_evaluator(2);
     println!(
@@ -106,7 +104,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("\nfinal archive Pareto front ({} points):", result.pareto_front.len());
     let mut front = result.pareto_front.clone();
-    front.sort_by(|a, b| a.objectives[0].partial_cmp(&b.objectives[0]).unwrap());
+    front.sort_by(|a, b| a.objectives[0].total_cmp(&b.objectives[0]));
     for ind in front.iter().take(12) {
         println!(
             "  diffusion={:6.2} evaporation={:6.2} -> [{:6.1} {:6.1} {:6.1}]",

@@ -1,11 +1,17 @@
-//! P1 (§Perf): evaluator hot-path throughput. Batch-size sweep of the PJRT
-//! (JAX+Pallas AOT) path — the L1/L2 optimisation target — against the
-//! pure-Rust twin, plus the replication wrapper's batching gain.
+//! P1 (§Perf): evaluator hot-path throughput. The pure-Rust ant twin,
+//! serial vs pooled batch evaluation (the §Perf tentpole's >2× multicore
+//! claim is measured here), then the PJRT (JAX+Pallas AOT) batch-size
+//! sweep when artifacts are built.
+//!
+//! Writes `BENCH_p1_evaluator.json` next to the working directory (or
+//! `$BENCH_OUT_DIR`).
 
 use std::sync::Arc;
 
 use molers::bench::Bench;
-use molers::evolution::{AntSimEvaluator, Evaluator, ReplicatedEvaluator};
+use molers::evolution::{
+    AntSimEvaluator, Evaluator, PooledEvaluator, ReplicatedEvaluator,
+};
 use molers::runtime::{ArtifactManifest, PjrtEvaluator};
 
 fn main() {
@@ -18,8 +24,73 @@ fn main() {
         rust_sim.evaluate(&[50.0, 10.0], s).unwrap()
     });
 
+    // serial vs pooled batch on the Rust twin: same jobs, same results,
+    // the only difference is the ThreadPool fan-out
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    let batch: Vec<(Vec<f64>, u32)> = (0..32)
+        .map(|i| (vec![30.0 + f64::from(i), 10.0], 9000 + i))
+        .collect();
+    let serial_s = {
+        let serial = AntSimEvaluator::fast();
+        b.case("rust_sim_batch32_serial", || {
+            serial.evaluate_batch(&batch).unwrap()
+        })
+        .median_s()
+    };
+    let pooled_s = {
+        let pooled =
+            PooledEvaluator::with_threads(Arc::new(AntSimEvaluator::fast()), threads);
+        b.case("rust_sim_batch32_pooled", || {
+            pooled.evaluate_batch(&batch).unwrap()
+        })
+        .median_s()
+    };
+    b.metric("pool_threads", threads as f64, "threads");
+    b.metric(
+        "batch32_pool_speedup",
+        serial_s / pooled_s,
+        "x (acceptance: > 2 on 4 cores)",
+    );
+
+    // the replication wrapper flattens genomes x seeds into one inner
+    // batch; pooled underneath, its 5 seeds cost well under 5x a single
+    let replicated_pooled = ReplicatedEvaluator::new(
+        Arc::new(PooledEvaluator::with_threads(
+            Arc::new(AntSimEvaluator::fast()),
+            threads,
+        )),
+        5,
+    );
+    let single_fast_s = {
+        let fast = AntSimEvaluator::fast();
+        let mut s = 500u32;
+        b.case("rust_sim_single_fast", || {
+            s += 1;
+            fast.evaluate(&[50.0, 10.0], s).unwrap()
+        })
+        .median_s()
+    };
+    let five_s = {
+        let mut s = 0u32;
+        b.case("rust_sim_replicated5_pooled", || {
+            s += 1;
+            replicated_pooled.evaluate(&[50.0, 10.0], s).unwrap()
+        })
+        .median_s()
+    };
+    b.metric(
+        "replication5_pooled_cost_ratio",
+        five_s / single_fast_s,
+        "x (ideal << 5)",
+    );
+
     if !ArtifactManifest::available() {
         println!("(artifacts not built; pjrt sweep skipped)");
+        if let Err(e) = b.write_json() {
+            eprintln!("could not write bench json: {e}");
+        }
         return;
     }
     let pjrt = PjrtEvaluator::from_default_artifacts(1).expect("pjrt");
@@ -58,4 +129,7 @@ fn main() {
         })
         .median_s();
     b.metric("replication5_cost_ratio", five / single, "x (ideal < 5)");
+    if let Err(e) = b.write_json() {
+        eprintln!("could not write bench json: {e}");
+    }
 }

@@ -1,0 +1,105 @@
+//! P2 (§Perf): the paper-scale claim. OpenMOLE's headline workload
+//! evaluates a GA initialisation of 200,000 individuals in one hour
+//! (arXiv:1506.04182 §4.6); the coordinator side of that wave — batch
+//! evaluation, non-dominated ranking, environmental selection — must not
+//! be the bottleneck. This bench times one full 200k-individual init wave
+//! with `Zdt1Evaluator` (two objectives → the O(N·logN) sweep path) and
+//! writes `BENCH_p2_scale.json`.
+//!
+//! Knobs: `P2_SCALE_N` (wave size, default 200000; CI smoke uses a small
+//! value), `P2_SCALE_MU` (survivors, default 200), `BENCH_OUT_DIR`.
+
+use std::sync::Arc;
+
+use molers::bench::Bench;
+use molers::evolution::{
+    nsga2, Evaluator, Individual, PooledEvaluator, Zdt1Evaluator,
+};
+use molers::util::Rng;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let n = env_usize("P2_SCALE_N", 200_000);
+    let mu = env_usize("P2_SCALE_MU", 200);
+    let dim = 6;
+    let threads = std::thread::available_parallelism()
+        .map(|t| t.get())
+        .unwrap_or(4);
+    println!("wave: {n} individuals, mu = {mu}, {threads} threads");
+
+    let mut b = Bench::new("p2_scale").warmup(1).samples(3);
+
+    // the init wave's genomes + seeds (generation itself is not the claim)
+    let mut rng = Rng::new(150_604_182);
+    let jobs: Vec<(Vec<f64>, u32)> = (0..n)
+        .map(|i| {
+            let genome: Vec<f64> = (0..dim).map(|_| rng.f64()).collect();
+            (genome, i as u32)
+        })
+        .collect();
+
+    let pooled = PooledEvaluator::with_threads(Arc::new(Zdt1Evaluator { dim }), threads);
+    let serial = Zdt1Evaluator { dim };
+
+    // stage 1: batch evaluation, serial vs pooled
+    let serial_s = b
+        .case("evaluate_serial", || serial.evaluate_batch(&jobs).unwrap())
+        .median_s();
+    let mut objectives: Vec<Vec<f64>> = Vec::new();
+    let pooled_s = {
+        let m = b.case("evaluate_pooled", || {
+            objectives = pooled.evaluate_batch(&jobs).unwrap();
+        });
+        m.median_s()
+    };
+    b.metric("evaluate_pool_speedup", serial_s / pooled_s, "x");
+    b.metric("evals_per_s_pooled", n as f64 / pooled_s, "evals/s");
+
+    let population: Vec<Individual> = jobs
+        .iter()
+        .zip(&objectives)
+        .map(|((genome, _), objs)| Individual::new(genome.clone(), objs.clone()))
+        .collect();
+
+    // stage 2: flat non-dominated ranking (two objectives → sweep path)
+    let rank_s = b
+        .case("rank", || nsga2::fast_non_dominated_sort(&population))
+        .median_s();
+    b.metric("rank_individuals_per_s", n as f64 / rank_s, "ind/s");
+
+    // stage 3: environmental selection down to mu (clone measured apart so
+    // the select number stands alone)
+    let clone_s = b.case("population_clone", || population.clone()).median_s();
+    let select_s = b
+        .case("clone_plus_select", || {
+            nsga2::select(population.clone(), mu)
+        })
+        .median_s();
+    b.metric("select_s_net_of_clone", (select_s - clone_s).max(0.0), "s");
+
+    // the end-to-end wave: evaluate + individual build + rank + select
+    let wave = b
+        .case("full_wave", || {
+            let objectives = pooled.evaluate_batch(&jobs).unwrap();
+            let population: Vec<Individual> = jobs
+                .iter()
+                .zip(objectives)
+                .map(|((genome, _), objs)| Individual::new(genome.clone(), objs))
+                .collect();
+            nsga2::select(population, mu)
+        })
+        .median_s();
+    b.metric("full_wave_s", wave, "s");
+    b.metric("wave_individuals", n as f64, "individuals");
+    b.metric("survivors", mu as f64, "individuals");
+
+    if let Err(e) = b.write_json() {
+        eprintln!("could not write bench json: {e}");
+    }
+}

@@ -1,10 +1,15 @@
 //! Micro-bench harness for the `cargo bench` targets (criterion is not
 //! vendored in this image — DESIGN.md §3). Provides warmup, repeated
 //! timed runs and robust summary statistics, printed in a stable
-//! `name ... median=…` format that EXPERIMENTS.md quotes.
+//! `name ... median=…` format that EXPERIMENTS.md quotes, plus a JSON
+//! writer (`BENCH_<suite>.json`) so the perf trajectory is machine-read
+//! across PRs.
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats;
 
 /// Result of one benchmark case.
@@ -57,6 +62,7 @@ pub struct Bench {
     warmup: u32,
     samples: u32,
     results: Vec<Measurement>,
+    metrics: Vec<(String, f64, String)>,
 }
 
 impl Bench {
@@ -67,6 +73,7 @@ impl Bench {
             warmup: 1,
             samples: 5,
             results: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 
@@ -103,10 +110,67 @@ impl Bench {
     /// Record an externally computed metric (e.g. virtual throughput).
     pub fn metric(&mut self, name: &str, value: f64, unit: &str) {
         println!("{:<44} {value:.1} {unit}", format!("{}/{}", self.suite, name));
+        self.metrics
+            .push((name.to_string(), value, unit.to_string()));
     }
 
     pub fn results(&self) -> &[Measurement] {
         &self.results
+    }
+
+    /// The suite as a JSON document: every timed case (name, median_s,
+    /// mean_s, sd, n) plus the recorded metrics.
+    pub fn json(&self) -> Json {
+        let cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|m| {
+                let mut case = BTreeMap::new();
+                case.insert("name".to_string(), Json::Str(m.name.clone()));
+                case.insert("median_s".to_string(), Json::Num(m.median_s()));
+                case.insert("mean_s".to_string(), Json::Num(m.mean_s()));
+                case.insert("sd".to_string(), Json::Num(m.stddev_s()));
+                case.insert("n".to_string(), Json::Num(m.samples.len() as f64));
+                Json::Obj(case)
+            })
+            .collect();
+        let metrics: Vec<Json> = self
+            .metrics
+            .iter()
+            .map(|(name, value, unit)| {
+                let mut metric = BTreeMap::new();
+                metric.insert(
+                    "name".to_string(),
+                    Json::Str(format!("{}/{}", self.suite, name)),
+                );
+                metric.insert("value".to_string(), Json::Num(*value));
+                metric.insert("unit".to_string(), Json::Str(unit.clone()));
+                Json::Obj(metric)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("suite".to_string(), Json::Str(self.suite.clone()));
+        root.insert("cases".to_string(), Json::Arr(cases));
+        root.insert("metrics".to_string(), Json::Arr(metrics));
+        Json::Obj(root)
+    }
+
+    /// Write `BENCH_<suite>.json` into `$BENCH_OUT_DIR` (default: the
+    /// working directory) and return its path. Benches call this last so
+    /// every run leaves a machine-readable record next to the repo.
+    pub fn write_json(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var_os("BENCH_OUT_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("."));
+        self.write_json_to(&dir)
+    }
+
+    /// Write `BENCH_<suite>.json` into an explicit directory.
+    pub fn write_json_to(&self, dir: &std::path::Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.suite));
+        std::fs::write(&path, self.json().to_string())?;
+        println!("bench json: {}", path.display());
+        Ok(path)
     }
 }
 
@@ -127,6 +191,39 @@ mod tests {
         let m = b.case("noop", || 1 + 1);
         assert_eq!(m.samples.len(), 3);
         assert!(m.median_s() >= 0.0);
+    }
+
+    #[test]
+    fn json_round_trips_cases_and_metrics() {
+        let mut b = Bench::new("suite_x").warmup(0).samples(4);
+        b.case("work", || 2 + 2);
+        b.metric("speedup", 3.5, "x");
+        let doc = crate::util::json::parse(&b.json().to_string()).unwrap();
+        assert_eq!(doc.get("suite").unwrap().as_str(), Some("suite_x"));
+        let cases = doc.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(
+            cases[0].get("name").unwrap().as_str(),
+            Some("suite_x/work")
+        );
+        assert_eq!(cases[0].get("n").unwrap().as_usize(), Some(4));
+        assert!(cases[0].get("median_s").unwrap().as_f64().unwrap() >= 0.0);
+        let metrics = doc.get("metrics").unwrap().as_arr().unwrap();
+        assert_eq!(metrics[0].get("value").unwrap().as_f64(), Some(3.5));
+    }
+
+    #[test]
+    fn write_json_lands_in_requested_dir() {
+        // write_json_to, not write_json: mutating BENCH_OUT_DIR via
+        // set_var would race other tests reading the environment
+        let dir = std::env::temp_dir().join("molers_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut b = Bench::new("wj").warmup(0).samples(2);
+        b.case("noop", || ());
+        let path = b.write_json_to(&dir).unwrap();
+        assert_eq!(path, dir.join("BENCH_wj.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::util::json::parse(&text).is_ok());
     }
 
     #[test]

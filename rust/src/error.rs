@@ -1,16 +1,18 @@
 //! Unified error type for the molers crate.
+//!
+//! Hand-rolled `Display`/`Error` impls: the `thiserror` crate is not
+//! vendored in this image (DESIGN.md §3), and the error surface is small
+//! enough that the derive buys nothing.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the workflow engine and its substrates.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// A task read a variable that is absent from its input context.
-    #[error("missing variable `{0}` in context")]
     MissingVariable(String),
 
     /// A variable existed but held a different type than requested.
-    #[error("variable `{name}` has type {actual}, expected {expected}")]
     TypeMismatch {
         name: String,
         expected: &'static str,
@@ -18,57 +20,102 @@ pub enum Error {
     },
 
     /// Workflow graph is malformed (cycle, dangling transition, ...).
-    #[error("invalid workflow: {0}")]
     InvalidWorkflow(String),
 
     /// A task body failed.
-    #[error("task `{task}` failed: {message}")]
     TaskFailed { task: String, message: String },
 
     /// Job submission / polling failure on an execution environment.
-    #[error("environment `{environment}` error: {message}")]
     EnvironmentError {
         environment: String,
         message: String,
     },
 
     /// A job exceeded its wall time and was killed by the scheduler.
-    #[error("job killed after exceeding wall time ({0} s of simulated time)")]
     WallTimeExceeded(u64),
 
     /// A job failed on a remote node (simulated infrastructure fault).
-    #[error("job failed on node `{node}`: {reason}")]
     NodeFailure { node: String, reason: String },
 
     /// Packaging / re-execution failure (CARE/CDE substrate).
-    #[error("packaging error: {0}")]
     Packaging(String),
 
     /// The PJRT runtime failed to load or execute an artifact.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// artifacts/manifest.json was missing or malformed.
-    #[error("artifact manifest error: {0}")]
     Manifest(String),
 
     /// Evolution configuration error (bounds, population sizes, ...).
-    #[error("evolution error: {0}")]
     Evolution(String),
 
     /// GridScale command construction/parsing error.
-    #[error("gridscale error: {0}")]
     GridScale(String),
 
-    #[error("json parse error at byte {offset}: {message}")]
     Json { offset: usize, message: String },
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    /// Wrapped error from the `xla` crate (PJRT layer).
-    #[error("xla: {0}")]
+    /// Wrapped error from the xla PJRT layer.
     Xla(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::MissingVariable(name) => {
+                write!(f, "missing variable `{name}` in context")
+            }
+            Error::TypeMismatch {
+                name,
+                expected,
+                actual,
+            } => write!(
+                f,
+                "variable `{name}` has type {actual}, expected {expected}"
+            ),
+            Error::InvalidWorkflow(msg) => write!(f, "invalid workflow: {msg}"),
+            Error::TaskFailed { task, message } => {
+                write!(f, "task `{task}` failed: {message}")
+            }
+            Error::EnvironmentError {
+                environment,
+                message,
+            } => write!(f, "environment `{environment}` error: {message}"),
+            Error::WallTimeExceeded(s) => write!(
+                f,
+                "job killed after exceeding wall time ({s} s of simulated time)"
+            ),
+            Error::NodeFailure { node, reason } => {
+                write!(f, "job failed on node `{node}`: {reason}")
+            }
+            Error::Packaging(msg) => write!(f, "packaging error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Manifest(msg) => write!(f, "artifact manifest error: {msg}"),
+            Error::Evolution(msg) => write!(f, "evolution error: {msg}"),
+            Error::GridScale(msg) => write!(f, "gridscale error: {msg}"),
+            Error::Json { offset, message } => {
+                write!(f, "json parse error at byte {offset}: {message}")
+            }
+            Error::Io(e) => write!(f, "{e}"),
+            Error::Xla(msg) => write!(f, "xla: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -77,5 +124,54 @@ impl From<xla::Error> for Error {
     }
 }
 
+use crate::runtime::xla_stub as xla;
+
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_previous_derive_format() {
+        assert_eq!(
+            Error::MissingVariable("x".into()).to_string(),
+            "missing variable `x` in context"
+        );
+        assert_eq!(
+            Error::TypeMismatch {
+                name: "x".into(),
+                expected: "f64",
+                actual: "i64",
+            }
+            .to_string(),
+            "variable `x` has type i64, expected f64"
+        );
+        assert_eq!(
+            Error::TaskFailed {
+                task: "t".into(),
+                message: "boom".into(),
+            }
+            .to_string(),
+            "task `t` failed: boom"
+        );
+        assert_eq!(
+            Error::Json {
+                offset: 3,
+                message: "bad".into()
+            }
+            .to_string(),
+            "json parse error at byte 3: bad"
+        );
+    }
+
+    #[test]
+    fn io_error_is_transparent_and_sourced() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let msg = io.to_string();
+        let e: Error = io.into();
+        assert_eq!(e.to_string(), msg);
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

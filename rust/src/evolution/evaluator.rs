@@ -7,13 +7,19 @@
 //! * [`AntSimEvaluator`] — the pure-Rust twin (no artifacts needed);
 //! * [`Zdt1Evaluator`] / [`SphereEvaluator`] — analytic benchmarks to test
 //!   GA machinery against known Pareto fronts;
+//! * [`PooledEvaluator`] — fans `evaluate_batch` out over an
+//!   [`crate::exec::ThreadPool`] with deterministic result ordering (§Perf
+//!   tentpole: a multicore coordinator must actually use its cores);
 //! * [`ReplicatedEvaluator`] — wraps any evaluator with n-seed replication
-//!   and a statistical descriptor (the paper's `replicateModel`).
+//!   and a statistical descriptor (the paper's `replicateModel`); its
+//!   batch path flattens all genomes × seeds into one inner batch so the
+//!   pooled/vmapped layers see the full fan-out.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::error::Result;
+use crate::error::{Error, Result};
+use crate::exec::ThreadPool;
 use crate::sim::ants::{evaluate as ant_evaluate, AntParams};
 use crate::util::stats::Descriptor;
 
@@ -143,6 +149,86 @@ impl Evaluator for SphereEvaluator {
     }
 }
 
+/// Parallel batch evaluation over an [`exec::ThreadPool`](ThreadPool):
+/// jobs are split into per-worker chunks, each chunk runs the inner
+/// evaluator's own `evaluate_batch` (so PJRT vmapping composes), and the
+/// results are reassembled **in submission order** — callers observe
+/// exactly the serial semantics, faster.
+///
+/// A panic inside one evaluation surfaces as an `Err` from the batch; the
+/// pool itself is unaffected (workers catch unwinds) and stays usable.
+///
+/// Deadlock note: `evaluate_batch` *blocks* until its chunks finish. Do
+/// not hand it the same pool an environment executes jobs on — an
+/// environment worker waiting for chunks that queue behind other blocked
+/// workers can stall the whole pool. Give the evaluator its own pool
+/// ([`Self::with_threads`] / [`Self::machine_sized`]).
+pub struct PooledEvaluator {
+    pub inner: Arc<dyn Evaluator>,
+    pool: Arc<ThreadPool>,
+}
+
+impl PooledEvaluator {
+    /// Share an existing pool (the usual case: one pool per machine).
+    pub fn new(inner: Arc<dyn Evaluator>, pool: Arc<ThreadPool>) -> Self {
+        PooledEvaluator { inner, pool }
+    }
+
+    /// Own a dedicated pool of `threads` workers.
+    pub fn with_threads(inner: Arc<dyn Evaluator>, threads: usize) -> Self {
+        Self::new(inner, Arc::new(ThreadPool::new(threads)))
+    }
+
+    /// Pool sized to the machine (leaving one core for the coordinator).
+    pub fn machine_sized(inner: Arc<dyn Evaluator>) -> Self {
+        Self::new(inner, Arc::new(ThreadPool::default_size()))
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+}
+
+impl Evaluator for PooledEvaluator {
+    fn objectives(&self) -> usize {
+        self.inner.objectives()
+    }
+
+    fn evaluate(&self, genome: &[f64], seed: u32) -> Result<Vec<f64>> {
+        // a single evaluation gains nothing from a worker round-trip
+        self.inner.evaluate(genome, seed)
+    }
+
+    fn evaluate_batch(&self, jobs: &[(Vec<f64>, u32)]) -> Result<Vec<Vec<f64>>> {
+        if jobs.len() <= 1 {
+            return self.inner.evaluate_batch(jobs);
+        }
+        // ~4 chunks per worker: large enough to amortise submission, small
+        // enough to keep stragglers from idling the pool at the tail
+        let chunk_len = jobs.len().div_ceil(self.pool.threads() * 4).max(1);
+        let handles: Vec<_> = jobs
+            .chunks(chunk_len)
+            .map(|chunk| {
+                let inner = Arc::clone(&self.inner);
+                let chunk = chunk.to_vec();
+                self.pool.submit(move || inner.evaluate_batch(&chunk))
+            })
+            .collect();
+        let mut out = Vec::with_capacity(jobs.len());
+        for handle in handles {
+            let chunk_result = handle.join().map_err(|panic| {
+                Error::Evolution(format!("parallel evaluation panicked: {panic}"))
+            })?;
+            out.extend(chunk_result?);
+        }
+        Ok(out)
+    }
+
+    fn nominal_cost_s(&self) -> f64 {
+        self.inner.nominal_cost_s()
+    }
+}
+
 /// Counts evaluations — instrumentation for tests and benches.
 pub struct CountingEvaluator<E> {
     pub inner: E,
@@ -201,18 +287,38 @@ impl Evaluator for ReplicatedEvaluator {
     }
 
     fn evaluate(&self, genome: &[f64], seed: u32) -> Result<Vec<f64>> {
-        // derive the replication seeds from the job seed
-        let mut s = u64::from(seed) | 0x5851_f42d_0000_0000;
-        let mut per_obj: Vec<Vec<f64>> = vec![Vec::new(); self.objectives()];
-        let batch: Vec<(Vec<f64>, u32)> = (0..self.replications)
-            .map(|_| (genome.to_vec(), crate::util::rng::splitmix64(&mut s) as u32))
-            .collect();
-        for objs in self.inner.evaluate_batch(&batch)? {
-            for (o, v) in per_obj.iter_mut().zip(objs) {
-                o.push(v);
+        self.evaluate_batch(&[(genome.to_vec(), seed)])?
+            .pop()
+            .ok_or_else(|| Error::Evolution("empty replication batch".into()))
+    }
+
+    /// Flatten all genomes × replication seeds into **one** inner batch:
+    /// a pooled or vmapped inner evaluator sees the whole fan-out at once
+    /// instead of `jobs.len()` serial waves of `replications`.
+    fn evaluate_batch(&self, jobs: &[(Vec<f64>, u32)]) -> Result<Vec<Vec<f64>>> {
+        let reps = self.replications;
+        let mut flat: Vec<(Vec<f64>, u32)> = Vec::with_capacity(jobs.len() * reps);
+        for (genome, seed) in jobs {
+            // derive the replication seeds from the job seed (identical
+            // stream to the original per-genome implementation)
+            let mut s = u64::from(*seed) | 0x5851_f42d_0000_0000;
+            for _ in 0..reps {
+                flat.push((genome.clone(), crate::util::rng::splitmix64(&mut s) as u32));
             }
         }
-        Ok(per_obj.iter().map(|o| self.descriptor.apply(o)).collect())
+        let results = self.inner.evaluate_batch(&flat)?;
+        let n_obj = self.objectives();
+        let mut out = Vec::with_capacity(jobs.len());
+        for rep_group in results.chunks(reps) {
+            let mut per_obj: Vec<Vec<f64>> = vec![Vec::new(); n_obj];
+            for objs in rep_group {
+                for (o, v) in per_obj.iter_mut().zip(objs) {
+                    o.push(*v);
+                }
+            }
+            out.push(per_obj.iter().map(|o| self.descriptor.apply(o)).collect());
+        }
+        Ok(out)
     }
 
     fn nominal_cost_s(&self) -> f64 {
@@ -268,5 +374,90 @@ mod tests {
     fn replicated_cost_scales() {
         let e = ReplicatedEvaluator::new(Arc::new(Zdt1Evaluator { dim: 2 }), 5);
         assert_eq!(e.nominal_cost_s(), 5.0);
+    }
+
+    #[test]
+    fn replicated_batch_matches_per_genome_evaluate() {
+        let noisy = Arc::new(SphereEvaluator { noise: 2.0 });
+        let replicated = ReplicatedEvaluator::new(Arc::clone(&noisy) as _, 7);
+        let jobs: Vec<(Vec<f64>, u32)> = (0..9)
+            .map(|i| (vec![f64::from(i) * 0.1, 0.3], 100 + i))
+            .collect();
+        let batch = replicated.evaluate_batch(&jobs).unwrap();
+        for (job, want) in jobs.iter().zip(&batch) {
+            let single = replicated.evaluate(&job.0, job.1).unwrap();
+            assert_eq!(&single, want, "flattened batch diverged for {job:?}");
+        }
+    }
+
+    /// Panics on a marker genome — exercises the pooled error path.
+    struct ExplodingEvaluator;
+
+    impl Evaluator for ExplodingEvaluator {
+        fn objectives(&self) -> usize {
+            1
+        }
+
+        fn evaluate(&self, genome: &[f64], _seed: u32) -> Result<Vec<f64>> {
+            if genome[0] < 0.0 {
+                panic!("negative genome reached the model");
+            }
+            Ok(vec![genome[0]])
+        }
+    }
+
+    #[test]
+    fn pooled_batch_matches_serial_order() {
+        let serial = Zdt1Evaluator { dim: 3 };
+        let pooled =
+            PooledEvaluator::with_threads(Arc::new(Zdt1Evaluator { dim: 3 }), 4);
+        let jobs: Vec<(Vec<f64>, u32)> = (0..257)
+            .map(|i| {
+                let x = f64::from(i) / 257.0;
+                (vec![x, 1.0 - x, x * x], i)
+            })
+            .collect();
+        let want = serial.evaluate_batch(&jobs).unwrap();
+        let got = pooled.evaluate_batch(&jobs).unwrap();
+        assert_eq!(want, got, "pooled results must keep submission order");
+    }
+
+    #[test]
+    fn pooled_panic_surfaces_as_err_and_pool_survives() {
+        let pooled = PooledEvaluator::with_threads(Arc::new(ExplodingEvaluator), 2);
+        let mut jobs: Vec<(Vec<f64>, u32)> =
+            (0..16).map(|i| (vec![f64::from(i)], i)).collect();
+        jobs[9].0[0] = -1.0; // the mine
+        let err = pooled.evaluate_batch(&jobs).unwrap_err();
+        assert!(
+            err.to_string().contains("panicked"),
+            "unexpected error: {err}"
+        );
+        // the pool is not poisoned: a clean batch still works, in order
+        let clean: Vec<(Vec<f64>, u32)> =
+            (0..16).map(|i| (vec![f64::from(i)], i)).collect();
+        let out = pooled.evaluate_batch(&clean).unwrap();
+        assert_eq!(out.len(), 16);
+        for (i, objs) in out.iter().enumerate() {
+            assert_eq!(objs[0], i as f64);
+        }
+    }
+
+    #[test]
+    fn pooled_counting_counts_every_job_exactly_once() {
+        let counting = Arc::new(CountingEvaluator::new(Zdt1Evaluator { dim: 2 }));
+        let pooled = PooledEvaluator::with_threads(Arc::clone(&counting) as _, 3);
+        let jobs: Vec<(Vec<f64>, u32)> =
+            (0..50).map(|i| (vec![0.2, 0.4], i)).collect();
+        pooled.evaluate_batch(&jobs).unwrap();
+        assert_eq!(counting.count(), 50);
+    }
+
+    #[test]
+    fn pooled_handles_tiny_batches() {
+        let pooled = PooledEvaluator::with_threads(Arc::new(Zdt1Evaluator { dim: 2 }), 4);
+        assert!(pooled.evaluate_batch(&[]).unwrap().is_empty());
+        let one = pooled.evaluate_batch(&[(vec![0.5, 0.5], 1)]).unwrap();
+        assert_eq!(one.len(), 1);
     }
 }

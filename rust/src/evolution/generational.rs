@@ -60,6 +60,11 @@ pub struct EvolutionResult {
 
 /// Wrap an [`Evaluator`] as a DSL task so evaluation jobs flow through the
 /// same environments as any other workload.
+///
+/// The closure routes through [`Evaluator::evaluate_batch`] (a batch of
+/// one) so every engine sits on the batch interface: a pooled or vmapped
+/// evaluator applies its machinery uniformly, and plain evaluators fall
+/// back to `evaluate` via the default implementation.
 pub fn eval_task(
     evaluator: Arc<dyn Evaluator>,
     bounds: &Bounds,
@@ -75,7 +80,10 @@ pub fn eval_task(
             .map(|n| ctx.get(&Val::<f64>::new(n.clone())))
             .collect::<Result<_>>()?;
         let seed: u32 = ctx.get(&Val::<u32>::new("seed"))?;
-        let objs = evaluator.evaluate(&genome, seed)?;
+        let objs = evaluator
+            .evaluate_batch(&[(genome, seed)])?
+            .pop()
+            .ok_or_else(|| Error::Evolution("empty evaluation batch".into()))?;
         if objs.len() != objective_names.len() {
             return Err(Error::Evolution(format!(
                 "evaluator returned {} objectives, config declares {}",
@@ -97,30 +105,20 @@ pub fn eval_task(
     Arc::new(task)
 }
 
-/// Build the evaluation context for one genome.
-fn genome_context(bounds: &Bounds, genome: &[f64], seed: u32) -> Context {
-    let mut ctx = Context::new();
-    for (n, g) in bounds.names.iter().zip(genome) {
-        ctx.set(&Val::<f64>::new(n.clone()), *g);
-    }
-    ctx.set(&Val::<u32>::new("seed"), seed);
-    ctx
-}
-
-/// Extract objectives from an evaluation result context.
-fn read_objectives(objectives: &[String], ctx: &Context) -> Result<Vec<f64>> {
-    objectives
-        .iter()
-        .map(|n| ctx.get(&Val::<f64>::new(n.clone())))
-        .collect()
-}
-
 /// The generational driver.
 pub struct GenerationalGA {
     pub config: Nsga2Config,
     pub evaluator: Arc<dyn Evaluator>,
     /// Offspring per generation (= parallelism level, Listing 4).
     pub lambda: usize,
+    /// Genomes per evaluation job (§Perf tentpole). 1 — the default, and
+    /// the paper's shape — submits one environment job per genome; larger
+    /// values pack each job with a whole chunk evaluated through
+    /// [`Evaluator::evaluate_batch`], which is how a pooled or vmapped
+    /// evaluator sees enough work to use a multicore machine. Virtual cost
+    /// scales with the chunk, so simulated-environment accounting stays
+    /// per-evaluation.
+    pub eval_chunk: usize,
     /// Called after each generation with (generation, population).
     pub on_generation: Option<Arc<dyn Fn(u32, &[Individual]) + Send + Sync>>,
 }
@@ -131,8 +129,15 @@ impl GenerationalGA {
             config,
             evaluator,
             lambda,
+            eval_chunk: 1,
             on_generation: None,
         }
+    }
+
+    /// Set the genomes-per-job packing for evaluation waves.
+    pub fn eval_chunk(mut self, chunk: usize) -> Self {
+        self.eval_chunk = chunk.max(1);
+        self
     }
 
     pub fn on_generation(
@@ -145,6 +150,11 @@ impl GenerationalGA {
 
     /// Evaluate a set of genomes on the environment; returns individuals
     /// plus the latest virtual end time.
+    ///
+    /// Genomes are packed `eval_chunk` to a job; each job calls the
+    /// evaluator's **batch** path once. Per-genome seeds are drawn up
+    /// front in genome order, so results — and the RNG stream — are
+    /// independent of the chunking.
     fn evaluate_wave(
         &self,
         env: &dyn Environment,
@@ -152,27 +162,64 @@ impl GenerationalGA {
         rng: &mut Rng,
         released_at: f64,
     ) -> Result<(Vec<Individual>, f64)> {
-        let task = eval_task(
-            Arc::clone(&self.evaluator),
-            &self.config.bounds,
-            &self.config.objectives,
-        );
-        let handles: Vec<_> = genomes
+        let n_obj = self.config.objectives.len();
+        let cost = self.evaluator.nominal_cost_s();
+        let chunk_len = self.eval_chunk.max(1);
+        let jobs: Vec<(Vec<f64>, u32)> = genomes
             .iter()
-            .map(|g| {
-                let ctx = genome_context(&self.config.bounds, g, rng.model_seed());
-                env.submit(Job::new(task.clone(), ctx).released_at(released_at))
-            })
+            .map(|g| (g.clone(), rng.model_seed()))
             .collect();
+
+        type Slot = Arc<std::sync::Mutex<Option<Vec<Vec<f64>>>>>;
+        let mut submissions: Vec<(Slot, crate::environment::JobHandle)> =
+            Vec::with_capacity(jobs.len().div_ceil(chunk_len));
+        for chunk in jobs.chunks(chunk_len) {
+            let slot: Slot = Arc::new(std::sync::Mutex::new(None));
+            let evaluator = Arc::clone(&self.evaluator);
+            let chunk_jobs = chunk.to_vec();
+            let out_slot = Arc::clone(&slot);
+            let task = ClosureTask::new("evaluate", move |_ctx: &Context| {
+                let objs = evaluator.evaluate_batch(&chunk_jobs)?;
+                if objs.len() != chunk_jobs.len() {
+                    return Err(Error::Evolution(format!(
+                        "evaluator returned {} results for a chunk of {}",
+                        objs.len(),
+                        chunk_jobs.len()
+                    )));
+                }
+                for o in &objs {
+                    if o.len() != n_obj {
+                        return Err(Error::Evolution(format!(
+                            "evaluator returned {} objectives, config declares {n_obj}",
+                            o.len()
+                        )));
+                    }
+                }
+                *out_slot.lock().unwrap() = Some(objs);
+                Ok(Context::new())
+            })
+            .cost(cost * chunk.len() as f64);
+            let handle = env
+                .submit(Job::new(Arc::new(task), Context::new()).released_at(released_at));
+            submissions.push((slot, handle));
+        }
+
         let mut out = Vec::with_capacity(genomes.len());
         let mut latest = released_at;
-        for (g, h) in genomes.iter().zip(handles) {
-            let (ctx, report) = h.wait()?;
+        // consume `jobs` rather than cloning each genome back out
+        let mut job_iter = jobs.into_iter();
+        for (slot, handle) in submissions {
+            let (_ctx, report) = handle.wait()?;
             latest = latest.max(report.virtual_end);
-            out.push(Individual::new(
-                g.clone(),
-                read_objectives(&self.config.objectives, &ctx)?,
-            ));
+            let objs = slot.lock().unwrap().take().ok_or_else(|| {
+                Error::Evolution("evaluation chunk produced no results".into())
+            })?;
+            for objectives in objs {
+                let (genome, _seed) = job_iter
+                    .next()
+                    .expect("chunk result counts were validated in the task");
+                out.push(Individual::new(genome, objectives));
+            }
         }
         Ok((out, latest))
     }
@@ -296,6 +343,37 @@ mod tests {
             r.population.iter().map(|i| i.objectives.clone()).collect()
         };
         assert_eq!(objs(&a), objs(&b));
+    }
+
+    #[test]
+    fn chunked_wave_matches_per_genome_jobs() {
+        // the §Perf batch path must not change results: chunk size and
+        // evaluator pooling are pure execution-shape knobs
+        let objs = |r: &EvolutionResult| -> Vec<Vec<f64>> {
+            r.population.iter().map(|i| i.objectives.clone()).collect()
+        };
+        let env = LocalEnvironment::new(4);
+        let per_genome =
+            GenerationalGA::new(zdt1_config(8), Arc::new(Zdt1Evaluator { dim: 3 }), 8);
+        let baseline = per_genome.run(&env, 5, 11).unwrap();
+        for chunk in [3, 8, 64] {
+            let chunked =
+                GenerationalGA::new(zdt1_config(8), Arc::new(Zdt1Evaluator { dim: 3 }), 8)
+                    .eval_chunk(chunk);
+            let got = chunked.run(&env, 5, 11).unwrap();
+            assert_eq!(objs(&baseline), objs(&got), "chunk {chunk} diverged");
+        }
+        let pooled = GenerationalGA::new(
+            zdt1_config(8),
+            Arc::new(crate::evolution::evaluator::PooledEvaluator::with_threads(
+                Arc::new(Zdt1Evaluator { dim: 3 }),
+                3,
+            )),
+            8,
+        )
+        .eval_chunk(8);
+        let got = pooled.run(&env, 5, 11).unwrap();
+        assert_eq!(objs(&baseline), objs(&got), "pooled evaluator diverged");
     }
 
     #[test]

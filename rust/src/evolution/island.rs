@@ -88,7 +88,33 @@ impl IslandSteadyGA {
         rng: &mut Rng,
     ) -> Result<Vec<Individual>> {
         let ops: &Operators = &cfg.operators;
-        for _ in 0..budget {
+
+        // bootstrap: a fresh island draws random genomes until it can hold
+        // a tournament; those evaluations are independent, so they go
+        // through the evaluator's batch path in one wave. Genome/seed
+        // draws interleave exactly like the sequential loop did, so the
+        // RNG stream — and hence the whole trajectory — is unchanged.
+        let bootstrap =
+            (2usize.saturating_sub(population.len()) as u64).min(budget) as usize;
+        let mut done: u64 = 0;
+        if bootstrap > 0 {
+            let jobs: Vec<(Vec<f64>, u32)> = (0..bootstrap)
+                .map(|_| {
+                    let genome = cfg.bounds.random(rng);
+                    let seed = rng.model_seed();
+                    (genome, seed)
+                })
+                .collect();
+            for (job, objectives) in jobs.iter().zip(evaluator.evaluate_batch(&jobs)?) {
+                population.push(Individual::new(job.0.clone(), objectives));
+            }
+            if population.len() > cfg.mu {
+                population = nsga2::select(population, cfg.mu);
+            }
+            done = bootstrap as u64;
+        }
+
+        for _ in done..budget {
             let genome = if population.len() < 2 {
                 cfg.bounds.random(rng)
             } else {

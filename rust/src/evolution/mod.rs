@@ -11,9 +11,10 @@ pub mod operators;
 pub mod steady;
 
 pub use evaluator::{
-    AntSimEvaluator, CountingEvaluator, Evaluator, ReplicatedEvaluator,
-    SphereEvaluator, Zdt1Evaluator,
+    AntSimEvaluator, CountingEvaluator, Evaluator, PooledEvaluator,
+    ReplicatedEvaluator, SphereEvaluator, Zdt1Evaluator,
 };
+pub use nsga2::Fronts;
 pub use generational::{eval_task, EvolutionResult, GenerationalGA, Nsga2Config};
 pub use genome::{Bounds, Individual};
 pub use island::{IslandConfig, IslandSteadyGA};

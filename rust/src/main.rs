@@ -21,7 +21,7 @@ use molers::environment::ssh::SshEnvironment;
 use molers::environment::Environment;
 use molers::evolution::{
     Evaluator, GenerationalGA, IslandConfig, IslandSteadyGA, Nsga2Config,
-    ReplicatedEvaluator,
+    PooledEvaluator, ReplicatedEvaluator,
 };
 use molers::exec::ThreadPool;
 use molers::metrics::throughput_per_hour;
@@ -87,7 +87,8 @@ fn main() {
                  common options: --seed N --env local|ssh|pbs|slurm|sge|oar|condor|egi\n\
                  run:       --population 125 --diffusion 50 --evaporation 50\n\
                  replicate: --replications 5\n\
-                 calibrate: --mu 10 --lambda 10 --generations 100 --replications 5\n\
+                 calibrate: --mu 10 --lambda 10 --generations 100 --replications 5 \
+                 --chunk 1\n\
                  island:    --islands 2000 --total-evals 200000 --sample 50 \
                  --evals-per-island 100 --nodes 2000\n\
                  render:    --ticks 400 --out world.ppm"
@@ -189,12 +190,24 @@ fn cmd_calibrate(args: &Args) -> CmdResult {
     let generations = args.usize("generations", 100)? as u32;
     let replications = args.usize("replications", 5)?;
     let nodes = args.usize("nodes", 8)?;
+    // --chunk N packs N genomes per evaluation job, fanned out through the
+    // pooled batch path (§Perf): worthwhile on local/ssh environments
+    let chunk = args.usize("chunk", 1)?;
     let pool = Arc::new(ThreadPool::default_size());
     let env = environment(args.get_or("env", "local"), nodes, pool, seed);
 
     let (base, kind) = best_available_evaluator(2);
     println!("evaluator: {kind}, environment: {}", env.name());
-    let evaluator = Arc::new(ReplicatedEvaluator::new(base, replications));
+    let evaluator: Arc<dyn Evaluator> = if chunk > 1 {
+        // chunked jobs carry whole batches. The evaluator gets its OWN
+        // worker pool: environment workers block while a chunk fans out,
+        // so sharing one pool could deadlock with every worker waiting
+        Arc::new(PooledEvaluator::machine_sized(Arc::new(
+            ReplicatedEvaluator::new(base, replications),
+        )))
+    } else {
+        Arc::new(ReplicatedEvaluator::new(base, replications))
+    };
 
     let (d, e, objectives) = genome_bounds();
     let obj_refs: Vec<&Val<f64>> = objectives.iter().collect();
@@ -204,7 +217,9 @@ fn cmd_calibrate(args: &Args) -> CmdResult {
         &obj_refs,
         0.01,
     )?;
-    let ga = GenerationalGA::new(config, evaluator, lambda).on_generation(|g, pop| {
+    let ga = GenerationalGA::new(config, evaluator, lambda)
+        .eval_chunk(chunk)
+        .on_generation(|g, pop| {
         let best: f64 = pop
             .iter()
             .map(|i| i.objectives.iter().sum::<f64>())

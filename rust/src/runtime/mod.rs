@@ -4,6 +4,7 @@
 
 pub mod artifacts;
 pub mod pjrt;
+pub mod xla_stub;
 
 pub use artifacts::{ArtifactEntry, ArtifactManifest};
 pub use pjrt::PjrtEvaluator;

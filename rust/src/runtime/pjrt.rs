@@ -20,6 +20,11 @@ use std::path::PathBuf;
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
+// The real `xla` crate is not vendored in this image; the stub mirrors its
+// API and fails at client creation, so this whole module compiles unchanged
+// and callers fall back to the pure-Rust twin (see `xla_stub` docs).
+use crate::runtime::xla_stub as xla;
+
 use crate::error::{Error, Result};
 use crate::evolution::evaluator::Evaluator;
 use crate::runtime::artifacts::ArtifactManifest;
@@ -233,7 +238,7 @@ fn run_jobs(compiled: &[Compiled], jobs: &[(Vec<f64>, u32)]) -> Result<Vec<Vec<f
         let c = compiled
             .iter()
             .filter(|c| c.batch <= rest.len())
-            .min_by(|a, b| a.per_eval_s.partial_cmp(&b.per_eval_s).unwrap())
+            .min_by(|a, b| a.per_eval_s.total_cmp(&b.per_eval_s))
             .or_else(|| compiled.first()) // tail smaller than every batch
             .unwrap();
         let take = rest.len().min(c.batch);

@@ -72,6 +72,12 @@ pub struct AntSim {
     pub tick: u32,
     /// First tick each source emptied (0 = not yet).
     pub final_ticks: [u32; 3],
+    /// Remaining food per source, maintained incrementally: initialised
+    /// from the setup grid and decremented at pickup. Replaces the
+    /// per-source full-grid `sum_where` scans the fitness latch and
+    /// `remaining()` used to run every tick (§Perf tentpole). Values are
+    /// integer-valued f64s throughout, so the latch threshold is exact.
+    food_left: [f64; 3],
 }
 
 impl AntSim {
@@ -99,11 +105,15 @@ impl AntSim {
                 }
             }
         }
+        let mut food_left = [0.0f64; 3];
         for row in 0..WORLD {
             for col in 0..WORLD {
-                if source_id[row * WORLD + col] > 0 {
+                let s = source_id[row * WORLD + col];
+                if s > 0 {
                     // set food one-of [1 2]
-                    food.set(row, col, f64::from(rng.usize(2) as u32 + 1));
+                    let units = f64::from(rng.usize(2) as u32 + 1);
+                    food.set(row, col, units);
+                    food_left[s as usize - 1] += units;
                 }
             }
         }
@@ -129,6 +139,7 @@ impl AntSim {
             rng,
             tick: 0,
             final_ticks: [0; 3],
+            food_left,
         }
     }
 
@@ -161,41 +172,57 @@ impl AntSim {
 
     /// One `go` tick: sequential per-ant behaviour, then diffuse/evaporate,
     /// then the fitness latch (Listing 1's `compute-fitness`).
+    ///
+    /// Hot-path shape (§Perf tentpole): ants are mutated in place through
+    /// disjoint field borrows (no per-ant clone/write-back), and the latch
+    /// reads the incrementally maintained per-source counters instead of
+    /// rescanning the grid. Behaviour — RNG draw order included — is
+    /// bit-identical to the original (`tests/sim_golden.rs`).
     pub fn step(&mut self) {
         self.tick += 1;
-        let n = self.ants.len();
-        for i in 0..n {
-            // `if who >= ticks [ stop ]` — staggered departure
-            if i as u32 >= self.tick {
-                break;
-            }
-            let mut ant = self.ants[i].clone();
-            let (row, col) = self.food.patch(ant.x, ant.y);
+        // `if who >= ticks [ stop ]` — staggered departure
+        let active = (self.tick as usize).min(self.ants.len());
+        let AntSim {
+            food,
+            chemical,
+            nest,
+            nest_scent,
+            source_id,
+            ants,
+            rng,
+            food_left,
+            ..
+        } = self;
+        for ant in ants[..active].iter_mut() {
+            let (row, col) = food.patch(ant.x, ant.y);
             if !ant.carrying {
                 // look-for-food
-                if self.food.get(row, col) > 0.0 {
-                    self.food.set(row, col, self.food.get(row, col) - 1.0);
+                if food.get(row, col) > 0.0 {
+                    food.set(row, col, food.get(row, col) - 1.0);
+                    let s = source_id[row * WORLD + col];
+                    if s > 0 {
+                        food_left[s as usize - 1] -= 1.0;
+                    }
                     ant.carrying = true;
                     ant.heading += 180.0;
                 } else {
-                    let chem = self.chemical.get(row, col);
+                    let chem = chemical.get(row, col);
                     if (SNIFF_LOW..SNIFF_HIGH).contains(&chem) {
-                        Self::uphill(&self.chemical, &mut ant);
+                        Self::uphill(chemical, ant);
                     }
                 }
+            } else if nest[row * WORLD + col] {
+                // return-to-nest: arrived — drop food, turn around
+                ant.carrying = false;
+                ant.heading += 180.0;
             } else {
-                // return-to-nest
-                if self.nest[row * WORLD + col] {
-                    ant.carrying = false;
-                    ant.heading += 180.0;
-                } else {
-                    self.chemical.add_xy(ant.x, ant.y, CHEMICAL_DROP);
-                    Self::uphill(&self.nest_scent, &mut ant);
-                }
+                // return-to-nest: drop pheromone, climb the nest gradient
+                chemical.add_xy(ant.x, ant.y, CHEMICAL_DROP);
+                Self::uphill(nest_scent, ant);
             }
             // wiggle
-            ant.heading += self.rng.range(0.0, WIGGLE_MAX);
-            ant.heading -= self.rng.range(0.0, WIGGLE_MAX);
+            ant.heading += rng.range(0.0, WIGGLE_MAX);
+            ant.heading -= rng.range(0.0, WIGGLE_MAX);
             // fd 1, bouncing off the world edge
             let rad = ant.heading.to_radians();
             let (nx, ny) = (ant.x + rad.sin(), ant.y + rad.cos());
@@ -209,7 +236,6 @@ impl AntSim {
                 ant.y = ny;
             }
             ant.heading = ant.heading.rem_euclid(360.0);
-            self.ants[i] = ant;
         }
 
         // patch updates
@@ -217,28 +243,18 @@ impl AntSim {
         self.chemical
             .scale((100.0 - self.params.evaporation_rate) / 100.0);
 
-        // fitness latch
-        for s in 0..3u8 {
-            if self.final_ticks[s as usize] == 0 {
-                let remaining = self
-                    .food
-                    .sum_where(|r, c| self.source_id[r * WORLD + c] == s + 1);
-                if remaining <= 0.0 {
-                    self.final_ticks[s as usize] = self.tick;
-                }
+        // fitness latch on the incremental counters (== the grid scan sums
+        // bit-for-bit: both are exact integer-valued f64 arithmetic)
+        for s in 0..3 {
+            if self.final_ticks[s] == 0 && self.food_left[s] <= 0.0 {
+                self.final_ticks[s] = self.tick;
             }
         }
     }
 
-    /// Remaining food per source.
+    /// Remaining food per source (the incremental counters).
     pub fn remaining(&self) -> [f64; 3] {
-        let mut out = [0.0; 3];
-        for (s, slot) in out.iter_mut().enumerate() {
-            *slot = self
-                .food
-                .sum_where(|r, c| self.source_id[r * WORLD + c] == s as u8 + 1);
-        }
-        out
+        self.food_left
     }
 
     /// Run to `max_ticks` (or all sources empty) and return the three
@@ -329,6 +345,28 @@ mod tests {
             let now = sim.food.sum();
             assert!(now <= last + 1e-9);
             last = now;
+        }
+    }
+
+    #[test]
+    fn incremental_counters_match_grid_scans() {
+        let mut sim = AntSim::new(good_params(), 13);
+        for t in 0..300 {
+            sim.step();
+            let scan: Vec<f64> = (0..3u8)
+                .map(|s| {
+                    sim.food
+                        .sum_where(|r, c| sim.source_id[r * WORLD + c] == s + 1)
+                })
+                .collect();
+            let counters = sim.remaining();
+            for s in 0..3 {
+                assert_eq!(
+                    counters[s].to_bits(),
+                    scan[s].to_bits(),
+                    "source {s} diverged at tick {t}"
+                );
+            }
         }
     }
 

@@ -1,6 +1,7 @@
 //! Agent-based simulation substrate + the Rust twin of the ant model.
 
 pub mod ants;
+pub mod reference;
 pub mod render;
 pub mod world;
 

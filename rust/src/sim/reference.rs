@@ -1,0 +1,255 @@
+//! Executable specification of the ant model: the pre-optimisation kernel,
+//! kept verbatim as the golden oracle for the optimised hot path.
+//!
+//! `tests/sim_golden.rs` asserts that [`super::ants`] — after the §Perf
+//! refactor (persistent diffuse scratch, in-place ant updates, incremental
+//! food counters) — reproduces this module's trajectories **bit for bit**
+//! across seeds. The two implementations share [`Field`] storage and
+//! [`Rng`], but this one deliberately keeps the original shape: a fresh
+//! `vec!` per diffuse, a cloned `Ant` per ant per tick, and full-grid
+//! `sum_where` scans in the fitness latch. It is test infrastructure, not
+//! a fast path — never call it from an evaluator.
+
+use crate::sim::ants::{AntParams, HALF, SOURCES, WORLD};
+use crate::sim::world::Field;
+use crate::util::Rng;
+
+const NEST_RADIUS: f64 = 5.0;
+const SOURCE_RADIUS: f64 = 5.0;
+const CHEMICAL_DROP: f64 = 60.0;
+const SNIFF_LOW: f64 = 0.05;
+const SNIFF_HIGH: f64 = 2.0;
+const WIGGLE_MAX: f64 = 40.0;
+
+#[derive(Debug, Clone)]
+struct Ant {
+    x: f64,
+    y: f64,
+    heading: f64,
+    carrying: bool,
+}
+
+/// The original simulation state: no incremental counters — food per
+/// source is recomputed by scanning the grid.
+pub struct ReferenceAntSim {
+    pub params: AntParams,
+    pub food: Field,
+    pub chemical: Field,
+    pub nest: Vec<bool>,
+    pub nest_scent: Field,
+    pub source_id: Vec<u8>,
+    ants: Vec<Ant>,
+    rng: Rng,
+    pub tick: u32,
+    pub final_ticks: [u32; 3],
+}
+
+impl ReferenceAntSim {
+    /// `setup`, identical draw order to the optimised twin.
+    pub fn new(params: AntParams, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut food = Field::new(WORLD);
+        let mut nest_scent = Field::new(WORLD);
+        let mut nest = vec![false; WORLD * WORLD];
+        let mut source_id = vec![0u8; WORLD * WORLD];
+
+        for row in 0..WORLD {
+            for col in 0..WORLD {
+                let x = col as f64 - f64::from(HALF);
+                let y = row as f64 - f64::from(HALF);
+                let d_nest = (x * x + y * y).sqrt();
+                nest[row * WORLD + col] = d_nest < NEST_RADIUS;
+                nest_scent.set(row, col, 200.0 - d_nest);
+                for (i, (sx, sy)) in SOURCES.iter().enumerate() {
+                    let d = ((x - sx).powi(2) + (y - sy).powi(2)).sqrt();
+                    if d < SOURCE_RADIUS {
+                        source_id[row * WORLD + col] = i as u8 + 1;
+                    }
+                }
+            }
+        }
+        for row in 0..WORLD {
+            for col in 0..WORLD {
+                if source_id[row * WORLD + col] > 0 {
+                    food.set(row, col, f64::from(rng.usize(2) as u32 + 1));
+                }
+            }
+        }
+
+        let n_ants = params.population.round().max(0.0) as usize;
+        let ants = (0..n_ants)
+            .map(|_| Ant {
+                x: 0.0,
+                y: 0.0,
+                heading: rng.range(0.0, 360.0),
+                carrying: false,
+            })
+            .collect();
+
+        ReferenceAntSim {
+            params,
+            food,
+            chemical: Field::new(WORLD),
+            nest,
+            nest_scent,
+            source_id,
+            ants,
+            rng,
+            tick: 0,
+            final_ticks: [0; 3],
+        }
+    }
+
+    fn in_world(x: f64, y: f64) -> bool {
+        x.abs() <= f64::from(HALF) && y.abs() <= f64::from(HALF)
+    }
+
+    fn scent_at_angle(field: &Field, ant: &Ant, angle: f64) -> f64 {
+        let rad = (ant.heading + angle).to_radians();
+        field.get_xy(ant.x + rad.sin(), ant.y + rad.cos())
+    }
+
+    fn uphill(field: &Field, ant: &mut Ant) {
+        let ahead = Self::scent_at_angle(field, ant, 0.0);
+        let right = Self::scent_at_angle(field, ant, 45.0);
+        let left = Self::scent_at_angle(field, ant, -45.0);
+        if right > ahead || left > ahead {
+            ant.heading += if right > left { 45.0 } else { -45.0 };
+        }
+    }
+
+    /// The original per-tick `vec!`-allocating diffuse (same separable
+    /// arithmetic as `Field::diffuse`, without the persistent buffers).
+    fn diffuse_fresh(field: &mut Field, d: f64) {
+        let n = field.size;
+        let share = d / 8.0;
+        let mut hsum = vec![0.0f64; n * n];
+        for r in 0..n {
+            for c in 0..n {
+                let left = if c > 0 { field.get(r, c - 1) } else { 0.0 };
+                let right = if c + 1 < n { field.get(r, c + 1) } else { 0.0 };
+                hsum[r * n + c] = left + field.get(r, c) + right;
+            }
+        }
+        let mut next = vec![0.0f64; n * n];
+        for r in 0..n {
+            let vcnt = if r == 0 || r + 1 == n { 2.0 } else { 3.0 };
+            for c in 0..n {
+                let hcnt = if c == 0 || c + 1 == n { 2.0 } else { 3.0 };
+                let count = hcnt * vcnt - 1.0;
+                let above = if r > 0 { hsum[(r - 1) * n + c] } else { 0.0 };
+                let below = if r + 1 < n { hsum[(r + 1) * n + c] } else { 0.0 };
+                let v = field.get(r, c);
+                let neigh = above + hsum[r * n + c] + below - v;
+                next[r * n + c] = v - v * d * count / 8.0 + share * neigh;
+            }
+        }
+        for r in 0..n {
+            for c in 0..n {
+                field.set(r, c, next[r * n + c]);
+            }
+        }
+    }
+
+    /// One `go` tick in the original clone-per-ant, scan-per-source shape.
+    pub fn step(&mut self) {
+        self.tick += 1;
+        let n = self.ants.len();
+        for i in 0..n {
+            if i as u32 >= self.tick {
+                break;
+            }
+            let mut ant = self.ants[i].clone();
+            let (row, col) = self.food.patch(ant.x, ant.y);
+            if !ant.carrying {
+                if self.food.get(row, col) > 0.0 {
+                    self.food.set(row, col, self.food.get(row, col) - 1.0);
+                    ant.carrying = true;
+                    ant.heading += 180.0;
+                } else {
+                    let chem = self.chemical.get(row, col);
+                    if (SNIFF_LOW..SNIFF_HIGH).contains(&chem) {
+                        Self::uphill(&self.chemical, &mut ant);
+                    }
+                }
+            } else if self.nest[row * WORLD + col] {
+                ant.carrying = false;
+                ant.heading += 180.0;
+            } else {
+                self.chemical.add_xy(ant.x, ant.y, CHEMICAL_DROP);
+                Self::uphill(&self.nest_scent, &mut ant);
+            }
+            ant.heading += self.rng.range(0.0, WIGGLE_MAX);
+            ant.heading -= self.rng.range(0.0, WIGGLE_MAX);
+            let rad = ant.heading.to_radians();
+            let (nx, ny) = (ant.x + rad.sin(), ant.y + rad.cos());
+            if !Self::in_world(nx, ny) {
+                ant.heading += 180.0;
+            }
+            let rad = ant.heading.to_radians();
+            let (nx, ny) = (ant.x + rad.sin(), ant.y + rad.cos());
+            if Self::in_world(nx, ny) {
+                ant.x = nx;
+                ant.y = ny;
+            }
+            ant.heading = ant.heading.rem_euclid(360.0);
+            self.ants[i] = ant;
+        }
+
+        Self::diffuse_fresh(&mut self.chemical, self.params.diffusion_rate / 100.0);
+        self.chemical
+            .scale((100.0 - self.params.evaporation_rate) / 100.0);
+
+        for s in 0..3u8 {
+            if self.final_ticks[s as usize] == 0 {
+                let remaining = self
+                    .food
+                    .sum_where(|r, c| self.source_id[r * WORLD + c] == s + 1);
+                if remaining <= 0.0 {
+                    self.final_ticks[s as usize] = self.tick;
+                }
+            }
+        }
+    }
+
+    /// Remaining food per source, by grid scan.
+    pub fn remaining(&self) -> [f64; 3] {
+        let mut out = [0.0; 3];
+        for (s, slot) in out.iter_mut().enumerate() {
+            *slot = self
+                .food
+                .sum_where(|r, c| self.source_id[r * WORLD + c] == s as u8 + 1);
+        }
+        out
+    }
+
+    pub fn ant_positions(&self) -> Vec<(f64, f64, bool)> {
+        self.ants.iter().map(|a| (a.x, a.y, a.carrying)).collect()
+    }
+
+    /// Run to `max_ticks` (or all sources empty); same contract as
+    /// [`super::ants::AntSim::run`].
+    pub fn run(&mut self, max_ticks: u32) -> [f64; 3] {
+        while self.tick < max_ticks {
+            self.step();
+            if self.final_ticks.iter().all(|&t| t > 0) {
+                break;
+            }
+        }
+        let mut fit = [0.0; 3];
+        for (i, slot) in fit.iter_mut().enumerate() {
+            *slot = if self.final_ticks[i] == 0 {
+                f64::from(max_ticks)
+            } else {
+                f64::from(self.final_ticks[i])
+            };
+        }
+        fit
+    }
+}
+
+/// Evaluate the three objectives with the reference kernel.
+pub fn evaluate(params: AntParams, seed: u64, max_ticks: u32) -> [f64; 3] {
+    let mut sim = ReferenceAntSim::new(params, seed);
+    sim.run(max_ticks)
+}

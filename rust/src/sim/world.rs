@@ -9,6 +9,13 @@
 pub struct Field {
     pub size: usize,
     data: Vec<f64>,
+    /// Scratch for `diffuse`: horizontal 3-window sums. Sized lazily on the
+    /// first diffuse and reused for every later tick (§Perf: the evaluate
+    /// hot path must not allocate per tick).
+    hsum: Vec<f64>,
+    /// Double buffer for `diffuse`: written each tick, then swapped with
+    /// `data` — no per-tick `vec!` allocation.
+    next: Vec<f64>,
 }
 
 impl Field {
@@ -16,6 +23,8 @@ impl Field {
         Field {
             size,
             data: vec![0.0; size * size],
+            hsum: Vec::new(),
+            next: Vec::new(),
         }
     }
 
@@ -91,13 +100,25 @@ impl Field {
     /// separable box filter — horizontal 3-sums per row, then a sliding
     /// 3-row vertical window, minus the centre — turning the naive 9
     /// reads/patch into ~3 amortised.
+    /// Zero-allocation on the steady state: `hsum`/`next` are persistent
+    /// scratch buffers (sized on first use), and the result is swapped into
+    /// `data` instead of replacing the allocation. The arithmetic — order
+    /// of operations included — is identical to the original per-tick
+    /// `vec!` version, so trajectories are bit-for-bit unchanged (pinned by
+    /// `tests/sim_golden.rs`).
     pub fn diffuse(&mut self, d: f64) {
         let n = self.size;
         let share = d / 8.0;
+        if self.hsum.len() != n * n {
+            // first diffuse on this field: size the scratch once
+            self.hsum.resize(n * n, 0.0);
+            self.next.resize(n * n, 0.0);
+        }
         // horizontal 3-window sums (zero beyond the edge)
-        let mut hsum = vec![0.0f64; n * n];
+        let data = &self.data;
+        let hsum = &mut self.hsum;
         for r in 0..n {
-            let row = &self.data[r * n..(r + 1) * n];
+            let row = &data[r * n..(r + 1) * n];
             let h = &mut hsum[r * n..(r + 1) * n];
             for c in 0..n {
                 let left = if c > 0 { row[c - 1] } else { 0.0 };
@@ -105,7 +126,8 @@ impl Field {
                 h[c] = left + row[c] + right;
             }
         }
-        let mut next = vec![0.0f64; n * n];
+        let hsum = &self.hsum;
+        let next = &mut self.next;
         for r in 0..n {
             // in-world neighbour counts are separable too:
             // (3-window width) x (3-window height) - 1
@@ -115,12 +137,14 @@ impl Field {
                 let count = hcnt * vcnt - 1.0;
                 let above = if r > 0 { hsum[(r - 1) * n + c] } else { 0.0 };
                 let below = if r + 1 < n { hsum[(r + 1) * n + c] } else { 0.0 };
-                let v = self.data[r * n + c];
+                let v = data[r * n + c];
                 let neigh = above + hsum[r * n + c] + below - v;
                 next[r * n + c] = v - v * d * count / 8.0 + share * neigh;
             }
         }
-        self.data = next;
+        // every element of `next` was just written; the stale values left
+        // in the swapped-out buffer are overwritten on the following tick
+        std::mem::swap(&mut self.data, &mut self.next);
     }
 
     /// Uniform decay: `field *= keep`.
@@ -170,6 +194,35 @@ mod tests {
         f.diffuse(1.0);
         // 3 neighbours get 1 each; corner keeps 5/8 of 8 = 5
         assert!((f.get(0, 0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn repeated_diffuse_reuses_scratch_and_stays_exact() {
+        // one field diffused 5 times (scratch reused across ticks) vs a
+        // freshly constructed field per tick carrying the same values: the
+        // persistent buffers must not leak state between ticks
+        let mut reused = Field::new(9);
+        reused.set(4, 4, 100.0);
+        reused.set(0, 8, 7.0);
+        for step in 0..5 {
+            let mut fresh = Field::new(9);
+            for r in 0..9 {
+                for c in 0..9 {
+                    fresh.set(r, c, reused.get(r, c));
+                }
+            }
+            reused.diffuse(0.6);
+            fresh.diffuse(0.6);
+            for r in 0..9 {
+                for c in 0..9 {
+                    assert_eq!(
+                        reused.get(r, c).to_bits(),
+                        fresh.get(r, c).to_bits(),
+                        "divergence at step {step}, patch ({r}, {c})"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -59,13 +59,6 @@ impl Json {
         }
     }
 
-    /// Serialise back to compact JSON text.
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -117,6 +110,15 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Serialise back to compact JSON text (use via `.to_string()`).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 

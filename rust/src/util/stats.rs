@@ -71,8 +71,10 @@ pub fn mad(xs: &[f64]) -> f64 {
 
 /// Linear-interpolated quantile (type-7, the R/numpy default).
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    // total_cmp: a NaN sample sorts last instead of panicking (this feeds
+    // the replication descriptors, which can see NaN objectives)
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     if v.is_empty() {
         return f64::NAN;
     }

@@ -1,0 +1,103 @@
+//! Golden determinism tests for the §Perf hot-path refactor.
+//!
+//! `sim::reference` is the pre-optimisation kernel kept verbatim (fresh
+//! `vec!` per diffuse, cloned ant per tick, full-grid latch scans). The
+//! optimised `sim::ants` must reproduce its trajectories **bit for bit**:
+//! same RNG draw order, same IEEE-754 operation order, same latch ticks.
+//! Any divergence — however small — means the refactor changed model
+//! behaviour, not just its cost.
+
+use molers::sim::ants::{evaluate, AntParams, AntSim, WORLD};
+use molers::sim::reference::{evaluate as reference_evaluate, ReferenceAntSim};
+
+const GOLDEN_SEEDS: [u64; 3] = [1, 42, 0xDEAD_BEEF];
+
+fn paper_defaults() -> AntParams {
+    AntParams {
+        population: 125.0,
+        diffusion_rate: 50.0,
+        evaporation_rate: 50.0,
+    }
+}
+
+fn trail_params() -> AntParams {
+    // low evaporation: persistent trails, all sources empty within the run
+    AntParams {
+        population: 125.0,
+        diffusion_rate: 50.0,
+        evaporation_rate: 10.0,
+    }
+}
+
+#[test]
+fn golden_objectives_bit_identical_across_seeds() {
+    for &seed in &GOLDEN_SEEDS {
+        for params in [paper_defaults(), trail_params()] {
+            let optimised = evaluate(params, seed, 600);
+            let reference = reference_evaluate(params, seed, 600);
+            for o in 0..3 {
+                assert_eq!(
+                    optimised[o].to_bits(),
+                    reference[o].to_bits(),
+                    "objective {o} diverged for seed {seed} / {params:?}: \
+                     optimised {optimised:?} vs reference {reference:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_full_state_bit_identical_after_stepping() {
+    // stronger than the objective check: every patch of every field and
+    // every ant pose must match after 250 interleaved ticks
+    let seed = GOLDEN_SEEDS[1];
+    let mut fast = AntSim::new(trail_params(), seed);
+    let mut slow = ReferenceAntSim::new(trail_params(), seed);
+    for _ in 0..250 {
+        fast.step();
+        slow.step();
+    }
+    assert_eq!(fast.tick, slow.tick);
+    assert_eq!(fast.final_ticks, slow.final_ticks);
+    for r in 0..WORLD {
+        for c in 0..WORLD {
+            assert_eq!(
+                fast.chemical.get(r, c).to_bits(),
+                slow.chemical.get(r, c).to_bits(),
+                "chemical diverged at ({r}, {c})"
+            );
+            assert_eq!(
+                fast.food.get(r, c).to_bits(),
+                slow.food.get(r, c).to_bits(),
+                "food diverged at ({r}, {c})"
+            );
+        }
+    }
+    let (fp, sp) = (fast.ant_positions(), slow.ant_positions());
+    assert_eq!(fp.len(), sp.len());
+    for (i, (a, b)) in fp.iter().zip(&sp).enumerate() {
+        assert_eq!(a.0.to_bits(), b.0.to_bits(), "ant {i} x diverged");
+        assert_eq!(a.1.to_bits(), b.1.to_bits(), "ant {i} y diverged");
+        assert_eq!(a.2, b.2, "ant {i} carrying diverged");
+    }
+    // and the incremental counters equal the reference's grid scans
+    let (fr, sr) = (fast.remaining(), slow.remaining());
+    for s in 0..3 {
+        assert_eq!(fr[s].to_bits(), sr[s].to_bits(), "source {s} remaining");
+    }
+}
+
+#[test]
+fn golden_zero_population_edge_case() {
+    let params = AntParams {
+        population: 0.0,
+        ..trail_params()
+    };
+    for &seed in &GOLDEN_SEEDS {
+        assert_eq!(
+            evaluate(params, seed, 100),
+            reference_evaluate(params, seed, 100)
+        );
+    }
+}
