@@ -1,0 +1,172 @@
+//! P3 (§tentpole): broker makespan on a 10k-job wave, healthy vs a
+//! 20%-failing backend mix, across dispatch policies.
+//!
+//! Fleet: a 48-node PBS cluster at reference speed plus a 48-node SGE
+//! cluster whose nodes are 2.5× slower. In the failing mix the fast
+//! cluster additionally drops 20% of submissions (FlakyEnv), so the
+//! broker must detect, re-route and pay resubmission latency. Jobs are
+//! submitted in waves (as the GA engines do), which is what lets the
+//! EWMA policy learn per-backend throughput between waves; round-robin
+//! keeps splitting evenly and eats the slow cluster's makespan.
+//!
+//! Acceptance (ISSUE 2): EWMA beats round-robin makespan on the failing
+//! mix — recorded as `failing20_rr_over_ewma` in `BENCH_p3_broker.json`
+//! (> 1 means EWMA wins).
+//!
+//! Knobs: `P3_BROKER_JOBS` (default 10000; CI smoke uses fewer),
+//! `P3_BROKER_WAVE` (default 500), `BENCH_OUT_DIR`.
+
+use std::sync::Arc;
+
+use molers::bench::Bench;
+use molers::broker::{policy, Broker, FlakyEnv, SpeculationConfig};
+use molers::core::Context;
+use molers::dsl::ClosureTask;
+use molers::environment::cluster::{BatchEnvironment, InfraModel, SimCluster};
+use molers::environment::{Environment, Job};
+use molers::exec::ThreadPool;
+use molers::gridscale::shell::Flavor;
+use molers::gridscale::SgeAdapter;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+const JOB_COST_S: f64 = 10.0;
+const FAST_NODES: usize = 48;
+const SLOW_NODES: usize = 48;
+const SLOW_FACTOR: f64 = 2.5;
+const FAILURE_RATE: f64 = 0.2;
+
+fn fleet(
+    pool: &Arc<ThreadPool>,
+    policy_name: &str,
+    failing: bool,
+    speculative: bool,
+    seed: u64,
+) -> Broker {
+    let fast: Arc<dyn Environment> = {
+        let pbs = Arc::new(BatchEnvironment::pbs(FAST_NODES, Arc::clone(pool), seed));
+        if failing {
+            Arc::new(FlakyEnv::new(pbs, FAILURE_RATE, seed ^ 0xFA11))
+        } else {
+            pbs
+        }
+    };
+    let slow: Arc<dyn Environment> = Arc::new(BatchEnvironment::new(
+        format!("sge-slow({SLOW_NODES})"),
+        Arc::new(SgeAdapter),
+        Flavor::Sge,
+        SimCluster::homogeneous(SLOW_NODES, SLOW_FACTOR),
+        InfraModel::cluster(),
+        Arc::clone(pool),
+        seed ^ 0x510,
+    ));
+    let builder = Broker::builder(format!("p3[{policy_name}]"))
+        .backend(fast, FAST_NODES)
+        .backend(slow, SLOW_NODES)
+        .policy(policy::by_name(policy_name).expect("known policy"));
+    if speculative {
+        builder
+            .speculation(SpeculationConfig {
+                quantile: 0.95,
+                min_samples: 64,
+            })
+            .build()
+            .unwrap()
+    } else {
+        builder.no_speculation().build().unwrap()
+    }
+}
+
+/// Push `jobs` cost-10s jobs through the broker in waves, draining each
+/// wave before the next (the engines' shape). Returns the virtual
+/// makespan.
+fn run_campaign(broker: &Broker, jobs: usize, wave: usize) -> f64 {
+    let task = Arc::new(ClosureTask::new("unit", |_: &Context| Ok(Context::new())).cost(JOB_COST_S));
+    let mut remaining = jobs;
+    while remaining > 0 {
+        let k = remaining.min(wave);
+        let handles: Vec<_> = (0..k)
+            .map(|_| broker.submit(Job::new(Arc::clone(&task) as _, Context::new())))
+            .collect();
+        for h in handles {
+            h.wait().expect("broker must rescue every job");
+        }
+        remaining -= k;
+    }
+    broker.stats().virtual_makespan
+}
+
+fn main() {
+    let jobs = env_usize("P3_BROKER_JOBS", 10_000);
+    let wave = env_usize("P3_BROKER_WAVE", 500).max(1);
+    let threads = std::thread::available_parallelism()
+        .map(|t| t.get())
+        .unwrap_or(4);
+    let pool = Arc::new(ThreadPool::new(threads));
+    println!(
+        "{jobs} jobs x {JOB_COST_S}s in waves of {wave}; fleet: pbs {FAST_NODES}@1.0 \
+         + sge {SLOW_NODES}@{SLOW_FACTOR} (failing mix: {}% loss on pbs)",
+        (FAILURE_RATE * 100.0) as u32
+    );
+
+    let mut b = Bench::new("p3_broker").warmup(0).samples(1);
+    let mut makespans: Vec<(String, f64)> = Vec::new();
+
+    for (mix, failing) in [("healthy", false), ("failing20", true)] {
+        for pol in ["roundrobin", "least", "ewma"] {
+            let broker = fleet(&pool, pol, failing, false, 7);
+            let mut makespan = 0.0;
+            b.case(&format!("{mix}_{pol}_wall"), || {
+                makespan = run_campaign(&broker, jobs, wave);
+            });
+            let s = broker.stats();
+            assert_eq!(s.completed as usize, jobs, "{mix}/{pol} lost jobs");
+            b.metric(&format!("{mix}_{pol}_makespan"), makespan, "virtual s");
+            if failing {
+                b.metric(
+                    &format!("{mix}_{pol}_reroutes"),
+                    broker.counters().reroutes as f64,
+                    "jobs",
+                );
+            }
+            makespans.push((format!("{mix}_{pol}"), makespan));
+        }
+    }
+
+    let get = |k: &str| {
+        makespans
+            .iter()
+            .find(|(n, _)| n == k)
+            .map(|(_, v)| *v)
+            .unwrap_or(f64::NAN)
+    };
+    b.metric(
+        "healthy_rr_over_ewma",
+        get("healthy_roundrobin") / get("healthy_ewma"),
+        "x (> 1 = ewma wins)",
+    );
+    b.metric(
+        "failing20_rr_over_ewma",
+        get("failing20_roundrobin") / get("failing20_ewma"),
+        "x (acceptance: > 1)",
+    );
+
+    // straggler cloning on top of EWMA, failing mix
+    {
+        let broker = fleet(&pool, "ewma", true, true, 7);
+        let makespan = run_campaign(&broker, jobs, wave);
+        let c = broker.counters();
+        b.metric("failing20_ewma_spec_makespan", makespan, "virtual s");
+        b.metric("speculative_launched", c.speculative_launched as f64, "jobs");
+        b.metric("speculative_wins", c.speculative_wins as f64, "jobs");
+    }
+
+    if let Err(e) = b.write_json() {
+        eprintln!("could not write bench json: {e}");
+    }
+}

@@ -1,0 +1,126 @@
+//! Deterministic fault injection: wrap any environment so a fraction of
+//! submissions is dropped before execution (the middleware "lost" the
+//! job). This is how tests, the failover example and the `p3_broker`
+//! bench build a misbehaving backend without touching the inner
+//! environment's own failure model.
+
+use std::sync::{Arc, Mutex};
+
+use crate::environment::{EnvStats, Environment, Job, JobHandle};
+use crate::error::Error;
+use crate::util::Rng;
+
+/// An [`Environment`] decorator that terminally fails each submission
+/// with probability `failure_rate`, drawn from its own deterministic RNG
+/// in submission order. Failed jobs never reach the inner environment —
+/// the caller (normally the [`crate::broker::Broker`]) sees an immediate
+/// [`Error::NodeFailure`] and is expected to re-route.
+pub struct FlakyEnv {
+    name: String,
+    inner: Arc<dyn Environment>,
+    failure_rate: f64,
+    rng: Mutex<Rng>,
+    injected: Mutex<u64>,
+}
+
+impl FlakyEnv {
+    pub fn new(inner: Arc<dyn Environment>, failure_rate: f64, seed: u64) -> Self {
+        FlakyEnv {
+            name: format!("flaky[{:.0}%]:{}", failure_rate * 100.0, inner.name()),
+            inner,
+            failure_rate: failure_rate.clamp(0.0, 1.0),
+            rng: Mutex::new(Rng::new(seed)),
+            injected: Mutex::new(0),
+        }
+    }
+
+    /// Submissions dropped so far.
+    pub fn injected_failures(&self) -> u64 {
+        *self.injected.lock().unwrap()
+    }
+}
+
+impl Environment for FlakyEnv {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn submit(&self, job: Job) -> JobHandle {
+        let drop_it = self.rng.lock().unwrap().bool(self.failure_rate);
+        if drop_it {
+            *self.injected.lock().unwrap() += 1;
+            return JobHandle::ready(Err(Error::NodeFailure {
+                node: format!("{}/<lost>", self.name),
+                reason: "submission dropped by injected fault".into(),
+            }));
+        }
+        self.inner.submit(job)
+    }
+
+    fn stats(&self) -> EnvStats {
+        // the inner environment never saw the dropped jobs; add them back
+        // so this environment's ledger stays consistent
+        let mut s = self.inner.stats();
+        let injected = *self.injected.lock().unwrap();
+        s.submitted += injected;
+        s.failed_attempts += injected;
+        s.failed_jobs += injected;
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Context;
+    use crate::dsl::task::ClosureTask;
+    use crate::environment::local::LocalEnvironment;
+
+    fn noop() -> Arc<ClosureTask> {
+        Arc::new(ClosureTask::new("noop", |c: &Context| Ok(c.clone())))
+    }
+
+    #[test]
+    fn injects_the_requested_failure_fraction() {
+        let env = FlakyEnv::new(Arc::new(LocalEnvironment::new(2)), 0.3, 5);
+        let mut failures = 0u64;
+        for _ in 0..200 {
+            if env
+                .submit(Job::new(noop(), Context::new()))
+                .wait()
+                .is_err()
+            {
+                failures += 1;
+            }
+        }
+        assert!(
+            (30..=90).contains(&failures),
+            "expected ≈60 failures at 30%, got {failures}"
+        );
+        assert_eq!(env.injected_failures(), failures);
+        let s = env.stats();
+        assert_eq!(s.submitted, 200);
+        assert_eq!(s.failed_jobs, failures);
+        assert_eq!(s.completed, 200 - failures);
+        assert_eq!(s.in_flight(), 0);
+    }
+
+    #[test]
+    fn zero_rate_is_transparent() {
+        let env = FlakyEnv::new(Arc::new(LocalEnvironment::new(1)), 0.0, 1);
+        for _ in 0..20 {
+            env.submit(Job::new(noop(), Context::new())).wait().unwrap();
+        }
+        assert_eq!(env.injected_failures(), 0);
+    }
+
+    #[test]
+    fn failure_surfaces_as_node_failure() {
+        let env = FlakyEnv::new(Arc::new(LocalEnvironment::new(1)), 1.0, 1);
+        let err = env
+            .submit(Job::new(noop(), Context::new()))
+            .wait()
+            .unwrap_err();
+        assert!(matches!(err, Error::NodeFailure { .. }));
+    }
+}

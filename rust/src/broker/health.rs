@@ -1,0 +1,186 @@
+//! Per-backend health tracking and circuit breaking.
+//!
+//! Each backend keeps a sliding window of recent attempt outcomes. When
+//! the windowed failure rate crosses a threshold the backend is
+//! *quarantined*: the broker stops routing new work to it for a cooldown
+//! measured in dispatch decisions (a deterministic clock that advances
+//! whether or not virtual time does). When the cooldown expires the
+//! window is cleared, so the backend re-enters service with a clean slate
+//! and one bad century ago doesn't keep re-tripping the breaker
+//! (half-open probing).
+
+use std::collections::VecDeque;
+
+/// Circuit-breaker thresholds.
+#[derive(Debug, Clone)]
+pub struct CircuitConfig {
+    /// Outcomes remembered per backend.
+    pub window: usize,
+    /// Minimum outcomes in the window before the breaker may trip.
+    pub min_samples: usize,
+    /// Windowed failure rate at/above which the breaker trips.
+    pub failure_threshold: f64,
+    /// Dispatch decisions a tripped backend sits out.
+    pub cooldown_dispatches: u32,
+}
+
+impl Default for CircuitConfig {
+    fn default() -> Self {
+        CircuitConfig {
+            window: 32,
+            min_samples: 8,
+            failure_threshold: 0.5,
+            cooldown_dispatches: 16,
+        }
+    }
+}
+
+/// Health state of one backend.
+#[derive(Debug, Default)]
+pub struct Health {
+    outcomes: VecDeque<bool>, // true = success
+    failures_in_window: usize,
+    cooldown: u32,
+    /// Times the breaker has tripped over the backend's lifetime.
+    pub trips: u64,
+}
+
+impl Health {
+    /// Record one attempt outcome; trips the breaker when the window is
+    /// both full enough and bad enough.
+    pub fn record(&mut self, success: bool, cfg: &CircuitConfig) {
+        if self.outcomes.len() == cfg.window.max(1) {
+            if let Some(old) = self.outcomes.pop_front() {
+                if !old {
+                    self.failures_in_window -= 1;
+                }
+            }
+        }
+        self.outcomes.push_back(success);
+        if !success {
+            self.failures_in_window += 1;
+        }
+        if self.cooldown == 0
+            && self.outcomes.len() >= cfg.min_samples.max(1)
+            && self.failure_rate() >= cfg.failure_threshold
+        {
+            self.cooldown = cfg.cooldown_dispatches;
+            self.trips += 1;
+        }
+    }
+
+    /// Advance the quarantine clock by one dispatch decision. On expiry
+    /// the outcome window resets (half-open: the next attempts decide).
+    pub fn tick(&mut self) {
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            if self.cooldown == 0 {
+                self.outcomes.clear();
+                self.failures_in_window = 0;
+            }
+        }
+    }
+
+    pub fn quarantined(&self) -> bool {
+        self.cooldown > 0
+    }
+
+    /// Windowed failure rate (0.0 while the window is empty).
+    pub fn failure_rate(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            0.0
+        } else {
+            self.failures_in_window as f64 / self.outcomes.len() as f64
+        }
+    }
+
+    /// Windowed success rate (1.0 while the window is empty).
+    pub fn success_rate(&self) -> f64 {
+        1.0 - self.failure_rate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> CircuitConfig {
+        CircuitConfig {
+            window: 8,
+            min_samples: 4,
+            failure_threshold: 0.5,
+            cooldown_dispatches: 3,
+        }
+    }
+
+    #[test]
+    fn healthy_backend_never_trips() {
+        let mut h = Health::default();
+        for _ in 0..100 {
+            h.record(true, &cfg());
+        }
+        assert!(!h.quarantined());
+        assert_eq!(h.trips, 0);
+        assert_eq!(h.success_rate(), 1.0);
+    }
+
+    #[test]
+    fn failure_spike_trips_and_cooldown_releases() {
+        let mut h = Health::default();
+        for _ in 0..4 {
+            h.record(false, &cfg());
+        }
+        assert!(h.quarantined(), "4/4 failures must trip at threshold 0.5");
+        assert_eq!(h.trips, 1);
+        h.tick();
+        h.tick();
+        assert!(h.quarantined());
+        h.tick();
+        assert!(!h.quarantined(), "cooldown of 3 dispatches expired");
+        // half-open: the window was cleared on release
+        assert_eq!(h.failure_rate(), 0.0);
+    }
+
+    #[test]
+    fn needs_min_samples_before_tripping() {
+        let mut h = Health::default();
+        h.record(false, &cfg());
+        h.record(false, &cfg());
+        h.record(false, &cfg());
+        assert!(!h.quarantined(), "3 < min_samples, must not trip yet");
+    }
+
+    #[test]
+    fn window_slides() {
+        let mut h = Health::default();
+        let c = cfg();
+        for _ in 0..8 {
+            h.record(false, &c);
+        }
+        // flush the cooldown so old failures can age out
+        for _ in 0..3 {
+            h.tick();
+        }
+        for _ in 0..8 {
+            h.record(true, &c);
+        }
+        assert_eq!(h.failure_rate(), 0.0, "old failures aged out of the window");
+        assert!(!h.quarantined());
+    }
+
+    #[test]
+    fn recovered_backend_can_trip_again() {
+        let mut h = Health::default();
+        let c = cfg();
+        for _ in 0..4 {
+            h.record(false, &c);
+        }
+        for _ in 0..3 {
+            h.tick();
+        }
+        for _ in 0..4 {
+            h.record(false, &c);
+        }
+        assert_eq!(h.trips, 2);
+    }
+}

@@ -1,0 +1,433 @@
+//! Run journal: a dependency-free JSONL checkpoint stream that makes long
+//! optimisations killable and resumable (`--resume <journal>`).
+//!
+//! Every record is one JSON object per line with a `"kind"` tag. The
+//! records a calibration run writes:
+//!
+//! ```text
+//! {"kind":"run_start","run":"calibrate","seed":42,"mu":8,"lambda":8}
+//! {"kind":"generation","generation":0,"evaluations":8,"clock":412.7,"rng":["718...","92...","33...","105..."],"population":[{"genome":[3.1,88.0],"objectives":[12.0,4.5,9.1],"evals":1},...]}
+//! {"kind":"generation","generation":1,"evaluations":16,...}
+//! {"kind":"env_stats","env":"broker","submitted":16,"completed":16,"failed_attempts":2,"resubmissions":2,"failed_jobs":0}
+//! {"kind":"run_end","evaluations":16,"clock":2201.4}
+//! ```
+//!
+//! A `generation` record captures everything the generational driver
+//! needs to continue: the selected population (genomes, running-average
+//! objectives, per-individual evaluation counts), the virtual clock, the
+//! global evaluation counter, and the raw RNG state (serialised as
+//! strings — u64 does not fit in a JSON double). Because the objective
+//! values round-trip exactly through the shortest-representation float
+//! writer, a killed run resumed from its journal reaches a final Pareto
+//! front bit-identical to an uninterrupted run with the same seed.
+//!
+//! Island runs append `island` progress records and periodic `archive`
+//! snapshots instead; resuming seeds the archive and continues the
+//! remaining evaluation budget.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::environment::EnvStats;
+use crate::error::{Error, Result};
+use crate::evolution::genome::Individual;
+use crate::util::json::{parse, Json};
+use crate::util::Rng;
+
+/// Append-only JSONL checkpoint writer. Clone-free and lock-cheap: one
+/// line per record, flushed eagerly so a `kill -9` loses at most the
+/// line being written (the loader tolerates a torn final line).
+pub struct Journal {
+    path: PathBuf,
+    file: Mutex<std::fs::File>,
+}
+
+impl Journal {
+    /// Start a fresh journal (truncates an existing file).
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let file = std::fs::File::create(&path)?;
+        Ok(Journal {
+            path,
+            file: Mutex::new(file),
+        })
+    }
+
+    /// Continue an existing journal (used by `--resume`).
+    ///
+    /// A process killed mid-write leaves an unterminated final line;
+    /// appending onto it would weld the fragment to the next record and
+    /// corrupt the file *mid-stream* (which [`Journal::load`] treats as
+    /// fatal). So the torn tail is truncated first — the same fragment
+    /// `load` already ignores.
+    pub fn append_to(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if !text.is_empty() && !text.ends_with('\n') {
+                let keep = text.rfind('\n').map(|i| i + 1).unwrap_or(0);
+                let f = std::fs::OpenOptions::new().write(true).open(&path)?;
+                f.set_len(keep as u64)?;
+            }
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)?;
+        Ok(Journal {
+            path,
+            file: Mutex::new(file),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one record as a line and flush it to disk.
+    pub fn append(&self, record: &Json) -> Result<()> {
+        let mut f = self.file.lock().unwrap();
+        writeln!(f, "{record}")?;
+        f.flush()?;
+        Ok(())
+    }
+
+    /// Parse a journal back into records. A torn final line (the process
+    /// died mid-write) is dropped; corruption anywhere else is an error.
+    pub fn load(path: impl AsRef<Path>) -> Result<Vec<Json>> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+        let mut records = Vec::with_capacity(lines.len());
+        for (i, line) in lines.iter().enumerate() {
+            match parse(line) {
+                Ok(rec) => records.push(rec),
+                Err(_) if i + 1 == lines.len() => break, // torn tail
+                Err(e) => {
+                    return Err(Error::EnvironmentError {
+                        environment: "journal".into(),
+                        message: format!("corrupt journal line {}: {e}", i + 1),
+                    })
+                }
+            }
+        }
+        Ok(records)
+    }
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn f64_arr(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+}
+
+fn individual_json(ind: &Individual) -> Json {
+    obj(vec![
+        ("genome", f64_arr(&ind.genome)),
+        ("objectives", f64_arr(&ind.objectives)),
+        ("evals", Json::Num(f64::from(ind.evaluations))),
+    ])
+}
+
+fn parse_f64_arr(j: &Json) -> Option<Vec<f64>> {
+    // strict: any non-numeric element rejects the record — silently
+    // dropping one would resume with a truncated genome/objective vector
+    j.as_arr()?.iter().map(Json::as_f64).collect()
+}
+
+fn parse_individual(j: &Json) -> Option<Individual> {
+    Some(Individual {
+        genome: parse_f64_arr(j.get("genome")?)?,
+        objectives: parse_f64_arr(j.get("objectives")?)?,
+        evaluations: j.get("evals")?.as_f64()? as u32,
+    })
+}
+
+fn population_json(population: &[Individual]) -> Json {
+    Json::Arr(population.iter().map(individual_json).collect())
+}
+
+fn parse_population(j: &Json) -> Option<Vec<Individual>> {
+    j.as_arr()?.iter().map(parse_individual).collect()
+}
+
+/// `run_start` record.
+pub fn run_start(run: &str, seed: u64, extra: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![
+        ("kind", Json::Str("run_start".into())),
+        ("run", Json::Str(run.into())),
+        ("seed", Json::Num(seed as f64)),
+    ];
+    pairs.extend(extra);
+    obj(pairs)
+}
+
+/// `generation` checkpoint record (generational driver).
+pub fn generation_record(
+    generation: u32,
+    evaluations: u64,
+    clock: f64,
+    rng: &Rng,
+    population: &[Individual],
+) -> Json {
+    obj(vec![
+        ("kind", Json::Str("generation".into())),
+        ("generation", Json::Num(f64::from(generation))),
+        ("evaluations", Json::Num(evaluations as f64)),
+        ("clock", Json::Num(clock)),
+        (
+            "rng",
+            Json::Arr(
+                rng.state()
+                    .iter()
+                    .map(|s| Json::Str(s.to_string()))
+                    .collect(),
+            ),
+        ),
+        ("population", population_json(population)),
+    ])
+}
+
+/// `island` progress record (island driver).
+pub fn island_record(islands_completed: u64, evaluations: u64, clock: f64) -> Json {
+    obj(vec![
+        ("kind", Json::Str("island".into())),
+        ("islands_completed", Json::Num(islands_completed as f64)),
+        ("evaluations", Json::Num(evaluations as f64)),
+        ("clock", Json::Num(clock)),
+    ])
+}
+
+/// `archive` snapshot record (island driver).
+pub fn archive_record(evaluations: u64, population: &[Individual]) -> Json {
+    obj(vec![
+        ("kind", Json::Str("archive".into())),
+        ("evaluations", Json::Num(evaluations as f64)),
+        ("population", population_json(population)),
+    ])
+}
+
+/// `env_stats` record.
+pub fn env_stats_record(env: &str, s: &EnvStats) -> Json {
+    obj(vec![
+        ("kind", Json::Str("env_stats".into())),
+        ("env", Json::Str(env.into())),
+        ("submitted", Json::Num(s.submitted as f64)),
+        ("completed", Json::Num(s.completed as f64)),
+        ("failed_attempts", Json::Num(s.failed_attempts as f64)),
+        ("resubmissions", Json::Num(s.resubmissions as f64)),
+        ("failed_jobs", Json::Num(s.failed_jobs as f64)),
+        ("virtual_makespan", Json::Num(s.virtual_makespan)),
+    ])
+}
+
+/// `run_end` record.
+pub fn run_end(evaluations: u64, clock: f64) -> Json {
+    obj(vec![
+        ("kind", Json::Str("run_end".into())),
+        ("evaluations", Json::Num(evaluations as f64)),
+        ("clock", Json::Num(clock)),
+    ])
+}
+
+/// Everything the generational driver needs to continue a killed run.
+#[derive(Clone)]
+pub struct ResumeState {
+    /// Last fully checkpointed generation (resume continues at `+ 1`).
+    pub generation: u32,
+    pub evaluations: u64,
+    pub clock: f64,
+    pub rng: Rng,
+    pub population: Vec<Individual>,
+}
+
+fn kind(rec: &Json) -> Option<&str> {
+    rec.get("kind").and_then(Json::as_str)
+}
+
+/// Extract the latest generation checkpoint from journal records.
+pub fn resume_state(records: &[Json]) -> Option<ResumeState> {
+    let rec = records
+        .iter()
+        .rev()
+        .find(|r| kind(r) == Some("generation"))?;
+    let rng_state: Vec<u64> = rec
+        .get("rng")?
+        .as_arr()?
+        .iter()
+        .filter_map(|s| s.as_str()?.parse::<u64>().ok())
+        .collect();
+    let rng_state: [u64; 4] = rng_state.try_into().ok()?;
+    Some(ResumeState {
+        generation: rec.get("generation")?.as_f64()? as u32,
+        evaluations: rec.get("evaluations")?.as_f64()? as u64,
+        clock: rec.get("clock")?.as_f64()?,
+        rng: Rng::from_state(rng_state),
+        population: parse_population(rec.get("population")?)?,
+    })
+}
+
+/// Load a journal and extract its latest generation checkpoint.
+pub fn load_resume(path: impl AsRef<Path>) -> Result<Option<ResumeState>> {
+    Ok(resume_state(&Journal::load(path)?))
+}
+
+/// Latest island-archive snapshot: `(population, evaluations_done)`.
+pub fn island_resume(records: &[Json]) -> Option<(Vec<Individual>, u64)> {
+    let rec = records.iter().rev().find(|r| kind(r) == Some("archive"))?;
+    Some((
+        parse_population(rec.get("population")?)?,
+        rec.get("evaluations")?.as_f64()? as u64,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("molers-journal-{}-{name}", std::process::id()))
+    }
+
+    fn pop() -> Vec<Individual> {
+        // PI and 0.1000000000000001 have long shortest-representations —
+        // they exercise the exact float round-trip the resume guarantee
+        // rests on
+        vec![
+            Individual {
+                genome: vec![1.25, 0.1000000000000001],
+                objectives: vec![3.5, std::f64::consts::PI],
+                evaluations: 3,
+            },
+            Individual::new(vec![0.0, 99.0], vec![1.0, 2.0]),
+        ]
+    }
+
+    #[test]
+    fn generation_checkpoint_round_trips_exactly() {
+        let path = tmp("gen");
+        let j = Journal::create(&path).unwrap();
+        let mut rng = Rng::new(7);
+        for _ in 0..13 {
+            rng.next_u64();
+        }
+        j.append(&run_start("calibrate", 7, vec![("mu", Json::Num(2.0))]))
+            .unwrap();
+        j.append(&generation_record(4, 80, 1234.5678901, &rng, &pop()))
+            .unwrap();
+        let records = Journal::load(&path).unwrap();
+        assert_eq!(records.len(), 2);
+        let r = resume_state(&records).expect("checkpoint present");
+        assert_eq!(r.generation, 4);
+        assert_eq!(r.evaluations, 80);
+        assert_eq!(r.clock, 1234.5678901);
+        assert_eq!(r.population, pop(), "population must round-trip bit-exactly");
+        // the resumed rng continues the exact stream
+        let mut resumed = r.rng;
+        let mut original = rng;
+        for _ in 0..50 {
+            assert_eq!(resumed.next_u64(), original.next_u64());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn latest_checkpoint_wins() {
+        let path = tmp("latest");
+        let j = Journal::create(&path).unwrap();
+        let rng = Rng::new(1);
+        j.append(&generation_record(1, 10, 1.0, &rng, &pop())).unwrap();
+        j.append(&generation_record(2, 20, 2.0, &rng, &pop())).unwrap();
+        let r = resume_state(&Journal::load(&path).unwrap()).unwrap();
+        assert_eq!(r.generation, 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_final_line_is_tolerated() {
+        let path = tmp("torn");
+        let j = Journal::create(&path).unwrap();
+        let rng = Rng::new(1);
+        j.append(&generation_record(1, 10, 1.0, &rng, &pop())).unwrap();
+        // simulate a kill mid-write of the next checkpoint
+        {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{{\"kind\":\"generation\",\"generation\":2,\"evalu").unwrap();
+        }
+        let records = Journal::load(&path).unwrap();
+        let r = resume_state(&records).unwrap();
+        assert_eq!(r.generation, 1, "torn checkpoint must be ignored");
+
+        // resuming must repair the torn tail, not weld new records onto
+        // it — otherwise the journal is corrupt mid-file forever after
+        {
+            let j2 = Journal::append_to(&path).unwrap();
+            j2.append(&run_end(10, 1.0)).unwrap();
+        }
+        let records = Journal::load(&path).unwrap();
+        assert_eq!(records.len(), 2, "checkpoint + run_end, fragment gone");
+        assert_eq!(kind(&records[1]), Some("run_end"));
+        assert_eq!(resume_state(&records).unwrap().generation, 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn wrong_typed_genome_element_rejects_the_checkpoint() {
+        let doc = parse(
+            "{\"kind\":\"generation\",\"generation\":1,\"evaluations\":2,\
+             \"clock\":1.0,\"rng\":[\"1\",\"2\",\"3\",\"4\"],\
+             \"population\":[{\"genome\":[0.5,null,0.7],\
+             \"objectives\":[1.0],\"evals\":1}]}",
+        )
+        .unwrap();
+        assert!(
+            resume_state(&[doc]).is_none(),
+            "a type-corrupted genome must not resume as a shorter one"
+        );
+    }
+
+    #[test]
+    fn corrupt_middle_line_is_an_error() {
+        let path = tmp("corrupt");
+        std::fs::write(&path, "{\"kind\":\"run_start\"}\nnot json\n{\"kind\":\"run_end\",\"evaluations\":0,\"clock\":0}\n").unwrap();
+        assert!(Journal::load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn island_archive_round_trips() {
+        let path = tmp("island");
+        let j = Journal::create(&path).unwrap();
+        j.append(&island_record(3, 300, 99.0)).unwrap();
+        j.append(&archive_record(300, &pop())).unwrap();
+        let records = Journal::load(&path).unwrap();
+        let (population, evals) = island_resume(&records).unwrap();
+        assert_eq!(evals, 300);
+        assert_eq!(population, pop());
+        assert!(resume_state(&records).is_none(), "no generation records");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn append_to_continues_a_file() {
+        let path = tmp("append");
+        {
+            let j = Journal::create(&path).unwrap();
+            j.append(&run_start("calibrate", 1, vec![])).unwrap();
+        }
+        {
+            let j = Journal::append_to(&path).unwrap();
+            j.append(&run_end(5, 1.0)).unwrap();
+        }
+        let records = Journal::load(&path).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(kind(&records[1]), Some("run_end"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,1081 @@
+//! The distribution broker: fault-tolerant multiplexing of one job
+//! stream over N heterogeneous execution environments (paper §2.2, §4.6).
+//!
+//! OpenMOLE's promise is that the user never manages submission, failure
+//! or stragglers — the platform does. [`Broker`] is that layer for this
+//! reproduction: it implements [`Environment`] itself, so every engine
+//! (generational GA, islands, the workflow scheduler) can sit on a fleet
+//! of environments through the same one-line switch they use for a single
+//! one. Per job it:
+//!
+//! * picks a backend through a pluggable [`DispatchPolicy`]
+//!   (round-robin, least-in-flight, or the EWMA throughput/latency
+//!   policy);
+//! * tracks per-backend health and **circuit-breaks**: a backend whose
+//!   windowed failure rate spikes is quarantined for a cooldown and its
+//!   work re-routed (see [`health`]);
+//! * **re-routes failures**: a terminally failed attempt is re-dispatched
+//!   to another backend (up to `max_attempts`), paying a virtual
+//!   resubmission penalty;
+//! * **speculatively resubmits stragglers** (OpenMOLE's oversubmission
+//!   trick on EGI, opt-in via [`BrokerBuilder::speculation`] /
+//!   `--speculate`): when a completed attempt's virtual duration exceeds
+//!   a quantile of its completed peers, a clone is raced on another
+//!   backend and the earlier virtual finish wins — the loser is
+//!   cancelled in the accounting. The race is post-hoc on the virtual
+//!   timeline (this repo's infrastructures are simulations around real
+//!   local compute), so the clone does re-run the real computation.
+//!
+//! Failure taxonomy: only *infrastructure* errors (node failures,
+//! walltime kills, environment/middleware errors) are re-routed and
+//! charged to backend health. A task-level error (the job's own bug) is
+//! surfaced immediately — re-running a deterministic failure elsewhere
+//! wastes backends and would quarantine healthy ones.
+//!
+//! The [`journal`] module provides the JSONL checkpoint stream that makes
+//! brokered runs resumable after a kill.
+
+pub mod fault;
+pub mod health;
+pub mod journal;
+pub mod policy;
+
+pub use fault::FlakyEnv;
+pub use health::{CircuitConfig, Health};
+pub use journal::{Journal, ResumeState};
+pub use policy::{
+    BackendView, DispatchPolicy, EwmaPolicy, LeastInFlight, RoundRobin,
+};
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::core::Context;
+use crate::dsl::task::Task;
+use crate::environment::{
+    EnvStats, Environment, Job, JobHandle, JobReport, JobWaiter,
+};
+use crate::environment::cluster::BatchEnvironment;
+use crate::environment::egi::EgiEnvironment;
+use crate::environment::local::LocalEnvironment;
+use crate::environment::ssh::SshEnvironment;
+use crate::error::{Error, Result};
+use crate::exec::ThreadPool;
+
+/// Straggler-cloning configuration.
+#[derive(Debug, Clone)]
+pub struct SpeculationConfig {
+    /// A completed job is a straggler when its virtual duration exceeds
+    /// this quantile of completed peers.
+    pub quantile: f64,
+    /// Completed jobs required before speculation arms.
+    pub min_samples: usize,
+}
+
+impl Default for SpeculationConfig {
+    fn default() -> Self {
+        SpeculationConfig {
+            quantile: 0.95,
+            min_samples: 20,
+        }
+    }
+}
+
+/// Broker-wide knobs.
+#[derive(Debug, Clone)]
+pub struct BrokerConfig {
+    /// Total attempts per job, first dispatch included.
+    pub max_attempts: u32,
+    /// Virtual seconds added per re-route (failure detection + brokering).
+    pub resubmit_penalty_s: f64,
+    pub circuit: CircuitConfig,
+    /// `None` disables straggler cloning.
+    pub speculation: Option<SpeculationConfig>,
+}
+
+impl Default for BrokerConfig {
+    fn default() -> Self {
+        BrokerConfig {
+            max_attempts: 4,
+            resubmit_penalty_s: 30.0,
+            circuit: CircuitConfig::default(),
+            // opt-in: the discrete-event race is post-hoc, so a clone
+            // re-runs the real computation — worth it for straggler-bound
+            // virtual campaigns, pure overhead for cheap local tasks.
+            // Enable with `.speculation(...)` or the CLI's `--speculate`.
+            speculation: None,
+        }
+    }
+}
+
+/// Broker-level event counters (beyond the [`EnvStats`] every environment
+/// reports).
+#[derive(Debug, Clone, Default)]
+pub struct BrokerCounters {
+    /// Failed attempts re-dispatched onto a different backend.
+    pub reroutes: u64,
+    pub speculative_launched: u64,
+    /// Speculative clones that finished (virtually) before their original.
+    pub speculative_wins: u64,
+    /// Losing copies written off in the accounting.
+    pub speculative_cancelled: u64,
+}
+
+/// Public snapshot of one backend's broker-side state.
+#[derive(Debug, Clone)]
+pub struct BackendSnapshot {
+    pub name: String,
+    pub capacity: usize,
+    pub in_flight: usize,
+    pub completed: u64,
+    pub failed: u64,
+    pub ewma_duration_s: f64,
+    pub quarantined: bool,
+    pub quarantine_trips: u64,
+}
+
+#[derive(Default)]
+struct BackendState {
+    in_flight: usize,
+    completed: u64,
+    failed: u64,
+    ewma_duration_s: f64,
+    health: Health,
+}
+
+struct Backend {
+    env: Arc<dyn Environment>,
+    capacity: usize,
+    state: Mutex<BackendState>,
+}
+
+/// Memoised straggler quantile: recomputed only after enough new
+/// completions, so the completion hot path stays O(1) amortised.
+struct ThresholdCache {
+    computed_at: usize,
+    value: f64,
+}
+
+struct BrokerCore {
+    name: String,
+    backends: Vec<Backend>,
+    policy: Box<dyn DispatchPolicy>,
+    cfg: BrokerConfig,
+    stats: Mutex<EnvStats>,
+    counters: Mutex<BrokerCounters>,
+    /// Virtual durations of completed jobs (straggler quantile input).
+    durations: Mutex<Vec<f64>>,
+    threshold_cache: Mutex<Option<ThresholdCache>>,
+}
+
+const EWMA_ALPHA: f64 = 0.2;
+const DURATION_WINDOW: usize = 4096;
+/// Completions between straggler-quantile refreshes.
+const THRESHOLD_REFRESH_EVERY: usize = 64;
+
+impl BrokerCore {
+    fn view(&self, index: usize, st: &BackendState) -> BackendView {
+        BackendView {
+            backend: index,
+            capacity: self.backends[index].capacity,
+            in_flight: st.in_flight,
+            completed: st.completed,
+            ewma_duration_s: st.ewma_duration_s,
+            success_rate: st.health.success_rate(),
+        }
+    }
+
+    /// Pick a backend (advancing quarantine clocks) and submit one
+    /// attempt. `exclude` lists backends this job already failed on.
+    fn dispatch(
+        &self,
+        task: &Arc<dyn Task>,
+        ctx: &Context,
+        release: f64,
+        exclude: &[usize],
+    ) -> (usize, JobHandle) {
+        let mut views = Vec::with_capacity(self.backends.len());
+        for (i, b) in self.backends.iter().enumerate() {
+            let mut st = b.state.lock().unwrap();
+            st.health.tick();
+            if exclude.contains(&i) || st.health.quarantined() {
+                continue;
+            }
+            views.push(self.view(i, &st));
+        }
+        if views.is_empty() {
+            // every healthy backend is excluded: quarantined ones are
+            // better than nothing
+            for (i, b) in self.backends.iter().enumerate() {
+                if exclude.contains(&i) {
+                    continue;
+                }
+                let st = b.state.lock().unwrap();
+                views.push(self.view(i, &st));
+            }
+        }
+        if views.is_empty() {
+            // the job failed everywhere already; give it its least-bad shot
+            for (i, b) in self.backends.iter().enumerate() {
+                let st = b.state.lock().unwrap();
+                views.push(self.view(i, &st));
+            }
+        }
+        let backend = views[self.policy.choose(&views)].backend;
+        self.backends[backend].state.lock().unwrap().in_flight += 1;
+        let job = Job::new(Arc::clone(task), ctx.clone()).released_at(release);
+        (backend, self.backends[backend].env.submit(job))
+    }
+
+    /// Account one resolved attempt on its backend.
+    fn record_attempt(&self, backend: usize, report: Option<&JobReport>) {
+        let mut st = self.backends[backend].state.lock().unwrap();
+        st.in_flight = st.in_flight.saturating_sub(1);
+        st.health.record(report.is_some(), &self.cfg.circuit);
+        match report {
+            Some(r) => {
+                st.completed += 1;
+                let d = r.submit_delay_s + r.exec_s;
+                st.ewma_duration_s = if st.completed == 1 {
+                    d
+                } else {
+                    EWMA_ALPHA * d + (1.0 - EWMA_ALPHA) * st.ewma_duration_s
+                };
+            }
+            None => st.failed += 1,
+        }
+    }
+
+    /// Account one logically completed job (the winning attempt).
+    fn record_job_success(&self, report: &JobReport, base_release: f64) {
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.completed += 1;
+            s.virtual_cpu_s += report.exec_s;
+            if report.virtual_end > s.virtual_makespan {
+                s.virtual_makespan = report.virtual_end;
+            }
+        }
+        let mut ds = self.durations.lock().unwrap();
+        if ds.len() >= DURATION_WINDOW {
+            let keep = DURATION_WINDOW / 2;
+            let start = ds.len() - keep;
+            ds.copy_within(start.., 0);
+            ds.truncate(keep);
+        }
+        ds.push((report.virtual_end - base_release).max(0.0));
+    }
+
+    /// Current straggler threshold, if speculation is armed. The
+    /// quantile is memoised and refreshed every
+    /// [`THRESHOLD_REFRESH_EVERY`] completions, so the per-completion
+    /// cost is a cache read, not a sort.
+    fn straggler_threshold(&self) -> Option<f64> {
+        let spec = self.cfg.speculation.as_ref()?;
+        let ds = self.durations.lock().unwrap();
+        let len = ds.len();
+        if len < spec.min_samples.max(1) {
+            return None;
+        }
+        let mut cache = self.threshold_cache.lock().unwrap();
+        if let Some(c) = cache.as_ref() {
+            // `computed_at > len` means the window was compacted since
+            if c.computed_at <= len && len - c.computed_at < THRESHOLD_REFRESH_EVERY
+            {
+                return Some(c.value);
+            }
+        }
+        let mut scratch = ds.clone();
+        drop(ds);
+        let idx = ((scratch.len() - 1) as f64 * spec.quantile.clamp(0.0, 1.0))
+            .round() as usize;
+        let (_, pivot, _) =
+            scratch.select_nth_unstable_by(idx, |a, b| a.total_cmp(b));
+        let value = *pivot;
+        *cache = Some(ThresholdCache {
+            computed_at: len,
+            value,
+        });
+        Some(value)
+    }
+}
+
+/// Is this failure the infrastructure's fault (worth retrying elsewhere
+/// and charging to backend health) or the job's own (deterministic task
+/// bug — retrying re-runs it for nothing, and a burst of bad jobs would
+/// quarantine perfectly healthy backends)?
+fn is_infrastructure_error(e: &Error) -> bool {
+    matches!(
+        e,
+        Error::NodeFailure { .. }
+            | Error::WallTimeExceeded(_)
+            | Error::EnvironmentError { .. }
+            | Error::GridScale(_)
+            | Error::Io(_)
+    )
+}
+
+enum Phase {
+    /// One live attempt.
+    Racing { backend: usize, handle: JobHandle },
+    /// Primary finished as a straggler; a clone is racing its timeline.
+    Speculating {
+        best: Box<(Context, JobReport)>,
+        spec_backend: usize,
+        handle: JobHandle,
+    },
+    Finished,
+}
+
+struct JobState {
+    phase: Phase,
+    attempts_made: u32,
+    failed_on: Vec<usize>,
+}
+
+/// The handle the broker returns: a small state machine that re-routes
+/// failures and races speculative clones, advanced by (non-blocking)
+/// polls.
+struct BrokerJob {
+    core: Arc<BrokerCore>,
+    task: Arc<dyn Task>,
+    ctx: Context,
+    base_release: f64,
+    state: Mutex<JobState>,
+}
+
+impl BrokerJob {
+    fn poll(&self) -> Option<Result<(Context, JobReport)>> {
+        let mut st = self.state.lock().unwrap();
+        let phase = std::mem::replace(&mut st.phase, Phase::Finished);
+        match phase {
+            Phase::Finished => Some(Err(Error::EnvironmentError {
+                environment: self.core.name.clone(),
+                message: "job result already consumed".into(),
+            })),
+            Phase::Racing { backend, handle } => match handle.try_wait() {
+                None => {
+                    st.phase = Phase::Racing { backend, handle };
+                    None
+                }
+                Some(Ok((ctx, report))) => {
+                    self.core.record_attempt(backend, Some(&report));
+                    let duration = report.virtual_end - self.base_release;
+                    let threshold = self.core.straggler_threshold();
+                    let speculate = threshold
+                        .map(|t| duration > t && self.core.backends.len() > 1)
+                        .unwrap_or(false);
+                    if speculate {
+                        // post-hoc race on the virtual timeline: the clone
+                        // starts when the straggler was detected
+                        // (base + threshold); the earlier virtual finish
+                        // will win
+                        let spec_release =
+                            self.base_release + threshold.unwrap_or(0.0);
+                        self.core.counters.lock().unwrap().speculative_launched +=
+                            1;
+                        let (sb, sh) = self.core.dispatch(
+                            &self.task,
+                            &self.ctx,
+                            spec_release,
+                            &[backend],
+                        );
+                        st.phase = Phase::Speculating {
+                            best: Box::new((ctx, report)),
+                            spec_backend: sb,
+                            handle: sh,
+                        };
+                        return None;
+                    }
+                    self.core.record_job_success(&report, self.base_release);
+                    Some(Ok((ctx, report)))
+                }
+                Some(Err(e)) => {
+                    if !is_infrastructure_error(&e) {
+                        // the backend did its part — the task itself is
+                        // broken. Surface immediately: no re-route, no
+                        // health penalty.
+                        let mut bst =
+                            self.core.backends[backend].state.lock().unwrap();
+                        bst.in_flight = bst.in_flight.saturating_sub(1);
+                        drop(bst);
+                        let mut s = self.core.stats.lock().unwrap();
+                        s.failed_attempts += 1;
+                        s.failed_jobs += 1;
+                        return Some(Err(e));
+                    }
+                    self.core.record_attempt(backend, None);
+                    st.failed_on.push(backend);
+                    {
+                        let mut s = self.core.stats.lock().unwrap();
+                        s.failed_attempts += 1;
+                        if st.attempts_made >= self.core.cfg.max_attempts {
+                            s.failed_jobs += 1;
+                            return Some(Err(e));
+                        }
+                        s.resubmissions += 1;
+                    }
+                    self.core.counters.lock().unwrap().reroutes += 1;
+                    let release = self.base_release
+                        + self.core.cfg.resubmit_penalty_s
+                            * f64::from(st.attempts_made);
+                    let (b, h) = self.core.dispatch(
+                        &self.task,
+                        &self.ctx,
+                        release,
+                        &st.failed_on,
+                    );
+                    st.attempts_made += 1;
+                    st.phase = Phase::Racing {
+                        backend: b,
+                        handle: h,
+                    };
+                    None
+                }
+            },
+            Phase::Speculating {
+                best,
+                spec_backend,
+                handle,
+            } => match handle.try_wait() {
+                None => {
+                    st.phase = Phase::Speculating {
+                        best,
+                        spec_backend,
+                        handle,
+                    };
+                    None
+                }
+                Some(Ok((spec_ctx, spec_report))) => {
+                    self.core.record_attempt(spec_backend, Some(&spec_report));
+                    let (best_ctx, best_report) = *best;
+                    let spec_won = spec_report.virtual_end < best_report.virtual_end;
+                    {
+                        let mut c = self.core.counters.lock().unwrap();
+                        c.speculative_cancelled += 1; // exactly one copy loses
+                        if spec_won {
+                            c.speculative_wins += 1;
+                        }
+                    }
+                    let (ctx, report) = if spec_won {
+                        (spec_ctx, spec_report)
+                    } else {
+                        (best_ctx, best_report)
+                    };
+                    self.core.record_job_success(&report, self.base_release);
+                    Some(Ok((ctx, report)))
+                }
+                Some(Err(_)) => {
+                    // a failed clone never endangers the completed original
+                    self.core.record_attempt(spec_backend, None);
+                    let (ctx, report) = *best;
+                    self.core.record_job_success(&report, self.base_release);
+                    Some(Ok((ctx, report)))
+                }
+            },
+        }
+    }
+}
+
+impl Drop for BrokerJob {
+    /// A handle abandoned mid-flight (caller aborted on another job's
+    /// error) must release its backend's in-flight slot, or the policies
+    /// see phantom load on that backend for the broker's lifetime.
+    fn drop(&mut self) {
+        let Ok(st) = self.state.get_mut() else { return };
+        let backend = match &st.phase {
+            Phase::Racing { backend, .. } => Some(*backend),
+            Phase::Speculating { spec_backend, .. } => Some(*spec_backend),
+            Phase::Finished => None,
+        };
+        if let Some(b) = backend {
+            let mut bst = self.core.backends[b].state.lock().unwrap();
+            bst.in_flight = bst.in_flight.saturating_sub(1);
+        }
+    }
+}
+
+impl JobWaiter for BrokerJob {
+    fn wait(self: Box<Self>) -> Result<(Context, JobReport)> {
+        loop {
+            if let Some(r) = self.poll() {
+                return r;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    fn try_wait(&self) -> Option<Result<(Context, JobReport)>> {
+        self.poll()
+    }
+}
+
+/// Builder for [`Broker`].
+pub struct BrokerBuilder {
+    name: String,
+    backends: Vec<(Arc<dyn Environment>, usize)>,
+    policy: Box<dyn DispatchPolicy>,
+    cfg: BrokerConfig,
+}
+
+impl BrokerBuilder {
+    pub fn backend(mut self, env: Arc<dyn Environment>, capacity: usize) -> Self {
+        self.backends.push((env, capacity.max(1)));
+        self
+    }
+
+    pub fn policy(mut self, policy: Box<dyn DispatchPolicy>) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn max_attempts(mut self, n: u32) -> Self {
+        self.cfg.max_attempts = n.max(1);
+        self
+    }
+
+    pub fn resubmit_penalty(mut self, seconds: f64) -> Self {
+        self.cfg.resubmit_penalty_s = seconds.max(0.0);
+        self
+    }
+
+    pub fn circuit(mut self, circuit: CircuitConfig) -> Self {
+        self.cfg.circuit = circuit;
+        self
+    }
+
+    pub fn speculation(mut self, spec: SpeculationConfig) -> Self {
+        self.cfg.speculation = Some(spec);
+        self
+    }
+
+    pub fn no_speculation(mut self) -> Self {
+        self.cfg.speculation = None;
+        self
+    }
+
+    pub fn build(self) -> Result<Broker> {
+        if self.backends.is_empty() {
+            return Err(Error::EnvironmentError {
+                environment: self.name,
+                message: "broker needs at least one backend".into(),
+            });
+        }
+        Ok(Broker {
+            core: Arc::new(BrokerCore {
+                name: self.name,
+                backends: self
+                    .backends
+                    .into_iter()
+                    .map(|(env, capacity)| Backend {
+                        env,
+                        capacity,
+                        state: Mutex::new(BackendState::default()),
+                    })
+                    .collect(),
+                policy: self.policy,
+                cfg: self.cfg,
+                stats: Mutex::new(EnvStats::default()),
+                counters: Mutex::new(BrokerCounters::default()),
+                durations: Mutex::new(Vec::new()),
+                threshold_cache: Mutex::new(None),
+            }),
+        })
+    }
+}
+
+/// Fault-tolerant multi-environment dispatcher. See the module docs.
+pub struct Broker {
+    core: Arc<BrokerCore>,
+}
+
+impl Broker {
+    /// Start building a broker (default policy: EWMA).
+    pub fn builder(name: impl Into<String>) -> BrokerBuilder {
+        BrokerBuilder {
+            name: name.into(),
+            backends: Vec::new(),
+            policy: Box::new(EwmaPolicy::new()),
+            cfg: BrokerConfig::default(),
+        }
+    }
+
+    /// Build a broker from a CLI spec like
+    /// `local:8,pbs:64,egi:biomed:2000` (the `--envs` flag).
+    ///
+    /// Entries are comma-separated:
+    ///
+    /// * `local[:n]` — this machine. All local backends share `pool`
+    ///   (one machine, one worker set — see the oversubscription
+    ///   regression test); `n` is a capacity hint for the policy.
+    /// * `ssh[:host]:n`, `pbs:n`, `slurm:n`, `sge:n`, `oar:n`,
+    ///   `condor:n`, `egi[:vo]:n` — the simulated remote environments.
+    /// * any entry may end in `~p` (e.g. `pbs:32~0.2`) to wrap it in a
+    ///   [`FlakyEnv`] that drops fraction `p` of submissions — the
+    ///   injected-failure backends used by failover demos and tests.
+    pub fn from_spec(
+        spec: &str,
+        pool: Arc<ThreadPool>,
+        seed: u64,
+    ) -> Result<Broker> {
+        Self::spec_builder(spec, pool, seed)?.build()
+    }
+
+    /// Like [`Broker::from_spec`], but stop at the builder so callers can
+    /// still override the policy or knobs (the CLI's `--policy` flag).
+    pub fn spec_builder(
+        spec: &str,
+        pool: Arc<ThreadPool>,
+        seed: u64,
+    ) -> Result<BrokerBuilder> {
+        let mut builder = Broker::builder(format!("broker[{spec}]"));
+        let bad = |entry: &str, why: &str| Error::EnvironmentError {
+            environment: "broker".into(),
+            message: format!("bad --envs entry `{entry}`: {why}"),
+        };
+        for (i, entry) in spec.split(',').enumerate() {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let seed_i = seed.wrapping_add(0x9e37 * (i as u64 + 1));
+            let (body, flaky) = match entry.split_once('~') {
+                Some((b, p)) => (
+                    b,
+                    Some(p.parse::<f64>().map_err(|_| {
+                        bad(entry, "failure rate after `~` must be a number")
+                    })?),
+                ),
+                None => (entry, None),
+            };
+            let parts: Vec<&str> = body.split(':').collect();
+            let n = |s: &str| {
+                s.parse::<usize>()
+                    .map_err(|_| bad(entry, "node count must be an integer"))
+            };
+            let (env, capacity): (Arc<dyn Environment>, usize) =
+                match parts.as_slice() {
+                    ["local"] => (
+                        Arc::new(LocalEnvironment::with_pool(Arc::clone(&pool))),
+                        pool.threads(),
+                    ),
+                    ["local", k] => (
+                        Arc::new(LocalEnvironment::with_pool(Arc::clone(&pool))),
+                        n(k)?.min(pool.threads()).max(1),
+                    ),
+                    ["ssh", k] => (
+                        Arc::new(SshEnvironment::new(
+                            "calc01",
+                            n(k)?,
+                            Arc::clone(&pool),
+                            seed_i,
+                        )),
+                        n(k)?,
+                    ),
+                    ["ssh", host, k] => (
+                        Arc::new(SshEnvironment::new(
+                            host,
+                            n(k)?,
+                            Arc::clone(&pool),
+                            seed_i,
+                        )),
+                        n(k)?,
+                    ),
+                    ["pbs", k] => (
+                        Arc::new(BatchEnvironment::pbs(
+                            n(k)?,
+                            Arc::clone(&pool),
+                            seed_i,
+                        )),
+                        n(k)?,
+                    ),
+                    ["slurm", k] => (
+                        Arc::new(BatchEnvironment::slurm(
+                            n(k)?,
+                            Arc::clone(&pool),
+                            seed_i,
+                        )),
+                        n(k)?,
+                    ),
+                    ["sge", k] => (
+                        Arc::new(BatchEnvironment::sge(
+                            n(k)?,
+                            Arc::clone(&pool),
+                            seed_i,
+                        )),
+                        n(k)?,
+                    ),
+                    ["oar", k] => (
+                        Arc::new(BatchEnvironment::oar(
+                            n(k)?,
+                            Arc::clone(&pool),
+                            seed_i,
+                        )),
+                        n(k)?,
+                    ),
+                    ["condor", k] => (
+                        Arc::new(BatchEnvironment::condor(
+                            n(k)?,
+                            Arc::clone(&pool),
+                            seed_i,
+                        )),
+                        n(k)?,
+                    ),
+                    ["egi", k] => (
+                        Arc::new(EgiEnvironment::new(
+                            "biomed",
+                            n(k)?,
+                            Arc::clone(&pool),
+                            seed_i,
+                        )),
+                        n(k)?,
+                    ),
+                    ["egi", vo, k] => (
+                        Arc::new(EgiEnvironment::new(
+                            vo,
+                            n(k)?,
+                            Arc::clone(&pool),
+                            seed_i,
+                        )),
+                        n(k)?,
+                    ),
+                    _ => return Err(bad(entry, "unknown environment kind")),
+                };
+            let env: Arc<dyn Environment> = match flaky {
+                Some(p) => {
+                    Arc::new(FlakyEnv::new(env, p, seed_i ^ 0xF1A7))
+                }
+                None => env,
+            };
+            builder = builder.backend(env, capacity);
+        }
+        if builder.backends.is_empty() {
+            return Err(Error::EnvironmentError {
+                environment: "broker".into(),
+                message: format!("--envs spec `{spec}` names no backends"),
+            });
+        }
+        Ok(builder)
+    }
+
+    pub fn policy_name(&self) -> &str {
+        self.core.policy.name()
+    }
+
+    pub fn backend_count(&self) -> usize {
+        self.core.backends.len()
+    }
+
+    pub fn counters(&self) -> BrokerCounters {
+        self.core.counters.lock().unwrap().clone()
+    }
+
+    /// Per-backend broker-side state (for reporting and tests).
+    pub fn backend_snapshots(&self) -> Vec<BackendSnapshot> {
+        self.core
+            .backends
+            .iter()
+            .map(|b| {
+                let st = b.state.lock().unwrap();
+                BackendSnapshot {
+                    name: b.env.name().to_string(),
+                    capacity: b.capacity,
+                    in_flight: st.in_flight,
+                    completed: st.completed,
+                    failed: st.failed,
+                    ewma_duration_s: st.ewma_duration_s,
+                    quarantined: st.health.quarantined(),
+                    quarantine_trips: st.health.trips,
+                }
+            })
+            .collect()
+    }
+
+    /// Total circuit-breaker trips across all backends.
+    pub fn quarantine_trips(&self) -> u64 {
+        self.backend_snapshots()
+            .iter()
+            .map(|s| s.quarantine_trips)
+            .sum()
+    }
+
+    /// Underlying environment stats of backend `i` (e.g. for journals).
+    pub fn backend_env_stats(&self, i: usize) -> Option<EnvStats> {
+        self.core.backends.get(i).map(|b| b.env.stats())
+    }
+}
+
+impl Environment for Broker {
+    fn name(&self) -> &str {
+        &self.core.name
+    }
+
+    fn submit(&self, job: Job) -> JobHandle {
+        self.core.stats.lock().unwrap().submitted += 1;
+        let Job {
+            task,
+            context,
+            virtual_release,
+        } = job;
+        let (backend, handle) =
+            self.core.dispatch(&task, &context, virtual_release, &[]);
+        JobHandle::from_waiter(Box::new(BrokerJob {
+            core: Arc::clone(&self.core),
+            task,
+            ctx: context,
+            base_release: virtual_release,
+            state: Mutex::new(JobState {
+                phase: Phase::Racing { backend, handle },
+                attempts_made: 1,
+                failed_on: Vec::new(),
+            }),
+        }))
+    }
+
+    fn stats(&self) -> EnvStats {
+        self.core.stats.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{val_f64, Context};
+    use crate::dsl::task::ClosureTask;
+    use crate::environment::run_all;
+
+    fn task(cost: f64) -> Arc<ClosureTask> {
+        let x = val_f64("x");
+        Arc::new(
+            ClosureTask::new("t", {
+                let x = x.clone();
+                move |ctx| {
+                    Ok(Context::new().with(&x, ctx.get(&x).unwrap_or(0.0) + 1.0))
+                }
+            })
+            .cost(cost),
+        )
+    }
+
+    fn local_pair(pool: &Arc<ThreadPool>) -> BrokerBuilder {
+        Broker::builder("b")
+            .backend(Arc::new(LocalEnvironment::with_pool(Arc::clone(pool))), 2)
+            .backend(Arc::new(LocalEnvironment::with_pool(Arc::clone(pool))), 2)
+    }
+
+    #[test]
+    fn multiplexes_round_robin_across_backends() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let broker = local_pair(&pool)
+            .policy(Box::new(RoundRobin::new()))
+            .no_speculation()
+            .build()
+            .unwrap();
+        let results = run_all(
+            &broker,
+            (0..20).map(|_| Job::new(task(0.0), Context::new())).collect(),
+        );
+        for r in results {
+            r.unwrap();
+        }
+        let s = broker.stats();
+        assert_eq!(s.submitted, 20);
+        assert_eq!(s.completed, 20);
+        assert_eq!(s.failed_jobs, 0);
+        assert_eq!(s.in_flight(), 0);
+        let snaps = broker.backend_snapshots();
+        assert_eq!(snaps[0].completed, 10, "round-robin must split evenly");
+        assert_eq!(snaps[1].completed, 10);
+    }
+
+    #[test]
+    fn reroutes_around_failing_backend_and_trips_breaker() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let flaky: Arc<dyn Environment> = Arc::new(FlakyEnv::new(
+            Arc::new(LocalEnvironment::with_pool(Arc::clone(&pool))),
+            1.0, // never succeeds
+            3,
+        ));
+        let broker = Broker::builder("b")
+            .backend(flaky, 2)
+            .backend(
+                Arc::new(LocalEnvironment::with_pool(Arc::clone(&pool))),
+                2,
+            )
+            .policy(Box::new(RoundRobin::new()))
+            .no_speculation()
+            .build()
+            .unwrap();
+        let results = run_all(
+            &broker,
+            (0..30).map(|_| Job::new(task(0.0), Context::new())).collect(),
+        );
+        for r in results {
+            r.unwrap(); // every job must be rescued by the healthy backend
+        }
+        let s = broker.stats();
+        assert_eq!(s.completed, 30);
+        assert_eq!(s.failed_jobs, 0);
+        assert!(s.failed_attempts > 0);
+        assert_eq!(
+            s.failed_attempts,
+            s.resubmissions + s.failed_jobs,
+            "attempt ledger must balance"
+        );
+        assert!(broker.counters().reroutes > 0);
+        assert!(
+            broker.quarantine_trips() >= 1,
+            "a 100%-failing backend must trip the breaker: {:?}",
+            broker.backend_snapshots()
+        );
+        let snaps = broker.backend_snapshots();
+        assert!(snaps[1].completed >= 15, "healthy backend absorbed the work");
+    }
+
+    #[test]
+    fn terminal_failure_when_every_backend_fails() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let flaky: Arc<dyn Environment> = Arc::new(FlakyEnv::new(
+            Arc::new(LocalEnvironment::with_pool(Arc::clone(&pool))),
+            1.0,
+            9,
+        ));
+        let broker = Broker::builder("b")
+            .backend(flaky, 1)
+            .max_attempts(3)
+            .no_speculation()
+            .build()
+            .unwrap();
+        let err = broker
+            .submit(Job::new(task(0.0), Context::new()))
+            .wait()
+            .unwrap_err();
+        assert!(matches!(err, Error::NodeFailure { .. }));
+        let s = broker.stats();
+        assert_eq!(s.submitted, 1);
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.failed_jobs, 1);
+        assert_eq!(s.failed_attempts, 3);
+        assert_eq!(s.resubmissions, 2);
+        assert_eq!(s.in_flight(), 0);
+    }
+
+    #[test]
+    fn speculation_clones_stragglers_and_accounts_the_race() {
+        let pool = Arc::new(ThreadPool::new(2));
+        // backend 0: two slots with real queueing (durations grow as the
+        // queue deepens); backend 1: a fast local sink
+        let broker = Broker::builder("b")
+            .backend(
+                Arc::new(SshEnvironment::new("slow", 2, Arc::clone(&pool), 1)),
+                2,
+            )
+            .backend(
+                Arc::new(LocalEnvironment::with_pool(Arc::clone(&pool))),
+                2,
+            )
+            .policy(Box::new(RoundRobin::new()))
+            .speculation(SpeculationConfig {
+                quantile: 0.9,
+                min_samples: 10,
+            })
+            .build()
+            .unwrap();
+        let results = run_all(
+            &broker,
+            (0..60).map(|_| Job::new(task(5.0), Context::new())).collect(),
+        );
+        for r in results {
+            r.unwrap();
+        }
+        let c = broker.counters();
+        assert!(
+            c.speculative_launched > 0,
+            "deep ssh queue must eventually exceed the p90 of peers: {c:?}"
+        );
+        // every resolved race cancels exactly one copy (unless the clone
+        // itself failed), and wins are a subset of resolved races
+        assert!(c.speculative_cancelled <= c.speculative_launched, "{c:?}");
+        assert!(c.speculative_wins <= c.speculative_cancelled, "{c:?}");
+        let s = broker.stats();
+        assert_eq!(s.completed, 60, "speculation must not lose jobs");
+        assert_eq!(s.in_flight(), 0);
+    }
+
+    #[test]
+    fn dropped_handle_releases_in_flight() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let broker = local_pair(&pool)
+            .policy(Box::new(RoundRobin::new()))
+            .no_speculation()
+            .build()
+            .unwrap();
+        let h = broker.submit(Job::new(task(0.0), Context::new()));
+        drop(h); // caller aborted without waiting
+        // the pool job may still run; only the counter matters
+        std::thread::sleep(Duration::from_millis(50));
+        let snaps = broker.backend_snapshots();
+        assert!(
+            snaps.iter().all(|s| s.in_flight == 0),
+            "abandoned handle leaked in-flight slots: {snaps:?}"
+        );
+    }
+
+    #[test]
+    fn task_error_surfaces_without_retry_or_health_penalty() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let broker = local_pair(&pool)
+            .policy(Box::new(RoundRobin::new()))
+            .build()
+            .unwrap();
+        let boom = Arc::new(ClosureTask::new("boom", |_: &Context| {
+            Err(Error::TaskFailed {
+                task: "boom".into(),
+                message: "deterministic task bug".into(),
+            })
+        }));
+        let err = broker
+            .submit(Job::new(boom, Context::new()))
+            .wait()
+            .unwrap_err();
+        assert!(matches!(err, Error::TaskFailed { .. }));
+        let s = broker.stats();
+        assert_eq!(s.failed_attempts, 1, "no cross-backend re-execution");
+        assert_eq!(s.resubmissions, 0);
+        assert_eq!(s.failed_jobs, 1);
+        assert_eq!(s.in_flight(), 0);
+        for snap in broker.backend_snapshots() {
+            assert_eq!(snap.failed, 0, "task bug must not poison backend health");
+            assert!(!snap.quarantined);
+        }
+    }
+
+    #[test]
+    fn from_spec_parses_and_runs() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let broker =
+            Broker::from_spec("local:2,pbs:4,egi:biomed:8~0.5", pool, 42).unwrap();
+        assert_eq!(broker.backend_count(), 3);
+        let snaps = broker.backend_snapshots();
+        assert!(snaps[0].name.starts_with("local"));
+        assert!(snaps[1].name.starts_with("pbs"));
+        assert!(snaps[2].name.starts_with("flaky"), "{}", snaps[2].name);
+        let results = run_all(
+            &broker,
+            (0..10).map(|_| Job::new(task(1.0), Context::new())).collect(),
+        );
+        for r in results {
+            r.unwrap();
+        }
+        assert_eq!(broker.stats().completed, 10);
+    }
+
+    #[test]
+    fn from_spec_rejects_garbage() {
+        let pool = Arc::new(ThreadPool::new(1));
+        assert!(Broker::from_spec("mars:4", Arc::clone(&pool), 1).is_err());
+        assert!(Broker::from_spec("pbs:abc", Arc::clone(&pool), 1).is_err());
+        assert!(Broker::from_spec("pbs:4~x", Arc::clone(&pool), 1).is_err());
+        assert!(Broker::from_spec("", pool, 1).is_err(), "no backends");
+    }
+}

@@ -1,0 +1,236 @@
+//! Dispatch policies: how the [`crate::broker::Broker`] picks a backend
+//! for each job.
+//!
+//! A policy sees one [`BackendView`] per *eligible* backend (quarantined
+//! and explicitly excluded backends are filtered out before the call) and
+//! returns an index into that slice. Policies must be deterministic given
+//! the views — all load-adaptivity enters through the view fields, which
+//! the broker keeps up to date on every dispatch and completion.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A backend as the policy sees it at dispatch time.
+#[derive(Debug, Clone)]
+pub struct BackendView {
+    /// Index of this backend in the broker's backend table.
+    pub backend: usize,
+    /// Capacity hint (node/slot count) given at registration.
+    pub capacity: usize,
+    /// Jobs dispatched to this backend and not yet resolved.
+    pub in_flight: usize,
+    /// Attempts completed successfully on this backend.
+    pub completed: u64,
+    /// EWMA of virtual submit+exec seconds per successful attempt
+    /// (0.0 until the first completion).
+    pub ewma_duration_s: f64,
+    /// Successes / attempts over the recent outcome window (1.0 while the
+    /// window is empty).
+    pub success_rate: f64,
+}
+
+/// Picks one of the eligible backends for the next job.
+pub trait DispatchPolicy: Send + Sync {
+    fn name(&self) -> &str;
+
+    /// Return an index into `views` (not a backend id). `views` is never
+    /// empty.
+    fn choose(&self, views: &[BackendView]) -> usize;
+}
+
+/// Cycle through backends in registration order, skipping nothing.
+#[derive(Default)]
+pub struct RoundRobin {
+    next: AtomicUsize,
+}
+
+impl RoundRobin {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl DispatchPolicy for RoundRobin {
+    fn name(&self) -> &str {
+        "round-robin"
+    }
+
+    fn choose(&self, views: &[BackendView]) -> usize {
+        self.next.fetch_add(1, Ordering::Relaxed) % views.len()
+    }
+}
+
+/// Send each job to the backend with the fewest unresolved dispatches.
+#[derive(Default)]
+pub struct LeastInFlight;
+
+impl LeastInFlight {
+    pub fn new() -> Self {
+        LeastInFlight
+    }
+}
+
+impl DispatchPolicy for LeastInFlight {
+    fn name(&self) -> &str {
+        "least-in-flight"
+    }
+
+    fn choose(&self, views: &[BackendView]) -> usize {
+        views
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.in_flight
+                    .cmp(&b.in_flight)
+                    .then(a.backend.cmp(&b.backend))
+            })
+            .map(|(i, _)| i)
+            .expect("views is never empty")
+    }
+}
+
+/// Throughput/latency-aware policy: score every backend by its expected
+/// completion time for one more job and pick the minimum.
+///
+/// `score = ewma_duration · (1 + in_flight / capacity) / success_rate`
+///
+/// * the EWMA tracks how long one attempt takes on that backend
+///   (submission latency + node execution, in virtual seconds);
+/// * the `(1 + in_flight/capacity)` factor models queue depth per slot, so
+///   the policy reacts to its own dispatches before completions arrive;
+/// * dividing by the recent success rate makes flaky backends expensive in
+///   proportion to how much work they lose.
+///
+/// Until a backend has completed anything its EWMA is unknown; those
+/// backends use the fleet-wide mean duration (or 1.0 s before any
+/// completion at all), which makes the cold-start phase behave like
+/// capacity-weighted least-loaded while the EWMA warms up.
+#[derive(Default)]
+pub struct EwmaPolicy;
+
+impl EwmaPolicy {
+    pub fn new() -> Self {
+        EwmaPolicy
+    }
+}
+
+impl DispatchPolicy for EwmaPolicy {
+    fn name(&self) -> &str {
+        "ewma"
+    }
+
+    fn choose(&self, views: &[BackendView]) -> usize {
+        let sampled: Vec<f64> = views
+            .iter()
+            .filter(|v| v.completed > 0)
+            .map(|v| v.ewma_duration_s)
+            .collect();
+        let fleet_mean = if sampled.is_empty() {
+            1.0
+        } else {
+            sampled.iter().sum::<f64>() / sampled.len() as f64
+        };
+        views
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                score(a, fleet_mean)
+                    .total_cmp(&score(b, fleet_mean))
+                    .then(a.backend.cmp(&b.backend))
+            })
+            .map(|(i, _)| i)
+            .expect("views is never empty")
+    }
+}
+
+fn score(v: &BackendView, fleet_mean: f64) -> f64 {
+    let duration = if v.completed > 0 {
+        v.ewma_duration_s
+    } else {
+        fleet_mean
+    };
+    let queue = 1.0 + v.in_flight as f64 / v.capacity.max(1) as f64;
+    duration * queue / v.success_rate.max(0.05)
+}
+
+/// Look a policy up by CLI name.
+pub fn by_name(name: &str) -> Option<Box<dyn DispatchPolicy>> {
+    match name {
+        "roundrobin" | "round-robin" | "rr" => Some(Box::new(RoundRobin::new())),
+        "least" | "least-in-flight" => Some(Box::new(LeastInFlight::new())),
+        "ewma" => Some(Box::new(EwmaPolicy::new())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(backend: usize, in_flight: usize, ewma: f64, completed: u64) -> BackendView {
+        BackendView {
+            backend,
+            capacity: 4,
+            in_flight,
+            completed,
+            ewma_duration_s: ewma,
+            success_rate: 1.0,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let p = RoundRobin::new();
+        let views = vec![view(0, 0, 0.0, 0), view(1, 0, 0.0, 0), view(2, 0, 0.0, 0)];
+        let picks: Vec<usize> = (0..6).map(|_| p.choose(&views)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_in_flight_picks_idle() {
+        let p = LeastInFlight::new();
+        let views = vec![view(0, 5, 0.0, 0), view(1, 2, 0.0, 0), view(2, 7, 0.0, 0)];
+        assert_eq!(p.choose(&views), 1);
+    }
+
+    #[test]
+    fn ewma_prefers_fast_backend() {
+        let p = EwmaPolicy::new();
+        // equal load, backend 1 is 3× faster
+        let views = vec![view(0, 2, 30.0, 10), view(1, 2, 10.0, 10)];
+        assert_eq!(p.choose(&views), 1);
+    }
+
+    #[test]
+    fn ewma_backs_off_loaded_backend() {
+        let p = EwmaPolicy::new();
+        // backend 1 is faster per job but its queue is far deeper
+        let views = vec![view(0, 0, 20.0, 10), view(1, 40, 10.0, 10)];
+        assert_eq!(p.choose(&views), 0);
+    }
+
+    #[test]
+    fn ewma_penalises_flaky_backend() {
+        let p = EwmaPolicy::new();
+        let mut a = view(0, 1, 10.0, 10);
+        let mut b = view(1, 1, 10.0, 10);
+        a.success_rate = 1.0;
+        b.success_rate = 0.5; // loses half its work → effectively 2× slower
+        assert_eq!(p.choose(&[a, b]), 0);
+    }
+
+    #[test]
+    fn ewma_cold_start_spreads_by_load() {
+        let p = EwmaPolicy::new();
+        // nothing completed anywhere: behave like least-loaded
+        let views = vec![view(0, 3, 0.0, 0), view(1, 1, 0.0, 0)];
+        assert_eq!(p.choose(&views), 1);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("ewma").unwrap().name(), "ewma");
+        assert_eq!(by_name("rr").unwrap().name(), "round-robin");
+        assert_eq!(by_name("least").unwrap().name(), "least-in-flight");
+        assert!(by_name("nope").is_none());
+    }
+}

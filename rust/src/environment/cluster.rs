@@ -439,7 +439,7 @@ impl Environment for BatchEnvironment {
                 let mut attempts = 0u32;
                 let sched = loop {
                     attempts += 1;
-                    let fail = rng.bool(infra.failure_rate) && attempts <= infra.max_retries;
+                    let fail = rng.bool(infra.failure_rate);
                     let sched = cluster.lock().unwrap().schedule(
                         sim_id,
                         release,
@@ -448,12 +448,23 @@ impl Environment for BatchEnvironment {
                         fail.then(|| rng.f64()),
                     )?;
                     if sched.walltime_killed {
-                        let mut s = stats.lock().unwrap();
-                        s.failed_attempts += 1;
                         return Err(Error::WallTimeExceeded(infra.walltime_s as u64));
                     }
                     if !sched.failed {
                         break sched;
+                    }
+                    // a failed attempt past the retry budget is a terminal
+                    // job failure — surfaced to the caller (the broker
+                    // re-routes it to another environment)
+                    if attempts > infra.max_retries {
+                        return Err(Error::NodeFailure {
+                            node: format!("node{:04}", sched.node),
+                            reason: format!(
+                                "attempt {attempts} failed with no retries left \
+                                 (max_retries = {})",
+                                infra.max_retries
+                            ),
+                        });
                     }
                     {
                         let mut s = stats.lock().unwrap();
@@ -499,20 +510,31 @@ impl Environment for BatchEnvironment {
             };
             match run() {
                 Ok((ctx, report)) => (Ok(ctx), report),
-                Err(e) => (
-                    Err(e),
-                    JobReport {
-                        environment: "failed".into(),
-                        node: String::new(),
-                        attempts: 0,
-                        submit_delay_s: 0.0,
-                        queue_s: 0.0,
-                        exec_s: 0.0,
-                        virtual_start: 0.0,
-                        virtual_end: 0.0,
-                        real_exec: std::time::Duration::ZERO,
-                    },
-                ),
+                Err(e) => {
+                    {
+                        // terminal failure: the final attempt failed and
+                        // nothing retried it, so it counts in both
+                        // `failed_attempts` and `failed_jobs` (keeping
+                        // failed_attempts == resubmissions + failed_jobs)
+                        let mut s = stats.lock().unwrap();
+                        s.failed_attempts += 1;
+                        s.failed_jobs += 1;
+                    }
+                    (
+                        Err(e),
+                        JobReport {
+                            environment: "failed".into(),
+                            node: String::new(),
+                            attempts: 0,
+                            submit_delay_s: 0.0,
+                            queue_s: 0.0,
+                            exec_s: 0.0,
+                            virtual_start: 0.0,
+                            virtual_end: 0.0,
+                            real_exec: std::time::Duration::ZERO,
+                        },
+                    )
+                }
             }
         });
         JobHandle::from_join(join)
@@ -647,10 +669,71 @@ mod tests {
             &env,
             (0..30).map(|_| Job::new(task(5.0), Context::new())).collect(),
         );
+        // with 10 retries a terminal failure needs 11 failed attempts in a
+        // row (p = 0.5^11); nearly every job retries its way to success,
+        // and the rare terminal loss must surface as NodeFailure
+        let mut ok = 0;
         for r in results {
-            r.unwrap(); // retries must eventually succeed
+            match r {
+                Ok(_) => ok += 1,
+                Err(e) => assert!(
+                    matches!(e, Error::NodeFailure { .. }),
+                    "unexpected error kind: {e}"
+                ),
+            }
         }
+        assert!(ok >= 25, "only {ok}/30 jobs survived 50% failure injection");
         assert!(env.stats().resubmissions > 0, "no failures injected at 50%");
+    }
+
+    #[test]
+    fn resubmission_accounting_is_consistent() {
+        // §satellite: after a drained run with nonzero failure_rate the
+        // counters must be mutually consistent
+        let pool = Arc::new(ThreadPool::new(2));
+        let env = BatchEnvironment::glite("biomed", 8, pool, 23).with_infra(InfraModel {
+            failure_rate: 0.3,
+            max_retries: 2,
+            ..InfraModel::grid()
+        });
+        let results = run_all(
+            &env,
+            (0..60).map(|_| Job::new(task(3.0), Context::new())).collect(),
+        );
+        let ok = results.iter().filter(|r| r.is_ok()).count() as u64;
+        let failed = results.iter().filter(|r| r.is_err()).count() as u64;
+        let s = env.stats();
+        assert_eq!(s.submitted, 60);
+        assert_eq!(s.completed, ok);
+        assert_eq!(s.failed_jobs, failed);
+        assert_eq!(s.in_flight(), 0, "drained env reports in-flight work");
+        assert_eq!(
+            s.failed_attempts,
+            s.resubmissions + s.failed_jobs,
+            "every failed attempt must either be retried or terminal"
+        );
+        assert!(s.resubmissions > 0, "no retries at 30% failure rate");
+    }
+
+    #[test]
+    fn walltime_kill_accounting() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let env = BatchEnvironment::pbs(1, pool, 7).with_infra(InfraModel {
+            walltime_s: 5.0,
+            ..InfraModel::cluster()
+        });
+        let err = env
+            .submit(Job::new(task(100.0), Context::new()))
+            .wait()
+            .unwrap_err();
+        assert!(matches!(err, Error::WallTimeExceeded(_)));
+        let s = env.stats();
+        assert_eq!(s.submitted, 1);
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.failed_jobs, 1);
+        assert_eq!(s.failed_attempts, 1);
+        assert_eq!(s.resubmissions, 0);
+        assert_eq!(s.in_flight(), 0);
     }
 
     #[test]

@@ -68,11 +68,19 @@ impl Environment for LocalEnvironment {
                 real_exec: real,
             };
             {
+                // count completion only when the task succeeded — a failed
+                // task previously drifted the counters by landing in both
+                // the error path and `completed`
                 let mut s = stats.lock().unwrap();
-                s.completed += 1;
-                s.virtual_cpu_s += exec_s;
-                if report.virtual_end > s.virtual_makespan {
-                    s.virtual_makespan = report.virtual_end;
+                if result.is_ok() {
+                    s.completed += 1;
+                    s.virtual_cpu_s += exec_s;
+                    if report.virtual_end > s.virtual_makespan {
+                        s.virtual_makespan = report.virtual_end;
+                    }
+                } else {
+                    s.failed_attempts += 1;
+                    s.failed_jobs += 1;
                 }
             }
             (result, report)
@@ -147,5 +155,10 @@ mod tests {
         }));
         let err = env.submit(Job::new(t, Context::new())).wait().unwrap_err();
         assert!(err.to_string().contains("nope"));
+        let s = env.stats();
+        assert_eq!(s.submitted, 1);
+        assert_eq!(s.completed, 0, "failed task must not count as completed");
+        assert_eq!(s.failed_jobs, 1);
+        assert_eq!(s.in_flight(), 0);
     }
 }

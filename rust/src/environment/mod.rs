@@ -82,52 +82,123 @@ pub struct JobReport {
     pub real_exec: Duration,
 }
 
+/// Completion behaviour behind a [`JobHandle`].
+///
+/// Most environments run one closure on a thread pool, but composite
+/// environments (notably [`crate::broker::Broker`]) need handles that
+/// re-dispatch failed attempts or race speculative copies before a result
+/// is surfaced. Implementations must make `try_wait` non-blocking; once it
+/// has returned `Some`, subsequent calls may return anything (callers drop
+/// the handle after the first completion, matching pool-handle semantics).
+pub trait JobWaiter: Send {
+    /// Block until the job completes.
+    fn wait(self: Box<Self>) -> Result<(Context, JobReport)>;
+    /// Non-blocking poll; `None` while the job is still running.
+    fn try_wait(&self) -> Option<Result<(Context, JobReport)>>;
+}
+
+enum HandleInner {
+    Pool(JobJoin<(Result<Context>, JobReport)>),
+    Custom(Box<dyn JobWaiter>),
+}
+
 /// Handle to a submitted job.
 pub struct JobHandle {
-    join: JobJoin<(Result<Context>, JobReport)>,
+    inner: HandleInner,
+}
+
+fn pool_result(
+    r: std::result::Result<(Result<Context>, JobReport), String>,
+) -> Result<(Context, JobReport)> {
+    match r {
+        Ok((Ok(ctx), report)) => Ok((ctx, report)),
+        Ok((Err(e), _)) => Err(e),
+        Err(panic) => Err(Error::EnvironmentError {
+            environment: "<pool>".into(),
+            message: format!("worker panicked: {panic}"),
+        }),
+    }
 }
 
 impl JobHandle {
     pub fn from_join(join: JobJoin<(Result<Context>, JobReport)>) -> Self {
-        JobHandle { join }
+        JobHandle {
+            inner: HandleInner::Pool(join),
+        }
+    }
+
+    /// Wrap a custom completion strategy (broker retry/speculation logic).
+    pub fn from_waiter(waiter: Box<dyn JobWaiter>) -> Self {
+        JobHandle {
+            inner: HandleInner::Custom(waiter),
+        }
+    }
+
+    /// An already-completed handle (used by fault injectors and tests).
+    pub fn ready(result: Result<(Context, JobReport)>) -> Self {
+        struct Ready(std::sync::Mutex<Option<Result<(Context, JobReport)>>>);
+        impl JobWaiter for Ready {
+            fn wait(self: Box<Self>) -> Result<(Context, JobReport)> {
+                self.0.lock().unwrap().take().unwrap_or_else(|| {
+                    Err(Error::EnvironmentError {
+                        environment: "<ready>".into(),
+                        message: "result already consumed".into(),
+                    })
+                })
+            }
+            fn try_wait(&self) -> Option<Result<(Context, JobReport)>> {
+                self.0.lock().unwrap().take()
+            }
+        }
+        JobHandle::from_waiter(Box::new(Ready(std::sync::Mutex::new(Some(result)))))
     }
 
     /// Block until the job completes.
     pub fn wait(self) -> Result<(Context, JobReport)> {
-        match self.join.join() {
-            Ok((Ok(ctx), report)) => Ok((ctx, report)),
-            Ok((Err(e), _)) => Err(e),
-            Err(panic) => Err(Error::EnvironmentError {
-                environment: "<pool>".into(),
-                message: format!("worker panicked: {panic}"),
-            }),
+        match self.inner {
+            HandleInner::Pool(join) => pool_result(join.join()),
+            HandleInner::Custom(w) => w.wait(),
         }
     }
 
     /// Non-blocking poll.
     pub fn try_wait(&self) -> Option<Result<(Context, JobReport)>> {
-        self.join.try_join().map(|r| match r {
-            Ok((Ok(ctx), report)) => Ok((ctx, report)),
-            Ok((Err(e), _)) => Err(e),
-            Err(panic) => Err(Error::EnvironmentError {
-                environment: "<pool>".into(),
-                message: format!("worker panicked: {panic}"),
-            }),
-        })
+        match &self.inner {
+            HandleInner::Pool(join) => join.try_join().map(pool_result),
+            HandleInner::Custom(w) => w.try_wait(),
+        }
     }
 }
 
 /// Aggregate counters every environment maintains.
+///
+/// Invariant (checked by the accounting tests): once an environment is
+/// drained, `submitted == completed + failed_jobs`, and
+/// `failed_attempts == resubmissions + failed_jobs` — every failed attempt
+/// was either retried or terminated the job.
 #[derive(Debug, Clone, Default)]
 pub struct EnvStats {
     pub submitted: u64,
     pub completed: u64,
+    /// Individual attempts that failed (including ones later retried).
     pub failed_attempts: u64,
+    /// Attempts re-queued after a failure.
     pub resubmissions: u64,
+    /// Jobs that terminally failed (error surfaced to the caller).
+    pub failed_jobs: u64,
     /// Latest virtual completion observed (the virtual makespan).
     pub virtual_makespan: f64,
     /// Total virtual core-seconds consumed.
     pub virtual_cpu_s: f64,
+}
+
+impl EnvStats {
+    /// Jobs submitted but not yet terminally resolved.
+    pub fn in_flight(&self) -> u64 {
+        self.submitted
+            .saturating_sub(self.completed)
+            .saturating_sub(self.failed_jobs)
+    }
 }
 
 /// An execution environment (`LocalEnvironment`, `PBSEnvironment`,

@@ -82,11 +82,19 @@ impl Environment for SshEnvironment {
                 real_exec: real,
             };
             {
+                // completion counts only for successful tasks (same ledger
+                // invariant as LocalEnvironment: submitted == completed +
+                // failed_jobs once drained)
                 let mut s = stats.lock().unwrap();
-                s.completed += 1;
-                s.virtual_cpu_s += report.exec_s;
-                if report.virtual_end > s.virtual_makespan {
-                    s.virtual_makespan = report.virtual_end;
+                if result.is_ok() {
+                    s.completed += 1;
+                    s.virtual_cpu_s += report.exec_s;
+                    if report.virtual_end > s.virtual_makespan {
+                        s.virtual_makespan = report.virtual_end;
+                    }
+                } else {
+                    s.failed_attempts += 1;
+                    s.failed_jobs += 1;
                 }
             }
             (result, report)
@@ -122,5 +130,23 @@ mod tests {
         ends.sort_by(|a, b| a.partial_cmp(b).unwrap());
         // one slot → three 10 s jobs must span at least 30 virtual seconds
         assert!(ends[2] >= 30.0, "makespan {}", ends[2]);
+    }
+
+    #[test]
+    fn failed_task_is_not_counted_completed() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let env = SshEnvironment::new("calc01", 1, pool, 1);
+        let t = Arc::new(ClosureTask::new("boom", |_| {
+            Err(crate::error::Error::TaskFailed {
+                task: "boom".into(),
+                message: "nope".into(),
+            })
+        }));
+        env.submit(Job::new(t, Context::new())).wait().unwrap_err();
+        let s = env.stats();
+        assert_eq!(s.submitted, 1);
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.failed_jobs, 1);
+        assert_eq!(s.in_flight(), 0);
     }
 }

@@ -4,6 +4,7 @@
 
 use std::sync::Arc;
 
+use crate::broker::journal::{self, Journal, ResumeState};
 use crate::core::{Context, Val};
 use crate::dsl::task::ClosureTask;
 use crate::environment::{Environment, Job};
@@ -12,6 +13,7 @@ use crate::evolution::evaluator::Evaluator;
 use crate::evolution::genome::{Bounds, Individual};
 use crate::evolution::nsga2;
 use crate::evolution::operators::Operators;
+use crate::util::json::Json;
 use crate::util::Rng;
 
 /// The `NSGA2(...)` configuration of Listing 4/5.
@@ -121,6 +123,9 @@ pub struct GenerationalGA {
     pub eval_chunk: usize,
     /// Called after each generation with (generation, population).
     pub on_generation: Option<Arc<dyn Fn(u32, &[Individual]) + Send + Sync>>,
+    /// Optional JSONL checkpoint stream: one `generation` record per
+    /// generation, enabling `--resume` after a kill (§Distribution).
+    pub journal: Option<Arc<Journal>>,
 }
 
 impl GenerationalGA {
@@ -131,12 +136,19 @@ impl GenerationalGA {
             lambda,
             eval_chunk: 1,
             on_generation: None,
+            journal: None,
         }
     }
 
     /// Set the genomes-per-job packing for evaluation waves.
     pub fn eval_chunk(mut self, chunk: usize) -> Self {
         self.eval_chunk = chunk.max(1);
+        self
+    }
+
+    /// Checkpoint every generation to `journal`.
+    pub fn journal(mut self, journal: Arc<Journal>) -> Self {
+        self.journal = Some(journal);
         self
     }
 
@@ -224,6 +236,26 @@ impl GenerationalGA {
         Ok((out, latest))
     }
 
+    fn checkpoint(
+        &self,
+        generation: u32,
+        evaluations: u64,
+        clock: f64,
+        rng: &Rng,
+        population: &[Individual],
+    ) -> Result<()> {
+        if let Some(j) = &self.journal {
+            j.append(&journal::generation_record(
+                generation,
+                evaluations,
+                clock,
+                rng,
+                population,
+            ))?;
+        }
+        Ok(())
+    }
+
     /// Run `generations` synchronous generations on `env`.
     pub fn run(
         &self,
@@ -231,16 +263,66 @@ impl GenerationalGA {
         generations: u32,
         seed: u64,
     ) -> Result<EvolutionResult> {
-        let mut rng = Rng::new(seed);
+        self.run_resumable(env, generations, seed, None)
+    }
+
+    /// Run, optionally continuing from a journal checkpoint.
+    ///
+    /// With `resume: Some(state)` the run restores the checkpointed
+    /// population, virtual clock, evaluation counter and RNG state, then
+    /// continues at `state.generation + 1`. The configuration (`mu`,
+    /// `lambda`, bounds, operators, evaluator) must match the original
+    /// run — the journal stores the trajectory, not the configuration —
+    /// and when it does, the resumed run's final population is
+    /// bit-identical to an uninterrupted run with the same seed.
+    pub fn run_resumable(
+        &self,
+        env: &dyn Environment,
+        generations: u32,
+        seed: u64,
+        resume: Option<ResumeState>,
+    ) -> Result<EvolutionResult> {
         let cfg = &self.config;
-        let mut evaluations: u64 = 0;
+        let (mut rng, mut population, mut clock, mut evaluations, first_gen) =
+            match resume {
+                Some(r) => {
+                    if let Some(j) = &self.journal {
+                        j.append(&journal::run_start(
+                            "calibrate-resume",
+                            seed,
+                            vec![(
+                                "from_generation",
+                                Json::Num(f64::from(r.generation)),
+                            )],
+                        ))?;
+                    }
+                    (r.rng, r.population, r.clock, r.evaluations, r.generation + 1)
+                }
+                None => {
+                    if let Some(j) = &self.journal {
+                        j.append(&journal::run_start(
+                            "calibrate",
+                            seed,
+                            vec![
+                                ("mu", Json::Num(cfg.mu as f64)),
+                                ("lambda", Json::Num(self.lambda as f64)),
+                                ("generations", Json::Num(f64::from(generations))),
+                            ],
+                        ))?;
+                    }
+                    let mut rng = Rng::new(seed);
+                    // initial population
+                    let init: Vec<Vec<f64>> =
+                        (0..cfg.mu).map(|_| cfg.bounds.random(&mut rng)).collect();
+                    let (population, clock) =
+                        self.evaluate_wave(env, &init, &mut rng, 0.0)?;
+                    let evaluations = population.len() as u64;
+                    self.checkpoint(0, evaluations, clock, &rng, &population)?;
+                    (rng, population, clock, evaluations, 1)
+                }
+            };
 
-        // initial population
-        let init: Vec<Vec<f64>> = (0..cfg.mu).map(|_| cfg.bounds.random(&mut rng)).collect();
-        let (mut population, mut clock) = self.evaluate_wave(env, &init, &mut rng, 0.0)?;
-        evaluations += population.len() as u64;
-
-        for generation in 1..=generations {
+        for generation in first_gen..=generations {
             // breed lambda offspring
             let (rank, crowd) = nsga2::rank_and_crowding(&population);
             let offspring: Vec<Vec<f64>> = (0..self.lambda)
@@ -274,9 +356,15 @@ impl GenerationalGA {
             population.extend(children);
             population = nsga2::select(population, cfg.mu);
 
+            self.checkpoint(generation, evaluations, clock, &rng, &population)?;
             if let Some(cb) = &self.on_generation {
                 cb(generation, &population);
             }
+        }
+
+        if let Some(j) = &self.journal {
+            j.append(&journal::env_stats_record(env.name(), &env.stats()))?;
+            j.append(&journal::run_end(evaluations, clock))?;
         }
 
         let pareto_front = nsga2::pareto_front(&population);
@@ -387,6 +475,49 @@ mod tests {
             });
         ga.run(&env, 6, 1).unwrap();
         assert_eq!(seen.load(std::sync::atomic::Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn journaled_resume_is_bit_identical() {
+        let tmp = std::env::temp_dir();
+        let path_full = tmp.join(format!("molers-gen-full-{}.jsonl", std::process::id()));
+        let path_cut = tmp.join(format!("molers-gen-cut-{}.jsonl", std::process::id()));
+        let objs = |r: &EvolutionResult| -> Vec<Vec<f64>> {
+            r.population.iter().map(|i| i.objectives.clone()).collect()
+        };
+
+        let env = LocalEnvironment::new(2);
+        let mut cfg = zdt1_config(8);
+        cfg.reevaluate = 0.25; // exercise the reevaluation path across resume
+        let uninterrupted =
+            GenerationalGA::new(cfg.clone(), Arc::new(Zdt1Evaluator { dim: 3 }), 8)
+                .journal(Arc::new(Journal::create(&path_full).unwrap()));
+        let full = uninterrupted.run(&env, 6, 17).unwrap();
+
+        // "kill" after generation 3: run only the first half, journaled
+        let first_half =
+            GenerationalGA::new(cfg.clone(), Arc::new(Zdt1Evaluator { dim: 3 }), 8)
+                .journal(Arc::new(Journal::create(&path_cut).unwrap()));
+        first_half.run(&env, 3, 17).unwrap();
+
+        // resume from the journal and finish the remaining generations
+        let resume = journal::load_resume(&path_cut).unwrap().expect("checkpoint");
+        assert_eq!(resume.generation, 3);
+        let resumed_ga =
+            GenerationalGA::new(cfg, Arc::new(Zdt1Evaluator { dim: 3 }), 8)
+                .journal(Arc::new(Journal::append_to(&path_cut).unwrap()));
+        let resumed = resumed_ga
+            .run_resumable(&env, 6, 17, Some(resume))
+            .unwrap();
+
+        assert_eq!(
+            objs(&full),
+            objs(&resumed),
+            "kill + resume must reproduce the uninterrupted trajectory"
+        );
+        assert_eq!(full.evaluations, resumed.evaluations);
+        let _ = std::fs::remove_file(&path_full);
+        let _ = std::fs::remove_file(&path_cut);
     }
 
     #[test]

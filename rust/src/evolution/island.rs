@@ -12,6 +12,7 @@
 
 use std::sync::{Arc, Mutex};
 
+use crate::broker::journal::{self, Journal};
 use crate::core::Context;
 use crate::dsl::task::ClosureTask;
 use crate::environment::{Environment, Job, JobHandle};
@@ -21,7 +22,11 @@ use crate::evolution::generational::{EvolutionResult, Nsga2Config};
 use crate::evolution::genome::Individual;
 use crate::evolution::nsga2;
 use crate::evolution::operators::Operators;
+use crate::util::json::Json;
 use crate::util::Rng;
+
+/// How many island merges between archive snapshots in the journal.
+const ARCHIVE_SNAPSHOT_EVERY: u64 = 8;
 
 /// Island-model configuration (Listing 5's
 /// `IslandSteadyGA(evolution, replicateModel)(2000, 200000, 50)`).
@@ -55,6 +60,10 @@ struct ArchiveState {
     population: Vec<Individual>,
     evaluations: u64,
     islands_completed: u64,
+    /// Island ids already merged. A brokered environment may execute an
+    /// island job more than once (failure re-route, speculative clone);
+    /// the merge must land exactly once regardless.
+    merged: std::collections::HashSet<u64>,
 }
 
 /// The island-model driver.
@@ -62,6 +71,13 @@ pub struct IslandSteadyGA {
     pub config: Nsga2Config,
     pub islands: IslandConfig,
     pub evaluator: Arc<dyn Evaluator>,
+    /// Optional JSONL progress/snapshot stream (see [`journal`]).
+    pub journal: Option<Arc<Journal>>,
+    /// Archive + evaluations-done to continue from (journal `archive`
+    /// record). Island runs are asynchronous, so resume is
+    /// archive-faithful rather than bit-identical: the remaining budget
+    /// continues from the checkpointed archive.
+    pub resume: Option<(Vec<Individual>, u64)>,
 }
 
 impl IslandSteadyGA {
@@ -74,7 +90,22 @@ impl IslandSteadyGA {
             config,
             islands,
             evaluator,
+            journal: None,
+            resume: None,
         }
+    }
+
+    /// Journal island merges and periodic archive snapshots.
+    pub fn journal(mut self, journal: Arc<Journal>) -> Self {
+        self.journal = Some(journal);
+        self
+    }
+
+    /// Seed the archive from a journal snapshot and run only the
+    /// remaining evaluation budget.
+    pub fn resume_from(mut self, population: Vec<Individual>, evaluations: u64) -> Self {
+        self.resume = Some((population, evaluations));
+        self
     }
 
     /// One island's internal steady-state evolution, run to its evaluation
@@ -141,17 +172,37 @@ impl IslandSteadyGA {
         on_island: Option<Arc<dyn Fn(u64, u64) + Send + Sync>>,
     ) -> Result<EvolutionResult> {
         let mut rng = Rng::new(seed);
+        let (start_population, evals_done) = match &self.resume {
+            Some((pop, evals)) => (pop.clone(), *evals),
+            None => (Vec::new(), 0),
+        };
+        if let Some(j) = &self.journal {
+            j.append(&journal::run_start(
+                "island",
+                seed,
+                vec![
+                    ("mu", Json::Num(self.config.mu as f64)),
+                    (
+                        "total_evaluations",
+                        Json::Num(self.islands.total_evaluations as f64),
+                    ),
+                    ("resumed_evaluations", Json::Num(evals_done as f64)),
+                ],
+            ))?;
+        }
         let archive = Arc::new(Mutex::new(ArchiveState {
-            population: Vec::new(),
-            evaluations: 0,
+            population: start_population,
+            evaluations: evals_done,
             islands_completed: 0,
+            merged: std::collections::HashSet::new(),
         }));
         let total_islands = self
             .islands
             .total_evaluations
+            .saturating_sub(evals_done)
             .div_ceil(self.islands.evals_per_island);
 
-        let make_island_task = |island_rng: Rng| -> Arc<ClosureTask> {
+        let make_island_task = |island_id: u64, island_rng: Rng| -> Arc<ClosureTask> {
             let cfg = self.config.clone();
             let evaluator = Arc::clone(&self.evaluator);
             let archive = Arc::clone(&archive);
@@ -177,18 +228,22 @@ impl IslandSteadyGA {
                     };
                     let final_pop =
                         Self::evolve_island(&cfg, evaluator.as_ref(), start, budget, &mut rng)?;
-                    // merge back into the global archive
+                    // merge back into the global archive — exactly once
+                    // per island, even if a broker re-ran this job
+                    // (failure re-route or speculative clone)
                     {
                         let mut a = archive.lock().unwrap();
-                        a.population.extend(final_pop);
-                        if a.population.len() > cfg.mu {
-                            let pop = std::mem::take(&mut a.population);
-                            a.population = nsga2::select(pop, cfg.mu);
-                        }
-                        a.evaluations += budget;
-                        a.islands_completed += 1;
-                        if let Some(cb) = &on_island {
-                            cb(a.islands_completed, a.evaluations);
+                        if a.merged.insert(island_id) {
+                            a.population.extend(final_pop);
+                            if a.population.len() > cfg.mu {
+                                let pop = std::mem::take(&mut a.population);
+                                a.population = nsga2::select(pop, cfg.mu);
+                            }
+                            a.evaluations += budget;
+                            a.islands_completed += 1;
+                            if let Some(cb) = &on_island {
+                                cb(a.islands_completed, a.evaluations);
+                            }
                         }
                     }
                     Ok(Context::new())
@@ -205,7 +260,10 @@ impl IslandSteadyGA {
         while submitted < total_islands
             && (in_flight.len() as u64) < self.islands.concurrent_islands as u64
         {
-            in_flight.push(env.submit(Job::new(make_island_task(rng.fork()), Context::new())));
+            in_flight.push(env.submit(Job::new(
+                make_island_task(submitted, rng.fork()),
+                Context::new(),
+            )));
             submitted += 1;
         }
         while !in_flight.is_empty() {
@@ -218,11 +276,38 @@ impl IslandSteadyGA {
                     let (_, report) = result?;
                     progressed = true;
                     virtual_makespan = virtual_makespan.max(report.virtual_end);
+                    if let Some(j) = &self.journal {
+                        // copy what the records need and release the
+                        // archive before touching the disk — island
+                        // merges on pool threads contend on this lock
+                        let (islands_completed, evaluations, snapshot) = {
+                            let a = archive.lock().unwrap();
+                            let snapshot = (a.islands_completed
+                                % ARCHIVE_SNAPSHOT_EVERY
+                                == 0)
+                                .then(|| a.population.clone());
+                            (a.islands_completed, a.evaluations, snapshot)
+                        };
+                        j.append(&journal::island_record(
+                            islands_completed,
+                            evaluations,
+                            report.virtual_end,
+                        ))?;
+                        if let Some(population) = snapshot {
+                            j.append(&journal::archive_record(
+                                evaluations,
+                                &population,
+                            ))?;
+                        }
+                    }
                     if submitted < total_islands {
                         // a new island is generated as soon as one returns
                         in_flight.push(env.submit(
-                            Job::new(make_island_task(rng.fork()), Context::new())
-                                .released_at(report.virtual_end),
+                            Job::new(
+                                make_island_task(submitted, rng.fork()),
+                                Context::new(),
+                            )
+                            .released_at(report.virtual_end),
                         ));
                         submitted += 1;
                     }
@@ -239,6 +324,11 @@ impl IslandSteadyGA {
             .map_err(|_| crate::error::Error::Evolution("archive still shared".into()))?
             .into_inner()
             .unwrap();
+        if let Some(j) = &self.journal {
+            j.append(&journal::archive_record(state.evaluations, &state.population))?;
+            j.append(&journal::env_stats_record(env.name(), &env.stats()))?;
+            j.append(&journal::run_end(state.evaluations, virtual_makespan))?;
+        }
         let pareto_front = nsga2::pareto_front(&state.population);
         Ok(EvolutionResult {
             population: state.population,
@@ -308,6 +398,91 @@ mod tests {
             .sum::<f64>()
             / r.pareto_front.len() as f64;
         assert!(err < 0.4, "front error {err}");
+    }
+
+    #[test]
+    fn speculative_broker_does_not_double_merge_islands() {
+        use crate::broker::{Broker, RoundRobin, SpeculationConfig};
+        use crate::environment::local::LocalEnvironment as Local;
+        use crate::exec::ThreadPool;
+
+        // a broker tuned to clone virtually every job: island tasks get
+        // re-executed, and the archive must still merge each island
+        // exactly once
+        let pool = Arc::new(ThreadPool::new(2));
+        let broker = Broker::builder("spec")
+            .backend(Arc::new(Local::with_pool(Arc::clone(&pool))), 2)
+            .backend(Arc::new(Local::with_pool(Arc::clone(&pool))), 2)
+            .policy(Box::new(RoundRobin::new()))
+            .speculation(SpeculationConfig {
+                quantile: 0.0,
+                min_samples: 1,
+            })
+            .build()
+            .unwrap();
+        let counting = Arc::new(CountingEvaluator::new(Zdt1Evaluator { dim: 2 }));
+        let ga = IslandSteadyGA::new(
+            config(10),
+            IslandConfig {
+                concurrent_islands: 2,
+                total_evaluations: 100,
+                island_sample: 5,
+                evals_per_island: 25,
+            },
+            Arc::clone(&counting) as _,
+        );
+        let r = ga.run(&broker, 4, None).unwrap();
+        assert_eq!(
+            r.evaluations, 100,
+            "speculative clones must not double-count island merges"
+        );
+        assert_eq!(r.generations, 4);
+        assert!(
+            counting.count() >= 100,
+            "clones do re-evaluate; only the merge is guarded"
+        );
+    }
+
+    #[test]
+    fn journaled_island_run_resumes_remaining_budget() {
+        let path = std::env::temp_dir()
+            .join(format!("molers-island-{}.jsonl", std::process::id()));
+        let env = LocalEnvironment::new(2);
+        let islands = IslandConfig {
+            concurrent_islands: 2,
+            total_evaluations: 100,
+            island_sample: 5,
+            evals_per_island: 25,
+        };
+        let ga = IslandSteadyGA::new(
+            config(10),
+            islands.clone(),
+            Arc::new(Zdt1Evaluator { dim: 2 }),
+        )
+        .journal(Arc::new(Journal::create(&path).unwrap()));
+        let r = ga.run(&env, 5, None).unwrap();
+        assert_eq!(r.evaluations, 100);
+
+        // the journal holds a final archive snapshot; treat it as the
+        // state of a killed longer run and continue to a 200-eval budget
+        let records = Journal::load(&path).unwrap();
+        let (pop, evals) = journal::island_resume(&records).expect("archive snapshot");
+        assert_eq!(evals, 100);
+        assert!(!pop.is_empty());
+        let resumed = IslandSteadyGA::new(
+            config(10),
+            IslandConfig {
+                total_evaluations: 200,
+                ..islands
+            },
+            Arc::new(Zdt1Evaluator { dim: 2 }),
+        )
+        .resume_from(pop, evals)
+        .run(&env, 6, None)
+        .unwrap();
+        assert_eq!(resumed.evaluations, 200, "resume counts prior evaluations");
+        assert_eq!(resumed.generations, 4, "only the remaining 100/25 islands ran");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -1,9 +1,15 @@
 //! A fixed-size thread pool with join handles.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+/// Live worker threads across every pool in the process. Lets tests assert
+/// that brokering several local environments onto one shared pool does not
+/// oversubscribe the machine with private per-environment pools.
+static LIVE_WORKERS: AtomicUsize = AtomicUsize::new(0);
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -78,6 +84,9 @@ impl ThreadPool {
         let workers = (0..threads)
             .map(|i| {
                 let shared = Arc::clone(&shared);
+                // counted at spawn time so live_workers() is deterministic
+                // the moment the pool constructor returns
+                LIVE_WORKERS.fetch_add(1, Ordering::SeqCst);
                 std::thread::Builder::new()
                     .name(format!("molers-worker-{i}"))
                     .spawn(move || worker_loop(shared))
@@ -97,6 +106,11 @@ impl ThreadPool {
 
     pub fn threads(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Worker threads currently alive process-wide (every pool counted).
+    pub fn live_workers() -> usize {
+        LIVE_WORKERS.load(Ordering::SeqCst)
     }
 
     /// Submit a closure; returns a join handle for its result.
@@ -149,6 +163,15 @@ impl Drop for ThreadPool {
 }
 
 fn worker_loop(shared: Arc<Shared>) {
+    // decrement on any exit path, even if a job unwinds past catch_unwind
+    // (it cannot today, but the counter must never leak)
+    struct Guard;
+    impl Drop for Guard {
+        fn drop(&mut self) {
+            LIVE_WORKERS.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+    let _guard = Guard;
     loop {
         let job = {
             let mut q = shared.queue.lock().unwrap();

@@ -8,7 +8,9 @@
 //! * **L3 (this crate)** — the workflow engine: typed dataflow, DSL,
 //!   DAG scheduler, exploration methods, NSGA-II / island evolution, and
 //!   simulated distributed environments (SSH, PBS/SGE/Slurm/OAR/Condor,
-//!   EGI) behind one [`environment::Environment`] trait.
+//!   EGI) behind one [`environment::Environment`] trait — multiplexed by
+//!   the fault-tolerant [`broker::Broker`] (policy-driven dispatch,
+//!   circuit breaking, speculative resubmission, journaled resume).
 //! * **L2** — the NetLogo "Ants" model as a JAX computation, AOT-lowered
 //!   to HLO text (`python/compile/model.py`).
 //! * **L1** — the fused pheromone diffusion/evaporation Pallas kernel
@@ -21,6 +23,7 @@
 //! paper-vs-measured record.
 
 pub mod bench;
+pub mod broker;
 pub mod care;
 pub mod cli;
 pub mod core;
@@ -41,6 +44,10 @@ pub use error::{Error, Result};
 
 /// Common imports for examples and downstream users.
 pub mod prelude {
+    pub use crate::broker::{
+        Broker, DispatchPolicy, EwmaPolicy, FlakyEnv, Journal, LeastInFlight,
+        RoundRobin,
+    };
     pub use crate::core::{val_f64, val_i64, val_str, val_u32, Context, Val};
     pub use crate::dsl::{
         CaptureHook, ClosureTask, CsvHook, DisplayHook, Hook, IdentityTask,
@@ -53,5 +60,8 @@ pub mod prelude {
     };
     pub use crate::util::{stats::Descriptor, Rng};
     pub use crate::workflow::MoleExecution;
-    pub use crate::Result;
+    // NOTE: `crate::Result` is deliberately NOT re-exported: a glob
+    // import of this prelude would otherwise shadow `std`'s two-generic
+    // `Result` and break `fn main() -> Result<(), Box<dyn Error>>`
+    // signatures in downstream code. Use `molers::Result` explicitly.
 }

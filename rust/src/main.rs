@@ -13,6 +13,7 @@
 
 use std::sync::Arc;
 
+use molers::broker::{journal, policy, Broker, Journal};
 use molers::cli::Args;
 use molers::environment::cluster::BatchEnvironment;
 use molers::environment::egi::EgiEnvironment;
@@ -51,6 +52,62 @@ fn environment(
     }
 }
 
+/// Build the execution environment for a command: `--envs SPEC` (a
+/// brokered fleet, with `--policy roundrobin|least|ewma`) wins over the
+/// single-environment `--env NAME`. Returns the broker too (when one was
+/// built) so commands can print its dispatch report.
+fn environment_from_args(
+    args: &Args,
+    default_env: &str,
+    nodes: usize,
+    pool: Arc<ThreadPool>,
+    seed: u64,
+) -> std::result::Result<(Arc<dyn Environment>, Option<Arc<Broker>>), Box<dyn std::error::Error>>
+{
+    if let Some(spec) = args.get("envs") {
+        let policy_name = args.get_or("policy", "ewma");
+        let p = policy::by_name(policy_name).ok_or_else(|| {
+            format!("unknown --policy `{policy_name}` (roundrobin|least|ewma)")
+        })?;
+        let mut builder = Broker::spec_builder(spec, pool, seed)?.policy(p);
+        if args.flag("speculate") {
+            builder = builder.speculation(molers::broker::SpeculationConfig::default());
+        }
+        let broker = Arc::new(builder.build()?);
+        let env: Arc<dyn Environment> = Arc::clone(&broker) as Arc<dyn Environment>;
+        Ok((env, Some(broker)))
+    } else {
+        Ok((
+            environment(args.get_or("env", default_env), nodes, pool, seed),
+            None,
+        ))
+    }
+}
+
+fn print_broker_report(b: &Broker) {
+    let c = b.counters();
+    println!(
+        "broker[{}]: reroutes={} speculation launched={} wins={} cancelled={} \
+         quarantine-trips={}",
+        b.policy_name(),
+        c.reroutes,
+        c.speculative_launched,
+        c.speculative_wins,
+        c.speculative_cancelled,
+        b.quarantine_trips()
+    );
+    for s in b.backend_snapshots() {
+        println!(
+            "  {:<32} completed={:<7} failed={:<5} ewma={:.1}s{}",
+            s.name,
+            s.completed,
+            s.failed,
+            s.ewma_duration_s,
+            if s.quarantined { "  [quarantined]" } else { "" }
+        );
+    }
+}
+
 fn genome_bounds() -> (Val<f64>, Val<f64>, Vec<Val<f64>>) {
     (
         val_f64("gDiffusionRate"),
@@ -85,12 +142,17 @@ fn main() {
             eprintln!(
                 "usage: molers <run|replicate|calibrate|island|render|envs> [options]\n\
                  common options: --seed N --env local|ssh|pbs|slurm|sge|oar|condor|egi\n\
+                 \x20          --envs local:8,pbs:32~0.2,egi:biomed:2000 (brokered fleet;\n\
+                 \x20          `~p` injects failures) --policy ewma|least|roundrobin\n\
+                 \x20          --speculate (clone stragglers past the p95, first finish wins)\n\
                  run:       --population 125 --diffusion 50 --evaporation 50\n\
                  replicate: --replications 5\n\
                  calibrate: --mu 10 --lambda 10 --generations 100 --replications 5 \
                  --chunk 1\n\
+                 \x20          --journal run.jsonl (checkpoint) | --resume run.jsonl\n\
                  island:    --islands 2000 --total-evals 200000 --sample 50 \
                  --evals-per-island 100 --nodes 2000\n\
+                 \x20          --journal run.jsonl | --resume run.jsonl\n\
                  render:    --ticks 400 --out world.ppm"
             );
             std::process::exit(2);
@@ -194,7 +256,50 @@ fn cmd_calibrate(args: &Args) -> CmdResult {
     // pooled batch path (§Perf): worthwhile on local/ssh environments
     let chunk = args.usize("chunk", 1)?;
     let pool = Arc::new(ThreadPool::default_size());
-    let env = environment(args.get_or("env", "local"), nodes, pool, seed);
+    let (env, broker) = environment_from_args(args, "local", nodes, pool, seed)?;
+
+    // --resume continues an interrupted journal; --journal starts one
+    let mut resume = None;
+    let journal_arc = if let Some(path) = args.get("resume") {
+        let records = Journal::load(path)?;
+        // the original run_start record carries the configuration; a
+        // resumed run with a different --mu/--lambda would silently
+        // corrupt the trajectory, so reject the mismatch up front
+        if let Some(start) = records
+            .iter()
+            .find(|r| r.get("kind").and_then(|k| k.as_str()) == Some("run_start"))
+        {
+            for (key, got) in [("mu", mu), ("lambda", lambda)] {
+                if let Some(want) =
+                    start.get(key).and_then(|v| v.as_f64()).map(|v| v as usize)
+                {
+                    if want != got {
+                        return Err(format!(
+                            "--resume config mismatch: journal `{path}` was \
+                             written with --{key} {want}, this run has --{key} \
+                             {got}"
+                        )
+                        .into());
+                    }
+                }
+            }
+        }
+        resume = journal::resume_state(&records);
+        let Some(state) = &resume else {
+            return Err(
+                format!("journal `{path}` holds no generation checkpoint").into()
+            );
+        };
+        println!(
+            "resuming from generation {} ({} evaluations done)",
+            state.generation, state.evaluations
+        );
+        Some(Arc::new(Journal::append_to(path)?))
+    } else if let Some(path) = args.get("journal") {
+        Some(Arc::new(Journal::create(path)?))
+    } else {
+        None
+    };
 
     let (base, kind) = best_available_evaluator(2);
     println!("evaluator: {kind}, environment: {}", env.name());
@@ -217,7 +322,7 @@ fn cmd_calibrate(args: &Args) -> CmdResult {
         &obj_refs,
         0.01,
     )?;
-    let ga = GenerationalGA::new(config, evaluator, lambda)
+    let mut ga = GenerationalGA::new(config, evaluator, lambda)
         .eval_chunk(chunk)
         .on_generation(|g, pop| {
         let best: f64 = pop
@@ -228,7 +333,13 @@ fn cmd_calibrate(args: &Args) -> CmdResult {
             println!("Generation {g}: best objective sum {best:.1}");
         }
     });
-    let result = ga.run(env.as_ref(), generations, seed)?;
+    if let Some(j) = journal_arc {
+        ga = ga.journal(j);
+    }
+    let result = ga.run_resumable(env.as_ref(), generations, seed, resume)?;
+    if let Some(b) = &broker {
+        print_broker_report(b);
+    }
     println!(
         "\nevaluations={} virtual-makespan={:.0}s pareto-front:",
         result.evaluations, result.virtual_makespan
@@ -257,7 +368,7 @@ fn cmd_island(args: &Args) -> CmdResult {
     let nodes = args.usize("nodes", islands)?;
     let replications = args.usize("replications", 1)?;
     let pool = Arc::new(ThreadPool::default_size());
-    let env = environment(args.get_or("env", "egi"), nodes, pool, seed);
+    let (env, broker) = environment_from_args(args, "egi", nodes, pool, seed)?;
 
     let (base, kind) = best_available_evaluator(2);
     println!("evaluator: {kind}, environment: {}", env.name());
@@ -275,7 +386,7 @@ fn cmd_island(args: &Args) -> CmdResult {
         &obj_refs,
         0.01,
     )?;
-    let ga = IslandSteadyGA::new(
+    let mut ga = IslandSteadyGA::new(
         config,
         IslandConfig {
             concurrent_islands: islands,
@@ -285,6 +396,21 @@ fn cmd_island(args: &Args) -> CmdResult {
         },
         evaluator,
     );
+    if let Some(path) = args.get("resume") {
+        let records = Journal::load(path)?;
+        let (pop, evals) = journal::island_resume(&records).ok_or_else(|| {
+            format!("journal `{path}` holds no island archive snapshot")
+        })?;
+        println!(
+            "resuming island archive: {} individuals, {evals} evaluations done",
+            pop.len()
+        );
+        ga = ga
+            .resume_from(pop, evals)
+            .journal(Arc::new(Journal::append_to(path)?));
+    } else if let Some(path) = args.get("journal") {
+        ga = ga.journal(Arc::new(Journal::create(path)?));
+    }
     let t0 = std::time::Instant::now();
     let result = ga.run(
         env.as_ref(),
@@ -306,9 +432,12 @@ fn cmd_island(args: &Args) -> CmdResult {
         throughput_per_hour(result.evaluations, result.virtual_makespan),
     );
     println!(
-        "env: submitted={} completed={} resubmissions={}",
-        stats.submitted, stats.completed, stats.resubmissions
+        "env: submitted={} completed={} resubmissions={} failed-jobs={}",
+        stats.submitted, stats.completed, stats.resubmissions, stats.failed_jobs
     );
+    if let Some(b) = &broker {
+        print_broker_report(b);
+    }
     println!("pareto front ({} points):", result.pareto_front.len());
     for ind in result.pareto_front.iter().take(10) {
         println!(

@@ -77,6 +77,22 @@ impl MoleExecution {
         }
     }
 
+    /// Run the puzzle over a brokered fleet of environments, e.g.
+    /// `"local:4,pbs:32,egi:biomed:2000"` (the CLI's `--envs` flag). The
+    /// broker becomes the default environment: capsule-level environment
+    /// overrides still win, but everything else is dispatched, re-routed
+    /// on failure and speculatively resubmitted by
+    /// [`crate::broker::Broker`].
+    pub fn with_envs(
+        puzzle: Puzzle,
+        spec: &str,
+        pool: Arc<crate::exec::ThreadPool>,
+        seed: u64,
+    ) -> Result<Self> {
+        let broker = crate::broker::Broker::from_spec(spec, pool, seed)?;
+        Ok(Self::new(puzzle, Arc::new(broker), seed))
+    }
+
     /// Run with an empty initial context.
     pub fn start(self) -> Result<ExecutionResult> {
         self.start_with(Context::new())
@@ -393,6 +409,36 @@ mod tests {
         let result = MoleExecution::new(p, local(), 5).start().unwrap();
         assert_eq!(result.report.jobs, 3);
         assert_eq!(result.outputs.len(), 1);
+    }
+
+    #[test]
+    fn brokered_default_env_runs_exploration() {
+        // same workflow as explore_aggregate_roundtrip, but the default
+        // environment is a broker over two local backends sharing a pool
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let mut p = Puzzle::new();
+        let entry = p.capsule(Arc::new(IdentityTask::new("entry")));
+        let model = p.capsule(Arc::new(
+            ClosureTask::new("sq", {
+                let (x, y) = (x.clone(), y.clone());
+                move |ctx| Ok(Context::new().with(&y, ctx.get(&x)?.powi(2)))
+            })
+            .input(&x)
+            .output(&y),
+        ));
+        let collect = p.capsule(Arc::new(IdentityTask::new("collect")));
+        let sampling = FullFactorial::new(vec![Factor::new(&x, 0.0, 3.0, 1.0)]);
+        p.explore(entry, Arc::new(sampling), model);
+        p.aggregate(model, collect);
+
+        let pool = Arc::new(crate::exec::ThreadPool::new(2));
+        let exec = MoleExecution::with_envs(p, "local:2,local:2", pool, 2).unwrap();
+        let result = exec.start().unwrap();
+        assert_eq!(result.outputs.len(), 1);
+        let mut ys = result.outputs[0].get(&y.array()).unwrap();
+        ys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(ys, vec![0.0, 1.0, 4.0, 9.0]);
     }
 
     #[test]

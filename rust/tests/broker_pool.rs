@@ -1,0 +1,68 @@
+//! Oversubscription regression (§satellite): brokering several `local`
+//! backends on one machine must share one worker pool. Before the fix,
+//! each `LocalEnvironment::new` spun up a private pool, so a broker over
+//! three `local:4` entries ran 12 worker threads on a 3-core budget.
+//!
+//! This test lives in its own integration binary on purpose: the live
+//! worker count is process-global, and any concurrently running test
+//! that creates a pool would make the assertions racy.
+
+use std::sync::Arc;
+
+use molers::broker::Broker;
+use molers::core::Context;
+use molers::dsl::ClosureTask;
+use molers::environment::local::LocalEnvironment;
+use molers::environment::{run_all, Environment, Job};
+use molers::exec::ThreadPool;
+
+#[test]
+fn brokered_locals_share_one_pool() {
+    let before = ThreadPool::live_workers();
+
+    let shared = Arc::new(ThreadPool::new(3));
+    assert_eq!(ThreadPool::live_workers(), before + 3);
+
+    // three local backends brokered on this machine: still 3 workers
+    let broker =
+        Broker::from_spec("local:4,local:4,local:4", Arc::clone(&shared), 1).unwrap();
+    assert_eq!(
+        ThreadPool::live_workers(),
+        before + 3,
+        "brokered local backends must share the machine pool, not spawn private ones"
+    );
+
+    // the fleet actually runs work
+    let task = Arc::new(ClosureTask::new("noop", |c: &Context| Ok(c.clone())));
+    let results = run_all(
+        &broker,
+        (0..12)
+            .map(|_| Job::new(Arc::clone(&task) as _, Context::new()))
+            .collect(),
+    );
+    for r in results {
+        r.unwrap();
+    }
+    assert_eq!(broker.stats().completed, 12);
+    assert_eq!(
+        ThreadPool::live_workers(),
+        before + 3,
+        "running brokered work must not grow the worker set"
+    );
+
+    // contrast: per-environment private pools do oversubscribe — this is
+    // exactly what the broker path avoids
+    let a = LocalEnvironment::new(4);
+    let b = LocalEnvironment::new(4);
+    assert_eq!(ThreadPool::live_workers(), before + 3 + 8);
+    drop(a);
+    drop(b);
+
+    drop(broker);
+    drop(shared);
+    assert_eq!(
+        ThreadPool::live_workers(),
+        before,
+        "all workers must be joined once pools are dropped"
+    );
+}
