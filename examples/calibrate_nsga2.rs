@@ -57,14 +57,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         move |generation, population| {
             // DisplayHook("Generation ${generation}")
             println!("Generation {generation}");
-            for ind in population {
+            for i in 0..population.len() {
+                let genome = population.genome(i);
+                let objectives = population.objectives_row(i);
                 let mut ctx = Context::new();
                 ctx.set(&val_f64("generation"), f64::from(generation));
-                ctx.set(&val_f64("gDiffusionRate"), ind.genome[0]);
-                ctx.set(&val_f64("gEvaporationRate"), ind.genome[1]);
-                ctx.set(&val_f64("f1"), ind.objectives[0]);
-                ctx.set(&val_f64("f2"), ind.objectives[1]);
-                ctx.set(&val_f64("f3"), ind.objectives[2]);
+                ctx.set(&val_f64("gDiffusionRate"), genome[0]);
+                ctx.set(&val_f64("gEvaporationRate"), genome[1]);
+                ctx.set(&val_f64("f1"), objectives[0]);
+                ctx.set(&val_f64("f2"), objectives[1]);
+                ctx.set(&val_f64("f3"), objectives[2]);
                 let _ = csv.process(&ctx); // SavePopulationHook("/tmp/ants/")
             }
         },

@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use molers::bench::Bench;
 use molers::evolution::{
-    AntSimEvaluator, Evaluator, PooledEvaluator, ReplicatedEvaluator,
+    AntSimEvaluator, Evaluator, PooledEvaluator, ReplicatedEvaluator, RowsView,
 };
 use molers::runtime::{ArtifactManifest, PjrtEvaluator};
 
@@ -53,6 +53,23 @@ fn main() {
         serial_s / pooled_s,
         "x (acceptance: > 2 on 4 cores)",
     );
+
+    // the columnar rows API (§Perf tentpole): same batch as a contiguous
+    // matrix, workers writing disjoint preallocated objective rows
+    let rows_pooled_s = {
+        let pooled =
+            PooledEvaluator::with_threads(Arc::new(AntSimEvaluator::fast()), threads);
+        let data: Vec<f64> = batch.iter().flat_map(|(g, _)| g.clone()).collect();
+        let seeds: Vec<u32> = batch.iter().map(|(_, s)| *s).collect();
+        let mut out = vec![0.0; batch.len() * 3];
+        b.case("rust_sim_batch32_rows_pooled", || {
+            pooled
+                .evaluate_rows(RowsView::new(&data, 2), &seeds, &mut out)
+                .unwrap()
+        })
+        .median_s()
+    };
+    b.metric("batch32_rows_over_tuples", pooled_s / rows_pooled_s, "x");
 
     // the replication wrapper flattens genomes x seeds into one inner
     // batch; pooled underneath, its 5 seeds cost well under 5x a single

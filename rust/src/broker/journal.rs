@@ -26,22 +26,34 @@
 //! remaining evaluation budget.
 
 use std::collections::BTreeMap;
-use std::io::Write;
+use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
 use crate::environment::EnvStats;
 use crate::error::{Error, Result};
 use crate::evolution::genome::Individual;
+use crate::evolution::popmatrix::PopMatrix;
 use crate::util::json::{parse, Json};
 use crate::util::Rng;
 
+/// Size of the writer's assembly buffer: big enough that even a large
+/// population checkpoint drains as a few MiB-sized writes rather than one
+/// syscall per `write_fmt` fragment (a number, a comma...), small enough
+/// to be irrelevant beside the checkpoint data itself.
+const WRITE_BUFFER_BYTES: usize = 1 << 20;
+
 /// Append-only JSONL checkpoint writer. Clone-free and lock-cheap: one
-/// line per record, flushed eagerly so a `kill -9` loses at most the
-/// line being written (the loader tolerates a torn final line).
+/// record per line assembled in a [`BufWriter`] (see
+/// [`WRITE_BUFFER_BYTES`]), explicitly flushed once per checkpoint —
+/// unbuffered, a 200k-population generation record's formatting issued a
+/// write syscall per fragment; buffered it drains in buffer-sized
+/// chunks. A `kill -9` still loses at most the line being written (the
+/// loader tolerates a torn final line, and [`Journal::append_to`]
+/// repairs it before continuing).
 pub struct Journal {
     path: PathBuf,
-    file: Mutex<std::fs::File>,
+    file: Mutex<BufWriter<std::fs::File>>,
 }
 
 impl Journal {
@@ -51,7 +63,7 @@ impl Journal {
         let file = std::fs::File::create(&path)?;
         Ok(Journal {
             path,
-            file: Mutex::new(file),
+            file: Mutex::new(BufWriter::with_capacity(WRITE_BUFFER_BYTES, file)),
         })
     }
 
@@ -77,7 +89,7 @@ impl Journal {
             .open(&path)?;
         Ok(Journal {
             path,
-            file: Mutex::new(file),
+            file: Mutex::new(BufWriter::with_capacity(WRITE_BUFFER_BYTES, file)),
         })
     }
 
@@ -85,7 +97,10 @@ impl Journal {
         &self.path
     }
 
-    /// Append one record as a line and flush it to disk.
+    /// Append one record as a line and flush it to disk: the record is
+    /// assembled in the writer's buffer (buffer-sized writes, not one
+    /// syscall per formatted fragment), then explicitly flushed so the
+    /// checkpoint is durable before the engine continues.
     pub fn append(&self, record: &Json) -> Result<()> {
         let mut f = self.file.lock().unwrap();
         writeln!(f, "{record}")?;
@@ -153,6 +168,24 @@ fn population_json(population: &[Individual]) -> Json {
     Json::Arr(population.iter().map(individual_json).collect())
 }
 
+/// Serialise straight from matrix rows — no intermediate [`Individual`]
+/// per row. Produces exactly the same JSON as [`population_json`] on the
+/// equivalent AoS population, so matrix- and AoS-written journals are
+/// interchangeable (and `parse_population` reads both).
+fn population_json_matrix(population: &PopMatrix) -> Json {
+    Json::Arr(
+        (0..population.len())
+            .map(|i| {
+                obj(vec![
+                    ("genome", f64_arr(population.genome(i))),
+                    ("objectives", f64_arr(population.objectives_row(i))),
+                    ("evals", Json::Num(f64::from(population.evals(i)))),
+                ])
+            })
+            .collect(),
+    )
+}
+
 fn parse_population(j: &Json) -> Option<Vec<Individual>> {
     j.as_arr()?.iter().map(parse_individual).collect()
 }
@@ -168,13 +201,15 @@ pub fn run_start(run: &str, seed: u64, extra: Vec<(&str, Json)>) -> Json {
     obj(pairs)
 }
 
-/// `generation` checkpoint record (generational driver).
-pub fn generation_record(
+/// Shared field list of a `generation` record — the single place both the
+/// AoS and the matrix writers assemble it, so the two journal encodings
+/// cannot drift apart field-wise.
+fn generation_record_with(
     generation: u32,
     evaluations: u64,
     clock: f64,
     rng: &Rng,
-    population: &[Individual],
+    population: Json,
 ) -> Json {
     obj(vec![
         ("kind", Json::Str("generation".into())),
@@ -190,8 +225,58 @@ pub fn generation_record(
                     .collect(),
             ),
         ),
-        ("population", population_json(population)),
+        ("population", population),
     ])
+}
+
+/// `generation` checkpoint record (generational driver, AoS edge).
+pub fn generation_record(
+    generation: u32,
+    evaluations: u64,
+    clock: f64,
+    rng: &Rng,
+    population: &[Individual],
+) -> Json {
+    generation_record_with(
+        generation,
+        evaluations,
+        clock,
+        rng,
+        population_json(population),
+    )
+}
+
+/// `generation` checkpoint record serialised straight from matrix rows
+/// (the columnar engines' path — byte-identical to [`generation_record`]
+/// on the equivalent AoS population).
+pub fn generation_record_matrix(
+    generation: u32,
+    evaluations: u64,
+    clock: f64,
+    rng: &Rng,
+    population: &PopMatrix,
+) -> Json {
+    generation_record_with(
+        generation,
+        evaluations,
+        clock,
+        rng,
+        population_json_matrix(population),
+    )
+}
+
+/// Shared field list of an `archive` record (see [`generation_record_with`]).
+fn archive_record_with(evaluations: u64, population: Json) -> Json {
+    obj(vec![
+        ("kind", Json::Str("archive".into())),
+        ("evaluations", Json::Num(evaluations as f64)),
+        ("population", population),
+    ])
+}
+
+/// `archive` snapshot record from matrix rows (island driver).
+pub fn archive_record_matrix(evaluations: u64, population: &PopMatrix) -> Json {
+    archive_record_with(evaluations, population_json_matrix(population))
 }
 
 /// `island` progress record (island driver).
@@ -204,13 +289,9 @@ pub fn island_record(islands_completed: u64, evaluations: u64, clock: f64) -> Js
     ])
 }
 
-/// `archive` snapshot record (island driver).
+/// `archive` snapshot record (island driver, AoS edge).
 pub fn archive_record(evaluations: u64, population: &[Individual]) -> Json {
-    obj(vec![
-        ("kind", Json::Str("archive".into())),
-        ("evaluations", Json::Num(evaluations as f64)),
-        ("population", population_json(population)),
-    ])
+    archive_record_with(evaluations, population_json(population))
 }
 
 /// `env_stats` record.
@@ -335,6 +416,26 @@ mod tests {
             assert_eq!(resumed.next_u64(), original.next_u64());
         }
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn matrix_records_byte_identical_to_aos_records() {
+        let population = pop();
+        let matrix = PopMatrix::from_individuals(&population, 2, 2).unwrap();
+        let mut rng = Rng::new(3);
+        rng.next_u64();
+        assert_eq!(
+            generation_record_matrix(7, 140, 55.5, &rng, &matrix).to_string(),
+            generation_record(7, 140, 55.5, &rng, &population).to_string(),
+        );
+        assert_eq!(
+            archive_record_matrix(140, &matrix).to_string(),
+            archive_record(140, &population).to_string(),
+        );
+        // and the matrix-written record resumes to the same population
+        let rec = generation_record_matrix(7, 140, 55.5, &rng, &matrix);
+        let state = resume_state(&[rec]).unwrap();
+        assert_eq!(state.population, population);
     }
 
     #[test]

@@ -16,12 +16,95 @@
 //!   pooled/vmapped layers see the full fan-out.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
 use crate::exec::ThreadPool;
 use crate::sim::ants::{evaluate as ant_evaluate, AntParams};
 use crate::util::stats::Descriptor;
+
+/// A borrowed view of genome rows in a row-major matrix (§Perf tentpole:
+/// slice views in, preallocated objective rows out). `index: None` views
+/// the rows `0..data.len()/dim` directly; `index: Some(ix)` views row
+/// `ix[i]` at position `i`, which lets wrappers like
+/// [`ReplicatedEvaluator`] repeat one underlying genome row many times
+/// **without copying it** — the historical flattening cloned every genome
+/// `replications` times.
+#[derive(Clone, Copy)]
+pub struct RowsView<'a> {
+    data: &'a [f64],
+    dim: usize,
+    index: Option<&'a [usize]>,
+}
+
+impl<'a> RowsView<'a> {
+    /// View over all rows of a dense row-major matrix.
+    pub fn new(data: &'a [f64], dim: usize) -> Self {
+        debug_assert!(dim > 0, "rows need at least one column");
+        debug_assert_eq!(data.len() % dim, 0, "ragged matrix");
+        RowsView {
+            data,
+            dim,
+            index: None,
+        }
+    }
+
+    /// View where position `i` maps to underlying row `index[i]` (rows
+    /// may repeat).
+    pub fn indexed(data: &'a [f64], dim: usize, index: &'a [usize]) -> Self {
+        debug_assert!(dim > 0, "rows need at least one column");
+        RowsView {
+            data,
+            dim,
+            index: Some(index),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn len(&self) -> usize {
+        match self.index {
+            Some(ix) => ix.len(),
+            None => self.data.len() / self.dim,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The underlying matrix row id at position `i`.
+    pub fn row_id(&self, i: usize) -> usize {
+        match self.index {
+            Some(ix) => ix[i],
+            None => i,
+        }
+    }
+
+    /// The genome at position `i`.
+    pub fn row(&self, i: usize) -> &'a [f64] {
+        let r = self.row_id(i);
+        &self.data[r * self.dim..(r + 1) * self.dim]
+    }
+
+    /// Positions `lo..hi` as a sub-view (no copying).
+    pub fn slice(&self, lo: usize, hi: usize) -> RowsView<'a> {
+        match self.index {
+            Some(ix) => RowsView {
+                data: self.data,
+                dim: self.dim,
+                index: Some(&ix[lo..hi]),
+            },
+            None => RowsView {
+                data: &self.data[lo * self.dim..hi * self.dim],
+                dim: self.dim,
+                index: None,
+            },
+        }
+    }
+}
 
 /// Maps a genome (plus a seed for stochastic models) to minimised
 /// objective values.
@@ -38,6 +121,42 @@ pub trait Evaluator: Send + Sync {
         jobs.iter()
             .map(|(g, s)| self.evaluate(g, *s))
             .collect()
+    }
+
+    /// Columnar batch evaluation (§Perf tentpole): genome rows in via a
+    /// borrowed [`RowsView`], objective rows out into the preallocated
+    /// `out` buffer (`out.len() == rows.len() * self.objectives()`).
+    ///
+    /// The default bridges through [`Evaluator::evaluate_batch`] so an
+    /// evaluator with a batch fast path (PJRT vmap) keeps it; the
+    /// in-crate evaluators override this with straight row writes that
+    /// allocate nothing, which is what makes the engines' steady-state
+    /// waves allocation-free.
+    fn evaluate_rows(&self, rows: RowsView<'_>, seeds: &[u32], out: &mut [f64]) -> Result<()> {
+        let n_obj = self.objectives();
+        debug_assert_eq!(seeds.len(), rows.len());
+        debug_assert_eq!(out.len(), rows.len() * n_obj);
+        let jobs: Vec<(Vec<f64>, u32)> = (0..rows.len())
+            .map(|i| (rows.row(i).to_vec(), seeds[i]))
+            .collect();
+        let results = self.evaluate_batch(&jobs)?;
+        if results.len() != jobs.len() {
+            return Err(Error::Evolution(format!(
+                "evaluator returned {} results for {} rows",
+                results.len(),
+                jobs.len()
+            )));
+        }
+        for (i, objs) in results.iter().enumerate() {
+            if objs.len() != n_obj {
+                return Err(Error::Evolution(format!(
+                    "evaluator returned {} objectives, declared {n_obj}",
+                    objs.len()
+                )));
+            }
+            out[i * n_obj..(i + 1) * n_obj].copy_from_slice(objs);
+        }
+        Ok(())
     }
 
     /// Nominal cost of one evaluation in remote core-seconds — feeds the
@@ -92,6 +211,21 @@ impl Evaluator for AntSimEvaluator {
         Ok(ant_evaluate(params, u64::from(seed), self.max_ticks).to_vec())
     }
 
+    fn evaluate_rows(&self, rows: RowsView<'_>, seeds: &[u32], out: &mut [f64]) -> Result<()> {
+        debug_assert_eq!(out.len(), rows.len() * 3);
+        for i in 0..rows.len() {
+            let g = rows.row(i);
+            let params = AntParams {
+                population: self.population,
+                diffusion_rate: g.first().copied().unwrap_or(50.0),
+                evaporation_rate: g.get(1).copied().unwrap_or(50.0),
+            };
+            let fit = ant_evaluate(params, u64::from(seeds[i]), self.max_ticks);
+            out[i * 3..(i + 1) * 3].copy_from_slice(&fit);
+        }
+        Ok(())
+    }
+
     fn nominal_cost_s(&self) -> f64 {
         // scale the 36 s/1000-tick reference to this configuration
         36.0 * f64::from(self.max_ticks) / 1000.0
@@ -115,6 +249,20 @@ impl Evaluator for Zdt1Evaluator {
             + 9.0 * genome[1..].iter().sum::<f64>() / (self.dim as f64 - 1.0).max(1.0);
         let f2 = g * (1.0 - (f1 / g).sqrt());
         Ok(vec![f1, f2])
+    }
+
+    fn evaluate_rows(&self, rows: RowsView<'_>, _seeds: &[u32], out: &mut [f64]) -> Result<()> {
+        debug_assert_eq!(out.len(), rows.len() * 2);
+        for i in 0..rows.len() {
+            let genome = rows.row(i);
+            let f1 = genome[0];
+            let g = 1.0
+                + 9.0 * genome[1..].iter().sum::<f64>()
+                    / (self.dim as f64 - 1.0).max(1.0);
+            out[2 * i] = f1;
+            out[2 * i + 1] = g * (1.0 - (f1 / g).sqrt());
+        }
+        Ok(())
     }
 
     fn nominal_cost_s(&self) -> f64 {
@@ -142,6 +290,20 @@ impl Evaluator for SphereEvaluator {
                 * 2.0
                 * self.noise;
         Ok(vec![base + noise])
+    }
+
+    fn evaluate_rows(&self, rows: RowsView<'_>, seeds: &[u32], out: &mut [f64]) -> Result<()> {
+        debug_assert_eq!(out.len(), rows.len());
+        for i in 0..rows.len() {
+            let base: f64 = rows.row(i).iter().map(|x| x * x).sum();
+            let mut s = u64::from(seeds[i]);
+            let noise = (crate::util::rng::splitmix64(&mut s) as f64 / u64::MAX as f64
+                - 0.5)
+                * 2.0
+                * self.noise;
+            out[i] = base + noise;
+        }
+        Ok(())
     }
 
     fn nominal_cost_s(&self) -> f64 {
@@ -224,6 +386,42 @@ impl Evaluator for PooledEvaluator {
         Ok(out)
     }
 
+    /// Columnar fan-out: the out buffer is split into per-chunk row
+    /// ranges and each worker writes its own disjoint slice via the
+    /// inner evaluator's `evaluate_rows` — no per-job tuples, no result
+    /// reassembly, deterministic layout regardless of scheduling.
+    fn evaluate_rows(&self, rows: RowsView<'_>, seeds: &[u32], out: &mut [f64]) -> Result<()> {
+        let n = rows.len();
+        let n_obj = self.objectives();
+        debug_assert_eq!(out.len(), n * n_obj);
+        if n <= 1 || self.pool.threads() == 1 {
+            return self.inner.evaluate_rows(rows, seeds, out);
+        }
+        let chunk_rows = n.div_ceil(self.pool.threads() * 4).max(1);
+        let inner = &self.inner;
+        let first_err: Mutex<Option<Error>> = Mutex::new(None);
+        self.pool
+            .scoped_chunks(out, chunk_rows * n_obj, |k, out_chunk| {
+                let lo = k * chunk_rows;
+                let hi = (lo + chunk_rows).min(n);
+                if let Err(e) =
+                    inner.evaluate_rows(rows.slice(lo, hi), &seeds[lo..hi], out_chunk)
+                {
+                    let mut slot = first_err.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(e);
+                    }
+                }
+            })
+            .map_err(|panic| {
+                Error::Evolution(format!("parallel evaluation panicked: {panic}"))
+            })?;
+        match first_err.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
     fn nominal_cost_s(&self) -> f64 {
         self.inner.nominal_cost_s()
     }
@@ -258,6 +456,11 @@ impl<E: Evaluator> Evaluator for CountingEvaluator<E> {
         self.inner.evaluate(genome, seed)
     }
 
+    fn evaluate_rows(&self, rows: RowsView<'_>, seeds: &[u32], out: &mut [f64]) -> Result<()> {
+        self.count.fetch_add(rows.len() as u64, Ordering::Relaxed);
+        self.inner.evaluate_rows(rows, seeds, out)
+    }
+
     fn nominal_cost_s(&self) -> f64 {
         self.inner.nominal_cost_s()
     }
@@ -279,6 +482,26 @@ impl ReplicatedEvaluator {
             descriptor: Descriptor::Median,
         }
     }
+
+    /// Reduce one genome's replication results into its objective row:
+    /// `value_of(rep, objective)` yields the raw values, `out_row`
+    /// receives one descriptor summary per objective. The single
+    /// reduction shared by every batch shape (flat rows, ragged
+    /// fallback), so descriptor semantics cannot diverge between paths.
+    fn reduce_reps(
+        &self,
+        value_of: impl Fn(usize, usize) -> f64,
+        out_row: &mut [f64],
+        values: &mut Vec<f64>,
+    ) {
+        for (o, out) in out_row.iter_mut().enumerate() {
+            values.clear();
+            for r in 0..self.replications {
+                values.push(value_of(r, o));
+            }
+            *out = self.descriptor.apply(values);
+        }
+    }
 }
 
 impl Evaluator for ReplicatedEvaluator {
@@ -292,33 +515,88 @@ impl Evaluator for ReplicatedEvaluator {
             .ok_or_else(|| Error::Evolution("empty replication batch".into()))
     }
 
-    /// Flatten all genomes × replication seeds into **one** inner batch:
-    /// a pooled or vmapped inner evaluator sees the whole fan-out at once
-    /// instead of `jobs.len()` serial waves of `replications`.
+    /// Flatten all genomes × replication seeds into **one** inner batch —
+    /// a pooled or vmapped inner evaluator sees the whole fan-out at once.
+    /// Homogeneous genomes route through [`Evaluator::evaluate_rows`] with
+    /// an *indexed* view, so each genome is stored once and referenced
+    /// `replications` times (the historical flattening cloned it per
+    /// seed: `replications × genome.len()` copies per job).
     fn evaluate_batch(&self, jobs: &[(Vec<f64>, u32)]) -> Result<Vec<Vec<f64>>> {
         let reps = self.replications;
-        let mut flat: Vec<(Vec<f64>, u32)> = Vec::with_capacity(jobs.len() * reps);
-        for (genome, seed) in jobs {
-            // derive the replication seeds from the job seed (identical
-            // stream to the original per-genome implementation)
-            let mut s = u64::from(*seed) | 0x5851_f42d_0000_0000;
-            for _ in 0..reps {
-                flat.push((genome.clone(), crate::util::rng::splitmix64(&mut s) as u32));
-            }
-        }
-        let results = self.inner.evaluate_batch(&flat)?;
         let n_obj = self.objectives();
-        let mut out = Vec::with_capacity(jobs.len());
-        for rep_group in results.chunks(reps) {
-            let mut per_obj: Vec<Vec<f64>> = vec![Vec::new(); n_obj];
-            for objs in rep_group {
-                for (o, v) in per_obj.iter_mut().zip(objs) {
-                    o.push(*v);
+        if jobs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let dim = jobs[0].0.len();
+        if dim == 0 || jobs.iter().any(|(g, _)| g.len() != dim) {
+            // ragged or zero-width genomes cannot share one matrix: keep
+            // the historical per-rep clone path for this rare shape
+            let mut flat: Vec<(Vec<f64>, u32)> = Vec::with_capacity(jobs.len() * reps);
+            for (genome, seed) in jobs {
+                let mut s = u64::from(*seed) | 0x5851_f42d_0000_0000;
+                for _ in 0..reps {
+                    flat.push((
+                        genome.clone(),
+                        crate::util::rng::splitmix64(&mut s) as u32,
+                    ));
                 }
             }
-            out.push(per_obj.iter().map(|o| self.descriptor.apply(o)).collect());
+            let results = self.inner.evaluate_batch(&flat)?;
+            let mut out = Vec::with_capacity(jobs.len());
+            let mut values = Vec::with_capacity(reps);
+            for rep_group in results.chunks(reps) {
+                let mut row = vec![0.0; n_obj];
+                self.reduce_reps(|r, o| rep_group[r][o], &mut row, &mut values);
+                out.push(row);
+            }
+            return Ok(out);
         }
-        Ok(out)
+        let mut data = Vec::with_capacity(jobs.len() * dim);
+        let mut seeds = Vec::with_capacity(jobs.len());
+        for (genome, seed) in jobs {
+            data.extend_from_slice(genome);
+            seeds.push(*seed);
+        }
+        let mut out = vec![0.0; jobs.len() * n_obj];
+        self.evaluate_rows(RowsView::new(&data, dim), &seeds, &mut out)?;
+        Ok(out.chunks(n_obj).map(<[f64]>::to_vec).collect())
+    }
+
+    /// Columnar replication: one index entry per (genome, seed) pair —
+    /// `replications` positions all pointing at the same underlying row —
+    /// then a descriptor reduction straight into the caller's objective
+    /// rows. Seed derivation is identical to the historical per-genome
+    /// implementation, so results are bit-identical.
+    fn evaluate_rows(&self, rows: RowsView<'_>, seeds: &[u32], out: &mut [f64]) -> Result<()> {
+        let reps = self.replications;
+        let n = rows.len();
+        let n_obj = self.objectives();
+        debug_assert_eq!(out.len(), n * n_obj);
+        let mut index = Vec::with_capacity(n * reps);
+        let mut rep_seeds = Vec::with_capacity(n * reps);
+        for (i, seed) in seeds.iter().enumerate() {
+            let row = rows.row_id(i);
+            let mut s = u64::from(*seed) | 0x5851_f42d_0000_0000;
+            for _ in 0..reps {
+                index.push(row);
+                rep_seeds.push(crate::util::rng::splitmix64(&mut s) as u32);
+            }
+        }
+        let mut rep_out = vec![0.0; n * reps * n_obj];
+        self.inner.evaluate_rows(
+            RowsView::indexed(rows.data, rows.dim, &index),
+            &rep_seeds,
+            &mut rep_out,
+        )?;
+        let mut values = Vec::with_capacity(reps);
+        for (i, out_row) in out.chunks_mut(n_obj).enumerate() {
+            self.reduce_reps(
+                |r, o| rep_out[(i * reps + r) * n_obj + o],
+                out_row,
+                &mut values,
+            );
+        }
+        Ok(())
     }
 
     fn nominal_cost_s(&self) -> f64 {
@@ -459,5 +737,100 @@ mod tests {
         assert!(pooled.evaluate_batch(&[]).unwrap().is_empty());
         let one = pooled.evaluate_batch(&[(vec![0.5, 0.5], 1)]).unwrap();
         assert_eq!(one.len(), 1);
+    }
+
+    /// rows-API results must be bit-identical to the per-genome API for
+    /// every in-crate evaluator.
+    fn assert_rows_match_batch(ev: &dyn Evaluator, dim: usize, n: usize) {
+        let jobs: Vec<(Vec<f64>, u32)> = (0..n)
+            .map(|i| {
+                let x = i as f64 / n as f64;
+                let genome: Vec<f64> =
+                    (0..dim).map(|d| (x + d as f64 * 0.37) % 1.0).collect();
+                (genome, i as u32)
+            })
+            .collect();
+        let want = ev.evaluate_batch(&jobs).unwrap();
+        let data: Vec<f64> = jobs.iter().flat_map(|(g, _)| g.clone()).collect();
+        let seeds: Vec<u32> = jobs.iter().map(|(_, s)| *s).collect();
+        let n_obj = ev.objectives();
+        let mut out = vec![0.0; n * n_obj];
+        ev.evaluate_rows(RowsView::new(&data, dim), &seeds, &mut out)
+            .unwrap();
+        for (i, objs) in want.iter().enumerate() {
+            assert_eq!(
+                &out[i * n_obj..(i + 1) * n_obj],
+                objs.as_slice(),
+                "row {i} diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn rows_api_matches_batch_api_for_all_evaluators() {
+        assert_rows_match_batch(&Zdt1Evaluator { dim: 3 }, 3, 17);
+        assert_rows_match_batch(&SphereEvaluator { noise: 2.0 }, 2, 17);
+        assert_rows_match_batch(&AntSimEvaluator::fast(), 2, 3);
+        assert_rows_match_batch(
+            &PooledEvaluator::with_threads(Arc::new(Zdt1Evaluator { dim: 3 }), 4),
+            3,
+            97,
+        );
+        assert_rows_match_batch(
+            &ReplicatedEvaluator::new(Arc::new(SphereEvaluator { noise: 1.0 }), 5),
+            2,
+            9,
+        );
+        assert_rows_match_batch(
+            &CountingEvaluator::new(Zdt1Evaluator { dim: 2 }),
+            2,
+            11,
+        );
+    }
+
+    #[test]
+    fn indexed_rows_view_shares_underlying_rows() {
+        let data = [0.1, 0.9, 0.5, 0.5];
+        let index = [1usize, 0, 1, 1];
+        let view = RowsView::indexed(&data, 2, &index);
+        assert_eq!(view.len(), 4);
+        assert_eq!(view.row(0), &[0.5, 0.5]);
+        assert_eq!(view.row(1), &[0.1, 0.9]);
+        assert_eq!(view.row_id(3), 1);
+        let sub = view.slice(1, 3);
+        assert_eq!(sub.len(), 2);
+        assert_eq!(sub.row(0), &[0.1, 0.9]);
+        assert_eq!(sub.row(1), &[0.5, 0.5]);
+    }
+
+    #[test]
+    fn counting_counts_rows_exactly_once_through_pooled_rows_path() {
+        let counting = Arc::new(CountingEvaluator::new(Zdt1Evaluator { dim: 2 }));
+        let pooled = PooledEvaluator::with_threads(Arc::clone(&counting) as _, 3);
+        let data: Vec<f64> = (0..50).flat_map(|i| vec![f64::from(i) / 50.0, 0.4]).collect();
+        let seeds: Vec<u32> = (0..50).collect();
+        let mut out = vec![0.0; 50 * 2];
+        pooled
+            .evaluate_rows(RowsView::new(&data, 2), &seeds, &mut out)
+            .unwrap();
+        assert_eq!(counting.count(), 50);
+    }
+
+    #[test]
+    fn replicated_rows_equals_replicated_single_evaluations() {
+        let replicated =
+            ReplicatedEvaluator::new(Arc::new(SphereEvaluator { noise: 3.0 }), 7);
+        let data = [0.2, 0.4, 0.6, 0.8, 1.0, 1.2];
+        let seeds = [5u32, 6, 7];
+        let mut out = vec![0.0; 3];
+        replicated
+            .evaluate_rows(RowsView::new(&data, 2), &seeds, &mut out)
+            .unwrap();
+        for i in 0..3 {
+            let single = replicated
+                .evaluate(&data[i * 2..(i + 1) * 2], seeds[i])
+                .unwrap();
+            assert_eq!(out[i], single[0], "row {i}");
+        }
     }
 }

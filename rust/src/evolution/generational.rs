@@ -1,6 +1,16 @@
 //! `GenerationalGA(evolution)(replicateModel, lambda)` — paper §4.5,
 //! Listing 4: synchronous-generation NSGA-II with stochastic-fitness
 //! re-evaluation, delegated to an execution environment.
+//!
+//! §Perf tentpole: the population lives in a columnar
+//! [`PopMatrix`] — parents in the head rows, each generation's offspring
+//! bred **in place** into the tail rows (per-chunk deterministic RNG
+//! forks, optionally parallel over a coordinator [`ThreadPool`]),
+//! objectives written straight into the matrix by the wave, and
+//! environmental selection compacting survivors without a single
+//! individual clone. A [`WaveArena`] is recycled across generations, so
+//! the coordinator's steady-state allocation is only the owned genome
+//! copies that cross the environment boundary.
 
 use std::sync::Arc;
 
@@ -9,10 +19,12 @@ use crate::core::{Context, Val};
 use crate::dsl::task::ClosureTask;
 use crate::environment::{Environment, Job};
 use crate::error::{Error, Result};
-use crate::evolution::evaluator::Evaluator;
+use crate::evolution::evaluator::{Evaluator, RowsView};
 use crate::evolution::genome::{Bounds, Individual};
 use crate::evolution::nsga2;
 use crate::evolution::operators::Operators;
+use crate::evolution::popmatrix::{PopMatrix, WaveArena};
+use crate::exec::ThreadPool;
 use crate::util::json::Json;
 use crate::util::Rng;
 
@@ -116,16 +128,22 @@ pub struct GenerationalGA {
     /// Genomes per evaluation job (§Perf tentpole). 1 — the default, and
     /// the paper's shape — submits one environment job per genome; larger
     /// values pack each job with a whole chunk evaluated through
-    /// [`Evaluator::evaluate_batch`], which is how a pooled or vmapped
+    /// [`Evaluator::evaluate_rows`], which is how a pooled or vmapped
     /// evaluator sees enough work to use a multicore machine. Virtual cost
     /// scales with the chunk, so simulated-environment accounting stays
     /// per-evaluation.
     pub eval_chunk: usize,
-    /// Called after each generation with (generation, population).
-    pub on_generation: Option<Arc<dyn Fn(u32, &[Individual]) + Send + Sync>>,
+    /// Called after each generation with (generation, population matrix).
+    pub on_generation: Option<Arc<dyn Fn(u32, &PopMatrix) + Send + Sync>>,
     /// Optional JSONL checkpoint stream: one `generation` record per
     /// generation, enabling `--resume` after a kill (§Distribution).
     pub journal: Option<Arc<Journal>>,
+    /// Optional pool for the coordinator-side parallel stages: variation,
+    /// crowding distance and the >2-objective dominance passes. Results
+    /// are bit-identical with or without it (chunk → RNG-fork mapping is
+    /// fixed); give it a pool distinct from any the environment executes
+    /// jobs on.
+    pub coordinator_pool: Option<Arc<ThreadPool>>,
 }
 
 impl GenerationalGA {
@@ -137,6 +155,7 @@ impl GenerationalGA {
             eval_chunk: 1,
             on_generation: None,
             journal: None,
+            coordinator_pool: None,
         }
     }
 
@@ -152,88 +171,155 @@ impl GenerationalGA {
         self
     }
 
+    /// Fan the coordinator-side stages (variation, crowding, general
+    /// dominance) out over `pool`.
+    pub fn coordinator_pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.coordinator_pool = Some(pool);
+        self
+    }
+
     pub fn on_generation(
         mut self,
-        f: impl Fn(u32, &[Individual]) + Send + Sync + 'static,
+        f: impl Fn(u32, &PopMatrix) + Send + Sync + 'static,
     ) -> Self {
         self.on_generation = Some(Arc::new(f));
         self
     }
 
-    /// Evaluate a set of genomes on the environment; returns individuals
-    /// plus the latest virtual end time.
-    ///
-    /// Genomes are packed `eval_chunk` to a job; each job calls the
-    /// evaluator's **batch** path once. Per-genome seeds are drawn up
-    /// front in genome order, so results — and the RNG stream — are
-    /// independent of the chunking.
-    fn evaluate_wave(
+    /// Submit one wave of genome rows to the environment and collect the
+    /// objective rows back into `out`, packing `eval_chunk` genomes per
+    /// job. Each job carries owned copies of its chunk (jobs must be
+    /// `'static` to cross the environment boundary) and calls the
+    /// evaluator's columnar path once. Returns the latest virtual end.
+    fn submit_rows_wave(
         &self,
         env: &dyn Environment,
-        genomes: &[Vec<f64>],
-        rng: &mut Rng,
+        genomes: &[f64],
+        seeds: &[u32],
+        out: &mut [f64],
         released_at: f64,
-    ) -> Result<(Vec<Individual>, f64)> {
+    ) -> Result<f64> {
+        let dim = self.config.bounds.dim();
         let n_obj = self.config.objectives.len();
+        let count = seeds.len();
+        debug_assert_eq!(genomes.len(), count * dim);
+        debug_assert_eq!(out.len(), count * n_obj);
+        if count == 0 {
+            return Ok(released_at);
+        }
+        if self.evaluator.objectives() != n_obj {
+            return Err(Error::Evolution(format!(
+                "evaluator produces {} objectives, config declares {n_obj}",
+                self.evaluator.objectives()
+            )));
+        }
         let cost = self.evaluator.nominal_cost_s();
         let chunk_len = self.eval_chunk.max(1);
-        let jobs: Vec<(Vec<f64>, u32)> = genomes
-            .iter()
-            .map(|g| (g.clone(), rng.model_seed()))
-            .collect();
 
-        type Slot = Arc<std::sync::Mutex<Option<Vec<Vec<f64>>>>>;
-        let mut submissions: Vec<(Slot, crate::environment::JobHandle)> =
-            Vec::with_capacity(jobs.len().div_ceil(chunk_len));
-        for chunk in jobs.chunks(chunk_len) {
-            let slot: Slot = Arc::new(std::sync::Mutex::new(None));
+        type Slot = Arc<std::sync::Mutex<Option<Vec<f64>>>>;
+        let mut submissions: Vec<(usize, usize, Slot, crate::environment::JobHandle)> =
+            Vec::with_capacity(count.div_ceil(chunk_len));
+        let mut lo = 0usize;
+        while lo < count {
+            let hi = (lo + chunk_len).min(count);
+            let rows_n = hi - lo;
+            let chunk_genomes = genomes[lo * dim..hi * dim].to_vec();
+            let chunk_seeds = seeds[lo..hi].to_vec();
             let evaluator = Arc::clone(&self.evaluator);
-            let chunk_jobs = chunk.to_vec();
+            let slot: Slot = Arc::new(std::sync::Mutex::new(None));
             let out_slot = Arc::clone(&slot);
             let task = ClosureTask::new("evaluate", move |_ctx: &Context| {
-                let objs = evaluator.evaluate_batch(&chunk_jobs)?;
-                if objs.len() != chunk_jobs.len() {
-                    return Err(Error::Evolution(format!(
-                        "evaluator returned {} results for a chunk of {}",
-                        objs.len(),
-                        chunk_jobs.len()
-                    )));
-                }
-                for o in &objs {
-                    if o.len() != n_obj {
-                        return Err(Error::Evolution(format!(
-                            "evaluator returned {} objectives, config declares {n_obj}",
-                            o.len()
-                        )));
-                    }
-                }
+                let mut objs = vec![0.0; rows_n * n_obj];
+                evaluator.evaluate_rows(
+                    RowsView::new(&chunk_genomes, dim),
+                    &chunk_seeds,
+                    &mut objs,
+                )?;
                 *out_slot.lock().unwrap() = Some(objs);
                 Ok(Context::new())
             })
-            .cost(cost * chunk.len() as f64);
+            .cost(cost * rows_n as f64);
             let handle = env
                 .submit(Job::new(Arc::new(task), Context::new()).released_at(released_at));
-            submissions.push((slot, handle));
+            submissions.push((lo, hi, slot, handle));
+            lo = hi;
         }
 
-        let mut out = Vec::with_capacity(genomes.len());
         let mut latest = released_at;
-        // consume `jobs` rather than cloning each genome back out
-        let mut job_iter = jobs.into_iter();
-        for (slot, handle) in submissions {
+        for (lo, hi, slot, handle) in submissions {
             let (_ctx, report) = handle.wait()?;
             latest = latest.max(report.virtual_end);
             let objs = slot.lock().unwrap().take().ok_or_else(|| {
                 Error::Evolution("evaluation chunk produced no results".into())
             })?;
-            for objectives in objs {
-                let (genome, _seed) = job_iter
-                    .next()
-                    .expect("chunk result counts were validated in the task");
-                out.push(Individual::new(genome, objectives));
-            }
+            out[lo * n_obj..hi * n_obj].copy_from_slice(&objs);
         }
-        Ok((out, latest))
+        Ok(latest)
+    }
+
+    /// Evaluate matrix rows `first_row..` on the environment: seeds are
+    /// drawn up front in row order (so results — and the RNG stream — are
+    /// independent of the chunking), objectives land in the rows' own
+    /// preallocated objective slots.
+    fn evaluate_matrix_wave(
+        &self,
+        env: &dyn Environment,
+        pop: &mut PopMatrix,
+        first_row: usize,
+        arena: &mut WaveArena,
+        rng: &mut Rng,
+        released_at: f64,
+    ) -> Result<f64> {
+        let count = pop.len() - first_row;
+        arena.seeds.clear();
+        for _ in 0..count {
+            arena.seeds.push(rng.model_seed());
+        }
+        let (genome_rows, obj_rows) = pop.rows_split_mut(first_row);
+        self.submit_rows_wave(env, genome_rows, &arena.seeds, obj_rows, released_at)
+    }
+
+    /// Re-evaluate a `reevaluate`-fraction sample of the parents and
+    /// absorb the fresh objectives as running averages (Listing 4's
+    /// `reevaluate = 0.01`). Returns `(evaluations spent, latest end)`;
+    /// draws nothing from `rng` when the fraction rounds to zero.
+    fn reevaluate_some(
+        &self,
+        env: &dyn Environment,
+        pop: &mut PopMatrix,
+        parents: usize,
+        arena: &mut WaveArena,
+        rng: &mut Rng,
+        released_at: f64,
+    ) -> Result<(u64, f64)> {
+        let n_re = ((parents as f64) * self.config.reevaluate).round() as usize;
+        if n_re == 0 {
+            return Ok((0, released_at));
+        }
+        let n_obj = self.config.objectives.len();
+        rng.sample_indices_into(parents, n_re, &mut arena.idx_buf);
+        arena.genome_buf.clear();
+        for &i in &arena.idx_buf {
+            arena.genome_buf.extend_from_slice(pop.genome(i));
+        }
+        arena.seeds.clear();
+        for _ in 0..n_re {
+            arena.seeds.push(rng.model_seed());
+        }
+        arena.obj_buf.clear();
+        arena.obj_buf.resize(n_re * n_obj, 0.0);
+        let latest = self.submit_rows_wave(
+            env,
+            &arena.genome_buf,
+            &arena.seeds,
+            &mut arena.obj_buf,
+            released_at,
+        )?;
+        for k in 0..n_re {
+            let i = arena.idx_buf[k];
+            pop.absorb_reevaluation(i, &arena.obj_buf[k * n_obj..(k + 1) * n_obj]);
+        }
+        Ok((n_re as u64, latest))
     }
 
     fn checkpoint(
@@ -242,10 +328,10 @@ impl GenerationalGA {
         evaluations: u64,
         clock: f64,
         rng: &Rng,
-        population: &[Individual],
+        population: &PopMatrix,
     ) -> Result<()> {
         if let Some(j) = &self.journal {
-            j.append(&journal::generation_record(
+            j.append(&journal::generation_record_matrix(
                 generation,
                 evaluations,
                 clock,
@@ -283,82 +369,79 @@ impl GenerationalGA {
         resume: Option<ResumeState>,
     ) -> Result<EvolutionResult> {
         let cfg = &self.config;
-        let (mut rng, mut population, mut clock, mut evaluations, first_gen) =
-            match resume {
-                Some(r) => {
-                    if let Some(j) = &self.journal {
-                        j.append(&journal::run_start(
-                            "calibrate-resume",
-                            seed,
-                            vec![(
-                                "from_generation",
-                                Json::Num(f64::from(r.generation)),
-                            )],
-                        ))?;
-                    }
-                    (r.rng, r.population, r.clock, r.evaluations, r.generation + 1)
+        let dim = cfg.bounds.dim();
+        let n_obj = cfg.objectives.len();
+        let pool = self.coordinator_pool.as_deref();
+        let mut arena = WaveArena::default();
+        let (mut rng, mut pop, mut clock, mut evaluations, first_gen) = match resume {
+            Some(r) => {
+                if let Some(j) = &self.journal {
+                    j.append(&journal::run_start(
+                        "calibrate-resume",
+                        seed,
+                        vec![(
+                            "from_generation",
+                            Json::Num(f64::from(r.generation)),
+                        )],
+                    ))?;
                 }
-                None => {
-                    if let Some(j) = &self.journal {
-                        j.append(&journal::run_start(
-                            "calibrate",
-                            seed,
-                            vec![
-                                ("mu", Json::Num(cfg.mu as f64)),
-                                ("lambda", Json::Num(self.lambda as f64)),
-                                ("generations", Json::Num(f64::from(generations))),
-                            ],
-                        ))?;
-                    }
-                    let mut rng = Rng::new(seed);
-                    // initial population
-                    let init: Vec<Vec<f64>> =
-                        (0..cfg.mu).map(|_| cfg.bounds.random(&mut rng)).collect();
-                    let (population, clock) =
-                        self.evaluate_wave(env, &init, &mut rng, 0.0)?;
-                    let evaluations = population.len() as u64;
-                    self.checkpoint(0, evaluations, clock, &rng, &population)?;
-                    (rng, population, clock, evaluations, 1)
+                let pop = PopMatrix::from_individuals(&r.population, dim, n_obj)?;
+                (r.rng, pop, r.clock, r.evaluations, r.generation + 1)
+            }
+            None => {
+                if let Some(j) = &self.journal {
+                    j.append(&journal::run_start(
+                        "calibrate",
+                        seed,
+                        vec![
+                            ("mu", Json::Num(cfg.mu as f64)),
+                            ("lambda", Json::Num(self.lambda as f64)),
+                            ("generations", Json::Num(f64::from(generations))),
+                        ],
+                    ))?;
                 }
-            };
+                let mut rng = Rng::new(seed);
+                // initial population: random genomes straight into rows
+                let mut pop =
+                    PopMatrix::with_capacity(dim, n_obj, cfg.mu + self.lambda);
+                pop.set_rows(cfg.mu);
+                for i in 0..cfg.mu {
+                    cfg.bounds.random_into(&mut rng, pop.genome_mut(i));
+                }
+                let clock =
+                    self.evaluate_matrix_wave(env, &mut pop, 0, &mut arena, &mut rng, 0.0)?;
+                let evaluations = pop.len() as u64;
+                self.checkpoint(0, evaluations, clock, &rng, &pop)?;
+                (rng, pop, clock, evaluations, 1)
+            }
+        };
 
         for generation in first_gen..=generations {
-            // breed lambda offspring
-            let (rank, crowd) = nsga2::rank_and_crowding(&population);
-            let offspring: Vec<Vec<f64>> = (0..self.lambda)
-                .map(|_| {
-                    let a = nsga2::tournament(&population, &rank, &crowd, &mut rng);
-                    let b = nsga2::tournament(&population, &rank, &crowd, &mut rng);
-                    cfg.operators
-                        .breed(&a.genome, &b.genome, &cfg.bounds, &mut rng)
-                })
-                .collect();
-            let (children, t1) = self.evaluate_wave(env, &offspring, &mut rng, clock)?;
-            evaluations += children.len() as u64;
+            // breed lambda offspring into the matrix tail: tournament on
+            // the parents' (rank, crowding), SBX + mutation written in
+            // place, one deterministic RNG fork per variation chunk
+            arena.rank_crowd(&pop, pool);
+            let parents = pop.len();
+            pop.set_rows(parents + self.lambda);
+            arena.breed_into(&mut pop, parents, &cfg.operators, &cfg.bounds, &mut rng, pool);
+            let t1 =
+                self.evaluate_matrix_wave(env, &mut pop, parents, &mut arena, &mut rng, clock)?;
+            evaluations += self.lambda as u64;
             clock = t1;
 
             // reevaluate a fraction of the current population (Listing 4's
             // `reevaluate = 0.01`)
-            let n_re = ((population.len() as f64) * cfg.reevaluate).round() as usize;
-            if n_re > 0 {
-                let idx = rng.sample_indices(population.len(), n_re);
-                let genomes: Vec<Vec<f64>> =
-                    idx.iter().map(|&i| population[i].genome.clone()).collect();
-                let (fresh, t2) = self.evaluate_wave(env, &genomes, &mut rng, clock)?;
-                evaluations += fresh.len() as u64;
-                clock = t2;
-                for (k, &i) in idx.iter().enumerate() {
-                    population[i].absorb_reevaluation(&fresh[k].objectives);
-                }
-            }
+            let (n_re, t2) =
+                self.reevaluate_some(env, &mut pop, parents, &mut arena, &mut rng, clock)?;
+            evaluations += n_re;
+            clock = t2;
 
-            // elitist environmental selection
-            population.extend(children);
-            population = nsga2::select(population, cfg.mu);
+            // elitist environmental selection, compacting in place
+            arena.select(&mut pop, cfg.mu, pool);
 
-            self.checkpoint(generation, evaluations, clock, &rng, &population)?;
+            self.checkpoint(generation, evaluations, clock, &rng, &pop)?;
             if let Some(cb) = &self.on_generation {
-                cb(generation, &population);
+                cb(generation, &pop);
             }
         }
 
@@ -367,6 +450,7 @@ impl GenerationalGA {
             j.append(&journal::run_end(evaluations, clock))?;
         }
 
+        let population = pop.to_individuals();
         let pareto_front = nsga2::pareto_front(&population);
         Ok(EvolutionResult {
             population,
@@ -465,12 +549,31 @@ mod tests {
     }
 
     #[test]
+    fn coordinator_pool_does_not_change_the_trajectory() {
+        // parallel variation/crowding is an execution-shape knob only:
+        // per-chunk RNG forks are assigned by fixed chunk boundaries
+        let objs = |r: &EvolutionResult| -> Vec<Vec<f64>> {
+            r.population.iter().map(|i| i.objectives.clone()).collect()
+        };
+        let env = LocalEnvironment::new(2);
+        let serial =
+            GenerationalGA::new(zdt1_config(8), Arc::new(Zdt1Evaluator { dim: 3 }), 8);
+        let baseline = serial.run(&env, 5, 13).unwrap();
+        let pooled =
+            GenerationalGA::new(zdt1_config(8), Arc::new(Zdt1Evaluator { dim: 3 }), 8)
+                .coordinator_pool(Arc::new(ThreadPool::new(4)));
+        let got = pooled.run(&env, 5, 13).unwrap();
+        assert_eq!(objs(&baseline), objs(&got), "coordinator pool diverged");
+    }
+
+    #[test]
     fn generation_callback_fires() {
         let env = LocalEnvironment::new(2);
         let seen = Arc::new(std::sync::atomic::AtomicU32::new(0));
         let s2 = Arc::clone(&seen);
         let ga = GenerationalGA::new(zdt1_config(4), Arc::new(Zdt1Evaluator { dim: 3 }), 4)
-            .on_generation(move |_, _| {
+            .on_generation(move |_, pop| {
+                assert!(pop.len() <= 4);
                 s2.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
             });
         ga.run(&env, 6, 1).unwrap();
@@ -529,5 +632,19 @@ mod tests {
         let r = ga.run(&env, 4, 2).unwrap();
         // init 10 + 4*(10 offspring + 5 reevals)
         assert_eq!(r.evaluations, 10 + 4 * 15);
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_genome_shape() {
+        let env = LocalEnvironment::new(1);
+        let ga = GenerationalGA::new(zdt1_config(4), Arc::new(Zdt1Evaluator { dim: 3 }), 4);
+        let bad = ResumeState {
+            generation: 1,
+            evaluations: 4,
+            clock: 0.0,
+            rng: Rng::new(1),
+            population: vec![Individual::new(vec![0.5], vec![0.1, 0.2])],
+        };
+        assert!(ga.run_resumable(&env, 3, 1, Some(bad)).is_err());
     }
 }

@@ -46,6 +46,15 @@ impl Bounds {
             .collect()
     }
 
+    /// Uniform random genome written into a preallocated row (identical
+    /// draw order to [`Bounds::random`] — the columnar init path).
+    pub fn random_into(&self, rng: &mut Rng, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.dim());
+        for (i, g) in out.iter_mut().enumerate() {
+            *g = rng.range(self.lo[i], self.hi[i]);
+        }
+    }
+
     /// Clamp a genome into the box.
     pub fn clamp(&self, genome: &mut [f64]) {
         for (i, g) in genome.iter_mut().enumerate() {

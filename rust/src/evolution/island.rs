@@ -9,6 +9,13 @@
 //! high-latency environment pays brokering costs once per island instead
 //! of once per evaluation. That asymmetry is exactly what bench
 //! `a2_island_vs_generational` measures.
+//!
+//! §Perf: the global archive and each island's internal population are
+//! columnar [`PopMatrix`]es — sampling copies rows, merges append rows,
+//! and truncation compacts in place through a per-island [`WaveArena`];
+//! the per-evaluation `Vec<Individual>` rebuild of the AoS archive is
+//! gone. Draw order is unchanged, so trajectories are bit-identical to
+//! the AoS engine.
 
 use std::sync::{Arc, Mutex};
 
@@ -17,11 +24,11 @@ use crate::core::Context;
 use crate::dsl::task::ClosureTask;
 use crate::environment::{Environment, Job, JobHandle};
 use crate::error::Result;
-use crate::evolution::evaluator::Evaluator;
+use crate::evolution::evaluator::{Evaluator, RowsView};
 use crate::evolution::generational::{EvolutionResult, Nsga2Config};
 use crate::evolution::genome::Individual;
 use crate::evolution::nsga2;
-use crate::evolution::operators::Operators;
+use crate::evolution::popmatrix::{PopMatrix, WaveArena};
 use crate::util::json::Json;
 use crate::util::Rng;
 
@@ -57,7 +64,7 @@ impl Default for IslandConfig {
 
 /// Global archive shared by all islands.
 struct ArchiveState {
-    population: Vec<Individual>,
+    population: PopMatrix,
     evaluations: u64,
     islands_completed: u64,
     /// Island ids already merged. A brokered environment may execute an
@@ -110,37 +117,43 @@ impl IslandSteadyGA {
 
     /// One island's internal steady-state evolution, run to its evaluation
     /// budget. Pure function of (start population, rng) — executed inside
-    /// the island's remote job.
+    /// the island's remote job, entirely on the columnar matrix.
     fn evolve_island(
         cfg: &Nsga2Config,
         evaluator: &dyn Evaluator,
-        mut population: Vec<Individual>,
+        mut population: PopMatrix,
         budget: u64,
         rng: &mut Rng,
-    ) -> Result<Vec<Individual>> {
-        let ops: &Operators = &cfg.operators;
+        arena: &mut WaveArena,
+    ) -> Result<PopMatrix> {
+        let dim = cfg.bounds.dim();
+        let n_obj = cfg.objectives.len();
 
         // bootstrap: a fresh island draws random genomes until it can hold
         // a tournament; those evaluations are independent, so they go
-        // through the evaluator's batch path in one wave. Genome/seed
-        // draws interleave exactly like the sequential loop did, so the
-        // RNG stream — and hence the whole trajectory — is unchanged.
+        // through the evaluator's columnar batch path in one wave.
+        // Genome/seed draws interleave exactly like the sequential loop
+        // did, so the RNG stream — and hence the whole trajectory — is
+        // unchanged.
         let bootstrap =
             (2usize.saturating_sub(population.len()) as u64).min(budget) as usize;
         let mut done: u64 = 0;
         if bootstrap > 0 {
-            let jobs: Vec<(Vec<f64>, u32)> = (0..bootstrap)
-                .map(|_| {
-                    let genome = cfg.bounds.random(rng);
-                    let seed = rng.model_seed();
-                    (genome, seed)
-                })
-                .collect();
-            for (job, objectives) in jobs.iter().zip(evaluator.evaluate_batch(&jobs)?) {
-                population.push(Individual::new(job.0.clone(), objectives));
+            let first = population.len();
+            population.set_rows(first + bootstrap);
+            arena.seeds.clear();
+            for i in 0..bootstrap {
+                cfg.bounds.random_into(rng, population.genome_mut(first + i));
+                arena.seeds.push(rng.model_seed());
             }
+            let (genome_rows, obj_rows) = population.rows_split_mut(first);
+            evaluator.evaluate_rows(
+                RowsView::new(genome_rows, dim),
+                &arena.seeds,
+                obj_rows,
+            )?;
             if population.len() > cfg.mu {
-                population = nsga2::select(population, cfg.mu);
+                arena.select(&mut population, cfg.mu, None);
             }
             done = bootstrap as u64;
         }
@@ -149,15 +162,30 @@ impl IslandSteadyGA {
             let genome = if population.len() < 2 {
                 cfg.bounds.random(rng)
             } else {
-                let (rank, crowd) = nsga2::rank_and_crowding(&population);
-                let a = nsga2::tournament(&population, &rank, &crowd, rng);
-                let b = nsga2::tournament(&population, &rank, &crowd, rng);
-                ops.breed(&a.genome, &b.genome, &cfg.bounds, rng)
+                arena.rank_crowd(&population, None);
+                let n = population.len();
+                let a =
+                    nsga2::tournament_idx(n, arena.nsga.rank(), arena.nsga.crowd(), rng);
+                let b =
+                    nsga2::tournament_idx(n, arena.nsga.rank(), arena.nsga.crowd(), rng);
+                cfg.operators.breed(
+                    population.genome(a),
+                    population.genome(b),
+                    &cfg.bounds,
+                    rng,
+                )
             };
-            let objectives = evaluator.evaluate(&genome, rng.model_seed())?;
-            population.push(Individual::new(genome, objectives));
+            let seed = rng.model_seed();
+            arena.obj_buf.clear();
+            arena.obj_buf.resize(n_obj, 0.0);
+            evaluator.evaluate_rows(
+                RowsView::new(&genome, dim),
+                &[seed],
+                &mut arena.obj_buf,
+            )?;
+            population.push_row(&genome, &arena.obj_buf, 1);
             if population.len() > cfg.mu {
-                population = nsga2::select(population, cfg.mu);
+                arena.select(&mut population, cfg.mu, None);
             }
         }
         Ok(population)
@@ -171,10 +199,14 @@ impl IslandSteadyGA {
         seed: u64,
         on_island: Option<Arc<dyn Fn(u64, u64) + Send + Sync>>,
     ) -> Result<EvolutionResult> {
+        let dim = self.config.bounds.dim();
+        let n_obj = self.config.objectives.len();
         let mut rng = Rng::new(seed);
         let (start_population, evals_done) = match &self.resume {
-            Some((pop, evals)) => (pop.clone(), *evals),
-            None => (Vec::new(), 0),
+            Some((pop, evals)) => {
+                (PopMatrix::from_individuals(pop, dim, n_obj)?, *evals)
+            }
+            None => (PopMatrix::new(dim, n_obj), 0),
         };
         if let Some(j) = &self.journal {
             j.append(&journal::run_start(
@@ -213,31 +245,42 @@ impl IslandSteadyGA {
             Arc::new(
                 ClosureTask::new("island", move |_ctx: &Context| {
                     let mut rng = rng_cell.lock().unwrap().clone();
+                    let mut arena = WaveArena::default();
                     // sample the island's start population from the archive
-                    let start: Vec<Individual> = {
+                    let start: PopMatrix = {
                         let a = archive.lock().unwrap();
-                        if a.population.is_empty() {
-                            Vec::new()
-                        } else {
+                        let mut m = PopMatrix::with_capacity(
+                            cfg.bounds.dim(),
+                            cfg.objectives.len(),
+                            sample,
+                        );
+                        if !a.population.is_empty() {
                             let k = sample.min(a.population.len());
-                            rng.sample_indices(a.population.len(), k)
-                                .into_iter()
-                                .map(|i| a.population[i].clone())
-                                .collect()
+                            for i in rng.sample_indices(a.population.len(), k) {
+                                m.push_row_from(&a.population, i);
+                            }
                         }
+                        m
                     };
-                    let final_pop =
-                        Self::evolve_island(&cfg, evaluator.as_ref(), start, budget, &mut rng)?;
+                    let final_pop = Self::evolve_island(
+                        &cfg,
+                        evaluator.as_ref(),
+                        start,
+                        budget,
+                        &mut rng,
+                        &mut arena,
+                    )?;
                     // merge back into the global archive — exactly once
                     // per island, even if a broker re-ran this job
                     // (failure re-route or speculative clone)
                     {
                         let mut a = archive.lock().unwrap();
                         if a.merged.insert(island_id) {
-                            a.population.extend(final_pop);
+                            for i in 0..final_pop.len() {
+                                a.population.push_row_from(&final_pop, i);
+                            }
                             if a.population.len() > cfg.mu {
-                                let pop = std::mem::take(&mut a.population);
-                                a.population = nsga2::select(pop, cfg.mu);
+                                arena.select(&mut a.population, cfg.mu, None);
                             }
                             a.evaluations += budget;
                             a.islands_completed += 1;
@@ -294,7 +337,7 @@ impl IslandSteadyGA {
                             report.virtual_end,
                         ))?;
                         if let Some(population) = snapshot {
-                            j.append(&journal::archive_record(
+                            j.append(&journal::archive_record_matrix(
                                 evaluations,
                                 &population,
                             ))?;
@@ -325,13 +368,17 @@ impl IslandSteadyGA {
             .into_inner()
             .unwrap();
         if let Some(j) = &self.journal {
-            j.append(&journal::archive_record(state.evaluations, &state.population))?;
+            j.append(&journal::archive_record_matrix(
+                state.evaluations,
+                &state.population,
+            ))?;
             j.append(&journal::env_stats_record(env.name(), &env.stats()))?;
             j.append(&journal::run_end(state.evaluations, virtual_makespan))?;
         }
-        let pareto_front = nsga2::pareto_front(&state.population);
+        let population = state.population.to_individuals();
+        let pareto_front = nsga2::pareto_front(&population);
         Ok(EvolutionResult {
-            population: state.population,
+            population,
             pareto_front,
             evaluations: state.evaluations,
             generations: state.islands_completed as u32,

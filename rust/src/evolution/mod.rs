@@ -1,6 +1,13 @@
 //! Evolutionary model calibration (paper §4): NSGA-II with stochastic
 //! re-evaluation, generational and steady-state drivers, and the island
 //! model for grid-scale distribution.
+//!
+//! §Perf: populations live in the columnar [`PopMatrix`] (contiguous
+//! row-major genome/objective matrices + a metadata strip); every engine
+//! recycles a [`WaveArena`] so steady-state waves allocate nothing. The
+//! AoS [`Individual`] remains the interchange type at the edges (results,
+//! journal parsing, seeding) and [`reference`] retains the pre-columnar
+//! algorithms as a test oracle.
 
 pub mod evaluator;
 pub mod generational;
@@ -8,15 +15,18 @@ pub mod genome;
 pub mod island;
 pub mod nsga2;
 pub mod operators;
+pub mod popmatrix;
+pub mod reference;
 pub mod steady;
 
 pub use evaluator::{
     AntSimEvaluator, CountingEvaluator, Evaluator, PooledEvaluator,
-    ReplicatedEvaluator, SphereEvaluator, Zdt1Evaluator,
+    ReplicatedEvaluator, RowsView, SphereEvaluator, Zdt1Evaluator,
 };
-pub use nsga2::Fronts;
 pub use generational::{eval_task, EvolutionResult, GenerationalGA, Nsga2Config};
 pub use genome::{Bounds, Individual};
 pub use island::{IslandConfig, IslandSteadyGA};
+pub use nsga2::{Fronts, NsgaScratch};
 pub use operators::Operators;
+pub use popmatrix::{PopMatrix, WaveArena};
 pub use steady::{SteadyStateGA, Termination};

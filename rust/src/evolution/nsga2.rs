@@ -2,16 +2,27 @@
 //! fast non-dominated sort, crowding distance, environmental selection and
 //! binary tournament.
 //!
-//! §Perf tentpole: ranking runs on **flat index buffers** over a
-//! contiguous objectives matrix — no `Vec<Vec<_>>` growth in the sorting
-//! loop — and the ubiquitous two-objective case takes an O(N·logN) sweep
-//! (Jensen 2003-style staircase binary search) instead of the O(N²)
-//! pairwise pass, so environmental selection of a 200k-individual wave
-//! (bench `p2_scale`) is tractable. All float orderings use
+//! §Perf tentpole (columnar engine): every kernel runs on a **flat
+//! objectives matrix** (`n` rows × `m` columns, row-major `&[f64]`) through
+//! a reusable [`NsgaScratch`] — no per-call buffer growth in steady state,
+//! so ranking + selecting a 200k-individual wave (bench `p2_scale`)
+//! allocates nothing after the first wave. The ubiquitous two-objective
+//! case takes an O(N·logN) sweep (Jensen 2003-style staircase binary
+//! search); the >2-objective dominance passes can fan out over an
+//! [`exec::ThreadPool`](crate::exec::ThreadPool). All float orderings use
 //! `f64::total_cmp`: a NaN objective ranks worst instead of panicking.
+//!
+//! The historical `Vec<Individual>` entry points remain as thin wrappers
+//! over the flat kernels, so the AoS and columnar paths cannot diverge.
+//! (An *independent* AoS oracle for property tests lives in
+//! [`crate::evolution::reference`].)
 
 use crate::evolution::genome::Individual;
+use crate::exec::ThreadPool;
 use crate::util::Rng;
+
+/// Below this population size a pool fan-out costs more than it saves.
+const PARALLEL_MIN_N: usize = 512;
 
 /// Pareto fronts in CSR layout: `order` lists population indices front by
 /// front, `starts[k]..starts[k + 1]` delimits front `k`. Replaces the old
@@ -23,6 +34,15 @@ pub struct Fronts {
     /// Front boundaries; always `starts[0] == 0` and
     /// `starts.last() == order.len()`.
     starts: Vec<usize>,
+}
+
+impl Default for Fronts {
+    fn default() -> Self {
+        Fronts {
+            order: Vec::new(),
+            starts: vec![0],
+        }
+    }
 }
 
 impl Fronts {
@@ -92,232 +112,541 @@ fn pair_dominance(a: &[f64], b: &[f64]) -> (bool, bool) {
     )
 }
 
-/// Fast non-dominated sort: partition indices into Pareto fronts
-/// (front 0 = non-dominated).
-///
-/// Dispatches on the objective count: the two-objective case (ZDT1 and
-/// most calibration setups) uses the O(N·logN) staircase sweep; anything
-/// else uses the flat-CSR variant of Deb's O(M·N²) algorithm. NaN
-/// objectives force the general path (the staircase invariants assume a
-/// total order consistent with dominance).
-pub fn fast_non_dominated_sort(pop: &[Individual]) -> Fronts {
-    let n = pop.len();
-    if n == 0 {
-        return Fronts {
-            order: Vec::new(),
-            starts: vec![0],
-        };
+/// Crowding distances of one front (Deb 2002 §III-B) on the flat matrix:
+/// `obj` holds the **canonicalised** full population rows, `front` the
+/// member indices, `dist` (len == front.len()) receives the distances.
+/// `order` is a caller-provided index scratch. NaN-safe: orderings use
+/// `total_cmp`; a NaN-poisoned objective range contributes nothing.
+fn crowding_front_into(
+    obj: &[f64],
+    m: usize,
+    front: &[usize],
+    dist: &mut [f64],
+    order: &mut Vec<usize>,
+) {
+    let k = front.len();
+    debug_assert_eq!(dist.len(), k);
+    if k == 0 {
+        return;
     }
-    let m = pop[0].objectives.len();
-    let mut obj = Vec::with_capacity(n * m);
-    for ind in pop {
-        debug_assert_eq!(
-            ind.objectives.len(),
-            m,
-            "heterogeneous objective counts in one population"
-        );
-        // `+ 0.0` canonicalises -0.0 to +0.0 (and nothing else): dominance
-        // treats the two zeros as equal, but the sweep path sorts with
-        // `total_cmp`, which orders -0.0 < +0.0 and would break the
-        // staircase invariant (a later point dominating an earlier tail)
-        obj.extend(ind.objectives.iter().map(|v| v + 0.0));
+    if k <= 2 {
+        dist.fill(f64::INFINITY);
+        return;
     }
-    if m == 2 && !obj.iter().any(|v| v.is_nan()) {
-        sort_two_objective(&obj, n)
-    } else {
-        sort_general(&obj, n, m.max(1))
-    }
-}
-
-/// Deb's algorithm on flat buffers: two O(N²) passes over the contiguous
-/// objectives matrix build a CSR "dominates" adjacency, then fronts are
-/// peeled by layered BFS directly into the output buffer.
-fn sort_general(obj: &[f64], n: usize, m: usize) -> Fronts {
-    let row = |i: usize| &obj[i * m..(i + 1) * m];
-
-    // pass 1: domination counts and out-degrees
-    let mut dominated_by_count = vec![0usize; n]; // how many dominate i
-    let mut dominates_count = vec![0usize; n]; // how many i dominates
-    for i in 0..n {
-        for j in (i + 1)..n {
-            let (i_dom, j_dom) = pair_dominance(row(i), row(j));
-            if i_dom {
-                dominates_count[i] += 1;
-                dominated_by_count[j] += 1;
-            } else if j_dom {
-                dominates_count[j] += 1;
-                dominated_by_count[i] += 1;
-            }
-        }
-    }
-
-    // CSR offsets, then pass 2 fills the adjacency in place
-    let mut offsets = vec![0usize; n + 1];
-    for i in 0..n {
-        offsets[i + 1] = offsets[i] + dominates_count[i];
-    }
-    let mut adjacency = vec![0usize; offsets[n]];
-    let mut cursor = offsets.clone();
-    for i in 0..n {
-        for j in (i + 1)..n {
-            let (i_dom, j_dom) = pair_dominance(row(i), row(j));
-            if i_dom {
-                adjacency[cursor[i]] = j;
-                cursor[i] += 1;
-            } else if j_dom {
-                adjacency[cursor[j]] = i;
-                cursor[j] += 1;
-            }
-        }
-    }
-
-    // peel fronts: the output buffer doubles as the BFS queue
-    let mut order: Vec<usize> =
-        (0..n).filter(|&i| dominated_by_count[i] == 0).collect();
-    let mut starts = vec![0usize];
-    let mut begin = 0;
-    while begin < order.len() {
-        let end = order.len();
-        starts.push(end);
-        for idx in begin..end {
-            let i = order[idx];
-            for &j in &adjacency[offsets[i]..offsets[i + 1]] {
-                dominated_by_count[j] -= 1;
-                if dominated_by_count[j] == 0 {
-                    order.push(j);
-                }
-            }
-        }
-        begin = end;
-    }
-    if order.len() < n {
-        // NaN-induced dominance "cycles" (a beats b beats c beats a, each
-        // through a different non-NaN objective) can strand individuals
-        // with counts that never reach zero. The old Vec<Vec<_>> sort
-        // silently dropped them; park them in one final front instead so
-        // fronts always partition the population.
-        let stranded = (0..n).filter(|&i| dominated_by_count[i] > 0);
-        order.extend(stranded);
-        starts.push(order.len());
-    }
-    Fronts { order, starts }
-}
-
-/// Two-objective O(N·logN) sweep: process points in (f1, f2) order and
-/// binary-search the staircase of front tails. A point is dominated by
-/// front `k` iff it is dominated by the front's most recently assigned
-/// point (the one with minimal f2), and domination by front `k` implies
-/// domination by front `k - 1` (transitivity), so the first non-dominating
-/// front is found by binary search.
-fn sort_two_objective(obj: &[f64], n: usize) -> Fronts {
-    let mut sorted: Vec<usize> = (0..n).collect();
-    sorted.sort_unstable_by(|&a, &b| {
-        obj[2 * a]
-            .total_cmp(&obj[2 * b])
-            .then(obj[2 * a + 1].total_cmp(&obj[2 * b + 1]))
-            .then(a.cmp(&b))
-    });
-
-    let mut rank = vec![0usize; n];
-    // (f2, f1) of the last point assigned to each front
-    let mut tails: Vec<(f64, f64)> = Vec::new();
-    for &i in &sorted {
-        let (f1, f2) = (obj[2 * i], obj[2 * i + 1]);
-        let dominated_by = |k: usize| {
-            let (t2, t1) = tails[k];
-            // the tail q has q.f1 <= f1 (sweep order); strictness must
-            // hold in at least one objective
-            t2 < f2 || (t2 == f2 && t1 < f1)
-        };
-        let (mut lo, mut hi) = (0usize, tails.len());
-        while lo < hi {
-            let mid = (lo + hi) / 2;
-            if dominated_by(mid) {
-                lo = mid + 1;
-            } else {
-                hi = mid;
-            }
-        }
-        rank[i] = lo;
-        if lo == tails.len() {
-            tails.push((f2, f1));
-        } else {
-            tails[lo] = (f2, f1);
-        }
-    }
-
-    // bucket ranks into CSR, index-ascending within each front
-    let n_fronts = tails.len();
-    let mut starts = vec![0usize; n_fronts + 1];
-    for &r in &rank {
-        starts[r + 1] += 1;
-    }
-    for k in 0..n_fronts {
-        starts[k + 1] += starts[k];
-    }
-    let mut cursor = starts.clone();
-    let mut order = vec![0usize; n];
-    for (i, &r) in rank.iter().enumerate() {
-        order[cursor[r]] = i;
-        cursor[r] += 1;
-    }
-    Fronts { order, starts }
-}
-
-/// Crowding distance of each member of one front (Deb 2002 §III-B).
-/// NaN-safe: objective orderings use `total_cmp`.
-pub fn crowding_distance(pop: &[Individual], front: &[usize]) -> Vec<f64> {
-    let m = front.len();
-    let mut dist = vec![0.0f64; m];
-    if m == 0 {
-        return dist;
-    }
-    if m <= 2 {
-        return vec![f64::INFINITY; m];
-    }
-    let n_obj = pop[front[0]].objectives.len();
-    let mut order: Vec<usize> = Vec::with_capacity(m);
-    for obj in 0..n_obj {
-        // reset to index order so equal objective values tie-break the
-        // same way on every objective (stable sort)
+    dist.fill(0.0);
+    for o in 0..m {
         order.clear();
-        order.extend(0..m);
-        order.sort_by(|&a, &b| {
-            pop[front[a]].objectives[obj]
-                .total_cmp(&pop[front[b]].objectives[obj])
+        order.extend(0..k);
+        // unstable sort with the index as final tiebreak == the stable
+        // sort of 0..k the AoS implementation used, without its merge
+        // buffer allocation
+        order.sort_unstable_by(|&a, &b| {
+            obj[front[a] * m + o]
+                .total_cmp(&obj[front[b] * m + o])
+                .then(a.cmp(&b))
         });
-        let lo = pop[front[order[0]]].objectives[obj];
-        let hi = pop[front[order[m - 1]]].objectives[obj];
+        let val = |w: usize| obj[front[order[w]] * m + o];
+        let lo = val(0);
+        let hi = val(k - 1);
         dist[order[0]] = f64::INFINITY;
-        dist[order[m - 1]] = f64::INFINITY;
+        dist[order[k - 1]] = f64::INFINITY;
         let range = hi - lo;
         if range.is_nan() || range <= 0.0 {
             // zero range, or a NaN objective poisoned the bounds: no
             // discriminating information along this objective
             continue;
         }
-        for w in 1..m - 1 {
-            let prev = pop[front[order[w - 1]]].objectives[obj];
-            let next = pop[front[order[w + 1]]].objectives[obj];
-            dist[order[w]] += (next - prev) / range;
+        for w in 1..k - 1 {
+            dist[order[w]] += (val(w + 1) - val(w - 1)) / range;
         }
     }
+}
+
+/// Reusable state for the flat NSGA-II kernels. One of these lives in a
+/// [`WaveArena`](crate::evolution::popmatrix::WaveArena) and is recycled
+/// wave after wave: every buffer is `clear()`ed, never dropped, so steady
+/// state allocates nothing.
+#[derive(Default)]
+pub struct NsgaScratch {
+    /// Canonicalised copy of the caller's objective rows (`-0.0 → +0.0`,
+    /// so `total_cmp`-based orderings agree with numeric dominance).
+    canon: Vec<f64>,
+    /// Interleaved per-row counters: `counts[2i]` = how many rows dominate
+    /// `i` (consumed by the peel), `counts[2i + 1]` = how many rows `i`
+    /// dominates (adjacency row lengths).
+    counts: Vec<usize>,
+    offsets: Vec<usize>,
+    adjacency: Vec<usize>,
+    bounds_buf: Vec<usize>,
+    /// Two-objective sweep buffers.
+    sorted: Vec<usize>,
+    tails: Vec<(f64, f64)>,
+    rank_buf: Vec<usize>,
+    cursor: Vec<usize>,
+    /// Crowding / selection buffers.
+    order: Vec<usize>,
+    front_dist: Vec<f64>,
+    sel_order: Vec<usize>,
+    /// Outputs of the last `sort_flat` / `rank_crowd_flat` /
+    /// `select_flags_flat` call.
+    fronts: Fronts,
+    rank: Vec<usize>,
+    crowd: Vec<f64>,
+    flags: Vec<bool>,
+}
+
+impl NsgaScratch {
+    /// Fronts computed by the last `sort_flat`-family call.
+    pub fn fronts(&self) -> &Fronts {
+        &self.fronts
+    }
+
+    /// Per-individual front index from the last `rank_crowd_flat`.
+    pub fn rank(&self) -> &[usize] {
+        &self.rank
+    }
+
+    /// Per-individual crowding distance from the last `rank_crowd_flat`.
+    pub fn crowd(&self) -> &[f64] {
+        &self.crowd
+    }
+
+    /// Per-individual survivor flags from the last `select_flags_flat`.
+    pub fn flags(&self) -> &[bool] {
+        &self.flags
+    }
+
+    /// Fast non-dominated sort of `n` rows × `m` objectives into
+    /// `self.fronts()`. Two objectives (and no NaN) take the O(N·logN)
+    /// staircase sweep; anything else the flat-CSR variant of Deb's
+    /// O(M·N²) algorithm, whose dominance passes fan out over `pool`
+    /// when one is given and the population is large enough.
+    pub fn sort_flat(&mut self, obj: &[f64], n: usize, m: usize, pool: Option<&ThreadPool>) {
+        self.fronts.order.clear();
+        self.fronts.starts.clear();
+        self.fronts.starts.push(0);
+        if n == 0 {
+            self.canon.clear();
+            return;
+        }
+        debug_assert_eq!(obj.len(), n * m, "objectives matrix shape");
+        // `+ 0.0` canonicalises -0.0 to +0.0 (and nothing else): dominance
+        // treats the two zeros as equal, but the orderings below use
+        // `total_cmp`, which ranks -0.0 < +0.0 and would break the
+        // staircase invariant (a later point dominating an earlier tail)
+        self.canon.clear();
+        self.canon.extend(obj.iter().map(|v| v + 0.0));
+        let has_nan = self.canon.iter().any(|v| v.is_nan());
+        let canon = std::mem::take(&mut self.canon);
+        if m == 2 && !has_nan {
+            self.sort_two_objective(&canon, n);
+        } else {
+            self.sort_general(&canon, n, m.max(1), pool);
+        }
+        self.canon = canon;
+    }
+
+    /// Two-objective O(N·logN) sweep: process points in (f1, f2) order and
+    /// binary-search the staircase of front tails. A point is dominated by
+    /// front `k` iff it is dominated by the front's most recently assigned
+    /// point (the one with minimal f2), and domination by front `k`
+    /// implies domination by front `k - 1` (transitivity), so the first
+    /// non-dominating front is found by binary search.
+    fn sort_two_objective(&mut self, obj: &[f64], n: usize) {
+        let sorted = &mut self.sorted;
+        sorted.clear();
+        sorted.extend(0..n);
+        sorted.sort_unstable_by(|&a, &b| {
+            obj[2 * a]
+                .total_cmp(&obj[2 * b])
+                .then(obj[2 * a + 1].total_cmp(&obj[2 * b + 1]))
+                .then(a.cmp(&b))
+        });
+
+        let rank = &mut self.rank_buf;
+        rank.clear();
+        rank.resize(n, 0);
+        // (f2, f1) of the last point assigned to each front
+        let tails = &mut self.tails;
+        tails.clear();
+        for &i in sorted.iter() {
+            let (f1, f2) = (obj[2 * i], obj[2 * i + 1]);
+            let dominated_by = |k: usize| {
+                let (t2, t1) = tails[k];
+                // the tail q has q.f1 <= f1 (sweep order); strictness must
+                // hold in at least one objective
+                t2 < f2 || (t2 == f2 && t1 < f1)
+            };
+            let (mut lo, mut hi) = (0usize, tails.len());
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                if dominated_by(mid) {
+                    lo = mid + 1;
+                } else {
+                    hi = mid;
+                }
+            }
+            rank[i] = lo;
+            if lo == tails.len() {
+                tails.push((f2, f1));
+            } else {
+                tails[lo] = (f2, f1);
+            }
+        }
+
+        // bucket ranks into CSR, index-ascending within each front
+        let n_fronts = tails.len();
+        let starts = &mut self.fronts.starts;
+        starts.clear();
+        starts.resize(n_fronts + 1, 0);
+        for &r in rank.iter() {
+            starts[r + 1] += 1;
+        }
+        for k in 0..n_fronts {
+            starts[k + 1] += starts[k];
+        }
+        let cursor = &mut self.cursor;
+        cursor.clear();
+        cursor.extend_from_slice(starts);
+        let order = &mut self.fronts.order;
+        order.clear();
+        order.resize(n, 0);
+        for (i, &r) in rank.iter().enumerate() {
+            order[cursor[r]] = i;
+            cursor[r] += 1;
+        }
+    }
+
+    /// Deb's algorithm on flat buffers: two O(N²) dominance passes build a
+    /// CSR "dominates" adjacency, then fronts are peeled by layered BFS
+    /// directly into the output buffer. Each pass computes whole rows
+    /// independently, so with a pool the rows fan out over the workers
+    /// (disjoint count / adjacency slices — no synchronisation).
+    fn sort_general(&mut self, obj: &[f64], n: usize, m: usize, pool: Option<&ThreadPool>) {
+        let row = |i: usize| &obj[i * m..(i + 1) * m];
+        let pool = pool.filter(|p| p.threads() > 1 && n >= PARALLEL_MIN_N);
+        let rows_per_chunk = match pool {
+            Some(p) => n.div_ceil(p.threads() * 4).max(32),
+            None => n,
+        };
+
+        // pass 1: per-row domination counts. The parallel version computes
+        // whole rows independently (disjoint count slices, ~2× the pair
+        // checks, amortised across workers); the serial version keeps the
+        // classic triangular pass that visits each unordered pair once.
+        let counts = &mut self.counts;
+        counts.clear();
+        counts.resize(2 * n, 0);
+        match pool {
+            Some(p) => {
+                let fill_counts = |first_row: usize, chunk: &mut [usize]| {
+                    for (r, pair) in chunk.chunks_exact_mut(2).enumerate() {
+                        let i = first_row + r;
+                        let (mut dominated_by, mut dominates) = (0usize, 0usize);
+                        for j in 0..n {
+                            if j == i {
+                                continue;
+                            }
+                            let (i_dom, j_dom) = pair_dominance(row(i), row(j));
+                            if i_dom {
+                                dominates += 1;
+                            } else if j_dom {
+                                dominated_by += 1;
+                            }
+                        }
+                        pair[0] = dominated_by;
+                        pair[1] = dominates;
+                    }
+                };
+                p.scoped_chunks(counts, rows_per_chunk * 2, |k, chunk| {
+                    fill_counts(k * rows_per_chunk, chunk)
+                })
+                .expect("dominance pass must not panic");
+            }
+            None => {
+                for i in 0..n {
+                    for j in (i + 1)..n {
+                        let (i_dom, j_dom) = pair_dominance(row(i), row(j));
+                        if i_dom {
+                            counts[2 * i + 1] += 1;
+                            counts[2 * j] += 1;
+                        } else if j_dom {
+                            counts[2 * j + 1] += 1;
+                            counts[2 * i] += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        // CSR offsets, then pass 2 fills the adjacency rows in place
+        let offsets = &mut self.offsets;
+        offsets.clear();
+        offsets.resize(n + 1, 0);
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + self.counts[2 * i + 1];
+        }
+        let adjacency = &mut self.adjacency;
+        adjacency.clear();
+        adjacency.resize(self.offsets[n], 0);
+        let offsets = &self.offsets;
+        match pool {
+            Some(p) => {
+                // per-row fill: row i's adjacency slice is disjoint, so
+                // row blocks fan out over the workers
+                let fill_adjacency =
+                    |first_row: usize, last_row: usize, chunk: &mut [usize]| {
+                        let base = offsets[first_row];
+                        for i in first_row..last_row {
+                            let mut c = offsets[i] - base;
+                            for j in 0..n {
+                                if j == i {
+                                    continue;
+                                }
+                                let (i_dom, _) = pair_dominance(row(i), row(j));
+                                if i_dom {
+                                    chunk[c] = j;
+                                    c += 1;
+                                }
+                            }
+                        }
+                    };
+                let bounds = &mut self.bounds_buf;
+                bounds.clear();
+                let mut r = 0;
+                while r < n {
+                    bounds.push(offsets[r]);
+                    r += rows_per_chunk;
+                }
+                bounds.push(offsets[n]);
+                p.scoped_parts(adjacency, bounds, |k, chunk| {
+                    let first = k * rows_per_chunk;
+                    fill_adjacency(first, (first + rows_per_chunk).min(n), chunk)
+                })
+                .expect("adjacency pass must not panic");
+            }
+            None => {
+                // triangular fill, one visit per unordered pair; per-row
+                // write cursors land entries in exactly the same ascending
+                // order the per-row scan produces
+                let cursor = &mut self.cursor;
+                cursor.clear();
+                cursor.extend_from_slice(&offsets[..n]);
+                for i in 0..n {
+                    for j in (i + 1)..n {
+                        let (i_dom, j_dom) = pair_dominance(row(i), row(j));
+                        if i_dom {
+                            adjacency[cursor[i]] = j;
+                            cursor[i] += 1;
+                        } else if j_dom {
+                            adjacency[cursor[j]] = i;
+                            cursor[j] += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        // peel fronts: the output buffer doubles as the BFS queue
+        let counts = &mut self.counts;
+        let adjacency = &self.adjacency;
+        let order = &mut self.fronts.order;
+        let starts = &mut self.fronts.starts;
+        order.extend((0..n).filter(|&i| counts[2 * i] == 0));
+        let mut begin = 0;
+        while begin < order.len() {
+            let end = order.len();
+            starts.push(end);
+            for idx in begin..end {
+                let i = order[idx];
+                for &j in &adjacency[offsets[i]..offsets[i + 1]] {
+                    counts[2 * j] -= 1;
+                    if counts[2 * j] == 0 {
+                        order.push(j);
+                    }
+                }
+            }
+            begin = end;
+        }
+        if order.len() < n {
+            // NaN-induced dominance "cycles" (a beats b beats c beats a,
+            // each through a different non-NaN objective) can strand
+            // individuals with counts that never reach zero. Park them in
+            // one final front so fronts always partition the population.
+            order.extend((0..n).filter(|&i| counts[2 * i] > 0));
+            starts.push(order.len());
+        }
+        // normalise every front to ascending population index: the peel
+        // lists members in BFS-traversal order, which would make crowding
+        // tie-breaks on duplicate fitness depend on adjacency order. The
+        // sweep path is index-ascending by construction; match it (and
+        // the AoS reference oracle) here.
+        for k in 0..self.fronts.len() {
+            let (lo, hi) = (self.fronts.starts[k], self.fronts.starts[k + 1]);
+            self.fronts.order[lo..hi].sort_unstable();
+        }
+    }
+
+    /// Fronts + per-individual (rank, crowding distance) — what binary
+    /// tournament consumes. With a pool, per-front crowding fans out
+    /// (fronts are disjoint slices of the front-major distance buffer).
+    pub fn rank_crowd_flat(&mut self, obj: &[f64], n: usize, m: usize, pool: Option<&ThreadPool>) {
+        self.sort_flat(obj, n, m, pool);
+        self.rank.clear();
+        self.rank.resize(n, 0);
+        self.crowd.clear();
+        self.crowd.resize(n, 0.0);
+        self.front_dist.clear();
+        self.front_dist.resize(self.fronts.order.len(), 0.0);
+        let parallel = pool
+            .filter(|p| p.threads() > 1 && n >= PARALLEL_MIN_N && self.fronts.len() > 1);
+        match parallel {
+            Some(p) => {
+                let fronts = &self.fronts;
+                let canon = &self.canon;
+                p.scoped_parts(&mut self.front_dist, &fronts.starts, |k, dist| {
+                    // a small per-front index scratch: only the parallel
+                    // path pays this allocation, the serial path reuses
+                    // `self.order`
+                    let mut order = Vec::new();
+                    crowding_front_into(canon, m, fronts.front(k), dist, &mut order);
+                })
+                .expect("crowding pass must not panic");
+            }
+            None => {
+                for k in 0..self.fronts.len() {
+                    let (lo, hi) = (self.fronts.starts[k], self.fronts.starts[k + 1]);
+                    crowding_front_into(
+                        &self.canon,
+                        m,
+                        self.fronts.front(k),
+                        &mut self.front_dist[lo..hi],
+                        &mut self.order,
+                    );
+                }
+            }
+        }
+        for k in 0..self.fronts.len() {
+            let lo = self.fronts.starts[k];
+            for (w, &i) in self.fronts.front(k).iter().enumerate() {
+                self.rank[i] = k;
+                self.crowd[i] = self.front_dist[lo + w];
+            }
+        }
+    }
+
+    /// Environmental selection on the flat matrix: compute survivor flags
+    /// for the best `mu` of `n` rows by (front rank, crowding distance) —
+    /// the elitist step of NSGA-II. Returns the flags slice
+    /// (`flags[i] == true` ⇔ row `i` survives).
+    pub fn select_flags_flat(
+        &mut self,
+        obj: &[f64],
+        n: usize,
+        m: usize,
+        mu: usize,
+        pool: Option<&ThreadPool>,
+    ) -> &[bool] {
+        self.flags.clear();
+        self.flags.resize(n, false);
+        if n <= mu {
+            self.flags.fill(true);
+            return &self.flags;
+        }
+        self.sort_flat(obj, n, m, pool);
+        let mut kept = 0usize;
+        for k in 0..self.fronts.len() {
+            let front = self.fronts.front(k);
+            if kept + front.len() <= mu {
+                for &i in front {
+                    self.flags[i] = true;
+                }
+                kept += front.len();
+                if kept == mu {
+                    break;
+                }
+            } else {
+                // the overflowing front: truncate by crowding, most
+                // isolated first, stable on the front-local index
+                self.front_dist.clear();
+                self.front_dist.resize(front.len(), 0.0);
+                crowding_front_into(
+                    &self.canon,
+                    m,
+                    front,
+                    &mut self.front_dist,
+                    &mut self.order,
+                );
+                let sel = &mut self.sel_order;
+                sel.clear();
+                sel.extend(0..front.len());
+                let dist = &self.front_dist;
+                sel.sort_unstable_by(|&a, &b| dist[b].total_cmp(&dist[a]).then(a.cmp(&b)));
+                for &w in sel.iter().take(mu - kept) {
+                    self.flags[front[w]] = true;
+                }
+                break;
+            }
+        }
+        &self.flags
+    }
+}
+
+// --------------------------------------------------------------- wrappers
+// Historical `Vec<Individual>` entry points, delegating to the flat
+// kernels above (one implementation, two views).
+
+/// Flatten a population's objectives into a row-major matrix.
+fn flatten(pop: &[Individual]) -> (Vec<f64>, usize) {
+    let m = pop.first().map_or(0, |i| i.objectives.len());
+    let mut obj = Vec::with_capacity(pop.len() * m);
+    for ind in pop {
+        debug_assert_eq!(
+            ind.objectives.len(),
+            m,
+            "heterogeneous objective counts in one population"
+        );
+        obj.extend_from_slice(&ind.objectives);
+    }
+    (obj, m)
+}
+
+/// Fast non-dominated sort: partition indices into Pareto fronts
+/// (front 0 = non-dominated).
+pub fn fast_non_dominated_sort(pop: &[Individual]) -> Fronts {
+    let (obj, m) = flatten(pop);
+    let mut scratch = NsgaScratch::default();
+    scratch.sort_flat(&obj, pop.len(), m, None);
+    scratch.fronts
+}
+
+/// Crowding distance of each member of one front (Deb 2002 §III-B).
+/// NaN-safe: objective orderings use `total_cmp`.
+pub fn crowding_distance(pop: &[Individual], front: &[usize]) -> Vec<f64> {
+    let k = front.len();
+    let mut dist = vec![0.0f64; k];
+    if k == 0 {
+        return dist;
+    }
+    let m = pop[front[0]].objectives.len();
+    // front-local canonicalised matrix (the flat kernel indexes rows by
+    // the `front` slice, so hand it rows 0..k and the identity front)
+    let mut obj = Vec::with_capacity(k * m);
+    for &i in front {
+        obj.extend(pop[i].objectives.iter().map(|v| v + 0.0));
+    }
+    let identity: Vec<usize> = (0..k).collect();
+    let mut order = Vec::new();
+    crowding_front_into(&obj, m, &identity, &mut dist, &mut order);
     dist
 }
 
 /// Rank (front index) and crowding for every individual.
 pub fn rank_and_crowding(pop: &[Individual]) -> (Vec<usize>, Vec<f64>) {
-    let fronts = fast_non_dominated_sort(pop);
-    let mut rank = vec![0usize; pop.len()];
-    let mut crowd = vec![0.0f64; pop.len()];
-    for (r, front) in fronts.iter().enumerate() {
-        let d = crowding_distance(pop, front);
-        for (k, &i) in front.iter().enumerate() {
-            rank[i] = r;
-            crowd[i] = d[k];
-        }
-    }
-    (rank, crowd)
+    let (obj, m) = flatten(pop);
+    let mut scratch = NsgaScratch::default();
+    scratch.rank_crowd_flat(&obj, pop.len(), m, None);
+    (scratch.rank, scratch.crowd)
 }
 
 /// Environmental selection: keep the best `mu` individuals by
@@ -326,32 +655,30 @@ pub fn select(pop: Vec<Individual>, mu: usize) -> Vec<Individual> {
     if pop.len() <= mu {
         return pop;
     }
-    let fronts = fast_non_dominated_sort(&pop);
-    let mut flags = vec![false; pop.len()];
-    let mut kept = 0usize;
-    for front in fronts.iter() {
-        if kept + front.len() <= mu {
-            for &i in front {
-                flags[i] = true;
-            }
-            kept += front.len();
-            if kept == mu {
-                break;
-            }
-        } else {
-            let d = crowding_distance(&pop, front);
-            let mut order: Vec<usize> = (0..front.len()).collect();
-            order.sort_by(|&a, &b| d[b].total_cmp(&d[a]));
-            for &w in order.iter().take(mu - kept) {
-                flags[front[w]] = true;
-            }
-            break;
-        }
-    }
+    let (obj, m) = flatten(&pop);
+    let mut scratch = NsgaScratch::default();
+    scratch.select_flags_flat(&obj, pop.len(), m, mu, None);
     pop.into_iter()
-        .zip(flags)
-        .filter_map(|(ind, keep)| keep.then_some(ind))
+        .zip(&scratch.flags)
+        .filter_map(|(ind, &keep)| keep.then_some(ind))
         .collect()
+}
+
+/// Binary tournament on (rank, crowding) over row indices — the columnar
+/// parent-selection operator. Draws two uniform indices from `rng` exactly
+/// like the historical AoS tournament.
+pub fn tournament_idx(n: usize, rank: &[usize], crowd: &[f64], rng: &mut Rng) -> usize {
+    let a = rng.usize(n);
+    let b = rng.usize(n);
+    if rank[a] < rank[b] {
+        a
+    } else if rank[b] < rank[a] {
+        b
+    } else if crowd[a] >= crowd[b] {
+        a
+    } else {
+        b
+    }
 }
 
 /// Binary tournament on (rank, crowding): the parent-selection operator.
@@ -361,18 +688,7 @@ pub fn tournament<'a>(
     crowd: &[f64],
     rng: &mut Rng,
 ) -> &'a Individual {
-    let a = rng.usize(pop.len());
-    let b = rng.usize(pop.len());
-    let better = if rank[a] < rank[b] {
-        a
-    } else if rank[b] < rank[a] {
-        b
-    } else if crowd[a] >= crowd[b] {
-        a
-    } else {
-        b
-    };
-    &pop[better]
+    &pop[tournament_idx(pop.len(), rank, crowd, rng)]
 }
 
 /// The Pareto front (front 0) of a population.
@@ -482,6 +798,44 @@ mod tests {
                 .collect();
             assert_fronts_match(&pop);
         }
+    }
+
+    #[test]
+    fn parallel_general_sort_matches_serial() {
+        // the pooled dominance passes must agree with the serial ones on
+        // a population large enough to clear the PARALLEL_MIN_N gate
+        let pool = ThreadPool::new(4);
+        let mut rng = Rng::new(0x9A9A);
+        let n = 700;
+        let m = 3;
+        let obj: Vec<f64> = (0..n * m)
+            .map(|_| f64::from(rng.usize(6) as u32))
+            .collect();
+        let mut serial = NsgaScratch::default();
+        serial.sort_flat(&obj, n, m, None);
+        let mut parallel = NsgaScratch::default();
+        parallel.sort_flat(&obj, n, m, Some(&pool));
+        assert_eq!(serial.fronts(), parallel.fronts());
+        // crowding too
+        serial.rank_crowd_flat(&obj, n, m, None);
+        parallel.rank_crowd_flat(&obj, n, m, Some(&pool));
+        assert_eq!(serial.rank(), parallel.rank());
+        assert_eq!(serial.crowd(), parallel.crowd());
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless_between_calls() {
+        // a big call followed by a small one must not leak stale state
+        let mut scratch = NsgaScratch::default();
+        let mut rng = Rng::new(31);
+        let big: Vec<f64> = (0..64 * 3).map(|_| rng.f64()).collect();
+        scratch.rank_crowd_flat(&big, 64, 3, None);
+        let small = [1.0, 4.0, 2.0, 2.0, 4.0, 1.0, 5.0, 5.0];
+        scratch.select_flags_flat(&small, 4, 2, 3, None);
+        assert_eq!(scratch.flags(), &[true, true, true, false]);
+        scratch.sort_flat(&small, 4, 2, None);
+        assert_eq!(scratch.fronts().len(), 2);
+        assert_eq!(scratch.fronts().front(1), &[3]);
     }
 
     #[test]
@@ -656,5 +1010,23 @@ mod tests {
         assert_eq!(total, pop.len());
         let kept = select(pop, 200);
         assert_eq!(kept.len(), 200);
+    }
+
+    #[test]
+    fn tournament_idx_matches_aos_tournament() {
+        let pop = vec![
+            ind(&[1.0, 1.0]),
+            ind(&[2.0, 3.0]),
+            ind(&[0.5, 4.0]),
+            ind(&[5.0, 5.0]),
+        ];
+        let (rank, crowd) = rank_and_crowding(&pop);
+        let mut rng_a = Rng::new(77);
+        let mut rng_b = Rng::new(77);
+        for _ in 0..50 {
+            let w_idx = tournament_idx(pop.len(), &rank, &crowd, &mut rng_a);
+            let w_ref = tournament(&pop, &rank, &crowd, &mut rng_b);
+            assert!(std::ptr::eq(w_ref, &pop[w_idx]), "same winner, same stream");
+        }
     }
 }

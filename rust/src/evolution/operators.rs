@@ -28,6 +28,21 @@ impl Default for Operators {
     }
 }
 
+/// Genes closer than this are treated as identical by SBX (no crossover).
+const SBX_EPSILON: f64 = 1e-14;
+
+/// The SBX spread factor for one uniform draw `u` — shared by the AoS
+/// [`Operators::sbx`] and the columnar [`Operators::breed_into`] so the
+/// two paths cannot drift apart.
+#[inline]
+fn sbx_beta(u: f64, eta: f64) -> f64 {
+    if u <= 0.5 {
+        (2.0 * u).powf(1.0 / (eta + 1.0))
+    } else {
+        (1.0 / (2.0 * (1.0 - u))).powf(1.0 / (eta + 1.0))
+    }
+}
+
 impl Operators {
     /// Simulated binary crossover: produce two children from two parents.
     pub fn sbx(
@@ -41,13 +56,8 @@ impl Operators {
         let mut c2 = b.to_vec();
         if rng.f64() < self.p_crossover {
             for i in 0..a.len() {
-                if rng.f64() < 0.5 && (a[i] - b[i]).abs() > 1e-14 {
-                    let u: f64 = rng.f64();
-                    let beta = if u <= 0.5 {
-                        (2.0 * u).powf(1.0 / (self.eta_crossover + 1.0))
-                    } else {
-                        (1.0 / (2.0 * (1.0 - u))).powf(1.0 / (self.eta_crossover + 1.0))
-                    };
+                if rng.f64() < 0.5 && (a[i] - b[i]).abs() > SBX_EPSILON {
+                    let beta = sbx_beta(rng.f64(), self.eta_crossover);
                     c1[i] = 0.5 * ((1.0 + beta) * a[i] + (1.0 - beta) * b[i]);
                     c2[i] = 0.5 * ((1.0 - beta) * a[i] + (1.0 + beta) * b[i]);
                 }
@@ -95,6 +105,41 @@ impl Operators {
         let mut child = c1;
         self.mutate(&mut child, bounds, rng);
         child
+    }
+
+    /// Allocation-free breed for the columnar engine: writes the child
+    /// into `out` (len == genome dim) without materialising either SBX
+    /// sibling. The which-child coin is drawn *first* so only the chosen
+    /// one is ever computed; per-gene the SBX draws are identical for both
+    /// children, so the child distribution matches [`Operators::breed`]
+    /// (the draw order differs — this operator is fed per-chunk forked
+    /// streams, never the historical main stream).
+    pub fn breed_into(
+        &self,
+        a: &[f64],
+        b: &[f64],
+        bounds: &Bounds,
+        rng: &mut Rng,
+        out: &mut [f64],
+    ) {
+        debug_assert_eq!(a.len(), out.len());
+        debug_assert_eq!(b.len(), out.len());
+        let second = rng.bool(0.5);
+        out.copy_from_slice(if second { b } else { a });
+        if rng.f64() < self.p_crossover {
+            for i in 0..out.len() {
+                if rng.f64() < 0.5 && (a[i] - b[i]).abs() > SBX_EPSILON {
+                    let beta = sbx_beta(rng.f64(), self.eta_crossover);
+                    out[i] = if second {
+                        0.5 * ((1.0 - beta) * a[i] + (1.0 + beta) * b[i])
+                    } else {
+                        0.5 * ((1.0 + beta) * a[i] + (1.0 - beta) * b[i])
+                    };
+                }
+            }
+        }
+        bounds.clamp(out);
+        self.mutate(out, bounds, rng);
     }
 }
 
@@ -175,5 +220,48 @@ mod tests {
         let c = ops.breed(&p1, &p2, &b, &mut rng);
         assert_eq!(c.len(), 2);
         assert!(b.contains(&c));
+    }
+
+    #[test]
+    fn breed_into_respects_bounds_and_varies() {
+        let b = bounds();
+        let ops = Operators::default();
+        let mut rng = Rng::new(5);
+        let mut child = vec![0.0; 2];
+        let mut changed = 0;
+        for _ in 0..200 {
+            let p1 = b.random(&mut rng);
+            let p2 = b.random(&mut rng);
+            ops.breed_into(&p1, &p2, &b, &mut rng, &mut child);
+            assert!(b.contains(&child), "{child:?}");
+            if child != p1 && child != p2 {
+                changed += 1;
+            }
+        }
+        assert!(changed > 100, "breed_into barely varied: {changed}/200");
+    }
+
+    #[test]
+    fn breed_into_mean_centred_like_breed() {
+        // the zero-allocation operator must keep SBX's parent-centred
+        // child distribution
+        let b = bounds();
+        let ops = Operators {
+            p_crossover: 1.0,
+            p_mutation: Some(0.0),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(6);
+        let p1 = vec![3.0, 1.0];
+        let p2 = vec![7.0, -1.0];
+        let mut child = vec![0.0; 2];
+        let n = 4000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            ops.breed_into(&p1, &p2, &b, &mut rng, &mut child);
+            sum += child[0];
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 5.0).abs() < 0.2, "mean {mean}");
     }
 }

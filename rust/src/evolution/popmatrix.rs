@@ -1,0 +1,499 @@
+//! Columnar population storage (§Perf tentpole): genomes and objectives
+//! live in contiguous row-major `f64` matrices with a small per-row
+//! metadata strip (evaluation counts), replacing the AoS
+//! `Vec<Individual>` whose per-individual `Vec<f64>` allocations dominated
+//! the 200k-individual wave of bench `p2_scale` (the `population_clone`
+//! case was ~24% of `full_wave`). PaPaS (arXiv:1807.09632) makes the same
+//! observation for parameter studies at scale: once scheduling is solved,
+//! the framework's own per-task data handling becomes the bottleneck.
+//!
+//! [`PopMatrix`] is the storage; [`WaveArena`] owns every scratch buffer a
+//! generational wave needs (NSGA-II kernels, per-wave seeds, variation RNG
+//! forks, gather/return buffers) and is recycled wave after wave — in
+//! steady state a full evaluate → rank → select → breed cycle allocates
+//! **nothing** (pinned by the `wave_reuse` case of `cargo bench --bench
+//! p2_scale`, which counts allocations with a counting global allocator).
+
+use crate::error::{Error, Result};
+use crate::evolution::genome::{Bounds, Individual};
+use crate::evolution::nsga2::{self, NsgaScratch};
+use crate::evolution::operators::Operators;
+use crate::exec::ThreadPool;
+use crate::util::Rng;
+
+/// Offspring bred per variation chunk. Fixed (never derived from the
+/// thread count) so the chunk → RNG-fork mapping, and therefore the whole
+/// trajectory, is identical on any machine and with or without a pool.
+pub const VARIATION_CHUNK: usize = 64;
+
+/// A population as two row-major matrices plus a metadata strip.
+///
+/// Row `i` is one individual: `genome(i)` (dim columns), `objectives(i)`
+/// (n_obj columns), `evals(i)` (the §4.5 re-evaluation count). All
+/// mutation is in place; `clear`/`set_rows`/`retain_flags` never release
+/// capacity, so a matrix cycled by an engine reaches a high-water mark and
+/// stops allocating.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PopMatrix {
+    dim: usize,
+    n_obj: usize,
+    rows: usize,
+    genomes: Vec<f64>,
+    objectives: Vec<f64>,
+    evals: Vec<u32>,
+}
+
+impl PopMatrix {
+    pub fn new(dim: usize, n_obj: usize) -> Self {
+        PopMatrix {
+            dim,
+            n_obj,
+            rows: 0,
+            genomes: Vec::new(),
+            objectives: Vec::new(),
+            evals: Vec::new(),
+        }
+    }
+
+    pub fn with_capacity(dim: usize, n_obj: usize, rows: usize) -> Self {
+        PopMatrix {
+            dim,
+            n_obj,
+            rows: 0,
+            genomes: Vec::with_capacity(rows * dim),
+            objectives: Vec::with_capacity(rows * n_obj),
+            evals: Vec::with_capacity(rows),
+        }
+    }
+
+    /// Build from AoS individuals (journal resume, seeded starts).
+    pub fn from_individuals(pop: &[Individual], dim: usize, n_obj: usize) -> Result<Self> {
+        let mut m = PopMatrix::with_capacity(dim, n_obj, pop.len());
+        for ind in pop {
+            if ind.genome.len() != dim || ind.objectives.len() != n_obj {
+                return Err(Error::Evolution(format!(
+                    "individual shape ({}, {}) does not match matrix ({dim}, {n_obj})",
+                    ind.genome.len(),
+                    ind.objectives.len()
+                )));
+            }
+            m.push_row(&ind.genome, &ind.objectives, ind.evaluations);
+        }
+        Ok(m)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn n_obj(&self) -> usize {
+        self.n_obj
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Drop all rows, keeping capacity.
+    pub fn clear(&mut self) {
+        self.rows = 0;
+        self.genomes.clear();
+        self.objectives.clear();
+        self.evals.clear();
+    }
+
+    /// Grow (zero-filled genomes/objectives, `evals = 1`) or shrink to
+    /// exactly `rows` rows, reusing capacity. Growing stages rows whose
+    /// genomes are about to be written by variation or initialisation.
+    pub fn set_rows(&mut self, rows: usize) {
+        self.rows = rows;
+        self.genomes.resize(rows * self.dim, 0.0);
+        self.objectives.resize(rows * self.n_obj, 0.0);
+        self.evals.resize(rows, 1);
+    }
+
+    /// Append one evaluated row.
+    pub fn push_row(&mut self, genome: &[f64], objectives: &[f64], evals: u32) {
+        debug_assert_eq!(genome.len(), self.dim);
+        debug_assert_eq!(objectives.len(), self.n_obj);
+        self.genomes.extend_from_slice(genome);
+        self.objectives.extend_from_slice(objectives);
+        self.evals.push(evals);
+        self.rows += 1;
+    }
+
+    /// Append a copy of `other`'s row `i`.
+    pub fn push_row_from(&mut self, other: &PopMatrix, i: usize) {
+        debug_assert_eq!(self.dim, other.dim);
+        debug_assert_eq!(self.n_obj, other.n_obj);
+        self.push_row(other.genome(i), other.objectives_row(i), other.evals(i));
+    }
+
+    pub fn genome(&self, i: usize) -> &[f64] {
+        &self.genomes[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn genome_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.genomes[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn objectives_row(&self, i: usize) -> &[f64] {
+        &self.objectives[i * self.n_obj..(i + 1) * self.n_obj]
+    }
+
+    pub fn objectives_row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.objectives[i * self.n_obj..(i + 1) * self.n_obj]
+    }
+
+    /// The whole genome matrix, row-major.
+    pub fn genomes(&self) -> &[f64] {
+        &self.genomes
+    }
+
+    /// The whole objectives matrix, row-major — what the flat NSGA-II
+    /// kernels consume directly.
+    pub fn objectives(&self) -> &[f64] {
+        &self.objectives
+    }
+
+    /// Mutable objective rows `first_row..` — the preallocated output an
+    /// evaluation wave writes into.
+    pub fn objectives_tail_mut(&mut self, first_row: usize) -> &mut [f64] {
+        &mut self.objectives[first_row * self.n_obj..]
+    }
+
+    pub fn evals(&self, i: usize) -> u32 {
+        self.evals[i]
+    }
+
+    pub fn set_evals(&mut self, i: usize, evals: u32) {
+        self.evals[i] = evals;
+    }
+
+    /// Genome rows split at `row`: `(rows 0..row, rows row..)`. Lets
+    /// variation read parents while writing offspring in the same matrix.
+    pub fn split_genomes_at_mut(&mut self, row: usize) -> (&[f64], &mut [f64]) {
+        let (head, tail) = self.genomes.split_at_mut(row * self.dim);
+        (&*head, tail)
+    }
+
+    /// Rows `first_row..` as `(genome rows, mutable objective rows)` —
+    /// the shape an evaluation wave consumes: slice views in,
+    /// preallocated objective rows out.
+    pub fn rows_split_mut(&mut self, first_row: usize) -> (&[f64], &mut [f64]) {
+        (
+            &self.genomes[first_row * self.dim..],
+            &mut self.objectives[first_row * self.n_obj..],
+        )
+    }
+
+    /// Merge a re-evaluation into row `i`: running average of objectives
+    /// (§4.5's defence against over-evaluated stochastic individuals) —
+    /// the columnar twin of [`Individual::absorb_reevaluation`].
+    pub fn absorb_reevaluation(&mut self, i: usize, fresh: &[f64]) {
+        let n = f64::from(self.evals[i]);
+        for (o, f) in self.objectives_row_mut(i).iter_mut().zip(fresh) {
+            *o = (*o * n + f) / (n + 1.0);
+        }
+        self.evals[i] += 1;
+    }
+
+    /// Stable in-place compaction: keep exactly the rows whose flag is
+    /// set, preserving order. `memmove` within the existing buffers —
+    /// no allocation, no row clones.
+    pub fn retain_flags(&mut self, flags: &[bool]) {
+        debug_assert_eq!(flags.len(), self.rows);
+        let mut w = 0usize;
+        for (r, &keep) in flags.iter().enumerate() {
+            if keep {
+                if w != r {
+                    self.genomes
+                        .copy_within(r * self.dim..(r + 1) * self.dim, w * self.dim);
+                    self.objectives.copy_within(
+                        r * self.n_obj..(r + 1) * self.n_obj,
+                        w * self.n_obj,
+                    );
+                    self.evals[w] = self.evals[r];
+                }
+                w += 1;
+            }
+        }
+        self.rows = w;
+        self.genomes.truncate(w * self.dim);
+        self.objectives.truncate(w * self.n_obj);
+        self.evals.truncate(w);
+    }
+
+    /// One row as an AoS individual (allocates — results/journal edges).
+    pub fn individual(&self, i: usize) -> Individual {
+        Individual {
+            genome: self.genome(i).to_vec(),
+            objectives: self.objectives_row(i).to_vec(),
+            evaluations: self.evals(i),
+        }
+    }
+
+    /// The whole population as AoS individuals (allocates — final
+    /// results only, never inside the wave loop).
+    pub fn to_individuals(&self) -> Vec<Individual> {
+        (0..self.rows).map(|i| self.individual(i)).collect()
+    }
+}
+
+/// Every reusable buffer one generational wave needs: the NSGA-II scratch
+/// (fronts, ranks, crowding, survivor flags), per-wave evaluation seeds,
+/// deterministic per-chunk variation RNG forks, and gather/return buffers
+/// for re-evaluation waves. Engines keep one arena alive across all
+/// generations — ping-pong with the population matrix means zero
+/// steady-state allocation.
+#[derive(Default)]
+pub struct WaveArena {
+    pub nsga: NsgaScratch,
+    /// Per-genome model seeds of the current evaluation wave.
+    pub seeds: Vec<u32>,
+    /// One forked RNG per variation chunk (see [`VARIATION_CHUNK`]).
+    pub rng_forks: Vec<Rng>,
+    /// Gathered genome rows for a re-evaluation wave.
+    pub genome_buf: Vec<f64>,
+    /// Objective rows returned by a re-evaluation wave.
+    pub obj_buf: Vec<f64>,
+    /// Sampled row indices for a re-evaluation wave.
+    pub idx_buf: Vec<usize>,
+}
+
+impl WaveArena {
+    /// Rank + crowding of every row (tournament input), into `self.nsga`.
+    pub fn rank_crowd(&mut self, matrix: &PopMatrix, pool: Option<&ThreadPool>) {
+        self.nsga
+            .rank_crowd_flat(matrix.objectives(), matrix.len(), matrix.n_obj(), pool);
+    }
+
+    /// Environmental selection in place: keep the best `mu` rows of
+    /// `matrix` by (front rank, crowding distance), preserving row order —
+    /// identical survivor set to [`nsga2::select`] by construction.
+    pub fn select(&mut self, matrix: &mut PopMatrix, mu: usize, pool: Option<&ThreadPool>) {
+        if matrix.len() <= mu {
+            return;
+        }
+        self.nsga.select_flags_flat(
+            matrix.objectives(),
+            matrix.len(),
+            matrix.n_obj(),
+            mu,
+            pool,
+        );
+        matrix.retain_flags(self.nsga.flags());
+    }
+
+    /// Breed offspring directly into `matrix` rows `n_parents..`: each
+    /// [`VARIATION_CHUNK`]-row chunk gets its own RNG stream forked from
+    /// `rng` (chunk boundaries are fixed, so results are machine- and
+    /// pool-independent), picks parents by binary tournament on the
+    /// rank/crowding computed by the last [`WaveArena::rank_crowd`], and
+    /// writes SBX + polynomial-mutation children straight into the
+    /// offspring genome rows. With a pool the chunks run in parallel.
+    ///
+    /// Caller contract: `matrix.set_rows(n_parents + lambda)` first, and
+    /// `rank_crowd` was computed over the `n_parents` parent rows.
+    pub fn breed_into(
+        &mut self,
+        matrix: &mut PopMatrix,
+        n_parents: usize,
+        ops: &Operators,
+        bounds: &Bounds,
+        rng: &mut Rng,
+        pool: Option<&ThreadPool>,
+    ) {
+        let count = matrix.len() - n_parents;
+        if count == 0 || n_parents == 0 {
+            return;
+        }
+        let dim = matrix.dim();
+        let n_chunks = count.div_ceil(VARIATION_CHUNK);
+        self.rng_forks.clear();
+        for _ in 0..n_chunks {
+            self.rng_forks.push(rng.fork());
+        }
+        let rank = self.nsga.rank();
+        let crowd = self.nsga.crowd();
+        debug_assert!(rank.len() >= n_parents, "rank_crowd must cover the parents");
+        let forks = &self.rng_forks;
+        let (parents, offspring) = matrix.split_genomes_at_mut(n_parents);
+        let breed_chunk = |k: usize, chunk: &mut [f64]| {
+            // the fork is cloned, not consumed: chunk results depend only
+            // on (chunk index, position), never on scheduling
+            let mut rng = forks[k].clone();
+            for child in chunk.chunks_exact_mut(dim) {
+                let a = nsga2::tournament_idx(n_parents, rank, crowd, &mut rng);
+                let b = nsga2::tournament_idx(n_parents, rank, crowd, &mut rng);
+                ops.breed_into(
+                    &parents[a * dim..(a + 1) * dim],
+                    &parents[b * dim..(b + 1) * dim],
+                    bounds,
+                    &mut rng,
+                    child,
+                );
+            }
+        };
+        match pool.filter(|p| p.threads() > 1 && count >= 2 * VARIATION_CHUNK) {
+            Some(p) => p
+                .scoped_chunks(offspring, VARIATION_CHUNK * dim, breed_chunk)
+                .expect("variation must not panic"),
+            None => {
+                for k in 0..n_chunks {
+                    let lo = k * VARIATION_CHUNK * dim;
+                    let hi = ((k + 1) * VARIATION_CHUNK * dim).min(offspring.len());
+                    breed_chunk(k, &mut offspring[lo..hi]);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::val_f64;
+
+    fn bounds() -> Bounds {
+        let x = val_f64("x");
+        let y = val_f64("y");
+        Bounds::new(&[(&x, 0.0, 1.0), (&y, 0.0, 1.0)]).unwrap()
+    }
+
+    fn sample_matrix() -> PopMatrix {
+        let mut m = PopMatrix::new(2, 2);
+        m.push_row(&[0.1, 0.2], &[1.0, 4.0], 1);
+        m.push_row(&[0.3, 0.4], &[2.0, 2.0], 2);
+        m.push_row(&[0.5, 0.6], &[4.0, 1.0], 1);
+        m.push_row(&[0.7, 0.8], &[5.0, 5.0], 3);
+        m
+    }
+
+    #[test]
+    fn rows_round_trip_through_individuals() {
+        let m = sample_matrix();
+        let pop = m.to_individuals();
+        assert_eq!(pop.len(), 4);
+        assert_eq!(pop[1].genome, vec![0.3, 0.4]);
+        assert_eq!(pop[1].objectives, vec![2.0, 2.0]);
+        assert_eq!(pop[1].evaluations, 2);
+        let back = PopMatrix::from_individuals(&pop, 2, 2).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn from_individuals_rejects_shape_mismatch() {
+        let pop = vec![Individual::new(vec![0.5], vec![1.0, 2.0])];
+        assert!(PopMatrix::from_individuals(&pop, 2, 2).is_err());
+        assert!(PopMatrix::from_individuals(&pop, 1, 1).is_err());
+        assert!(PopMatrix::from_individuals(&pop, 1, 2).is_ok());
+    }
+
+    #[test]
+    fn retain_flags_compacts_in_order_without_allocating() {
+        let mut m = sample_matrix();
+        let cap = (
+            m.genomes.capacity(),
+            m.objectives.capacity(),
+            m.evals.capacity(),
+        );
+        m.retain_flags(&[true, false, true, false]);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.genome(0), &[0.1, 0.2]);
+        assert_eq!(m.genome(1), &[0.5, 0.6]);
+        assert_eq!(m.objectives_row(1), &[4.0, 1.0]);
+        assert_eq!(m.evals(0), 1);
+        assert_eq!(
+            cap,
+            (
+                m.genomes.capacity(),
+                m.objectives.capacity(),
+                m.evals.capacity()
+            ),
+            "compaction must not reallocate"
+        );
+    }
+
+    #[test]
+    fn absorb_reevaluation_matches_individual_twin() {
+        let mut m = sample_matrix();
+        let mut ind = m.individual(1);
+        m.absorb_reevaluation(1, &[4.0, 6.0]);
+        ind.absorb_reevaluation(&[4.0, 6.0]);
+        assert_eq!(m.individual(1), ind);
+    }
+
+    #[test]
+    fn set_rows_grows_with_fresh_metadata_and_shrinks() {
+        let mut m = sample_matrix();
+        m.set_rows(6);
+        assert_eq!(m.len(), 6);
+        assert_eq!(m.genome(5), &[0.0, 0.0]);
+        assert_eq!(m.evals(5), 1);
+        m.set_rows(2);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.genome(1), &[0.3, 0.4]);
+    }
+
+    #[test]
+    fn arena_select_matches_aos_select() {
+        let m = sample_matrix();
+        let mut arena = WaveArena::default();
+        for mu in 1..=4 {
+            let mut cm = m.clone();
+            arena.select(&mut cm, mu, None);
+            let want = nsga2::select(m.to_individuals(), mu);
+            assert_eq!(cm.to_individuals(), want, "mu = {mu}");
+        }
+    }
+
+    #[test]
+    fn breed_into_is_deterministic_and_pool_independent() {
+        let b = bounds();
+        let ops = Operators::default();
+        let pool = ThreadPool::new(4);
+        let run = |pool: Option<&ThreadPool>| -> Vec<f64> {
+            let mut m = PopMatrix::new(2, 2);
+            let mut rng = Rng::new(99);
+            for i in 0..8 {
+                m.push_row(
+                    &[f64::from(i) * 0.1, 1.0 - f64::from(i) * 0.1],
+                    &[f64::from(i), 8.0 - f64::from(i)],
+                    1,
+                );
+            }
+            let mut arena = WaveArena::default();
+            arena.rank_crowd(&m, None);
+            m.set_rows(8 + 300); // several variation chunks
+            arena.breed_into(&mut m, 8, &ops, &b, &mut rng, pool);
+            m.genomes()[8 * 2..].to_vec()
+        };
+        let serial = run(None);
+        let pooled = run(Some(&pool));
+        assert_eq!(serial, pooled, "variation must not depend on the pool");
+        assert_eq!(serial.len(), 300 * 2);
+        // children respect bounds
+        for child in serial.chunks_exact(2) {
+            assert!(b.contains(child), "{child:?}");
+        }
+        // and are not all identical (variation actually varies)
+        assert!(serial.chunks_exact(2).any(|c| c != &serial[0..2]));
+    }
+
+    #[test]
+    fn objectives_tail_mut_is_the_offspring_out_buffer() {
+        let mut m = sample_matrix();
+        m.set_rows(6);
+        let tail = m.objectives_tail_mut(4);
+        assert_eq!(tail.len(), 2 * 2);
+        tail.copy_from_slice(&[9.0, 8.0, 7.0, 6.0]);
+        assert_eq!(m.objectives_row(4), &[9.0, 8.0]);
+        assert_eq!(m.objectives_row(5), &[7.0, 6.0]);
+        assert_eq!(m.objectives_row(3), &[5.0, 5.0], "parents untouched");
+    }
+}

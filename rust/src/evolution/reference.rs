@@ -1,0 +1,165 @@
+//! Verbatim AoS reference implementations of NSGA-II ranking, crowding and
+//! environmental selection — the pre-columnar `Vec<Individual>` algorithms,
+//! retained as a test oracle (same role `sim/reference.rs` plays for the
+//! simulation kernel). The property tests in `tests/proptests.rs` pin the
+//! columnar [`WaveArena`](crate::evolution::popmatrix::WaveArena) selection
+//! to these on randomized populations, NaN objectives and duplicate-fitness
+//! ties included.
+//!
+//! Deliberately naive and allocation-heavy: direct pairwise
+//! [`Individual::dominates`] peeling (the textbook definition) and the
+//! original stable-sort crowding. Never call from production paths.
+//!
+//! One caveat the oracle inherits from the historical code: crowding here
+//! orders raw objective values, while the columnar kernels canonicalise
+//! `-0.0 → +0.0` first. The two agree on every input that does not mix
+//! `-0.0` and `+0.0` in one objective column; generators avoid that corner
+//! (the columnar behaviour for it is pinned separately in `nsga2::tests`).
+
+use crate::evolution::genome::Individual;
+
+/// Pareto fronts by the direct definition: repeatedly peel the set of
+/// individuals not dominated by any remaining individual.
+pub fn pareto_fronts(pop: &[Individual]) -> Vec<Vec<usize>> {
+    let n = pop.len();
+    let mut remaining: Vec<usize> = (0..n).collect();
+    let mut fronts = Vec::new();
+    while !remaining.is_empty() {
+        let mut front: Vec<usize> = remaining
+            .iter()
+            .copied()
+            .filter(|&i| !remaining.iter().any(|&j| pop[j].dominates(&pop[i])))
+            .collect();
+        if front.is_empty() {
+            // NaN dominance cycles can leave a remainder in which every
+            // individual is dominated by another remaining one; park them
+            // all in one final front (matching the columnar fallback)
+            front = remaining.clone();
+        }
+        remaining.retain(|i| !front.contains(i));
+        fronts.push(front);
+    }
+    fronts
+}
+
+/// Crowding distance of one front — the original stable-sort AoS
+/// implementation (Deb 2002 §III-B).
+pub fn crowding_distance(pop: &[Individual], front: &[usize]) -> Vec<f64> {
+    let m = front.len();
+    let mut dist = vec![0.0f64; m];
+    if m == 0 {
+        return dist;
+    }
+    if m <= 2 {
+        return vec![f64::INFINITY; m];
+    }
+    let n_obj = pop[front[0]].objectives.len();
+    let mut order: Vec<usize> = Vec::with_capacity(m);
+    for obj in 0..n_obj {
+        order.clear();
+        order.extend(0..m);
+        order.sort_by(|&a, &b| {
+            pop[front[a]].objectives[obj].total_cmp(&pop[front[b]].objectives[obj])
+        });
+        let lo = pop[front[order[0]]].objectives[obj];
+        let hi = pop[front[order[m - 1]]].objectives[obj];
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        let range = hi - lo;
+        if range.is_nan() || range <= 0.0 {
+            continue;
+        }
+        for w in 1..m - 1 {
+            let prev = pop[front[order[w - 1]]].objectives[obj];
+            let next = pop[front[order[w + 1]]].objectives[obj];
+            dist[order[w]] += (next - prev) / range;
+        }
+    }
+    dist
+}
+
+/// Environmental selection — the original AoS elitist truncation: whole
+/// fronts while they fit, then the overflowing front by crowding distance
+/// (stable sort, descending).
+pub fn select(pop: Vec<Individual>, mu: usize) -> Vec<Individual> {
+    if pop.len() <= mu {
+        return pop;
+    }
+    let fronts = pareto_fronts(&pop);
+    let mut flags = vec![false; pop.len()];
+    let mut kept = 0usize;
+    for front in &fronts {
+        if kept + front.len() <= mu {
+            for &i in front {
+                flags[i] = true;
+            }
+            kept += front.len();
+            if kept == mu {
+                break;
+            }
+        } else {
+            let d = crowding_distance(&pop, front);
+            let mut order: Vec<usize> = (0..front.len()).collect();
+            order.sort_by(|&a, &b| d[b].total_cmp(&d[a]));
+            for &w in order.iter().take(mu - kept) {
+                flags[front[w]] = true;
+            }
+            break;
+        }
+    }
+    pop.into_iter()
+        .zip(flags)
+        .filter_map(|(ind, keep)| keep.then_some(ind))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::evolution::nsga2;
+
+    fn ind(objs: &[f64]) -> Individual {
+        Individual::new(vec![], objs.to_vec())
+    }
+
+    #[test]
+    fn oracle_agrees_with_production_kernels_on_basics() {
+        let pop = vec![
+            ind(&[1.0, 4.0]),
+            ind(&[2.0, 2.0]),
+            ind(&[4.0, 1.0]),
+            ind(&[3.0, 4.0]),
+            ind(&[4.0, 3.0]),
+            ind(&[5.0, 5.0]),
+        ];
+        let want = pareto_fronts(&pop);
+        let got = nsga2::fast_non_dominated_sort(&pop);
+        assert_eq!(got.len(), want.len());
+        for (k, f) in want.iter().enumerate() {
+            let mut a = got.front(k).to_vec();
+            a.sort_unstable();
+            let mut b = f.clone();
+            b.sort_unstable();
+            assert_eq!(a, b, "front {k}");
+        }
+        for mu in 1..pop.len() {
+            assert_eq!(
+                select(pop.clone(), mu),
+                nsga2::select(pop.clone(), mu),
+                "mu = {mu}"
+            );
+        }
+    }
+
+    #[test]
+    fn oracle_partitions_under_nan_cycles() {
+        let pop = vec![
+            ind(&[0.0, 5.0, f64::NAN]),
+            ind(&[f64::NAN, 0.0, 5.0]),
+            ind(&[5.0, f64::NAN, 0.0]),
+        ];
+        let fronts = pareto_fronts(&pop);
+        let total: usize = fronts.iter().map(Vec::len).sum();
+        assert_eq!(total, 3);
+    }
+}

@@ -3,6 +3,13 @@
 //! triggers selection + breeding of a replacement. This is what each
 //! island of §4.6 runs internally, and it is also the better shape for
 //! high-latency environments (no synchronisation point).
+//!
+//! §Perf: the population lives in a columnar
+//! [`PopMatrix`](crate::evolution::popmatrix::PopMatrix); every
+//! completion appends one row and truncates in place through the shared
+//! [`WaveArena`] — the historical per-completion `Vec<Individual>`
+//! rebuild is gone. Draw order (tournament, breed, model seeds) is
+//! unchanged, so trajectories are bit-identical to the AoS engine.
 
 use std::sync::Arc;
 
@@ -12,6 +19,7 @@ use crate::evolution::evaluator::Evaluator;
 use crate::evolution::generational::{eval_task, EvolutionResult, Nsga2Config};
 use crate::evolution::genome::Individual;
 use crate::evolution::nsga2;
+use crate::evolution::popmatrix::{PopMatrix, WaveArena};
 use crate::util::Rng;
 
 /// Termination criteria (`termination = 100` / `Timed(1 hour)` in the DSL).
@@ -54,6 +62,8 @@ impl SteadyStateGA {
         seed: u64,
     ) -> Result<EvolutionResult> {
         let cfg = &self.config;
+        let dim = cfg.bounds.dim();
+        let n_obj = cfg.objectives.len();
         let mut rng = Rng::new(seed);
         let task = eval_task(
             Arc::clone(&self.evaluator),
@@ -61,7 +71,8 @@ impl SteadyStateGA {
             &cfg.objectives,
         );
 
-        let mut population = initial;
+        let mut population = PopMatrix::from_individuals(&initial, dim, n_obj)?;
+        let mut arena = WaveArena::default();
         let mut evaluations: u64 = 0;
         let mut clock: f64 = 0.0;
 
@@ -81,7 +92,7 @@ impl SteadyStateGA {
         // prime the pipeline
         let mut in_flight: Vec<(Vec<f64>, JobHandle)> = Vec::new();
         for _ in 0..self.parallelism {
-            let genome = self.next_genome(&population, &mut rng);
+            let genome = self.next_genome(&population, &mut arena, &mut rng);
             in_flight.push(submit(genome, &mut rng, 0.0));
         }
 
@@ -102,21 +113,24 @@ impl SteadyStateGA {
                     let (ctx, report) = result?;
                     progressed = true;
                     clock = clock.max(report.virtual_end);
-                    let objectives = cfg
-                        .objectives
-                        .iter()
-                        .map(|n| ctx.get(&crate::core::Val::<f64>::new(n.clone())))
-                        .collect::<Result<Vec<f64>>>()?;
+                    // collect objective values into the arena's return
+                    // buffer, then append the row in place
+                    arena.obj_buf.clear();
+                    for n in &cfg.objectives {
+                        arena
+                            .obj_buf
+                            .push(ctx.get(&crate::core::Val::<f64>::new(n.clone()))?);
+                    }
                     evaluations += 1;
 
-                    // merge + truncate (steady-state elitism)
-                    population.push(Individual::new(genome, objectives));
+                    // merge + truncate (steady-state elitism), in place
+                    population.push_row(&genome, &arena.obj_buf, 1);
                     if population.len() > cfg.mu {
-                        population = nsga2::select(population, cfg.mu);
+                        arena.select(&mut population, cfg.mu, None);
                     }
 
                     if !done(evaluations, clock) {
-                        let child = self.next_genome(&population, &mut rng);
+                        let child = self.next_genome(&population, &mut arena, &mut rng);
                         // replacement released when this slot's job ended
                         in_flight.push(submit(child, &mut rng, report.virtual_end));
                     }
@@ -129,6 +143,7 @@ impl SteadyStateGA {
             }
         }
 
+        let population = population.to_individuals();
         let pareto_front = nsga2::pareto_front(&population);
         Ok(EvolutionResult {
             population,
@@ -149,16 +164,28 @@ impl SteadyStateGA {
     }
 
     /// Breed from the current population, or draw randomly while it is
-    /// still too small to hold a tournament.
-    fn next_genome(&self, population: &[Individual], rng: &mut Rng) -> Vec<f64> {
+    /// still too small to hold a tournament. Identical draw order to the
+    /// historical AoS implementation.
+    fn next_genome(
+        &self,
+        population: &PopMatrix,
+        arena: &mut WaveArena,
+        rng: &mut Rng,
+    ) -> Vec<f64> {
         let cfg = &self.config;
         if population.len() < 2 {
             return cfg.bounds.random(rng);
         }
-        let (rank, crowd) = nsga2::rank_and_crowding(population);
-        let a = nsga2::tournament(population, &rank, &crowd, rng);
-        let b = nsga2::tournament(population, &rank, &crowd, rng);
-        cfg.operators.breed(&a.genome, &b.genome, &cfg.bounds, rng)
+        arena.rank_crowd(population, None);
+        let n = population.len();
+        let a = nsga2::tournament_idx(n, arena.nsga.rank(), arena.nsga.crowd(), rng);
+        let b = nsga2::tournament_idx(n, arena.nsga.rank(), arena.nsga.crowd(), rng);
+        cfg.operators.breed(
+            population.genome(a),
+            population.genome(b),
+            &cfg.bounds,
+            rng,
+        )
     }
 }
 
@@ -229,5 +256,15 @@ mod tests {
             .map(|i| i.objectives[0])
             .fold(f64::INFINITY, f64::min);
         assert!(best_f1 <= 0.2, "elite lost: {best_f1}");
+    }
+
+    #[test]
+    fn mismatched_seed_population_is_rejected() {
+        let env = LocalEnvironment::new(1);
+        let ga = SteadyStateGA::new(config(4), Arc::new(Zdt1Evaluator { dim: 2 }), 1);
+        let bad = Individual::new(vec![0.0, 0.0, 0.0], vec![0.0, 1.0]);
+        assert!(ga
+            .run_from(&env, Termination::Evaluations(4), vec![bad], 5)
+            .is_err());
     }
 }

@@ -149,6 +149,158 @@ impl ThreadPool {
     }
 }
 
+/// A raw pointer that asserts `Send` so a scoped job can carry borrowed
+/// data across the pool boundary. Soundness is provided by the caller:
+/// `scoped_*` joins every job before returning, so the pointee outlives
+/// every dereference, and the handed-out `&mut` ranges are disjoint.
+struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+
+impl ThreadPool {
+    /// Scoped parallel-for over uniform chunks of `data`: runs
+    /// `f(chunk_index, &mut data[k*chunk_len .. ...])` for every chunk,
+    /// in parallel, and returns once **all** chunks finished. The closure
+    /// may borrow from the caller's stack (no `'static` bound): the join
+    /// before return keeps every borrow alive for the whole execution.
+    ///
+    /// A panic inside any chunk is surfaced as `Err` (first message wins)
+    /// after the remaining chunks have still run to completion — the
+    /// buffers are left in a valid (if partially written) state and the
+    /// pool survives.
+    ///
+    /// Deadlock note: like [`ThreadPool::submit`] + join, this blocks the
+    /// calling thread. Do not call it from a worker of the same pool.
+    pub fn scoped_chunks<T, F>(
+        &self,
+        data: &mut [T],
+        chunk_len: usize,
+        f: F,
+    ) -> Result<(), String>
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let chunk_len = chunk_len.max(1);
+        let n_chunks = data.len().div_ceil(chunk_len);
+        let total = data.len();
+        self.scoped_ranges(data, n_chunks, &f, |k| {
+            (k * chunk_len, ((k + 1) * chunk_len).min(total))
+        })
+    }
+
+    /// Scoped parallel-for over **explicit** partition boundaries:
+    /// `bounds` must be non-decreasing with `bounds[0] == 0` and
+    /// `bounds.last() == data.len()`; part `k` is
+    /// `data[bounds[k]..bounds[k + 1]]`. Used where the natural work
+    /// units are uneven (e.g. one Pareto front per part).
+    pub fn scoped_parts<T, F>(
+        &self,
+        data: &mut [T],
+        bounds: &[usize],
+        f: F,
+    ) -> Result<(), String>
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        if bounds.len() < 2 {
+            return Ok(());
+        }
+        assert_eq!(bounds[0], 0, "scoped_parts: bounds must start at 0");
+        assert_eq!(
+            *bounds.last().unwrap(),
+            data.len(),
+            "scoped_parts: bounds must end at data.len()"
+        );
+        for w in bounds.windows(2) {
+            assert!(w[0] <= w[1], "scoped_parts: bounds must be non-decreasing");
+        }
+        let n_parts = bounds.len() - 1;
+        self.scoped_ranges(data, n_parts, &f, |k| (bounds[k], bounds[k + 1]))
+    }
+
+    /// Shared engine for the scoped parallel-fors: `range_of(k)` yields
+    /// the half-open element range of part `k`; ranges must be disjoint.
+    fn scoped_ranges<T, F>(
+        &self,
+        data: &mut [T],
+        n_parts: usize,
+        f: &F,
+        range_of: impl Fn(usize) -> (usize, usize),
+    ) -> Result<(), String>
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        if n_parts == 0 {
+            return Ok(());
+        }
+        if n_parts == 1 || self.threads() == 1 {
+            // nothing to fan out (or nowhere to fan it): run inline
+            for k in 0..n_parts {
+                let (lo, hi) = range_of(k);
+                f(k, &mut data[lo..hi]);
+            }
+            return Ok(());
+        }
+        // joins every outstanding handle when dropped: the lifetime
+        // erasure below is only sound if NO exit path — including an
+        // unwind out of the submit loop — returns before all jobs finish
+        struct JoinAll {
+            handles: Vec<JobJoin<()>>,
+        }
+        impl Drop for JoinAll {
+            fn drop(&mut self) {
+                for h in self.handles.drain(..) {
+                    let _ = h.join();
+                }
+            }
+        }
+        let mut guard = JoinAll {
+            handles: Vec::with_capacity(n_parts),
+        };
+        // ONE reborrow of the buffer, hoisted out of the loop: taking a
+        // fresh `as_mut_ptr()` per iteration would invalidate the
+        // provenance of pointers that already-running jobs derived from
+        // earlier reborrows (UB under the aliasing model). Every job's
+        // pointer is a plain copy of this one.
+        let base_ptr = data.as_mut_ptr();
+        for k in 0..n_parts {
+            let (lo, hi) = range_of(k);
+            let base = SendPtr(base_ptr);
+            let scoped: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                // SAFETY: `range_of` yields disjoint ranges, so no two
+                // parts alias, and the `JoinAll` guard outlives every
+                // dereference of the caller's `data` borrow.
+                let slice =
+                    unsafe { std::slice::from_raw_parts_mut(base.0.add(lo), hi - lo) };
+                f(k, slice);
+            });
+            // SAFETY: lifetime erasure only — same fat-pointer layout. The
+            // job cannot outlive the borrows it captures because every
+            // handle is joined before this function returns: the normal
+            // path drains `guard.handles` below, and an unwind anywhere
+            // in this loop joins the already-submitted jobs in
+            // `JoinAll::drop` (workers catch unwinds, so the join itself
+            // always completes).
+            let job: Box<dyn FnOnce() + Send + 'static> =
+                unsafe { std::mem::transmute(scoped) };
+            guard.handles.push(self.submit(job));
+        }
+        let mut first_err = None;
+        for h in guard.handles.drain(..) {
+            if let Err(e) = h.join() {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+}
+
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         {
@@ -251,6 +403,75 @@ mod tests {
         assert!(j.try_join().is_none());
         std::thread::sleep(std::time::Duration::from_millis(120));
         assert_eq!(j.try_join().unwrap().unwrap(), 1);
+    }
+
+    #[test]
+    fn scoped_chunks_writes_disjoint_chunks_with_borrowed_state() {
+        let pool = ThreadPool::new(4);
+        let offset = 100usize; // borrowed by the scoped closure
+        let mut data = vec![0usize; 103];
+        pool.scoped_chunks(&mut data, 10, |k, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = offset + k * 10 + i;
+            }
+        })
+        .unwrap();
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, offset + i);
+        }
+    }
+
+    #[test]
+    fn scoped_chunks_single_thread_and_single_chunk_run_inline() {
+        for threads in [1, 3] {
+            let pool = ThreadPool::new(threads);
+            let mut data = vec![1.0f64; 7];
+            pool.scoped_chunks(&mut data, 100, |_, chunk| {
+                for v in chunk {
+                    *v += 1.0;
+                }
+            })
+            .unwrap();
+            assert!(data.iter().all(|&v| v == 2.0));
+            let mut empty: Vec<f64> = Vec::new();
+            pool.scoped_chunks(&mut empty, 4, |_, _| panic!("no chunks"))
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn scoped_chunks_panic_surfaces_as_err_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let mut data = vec![0u32; 40];
+        let err = pool
+            .scoped_chunks(&mut data, 4, |k, chunk| {
+                if k == 3 {
+                    panic!("chunk 3 exploded");
+                }
+                chunk.fill(7);
+            })
+            .unwrap_err();
+        assert!(err.contains("chunk 3 exploded"), "got: {err}");
+        // every other chunk still ran; the pool is reusable
+        assert_eq!(data.iter().filter(|&&v| v == 7).count(), 36);
+        assert_eq!(pool.submit(|| 5).join().unwrap(), 5);
+    }
+
+    #[test]
+    fn scoped_parts_uneven_partition() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0usize; 10];
+        let bounds = [0usize, 1, 1, 6, 10];
+        pool.scoped_parts(&mut data, &bounds, |k, part| {
+            for v in part {
+                *v = k + 1;
+            }
+        })
+        .unwrap();
+        assert_eq!(data, vec![1, 3, 3, 3, 3, 3, 4, 4, 4, 4]);
+        // empty bounds are a no-op
+        let mut empty: [usize; 0] = [];
+        pool.scoped_parts(&mut empty, &[], |_, _| {}).unwrap();
     }
 
     #[test]

@@ -322,17 +322,20 @@ fn cmd_calibrate(args: &Args) -> CmdResult {
         &obj_refs,
         0.01,
     )?;
+    // the coordinator's own stages (variation, crowding, dominance) fan
+    // out over a dedicated pool — never the environment's (whose workers
+    // block while the coordinator joins)
     let mut ga = GenerationalGA::new(config, evaluator, lambda)
         .eval_chunk(chunk)
+        .coordinator_pool(Arc::new(ThreadPool::default_size()))
         .on_generation(|g, pop| {
-        let best: f64 = pop
-            .iter()
-            .map(|i| i.objectives.iter().sum::<f64>())
-            .fold(f64::INFINITY, f64::min);
-        if g % 10 == 0 {
-            println!("Generation {g}: best objective sum {best:.1}");
-        }
-    });
+            let best: f64 = (0..pop.len())
+                .map(|i| pop.objectives_row(i).iter().sum::<f64>())
+                .fold(f64::INFINITY, f64::min);
+            if g % 10 == 0 {
+                println!("Generation {g}: best objective sum {best:.1}");
+            }
+        });
     if let Some(j) = journal_arc {
         ga = ga.journal(j);
     }

@@ -134,11 +134,20 @@ impl Rng {
 
     /// Sample `k` distinct indices out of `n` (k <= n), in random order.
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
-        assert!(k <= n);
-        let mut idx: Vec<usize> = (0..n).collect();
-        self.shuffle(&mut idx);
-        idx.truncate(k);
+        let mut idx = Vec::new();
+        self.sample_indices_into(n, k, &mut idx);
         idx
+    }
+
+    /// [`Rng::sample_indices`] into a caller-owned buffer (identical draw
+    /// order) — the columnar engines recycle the buffer across waves so
+    /// steady-state sampling allocates nothing.
+    pub fn sample_indices_into(&mut self, n: usize, k: usize, out: &mut Vec<usize>) {
+        assert!(k <= n);
+        out.clear();
+        out.extend(0..n);
+        self.shuffle(out);
+        out.truncate(k);
     }
 }
 

@@ -92,6 +92,58 @@ fn prop_selection_keeps_mu_and_never_drops_front0_when_it_fits() {
 }
 
 #[test]
+fn prop_columnar_selection_matches_reference_aos() {
+    // §Perf tentpole acceptance: the columnar PopMatrix/WaveArena
+    // rank+crowding selection must pick the IDENTICAL survivor set as the
+    // retained reference AoS implementation (evolution::reference) on
+    // randomized populations — NaN objectives and duplicate-fitness ties
+    // included. Comparison is bit-level (to_bits), so NaN survivors
+    // compare equal and -0.0/+0.0 would not.
+    use molers::evolution::{reference, PopMatrix, WaveArena};
+    let key = |i: &Individual| -> (Vec<u64>, Vec<u64>, u32) {
+        (
+            i.genome.iter().map(|v| v.to_bits()).collect(),
+            i.objectives.iter().map(|v| v.to_bits()).collect(),
+            i.evaluations,
+        )
+    };
+    forall(80, |rng| {
+        let n = 1 + rng.usize(50);
+        let m = 1 + rng.usize(3);
+        let mu = 1 + rng.usize(n);
+        // coarse grid values force duplicate fitness ties; ~7% NaN
+        let mut pop: Vec<Individual> = (0..n)
+            .map(|_| {
+                let objs: Vec<f64> = (0..m)
+                    .map(|_| {
+                        if rng.bool(0.07) {
+                            f64::NAN
+                        } else {
+                            f64::from(rng.usize(4) as u32)
+                        }
+                    })
+                    .collect();
+                Individual::new(vec![rng.f64(), rng.f64()], objs)
+            })
+            .collect();
+        // and some exact whole-vector duplicates
+        if n > 3 {
+            let dup = pop[0].objectives.clone();
+            pop[n / 2].objectives = dup.clone();
+            pop[n - 1].objectives = dup;
+        }
+
+        let mut matrix = PopMatrix::from_individuals(&pop, 2, m).unwrap();
+        let mut arena = WaveArena::default();
+        arena.select(&mut matrix, mu, None);
+        let got: Vec<_> = matrix.to_individuals().iter().map(key).collect();
+
+        let want: Vec<_> = reference::select(pop, mu).iter().map(key).collect();
+        assert_eq!(got, want, "columnar survivors diverged (n={n} m={m} mu={mu})");
+    });
+}
+
+#[test]
 fn prop_breeding_respects_bounds() {
     let d = val_f64("d");
     let e = val_f64("e");
