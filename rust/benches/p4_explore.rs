@@ -1,0 +1,159 @@
+//! P4 (§Exploration): plain design of experiments at the paper's
+//! calibration scale. PR 3 proved a 200k-individual GA wave runs
+//! allocation-free; this bench pins the same property for plain sweeps —
+//! the workload the paper's title actually leads with. A steady-state
+//! *explore wave* (clear the design matrix, regenerate the sampling,
+//! evaluate every row through `evaluate_rows`) must perform **zero** heap
+//! allocations, measured by the same counting global allocator as
+//! `p2_scale` (`explore_wave_allocations`, acceptance 0, gated in CI).
+//!
+//! Knobs: `P4_EXPLORE_N` (design rows, default 200000; CI smoke uses a
+//! small value), `P4_EXPLORE_CHUNK` (rows per evaluation chunk, default
+//! 4096), `BENCH_OUT_DIR`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use molers::bench::Bench;
+use molers::core::val_f64;
+use molers::evolution::{Evaluator, PooledEvaluator, RowsView, Zdt1Evaluator};
+use molers::exploration::{row_seed, LhsSampling, SampleMatrix, Sampling, SobolSampling};
+use molers::util::Rng;
+
+/// Counting global allocator (see `p2_scale`): the zero-allocation claim
+/// is measured, not asserted.
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let n = env_usize("P4_EXPLORE_N", 200_000);
+    let chunk = env_usize("P4_EXPLORE_CHUNK", 4096);
+    let dim = 6;
+    let threads = std::thread::available_parallelism()
+        .map(|t| t.get())
+        .unwrap_or(4);
+    println!("design: {n} rows x {dim} dims, chunk {chunk}, {threads} threads");
+
+    let mut b = Bench::new("p4_explore").warmup(1).samples(3);
+
+    let vals: Vec<_> = (0..dim).map(|d| val_f64(&format!("x{d}"))).collect();
+    let spec: Vec<_> = vals.iter().map(|v| (v, 0.0, 1.0)).collect();
+    let lhs = LhsSampling::new(&spec, n);
+    let sobol = SobolSampling::new(&spec, n);
+    let serial = Zdt1Evaluator { dim };
+    let pooled = PooledEvaluator::with_threads(Arc::new(Zdt1Evaluator { dim }), threads);
+
+    // stage 1: design generation into a recycled matrix
+    let mut design = SampleMatrix::new(lhs.columns());
+    let mut rng = Rng::new(150_604_182);
+    let lhs_s = {
+        let m = b.case("sample_lhs", || {
+            design.clear();
+            lhs.sample_into(&mut design, &mut rng).unwrap();
+        });
+        m.median_s()
+    };
+    b.metric("samples_per_s_lhs", n as f64 / lhs_s, "rows/s");
+
+    let mut sobol_design = SampleMatrix::new(sobol.columns());
+    let sobol_s = {
+        let m = b.case("sample_sobol", || {
+            sobol_design.clear();
+            sobol.sample_into(&mut sobol_design, &mut rng).unwrap();
+        });
+        m.median_s()
+    };
+    b.metric("samples_per_s_sobol", n as f64 / sobol_s, "rows/s");
+
+    // stage 2: the full explore wave — regenerate the design, evaluate
+    // every row in chunk-sized evaluate_rows calls into preallocated
+    // objective rows. One matrix + one objective buffer, recycled forever.
+    let seeds: Vec<u32> = (0..n).map(|r| row_seed(42, r)).collect();
+    let mut objectives = vec![0.0f64; n * 2];
+    let wave = |design: &mut SampleMatrix,
+                rng: &mut Rng,
+                objectives: &mut [f64],
+                eval: &dyn Evaluator| {
+        design.clear();
+        lhs.sample_into(design, rng).unwrap();
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + chunk).min(n);
+            eval.evaluate_rows(
+                RowsView::new(design.rows_slice(lo, hi), dim),
+                &seeds[lo..hi],
+                &mut objectives[lo * 2..hi * 2],
+            )
+            .unwrap();
+            lo = hi;
+        }
+    };
+
+    let wave_serial_s = {
+        let m = b.case("explore_wave", || {
+            wave(&mut design, &mut rng, &mut objectives, &serial)
+        });
+        m.median_s()
+    };
+    // count allocations across pure steady-state waves (outside b.case,
+    // whose own bookkeeping allocates)
+    let before = ALLOCATIONS.load(Ordering::Relaxed);
+    for _ in 0..3 {
+        wave(&mut design, &mut rng, &mut objectives, &serial);
+    }
+    let wave_allocs = ALLOCATIONS.load(Ordering::Relaxed) - before;
+    b.metric(
+        "explore_wave_allocations",
+        wave_allocs as f64,
+        "allocs in 3 steady-state explore waves (acceptance: 0)",
+    );
+    b.metric("explore_rows_per_s", n as f64 / wave_serial_s, "rows/s");
+    b.metric("explore_wave_s", wave_serial_s, "s");
+
+    // parallel wave: same shape, workers writing disjoint objective rows
+    let wave_pooled_s = {
+        let m = b.case("explore_wave_pooled", || {
+            wave(&mut design, &mut rng, &mut objectives, &pooled)
+        });
+        m.median_s()
+    };
+    b.metric("explore_pool_speedup", wave_serial_s / wave_pooled_s, "x");
+    b.metric("explore_rows", n as f64, "rows");
+
+    if let Err(e) = b.write_json() {
+        eprintln!("could not write bench json: {e}");
+    }
+}

@@ -64,6 +64,21 @@ const CHECKS: &[Check] = &[
         higher_is_better: false,
         tolerance: 2.0,
     },
+    Check {
+        suite: "p4_explore",
+        metric: "p4_explore/explore_wave_s",
+        higher_is_better: false,
+        tolerance: 2.0,
+    },
+    // like wave_reuse_allocations: baseline 0, so the bound is exactly
+    // zero steady-state allocations at any design size — the structural
+    // §Exploration claim, load-bearing even in CI's reduced mode
+    Check {
+        suite: "p4_explore",
+        metric: "p4_explore/explore_wave_allocations",
+        higher_is_better: false,
+        tolerance: 2.0,
+    },
 ];
 
 fn load_suite(dir: &Path, suite: &str) -> Option<Json> {

@@ -294,6 +294,72 @@ pub fn archive_record(evaluations: u64, population: &[Individual]) -> Json {
     archive_record_with(evaluations, population_json(population))
 }
 
+/// `sample_block` checkpoint of an explore sweep (§Exploration): the
+/// evaluated objective rows of design rows
+/// `first_row .. first_row + rows`. The design itself is never journaled —
+/// it regenerates deterministically from the sweep's sampling + seed — so
+/// a block is just its position and the objectives:
+///
+/// ```text
+/// {"kind":"sample_block","first_row":512,"rows":2,"clock":88.5,"objectives":[[0.5,3.1],[0.25,2.0]]}
+/// ```
+///
+/// Objectives round-trip exactly (shortest-representation floats), which
+/// is what makes a resumed sweep's result file byte-identical to an
+/// uninterrupted run's.
+pub fn sample_block_record(
+    first_row: usize,
+    n_obj: usize,
+    objectives: &[f64],
+    clock: f64,
+) -> Json {
+    debug_assert!(n_obj > 0 && objectives.len() % n_obj == 0);
+    obj(vec![
+        ("kind", Json::Str("sample_block".into())),
+        ("first_row", Json::Num(first_row as f64)),
+        ("rows", Json::Num((objectives.len() / n_obj.max(1)) as f64)),
+        ("clock", Json::Num(clock)),
+        (
+            "objectives",
+            Json::Arr(objectives.chunks(n_obj.max(1)).map(f64_arr).collect()),
+        ),
+    ])
+}
+
+/// One parsed sweep checkpoint block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SampleBlock {
+    pub first_row: usize,
+    /// One objective vector per design row of the block.
+    pub objectives: Vec<Vec<f64>>,
+    pub clock: f64,
+}
+
+fn parse_sample_block(rec: &Json) -> Option<SampleBlock> {
+    Some(SampleBlock {
+        first_row: rec.get("first_row")?.as_f64()? as usize,
+        objectives: rec
+            .get("objectives")?
+            .as_arr()?
+            .iter()
+            .map(parse_f64_arr)
+            .collect::<Option<Vec<_>>>()?,
+        clock: rec.get("clock")?.as_f64()?,
+    })
+}
+
+/// Every well-formed `sample_block` in a sweep journal, in write order. A
+/// malformed block is dropped rather than fatal: the sweep simply
+/// re-evaluates those rows (deterministic per-row seeds make the redo
+/// value-identical).
+pub fn sample_blocks(records: &[Json]) -> Vec<SampleBlock> {
+    records
+        .iter()
+        .filter(|r| kind(r) == Some("sample_block"))
+        .filter_map(parse_sample_block)
+        .collect()
+}
+
 /// `env_stats` record.
 pub fn env_stats_record(env: &str, s: &EnvStats) -> Json {
     obj(vec![
@@ -513,6 +579,60 @@ mod tests {
         assert_eq!(population, pop());
         assert!(resume_state(&records).is_none(), "no generation records");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn sample_block_round_trips_exactly() {
+        let path = tmp("sweep");
+        let j = Journal::create(&path).unwrap();
+        let objs = [0.5, std::f64::consts::PI, 0.1000000000000001, 2.0];
+        j.append(&run_start("explore", 9, vec![("n", Json::Num(4.0))]))
+            .unwrap();
+        j.append(&sample_block_record(6, 2, &objs, 123.456)).unwrap();
+        j.append(&sample_block_record(0, 2, &objs[..2], 99.0)).unwrap();
+        let records = Journal::load(&path).unwrap();
+        let blocks = sample_blocks(&records);
+        assert_eq!(blocks.len(), 2);
+        assert_eq!(blocks[0].first_row, 6);
+        assert_eq!(blocks[0].clock, 123.456);
+        assert_eq!(
+            blocks[0].objectives,
+            vec![vec![0.5, std::f64::consts::PI], vec![0.1000000000000001, 2.0]],
+            "objectives must round-trip bit-exactly"
+        );
+        assert_eq!(blocks[1].first_row, 0);
+        assert_eq!(blocks[1].objectives.len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn non_finite_objectives_keep_the_journal_loadable() {
+        // NaN serialises as null (not bare NaN, which is not JSON): the
+        // journal stays loadable, the strict row parser drops just that
+        // block, and the sweep re-evaluates those rows on resume
+        let path = tmp("nan");
+        let j = Journal::create(&path).unwrap();
+        j.append(&sample_block_record(0, 2, &[0.5, f64::NAN], 1.0))
+            .unwrap();
+        j.append(&sample_block_record(2, 2, &[1.0, 2.0], 2.0)).unwrap();
+        let records = Journal::load(&path).expect("journal must stay loadable");
+        let blocks = sample_blocks(&records);
+        assert_eq!(blocks.len(), 1, "NaN block dropped, finite block kept");
+        assert_eq!(blocks[0].first_row, 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn malformed_sample_block_is_skipped_not_fatal() {
+        let good = sample_block_record(0, 1, &[1.5], 1.0);
+        let bad = parse(
+            "{\"kind\":\"sample_block\",\"first_row\":2,\"rows\":1,\
+             \"clock\":1.0,\"objectives\":[[0.5,null]]}",
+        )
+        .unwrap();
+        let blocks = sample_blocks(&[bad, good]);
+        assert_eq!(blocks.len(), 1, "type-corrupted block must be dropped");
+        assert_eq!(blocks[0].first_row, 0);
     }
 
     #[test]

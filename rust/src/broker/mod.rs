@@ -42,7 +42,7 @@ pub mod policy;
 
 pub use fault::FlakyEnv;
 pub use health::{CircuitConfig, Health};
-pub use journal::{Journal, ResumeState};
+pub use journal::{Journal, ResumeState, SampleBlock};
 pub use policy::{
     BackendView, DispatchPolicy, EwmaPolicy, LeastInFlight, RoundRobin,
 };

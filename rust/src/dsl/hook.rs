@@ -190,6 +190,128 @@ impl Hook for CsvHook {
     }
 }
 
+/// Output encoding of a [`RowWriter`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TableFormat {
+    /// Header line + one comma-separated row per sample.
+    Csv,
+    /// One `{"col":value,...}` JSON object per line (column order kept).
+    Jsonl,
+}
+
+/// Streaming CSV/JSONL result writer (§Exploration): one line per design
+/// row, written in row order through a buffered file. Two entry points:
+///
+/// * [`RowWriter::append_row`] — the columnar fast path the sweep engine
+///   drains completed sample blocks through (a `&[f64]` row, no per-row
+///   `Context`);
+/// * the [`Hook`] impl — the DSL edge: each processed context contributes
+///   one row, columns read as `f64` (integer values coerce).
+///
+/// Floats are written with the shortest round-trip representation (the
+/// same `{}` formatting the journal uses), so a result file rebuilt from
+/// journaled objectives is byte-identical to one written live — the
+/// property `molers explore --resume` relies on.
+pub struct RowWriter {
+    format: TableFormat,
+    columns: Vec<String>,
+    file: Mutex<std::io::BufWriter<std::fs::File>>,
+}
+
+impl RowWriter {
+    /// Create (truncating) `path` and write the CSV header when the
+    /// format calls for one.
+    pub fn create(
+        path: impl Into<PathBuf>,
+        format: TableFormat,
+        columns: &[&str],
+    ) -> Result<Self> {
+        let path = path.into();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let file = std::fs::File::create(&path)?;
+        let mut file = std::io::BufWriter::with_capacity(1 << 16, file);
+        if format == TableFormat::Csv {
+            writeln!(file, "{}", columns.join(","))?;
+        }
+        Ok(RowWriter {
+            format,
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            file: Mutex::new(file),
+        })
+    }
+
+    pub fn columns(&self) -> &[String] {
+        &self.columns
+    }
+
+    /// Append one row; `values` must carry one value per column.
+    pub fn append_row(&self, values: &[f64]) -> Result<()> {
+        if values.len() != self.columns.len() {
+            return Err(crate::error::Error::InvalidWorkflow(format!(
+                "row has {} values for {} columns",
+                values.len(),
+                self.columns.len()
+            )));
+        }
+        let mut f = self.file.lock().unwrap();
+        match self.format {
+            TableFormat::Csv => {
+                for (i, v) in values.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                writeln!(f)?;
+            }
+            TableFormat::Jsonl => {
+                write!(f, "{{")?;
+                for (i, (name, v)) in self.columns.iter().zip(values).enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    // column names are plain identifiers; quote directly.
+                    // NaN/inf are not JSON — emit null so the line stays
+                    // parseable (CSV keeps the raw text form).
+                    if v.is_finite() {
+                        write!(f, "\"{name}\":{v}")?;
+                    } else {
+                        write!(f, "\"{name}\":null")?;
+                    }
+                }
+                writeln!(f, "}}")?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Flush buffered rows to disk (the sweep calls this after each
+    /// drained block so the file trails the journal by at most a buffer).
+    pub fn flush(&self) -> Result<()> {
+        self.file.lock().unwrap().flush()?;
+        Ok(())
+    }
+}
+
+impl Hook for RowWriter {
+    fn name(&self) -> &str {
+        "RowWriter"
+    }
+
+    fn process(&self, ctx: &Context) -> Result<()> {
+        let values: Vec<f64> = self
+            .columns
+            .iter()
+            .map(|c| ctx.get(&Val::<f64>::new(c.clone())))
+            .collect::<Result<_>>()?;
+        self.append_row(&values)
+    }
+}
+
 /// Collect every processed context in memory (tests + result harvesting).
 #[derive(Clone, Default)]
 pub struct CaptureHook {
@@ -267,6 +389,53 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text, "a,b\n1,2\n3,4\n");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn row_writer_csv_bytes() {
+        let path = std::env::temp_dir()
+            .join(format!("molers-roww-{}.csv", std::process::id()));
+        {
+            let w = RowWriter::create(&path, TableFormat::Csv, &["x", "f"]).unwrap();
+            w.append_row(&[0.5, 2.0]).unwrap();
+            w.append_row(&[1.25, std::f64::consts::PI]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "x,f\n0.5,2\n1.25,3.141592653589793\n");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn row_writer_jsonl_parses_back() {
+        let path = std::env::temp_dir()
+            .join(format!("molers-roww-{}.jsonl", std::process::id()));
+        {
+            let w = RowWriter::create(&path, TableFormat::Jsonl, &["x", "f"]).unwrap();
+            w.append_row(&[0.5, 2.0]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "{\"x\":0.5,\"f\":2}\n");
+        let doc = crate::util::json::parse(text.trim()).unwrap();
+        assert_eq!(doc.get("x").unwrap().as_f64(), Some(0.5));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn row_writer_rejects_ragged_rows_and_serves_as_hook() {
+        let path = std::env::temp_dir()
+            .join(format!("molers-roww-hook-{}.csv", std::process::id()));
+        let w = RowWriter::create(&path, TableFormat::Csv, &["a", "b"]).unwrap();
+        assert!(w.append_row(&[1.0]).is_err());
+        let a = val_f64("a");
+        let ctx = Context::new().with(&a, 1.5).with(&val_f64("b"), 2.5);
+        w.process(&ctx).unwrap();
+        assert!(w.process(&Context::new().with(&a, 1.0)).is_err(), "missing b");
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1.5,2.5\n");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -10,7 +10,10 @@ pub mod source;
 pub mod system_exec;
 pub mod task;
 
-pub use hook::{CaptureHook, CsvHook, DisplayHook, Hook, Sink, ToStringHook};
+pub use hook::{
+    CaptureHook, CsvHook, DisplayHook, Hook, RowWriter, Sink, TableFormat,
+    ToStringHook,
+};
 pub use puzzle::{Capsule, CapsuleId, Puzzle, Transition};
 pub use source::{ConstantSource, CsvSource, Source};
 pub use system_exec::SystemExecTask;

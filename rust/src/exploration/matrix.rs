@@ -1,0 +1,279 @@
+//! Columnar sample storage (§Exploration tentpole): a design of
+//! experiments is a [`SampleMatrix`] — one contiguous row-major `f64`
+//! matrix whose columns are the sampled variables — instead of a
+//! `Vec<Context>` of per-sample clones. This is the exploration twin of
+//! [`crate::evolution::popmatrix::PopMatrix`]: same memory layout, same
+//! arena discipline (`clear`/`grow_rows` never release capacity, scratch
+//! buffers live with the matrix and are recycled wave after wave), so a
+//! steady-state sample wave — clear, regenerate the design, evaluate —
+//! performs **zero** heap allocations (measured by the counting global
+//! allocator in `cargo bench --bench p4_explore`).
+//!
+//! The `Context` representation survives only at the DSL edges:
+//! [`SampleMatrix::context_row`] materialises one sample as a context when
+//! a workflow capsule actually needs it, which is how the scheduler
+//! streams a 200k-row design without ever holding 200k cloned contexts.
+
+use crate::core::{Context, Value};
+use crate::error::{Error, Result};
+
+/// Runtime type of one design column. Values are stored as `f64` either
+/// way (`u32` round-trips exactly through `f64`); the kind decides what a
+/// context edge materialises — [`SeedSampling`](crate::exploration::SeedSampling)
+/// columns must surface as the `u32` model seeds tasks declare.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColumnKind {
+    F64,
+    U32,
+}
+
+/// Name + kind of one design column.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Column {
+    pub name: String,
+    pub kind: ColumnKind,
+}
+
+impl Column {
+    pub fn f64(name: impl Into<String>) -> Self {
+        Column {
+            name: name.into(),
+            kind: ColumnKind::F64,
+        }
+    }
+
+    pub fn u32(name: impl Into<String>) -> Self {
+        Column {
+            name: name.into(),
+            kind: ColumnKind::U32,
+        }
+    }
+}
+
+/// A design of experiments as a row-major matrix: row `i` is sample `i`,
+/// column `d` is the `d`-th sampled variable. Mutation never releases
+/// capacity, and the embedded scratch buffers let samplings (LHS strata
+/// shuffles, Sobol per-dimension state) run allocation-free once the
+/// matrix has been through one wave.
+#[derive(Debug, Clone)]
+pub struct SampleMatrix {
+    columns: Vec<Column>,
+    rows: usize,
+    data: Vec<f64>,
+    /// Index scratch (LHS stratum shuffles, factorial level counts) —
+    /// recycled across dimensions and waves.
+    pub idx_scratch: Vec<usize>,
+    /// Integer-state scratch (Sobol per-dimension sequence state).
+    pub u64_scratch: Vec<u64>,
+}
+
+impl SampleMatrix {
+    pub fn new(columns: Vec<Column>) -> Self {
+        SampleMatrix {
+            columns,
+            rows: 0,
+            data: Vec::new(),
+            idx_scratch: Vec::new(),
+            u64_scratch: Vec::new(),
+        }
+    }
+
+    pub fn with_capacity(columns: Vec<Column>, rows: usize) -> Self {
+        let dim = columns.len();
+        SampleMatrix {
+            columns,
+            rows: 0,
+            data: Vec::with_capacity(rows * dim),
+            idx_scratch: Vec::new(),
+            u64_scratch: Vec::new(),
+        }
+    }
+
+    pub fn columns(&self) -> &[Column] {
+        &self.columns
+    }
+
+    /// Column names in order (result-file headers).
+    pub fn column_names(&self) -> impl Iterator<Item = &str> {
+        self.columns.iter().map(|c| c.name.as_str())
+    }
+
+    /// Number of columns.
+    pub fn dim(&self) -> usize {
+        self.columns.len()
+    }
+
+    /// Number of sample rows.
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Drop all rows, keeping capacity (and scratch) for the next wave.
+    pub fn clear(&mut self) {
+        self.rows = 0;
+        self.data.clear();
+    }
+
+    /// Append `n` zero-filled rows (about to be written by a sampling);
+    /// returns the index of the first new row. Reuses capacity.
+    pub fn grow_rows(&mut self, n: usize) -> usize {
+        let first = self.rows;
+        self.rows += n;
+        self.data.resize(self.rows * self.dim(), 0.0);
+        first
+    }
+
+    /// Append one row.
+    pub fn push_row(&mut self, row: &[f64]) {
+        debug_assert_eq!(row.len(), self.dim());
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        let d = self.dim();
+        &self.data[i * d..(i + 1) * d]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        let d = self.dim();
+        &mut self.data[i * d..(i + 1) * d]
+    }
+
+    /// Rows `lo..hi` as one contiguous row-major slice — the shape an
+    /// `evaluate_rows` chunk job consumes.
+    pub fn rows_slice(&self, lo: usize, hi: usize) -> &[f64] {
+        let d = self.dim();
+        &self.data[lo * d..hi * d]
+    }
+
+    /// The whole matrix, row-major.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Materialise row `i` as a context merged over `base` (the DSL edge:
+    /// one cloned context per *submitted* job, never per design row).
+    pub fn context_row(&self, i: usize, base: &Context) -> Context {
+        let mut ctx = base.clone();
+        for (c, &v) in self.columns.iter().zip(self.row(i)) {
+            let value = match c.kind {
+                ColumnKind::F64 => Value::F64(v),
+                ColumnKind::U32 => Value::U32(v as u32),
+            };
+            ctx.set_raw(&c.name, value);
+        }
+        ctx
+    }
+
+    /// Materialise the whole design as contexts (legacy edge adapter —
+    /// allocates one context per row; the streaming paths never call it).
+    pub fn to_contexts(&self, base: &Context) -> Vec<Context> {
+        (0..self.rows).map(|i| self.context_row(i, base)).collect()
+    }
+
+    /// Error unless `expected` describes this matrix's columns (the
+    /// contract every `sample_into` implementation checks before writing).
+    pub fn check_columns(&self, expected: &[Column], sampling: &str) -> Result<()> {
+        self.check_columns_iter(
+            expected.iter().map(|c| (c.name.as_str(), c.kind)),
+            sampling,
+        )
+    }
+
+    /// Allocation-free twin of [`SampleMatrix::check_columns`]: samplings
+    /// on the steady-state wave path stream their column spec instead of
+    /// building a `Vec<Column>` per call (only the error path formats).
+    pub fn check_columns_iter<'a>(
+        &self,
+        expected: impl ExactSizeIterator<Item = (&'a str, ColumnKind)> + Clone,
+        sampling: &str,
+    ) -> Result<()> {
+        let ok = expected.len() == self.columns.len()
+            && expected
+                .clone()
+                .zip(&self.columns)
+                .all(|((name, kind), c)| c.name == name && c.kind == kind);
+        if ok {
+            return Ok(());
+        }
+        Err(Error::InvalidWorkflow(format!(
+            "sampling `{sampling}` writes columns {:?}, matrix has {:?}",
+            expected.map(|(n, _)| n).collect::<Vec<_>>(),
+            self.columns.iter().map(|c| c.name.as_str()).collect::<Vec<_>>(),
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{val_f64, val_u32};
+
+    fn xy() -> Vec<Column> {
+        vec![Column::f64("x"), Column::u32("s")]
+    }
+
+    #[test]
+    fn rows_round_trip() {
+        let mut m = SampleMatrix::new(xy());
+        m.push_row(&[0.5, 7.0]);
+        m.push_row(&[1.5, 9.0]);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.dim(), 2);
+        assert_eq!(m.row(1), &[1.5, 9.0]);
+        assert_eq!(m.rows_slice(0, 2), &[0.5, 7.0, 1.5, 9.0]);
+    }
+
+    #[test]
+    fn context_row_respects_column_kinds() {
+        let mut m = SampleMatrix::new(xy());
+        m.push_row(&[2.5, 4294967295.0]); // u32::MAX round-trips through f64
+        let base = Context::new().with(&val_f64("z"), 9.0);
+        let ctx = m.context_row(0, &base);
+        assert_eq!(ctx.get(&val_f64("x")).unwrap(), 2.5);
+        assert_eq!(ctx.get(&val_u32("s")).unwrap(), u32::MAX);
+        assert_eq!(ctx.get(&val_f64("z")).unwrap(), 9.0, "base preserved");
+    }
+
+    #[test]
+    fn clear_and_grow_reuse_capacity() {
+        let mut m = SampleMatrix::new(xy());
+        let first = m.grow_rows(8);
+        assert_eq!(first, 0);
+        assert_eq!(m.len(), 8);
+        m.row_mut(7)[0] = 3.0;
+        let cap = m.data.capacity();
+        m.clear();
+        assert!(m.is_empty());
+        let first = m.grow_rows(8);
+        assert_eq!(first, 0);
+        assert_eq!(m.row(7)[0], 0.0, "grown rows are zeroed");
+        assert_eq!(m.data.capacity(), cap, "clear+grow must not reallocate");
+    }
+
+    #[test]
+    fn check_columns_rejects_mismatch() {
+        let m = SampleMatrix::new(xy());
+        assert!(m.check_columns(&xy(), "s").is_ok());
+        assert!(m.check_columns(&[Column::f64("x")], "s").is_err());
+        assert!(m
+            .check_columns(&[Column::f64("x"), Column::f64("s")], "s")
+            .is_err());
+    }
+
+    #[test]
+    fn zero_column_matrix_counts_rows() {
+        // a FullFactorial with no factors still yields one (empty) sample
+        let mut m = SampleMatrix::new(Vec::new());
+        m.grow_rows(1);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.row(0), &[] as &[f64]);
+        let ctx = m.context_row(0, &Context::new());
+        assert!(ctx.is_empty());
+    }
+}

@@ -1,12 +1,17 @@
-//! Model exploration: samplings (DoE), replication, statistics.
+//! Model exploration: samplings (DoE), the columnar sample engine,
+//! broker-distributed sweeps, replication, statistics.
 
+pub mod matrix;
 pub mod replication;
 pub mod sampling;
 pub mod statistics;
+pub mod sweep;
 
+pub use matrix::{Column, ColumnKind, SampleMatrix};
 pub use replication::replicate;
 pub use sampling::{
     ExplicitSampling, Factor, FullFactorial, LhsSampling, ProductSampling,
-    Sampling, SeedSampling, UniformSampling,
+    Sampling, SeedSampling, SobolSampling, UniformSampling, SOBOL_MAX_DIM,
 };
 pub use statistics::StatisticTask;
+pub use sweep::{row_seed, Sweep, SweepResult};

@@ -1,18 +1,93 @@
-//! Samplings: generators of parameter-set contexts (the paper's "generic
+//! Samplings: generators of parameter designs (the paper's "generic
 //! tools to explore large parameter sets", §2).
+//!
+//! §Exploration tentpole: the primary product of a sampling is a columnar
+//! [`SampleMatrix`] written through the streaming
+//! [`Sampling::sample_into`] API — contiguous `f64` columns, scratch
+//! recycled through the matrix's arena, zero steady-state allocations.
+//! The historical `Vec<Context>` path ([`Sampling::sample`]) survives as a
+//! thin edge adapter over the matrix for the DSL; context-only samplings
+//! (e.g. [`ExplicitSampling`]) keep overriding it directly and report no
+//! columns.
+//!
+//! Bound semantics: every continuous sampling draws from the **half-open**
+//! interval `[lo, hi)` (see [`Rng::range`]); stratified samplings (LHS,
+//! Sobol) clamp the floating-point mapping so a value can never round up
+//! onto `hi`.
 
 use std::sync::Arc;
 
 use crate::core::{Context, Val};
+use crate::error::{Error, Result};
+use crate::exploration::matrix::{Column, ColumnKind, SampleMatrix};
+use crate::util::rng::unit_to_range;
 use crate::util::Rng;
 
-/// A design of experiments: expands one context into many.
+/// A design of experiments: expands one context into many samples.
+///
+/// Columnar samplings implement [`Sampling::columns`] +
+/// [`Sampling::sample_into`] and inherit the context path; context-only
+/// samplings override [`Sampling::sample`] and report no columns.
 pub trait Sampling: Send + Sync {
     fn name(&self) -> &str;
 
-    /// Produce the sample contexts. Each is merged over the incoming
-    /// context by the engine before fan-out.
-    fn sample(&self, base: &Context, rng: &mut Rng) -> Vec<Context>;
+    /// Column spec of the columnar path. Empty means the sampling is
+    /// context-only and callers must go through [`Sampling::sample`].
+    fn columns(&self) -> Vec<Column> {
+        Vec::new()
+    }
+
+    /// Whether the streaming matrix path is available.
+    fn is_columnar(&self) -> bool {
+        !self.columns().is_empty()
+    }
+
+    /// Number of rows one [`Sampling::sample_into`] call appends, when it
+    /// is known without sampling (drives preallocation and progress).
+    fn size_hint(&self) -> Option<usize> {
+        None
+    }
+
+    /// Streaming columnar path: append the whole design to `out`, whose
+    /// columns must match [`Sampling::columns`]. Implementations draw
+    /// scratch space from the matrix's arena so steady-state waves
+    /// (`clear` + `sample_into`) allocate nothing.
+    fn sample_into(&self, out: &mut SampleMatrix, rng: &mut Rng) -> Result<()> {
+        let _ = (out, rng);
+        Err(Error::InvalidWorkflow(format!(
+            "sampling `{}` has no columnar path",
+            self.name()
+        )))
+    }
+
+    /// Produce the sample contexts — the DSL edge adapter. Each sample is
+    /// the incoming context with the design columns merged over it. The
+    /// default routes through [`Sampling::sample_into`], so both paths
+    /// produce identical designs from the same RNG stream (pinned by the
+    /// `prop_sample_into_matches_context_path` property test).
+    fn sample(&self, base: &Context, rng: &mut Rng) -> Vec<Context> {
+        sample_via_matrix(self, base, rng)
+    }
+}
+
+/// The matrix→contexts edge adapter shared by the trait default and any
+/// columnar `sample` override (an override cannot call the trait default
+/// back): run `sample_into`, materialise contexts over `base`.
+pub fn sample_via_matrix<S: Sampling + ?Sized>(
+    sampling: &S,
+    base: &Context,
+    rng: &mut Rng,
+) -> Vec<Context> {
+    let mut m = SampleMatrix::new(sampling.columns());
+    match sampling.sample_into(&mut m, rng) {
+        Ok(()) => m.to_contexts(base),
+        Err(e) => {
+            // this signature cannot carry an error; surface the cause
+            // before the caller reports an empty design
+            eprintln!("sampling `{}` failed: {e}", sampling.name());
+            Vec::new()
+        }
+    }
 }
 
 /// One factor of a full-factorial design: `x in (lo to hi by step)`.
@@ -35,19 +110,59 @@ impl Factor {
         }
     }
 
-    fn levels(&self) -> Vec<f64> {
-        let mut out = Vec::new();
-        let mut x = self.lo;
-        let eps = self.step * 1e-9;
-        while x <= self.hi + eps {
-            out.push(x.min(self.hi));
-            x += self.step;
+    /// Grid membership predicate shared by [`Factor::level_count`] and
+    /// [`Factor::level`]: level `i` exists iff `lo + i·step ≤ hi + eps`.
+    #[inline]
+    fn on_grid(&self, i: usize) -> bool {
+        self.lo + i as f64 * self.step <= self.hi + self.step * 1e-9
+    }
+
+    /// Number of grid levels, computed in O(1) without materialising
+    /// them. Closed-form estimate corrected against the exact
+    /// [`Factor::on_grid`] predicate, so it agrees with
+    /// [`Factor::level`]/`sample` for every range — including long ones
+    /// like `(0 to 1000 by 0.1)` where the historical `x += step`
+    /// accumulation drifted off-grid and could gain or lose a level.
+    pub fn level_count(&self) -> usize {
+        if self.hi < self.lo {
+            return 0;
         }
-        out
+        if !self.step.is_finite() || !(self.hi - self.lo).is_finite() {
+            // degenerate inputs (infinite step or range): exactly one
+            // well-defined level, `lo` — and no correction loop to hang in
+            return 1;
+        }
+        let est = ((self.hi - self.lo) / self.step).floor().max(0.0);
+        if est >= 9.0e15 {
+            // beyond exact-integer f64 territory (and any materialisable
+            // design) there is no ±1 to correct, and the cast/loop
+            // arithmetic below would saturate or fail to terminate
+            return est.min(usize::MAX as f64) as usize;
+        }
+        let mut k = est as usize;
+        while self.on_grid(k + 1) {
+            k += 1;
+        }
+        while k > 0 && !self.on_grid(k) {
+            k -= 1;
+        }
+        k + 1
+    }
+
+    /// Level `i` as `lo + i·step` — direct indexing, no accumulated
+    /// floating-point error — clamped to `hi` so the top level never
+    /// overshoots the bound by rounding.
+    pub fn level(&self, i: usize) -> f64 {
+        (self.lo + i as f64 * self.step).min(self.hi)
+    }
+
+    fn levels(&self) -> Vec<f64> {
+        (0..self.level_count()).map(|i| self.level(i)).collect()
     }
 }
 
-/// Cartesian product of factor levels (`DirectSampling` x-product).
+/// Cartesian product of factor levels (`DirectSampling` x-product). The
+/// last factor varies fastest, matching the DSL's nested-loop reading.
 pub struct FullFactorial {
     factors: Vec<Factor>,
 }
@@ -57,8 +172,14 @@ impl FullFactorial {
         FullFactorial { factors }
     }
 
+    /// Total design size, counted without allocating any level vector —
+    /// exactly `sample().len()` by construction (both sides use
+    /// [`Factor::level_count`]). Saturates instead of overflowing for
+    /// absurd grids.
     pub fn size(&self) -> usize {
-        self.factors.iter().map(|f| f.levels().len()).product()
+        self.factors
+            .iter()
+            .fold(1usize, |acc, f| acc.saturating_mul(f.level_count()))
     }
 }
 
@@ -67,38 +188,61 @@ impl Sampling for FullFactorial {
         "FullFactorial"
     }
 
-    fn sample(&self, base: &Context, _rng: &mut Rng) -> Vec<Context> {
-        let levels: Vec<Vec<f64>> = self.factors.iter().map(Factor::levels).collect();
-        let mut out = vec![base.clone()];
-        for (f, ls) in self.factors.iter().zip(&levels) {
-            let mut next = Vec::with_capacity(out.len() * ls.len());
-            for ctx in &out {
-                for &v in ls {
-                    let mut c = ctx.clone();
-                    c.set(&Val::<f64>::new(f.name.clone()), v);
-                    next.push(c);
-                }
+    fn columns(&self) -> Vec<Column> {
+        self.factors.iter().map(|f| Column::f64(&f.name)).collect()
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.size())
+    }
+
+    fn sample_into(&self, out: &mut SampleMatrix, _rng: &mut Rng) -> Result<()> {
+        out.check_columns_iter(
+            self.factors.iter().map(|f| (f.name.as_str(), ColumnKind::F64)),
+            self.name(),
+        )?;
+        // per-factor level counts in the matrix's index scratch
+        let mut counts = std::mem::take(&mut out.idx_scratch);
+        counts.clear();
+        counts.extend(self.factors.iter().map(Factor::level_count));
+        let total = counts.iter().fold(1usize, |acc, &c| acc.saturating_mul(c));
+        let start = out.grow_rows(total);
+        for r in 0..total {
+            let row = out.row_mut(start + r);
+            // mixed-radix decode, last factor least significant (fastest)
+            let mut rem = r;
+            for d in (0..self.factors.len()).rev() {
+                row[d] = self.factors[d].level(rem % counts[d]);
+                rem /= counts[d];
             }
-            out = next;
         }
-        out
+        out.idx_scratch = counts;
+        Ok(())
     }
 }
 
-/// `x in UniformDistribution[Double]() take n` over given bounds.
+/// Independent uniform draws over one or more dimensions:
+/// `x in UniformDistribution[Double]() take n`. Values are uniform on the
+/// half-open `[lo, hi)` (see [`Rng::range`]).
 pub struct UniformSampling {
-    name: String,
-    lo: f64,
-    hi: f64,
+    dims: Vec<(String, f64, f64)>,
     n: usize,
 }
 
 impl UniformSampling {
+    /// Single-variable form (the DSL's common case).
     pub fn new(v: &Val<f64>, lo: f64, hi: f64, n: usize) -> Self {
+        Self::multi(&[(v, lo, hi)], n)
+    }
+
+    /// Joint uniform cloud over several dimensions: `n` samples, each a
+    /// fresh draw per dimension (row-major draw order).
+    pub fn multi(dims: &[(&Val<f64>, f64, f64)], n: usize) -> Self {
         UniformSampling {
-            name: v.name().to_string(),
-            lo,
-            hi,
+            dims: dims
+                .iter()
+                .map(|(v, lo, hi)| (v.name().to_string(), *lo, *hi))
+                .collect(),
             n,
         }
     }
@@ -109,17 +253,35 @@ impl Sampling for UniformSampling {
         "UniformSampling"
     }
 
-    fn sample(&self, base: &Context, rng: &mut Rng) -> Vec<Context> {
-        (0..self.n)
-            .map(|_| {
-                base.clone()
-                    .with(&Val::<f64>::new(self.name.clone()), rng.range(self.lo, self.hi))
-            })
-            .collect()
+    fn columns(&self) -> Vec<Column> {
+        self.dims.iter().map(|(n, _, _)| Column::f64(n)).collect()
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.n)
+    }
+
+    fn sample_into(&self, out: &mut SampleMatrix, rng: &mut Rng) -> Result<()> {
+        out.check_columns_iter(
+            self.dims.iter().map(|(n, _, _)| (n.as_str(), ColumnKind::F64)),
+            self.name(),
+        )?;
+        let start = out.grow_rows(self.n);
+        for i in 0..self.n {
+            let row = out.row_mut(start + i);
+            for (d, (_, lo, hi)) in self.dims.iter().enumerate() {
+                row[d] = rng.range(*lo, *hi);
+            }
+        }
+        Ok(())
     }
 }
 
-/// Latin Hypercube over several dimensions: space-filling DoE.
+/// Latin Hypercube over several dimensions: space-filling DoE. Each
+/// dimension is split into `n` strata, each stratum hit exactly once;
+/// values stay strictly below `hi` (the `lo + u·(hi-lo)` mapping is
+/// clamped so rounding can never push a top-stratum jitter onto the
+/// bound).
 pub struct LhsSampling {
     dims: Vec<(String, f64, f64)>,
     n: usize,
@@ -142,25 +304,167 @@ impl Sampling for LhsSampling {
         "LHS"
     }
 
-    fn sample(&self, base: &Context, rng: &mut Rng) -> Vec<Context> {
-        // one shuffled stratum assignment per dimension
-        let mut strata: Vec<Vec<usize>> = Vec::with_capacity(self.dims.len());
-        for _ in &self.dims {
-            let mut idx: Vec<usize> = (0..self.n).collect();
-            rng.shuffle(&mut idx);
-            strata.push(idx);
+    fn columns(&self) -> Vec<Column> {
+        self.dims.iter().map(|(n, _, _)| Column::f64(n)).collect()
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.n)
+    }
+
+    fn sample_into(&self, out: &mut SampleMatrix, rng: &mut Rng) -> Result<()> {
+        out.check_columns_iter(
+            self.dims.iter().map(|(n, _, _)| (n.as_str(), ColumnKind::F64)),
+            self.name(),
+        )?;
+        let start = out.grow_rows(self.n);
+        // column-major: one shuffled stratum assignment per dimension,
+        // the single index scratch recycled across dimensions and waves
+        let mut strata = std::mem::take(&mut out.idx_scratch);
+        for (d, (_, lo, hi)) in self.dims.iter().enumerate() {
+            strata.clear();
+            strata.extend(0..self.n);
+            rng.shuffle(&mut strata);
+            for i in 0..self.n {
+                let u = (strata[i] as f64 + rng.f64()) / self.n as f64;
+                out.row_mut(start + i)[d] = unit_to_range(u, *lo, *hi);
+            }
         }
-        (0..self.n)
-            .map(|i| {
-                let mut c = base.clone();
-                for (d, (name, lo, hi)) in self.dims.iter().enumerate() {
-                    let stratum = strata[d][i] as f64;
-                    let u = (stratum + rng.f64()) / self.n as f64;
-                    c.set(&Val::<f64>::new(name.clone()), lo + u * (hi - lo));
+        out.idx_scratch = strata;
+        Ok(())
+    }
+}
+
+/// Direction-number table for [`SobolSampling`] dimensions 2..=16:
+/// `(degree s, coefficients a, initial m values)` from the standard
+/// Joe–Kuo "new-joe-kuo-6" set. Dimension 1 is the van der Corput
+/// sequence and needs no entry.
+const SOBOL_DIRECTIONS: &[(u32, u32, &[u32])] = &[
+    (1, 0, &[1]),
+    (2, 1, &[1, 3]),
+    (3, 1, &[1, 3, 1]),
+    (3, 2, &[1, 1, 1]),
+    (4, 1, &[1, 1, 3, 3]),
+    (4, 4, &[1, 3, 5, 13]),
+    (5, 2, &[1, 1, 5, 5, 17]),
+    (5, 4, &[1, 1, 5, 5, 5]),
+    (5, 7, &[1, 1, 7, 11, 19]),
+    (5, 11, &[1, 1, 5, 1, 1]),
+    (5, 13, &[1, 1, 1, 3, 11]),
+    (5, 14, &[1, 3, 5, 5, 31]),
+    (6, 1, &[1, 3, 3, 9, 7, 49]),
+    (6, 13, &[1, 1, 1, 15, 21, 21]),
+    (6, 16, &[1, 3, 1, 13, 27, 49]),
+];
+
+/// Highest supported Sobol dimensionality (the vendored direction-number
+/// table; extend [`SOBOL_DIRECTIONS`] to go further).
+pub const SOBOL_MAX_DIM: usize = SOBOL_DIRECTIONS.len() + 1;
+
+const SOBOL_BITS: usize = 32;
+
+/// 32-bit direction vectors of Sobol dimension `dim_index` (0-based).
+fn sobol_direction_vectors(dim_index: usize) -> [u32; SOBOL_BITS] {
+    let mut v = [0u32; SOBOL_BITS];
+    if dim_index == 0 {
+        for (k, slot) in v.iter_mut().enumerate() {
+            *slot = 1u32 << (31 - k);
+        }
+        return v;
+    }
+    let (s, a, m) = SOBOL_DIRECTIONS[dim_index - 1];
+    let s = s as usize;
+    for k in 0..s {
+        v[k] = m[k] << (31 - k);
+    }
+    for k in s..SOBOL_BITS {
+        v[k] = v[k - s] ^ (v[k - s] >> s);
+        for i in 1..s {
+            if (a >> (s - 1 - i)) & 1 == 1 {
+                v[k] ^= v[k - i];
+            }
+        }
+    }
+    v
+}
+
+/// Sobol low-discrepancy sampling (§Exploration): the first `n` points of
+/// the Joe–Kuo Sobol sequence mapped onto the given boxes. Deterministic —
+/// the sequence ignores the RNG, so a design depends only on `(dims, n)`
+/// and two runs of the same sweep agree point for point. Gray-code
+/// generation: point `i` flips one direction vector per dimension, so a
+/// full design is O(n·dim) with zero steady-state allocations (per-dim
+/// state lives in the matrix's scratch arena).
+pub struct SobolSampling {
+    dims: Vec<(String, f64, f64)>,
+    n: usize,
+    directions: Vec<[u32; SOBOL_BITS]>,
+}
+
+impl SobolSampling {
+    /// Panics if `dims` exceeds [`SOBOL_MAX_DIM`] (the vendored
+    /// direction-number table).
+    pub fn new(dims: &[(&Val<f64>, f64, f64)], n: usize) -> Self {
+        assert!(
+            dims.len() <= SOBOL_MAX_DIM,
+            "SobolSampling supports at most {SOBOL_MAX_DIM} dimensions, got {}",
+            dims.len()
+        );
+        assert!(
+            (n as u64) < (1u64 << SOBOL_BITS),
+            "SobolSampling supports at most 2^{SOBOL_BITS} points"
+        );
+        SobolSampling {
+            dims: dims
+                .iter()
+                .map(|(v, lo, hi)| (v.name().to_string(), *lo, *hi))
+                .collect(),
+            n,
+            directions: (0..dims.len()).map(sobol_direction_vectors).collect(),
+        }
+    }
+}
+
+impl Sampling for SobolSampling {
+    fn name(&self) -> &str {
+        "Sobol"
+    }
+
+    fn columns(&self) -> Vec<Column> {
+        self.dims.iter().map(|(n, _, _)| Column::f64(n)).collect()
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.n)
+    }
+
+    fn sample_into(&self, out: &mut SampleMatrix, _rng: &mut Rng) -> Result<()> {
+        out.check_columns_iter(
+            self.dims.iter().map(|(n, _, _)| (n.as_str(), ColumnKind::F64)),
+            self.name(),
+        )?;
+        let start = out.grow_rows(self.n);
+        let mut state = std::mem::take(&mut out.u64_scratch);
+        state.clear();
+        state.resize(self.dims.len(), 0);
+        const SCALE: f64 = 1.0 / (1u64 << SOBOL_BITS) as f64;
+        for i in 0..self.n {
+            if i > 0 {
+                // Gray-code step: flip direction vector c, where c is the
+                // index of the lowest set bit of i (= the first zero bit
+                // of i-1, per Joe–Kuo)
+                let c = i.trailing_zeros() as usize;
+                for (x, v) in state.iter_mut().zip(&self.directions) {
+                    *x ^= u64::from(v[c]);
                 }
-                c
-            })
-            .collect()
+            }
+            let row = out.row_mut(start + i);
+            for (d, (_, lo, hi)) in self.dims.iter().enumerate() {
+                row[d] = unit_to_range(state[d] as f64 * SCALE, *lo, *hi);
+            }
+        }
+        out.u64_scratch = state;
+        Ok(())
     }
 }
 
@@ -185,17 +489,30 @@ impl Sampling for SeedSampling {
         "SeedSampling"
     }
 
-    fn sample(&self, base: &Context, rng: &mut Rng) -> Vec<Context> {
-        (0..self.n)
-            .map(|_| {
-                base.clone()
-                    .with(&Val::<u32>::new(self.name.clone()), rng.model_seed())
-            })
-            .collect()
+    fn columns(&self) -> Vec<Column> {
+        vec![Column::u32(&self.name)]
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.n)
+    }
+
+    fn sample_into(&self, out: &mut SampleMatrix, rng: &mut Rng) -> Result<()> {
+        out.check_columns_iter(
+            std::iter::once((self.name.as_str(), ColumnKind::U32)),
+            self.name(),
+        )?;
+        let start = out.grow_rows(self.n);
+        for i in 0..self.n {
+            // u32 round-trips exactly through the f64 cell
+            out.row_mut(start + i)[0] = f64::from(rng.model_seed());
+        }
+        Ok(())
     }
 }
 
-/// Explicit list of contexts (CSV-style sampling).
+/// Explicit list of contexts (CSV-style sampling). Context-only: the
+/// values may be of any type, so there is no columnar path.
 pub struct ExplicitSampling {
     contexts: Vec<Context>,
 }
@@ -223,7 +540,27 @@ impl Sampling for ExplicitSampling {
     }
 }
 
-/// Cartesian product of two samplings (`x` combinator of the DSL).
+/// Variables `sampled` defines beyond (or differently from) `base` — what
+/// a fixed right-hand design contributes to each product row.
+fn context_diff(sampled: &Context, base: &Context) -> Context {
+    let mut out = Context::new();
+    for name in sampled.names() {
+        let v = sampled.get_raw(name).expect("name yielded by iterator");
+        if base.get_raw(name) != Some(v) {
+            out.set_raw(name, v.clone());
+        }
+    }
+    out
+}
+
+/// Cartesian product of two samplings (`a x b`, the DSL's combinator).
+///
+/// OpenMOLE semantics: **both operand designs are sampled once**, then
+/// crossed — `lhs x uniform` pairs every LHS point with the *same* fixed
+/// uniform design. (The historical implementation re-drew the right-hand
+/// sampling for every left element, so a stochastic right side produced a
+/// fresh design per left row — not a Cartesian product of two designs.
+/// Pinned by the `product_right_design_is_fixed` regression test.)
 pub struct ProductSampling {
     a: Arc<dyn Sampling>,
     b: Arc<dyn Sampling>,
@@ -240,12 +577,73 @@ impl Sampling for ProductSampling {
         "ProductSampling"
     }
 
+    /// Columnar iff both operands are; a context-only operand forces the
+    /// whole product onto the context path.
+    fn columns(&self) -> Vec<Column> {
+        let a = self.a.columns();
+        let b = self.b.columns();
+        if a.is_empty() || b.is_empty() {
+            return Vec::new();
+        }
+        a.into_iter().chain(b).collect()
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        // checked, not saturating: an overflowing hint is better reported
+        // as "unknown" than as a plausible wrapped number
+        self.a.size_hint()?.checked_mul(self.b.size_hint()?)
+    }
+
+    fn sample_into(&self, out: &mut SampleMatrix, rng: &mut Rng) -> Result<()> {
+        let columns = self.columns();
+        if columns.is_empty() {
+            return Err(Error::InvalidWorkflow(format!(
+                "sampling `{}` has no columnar path (context-only operand)",
+                self.name()
+            )));
+        }
+        out.check_columns(&columns, self.name())?;
+        // each operand design sampled exactly once (left first), then
+        // crossed left-major. Temporary operand matrices: the product is
+        // a combinator, not a steady-state wave generator.
+        let mut ma = SampleMatrix::new(self.a.columns());
+        self.a.sample_into(&mut ma, rng)?;
+        let mut mb = SampleMatrix::new(self.b.columns());
+        self.b.sample_into(&mut mb, rng)?;
+        let (ca, cb) = (ma.dim(), mb.dim());
+        let start = out.grow_rows(ma.len() * mb.len());
+        for i in 0..ma.len() {
+            for j in 0..mb.len() {
+                let row = out.row_mut(start + i * mb.len() + j);
+                row[..ca].copy_from_slice(ma.row(i));
+                row[ca..ca + cb].copy_from_slice(mb.row(j));
+            }
+        }
+        Ok(())
+    }
+
     fn sample(&self, base: &Context, rng: &mut Rng) -> Vec<Context> {
+        if self.is_columnar() {
+            // the shared adapter — this override exists only for the
+            // context-only fallback below
+            return sample_via_matrix(self, base, rng);
+        }
+        // context fallback (an operand is context-only): the right design
+        // is still sampled ONCE against the base context; only what it
+        // defines beyond the base is merged over every left sample
         let left = self.a.sample(base, rng);
-        let mut out = Vec::new();
+        let right: Vec<Context> = self
+            .b
+            .sample(base, rng)
+            .iter()
+            .map(|r| context_diff(r, base))
+            .collect();
+        let mut out = Vec::with_capacity(left.len() * right.len());
         for l in &left {
-            for r in self.b.sample(l, rng) {
-                out.push(r);
+            for r in &right {
+                let mut c = l.clone();
+                c.merge(r);
+                out.push(c);
             }
         }
         out
@@ -275,13 +673,74 @@ mod tests {
     }
 
     #[test]
-    fn uniform_respects_bounds() {
+    fn factor_levels_do_not_drift_on_long_ranges() {
+        // the historical `x += step` accumulation drifted off-grid on long
+        // ranges; `lo + i·step` indexing must hit every level exactly
+        let x = val_f64("x");
+        let f = Factor::new(&x, 0.0, 1000.0, 0.1);
+        assert_eq!(f.level_count(), 10_001);
+        let levels = f.levels();
+        assert_eq!(levels.len(), 10_001);
+        for (i, &v) in levels.iter().enumerate() {
+            assert_eq!(v, (i as f64 * 0.1).min(1000.0), "level {i} off-grid");
+        }
+        assert_eq!(*levels.last().unwrap(), 1000.0);
+    }
+
+    #[test]
+    fn factor_size_agrees_with_sample_for_awkward_ranges() {
+        let x = val_f64("x");
+        let y = val_f64("y");
+        for (lo, hi, step) in [
+            (0.0, 1000.0, 0.1),
+            (0.0, 99.0, 24.75),
+            (0.1, 0.3, 0.1),
+            (-1.0, 1.0, 0.3),
+            (0.0, 0.0, 1.0), // degenerate: single level
+            (5.0, 4.0, 1.0), // empty range
+        ] {
+            let f = Factor::new(&x, lo, hi, step);
+            assert_eq!(
+                f.level_count(),
+                f.levels().len(),
+                "count vs levels for ({lo}, {hi}, {step})"
+            );
+            let s = FullFactorial::new(vec![
+                Factor::new(&x, lo, hi, step),
+                Factor::new(&y, 0.0, 1.0, 0.5),
+            ]);
+            let mut rng = Rng::new(1);
+            assert_eq!(
+                s.size(),
+                s.sample(&Context::new(), &mut rng).len(),
+                "size vs sample for ({lo}, {hi}, {step})"
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_respects_documented_half_open_bounds() {
         let x = val_f64("x");
         let s = UniformSampling::new(&x, 10.0, 20.0, 100);
         let mut rng = Rng::new(1);
         for c in s.sample(&Context::new(), &mut rng) {
             let v = c.get(&x).unwrap();
+            // [lo, hi) is the documented contract of Rng::range
             assert!((10.0..20.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn multi_uniform_draws_joint_rows() {
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let s = UniformSampling::multi(&[(&x, 0.0, 1.0), (&y, 5.0, 6.0)], 40);
+        let mut rng = Rng::new(2);
+        let samples = s.sample(&Context::new(), &mut rng);
+        assert_eq!(samples.len(), 40);
+        for c in &samples {
+            assert!((0.0..1.0).contains(&c.get(&x).unwrap()));
+            assert!((5.0..6.0).contains(&c.get(&y).unwrap()));
         }
     }
 
@@ -299,6 +758,74 @@ mod tests {
             assert!(!seen[bin], "two samples in decile {bin}");
             seen[bin] = true;
         }
+    }
+
+    #[test]
+    fn lhs_never_reaches_the_upper_bound() {
+        // the `lo + u·(hi-lo)` mapping is clamped: even the top stratum's
+        // jitter must stay strictly below `hi`
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let mut rng = Rng::new(3);
+        let s = LhsSampling::new(&[(&x, 0.0, 3.0), (&y, -2.0, -1.0)], 257);
+        let mut m = SampleMatrix::new(s.columns());
+        s.sample_into(&mut m, &mut rng).unwrap();
+        for i in 0..m.len() {
+            let row = m.row(i);
+            assert!((0.0..3.0).contains(&row[0]), "x = {} out of [0, 3)", row[0]);
+            assert!(
+                (-2.0..-1.0).contains(&row[1]),
+                "y = {} out of [-2, -1)",
+                row[1]
+            );
+        }
+    }
+
+    #[test]
+    fn sobol_first_points_match_the_reference_sequence() {
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let s = SobolSampling::new(&[(&x, 0.0, 1.0), (&y, 0.0, 1.0)], 4);
+        let mut m = SampleMatrix::new(s.columns());
+        s.sample_into(&mut m, &mut Rng::new(0)).unwrap();
+        // the canonical 2-D Joe–Kuo sequence
+        assert_eq!(m.row(0), &[0.0, 0.0]);
+        assert_eq!(m.row(1), &[0.5, 0.5]);
+        assert_eq!(m.row(2), &[0.75, 0.25]);
+        assert_eq!(m.row(3), &[0.25, 0.75]);
+    }
+
+    #[test]
+    fn sobol_is_a_binary_net_in_every_dimension() {
+        // the first 2^k Sobol points hit each dyadic interval of width
+        // 2^-k exactly once, in every 1-D projection — the low-discrepancy
+        // property factorial/LHS designs cannot give at this density
+        let vals: Vec<Val<f64>> = (0..5).map(|d| val_f64(&format!("x{d}"))).collect();
+        let spec: Vec<(&Val<f64>, f64, f64)> =
+            vals.iter().map(|v| (v, 0.0, 1.0)).collect();
+        let n = 64;
+        let s = SobolSampling::new(&spec, n);
+        let mut m = SampleMatrix::new(s.columns());
+        s.sample_into(&mut m, &mut Rng::new(0)).unwrap();
+        for d in 0..vals.len() {
+            let mut seen = vec![false; n];
+            for i in 0..n {
+                let bin = (m.row(i)[d] * n as f64) as usize;
+                assert!(!seen[bin], "dim {d}: two points in bin {bin}");
+                seen[bin] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn sobol_is_deterministic_across_rng_seeds() {
+        let x = val_f64("x");
+        let s = SobolSampling::new(&[(&x, 0.0, 99.0)], 100);
+        let mut a = SampleMatrix::new(s.columns());
+        let mut b = SampleMatrix::new(s.columns());
+        s.sample_into(&mut a, &mut Rng::new(1)).unwrap();
+        s.sample_into(&mut b, &mut Rng::new(999)).unwrap();
+        assert_eq!(a.data(), b.data(), "Sobol designs depend only on (dims, n)");
     }
 
     #[test]
@@ -327,10 +854,60 @@ mod tests {
         );
         let mut rng = Rng::new(4);
         assert_eq!(s.sample(&Context::new(), &mut rng).len(), 6);
+        assert_eq!(s.size_hint(), Some(6));
     }
 
     #[test]
-    fn sampling_preserves_base_context(){
+    fn product_right_design_is_fixed() {
+        // regression (OpenMOLE `x` semantics): a stochastic right-hand
+        // sampling is drawn ONCE — every left element is paired with the
+        // same right design, not a fresh redraw per left element
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let s = ProductSampling::new(
+            Arc::new(FullFactorial::new(vec![Factor::new(&x, 0.0, 2.0, 1.0)])),
+            Arc::new(UniformSampling::new(&y, 0.0, 1.0, 4)),
+        );
+        let mut rng = Rng::new(5);
+        let samples = s.sample(&Context::new(), &mut rng);
+        assert_eq!(samples.len(), 12);
+        let block: Vec<f64> = samples[0..4].iter().map(|c| c.get(&y).unwrap()).collect();
+        for left in 1..3 {
+            let other: Vec<f64> = samples[left * 4..(left + 1) * 4]
+                .iter()
+                .map(|c| c.get(&y).unwrap())
+                .collect();
+            assert_eq!(block, other, "left block {left} saw a redrawn right design");
+        }
+    }
+
+    #[test]
+    fn product_context_fallback_keeps_right_design_fixed() {
+        // same semantics through the context-only fallback (explicit left)
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let left = ExplicitSampling::new(vec![
+            Context::new().with(&x, 1.0),
+            Context::new().with(&x, 2.0),
+        ]);
+        let s = ProductSampling::new(
+            Arc::new(left),
+            Arc::new(UniformSampling::new(&y, 0.0, 1.0, 3)),
+        );
+        assert!(!s.is_columnar());
+        let mut rng = Rng::new(6);
+        let samples = s.sample(&Context::new(), &mut rng);
+        assert_eq!(samples.len(), 6);
+        let first: Vec<f64> = samples[0..3].iter().map(|c| c.get(&y).unwrap()).collect();
+        let second: Vec<f64> = samples[3..6].iter().map(|c| c.get(&y).unwrap()).collect();
+        assert_eq!(first, second);
+        // left values survive the merge of the fixed right design
+        assert_eq!(samples[0].get(&x).unwrap(), 1.0);
+        assert_eq!(samples[3].get(&x).unwrap(), 2.0);
+    }
+
+    #[test]
+    fn sampling_preserves_base_context() {
         let x = val_f64("x");
         let z = val_f64("z");
         let s = UniformSampling::new(&x, 0.0, 1.0, 3);
@@ -339,5 +916,17 @@ mod tests {
         for c in s.sample(&base, &mut rng) {
             assert_eq!(c.get(&z).unwrap(), 9.0);
         }
+    }
+
+    #[test]
+    fn columnar_flags_are_accurate() {
+        let x = val_f64("x");
+        let seed = val_u32("seed");
+        assert!(UniformSampling::new(&x, 0.0, 1.0, 2).is_columnar());
+        assert!(LhsSampling::new(&[(&x, 0.0, 1.0)], 2).is_columnar());
+        assert!(SobolSampling::new(&[(&x, 0.0, 1.0)], 2).is_columnar());
+        assert!(SeedSampling::new(&seed, 2).is_columnar());
+        assert!(FullFactorial::new(vec![Factor::new(&x, 0.0, 1.0, 1.0)]).is_columnar());
+        assert!(!ExplicitSampling::new(vec![Context::new()]).is_columnar());
     }
 }

@@ -1,0 +1,542 @@
+//! The distributed design-of-experiments engine (§Exploration tentpole):
+//! fan a columnar sample wave through any [`Environment`] — typically the
+//! [`Broker`](crate::broker::Broker) — in `chunk`-sized
+//! [`Evaluator::evaluate_rows`] jobs.
+//!
+//! What the paper promises for plain parameter sweeps, not just
+//! calibration: submission, failover and restarts are the platform's
+//! problem. A [`Sweep`]
+//!
+//! * regenerates its design deterministically from `(sampling, seed)` —
+//!   the journal never stores the design, only evaluated objectives;
+//! * derives each row's model seed from `(seed, row)` via
+//!   [`row_seed`], so results are independent of chunking, dispatch
+//!   order, broker re-routing and resume;
+//! * checkpoints every completed chunk as a `sample_block` journal record
+//!   (see [`journal::sample_block_record`]);
+//! * streams results **in row order** through an optional
+//!   [`RowWriter`] — completed out-of-order blocks wait in the objective
+//!   matrix until the row cursor reaches them, so the output file is a
+//!   pure function of the design and is byte-identical between an
+//!   uninterrupted run and a kill + `--resume` (resume rewrites the file
+//!   from the journaled prefix, then continues).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::broker::journal::{self, Journal, SampleBlock};
+use crate::core::Context;
+use crate::dsl::hook::RowWriter;
+use crate::dsl::task::ClosureTask;
+use crate::environment::{Environment, Job, JobHandle};
+use crate::error::{Error, Result};
+use crate::evolution::evaluator::{Evaluator, RowsView};
+use crate::exploration::matrix::SampleMatrix;
+use crate::exploration::sampling::Sampling;
+use crate::util::json::Json;
+use crate::util::rng::{splitmix64, Rng};
+
+/// The model seed of design row `row` under sweep seed `seed` — a pure
+/// function, so any subset of rows can be (re-)evaluated in any order, on
+/// any backend, in any chunking, and produce identical objectives.
+pub fn row_seed(seed: u64, row: usize) -> u32 {
+    let mut s = seed ^ (row as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    splitmix64(&mut s) as u32
+}
+
+/// Outcome of a sweep.
+pub struct SweepResult {
+    /// The (regenerated) design.
+    pub design: SampleMatrix,
+    /// Row-major objective matrix, `design.len() × n_obj`.
+    pub objectives: Vec<f64>,
+    /// Rows evaluated by this run.
+    pub evaluated: usize,
+    /// Rows restored from journal checkpoints instead of re-evaluated.
+    pub resumed: usize,
+    /// Latest virtual completion across checkpointed and fresh blocks.
+    pub virtual_makespan: f64,
+}
+
+impl SweepResult {
+    pub fn rows(&self) -> usize {
+        self.design.len()
+    }
+
+    pub fn objectives_row(&self, i: usize) -> &[f64] {
+        let n_obj = self.objectives.len() / self.design.len().max(1);
+        &self.objectives[i * n_obj..(i + 1) * n_obj]
+    }
+}
+
+/// Builder + driver for one distributed sweep.
+pub struct Sweep {
+    sampling: Arc<dyn Sampling>,
+    evaluator: Arc<dyn Evaluator>,
+    objective_names: Vec<String>,
+    chunk: usize,
+    journal: Option<Arc<Journal>>,
+    writer: Option<Arc<RowWriter>>,
+    max_in_flight: usize,
+    meta: Vec<(String, Json)>,
+}
+
+impl Sweep {
+    pub fn new(
+        sampling: Arc<dyn Sampling>,
+        evaluator: Arc<dyn Evaluator>,
+        objective_names: &[&str],
+    ) -> Self {
+        Sweep {
+            sampling,
+            evaluator,
+            objective_names: objective_names.iter().map(|s| s.to_string()).collect(),
+            chunk: 256,
+            journal: None,
+            writer: None,
+            max_in_flight: 4096,
+            meta: Vec::new(),
+        }
+    }
+
+    /// Record an extra key/value pair in the journal's `run_start` —
+    /// design parameters the sampling object cannot introspect (bounds,
+    /// factorial step, replications), which a `--resume` must validate
+    /// against before trusting the journal's blocks.
+    pub fn meta(mut self, key: &str, value: Json) -> Self {
+        self.meta.push((key.to_string(), value));
+        self
+    }
+
+    /// Design rows per environment job (`--chunk`).
+    pub fn chunk(mut self, chunk: usize) -> Self {
+        self.chunk = chunk.max(1);
+        self
+    }
+
+    /// Checkpoint completed blocks to `journal`.
+    pub fn journal(mut self, journal: Arc<Journal>) -> Self {
+        self.journal = Some(journal);
+        self
+    }
+
+    /// Stream results (design columns then objective columns, row order)
+    /// through `writer`.
+    pub fn writer(mut self, writer: Arc<RowWriter>) -> Self {
+        self.writer = Some(writer);
+        self
+    }
+
+    /// Backpressure: jobs in flight at once.
+    pub fn max_in_flight(mut self, n: usize) -> Self {
+        self.max_in_flight = n.max(1);
+        self
+    }
+
+    /// Run the whole design on `env`.
+    pub fn run(&self, env: &dyn Environment, seed: u64) -> Result<SweepResult> {
+        self.run_resumable(env, seed, None)
+    }
+
+    /// Run, optionally skipping rows already evaluated by a previous
+    /// (killed) run whose journal yielded `resume` blocks (see
+    /// [`journal::sample_blocks`]). The sweep's configuration (sampling,
+    /// seed, evaluator) must match the original run — the journal stores
+    /// objectives, not the design.
+    pub fn run_resumable(
+        &self,
+        env: &dyn Environment,
+        seed: u64,
+        resume: Option<&[SampleBlock]>,
+    ) -> Result<SweepResult> {
+        let n_obj = self.evaluator.objectives();
+        if n_obj != self.objective_names.len() {
+            return Err(Error::Evolution(format!(
+                "evaluator produces {n_obj} objectives, sweep names {}",
+                self.objective_names.len()
+            )));
+        }
+        if !self.sampling.is_columnar() {
+            return Err(Error::InvalidWorkflow(format!(
+                "sweep needs a columnar sampling; `{}` is context-only",
+                self.sampling.name()
+            )));
+        }
+
+        // the design regenerates deterministically from (sampling, seed)
+        let mut design = SampleMatrix::new(self.sampling.columns());
+        self.sampling.sample_into(&mut design, &mut Rng::new(seed))?;
+        let n = design.len();
+        if n == 0 {
+            return Err(Error::InvalidWorkflow(format!(
+                "sampling `{}` produced no samples",
+                self.sampling.name()
+            )));
+        }
+        let dim = design.dim();
+        let mut objectives = vec![0.0f64; n * n_obj];
+        let mut done = vec![false; n];
+        let mut clock = 0.0f64;
+        let mut resumed = 0usize;
+
+        // restore journaled blocks (any order, any historical chunking)
+        if let Some(blocks) = resume {
+            for b in blocks {
+                for (k, row_objs) in b.objectives.iter().enumerate() {
+                    let r = b.first_row + k;
+                    if r >= n || row_objs.len() != n_obj {
+                        return Err(Error::InvalidWorkflow(format!(
+                            "journal block (row {r}, {} objectives) does not fit \
+                             this design ({n} rows, {n_obj} objectives) — was the \
+                             journal written by a different sweep?",
+                            row_objs.len()
+                        )));
+                    }
+                    objectives[r * n_obj..(r + 1) * n_obj].copy_from_slice(row_objs);
+                    if !done[r] {
+                        done[r] = true;
+                        resumed += 1;
+                    }
+                }
+                clock = clock.max(b.clock);
+            }
+        }
+
+        if let Some(j) = &self.journal {
+            let mut fields = vec![
+                ("sampling", Json::Str(self.sampling.name().into())),
+                // the run_start "seed" field is a lossy f64; the design
+                // depends on every bit of the u64, so record it exactly
+                // for resume validation
+                ("seed_exact", Json::Str(seed.to_string())),
+                ("n", Json::Num(n as f64)),
+                ("chunk", Json::Num(self.chunk as f64)),
+                ("resumed_rows", Json::Num(resumed as f64)),
+            ];
+            fields.extend(self.meta.iter().map(|(k, v)| (k.as_str(), v.clone())));
+            j.append(&journal::run_start(
+                if resume.is_some() { "explore-resume" } else { "explore" },
+                seed,
+                fields,
+            ))?;
+        }
+        if let Some(w) = &self.writer {
+            if w.columns().len() != dim + n_obj {
+                return Err(Error::InvalidWorkflow(format!(
+                    "result writer has {} columns, sweep produces {} (design) + \
+                     {n_obj} (objectives)",
+                    w.columns().len(),
+                    dim
+                )));
+            }
+        }
+
+        // in-order incremental results: the cursor only advances over done
+        // rows, so the file is always a prefix of the final result
+        let mut cursor = 0usize;
+        let mut row_buf: Vec<f64> = Vec::with_capacity(dim + n_obj);
+        self.drain_ready(&design, &objectives, &done, &mut cursor, n_obj, &mut row_buf)?;
+
+        // chunk grid over the not-yet-done rows; a block with any pending
+        // row is resubmitted whole (done rows inside it re-evaluate to
+        // identical values — per-row seeds are position-pure)
+        let mut pending: VecDeque<(usize, usize)> = VecDeque::new();
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + self.chunk).min(n);
+            if done[lo..hi].iter().any(|d| !d) {
+                pending.push_back((lo, hi));
+            }
+            lo = hi;
+        }
+
+        type Slot = Arc<Mutex<Option<Vec<f64>>>>;
+        let mut in_flight: Vec<(usize, usize, Slot, JobHandle)> = Vec::new();
+        let mut evaluated = 0usize;
+        let cost = self.evaluator.nominal_cost_s();
+
+        while !pending.is_empty() || !in_flight.is_empty() {
+            // submit as much as backpressure allows
+            while in_flight.len() < self.max_in_flight {
+                let Some((lo, hi)) = pending.pop_front() else { break };
+                let rows_n = hi - lo;
+                let chunk_genomes = design.rows_slice(lo, hi).to_vec();
+                let chunk_seeds: Vec<u32> =
+                    (lo..hi).map(|r| row_seed(seed, r)).collect();
+                let evaluator = Arc::clone(&self.evaluator);
+                let slot: Slot = Arc::new(Mutex::new(None));
+                let out_slot = Arc::clone(&slot);
+                let task = ClosureTask::new("explore", move |_ctx: &Context| {
+                    let mut objs = vec![0.0; rows_n * n_obj];
+                    evaluator.evaluate_rows(
+                        RowsView::new(&chunk_genomes, dim),
+                        &chunk_seeds,
+                        &mut objs,
+                    )?;
+                    *out_slot.lock().unwrap() = Some(objs);
+                    Ok(Context::new())
+                })
+                .cost(cost * rows_n as f64);
+                let handle = env.submit(Job::new(Arc::new(task), Context::new()));
+                in_flight.push((lo, hi, slot, handle));
+            }
+
+            // poll; drain every completed block
+            let mut progressed = false;
+            let mut idx = 0;
+            while idx < in_flight.len() {
+                match in_flight[idx].3.try_wait() {
+                    None => {
+                        idx += 1;
+                        continue;
+                    }
+                    Some(Err(e)) => return Err(e),
+                    Some(Ok((_ctx, report))) => {
+                        progressed = true;
+                        let (lo, hi, slot, _) = in_flight.swap_remove(idx);
+                        let objs = slot.lock().unwrap().take().ok_or_else(|| {
+                            Error::Evolution(
+                                "explore chunk produced no results".into(),
+                            )
+                        })?;
+                        objectives[lo * n_obj..hi * n_obj].copy_from_slice(&objs);
+                        for d in &mut done[lo..hi] {
+                            if !*d {
+                                *d = true;
+                                evaluated += 1;
+                            }
+                        }
+                        clock = clock.max(report.virtual_end);
+                        if let Some(j) = &self.journal {
+                            j.append(&journal::sample_block_record(
+                                lo,
+                                n_obj,
+                                &objs,
+                                report.virtual_end,
+                            ))?;
+                        }
+                        self.drain_ready(
+                            &design,
+                            &objectives,
+                            &done,
+                            &mut cursor,
+                            n_obj,
+                            &mut row_buf,
+                        )?;
+                    }
+                }
+            }
+            if !progressed && !in_flight.is_empty() {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+
+        debug_assert_eq!(cursor, n, "all rows drained");
+        if let Some(w) = &self.writer {
+            w.flush()?;
+        }
+        if let Some(j) = &self.journal {
+            j.append(&journal::env_stats_record(env.name(), &env.stats()))?;
+            j.append(&journal::run_end(evaluated as u64, clock))?;
+        }
+        Ok(SweepResult {
+            design,
+            objectives,
+            evaluated,
+            resumed,
+            virtual_makespan: clock,
+        })
+    }
+
+    /// Write every done row the cursor has reached, in row order.
+    fn drain_ready(
+        &self,
+        design: &SampleMatrix,
+        objectives: &[f64],
+        done: &[bool],
+        cursor: &mut usize,
+        n_obj: usize,
+        row_buf: &mut Vec<f64>,
+    ) -> Result<()> {
+        let Some(w) = &self.writer else {
+            while *cursor < done.len() && done[*cursor] {
+                *cursor += 1;
+            }
+            return Ok(());
+        };
+        let mut wrote = false;
+        while *cursor < done.len() && done[*cursor] {
+            let r = *cursor;
+            row_buf.clear();
+            row_buf.extend_from_slice(design.row(r));
+            row_buf.extend_from_slice(&objectives[r * n_obj..(r + 1) * n_obj]);
+            w.append_row(row_buf)?;
+            *cursor += 1;
+            wrote = true;
+        }
+        if wrote {
+            w.flush()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::val_f64;
+    use crate::environment::local::LocalEnvironment;
+    use crate::evolution::evaluator::{CountingEvaluator, Zdt1Evaluator};
+    use crate::exploration::sampling::{ExplicitSampling, LhsSampling, SobolSampling};
+
+    fn lhs3(n: usize) -> Arc<dyn Sampling> {
+        let x0 = val_f64("x0");
+        let x1 = val_f64("x1");
+        let x2 = val_f64("x2");
+        Arc::new(LhsSampling::new(
+            &[(&x0, 0.0, 1.0), (&x1, 0.0, 1.0), (&x2, 0.0, 1.0)],
+            n,
+        ))
+    }
+
+    #[test]
+    fn sweep_evaluates_every_row_once() {
+        let env = LocalEnvironment::new(4);
+        let counting = Arc::new(CountingEvaluator::new(Zdt1Evaluator { dim: 3 }));
+        let sweep = Sweep::new(lhs3(97), Arc::clone(&counting) as _, &["f1", "f2"])
+            .chunk(16);
+        let result = sweep.run(&env, 42).unwrap();
+        assert_eq!(result.rows(), 97);
+        assert_eq!(result.evaluated, 97);
+        assert_eq!(result.resumed, 0);
+        assert_eq!(counting.count(), 97);
+        // objectives agree with a direct evaluation under the same seeds
+        let serial = Zdt1Evaluator { dim: 3 };
+        for i in [0usize, 13, 96] {
+            let want = serial
+                .evaluate(result.design.row(i), row_seed(42, i))
+                .unwrap();
+            assert_eq!(result.objectives_row(i), want.as_slice(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn sweep_is_chunking_independent() {
+        let env = LocalEnvironment::new(4);
+        let run = |chunk: usize| {
+            Sweep::new(lhs3(41), Arc::new(Zdt1Evaluator { dim: 3 }), &["f1", "f2"])
+                .chunk(chunk)
+                .run(&env, 7)
+                .unwrap()
+        };
+        let a = run(1);
+        let b = run(8);
+        let c = run(64);
+        assert_eq!(a.objectives, b.objectives, "chunk 1 vs 8");
+        assert_eq!(a.objectives, c.objectives, "chunk 1 vs 64");
+    }
+
+    #[test]
+    fn resume_skips_restored_rows() {
+        let env = LocalEnvironment::new(2);
+        let full = Sweep::new(
+            lhs3(30),
+            Arc::new(Zdt1Evaluator { dim: 3 }),
+            &["f1", "f2"],
+        )
+        .chunk(10)
+        .run(&env, 5)
+        .unwrap();
+
+        // pretend the first two blocks were journaled before a kill
+        let blocks: Vec<SampleBlock> = (0..2)
+            .map(|k| SampleBlock {
+                first_row: k * 10,
+                objectives: (k * 10..(k + 1) * 10)
+                    .map(|r| full.objectives_row(r).to_vec())
+                    .collect(),
+                clock: 50.0,
+            })
+            .collect();
+        let counting = Arc::new(CountingEvaluator::new(Zdt1Evaluator { dim: 3 }));
+        let resumed = Sweep::new(lhs3(30), Arc::clone(&counting) as _, &["f1", "f2"])
+            .chunk(10)
+            .run_resumable(&env, 5, Some(&blocks))
+            .unwrap();
+        assert_eq!(resumed.resumed, 20);
+        assert_eq!(resumed.evaluated, 10);
+        assert_eq!(counting.count(), 10, "restored rows must not re-evaluate");
+        assert_eq!(resumed.objectives, full.objectives);
+        assert!(resumed.virtual_makespan >= 50.0);
+    }
+
+    #[test]
+    fn resume_tolerates_a_different_chunk_grid() {
+        let env = LocalEnvironment::new(2);
+        let full = Sweep::new(
+            lhs3(25),
+            Arc::new(Zdt1Evaluator { dim: 3 }),
+            &["f1", "f2"],
+        )
+        .chunk(7)
+        .run(&env, 9)
+        .unwrap();
+        // one journaled block that straddles the new grid
+        let blocks = [SampleBlock {
+            first_row: 3,
+            objectives: (3..12).map(|r| full.objectives_row(r).to_vec()).collect(),
+            clock: 1.0,
+        }];
+        let resumed = Sweep::new(
+            lhs3(25),
+            Arc::new(Zdt1Evaluator { dim: 3 }),
+            &["f1", "f2"],
+        )
+        .chunk(4)
+        .run_resumable(&env, 9, Some(&blocks))
+        .unwrap();
+        assert_eq!(resumed.objectives, full.objectives);
+        assert_eq!(resumed.resumed, 9);
+    }
+
+    #[test]
+    fn sweep_rejects_context_only_samplings_and_foreign_journals() {
+        let env = LocalEnvironment::new(1);
+        let explicit = Arc::new(ExplicitSampling::new(vec![Context::new()]));
+        assert!(Sweep::new(explicit, Arc::new(Zdt1Evaluator { dim: 3 }), &["f1", "f2"])
+            .run(&env, 1)
+            .is_err());
+
+        let blocks = [SampleBlock {
+            first_row: 90,
+            objectives: vec![vec![1.0, 2.0]; 20],
+            clock: 0.0,
+        }];
+        let err = Sweep::new(lhs3(10), Arc::new(Zdt1Evaluator { dim: 3 }), &["f1", "f2"])
+            .run_resumable(&env, 1, Some(&blocks))
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("does not fit"),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
+    fn sobol_sweep_is_reproducible_across_runs() {
+        let env = LocalEnvironment::new(2);
+        let x = val_f64("x0");
+        let y = val_f64("x1");
+        let make = || {
+            let s: Arc<dyn Sampling> = Arc::new(SobolSampling::new(
+                &[(&x, 0.0, 1.0), (&y, 0.0, 1.0)],
+                33,
+            ));
+            Sweep::new(s, Arc::new(Zdt1Evaluator { dim: 2 }), &["f1", "f2"]).chunk(5)
+        };
+        let a = make().run(&env, 3).unwrap();
+        let b = make().run(&env, 3).unwrap();
+        assert_eq!(a.design.data(), b.design.data());
+        assert_eq!(a.objectives, b.objectives);
+    }
+}

@@ -51,12 +51,13 @@ pub mod prelude {
     pub use crate::core::{val_f64, val_i64, val_str, val_u32, Context, Val};
     pub use crate::dsl::{
         CaptureHook, ClosureTask, CsvHook, DisplayHook, Hook, IdentityTask,
-        Puzzle, Sink, Task, ToStringHook,
+        Puzzle, RowWriter, Sink, TableFormat, Task, ToStringHook,
     };
     pub use crate::environment::{local::LocalEnvironment, Environment, Job};
     pub use crate::exploration::{
-        replicate, Factor, FullFactorial, LhsSampling, Sampling, SeedSampling,
-        StatisticTask, UniformSampling,
+        replicate, ExplicitSampling, Factor, FullFactorial, LhsSampling,
+        ProductSampling, SampleMatrix, Sampling, SeedSampling, SobolSampling,
+        StatisticTask, Sweep, UniformSampling,
     };
     pub use crate::util::{stats::Descriptor, Rng};
     pub use crate::workflow::MoleExecution;

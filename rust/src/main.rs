@@ -2,6 +2,7 @@
 //!
 //! Subcommands mirror the paper's A-to-Z example (§4):
 //!   run        single model execution            (Listing 2)
+//!   explore    distributed design of experiments (§2: large parameter sets)
 //!   replicate  n-seed replication + medians      (Listing 3)
 //!   calibrate  generational NSGA-II              (Listing 4)
 //!   island     island NSGA-II on a remote env    (Listing 5)
@@ -15,6 +16,7 @@ use std::sync::Arc;
 
 use molers::broker::{journal, policy, Broker, Journal};
 use molers::cli::Args;
+use molers::dsl::hook::{RowWriter, TableFormat};
 use molers::environment::cluster::BatchEnvironment;
 use molers::environment::egi::EgiEnvironment;
 use molers::environment::local::LocalEnvironment;
@@ -130,6 +132,7 @@ fn main() {
     };
     let result = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("explore") => cmd_explore(&args),
         Some("replicate") => cmd_replicate(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("island") => cmd_island(&args),
@@ -140,12 +143,16 @@ fn main() {
                 eprintln!("unknown subcommand `{o}`\n");
             }
             eprintln!(
-                "usage: molers <run|replicate|calibrate|island|render|envs> [options]\n\
+                "usage: molers <run|explore|replicate|calibrate|island|render|envs> [options]\n\
                  common options: --seed N --env local|ssh|pbs|slurm|sge|oar|condor|egi\n\
                  \x20          --envs local:8,pbs:32~0.2,egi:biomed:2000 (brokered fleet;\n\
                  \x20          `~p` injects failures) --policy ewma|least|roundrobin\n\
                  \x20          --speculate (clone stragglers past the p95, first finish wins)\n\
                  run:       --population 125 --diffusion 50 --evaporation 50\n\
+                 explore:   --sampling lhs|sobol|uniform|factorial --n 200000 --chunk 256\n\
+                 \x20          --lo 0 --hi 99 (--step 24.75 for factorial) --replications 1\n\
+                 \x20          --out explore.csv --format csv|jsonl\n\
+                 \x20          --journal sweep.jsonl (checkpoint) | --resume sweep.jsonl\n\
                  replicate: --replications 5\n\
                  calibrate: --mu 10 --lambda 10 --generations 100 --replications 5 \
                  --chunk 1\n\
@@ -183,6 +190,233 @@ fn cmd_run(args: &Args) -> CmdResult {
         fit[2],
         t0.elapsed()
     );
+    Ok(())
+}
+
+/// §Exploration: plain design of experiments at calibration scale — a
+/// columnar sample wave fanned through the (brokered) environment in
+/// `--chunk`-sized `evaluate_rows` jobs, `sample_block` journal
+/// checkpoints, and a `--resume` that skips already-evaluated rows while
+/// reproducing a byte-identical result file.
+fn cmd_explore(args: &Args) -> CmdResult {
+    let seed = args.u64("seed", 42)?;
+    let n = args.usize("n", 1000)?;
+    let chunk = args.usize("chunk", 256)?;
+    let replications = args.usize("replications", 1)?;
+    let nodes = args.usize("nodes", 8)?;
+    let lo = args.f64("lo", 0.0)?;
+    let hi = args.f64("hi", 99.0)?;
+    let step = args.f64("step", 24.75)?;
+    let out_path = args.get_or("out", "explore.csv").to_string();
+    let format = match args.get("format") {
+        Some("csv") => TableFormat::Csv,
+        Some("jsonl") => TableFormat::Jsonl,
+        Some(other) => {
+            return Err(format!("unknown --format `{other}` (csv|jsonl)").into())
+        }
+        None if out_path.ends_with(".jsonl") => TableFormat::Jsonl,
+        None => TableFormat::Csv,
+    };
+    let pool = Arc::new(ThreadPool::default_size());
+    let (env, broker) = environment_from_args(args, "local", nodes, pool, seed)?;
+
+    let (d, e, _) = genome_bounds();
+    let sampling_name = args.get_or("sampling", "lhs").to_string();
+    let sampling: Arc<dyn Sampling> = match sampling_name.as_str() {
+        "lhs" => Arc::new(LhsSampling::new(&[(&d, lo, hi), (&e, lo, hi)], n)),
+        "sobol" => {
+            // validated here so an oversized design is a clean CLI error,
+            // not the SobolSampling constructor's panic
+            if n as u64 >= 1u64 << 32 {
+                return Err(format!(
+                    "--n {n} exceeds the Sobol sequence length (2^32 points)"
+                )
+                .into());
+            }
+            Arc::new(SobolSampling::new(&[(&d, lo, hi), (&e, lo, hi)], n))
+        }
+        "uniform" => {
+            Arc::new(UniformSampling::multi(&[(&d, lo, hi), (&e, lo, hi)], n))
+        }
+        "factorial" => {
+            // validated here so a bad value is a clean CLI error, not the
+            // Factor constructor's panic
+            if !(step.is_finite() && step > 0.0) {
+                return Err(format!(
+                    "--step expects a positive finite number, got `{step}`"
+                )
+                .into());
+            }
+            let levels = (hi - lo) / step;
+            if !levels.is_finite() || levels >= 1e6 {
+                return Err(format!(
+                    "--step {step} over [{lo}, {hi}] yields ~{levels:.0} levels \
+                     per factor — refusing a grid this size"
+                )
+                .into());
+            }
+            Arc::new(FullFactorial::new(vec![
+                Factor::new(&d, lo, hi, step),
+                Factor::new(&e, lo, hi, step),
+            ]))
+        }
+        other => {
+            return Err(format!(
+                "unknown --sampling `{other}` (lhs|sobol|uniform|factorial)"
+            )
+            .into())
+        }
+    };
+    if sampling_name != "factorial" && !(lo.is_finite() && hi.is_finite() && lo < hi)
+    {
+        return Err(format!(
+            "--lo must be below --hi (both finite) for --sampling \
+             {sampling_name} (got lo={lo}, hi={hi})"
+        )
+        .into());
+    }
+
+    let (base_eval, kind) = best_available_evaluator(2);
+    println!(
+        "evaluator: {kind}, environment: {}, sampling: {} ({} rows, chunk {chunk})",
+        env.name(),
+        sampling.name(),
+        sampling.size_hint().unwrap_or(0),
+    );
+    let evaluator: Arc<dyn Evaluator> = if replications > 1 {
+        Arc::new(ReplicatedEvaluator::new(base_eval, replications))
+    } else {
+        base_eval
+    };
+
+    // --resume restores sample_block checkpoints; the design regenerates
+    // from the sampling configuration + seed, so a journal written under
+    // ANY different design knob (sampling kind, seed, n, bounds, step,
+    // replications) describes a different design — reject it up front,
+    // before the output file is touched
+    let objective_names = ["food1", "food2", "food3"];
+    let expected_rows = sampling.size_hint().unwrap_or(0);
+    let mut resume_blocks: Option<Vec<journal::SampleBlock>> = None;
+    let journal_arc = if let Some(path) = args.get("resume") {
+        let records = Journal::load(path)?;
+        if let Some(start) = records
+            .iter()
+            .find(|r| r.get("kind").and_then(|k| k.as_str()) == Some("run_start"))
+        {
+            if let Some(s) = start.get("sampling").and_then(|v| v.as_str()) {
+                if s != sampling.name() {
+                    return Err(format!(
+                        "--resume config mismatch: journal `{path}` was written \
+                         with --sampling {s}, this run samples {}",
+                        sampling.name()
+                    )
+                    .into());
+                }
+            }
+            // the 64-bit seed is compared exactly (journaled as a string;
+            // an f64 comparison is lossy above 2^53), with a numeric
+            // fallback for journals predating seed_exact
+            let seed_matches = match start.get("seed_exact").and_then(|v| v.as_str())
+            {
+                Some(exact) => exact == seed.to_string(),
+                None => start
+                    .get("seed")
+                    .and_then(|v| v.as_f64())
+                    .is_none_or(|was| was as u64 == seed),
+            };
+            if !seed_matches {
+                return Err(format!(
+                    "--resume config mismatch: journal `{path}` was written \
+                     under a different --seed than {seed} — the designs \
+                     differ, refusing to reuse its blocks"
+                )
+                .into());
+            }
+            // numeric design knobs recorded at journal creation; a knob
+            // absent from an old journal is skipped, a present one must
+            // match exactly
+            for (key, now) in [
+                ("n", expected_rows as f64),
+                ("lo", lo),
+                ("hi", hi),
+                ("step", step),
+                ("replications", replications as f64),
+            ] {
+                if let Some(was) = start.get(key).and_then(|v| v.as_f64()) {
+                    if was != now {
+                        return Err(format!(
+                            "--resume config mismatch: journal `{path}` was \
+                             written with {key}={was}, this run has {key}={now} \
+                             — the designs differ, refusing to reuse its blocks"
+                        )
+                        .into());
+                    }
+                }
+            }
+        }
+        let blocks = journal::sample_blocks(&records);
+        // blocks must fit the design this run will generate — checked
+        // before the output file is recreated, so a refused resume never
+        // destroys previous partial results
+        for b in &blocks {
+            if b.first_row + b.objectives.len() > expected_rows
+                || b.objectives.iter().any(|r| r.len() != objective_names.len())
+            {
+                return Err(format!(
+                    "--resume journal `{path}` holds a block (rows {}..{}) that \
+                     does not fit this {expected_rows}-row design — refusing to \
+                     overwrite `{out_path}`",
+                    b.first_row,
+                    b.first_row + b.objectives.len()
+                )
+                .into());
+            }
+        }
+        println!("resuming sweep: {} checkpointed blocks", blocks.len());
+        resume_blocks = Some(blocks);
+        Some(Arc::new(Journal::append_to(path)?))
+    } else if let Some(path) = args.get("journal") {
+        Some(Arc::new(Journal::create(path)?))
+    } else {
+        None
+    };
+
+    let mut columns: Vec<&str> = vec![d.name(), e.name()];
+    columns.extend(objective_names);
+    let writer = Arc::new(RowWriter::create(&out_path, format, &columns)?);
+    let mut sweep = Sweep::new(sampling, evaluator, &objective_names)
+        .chunk(chunk)
+        .writer(writer)
+        .meta("lo", molers::util::json::Json::Num(lo))
+        .meta("hi", molers::util::json::Json::Num(hi))
+        .meta("replications", molers::util::json::Json::Num(replications as f64));
+    if sampling_name == "factorial" {
+        sweep = sweep.meta("step", molers::util::json::Json::Num(step));
+    }
+    if let Some(j) = journal_arc {
+        sweep = sweep.journal(j);
+    }
+    let t0 = std::time::Instant::now();
+    let result = sweep.run_resumable(env.as_ref(), seed, resume_blocks.as_deref())?;
+    let stats = env.stats();
+    println!(
+        "\nrows={} evaluated={} resumed={} wall={:?}\nvirtual makespan = {:.0} s \
+         -> {:.0} evaluations/virtual-hour",
+        result.rows(),
+        result.evaluated,
+        result.resumed,
+        t0.elapsed(),
+        result.virtual_makespan,
+        throughput_per_hour(result.evaluated as u64, result.virtual_makespan),
+    );
+    println!(
+        "env: submitted={} completed={} resubmissions={} failed-jobs={}",
+        stats.submitted, stats.completed, stats.resubmissions, stats.failed_jobs
+    );
+    if let Some(b) = &broker {
+        print_broker_report(b);
+    }
+    println!("results: {out_path}");
     Ok(())
 }
 

@@ -64,8 +64,23 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
-                    out.push_str(&format!("{}", *n as i64));
+                if !n.is_finite() {
+                    // bare NaN/inf is not JSON: one such value in a
+                    // checkpoint line would make the whole journal
+                    // unloadable. null parses back as Json::Null, which
+                    // strict numeric consumers (parse_f64_arr) reject —
+                    // so only that record degrades, never the file.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
+                    if *n == 0.0 && n.is_sign_negative() {
+                        // `(-0.0) as i64` drops the sign bit; `-0` is
+                        // valid JSON and round-trips it — f64 Display
+                        // writes "-0" too, so journal-restored values
+                        // stay byte-identical to live-written ones
+                        out.push_str("-0");
+                    } else {
+                        out.push_str(&format!("{}", *n as i64));
+                    }
                 } else {
                     out.push_str(&format!("{n}"));
                 }
@@ -335,6 +350,21 @@ mod tests {
         assert_eq!(parse("true").unwrap(), Json::Bool(true));
         assert_eq!(parse("-2.5e2").unwrap(), Json::Num(-250.0));
         assert_eq!(parse("\"a\\nb\"").unwrap(), Json::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn writes_non_finite_as_null_and_keeps_negative_zero() {
+        // bare NaN/inf would corrupt a JSONL journal line; null degrades
+        // only the one record (strict numeric parsers reject it)
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        // -0.0 must survive the integer fast path with its sign bit —
+        // byte-identical resume depends on journal == live formatting
+        assert_eq!(Json::Num(-0.0).to_string(), "-0");
+        assert_eq!(Json::Num(0.0).to_string(), "0");
+        let back = parse("-0").unwrap().as_f64().unwrap();
+        assert_eq!(back.to_bits(), (-0.0f64).to_bits(), "sign bit round-trips");
     }
 
     #[test]

@@ -17,6 +17,43 @@ pub fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Largest float strictly below `x` (`f64::next_down` without the MSRV
+/// bump). NaN and −∞ return themselves.
+#[inline]
+pub fn next_below(x: f64) -> f64 {
+    if x.is_nan() || x == f64::NEG_INFINITY {
+        return x;
+    }
+    let bits = x.to_bits();
+    if x > 0.0 {
+        f64::from_bits(bits - 1)
+    } else if x == 0.0 {
+        // below both +0.0 and -0.0 sits the smallest negative subnormal
+        -f64::from_bits(1)
+    } else {
+        f64::from_bits(bits + 1)
+    }
+}
+
+/// Map a unit draw `u ∈ [0, 1)` onto the **half-open** interval
+/// `[lo, hi)`.
+///
+/// The naive `lo + u·(hi-lo)` can round *onto* `hi` even though `u < 1`
+/// (e.g. `(1 - 2⁻⁵³) · 3.0 == 3.0` in f64), silently violating the
+/// half-open contract every sampling documents. This mapping clamps that
+/// rounding: a result that lands on or above `hi` is pulled to the
+/// largest float below it (and never below `lo`). Degenerate `lo == hi`
+/// yields `lo`.
+#[inline]
+pub fn unit_to_range(u: f64, lo: f64, hi: f64) -> f64 {
+    let v = lo + u * (hi - lo);
+    if v >= hi && lo < hi {
+        next_below(hi).max(lo)
+    } else {
+        v.max(lo)
+    }
+}
+
 /// xoshiro256++ PRNG. Not cryptographic; plenty for simulation workloads.
 #[derive(Clone, Debug)]
 pub struct Rng {
@@ -77,10 +114,14 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
-    /// Uniform in `[lo, hi)`.
+    /// Uniform on the **half-open** interval `[lo, hi)` (requires
+    /// `lo <= hi`; `lo == hi` yields `lo`). The contract is exact, not
+    /// approximate: the underlying `lo + u·(hi-lo)` mapping is clamped
+    /// via [`unit_to_range`] so floating-point rounding can never return
+    /// `hi` itself — samplings and tests may rely on `value < hi`.
     #[inline]
     pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
-        lo + self.f64() * (hi - lo)
+        unit_to_range(self.f64(), lo, hi)
     }
 
     /// Uniform integer in `[0, n)` (n > 0), unbiased via rejection.
@@ -231,6 +272,50 @@ mod tests {
         let mut a = root.fork();
         let mut b = root.fork();
         assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn unit_to_range_clamps_rounding_onto_hi() {
+        // the naive mapping really does land on hi — the bug being fixed:
+        // 1 + (1 - 2⁻⁵³) is exactly halfway between 2 - 2⁻⁵² and 2, and
+        // ties-to-even rounds it onto 2.0 even though u < 1
+        let u = 1.0 - 2f64.powi(-53); // the largest value Rng::f64 returns
+        assert_eq!(1.0 + u * 1.0, 2.0, "premise: rounding reaches hi");
+        let v = unit_to_range(u, 1.0, 2.0);
+        assert!(v < 2.0, "unit_to_range must stay below hi, got {v}");
+        assert_eq!(v, next_below(2.0));
+        // unaffected draws pass through exactly
+        assert_eq!(unit_to_range(0.25, 2.0, 6.0), 3.0);
+        assert_eq!(unit_to_range(0.0, -1.0, 1.0), -1.0);
+        // degenerate interval
+        assert_eq!(unit_to_range(0.9, 5.0, 5.0), 5.0);
+        // negative interval: -2 + u·1 also ties onto hi = -1 and is clamped
+        let w = unit_to_range(u, -2.0, -1.0);
+        assert!((-2.0..-1.0).contains(&w), "negative interval: {w}");
+    }
+
+    #[test]
+    fn next_below_is_the_predecessor() {
+        for x in [3.0, 1.0, 1e-300, 0.0, -0.0, -1.0, -1e18, f64::INFINITY] {
+            let b = next_below(x);
+            assert!(b < x, "next_below({x}) = {b} not below");
+            // nothing representable fits strictly between b and x
+            let mid = b + (x - b) / 2.0;
+            assert!(mid == b || mid == x, "gap between {b} and {x}");
+        }
+        assert_eq!(next_below(f64::NEG_INFINITY), f64::NEG_INFINITY);
+        assert!(next_below(f64::NAN).is_nan());
+    }
+
+    #[test]
+    fn range_stays_half_open() {
+        // a few-ulp-wide interval makes the rounding-onto-hi case likely
+        let (lo, hi) = (1.0, 1.0 + 3.0 * f64::EPSILON);
+        let mut r = Rng::new(8);
+        for _ in 0..10_000 {
+            let v = r.range(lo, hi);
+            assert!((lo..hi).contains(&v), "{v} escaped [{lo}, {hi})");
+        }
     }
 
     #[test]

@@ -16,6 +16,7 @@ use crate::core::Context;
 use crate::dsl::puzzle::{CapsuleId, Puzzle, Transition};
 use crate::environment::{Environment, Job, JobHandle, JobReport};
 use crate::error::{Error, Result};
+use crate::exploration::matrix::SampleMatrix;
 use crate::util::Rng;
 
 /// A context waiting to run at a capsule.
@@ -24,6 +25,55 @@ struct WorkItem {
     ctx: Context,
     ticket: u64,
     virtual_release: f64,
+}
+
+/// A columnar exploration being streamed into work items (§Exploration
+/// tentpole): the design lives as one flat `f64` matrix, and per-sample
+/// contexts are materialised row by row only as submission capacity frees
+/// up — on the *fan-out* side a 200k-point sweep holds the matrix plus
+/// the in-flight window, never 200k queued [`Context`] clones. (The
+/// fan-*in* side still accumulates one result context per completed row
+/// in the aggregation barrier/outputs — for matrix-in/matrix-out sweeps
+/// at full scale use [`crate::exploration::Sweep`], which never leaves
+/// columnar form.) Context-only samplings keep the historical
+/// materialise-everything path.
+struct PendingExplore {
+    to: CapsuleId,
+    base: Context,
+    matrix: SampleMatrix,
+    next_row: usize,
+    group: u64,
+    virtual_release: f64,
+}
+
+/// Mint the next child work item of the front streamed exploration.
+fn next_streamed(
+    pending: &mut VecDeque<PendingExplore>,
+    tickets: &mut HashMap<u64, TicketInfo>,
+    next_ticket: &mut u64,
+) -> Option<WorkItem> {
+    let p = pending.front_mut()?;
+    let ctx = p.matrix.context_row(p.next_row, &p.base);
+    let child = *next_ticket;
+    *next_ticket += 1;
+    tickets.insert(
+        child,
+        TicketInfo {
+            parent: p.group,
+            is_group: false,
+        },
+    );
+    let item = WorkItem {
+        capsule: p.to,
+        ctx,
+        ticket: child,
+        virtual_release: p.virtual_release,
+    };
+    p.next_row += 1;
+    if p.next_row == p.matrix.len() {
+        pending.pop_front();
+    }
+    Some(item)
 }
 
 #[derive(Clone, Copy)]
@@ -108,6 +158,7 @@ impl MoleExecution {
         tickets.insert(0, TicketInfo { parent: 0, is_group: false });
 
         let mut queue: VecDeque<WorkItem> = VecDeque::new();
+        let mut pending: VecDeque<PendingExplore> = VecDeque::new();
         let mut in_flight: Vec<(WorkItem, JobHandle)> = Vec::new();
         let mut barriers: HashMap<(usize, u64), Barrier> = HashMap::new();
         let mut group_size: HashMap<u64, usize> = HashMap::new();
@@ -121,10 +172,14 @@ impl MoleExecution {
             virtual_release: 0.0,
         });
 
-        while !queue.is_empty() || !in_flight.is_empty() {
-            // submit as much as backpressure allows
+        while !queue.is_empty() || !pending.is_empty() || !in_flight.is_empty() {
+            // submit as much as backpressure allows: queued items first,
+            // then rows streamed from columnar explorations
             while in_flight.len() < self.max_in_flight {
-                let Some(mut item) = queue.pop_front() else { break };
+                let next = queue.pop_front().or_else(|| {
+                    next_streamed(&mut pending, &mut tickets, &mut next_ticket)
+                });
+                let Some(mut item) = next else { break };
                 let capsule = &self.puzzle.capsules[item.capsule.0];
                 // sources run on the coordinator, just before delegation
                 for source in &capsule.sources {
@@ -200,33 +255,57 @@ impl MoleExecution {
                             });
                         }
                         Transition::Explore { to, sampling, .. } => {
-                            let samples = sampling.sample(&merged, &mut self.rng);
                             let group = next_ticket;
                             next_ticket += 1;
                             tickets.insert(
                                 group,
                                 TicketInfo { parent: item.ticket, is_group: true },
                             );
-                            group_size.insert(group, samples.len());
-                            if samples.is_empty() {
-                                return Err(Error::InvalidWorkflow(format!(
-                                    "sampling `{}` produced no samples",
-                                    sampling.name()
-                                )));
-                            }
-                            for s in samples {
-                                let child = next_ticket;
-                                next_ticket += 1;
-                                tickets.insert(
-                                    child,
-                                    TicketInfo { parent: group, is_group: false },
-                                );
-                                queue.push_back(WorkItem {
-                                    capsule: *to,
-                                    ctx: s,
-                                    ticket: child,
+                            if sampling.is_columnar() {
+                                // stream: keep the design columnar, mint
+                                // child contexts only at submission time
+                                let mut matrix =
+                                    SampleMatrix::new(sampling.columns());
+                                sampling.sample_into(&mut matrix, &mut self.rng)?;
+                                if matrix.is_empty() {
+                                    return Err(Error::InvalidWorkflow(format!(
+                                        "sampling `{}` produced no samples",
+                                        sampling.name()
+                                    )));
+                                }
+                                group_size.insert(group, matrix.len());
+                                pending.push_back(PendingExplore {
+                                    to: *to,
+                                    base: merged.clone(),
+                                    matrix,
+                                    next_row: 0,
+                                    group,
                                     virtual_release: job_report.virtual_end,
                                 });
+                            } else {
+                                let samples =
+                                    sampling.sample(&merged, &mut self.rng);
+                                group_size.insert(group, samples.len());
+                                if samples.is_empty() {
+                                    return Err(Error::InvalidWorkflow(format!(
+                                        "sampling `{}` produced no samples",
+                                        sampling.name()
+                                    )));
+                                }
+                                for s in samples {
+                                    let child = next_ticket;
+                                    next_ticket += 1;
+                                    tickets.insert(
+                                        child,
+                                        TicketInfo { parent: group, is_group: false },
+                                    );
+                                    queue.push_back(WorkItem {
+                                        capsule: *to,
+                                        ctx: s,
+                                        ticket: child,
+                                        virtual_release: job_report.virtual_end,
+                                    });
+                                }
                             }
                         }
                         Transition::Aggregate { to, .. } => {
@@ -439,6 +518,62 @@ mod tests {
         let mut ys = result.outputs[0].get(&y.array()).unwrap();
         ys.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(ys, vec![0.0, 1.0, 4.0, 9.0]);
+    }
+
+    #[test]
+    fn streamed_columnar_explore_respects_backpressure() {
+        // a 100-row columnar exploration with only 4 submission slots:
+        // contexts are minted row by row as capacity frees up, and the
+        // aggregate still sees every sample exactly once
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let mut p = Puzzle::new();
+        let entry = p.capsule(Arc::new(IdentityTask::new("entry")));
+        let model = p.capsule(Arc::new(
+            ClosureTask::new("double", {
+                let (x, y) = (x.clone(), y.clone());
+                move |ctx| Ok(Context::new().with(&y, ctx.get(&x)? * 2.0))
+            })
+            .input(&x)
+            .output(&y),
+        ));
+        let collect = p.capsule(Arc::new(IdentityTask::new("collect")));
+        p.explore(
+            entry,
+            Arc::new(FullFactorial::new(vec![Factor::new(&x, 1.0, 100.0, 1.0)])),
+            model,
+        );
+        p.aggregate(model, collect);
+        let mut exec = MoleExecution::new(p, local(), 9);
+        exec.max_in_flight = 4;
+        let result = exec.start().unwrap();
+        assert_eq!(result.report.jobs, 2 + 100);
+        let mut ys = result.outputs[0].get(&y.array()).unwrap();
+        ys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(ys.len(), 100);
+        assert_eq!(ys[0], 2.0);
+        assert_eq!(ys[99], 200.0);
+    }
+
+    #[test]
+    fn context_only_explore_still_materialises() {
+        use crate::exploration::sampling::ExplicitSampling;
+        let x = val_f64("x");
+        let mut p = Puzzle::new();
+        let entry = p.capsule(Arc::new(IdentityTask::new("entry")));
+        let model = p.capsule(Arc::new(IdentityTask::new("model")));
+        let collect = p.capsule(Arc::new(IdentityTask::new("collect")));
+        let samples = ExplicitSampling::new(vec![
+            Context::new().with(&x, 1.0),
+            Context::new().with(&x, 2.0),
+            Context::new().with(&x, 3.0),
+        ]);
+        p.explore(entry, Arc::new(samples), model);
+        p.aggregate(model, collect);
+        let result = MoleExecution::new(p, local(), 10).start().unwrap();
+        let mut xs = result.outputs[0].get(&x.array()).unwrap();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(xs, vec![1.0, 2.0, 3.0]);
     }
 
     #[test]

@@ -70,6 +70,58 @@ fn run_falls_back_without_artifacts() {
 }
 
 #[test]
+fn explore_sweeps_and_writes_incremental_csv() {
+    let dir = std::env::temp_dir();
+    let csv = dir.join(format!("molers-cli-explore-{}.csv", std::process::id()));
+    let journal = dir.join(format!("molers-cli-explore-{}.jsonl", std::process::id()));
+    let out = molers()
+        .env("MOLERS_ARTIFACTS", "/nonexistent-artifacts")
+        .args(["explore", "--sampling", "sobol", "--n", "12", "--chunk", "5"])
+        .args(["--envs", "local:2,local:2~0.3", "--seed", "9"])
+        .arg("--out")
+        .arg(&csv)
+        .arg("--journal")
+        .arg(&journal)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("sampling: Sobol (12 rows"), "stdout: {text}");
+    assert!(text.contains("rows=12 evaluated=12 resumed=0"), "stdout: {text}");
+    let csv_text = std::fs::read_to_string(&csv).unwrap();
+    assert_eq!(csv_text.lines().count(), 13, "header + 12 rows");
+    assert!(csv_text.starts_with("gDiffusionRate,gEvaporationRate,food1,food2,food3\n"));
+    let journal_text = std::fs::read_to_string(&journal).unwrap();
+    assert!(journal_text.contains("\"kind\":\"sample_block\""));
+    let _ = std::fs::remove_file(&csv);
+    let _ = std::fs::remove_file(&journal);
+}
+
+#[test]
+fn explore_resume_rejects_mismatched_seed() {
+    let dir = std::env::temp_dir();
+    let journal = dir.join(format!("molers-cli-exmis-{}.jsonl", std::process::id()));
+    std::fs::write(
+        &journal,
+        "{\"kind\":\"run_start\",\"run\":\"explore\",\"seed\":1,\"sampling\":\"LHS\",\"n\":4,\"chunk\":2,\"resumed_rows\":0}\n",
+    )
+    .unwrap();
+    let out = molers()
+        .env("MOLERS_ARTIFACTS", "/nonexistent-artifacts")
+        .args(["explore", "--n", "4", "--seed", "2", "--resume"])
+        .arg(&journal)
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("config mismatch"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let _ = std::fs::remove_file(&journal);
+}
+
+#[test]
 fn bad_option_value_is_a_clean_error() {
     let out = molers()
         .env("MOLERS_ARTIFACTS", "/nonexistent-artifacts")

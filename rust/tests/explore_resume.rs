@@ -1,0 +1,205 @@
+//! Kill-mid-sweep + `--resume` integration (§Exploration acceptance): a
+//! sweep killed partway — simulated by truncating its journal to a prefix
+//! of `sample_block` checkpoints and tearing the final line, exactly what
+//! a `kill -9` leaves behind — must resume over a failing broker, skip the
+//! checkpointed rows, and produce a **byte-identical** result file.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use molers::broker::{journal, Broker, Journal};
+use molers::evolution::evaluator::{CountingEvaluator, Zdt1Evaluator};
+use molers::exec::ThreadPool;
+use molers::exploration::{row_seed, LhsSampling, Sampling, Sweep};
+use molers::prelude::*;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("molers-explore-{}-{name}", std::process::id()))
+}
+
+fn sampling(n: usize) -> Arc<dyn Sampling> {
+    let x = val_f64("x0");
+    let y = val_f64("x1");
+    Arc::new(LhsSampling::new(&[(&x, 0.0, 1.0), (&y, 0.0, 1.0)], n))
+}
+
+/// A broker over one healthy and one 50%-failing local backend: every
+/// chunk survives via re-routing, as in the acceptance scenario.
+fn flaky_broker(seed: u64) -> Broker {
+    let pool = Arc::new(ThreadPool::new(2));
+    Broker::from_spec("local:2,local:2~0.5", pool, seed).unwrap()
+}
+
+/// Simulate `kill -9`: keep the journal's `run_start` plus the first
+/// `keep_blocks` checkpoints, then a torn half-written line.
+fn killed_journal(full: &Path, cut: &Path, keep_blocks: usize) -> usize {
+    let text = std::fs::read_to_string(full).unwrap();
+    let mut out = String::new();
+    let mut kept_rows = 0;
+    let mut blocks = 0;
+    for line in text.lines() {
+        let is_block = line.contains("\"kind\":\"sample_block\"");
+        if is_block && blocks >= keep_blocks {
+            continue;
+        }
+        if line.contains("\"kind\":\"env_stats\"") || line.contains("\"kind\":\"run_end\"") {
+            continue;
+        }
+        if is_block {
+            blocks += 1;
+            let rec = molers::util::json::parse(line).unwrap();
+            kept_rows += rec.get("rows").unwrap().as_usize().unwrap();
+        }
+        out.push_str(line);
+        out.push('\n');
+    }
+    out.push_str("{\"kind\":\"sample_blo"); // torn mid-write
+    std::fs::write(cut, out).unwrap();
+    kept_rows
+}
+
+fn run_sweep(
+    n: usize,
+    chunk: usize,
+    seed: u64,
+    journal_path: &Path,
+    out_path: &Path,
+    format: TableFormat,
+    resume: Option<&[journal::SampleBlock]>,
+) -> molers::exploration::SweepResult {
+    let columns = ["x0", "x1", "f1", "f2"];
+    let writer = Arc::new(RowWriter::create(out_path, format, &columns).unwrap());
+    let j = if resume.is_some() {
+        Journal::append_to(journal_path).unwrap()
+    } else {
+        Journal::create(journal_path).unwrap()
+    };
+    let env = flaky_broker(seed ^ 0xB10C);
+    Sweep::new(sampling(n), Arc::new(Zdt1Evaluator { dim: 2 }), &["f1", "f2"])
+        .chunk(chunk)
+        .journal(Arc::new(j))
+        .writer(writer)
+        .run_resumable(&env, seed, resume)
+        .unwrap()
+}
+
+#[test]
+fn kill_and_resume_reaches_byte_identical_csv() {
+    let (n, chunk, seed) = (60, 8, 7u64);
+    let full_j = tmp("full.jsonl");
+    let full_csv = tmp("full.csv");
+    let cut_j = tmp("cut.jsonl");
+    let cut_csv = tmp("cut.csv");
+
+    // uninterrupted reference run, through a failing broker
+    let full = run_sweep(n, chunk, seed, &full_j, &full_csv, TableFormat::Csv, None);
+    assert_eq!(full.evaluated, n);
+    let want = std::fs::read(&full_csv).unwrap();
+    assert_eq!(
+        want.iter().filter(|&&b| b == b'\n').count(),
+        n + 1,
+        "header + one row per sample"
+    );
+
+    // kill after 3 checkpointed blocks (completion order — possibly
+    // including the short tail block), torn final line included
+    let kept_rows = killed_journal(&full_j, &cut_j, 3);
+    assert!(kept_rows > 0 && kept_rows < n);
+
+    // resume: restored rows are not re-evaluated...
+    let records = Journal::load(&cut_j).unwrap();
+    let blocks = journal::sample_blocks(&records);
+    assert_eq!(blocks.len(), 3);
+    let resumed = run_sweep(
+        n,
+        chunk,
+        seed,
+        &cut_j,
+        &cut_csv,
+        TableFormat::Csv,
+        Some(&blocks),
+    );
+    assert_eq!(resumed.resumed, kept_rows);
+    assert_eq!(resumed.evaluated, n - kept_rows);
+
+    // ...and the result file is byte-identical to the uninterrupted run's
+    let got = std::fs::read(&cut_csv).unwrap();
+    assert_eq!(got, want, "resumed CSV must be byte-identical");
+
+    // the resumed journal is whole again: torn tail repaired, all blocks
+    // loadable, run_end present
+    let records = Journal::load(&cut_j).unwrap();
+    let total_rows: usize = journal::sample_blocks(&records)
+        .iter()
+        .map(|b| b.objectives.len())
+        .sum();
+    assert_eq!(total_rows, n, "old + new checkpoints cover the design");
+    assert!(records
+        .iter()
+        .any(|r| r.get("kind").and_then(|k| k.as_str()) == Some("run_end")));
+
+    for p in [&full_j, &full_csv, &cut_j, &cut_csv] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn kill_and_resume_reaches_byte_identical_jsonl() {
+    let (n, chunk, seed) = (30, 5, 11u64);
+    let full_j = tmp("fullj.jsonl");
+    let full_out = tmp("full-rows.jsonl");
+    let cut_j = tmp("cutj.jsonl");
+    let cut_out = tmp("cut-rows.jsonl");
+
+    run_sweep(n, chunk, seed, &full_j, &full_out, TableFormat::Jsonl, None);
+    killed_journal(&full_j, &cut_j, 2);
+    let blocks = journal::sample_blocks(&Journal::load(&cut_j).unwrap());
+    run_sweep(
+        n,
+        chunk,
+        seed,
+        &cut_j,
+        &cut_out,
+        TableFormat::Jsonl,
+        Some(&blocks),
+    );
+    assert_eq!(
+        std::fs::read(&cut_out).unwrap(),
+        std::fs::read(&full_out).unwrap(),
+        "resumed JSONL must be byte-identical"
+    );
+    for p in [&full_j, &full_out, &cut_j, &cut_out] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn resumed_rows_are_never_reevaluated_and_seeds_are_positional() {
+    // per-row seeds are a pure function of (sweep seed, row): any subset
+    // re-evaluated on any backend reproduces the same objectives
+    assert_eq!(row_seed(42, 7), row_seed(42, 7));
+    assert_ne!(row_seed(42, 7), row_seed(42, 8));
+    assert_ne!(row_seed(42, 7), row_seed(43, 7));
+
+    let (n, chunk, seed) = (40, 10, 3u64);
+    let full_j = tmp("count-full.jsonl");
+    let full_csv = tmp("count-full.csv");
+    let full = run_sweep(n, chunk, seed, &full_j, &full_csv, TableFormat::Csv, None);
+
+    let cut_j = tmp("count-cut.jsonl");
+    let kept = killed_journal(&full_j, &cut_j, 2);
+    let blocks = journal::sample_blocks(&Journal::load(&cut_j).unwrap());
+
+    let counting = Arc::new(CountingEvaluator::new(Zdt1Evaluator { dim: 2 }));
+    let env = LocalEnvironment::new(2);
+    let resumed = Sweep::new(sampling(n), Arc::clone(&counting) as _, &["f1", "f2"])
+        .chunk(chunk)
+        .run_resumable(&env, seed, Some(&blocks))
+        .unwrap();
+    assert_eq!(counting.count() as usize, n - kept);
+    assert_eq!(resumed.objectives, full.objectives);
+
+    for p in [&full_j, &full_csv, &cut_j] {
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -414,3 +414,87 @@ fn prop_json_roundtrip_arbitrary_trees() {
         assert_eq!(parsed, doc, "roundtrip mismatch for {text}");
     });
 }
+
+// ------------------------------------------------------------- samplings
+
+/// §Exploration tentpole invariant: for every columnar sampling, the
+/// streaming `sample_into` matrix path and the legacy `Context` path
+/// produce identical designs from the same RNG stream (and consume
+/// exactly the same number of draws). Meaningful for samplings that
+/// override `sample` (ProductSampling), and pins the edge adapter for the
+/// rest.
+#[test]
+fn prop_sample_into_matches_context_path() {
+    let x = val_f64("x");
+    let y = val_f64("y");
+    let seedv = val_u32("seed");
+    forall(20, |rng| {
+        let stream_seed = rng.next_u64();
+        let samplings: Vec<Arc<dyn Sampling>> = vec![
+            Arc::new(FullFactorial::new(vec![
+                Factor::new(&x, 0.0, 1.0, 0.3),
+                Factor::new(&y, -1.0, 2.0, 0.7),
+            ])),
+            Arc::new(UniformSampling::new(&x, 0.0, 10.0, 17)),
+            Arc::new(LhsSampling::new(&[(&x, 0.0, 1.0), (&y, 5.0, 9.0)], 23)),
+            Arc::new(SobolSampling::new(&[(&x, 0.0, 1.0), (&y, 0.0, 1.0)], 19)),
+            Arc::new(SeedSampling::new(&seedv, 11)),
+            Arc::new(ProductSampling::new(
+                Arc::new(FullFactorial::new(vec![Factor::new(&x, 0.0, 2.0, 1.0)])),
+                Arc::new(LhsSampling::new(&[(&y, 0.0, 1.0)], 5)),
+            )),
+        ];
+        let base = Context::new().with(&val_f64("carried"), 42.0);
+        for s in samplings {
+            let mut ctx_rng = Rng::new(stream_seed);
+            let contexts = s.sample(&base, &mut ctx_rng);
+            let mut mat_rng = Rng::new(stream_seed);
+            let mut m = SampleMatrix::new(s.columns());
+            s.sample_into(&mut m, &mut mat_rng).unwrap();
+            assert_eq!(m.len(), contexts.len(), "{} row count", s.name());
+            assert_eq!(
+                m.to_contexts(&base),
+                contexts,
+                "{} designs diverged between paths",
+                s.name()
+            );
+            assert_eq!(
+                ctx_rng.state(),
+                mat_rng.state(),
+                "{} consumed a different RNG stream per path",
+                s.name()
+            );
+            if let Some(hint) = s.size_hint() {
+                assert_eq!(hint, m.len(), "{} size_hint", s.name());
+            }
+        }
+    });
+}
+
+/// Reusing one matrix across waves must reproduce a fresh matrix's design
+/// exactly (the arena discipline cannot leak state between waves).
+#[test]
+fn prop_matrix_reuse_reproduces_fresh_designs() {
+    let x = val_f64("x");
+    let y = val_f64("y");
+    forall(15, |rng| {
+        let n = 1 + rng.usize(40);
+        let stream_seed = rng.next_u64();
+        let samplings: Vec<Arc<dyn Sampling>> = vec![
+            Arc::new(LhsSampling::new(&[(&x, 0.0, 1.0), (&y, -3.0, 3.0)], n)),
+            Arc::new(SobolSampling::new(&[(&x, 0.0, 1.0), (&y, 0.0, 1.0)], n)),
+            Arc::new(UniformSampling::multi(&[(&x, 0.0, 1.0), (&y, 0.0, 5.0)], n)),
+        ];
+        for s in samplings {
+            let mut reused = SampleMatrix::new(s.columns());
+            // dirty the matrix and its scratch with a first wave
+            s.sample_into(&mut reused, &mut Rng::new(stream_seed ^ 0xDEAD))
+                .unwrap();
+            reused.clear();
+            s.sample_into(&mut reused, &mut Rng::new(stream_seed)).unwrap();
+            let mut fresh = SampleMatrix::new(s.columns());
+            s.sample_into(&mut fresh, &mut Rng::new(stream_seed)).unwrap();
+            assert_eq!(reused.data(), fresh.data(), "{} reuse leaked state", s.name());
+        }
+    });
+}
