@@ -1,6 +1,7 @@
-//! Distribution-broker failover demo (§tentpole): one calibration, three
-//! heterogeneous backends, injected failures, a mid-run "kill", and a
-//! journaled resume that lands on the exact same Pareto front.
+//! Distribution-broker failover demo in MoleDSL v2: one calibration,
+//! three heterogeneous backends, injected failures, a mid-run "kill", and
+//! a journaled resume that lands on the exact same Pareto front — all
+//! three runs declared as [`Experiment`]s over the same custom fleet.
 //!
 //! The fleet:
 //!
@@ -17,39 +18,39 @@
 
 use std::sync::Arc;
 
-use molers::broker::{
-    journal, Broker, FlakyEnv, Journal, SpeculationConfig,
-};
+use molers::broker::{Broker, FlakyEnv, SpeculationConfig};
 use molers::cli::Args;
 use molers::environment::cluster::BatchEnvironment;
 use molers::environment::local::LocalEnvironment;
 use molers::environment::ssh::SshEnvironment;
 use molers::environment::Environment;
-use molers::evolution::{GenerationalGA, Nsga2Config, Zdt1Evaluator};
+use molers::evolution::{Nsga2Config, Zdt1Evaluator};
 use molers::exec::ThreadPool;
 use molers::prelude::*;
 
-fn fleet(pool: &Arc<ThreadPool>, seed: u64) -> Result<Broker, molers::Error> {
+fn fleet(pool: &Arc<ThreadPool>, seed: u64) -> Result<Arc<Broker>, molers::Error> {
     let flaky_pbs: Arc<dyn Environment> = Arc::new(FlakyEnv::new(
         Arc::new(BatchEnvironment::pbs(8, Arc::clone(pool), seed)),
         0.6,
         seed ^ 0xBAD,
     ));
-    Broker::builder("demo-fleet")
-        .backend(
-            Arc::new(LocalEnvironment::with_pool(Arc::clone(pool))),
-            4,
-        )
-        .backend(flaky_pbs, 8)
-        .backend(
-            Arc::new(SshEnvironment::new("slow", 2, Arc::clone(pool), seed)),
-            2,
-        )
-        .speculation(SpeculationConfig {
-            quantile: 0.9,
-            min_samples: 16,
-        })
-        .build()
+    Ok(Arc::new(
+        Broker::builder("demo-fleet")
+            .backend(
+                Arc::new(LocalEnvironment::with_pool(Arc::clone(pool))),
+                4,
+            )
+            .backend(flaky_pbs, 8)
+            .backend(
+                Arc::new(SshEnvironment::new("slow", 2, Arc::clone(pool), seed)),
+                2,
+            )
+            .speculation(SpeculationConfig {
+                quantile: 0.9,
+                min_samples: 16,
+            })
+            .build()?,
+    ))
 }
 
 fn report(tag: &str, broker: &Broker) {
@@ -98,12 +99,15 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         &[&f1, &f2],
         0.1,
     )?;
-    let ga = || {
-        GenerationalGA::new(
-            config.clone(),
-            Arc::new(Zdt1Evaluator { dim: 3 }),
-            16,
-        )
+    // the same declarative calibration, parameterised by generation budget
+    let calibrate = |generations: u32| Nsga2Evolution {
+        config: config.clone(),
+        lambda: 16,
+        generations,
+        eval_chunk: 1,
+        evaluator: Arc::new(Zdt1Evaluator { dim: 3 }),
+        kind: "zdt1".into(),
+        on_generation: None,
     };
     let journal_dir = std::env::temp_dir();
     let path_full = journal_dir.join("broker_failover_full.jsonl");
@@ -112,36 +116,42 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 1. the reference: an uninterrupted run over the faulty fleet
     println!("== uninterrupted run ({generations} generations) ==");
     let broker = fleet(&pool, 1)?;
-    let full = ga()
-        .journal(Arc::new(Journal::create(&path_full)?))
-        .run(&broker, generations, seed)?;
+    let full = Experiment::new(Box::new(calibrate(generations)))
+        .on(Arc::clone(&broker) as Arc<dyn Environment>)
+        .journal(path_full.to_string_lossy().into_owned())
+        .seed(seed)
+        .run()?;
     report("uninterrupted", &broker);
 
     // 2. the same run, "killed" after kill_after generations
     println!("\n== journaled run killed after generation {kill_after} ==");
     let broker2 = fleet(&pool, 2)?;
-    ga().journal(Arc::new(Journal::create(&path_cut)?))
-        .run(&broker2, kill_after, seed)?;
+    Experiment::new(Box::new(calibrate(kill_after)))
+        .on(Arc::clone(&broker2) as Arc<dyn Environment>)
+        .journal(path_cut.to_string_lossy().into_owned())
+        .seed(seed)
+        .run()?;
     report("killed", &broker2);
 
-    // 3. resume from the journal on a fresh fleet and finish
+    // 3. resume from the journal on a fresh fleet and finish — the
+    //    experiment validates the journal's configuration, restores the
+    //    checkpoint and continues
     println!("\n== --resume from {} ==", path_cut.display());
-    let resume = journal::load_resume(&path_cut)?
-        .expect("journal holds a generation checkpoint");
-    println!(
-        "resuming at generation {} with {} evaluations done",
-        resume.generation + 1,
-        resume.evaluations
-    );
     let broker3 = fleet(&pool, 3)?;
-    let resumed = ga()
-        .journal(Arc::new(Journal::append_to(&path_cut)?))
-        .run_resumable(&broker3, generations, seed, Some(resume))?;
+    let resumed = Experiment::new(Box::new(calibrate(generations)))
+        .on(Arc::clone(&broker3) as Arc<dyn Environment>)
+        .resume(path_cut.to_string_lossy().into_owned())
+        .seed(seed)
+        .run()?;
     report("resumed", &broker3);
 
     // 4. the punchline: bit-identical Pareto fronts
-    let front = |r: &molers::evolution::EvolutionResult| -> Vec<Vec<f64>> {
-        r.pareto_front.iter().map(|i| i.objectives.clone()).collect()
+    let front = |r: &molers::workflow::ExperimentReport| -> Vec<Vec<f64>> {
+        r.outcome
+            .pareto_front
+            .iter()
+            .map(|i| i.objectives.clone())
+            .collect()
     };
     assert_eq!(
         front(&full),
@@ -151,8 +161,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!(
         "\nkill + resume reproduced the uninterrupted Pareto front exactly \
          ({} points, {} evaluations) despite 60% injected submission loss.",
-        full.pareto_front.len(),
-        resumed.evaluations
+        full.outcome.pareto_front.len(),
+        resumed.outcome.evaluations
     );
     let _ = std::fs::remove_file(&path_full);
     let _ = std::fs::remove_file(&path_cut);

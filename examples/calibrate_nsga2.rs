@@ -1,7 +1,8 @@
-//! Calibration — paper Listing 4: generational NSGA-II (mu=10, lambda=10,
-//! 100 generations, reevaluate=0.01) minimising the median first-empty
-//! tick of each food source over (diffusion-rate, evaporation-rate) in
-//! (0, 99)².
+//! Calibration — paper Listing 4 in MoleDSL v2: generational NSGA-II
+//! (mu=10, lambda=10, 100 generations, reevaluate=0.01) minimising the
+//! median first-empty tick of each food source over
+//! (diffusion-rate, evaporation-rate) in (0, 99)², as one declarative
+//! [`Experiment`] over the [`Nsga2Evolution`] method.
 //!
 //!     cargo run --release --example calibrate_nsga2 [-- --generations 100]
 //!
@@ -10,9 +11,7 @@
 use std::sync::Arc;
 
 use molers::cli::Args;
-use molers::evolution::{
-    GenerationalGA, Nsga2Config, PooledEvaluator, ReplicatedEvaluator,
-};
+use molers::evolution::{Nsga2Config, PooledEvaluator, ReplicatedEvaluator};
 use molers::prelude::*;
 use molers::runtime::best_available_evaluator;
 
@@ -23,7 +22,6 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
 
     let (base, kind) = best_available_evaluator(2);
-    println!("model backend: {kind}");
     // replicateModel: 5-seed median fitness (Listing 3 feeding Listing 4).
     // The replication wrapper flattens genomes × seeds into one batch, and
     // the pooled layer fans that batch out over the machine's cores.
@@ -46,35 +44,47 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         0.01,
     )?;
 
-    // GenerationalGA(evolution)(replicateModel, lambda = 10)
+    // SavePopulationHook("/tmp/ants/") + DisplayHook("Generation ...")
     let csv = CsvHook::new(
         "/tmp/ants/population.csv",
         &["generation", "gDiffusionRate", "gEvaporationRate", "f1", "f2", "f3"],
     );
+    let on_generation = Arc::new(move |generation: u32, population: &molers::evolution::PopMatrix| {
+        println!("Generation {generation}");
+        for i in 0..population.len() {
+            let genome = population.genome(i);
+            let objectives = population.objectives_row(i);
+            let mut ctx = Context::new();
+            ctx.set(&val_f64("generation"), f64::from(generation));
+            ctx.set(&val_f64("gDiffusionRate"), genome[0]);
+            ctx.set(&val_f64("gEvaporationRate"), genome[1]);
+            ctx.set(&val_f64("f1"), objectives[0]);
+            ctx.set(&val_f64("f2"), objectives[1]);
+            ctx.set(&val_f64("f3"), objectives[2]);
+            let _ = csv.process(&ctx);
+        }
+    });
+
+    // GenerationalGA(evolution)(replicateModel, lambda = 10), declaratively:
     // eval_chunk packs each generation's wave through evaluate_batch, so
     // the pooled evaluator sees the whole lambda at once (§Perf tentpole)
-    let nsga2 = GenerationalGA::new(evolution, evaluator, 10).eval_chunk(10).on_generation(
-        move |generation, population| {
-            // DisplayHook("Generation ${generation}")
-            println!("Generation {generation}");
-            for i in 0..population.len() {
-                let genome = population.genome(i);
-                let objectives = population.objectives_row(i);
-                let mut ctx = Context::new();
-                ctx.set(&val_f64("generation"), f64::from(generation));
-                ctx.set(&val_f64("gDiffusionRate"), genome[0]);
-                ctx.set(&val_f64("gEvaporationRate"), genome[1]);
-                ctx.set(&val_f64("f1"), objectives[0]);
-                ctx.set(&val_f64("f2"), objectives[1]);
-                ctx.set(&val_f64("f3"), objectives[2]);
-                let _ = csv.process(&ctx); // SavePopulationHook("/tmp/ants/")
-            }
-        },
-    );
+    let experiment = Experiment::new(Box::new(Nsga2Evolution {
+        config: evolution,
+        lambda: 10,
+        generations,
+        eval_chunk: 10,
+        evaluator,
+        kind: kind.to_string(),
+        on_generation: Some(on_generation),
+    }))
+    .env(EnvSpec::Single {
+        name: "local".into(),
+        nodes: threads,
+    })
+    .seed(42);
 
-    let env = LocalEnvironment::new(threads);
-    let result = nsga2.run(&env, generations, 42)?;
-
+    let report = experiment.run()?;
+    let result = &report.outcome;
     println!(
         "\n{} evaluations; final Pareto front ({} points):",
         result.evaluations,

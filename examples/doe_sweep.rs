@@ -1,18 +1,18 @@
 //! Design of experiments — §2's "generic tools to explore large parameter
-//! sets": a full-factorial sweep of (diffusion-rate, evaporation-rate)
-//! delegated to a simulated PBS cluster, with the one-line environment
-//! switch of §2.2.
+//! sets" in MoleDSL v2: a full-factorial sweep of (diffusion-rate,
+//! evaporation-rate) delegated to a simulated PBS cluster through the
+//! paper's combinators — `entry -< model >- collect`, `model on env`,
+//! `collect hook csv` — each a chainable method on a typed capsule handle.
 //!
 //!     cargo run --release --example doe_sweep [-- --env slurm --step 24.75]
 
 use std::sync::Arc;
 
 use molers::cli::Args;
-use molers::environment::cluster::BatchEnvironment;
-use molers::environment::ssh::SshEnvironment;
 use molers::exec::ThreadPool;
 use molers::prelude::*;
 use molers::runtime::best_available_evaluator;
+use molers::workflow::single_environment;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args = Args::parse(std::env::args().skip(1))?;
@@ -62,30 +62,24 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         sampling.size()
     );
 
-    // the one-line environment switch
+    // the one-line environment switch (a typo'd name is a hard error)
     let pool = Arc::new(ThreadPool::default_size());
-    let env: Arc<dyn Environment> = match env_name.as_str() {
-        "local" => Arc::new(LocalEnvironment::with_pool(pool)),
-        "ssh" => Arc::new(SshEnvironment::new("calc01", 8, pool, 7)),
-        "slurm" => Arc::new(BatchEnvironment::slurm(16, pool, 7)),
-        "condor" => Arc::new(BatchEnvironment::condor(16, pool, 7)),
-        _ => Arc::new(BatchEnvironment::pbs(16, pool, 7)),
-    };
+    let env = single_environment(&env_name, 16, pool, 7)?;
 
-    let mut puzzle = Puzzle::new();
-    let entry = puzzle.capsule(Arc::new(IdentityTask::new("entry")));
-    let model_c = puzzle.capsule(Arc::new(model));
-    let collect = puzzle.capsule(Arc::new(IdentityTask::new("collect")));
-    puzzle.explore(entry, Arc::new(sampling), model_c);
-    puzzle.aggregate(model_c, collect);
-    puzzle.on(model_c, Arc::clone(&env));
-    puzzle.hook(
-        collect,
-        Arc::new(CsvHook::new(
-            "/tmp/ants/doe.csv",
-            &["gDiffusionRate", "gEvaporationRate", "food1", "food2", "food3"],
-        )),
-    );
+    // --- the paper's combinators, as chainable methods ---------------------
+    let b = PuzzleBuilder::new();
+    let entry = b.task(IdentityTask::new("entry"));
+    let model_c = b.task(model);
+    let collect = b.task(IdentityTask::new("collect"));
+    entry.explore(Arc::new(sampling), &model_c); // entry -< model
+    model_c.aggregate(&collect); //                 model >- collect
+    model_c.on(Arc::clone(&env)); //                model on env
+    collect.hook(Arc::new(CsvHook::new(
+        //                                          collect hook csv
+        "/tmp/ants/doe.csv",
+        &["gDiffusionRate", "gEvaporationRate", "food1", "food2", "food3"],
+    )));
+    let puzzle = b.build()?; // typed wiring proven before any submission
 
     let result = MoleExecution::new(puzzle, Arc::new(LocalEnvironment::new(2)), 7)
         .start()?;

@@ -1,5 +1,6 @@
-//! End-to-end driver — paper Listing 5 + §4.6 headline: island-model
-//! NSGA-II on the (simulated) European Grid Infrastructure.
+//! End-to-end driver — paper Listing 5 + §4.6 headline in MoleDSL v2:
+//! island-model NSGA-II on the (simulated) European Grid Infrastructure,
+//! as one declarative [`Experiment`] over the [`IslandEvolution`] method.
 //!
 //! "The example shows how an initialisation of the GA with a population of
 //! 200,000 individuals can be evaluated in one hour on the European Grid
@@ -21,10 +22,7 @@
 use std::sync::Arc;
 
 use molers::cli::Args;
-use molers::environment::egi::EgiEnvironment;
-use molers::environment::Environment;
-use molers::evolution::{IslandConfig, IslandSteadyGA, Nsga2Config};
-use molers::exec::ThreadPool;
+use molers::evolution::{IslandConfig, Nsga2Config};
 use molers::metrics::throughput_per_hour;
 use molers::prelude::*;
 use molers::runtime::best_available_evaluator;
@@ -42,10 +40,6 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
          evaluations, {total} total"
     );
 
-    // val env = EGIEnvironment("biomed", openMOLEMemory = 1200, wallTime = 4 hours)
-    let pool = Arc::new(ThreadPool::default_size());
-    let env = EgiEnvironment::new("biomed", islands, pool, 42);
-
     let g_diffusion = val_f64("gDiffusionRate");
     let g_evaporation = val_f64("gEvaporationRate");
     let med1 = val_f64("medNumberFood1");
@@ -61,35 +55,38 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     )?;
 
     // IslandSteadyGA(evolution, replicateModel)(islands, totalEvals, 50)
-    let ga = IslandSteadyGA::new(
-        evolution,
-        IslandConfig {
+    // on EGIEnvironment("biomed", ...) — the experiment builds the grid
+    let experiment = Experiment::new(Box::new(IslandEvolution {
+        config: evolution,
+        islands: IslandConfig {
             concurrent_islands: islands,
             total_evaluations: total,
             island_sample: 50,
             evals_per_island: per_island,
         },
         evaluator,
-    );
-
-    let t0 = std::time::Instant::now();
-    let result = ga.run(
-        &env,
-        42,
-        Some(Arc::new(move |done, evals| {
+        kind: kind.to_string(),
+        on_island: Some(Arc::new(move |done, evals| {
             if done % 16 == 0 || done == islands as u64 {
                 println!("Generation {done} islands merged ({evals} evaluations)");
             }
         })),
-    )?;
-    let wall = t0.elapsed();
-    let stats = env.stats();
+    }))
+    .env(EnvSpec::Single {
+        name: "egi".into(),
+        nodes: islands,
+    })
+    .seed(42);
+
+    let report = experiment.run()?;
+    let result = &report.outcome;
+    let stats = &report.env_stats;
 
     // --- the paper's headline, in its own units ----------------------------
     let per_hour = throughput_per_hour(result.evaluations, result.virtual_makespan);
     let scale = 2000.0 / islands as f64;
     println!("\n=== E4: island model on simulated EGI ===");
-    println!("real wall-clock            : {wall:?}");
+    println!("real wall-clock            : {:?}", report.wall);
     println!("virtual makespan           : {:.0} s", result.virtual_makespan);
     println!("evaluations                : {}", result.evaluations);
     println!("throughput                 : {per_hour:.0} evaluations/virtual-hour");

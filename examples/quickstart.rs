@@ -1,10 +1,13 @@
-//! Quickstart — paper Listing 2: embed the ant model as a task, run it
-//! once with explicit parameters, observe the outputs through a hook.
+//! Quickstart — paper Listing 2 in MoleDSL v2: embed the ant model as a
+//! task, run it once with explicit parameters, observe the outputs
+//! through a hook.
 //!
 //!     cargo run --release --example quickstart [-- --render]
 //!
 //! Uses the PJRT-compiled JAX+Pallas model if `make artifacts` was run,
-//! else the pure-Rust twin.
+//! else the pure-Rust twin. The puzzle is built with [`PuzzleBuilder`],
+//! so the wiring (inputs supplied, types compatible) is *proven* at
+//! `build()` — before any job runs.
 
 use std::sync::Arc;
 
@@ -59,11 +62,11 @@ fn main() -> molers::Result<()> {
         .output(&food3)
     };
 
-    // --- hook + single-task workflow ---------------------------------------
-    let display_hook = ToStringHook::new(&["food1", "food2", "food3"]);
-    let mut puzzle = Puzzle::new();
-    let c = puzzle.capsule(Arc::new(ants));
-    puzzle.hook(c, Arc::new(display_hook));
+    // --- MoleDSL v2: one capsule, one hook, validated at build() -----------
+    let builder = PuzzleBuilder::new();
+    let capsule = builder.task(ants);
+    capsule.hook(Arc::new(ToStringHook::new(&["food1", "food2", "food3"])));
+    let puzzle = builder.build()?; // typed wiring proven here
 
     let env: Arc<dyn Environment> = Arc::new(LocalEnvironment::new(1));
     let result = MoleExecution::new(puzzle, env, 1).start()?;

@@ -1,7 +1,7 @@
-//! Replication — paper Listing 3: run the stochastic ant model under five
-//! independent seeds and aggregate each objective with a median
-//! (`StatisticTask`), all through the workflow engine's explore/aggregate
-//! transitions.
+//! Replication — paper Listing 3 in MoleDSL v2: run the stochastic ant
+//! model under five independent seeds and aggregate each objective with a
+//! median (`StatisticTask`), as one declarative [`Experiment`] over the
+//! [`Replication`] exploration method.
 //!
 //!     cargo run --release --example replication
 
@@ -20,7 +20,6 @@ fn main() -> molers::Result<()> {
     ];
 
     let (evaluator, kind) = best_available_evaluator(1);
-    println!("model backend: {kind}");
 
     // model capsule (parameters fixed at Listing 2's defaults)
     let model = {
@@ -45,31 +44,34 @@ fn main() -> molers::Result<()> {
         statistic = statistic.statistic(f, m, Descriptor::Median);
     }
 
-    // Replicate(modelCapsule, seedFactor take 5, statisticCapsule)
-    let mut puzzle = Puzzle::new();
-    let (_, model_c, stat_c) = replicate(
-        &mut puzzle,
-        Arc::new(model),
-        &seed,
-        5,
-        Arc::new(statistic),
-    );
-    // displayOutputs / displayMedians hooks
-    puzzle.hook(model_c, Arc::new(ToStringHook::new(&["food1", "food2", "food3"])));
-    puzzle.hook(
-        stat_c,
-        Arc::new(ToStringHook::new(&[
+    // Replicate(modelCapsule, seedFactor take 5, statisticCapsule) — the
+    // experiment wires `entry -< model >- statistic`, validates the typed
+    // dataflow (seed: u32 from the sampling, food arrays into the
+    // statistic) and runs it on the chosen environment
+    let experiment = Experiment::new(Box::new(Replication {
+        model: Arc::new(model),
+        seed_val: seed,
+        replications: 5,
+        statistic: Arc::new(statistic),
+        kind: kind.to_string(),
+        // displayOutputs / displayMedians hooks
+        model_hooks: vec![Arc::new(ToStringHook::new(&["food1", "food2", "food3"]))],
+        statistic_hooks: vec![Arc::new(ToStringHook::new(&[
             "medNumberFood1",
             "medNumberFood2",
             "medNumberFood3",
-        ])),
-    );
+        ]))],
+    }))
+    .env(EnvSpec::Single {
+        name: "local".into(),
+        nodes: 4,
+    })
+    .seed(42);
 
-    let env: Arc<dyn Environment> = Arc::new(LocalEnvironment::new(4));
-    let result = MoleExecution::new(puzzle, env, 42).start()?;
+    let report = experiment.run()?;
     println!(
         "replication workflow: {} jobs (1 entry + 5 models + 1 statistic) in {:?}",
-        result.report.jobs, result.report.wall
+        report.outcome.jobs, report.wall
     );
     Ok(())
 }

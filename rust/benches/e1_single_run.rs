@@ -48,10 +48,12 @@ fn main() {
         })
         .input(&seed_val)
         .output(&food1);
-        let mut p = Puzzle::new();
-        p.capsule(Arc::new(task));
+        let builder = PuzzleBuilder::new();
+        builder.task(task);
+        let init = Context::new().with(&seed_val, n);
+        let p = builder.build_with(&init).unwrap();
         MoleExecution::new(p, Arc::new(LocalEnvironment::new(1)), u64::from(n))
-            .start_with(Context::new().with(&seed_val, n))
+            .start_with(init)
             .unwrap()
     });
 }

@@ -29,11 +29,15 @@ fn replication_workflow(
         .output(&food1)
     };
     let stat = StatisticTask::new().statistic(&food1, &med1, Descriptor::Median);
-    let mut p = Puzzle::new();
-    replicate(&mut p, Arc::new(model), &seed_val, replications, Arc::new(stat));
-    let result = MoleExecution::new(p, Arc::new(LocalEnvironment::new(4)), seed)
-        .start()
-        .unwrap();
+    let b = PuzzleBuilder::new();
+    replicate(&b, Arc::new(model), &seed_val, replications, Arc::new(stat));
+    let result = MoleExecution::new(
+        b.build().unwrap(),
+        Arc::new(LocalEnvironment::new(4)),
+        seed,
+    )
+    .start()
+    .unwrap();
     result.outputs.into_iter().next().unwrap()
 }
 

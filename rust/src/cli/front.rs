@@ -1,0 +1,384 @@
+//! The `molers` CLI front: one function per subcommand, each parsing
+//! [`Args`] into a MoleDSL v2 [`Experiment`]. `main.rs` only dispatches
+//! and prints — every run is constructed and executed through the same
+//! typed API the examples use, with zero engine-specific env/journal/
+//! resume plumbing left in the launcher.
+
+use std::sync::Arc;
+
+use crate::cli::Args;
+use crate::core::{val_f64, val_u32, Context, Val};
+use crate::dsl::hook::{TableFormat, ToStringHook};
+use crate::dsl::task::ClosureTask;
+use crate::error::{Error, Result};
+use crate::evolution::evaluator::{Evaluator, PooledEvaluator, ReplicatedEvaluator};
+use crate::evolution::generational::Nsga2Config;
+use crate::evolution::island::IslandConfig;
+use crate::exploration::sampling::{
+    Factor, FullFactorial, LhsSampling, Sampling, SobolSampling, UniformSampling,
+};
+use crate::exploration::statistics::StatisticTask;
+use crate::runtime::best_available_evaluator;
+use crate::util::json::Json;
+use crate::util::stats::Descriptor;
+use crate::workflow::experiment::{
+    DirectSampling, EnvSpec, Experiment, IslandEvolution, Nsga2Evolution,
+    Replication, SingleRun,
+};
+
+/// Surface an `Args` parse error as a config error.
+fn num<T>(r: std::result::Result<T, String>) -> Result<T> {
+    r.map_err(Error::Config)
+}
+
+/// `--envs SPEC` (a brokered fleet, with `--policy` and `--speculate`)
+/// wins over the single-environment `--env NAME`.
+fn env_spec(args: &Args, default_env: &str, nodes: usize) -> EnvSpec {
+    if let Some(spec) = args.get("envs") {
+        EnvSpec::Fleet {
+            spec: spec.to_string(),
+            policy: args.get_or("policy", "ewma").to_string(),
+            speculate: args.flag("speculate"),
+        }
+    } else {
+        EnvSpec::Single {
+            name: args.get_or("env", default_env).to_string(),
+            nodes,
+        }
+    }
+}
+
+/// Apply the flags every subcommand shares: `--seed`, `--journal`,
+/// `--resume`. Both paths are forwarded verbatim — the `Experiment`
+/// rejects the `--journal` + `--resume` combination (and `--journal` on
+/// methods that never checkpoint) with a clear error instead of the CLI
+/// silently dropping a flag.
+fn with_common(mut exp: Experiment, args: &Args) -> Result<Experiment> {
+    exp = exp.seed(num(args.u64("seed", 42))?);
+    if let Some(path) = args.get("resume") {
+        exp = exp.resume(path);
+    }
+    if let Some(path) = args.get("journal") {
+        exp = exp.journal(path);
+    }
+    Ok(exp)
+}
+
+/// The calibration genome: (diffusion, evaporation) bounds and the three
+/// median objectives of paper Listing 4.
+pub fn genome_bounds() -> (Val<f64>, Val<f64>, Vec<Val<f64>>) {
+    (
+        val_f64("gDiffusionRate"),
+        val_f64("gEvaporationRate"),
+        vec![
+            val_f64("medNumberFood1"),
+            val_f64("medNumberFood2"),
+            val_f64("medNumberFood3"),
+        ],
+    )
+}
+
+/// Listing 2: one model execution with explicit parameters.
+pub fn run(args: &Args) -> Result<Experiment> {
+    let (evaluator, kind) = best_available_evaluator(1);
+    let method = SingleRun {
+        evaluator,
+        kind: kind.to_string(),
+        population: num(args.f64("population", 125.0))?,
+        diffusion: num(args.f64("diffusion", 50.0))?,
+        evaporation: num(args.f64("evaporation", 50.0))?,
+        hooks: Vec::new(),
+    };
+    with_common(
+        Experiment::new(Box::new(method)).env(env_spec(args, "local", 1)),
+        args,
+    )
+}
+
+/// §Exploration: distributed design of experiments at calibration scale.
+pub fn explore(args: &Args) -> Result<Experiment> {
+    let n = num(args.usize("n", 1000))?;
+    let chunk = num(args.usize("chunk", 256))?;
+    let replications = num(args.usize("replications", 1))?;
+    let nodes = num(args.usize("nodes", 8))?;
+    let lo = num(args.f64("lo", 0.0))?;
+    let hi = num(args.f64("hi", 99.0))?;
+    let step = num(args.f64("step", 24.75))?;
+    let out_path = args.get_or("out", "explore.csv").to_string();
+    let format = match args.get("format") {
+        Some("csv") => TableFormat::Csv,
+        Some("jsonl") => TableFormat::Jsonl,
+        Some(other) => {
+            return Err(Error::Config(format!(
+                "unknown --format `{other}` (csv|jsonl)"
+            )))
+        }
+        None if out_path.ends_with(".jsonl") => TableFormat::Jsonl,
+        None => TableFormat::Csv,
+    };
+
+    let (d, e, _) = genome_bounds();
+    let sampling_name = args.get_or("sampling", "lhs").to_string();
+    let sampling: Arc<dyn Sampling> = match sampling_name.as_str() {
+        "lhs" => Arc::new(LhsSampling::new(&[(&d, lo, hi), (&e, lo, hi)], n)),
+        "sobol" => {
+            // validated here so an oversized design is a clean CLI error,
+            // not the SobolSampling constructor's panic
+            if n as u64 >= 1u64 << 32 {
+                return Err(Error::Config(format!(
+                    "--n {n} exceeds the Sobol sequence length (2^32 points)"
+                )));
+            }
+            Arc::new(SobolSampling::new(&[(&d, lo, hi), (&e, lo, hi)], n))
+        }
+        "uniform" => Arc::new(UniformSampling::multi(&[(&d, lo, hi), (&e, lo, hi)], n)),
+        "factorial" => {
+            // validated here so a bad value is a clean CLI error, not the
+            // Factor constructor's panic
+            if !(step.is_finite() && step > 0.0) {
+                return Err(Error::Config(format!(
+                    "--step expects a positive finite number, got `{step}`"
+                )));
+            }
+            let levels = (hi - lo) / step;
+            if !levels.is_finite() || levels >= 1e6 {
+                return Err(Error::Config(format!(
+                    "--step {step} over [{lo}, {hi}] yields ~{levels:.0} levels \
+                     per factor — refusing a grid this size"
+                )));
+            }
+            Arc::new(FullFactorial::new(vec![
+                Factor::new(&d, lo, hi, step),
+                Factor::new(&e, lo, hi, step),
+            ]))
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "unknown --sampling `{other}` (lhs|sobol|uniform|factorial)"
+            )))
+        }
+    };
+    if sampling_name != "factorial" && !(lo.is_finite() && hi.is_finite() && lo < hi) {
+        return Err(Error::Config(format!(
+            "--lo must be below --hi (both finite) for --sampling \
+             {sampling_name} (got lo={lo}, hi={hi})"
+        )));
+    }
+
+    let (base, kind) = best_available_evaluator(2);
+    let evaluator: Arc<dyn Evaluator> = if replications > 1 {
+        Arc::new(ReplicatedEvaluator::new(base, replications))
+    } else {
+        base
+    };
+    let mut meta = vec![
+        ("lo".to_string(), Json::Num(lo)),
+        ("hi".to_string(), Json::Num(hi)),
+        ("replications".to_string(), Json::Num(replications as f64)),
+    ];
+    if sampling_name == "factorial" {
+        meta.push(("step".to_string(), Json::Num(step)));
+    }
+    let method = DirectSampling {
+        sampling,
+        evaluator,
+        kind: kind.to_string(),
+        design_columns: vec![d.name().to_string(), e.name().to_string()],
+        objective_names: vec!["food1".into(), "food2".into(), "food3".into()],
+        chunk,
+        out_path,
+        format,
+        meta,
+    };
+    with_common(
+        Experiment::new(Box::new(method)).env(env_spec(args, "local", nodes)),
+        args,
+    )
+}
+
+/// Listing 3: replication + median through the workflow engine.
+pub fn replicate(args: &Args) -> Result<Experiment> {
+    let replications = num(args.usize("replications", 5))?;
+    let nodes = num(args.usize("nodes", 4))?;
+    let population = num(args.f64("population", 125.0))?;
+    let diffusion = num(args.f64("diffusion", 50.0))?;
+    let evaporation = num(args.f64("evaporation", 50.0))?;
+    let (evaluator, kind) = best_available_evaluator(1);
+
+    let seed_val = val_u32("seed");
+    let food = [val_f64("food1"), val_f64("food2"), val_f64("food3")];
+    let med = [
+        val_f64("medNumberFood1"),
+        val_f64("medNumberFood2"),
+        val_f64("medNumberFood3"),
+    ];
+    let model = {
+        let (seed_c, food_c) = (seed_val.clone(), food.clone());
+        let ev = Arc::clone(&evaluator);
+        ClosureTask::new("ants", move |ctx: &Context| {
+            let s = ctx.get(&seed_c)?;
+            let fit = ev.evaluate(&[population, diffusion, evaporation], s)?;
+            let mut out = Context::new();
+            for (f, v) in food_c.iter().zip(fit) {
+                out.set(f, v);
+            }
+            Ok(out)
+        })
+        .input(&seed_val)
+        .output(&food[0])
+        .output(&food[1])
+        .output(&food[2])
+    };
+    let mut stat = StatisticTask::new();
+    for (f, m) in food.iter().zip(&med) {
+        stat = stat.statistic(f, m, Descriptor::Median);
+    }
+    let method = Replication {
+        model: Arc::new(model),
+        seed_val,
+        replications,
+        statistic: Arc::new(stat),
+        kind: kind.to_string(),
+        model_hooks: vec![Arc::new(ToStringHook::new(&["food1", "food2", "food3"]))],
+        statistic_hooks: vec![Arc::new(ToStringHook::new(&[
+            "medNumberFood1",
+            "medNumberFood2",
+            "medNumberFood3",
+        ]))],
+    };
+    with_common(
+        Experiment::new(Box::new(method)).env(env_spec(args, "local", nodes)),
+        args,
+    )
+}
+
+/// Listing 4: generational NSGA-II with replication-median fitness.
+pub fn calibrate(args: &Args) -> Result<Experiment> {
+    let mu = num(args.usize("mu", 10))?;
+    let lambda = num(args.usize("lambda", 10))?;
+    let generations = num(args.usize("generations", 100))? as u32;
+    let replications = num(args.usize("replications", 5))?;
+    let nodes = num(args.usize("nodes", 8))?;
+    // --chunk N packs N genomes per evaluation job, fanned out through the
+    // pooled batch path (§Perf): worthwhile on local/ssh environments
+    let chunk = num(args.usize("chunk", 1))?;
+
+    let (base, kind) = best_available_evaluator(2);
+    let evaluator: Arc<dyn Evaluator> = if chunk > 1 {
+        // chunked jobs carry whole batches. The evaluator gets its OWN
+        // worker pool: environment workers block while a chunk fans out,
+        // so sharing one pool could deadlock with every worker waiting
+        Arc::new(PooledEvaluator::machine_sized(Arc::new(
+            ReplicatedEvaluator::new(base, replications),
+        )))
+    } else {
+        Arc::new(ReplicatedEvaluator::new(base, replications))
+    };
+
+    let (d, e, objectives) = genome_bounds();
+    let obj_refs: Vec<&Val<f64>> = objectives.iter().collect();
+    let config = Nsga2Config::new(
+        mu,
+        &[(&d, 0.0, 99.0), (&e, 0.0, 99.0)],
+        &obj_refs,
+        0.01,
+    )?;
+    let method = Nsga2Evolution {
+        config,
+        lambda,
+        generations,
+        eval_chunk: chunk,
+        evaluator,
+        kind: kind.to_string(),
+        on_generation: Some(Arc::new(|g, pop| {
+            let best: f64 = (0..pop.len())
+                .map(|i| pop.objectives_row(i).iter().sum::<f64>())
+                .fold(f64::INFINITY, f64::min);
+            if g % 10 == 0 {
+                println!("Generation {g}: best objective sum {best:.1}");
+            }
+        })),
+    };
+    with_common(
+        Experiment::new(Box::new(method)).env(env_spec(args, "local", nodes)),
+        args,
+    )
+}
+
+/// Listing 5 + §4.6: island NSGA-II on the (simulated) EGI.
+pub fn island(args: &Args) -> Result<Experiment> {
+    let mu = num(args.usize("mu", 200))?;
+    let islands = num(args.usize("islands", 64))?;
+    let total = num(args.u64("total-evals", 6400))?;
+    let sample = num(args.usize("sample", 50))?;
+    let per_island = num(args.u64("evals-per-island", 100))?;
+    let nodes = num(args.usize("nodes", islands))?;
+    let replications = num(args.usize("replications", 1))?;
+
+    let (base, kind) = best_available_evaluator(2);
+    let evaluator: Arc<dyn Evaluator> = if replications > 1 {
+        Arc::new(ReplicatedEvaluator::new(base, replications))
+    } else {
+        base
+    };
+    let (d, e, objectives) = genome_bounds();
+    let obj_refs: Vec<&Val<f64>> = objectives.iter().collect();
+    let config = Nsga2Config::new(
+        mu,
+        &[(&d, 0.0, 99.0), (&e, 0.0, 99.0)],
+        &obj_refs,
+        0.01,
+    )?;
+    let method = IslandEvolution {
+        config,
+        islands: IslandConfig {
+            concurrent_islands: islands,
+            total_evaluations: total,
+            island_sample: sample,
+            evals_per_island: per_island,
+        },
+        evaluator,
+        kind: kind.to_string(),
+        on_island: Some(Arc::new(|done, evals| {
+            if done % 16 == 0 {
+                println!("Generation {done} islands merged, {evals} evaluations");
+            }
+        })),
+    };
+    with_common(
+        Experiment::new(Box::new(method)).env(env_spec(args, "egi", nodes)),
+        args,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn explore_rejects_bad_knobs() {
+        for (cmd, needle) in [
+            ("explore --sampling warp", "unknown --sampling"),
+            ("explore --format xml", "unknown --format"),
+            ("explore --sampling factorial --step -1", "--step expects"),
+            ("explore --sampling lhs --lo 5 --hi 1", "--lo must be below"),
+            ("explore --seed notanumber", "expects an integer"),
+        ] {
+            let err = explore(&parse(cmd)).unwrap_err().to_string();
+            assert!(err.contains(needle), "`{cmd}` → {err}");
+        }
+    }
+
+    #[test]
+    fn subcommand_fronts_build() {
+        assert!(run(&parse("run")).is_ok());
+        assert!(explore(&parse("explore --n 4")).is_ok());
+        assert!(replicate(&parse("replicate")).is_ok());
+        assert!(calibrate(&parse("calibrate")).is_ok());
+        assert!(island(&parse("island")).is_ok());
+    }
+}

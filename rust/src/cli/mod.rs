@@ -2,7 +2,10 @@
 //!
 //! Supports `program <subcommand> --key value --flag` with typed getters
 //! and automatic usage errors — enough surface for the `molers` launcher
-//! and the bench binaries.
+//! and the bench binaries. The [`front`] module turns parsed arguments
+//! into MoleDSL v2 [`crate::workflow::Experiment`]s, one per subcommand.
+
+pub mod front;
 
 use std::collections::BTreeMap;
 

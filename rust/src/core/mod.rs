@@ -6,5 +6,5 @@ mod val;
 pub mod variable;
 
 pub use context::Context;
-pub use val::{val_f64, val_i64, val_str, val_u32, Val};
-pub use variable::{Value, ValueType};
+pub use val::{val_f64, val_i64, val_str, val_u32, Val, VarSpec};
+pub use variable::{Value, ValueType, VarType};

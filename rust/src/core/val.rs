@@ -10,7 +10,43 @@
 
 use std::marker::PhantomData;
 
-use crate::core::variable::ValueType;
+use crate::core::variable::{ValueType, VarType};
+
+/// Name + (optional) static type of one declared task variable — the
+/// erased form of a [`Val<T>`] that task interfaces expose for build-time
+/// wiring validation. `ty: None` marks a name-only declaration (legacy
+/// string interfaces): presence is still checked, the type is not.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VarSpec {
+    pub name: String,
+    pub ty: Option<VarType>,
+}
+
+impl VarSpec {
+    /// Fully typed spec from a prototype.
+    pub fn typed<T: ValueType>(v: &Val<T>) -> Self {
+        VarSpec {
+            name: v.name().to_string(),
+            ty: Some(T::var_type()),
+        }
+    }
+
+    /// Name-only spec (type unknown — presence-checked only).
+    pub fn untyped(name: impl Into<String>) -> Self {
+        VarSpec {
+            name: name.into(),
+            ty: None,
+        }
+    }
+
+    /// Typed spec from a name and an explicit type.
+    pub fn of(name: impl Into<String>, ty: VarType) -> Self {
+        VarSpec {
+            name: name.into(),
+            ty: Some(ty),
+        }
+    }
+}
 
 /// A named, typed dataflow variable prototype.
 ///

@@ -4,6 +4,54 @@
 //! closed `Value` enum plays the role of the runtime representation while
 //! [`crate::core::Val`] carries the static type.
 
+/// Static type of a dataflow variable — the validation-time mirror of
+/// [`Value`]'s runtime tags. `Val<T>` prototypes report theirs through
+/// [`ValueType::var_type`], which is what lets [`crate::dsl::Puzzle`]
+/// prove a workflow's wiring *before* any job is submitted (MoleDSL v2).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum VarType {
+    F64,
+    I64,
+    U32,
+    Bool,
+    Str,
+    /// Homogeneous array of the element type (fan-ins produce these).
+    List(Box<VarType>),
+}
+
+impl VarType {
+    /// Would a declared input of type `self` accept a supplied value of
+    /// type `supplied`? Mirrors the numeric widening of
+    /// [`ValueType::from_value`] (`f64` reads `i64`/`u32`, `i64` reads
+    /// `u32`, `u32` reads fitting `i64`), element-wise through lists.
+    pub fn accepts(&self, supplied: &VarType) -> bool {
+        use VarType::*;
+        match (self, supplied) {
+            (a, b) if a == b => true,
+            (F64, I64 | U32) => true,
+            (I64, U32) => true,
+            // u32 reads an i64 when it fits; statically plausible, the
+            // runtime still range-checks
+            (U32, I64) => true,
+            (List(a), List(b)) => a.accepts(b),
+            _ => false,
+        }
+    }
+}
+
+impl std::fmt::Display for VarType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VarType::F64 => write!(f, "f64"),
+            VarType::I64 => write!(f, "i64"),
+            VarType::U32 => write!(f, "u32"),
+            VarType::Bool => write!(f, "bool"),
+            VarType::Str => write!(f, "string"),
+            VarType::List(t) => write!(f, "list<{t}>"),
+        }
+    }
+}
+
 /// A value carried by the dataflow.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
@@ -28,6 +76,24 @@ impl Value {
         }
     }
 
+    /// Static type of this value, when it can be named. `None` only for
+    /// an empty list, whose element type is unknowable — validation
+    /// treats such a variable as present-but-untyped rather than
+    /// guessing (a wrong guess would manufacture false mismatches).
+    pub fn var_type(&self) -> Option<VarType> {
+        match self {
+            Value::F64(_) => Some(VarType::F64),
+            Value::I64(_) => Some(VarType::I64),
+            Value::U32(_) => Some(VarType::U32),
+            Value::Bool(_) => Some(VarType::Bool),
+            Value::Str(_) => Some(VarType::Str),
+            Value::List(xs) => xs
+                .first()
+                .and_then(Value::var_type)
+                .map(|t| VarType::List(Box::new(t))),
+        }
+    }
+
     /// Render for hooks (`ToStringHook`, CSV writers).
     pub fn display(&self) -> String {
         match self {
@@ -47,12 +113,18 @@ impl Value {
 /// Conversion between Rust types and dataflow [`Value`]s.
 pub trait ValueType: Sized + Clone {
     const TYPE_NAME: &'static str;
+    /// The static [`VarType`] of this Rust type (drives build-time
+    /// dataflow validation).
+    fn var_type() -> VarType;
     fn into_value(self) -> Value;
     fn from_value(v: &Value) -> Option<Self>;
 }
 
 impl ValueType for f64 {
     const TYPE_NAME: &'static str = "f64";
+    fn var_type() -> VarType {
+        VarType::F64
+    }
     fn into_value(self) -> Value {
         Value::F64(self)
     }
@@ -68,6 +140,9 @@ impl ValueType for f64 {
 
 impl ValueType for i64 {
     const TYPE_NAME: &'static str = "i64";
+    fn var_type() -> VarType {
+        VarType::I64
+    }
     fn into_value(self) -> Value {
         Value::I64(self)
     }
@@ -82,6 +157,9 @@ impl ValueType for i64 {
 
 impl ValueType for u32 {
     const TYPE_NAME: &'static str = "u32";
+    fn var_type() -> VarType {
+        VarType::U32
+    }
     fn into_value(self) -> Value {
         Value::U32(self)
     }
@@ -96,6 +174,9 @@ impl ValueType for u32 {
 
 impl ValueType for bool {
     const TYPE_NAME: &'static str = "bool";
+    fn var_type() -> VarType {
+        VarType::Bool
+    }
     fn into_value(self) -> Value {
         Value::Bool(self)
     }
@@ -109,6 +190,9 @@ impl ValueType for bool {
 
 impl ValueType for String {
     const TYPE_NAME: &'static str = "string";
+    fn var_type() -> VarType {
+        VarType::Str
+    }
     fn into_value(self) -> Value {
         Value::Str(self)
     }
@@ -122,6 +206,9 @@ impl ValueType for String {
 
 impl<T: ValueType> ValueType for Vec<T> {
     const TYPE_NAME: &'static str = "list";
+    fn var_type() -> VarType {
+        VarType::List(Box::new(T::var_type()))
+    }
     fn into_value(self) -> Value {
         Value::List(self.into_iter().map(ValueType::into_value).collect())
     }
@@ -167,6 +254,31 @@ mod tests {
             Vec::<Vec<f64>>::from_value(&nested),
             Some(vec![vec![1.0], vec![2.0]])
         );
+    }
+
+    #[test]
+    fn var_type_acceptance_mirrors_from_value() {
+        use VarType::*;
+        assert!(F64.accepts(&I64) && F64.accepts(&U32) && F64.accepts(&F64));
+        assert!(I64.accepts(&U32) && U32.accepts(&I64));
+        assert!(!I64.accepts(&F64) && !F64.accepts(&Bool) && !Str.accepts(&F64));
+        let lf = List(Box::new(F64));
+        let lu = List(Box::new(U32));
+        assert!(lf.accepts(&lu), "list widening is element-wise");
+        assert!(!lu.accepts(&lf));
+        assert!(!lf.accepts(&F64), "scalar is not a list");
+        assert_eq!(lf.to_string(), "list<f64>");
+    }
+
+    #[test]
+    fn value_var_type_matches_prototype() {
+        assert_eq!(Value::F64(1.0).var_type(), Some(VarType::F64));
+        assert_eq!(
+            vec![1.0, 2.0].into_value().var_type(),
+            Some(VarType::List(Box::new(VarType::F64)))
+        );
+        assert_eq!(Value::List(Vec::new()).var_type(), None, "empty list");
+        assert_eq!(<Vec<Vec<u32>>>::var_type().to_string(), "list<list<u32>>");
     }
 
     #[test]

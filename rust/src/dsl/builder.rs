@@ -1,0 +1,281 @@
+//! MoleDSL v2: the chainable puzzle construction API.
+//!
+//! [`PuzzleBuilder`] replaces the index-bookkeeping `Puzzle` mutators with
+//! typed [`CapsuleHandle`]s exposing the paper's combinators as methods —
+//! the Rust reading of OpenMOLE's `a -- b`, `a -< b`, `b >- c`,
+//! `task on env`, `task hook h` (§2.1):
+//!
+//! ```
+//! use std::sync::Arc;
+//! use molers::dsl::PuzzleBuilder;
+//! use molers::dsl::IdentityTask;
+//! use molers::exploration::sampling::{Factor, FullFactorial};
+//! use molers::core::val_f64;
+//!
+//! let x = val_f64("x");
+//! let b = PuzzleBuilder::new();
+//! let entry = b.task(IdentityTask::new("entry"));
+//! let model = b.task(IdentityTask::new("model"));
+//! let collect = b.task(IdentityTask::new("collect"));
+//! entry.explore(
+//!     Arc::new(FullFactorial::new(vec![Factor::new(&x, 0.0, 3.0, 1.0)])),
+//!     &model,
+//! );
+//! model.aggregate(&collect);
+//! let puzzle = b.build().unwrap(); // shape + typed dataflow proven here
+//! assert_eq!(puzzle.capsules.len(), 3);
+//! ```
+//!
+//! Handles are cheap clones tied to their builder; [`PuzzleBuilder::build`]
+//! runs [`Puzzle::validate`] so a mis-wired workflow is rejected at
+//! construction, before any execution engine sees it.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use crate::core::Context;
+use crate::dsl::hook::Hook;
+use crate::dsl::puzzle::{CapsuleId, Puzzle};
+use crate::dsl::source::Source;
+use crate::dsl::task::Task;
+use crate::environment::Environment;
+use crate::error::Result;
+use crate::exploration::sampling::Sampling;
+
+type Shared = Rc<RefCell<Option<Puzzle>>>;
+
+/// Builds a [`Puzzle`] through typed capsule handles. Single-threaded by
+/// design (construction is coordinator work); the built [`Puzzle`] itself
+/// is freely movable.
+pub struct PuzzleBuilder {
+    inner: Shared,
+}
+
+impl PuzzleBuilder {
+    pub fn new() -> Self {
+        PuzzleBuilder {
+            inner: Rc::new(RefCell::new(Some(Puzzle::new()))),
+        }
+    }
+
+    fn with<R>(&self, f: impl FnOnce(&mut Puzzle) -> R) -> R {
+        let mut guard = self.inner.borrow_mut();
+        let puzzle = guard
+            .as_mut()
+            .expect("PuzzleBuilder was already consumed by build()");
+        f(puzzle)
+    }
+
+    /// Add a capsule wrapping `task`. The first capsule added is the
+    /// default entry (override with [`CapsuleHandle::entry`]).
+    pub fn task(&self, task: impl Task + 'static) -> CapsuleHandle {
+        self.capsule(Arc::new(task))
+    }
+
+    /// Add a capsule from an already-shared task.
+    pub fn capsule(&self, task: Arc<dyn Task>) -> CapsuleHandle {
+        let id = self.with(|p| p.add_capsule(task));
+        CapsuleHandle {
+            inner: Rc::clone(&self.inner),
+            id,
+        }
+    }
+
+    /// Finish construction: validate shape and typed dataflow (empty
+    /// initial context) and hand over the puzzle. Handles of this builder
+    /// must not be used afterwards.
+    ///
+    /// The execution engine re-validates at `start_with` (it must — the
+    /// deprecated `Puzzle` mutators can still hand it unvalidated
+    /// graphs); the pass is O(graph), so the redundancy is deliberate:
+    /// `build()` buys the fail-at-construction guarantee, the engine
+    /// keeps its own.
+    pub fn build(&self) -> Result<Puzzle> {
+        self.build_with(&Context::new())
+    }
+
+    /// [`PuzzleBuilder::build`], validating against the initial context
+    /// the execution will start with (its variables count as supplied).
+    pub fn build_with(&self, init: &Context) -> Result<Puzzle> {
+        let puzzle = self
+            .inner
+            .borrow_mut()
+            .take()
+            .expect("PuzzleBuilder was already consumed by build()");
+        puzzle.validate_with(init)?;
+        Ok(puzzle)
+    }
+}
+
+impl Default for PuzzleBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A typed reference to one capsule of a [`PuzzleBuilder`]. Clones refer
+/// to the same capsule; all wiring methods return handles so chains read
+/// like the paper's DSL: `entry.explore(sampling, &model);
+/// model.aggregate(&stat).hook(display);`.
+#[derive(Clone)]
+pub struct CapsuleHandle {
+    inner: Shared,
+    id: CapsuleId,
+}
+
+impl CapsuleHandle {
+    /// The capsule's index in the built puzzle.
+    pub fn id(&self) -> CapsuleId {
+        self.id
+    }
+
+    fn with<R>(&self, other: Option<&CapsuleHandle>, f: impl FnOnce(&mut Puzzle) -> R) -> R {
+        if let Some(o) = other {
+            assert!(
+                Rc::ptr_eq(&self.inner, &o.inner),
+                "capsule handles belong to different PuzzleBuilders"
+            );
+        }
+        let mut guard = self.inner.borrow_mut();
+        let puzzle = guard
+            .as_mut()
+            .expect("PuzzleBuilder was already consumed by build()");
+        f(puzzle)
+    }
+
+    /// Plain transition: `self -- to`. Returns `to`'s handle so chains
+    /// read left to right: `a.then(&b).then(&c)`.
+    pub fn then(&self, to: &CapsuleHandle) -> CapsuleHandle {
+        self.with(Some(to), |p| p.add_direct(self.id, to.id));
+        to.clone()
+    }
+
+    /// Fan-out: `self -< to` under `sampling` — `to` runs once per sample.
+    pub fn explore(&self, sampling: Arc<dyn Sampling>, to: &CapsuleHandle) -> CapsuleHandle {
+        self.with(Some(to), |p| p.add_explore(self.id, sampling, to.id));
+        to.clone()
+    }
+
+    /// Fan-in barrier: `self >- to` — `to` receives one context whose
+    /// variables are arrays over the enclosing exploration.
+    pub fn aggregate(&self, to: &CapsuleHandle) -> CapsuleHandle {
+        self.with(Some(to), |p| p.add_aggregate(self.id, to.id));
+        to.clone()
+    }
+
+    /// Delegate this capsule's jobs to `env` (`task on env` — the paper's
+    /// one-line environment switch).
+    pub fn on(&self, env: Arc<dyn Environment>) -> &Self {
+        self.with(None, |p| p.set_environment(self.id, env));
+        self
+    }
+
+    /// Attach an observation hook (`task hook h`).
+    pub fn hook(&self, hook: Arc<dyn Hook>) -> &Self {
+        self.with(None, |p| p.add_hook(self.id, hook));
+        self
+    }
+
+    /// Attach a source: its variables merge into the incoming context
+    /// before each run.
+    pub fn source(&self, source: Arc<dyn Source>) -> &Self {
+        self.with(None, |p| p.add_source(self.id, source));
+        self
+    }
+
+    /// Make this capsule the entry point.
+    pub fn entry(&self) -> &Self {
+        self.with(None, |p| p.set_entry(self.id));
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{val_f64, val_u32, Context};
+    use crate::dsl::hook::CaptureHook;
+    use crate::dsl::task::{ClosureTask, IdentityTask};
+    use crate::environment::local::LocalEnvironment;
+    use crate::exploration::sampling::SeedSampling;
+    use crate::workflow::MoleExecution;
+
+    #[test]
+    fn chains_read_like_the_paper() {
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let b = PuzzleBuilder::new();
+        let square = b.task(
+            ClosureTask::new("square", {
+                let (x, y) = (x.clone(), y.clone());
+                move |ctx| Ok(Context::new().with(&y, ctx.get(&x)?.powi(2)))
+            })
+            .input(&x)
+            .output(&y)
+            .default(&x, 5.0),
+        );
+        let report = b.task(IdentityTask::new("report"));
+        square.then(&report);
+        let puzzle = b.build().unwrap();
+        let result = MoleExecution::new(puzzle, Arc::new(LocalEnvironment::new(1)), 1)
+            .start()
+            .unwrap();
+        assert_eq!(result.outputs[0].get(&y).unwrap(), 25.0);
+    }
+
+    #[test]
+    fn explore_aggregate_hook_on_roundtrip() {
+        let seed = val_u32("seed");
+        let b = PuzzleBuilder::new();
+        let entry = b.task(IdentityTask::new("entry"));
+        let model = b.task(IdentityTask::new("model"));
+        let done = b.task(IdentityTask::new("done"));
+        let capture = Arc::new(CaptureHook::new());
+        model.hook(capture.clone()).on(Arc::new(LocalEnvironment::new(2)));
+        entry.explore(Arc::new(SeedSampling::new(&seed, 4)), &model);
+        model.aggregate(&done);
+        entry.entry();
+        let puzzle = b.build().unwrap();
+        MoleExecution::new(puzzle, Arc::new(LocalEnvironment::new(2)), 7)
+            .start()
+            .unwrap();
+        assert_eq!(capture.len(), 4);
+    }
+
+    #[test]
+    fn build_rejects_miswired_puzzles() {
+        let x = val_f64("x");
+        let b = PuzzleBuilder::new();
+        let _lonely = b.task(ClosureTask::new("needs-x", |_| Ok(Context::new())).input(&x));
+        let err = b.build().unwrap_err().to_string();
+        assert!(err.contains("`x`"), "{err}");
+    }
+
+    #[test]
+    fn build_with_accepts_initial_context() {
+        let x = val_f64("x");
+        let b = PuzzleBuilder::new();
+        b.task(ClosureTask::new("needs-x", |_| Ok(Context::new())).input(&x));
+        assert!(b.build_with(&Context::new().with(&x, 1.0)).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "different PuzzleBuilders")]
+    fn mixing_builders_panics() {
+        let a = PuzzleBuilder::new();
+        let b = PuzzleBuilder::new();
+        let ca = a.task(IdentityTask::new("a"));
+        let cb = b.task(IdentityTask::new("b"));
+        ca.then(&cb);
+    }
+
+    #[test]
+    #[should_panic(expected = "already consumed")]
+    fn handles_after_build_panic() {
+        let b = PuzzleBuilder::new();
+        let c = b.task(IdentityTask::new("a"));
+        let _ = b.build().unwrap();
+        c.hook(Arc::new(CaptureHook::new()));
+    }
+}

@@ -1,15 +1,20 @@
 //! The workflow DSL: tasks, hooks, capsules, transitions, puzzles.
 //!
 //! Mirrors the vocabulary of OpenMOLE's Scala DSL (paper §2.1) with Rust
-//! builders: `ClosureTask` ≈ `ScalaTask`, [`puzzle::Puzzle::on`] ≈
-//! `task on env`, [`puzzle::Puzzle::hook`] ≈ `task hook h`.
+//! builders: `ClosureTask` ≈ `ScalaTask`, [`CapsuleHandle::on`] ≈
+//! `task on env`, [`CapsuleHandle::hook`] ≈ `task hook h`,
+//! [`CapsuleHandle::then`]/[`CapsuleHandle::explore`]/
+//! [`CapsuleHandle::aggregate`] ≈ `a -- b`, `a -< b`, `b >- c`
+//! (MoleDSL v2 — see [`builder`]).
 
+pub mod builder;
 pub mod hook;
 pub mod puzzle;
 pub mod source;
 pub mod system_exec;
 pub mod task;
 
+pub use builder::{CapsuleHandle, PuzzleBuilder};
 pub use hook::{
     CaptureHook, CsvHook, DisplayHook, Hook, RowWriter, Sink, TableFormat,
     ToStringHook,

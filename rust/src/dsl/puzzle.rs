@@ -9,14 +9,44 @@
 //!   the "natural parallelism construct" the paper emphasises);
 //! * **aggregate** — fan-in barrier: collects every result of the matching
 //!   fan-out and forwards one context whose variables are arrays.
+//!
+//! Construct puzzles with [`crate::dsl::PuzzleBuilder`] (MoleDSL v2); the
+//! mutating methods on `Puzzle` itself survive as deprecated shims for one
+//! release.
+//!
+//! # Validation (MoleDSL v2)
+//!
+//! [`Puzzle::validate`] proves, before any job is submitted:
+//!
+//! * **shape** — ids in range, entry exists, no cycles (iterative
+//!   traversal: a generated million-capsule chain cannot overflow the
+//!   stack), every capsule reachable from the entry;
+//! * **explore/aggregate pairing** — each aggregate transition closes an
+//!   enclosing explore, and no capsule is reachable at two different
+//!   exploration depths;
+//! * **typed dataflow** — every declared task input is supplied, with a
+//!   compatible [`VarType`], by upstream outputs, sources, sampling
+//!   columns or defaults. Errors name the offending capsule and variable.
+//!
+//! The dataflow pass is *sound for its errors, best-effort for its
+//! silence*: a reported error is a genuine mis-wiring, but a task with
+//! undeclared outputs, a context-only sampling or an undeclarable source
+//! opens the flow — unknown extra variables may exist and any known
+//! variable may have been overwritten — after which missing-input errors
+//! are suppressed and known types are demoted to unknown, rather than
+//! inventing errors. Declared interfaces buy stronger guarantees —
+//! exactly the paper's §2.1 argument for a typed DSL.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
+use crate::core::{Context, Value, VarType};
 use crate::dsl::hook::Hook;
 use crate::dsl::source::Source;
 use crate::dsl::task::Task;
 use crate::environment::Environment;
 use crate::error::{Error, Result};
+use crate::exploration::matrix::ColumnKind;
 use crate::exploration::sampling::Sampling;
 
 /// Index of a capsule within its puzzle.
@@ -67,8 +97,61 @@ impl Transition {
     }
 }
 
-/// The workflow graph. Build with the fluent methods, validate, then hand
-/// to [`crate::workflow::MoleExecution`].
+/// The set of variables statically known to flow into/out of a capsule.
+/// `ty: None` = present with unknown type; `open` = unknown extra
+/// variables may also be present (undeclared outputs, context-only
+/// samplings, undeclarable sources).
+#[derive(Clone, Default)]
+struct FlowEnv {
+    vars: BTreeMap<String, Option<VarType>>,
+    open: bool,
+}
+
+impl FlowEnv {
+    fn from_context(ctx: &Context) -> Self {
+        FlowEnv {
+            vars: ctx
+                .names()
+                .map(|n| (n.to_string(), ctx.get_raw(n).and_then(Value::var_type)))
+                .collect(),
+            open: false,
+        }
+    }
+
+    /// Unknown writes may occur from here on: suppress missing-input
+    /// errors downstream AND demote every known type to unknown — an
+    /// undeclared write may overwrite any variable with any type, so a
+    /// type retained across this point could manufacture a false
+    /// mismatch (the pass must stay sound for its errors).
+    fn open_unknown(&mut self) {
+        self.open = true;
+        for ty in self.vars.values_mut() {
+            *ty = None;
+        }
+    }
+
+    /// A variable is guaranteed present only when every delivering path
+    /// guarantees it; a known type survives only when the paths agree.
+    fn intersect(&self, other: &FlowEnv) -> FlowEnv {
+        let mut vars = BTreeMap::new();
+        for (name, ty) in &self.vars {
+            if let Some(other_ty) = other.vars.get(name) {
+                let merged = match (ty, other_ty) {
+                    (Some(a), Some(b)) if a == b => Some(a.clone()),
+                    _ => None,
+                };
+                vars.insert(name.clone(), merged);
+            }
+        }
+        FlowEnv {
+            vars,
+            open: self.open || other.open,
+        }
+    }
+}
+
+/// The workflow graph. Build with [`crate::dsl::PuzzleBuilder`], validate,
+/// then hand to [`crate::workflow::MoleExecution`].
 #[derive(Default)]
 pub struct Puzzle {
     pub capsules: Vec<Capsule>,
@@ -81,8 +164,12 @@ impl Puzzle {
         Self::default()
     }
 
-    /// Add a capsule wrapping `task`.
-    pub fn capsule(&mut self, task: Arc<dyn Task>) -> CapsuleId {
+    // ------------------------------------------------------------------
+    // crate-internal mutators: the single implementation behind both the
+    // PuzzleBuilder and the deprecated public shims below
+    // ------------------------------------------------------------------
+
+    pub(crate) fn add_capsule(&mut self, task: Arc<dyn Task>) -> CapsuleId {
         self.capsules.push(Capsule {
             task,
             sources: Vec::new(),
@@ -92,52 +179,102 @@ impl Puzzle {
         CapsuleId(self.capsules.len() - 1)
     }
 
-    /// Attach a hook (`capsule hook ToStringHook(...)`).
-    pub fn hook(&mut self, c: CapsuleId, hook: Arc<dyn Hook>) -> &mut Self {
+    pub(crate) fn add_hook(&mut self, c: CapsuleId, hook: Arc<dyn Hook>) {
         self.capsules[c.0].hooks.push(hook);
+    }
+
+    pub(crate) fn add_source(&mut self, c: CapsuleId, source: Arc<dyn Source>) {
+        self.capsules[c.0].sources.push(source);
+    }
+
+    pub(crate) fn set_environment(&mut self, c: CapsuleId, env: Arc<dyn Environment>) {
+        self.capsules[c.0].environment = Some(env);
+    }
+
+    pub(crate) fn add_direct(&mut self, from: CapsuleId, to: CapsuleId) {
+        self.transitions.push(Transition::Direct { from, to });
+    }
+
+    pub(crate) fn add_explore(
+        &mut self,
+        from: CapsuleId,
+        sampling: Arc<dyn Sampling>,
+        to: CapsuleId,
+    ) {
+        self.transitions.push(Transition::Explore { from, to, sampling });
+    }
+
+    pub(crate) fn add_aggregate(&mut self, from: CapsuleId, to: CapsuleId) {
+        self.transitions.push(Transition::Aggregate { from, to });
+    }
+
+    pub(crate) fn set_entry(&mut self, c: CapsuleId) {
+        self.entry = Some(c);
+    }
+
+    // ------------------------------------------------------------------
+    // deprecated v1 mutators (one release of grace; use PuzzleBuilder)
+    // ------------------------------------------------------------------
+
+    /// Add a capsule wrapping `task`.
+    #[deprecated(note = "use dsl::PuzzleBuilder::task / ::capsule (MoleDSL v2)")]
+    pub fn capsule(&mut self, task: Arc<dyn Task>) -> CapsuleId {
+        self.add_capsule(task)
+    }
+
+    /// Attach a hook (`capsule hook ToStringHook(...)`).
+    #[deprecated(note = "use dsl::CapsuleHandle::hook (MoleDSL v2)")]
+    pub fn hook(&mut self, c: CapsuleId, hook: Arc<dyn Hook>) -> &mut Self {
+        self.add_hook(c, hook);
         self
     }
 
     /// Attach a source (`capsule source CSVSource(...)`): its variables are
     /// merged into the capsule's incoming context before each run.
+    #[deprecated(note = "use dsl::CapsuleHandle::source (MoleDSL v2)")]
     pub fn source(&mut self, c: CapsuleId, source: Arc<dyn Source>) -> &mut Self {
-        self.capsules[c.0].sources.push(source);
+        self.add_source(c, source);
         self
     }
 
     /// Delegate a capsule's jobs to an environment (`island on env` — the
     /// paper's one-line environment switch).
+    #[deprecated(note = "use dsl::CapsuleHandle::on (MoleDSL v2)")]
     pub fn on(&mut self, c: CapsuleId, env: Arc<dyn Environment>) -> &mut Self {
-        self.capsules[c.0].environment = Some(env);
+        self.set_environment(c, env);
         self
     }
 
     /// Plain transition (`a -- b`).
+    #[deprecated(note = "use dsl::CapsuleHandle::then (MoleDSL v2)")]
     pub fn direct(&mut self, from: CapsuleId, to: CapsuleId) -> &mut Self {
-        self.transitions.push(Transition::Direct { from, to });
+        self.add_direct(from, to);
         self
     }
 
     /// Fan-out: run `to` once per sample of `sampling` (`a -< b`).
+    #[deprecated(note = "use dsl::CapsuleHandle::explore (MoleDSL v2)")]
     pub fn explore(
         &mut self,
         from: CapsuleId,
         sampling: Arc<dyn Sampling>,
         to: CapsuleId,
     ) -> &mut Self {
-        self.transitions.push(Transition::Explore { from, to, sampling });
+        self.add_explore(from, sampling, to);
         self
     }
 
     /// Fan-in barrier (`b >- c`): aggregates the fan-out's results.
+    #[deprecated(note = "use dsl::CapsuleHandle::aggregate (MoleDSL v2)")]
     pub fn aggregate(&mut self, from: CapsuleId, to: CapsuleId) -> &mut Self {
-        self.transitions.push(Transition::Aggregate { from, to });
+        self.add_aggregate(from, to);
         self
     }
 
     /// Set the entry capsule. Defaults to capsule 0.
+    #[deprecated(note = "use dsl::CapsuleHandle::entry (MoleDSL v2)")]
     pub fn entry(&mut self, c: CapsuleId) -> &mut Self {
-        self.entry = Some(c);
+        self.set_entry(c);
         self
     }
 
@@ -154,8 +291,29 @@ impl Puzzle {
         self.outgoing(c).next().is_none()
     }
 
-    /// Structural validation: ids in range, entry exists, no cycles.
+    /// How validation errors name a capsule: index plus task name.
+    fn describe(&self, c: usize) -> String {
+        format!("capsule {c} (`{}`)", self.capsules[c].task.name())
+    }
+
+    /// Validate shape and typed dataflow, assuming an empty initial
+    /// context. Equivalent to `validate_with(&Context::new())`.
     pub fn validate(&self) -> Result<()> {
+        self.validate_with(&Context::new())
+    }
+
+    /// Validate shape and typed dataflow against the initial context the
+    /// execution will start with (the engine calls this from
+    /// [`crate::workflow::MoleExecution::start_with`], so a mis-wired
+    /// workflow is rejected before a single job is submitted).
+    pub fn validate_with(&self, init: &Context) -> Result<()> {
+        let order = self.validate_structure()?;
+        self.validate_dataflow(init, &order)
+    }
+
+    /// Shape checks: ids in range, no cycles (iterative), all capsules
+    /// reachable. Returns a topological order of the capsules.
+    fn validate_structure(&self) -> Result<Vec<usize>> {
         if self.capsules.is_empty() {
             return Err(Error::InvalidWorkflow("no capsules".into()));
         }
@@ -172,38 +330,256 @@ impl Puzzle {
         if self.entry_capsule().0 >= n {
             return Err(Error::InvalidWorkflow("entry out of range".into()));
         }
-        // cycle detection (transitions are a DAG in this engine)
+
+        let mut adjacency: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for t in &self.transitions {
+            adjacency[t.from().0].push(t.to().0);
+        }
+
+        // cycle detection: colored DFS with an explicit stack, so a deep
+        // generated chain cannot overflow the call stack
         let mut state = vec![0u8; n]; // 0=unvisited 1=on-stack 2=done
-        fn dfs(p: &Puzzle, c: usize, state: &mut [u8]) -> Result<()> {
-            state[c] = 1;
-            for t in p.outgoing(CapsuleId(c)) {
-                let next = t.to().0;
-                match state[next] {
-                    0 => dfs(p, next, state)?,
-                    1 => {
-                        return Err(Error::InvalidWorkflow(format!(
-                            "cycle through capsule {next}"
-                        )))
+        let mut order_rev: Vec<usize> = Vec::with_capacity(n);
+        for start in 0..n {
+            if state[start] != 0 {
+                continue;
+            }
+            // (node, index of the next outgoing edge to explore)
+            let mut stack: Vec<(usize, usize)> = vec![(start, 0)];
+            state[start] = 1;
+            while let Some(top) = stack.len().checked_sub(1) {
+                let (node, next) = stack[top];
+                if next < adjacency[node].len() {
+                    stack[top].1 += 1;
+                    let child = adjacency[node][next];
+                    match state[child] {
+                        0 => {
+                            state[child] = 1;
+                            stack.push((child, 0));
+                        }
+                        1 => {
+                            return Err(Error::InvalidWorkflow(format!(
+                                "cycle through capsule {child}"
+                            )))
+                        }
+                        _ => {}
                     }
-                    _ => {}
+                } else {
+                    state[node] = 2;
+                    order_rev.push(node);
+                    stack.pop();
                 }
             }
-            state[c] = 2;
-            Ok(())
         }
-        for c in 0..n {
-            if state[c] == 0 {
-                dfs(self, c, &mut state)?;
+
+        // reachability from the entry (iterative BFS): a capsule no item
+        // can ever reach is a mis-wiring, not dead weight to ignore
+        let mut reachable = vec![false; n];
+        let mut frontier = vec![self.entry_capsule().0];
+        reachable[self.entry_capsule().0] = true;
+        while let Some(u) = frontier.pop() {
+            for &v in &adjacency[u] {
+                if !reachable[v] {
+                    reachable[v] = true;
+                    frontier.push(v);
+                }
+            }
+        }
+        if let Some(c) = (0..n).find(|&c| !reachable[c]) {
+            return Err(Error::InvalidWorkflow(format!(
+                "{} is unreachable from the entry capsule",
+                self.describe(c)
+            )));
+        }
+
+        // topological order, entry-first
+        let mut order: Vec<usize> = order_rev;
+        order.reverse();
+        Ok(order)
+    }
+
+    /// The typed dataflow pass (see module docs): walk the DAG in
+    /// topological order, tracking per-capsule exploration depth and the
+    /// statically known variable environment.
+    fn validate_dataflow(&self, init: &Context, order: &[usize]) -> Result<()> {
+        let n = self.capsules.len();
+        let entry = self.entry_capsule().0;
+        let mut inflow: Vec<Option<FlowEnv>> = vec![None; n];
+        let mut depth: Vec<Option<i64>> = vec![None; n];
+        inflow[entry] = Some(FlowEnv::from_context(init));
+        depth[entry] = Some(0);
+
+        for &u in order {
+            // every capsule is reachable and predecessors precede their
+            // successors in `order`, so inflow[u] is set by now
+            let env_in = inflow[u]
+                .take()
+                .unwrap_or_else(|| FlowEnv::from_context(init));
+            let d = depth[u].unwrap_or(0);
+            let env_out = self.capsule_flow(u, env_in)?;
+
+            for t in self.outgoing(CapsuleId(u)) {
+                let v = t.to().0;
+                let (edge_env, edge_depth) = match t {
+                    Transition::Direct { .. } => (env_out.clone(), d),
+                    Transition::Explore { sampling, .. } => {
+                        let mut e = env_out.clone();
+                        if sampling.is_columnar() {
+                            for col in sampling.columns() {
+                                let ty = match col.kind {
+                                    ColumnKind::F64 => VarType::F64,
+                                    ColumnKind::U32 => VarType::U32,
+                                };
+                                e.vars.insert(col.name, Some(ty));
+                            }
+                        } else {
+                            // context-only samplings contribute variables
+                            // validation cannot enumerate (and may
+                            // overwrite existing ones with any type)
+                            e.open_unknown();
+                        }
+                        (e, d + 1)
+                    }
+                    Transition::Aggregate { .. } => {
+                        if d < 1 {
+                            return Err(Error::InvalidWorkflow(format!(
+                                "aggregate transition from {} has no \
+                                 enclosing explore to collect",
+                                self.describe(u)
+                            )));
+                        }
+                        let e = FlowEnv {
+                            vars: env_out
+                                .vars
+                                .iter()
+                                .map(|(k, ty)| {
+                                    (
+                                        k.clone(),
+                                        ty.clone()
+                                            .map(|t| VarType::List(Box::new(t))),
+                                    )
+                                })
+                                .collect(),
+                            open: env_out.open,
+                        };
+                        (e, d - 1)
+                    }
+                };
+                match depth[v] {
+                    None => depth[v] = Some(edge_depth),
+                    Some(prev) if prev != edge_depth => {
+                        return Err(Error::InvalidWorkflow(format!(
+                            "{} is reachable at inconsistent exploration \
+                             depths ({prev} vs {edge_depth}) — explore and \
+                             aggregate transitions do not pair up",
+                            self.describe(v)
+                        )))
+                    }
+                    Some(_) => {}
+                }
+                inflow[v] = Some(match inflow[v].take() {
+                    None => edge_env,
+                    Some(prev) => prev.intersect(&edge_env),
+                });
             }
         }
         Ok(())
+    }
+
+    /// Flow one capsule: merge sources into the inflow, check the task's
+    /// declared inputs against inflow ∪ sources ∪ defaults, and produce
+    /// the outflow the engine will hand downstream.
+    ///
+    /// Defaults participate only in the *input check* (`run_checked`
+    /// merges them below the context inside the task run): when a task
+    /// declares outputs, its result is narrowed to exactly those, so the
+    /// downstream context is inflow ∪ declared outputs — defaults never
+    /// leave the capsule. A passthrough task (no declared outputs,
+    /// forwards its full context) does re-emit them.
+    fn capsule_flow(&self, c: usize, mut env: FlowEnv) -> Result<FlowEnv> {
+        let capsule = &self.capsules[c];
+        let task = capsule.task.as_ref();
+
+        // sources merge over the incoming context (before submission)
+        for source in &capsule.sources {
+            match source.provides() {
+                Some(specs) => {
+                    for spec in specs {
+                        env.vars.insert(spec.name, spec.ty);
+                    }
+                }
+                None => env.open_unknown(),
+            }
+        }
+        // the input check additionally sees defaults, filled below the
+        // context (an upstream value keeps its type — as at runtime)
+        let mut check = env.clone();
+        let defaults = task.defaults();
+        for name in defaults.names() {
+            check
+                .vars
+                .entry(name.to_string())
+                .or_insert_with(|| defaults.get_raw(name).and_then(Value::var_type));
+        }
+
+        for spec in task.input_specs() {
+            match check.vars.get(&spec.name) {
+                None => {
+                    if !check.open {
+                        return Err(Error::InvalidWorkflow(format!(
+                            "{}: declared input `{}` is not supplied by \
+                             upstream outputs, sources, sampling columns \
+                             or defaults",
+                            self.describe(c),
+                            spec.name
+                        )));
+                    }
+                }
+                Some(Some(supplied)) => {
+                    if let Some(required) = &spec.ty {
+                        if !required.accepts(supplied) {
+                            return Err(Error::InvalidWorkflow(format!(
+                                "{}: input `{}` expects {required}, but \
+                                 upstream supplies {supplied}",
+                                self.describe(c),
+                                spec.name
+                            )));
+                        }
+                    }
+                }
+                Some(None) => {} // present, type unknown: presence is enough
+            }
+        }
+
+        let outputs = task.output_specs();
+        if outputs.is_empty() {
+            if task.passthrough() {
+                // forwards its full incoming context, defaults included
+                env = check;
+            } else {
+                // run_checked forwards whatever the task returns —
+                // anything may appear (or be overwritten) downstream
+                env.open_unknown();
+            }
+        } else {
+            // result narrowed to the declared outputs, merged over the
+            // (source-injected) incoming context
+            for spec in outputs {
+                env.vars.insert(spec.name, spec.ty);
+            }
+        }
+        Ok(env)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dsl::task::IdentityTask;
+    use crate::core::{val_f64, val_str, val_u32};
+    use crate::dsl::task::{ClosureTask, IdentityTask};
+    use crate::exploration::sampling::{
+        ExplicitSampling, Factor, FullFactorial, SeedSampling,
+    };
 
     fn id_task() -> Arc<dyn Task> {
         Arc::new(IdentityTask::new("id"))
@@ -212,9 +588,9 @@ mod tests {
     #[test]
     fn builds_and_validates_linear_chain() {
         let mut p = Puzzle::new();
-        let a = p.capsule(id_task());
-        let b = p.capsule(id_task());
-        p.direct(a, b);
+        let a = p.add_capsule(id_task());
+        let b = p.add_capsule(id_task());
+        p.add_direct(a, b);
         assert!(p.validate().is_ok());
         assert!(!p.is_terminal(a));
         assert!(p.is_terminal(b));
@@ -223,11 +599,25 @@ mod tests {
     #[test]
     fn detects_cycles() {
         let mut p = Puzzle::new();
-        let a = p.capsule(id_task());
-        let b = p.capsule(id_task());
-        p.direct(a, b);
-        p.direct(b, a);
-        assert!(p.validate().is_err());
+        let a = p.add_capsule(id_task());
+        let b = p.add_capsule(id_task());
+        p.add_direct(a, b);
+        p.add_direct(b, a);
+        assert!(p.validate().unwrap_err().to_string().contains("cycle"));
+    }
+
+    #[test]
+    fn deep_chain_validates_without_stack_overflow() {
+        // the historical recursive DFS overflowed on generated chains;
+        // the iterative traversal must take this in stride
+        let mut p = Puzzle::new();
+        let mut prev = p.add_capsule(id_task());
+        for _ in 0..100_000 {
+            let next = p.add_capsule(id_task());
+            p.add_direct(prev, next);
+            prev = next;
+        }
+        assert!(p.validate().is_ok());
     }
 
     #[test]
@@ -238,7 +628,296 @@ mod tests {
     #[test]
     fn entry_defaults_to_first() {
         let mut p = Puzzle::new();
-        let a = p.capsule(id_task());
+        let a = p.add_capsule(id_task());
         assert_eq!(p.entry_capsule(), a);
+    }
+
+    #[test]
+    fn rejects_unreachable_capsules() {
+        let mut p = Puzzle::new();
+        let _a = p.add_capsule(id_task());
+        let _stray = p.add_capsule(Arc::new(IdentityTask::new("stray")));
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("unreachable"), "{err}");
+        assert!(err.contains("stray"), "names the capsule: {err}");
+    }
+
+    #[test]
+    fn rejects_aggregate_without_explore() {
+        let mut p = Puzzle::new();
+        let a = p.add_capsule(id_task());
+        let b = p.add_capsule(Arc::new(IdentityTask::new("collect")));
+        p.add_aggregate(a, b);
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("no enclosing explore"), "{err}");
+    }
+
+    #[test]
+    fn rejects_inconsistent_exploration_depths() {
+        // entry -< model and entry -- model: model items would be both
+        // inside and outside the exploration
+        let x = val_f64("x");
+        let mut p = Puzzle::new();
+        let entry = p.add_capsule(id_task());
+        let model = p.add_capsule(Arc::new(IdentityTask::new("model")));
+        p.add_explore(
+            entry,
+            Arc::new(FullFactorial::new(vec![Factor::new(&x, 0.0, 1.0, 1.0)])),
+            model,
+        );
+        p.add_direct(entry, model);
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("inconsistent exploration depths"), "{err}");
+    }
+
+    #[test]
+    fn rejects_missing_input() {
+        let x = val_f64("x");
+        let mut p = Puzzle::new();
+        p.add_capsule(Arc::new(
+            ClosureTask::new("consumer", |_| Ok(Context::new())).input(&x),
+        ));
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("consumer"), "{err}");
+        assert!(err.contains("`x`"), "{err}");
+        assert!(err.contains("not supplied"), "{err}");
+    }
+
+    #[test]
+    fn rejects_missing_input_downstream_of_declared_outputs() {
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let z = val_f64("z");
+        let mut p = Puzzle::new();
+        let a = p.add_capsule(Arc::new(
+            ClosureTask::new("producer", {
+                let y = y.clone();
+                move |_| Ok(Context::new().with(&y, 1.0))
+            })
+            .output(&y)
+            .default(&x, 0.0),
+        ));
+        let b = p.add_capsule(Arc::new(
+            ClosureTask::new("consumer", |_| Ok(Context::new())).input(&z),
+        ));
+        p.add_direct(a, b);
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("consumer") && err.contains("`z`"), "{err}");
+    }
+
+    #[test]
+    fn defaults_do_not_leak_downstream_of_declared_outputs() {
+        // A's default for `x` exists only inside A's run (run_checked
+        // narrows A's result to its declared outputs), so B's `x` input
+        // is genuinely unsupplied — the old pass wrongly accepted this
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let mut p = Puzzle::new();
+        let a = p.add_capsule(Arc::new(
+            ClosureTask::new("producer", {
+                let y = y.clone();
+                move |_| Ok(Context::new().with(&y, 1.0))
+            })
+            .default(&x, 0.0)
+            .output(&y),
+        ));
+        let b = p.add_capsule(Arc::new(
+            ClosureTask::new("consumer", |_| Ok(Context::new())).input(&x),
+        ));
+        p.add_direct(a, b);
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("consumer") && err.contains("`x`"), "{err}");
+    }
+
+    #[test]
+    fn own_defaults_satisfy_inputs_despite_upstream_type() {
+        // B defaults `x` itself — but an upstream f64 `x` wins at runtime
+        // (context over defaults), so the string-typed input is still a
+        // genuine mismatch; with no upstream supply it validates fine
+        let x = val_f64("x");
+        let x_str = val_str("x");
+        let y = val_f64("y");
+        let consumer = || {
+            ClosureTask::new("consumer", |_| Ok(Context::new()))
+                .default(&x_str, "label".into())
+                .input(&x_str)
+        };
+
+        let mut standalone = Puzzle::new();
+        standalone.add_capsule(Arc::new(consumer()));
+        assert!(standalone.validate().is_ok(), "own default supplies x");
+
+        let mut fed = Puzzle::new();
+        let a = fed.add_capsule(Arc::new(
+            ClosureTask::new("producer", {
+                let (x, y) = (x.clone(), y.clone());
+                move |_| Ok(Context::new().with(&x, 1.0).with(&y, 1.0))
+            })
+            .output(&x)
+            .output(&y),
+        ));
+        let b = fed.add_capsule(Arc::new(consumer()));
+        fed.add_direct(a, b);
+        let err = fed.validate().unwrap_err().to_string();
+        assert!(err.contains("expects string"), "{err}");
+    }
+
+    #[test]
+    fn rejects_type_mismatch() {
+        let x = val_f64("x");
+        let x_str = val_str("x");
+        let mut p = Puzzle::new();
+        let a = p.add_capsule(Arc::new(
+            ClosureTask::new("producer", {
+                let x = x.clone();
+                move |_| Ok(Context::new().with(&x, 1.0))
+            })
+            .output(&x),
+        ));
+        let b = p.add_capsule(Arc::new(
+            ClosureTask::new("consumer", |_| Ok(Context::new())).input(&x_str),
+        ));
+        p.add_direct(a, b);
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("expects string"), "{err}");
+        assert!(err.contains("supplies f64"), "{err}");
+    }
+
+    #[test]
+    fn accepts_numeric_widening_and_sampling_columns() {
+        // seed column (u32) feeds a u32 input AND an f64 input
+        let seed = val_u32("seed");
+        let wide = val_f64("seed");
+        let mut p = Puzzle::new();
+        let entry = p.add_capsule(id_task());
+        let a = p.add_capsule(Arc::new(
+            ClosureTask::new("narrow", |_| Ok(Context::new())).input(&seed),
+        ));
+        let b = p.add_capsule(Arc::new(
+            ClosureTask::new("wide", |_| Ok(Context::new())).input(&wide),
+        ));
+        p.add_explore(entry, Arc::new(SeedSampling::new(&seed, 3)), a);
+        p.add_direct(a, b);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn aggregate_produces_list_types() {
+        use crate::exploration::statistics::StatisticTask;
+        use crate::util::stats::Descriptor;
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let m = val_f64("m");
+        let mut p = Puzzle::new();
+        let entry = p.add_capsule(id_task());
+        let model = p.add_capsule(Arc::new(
+            ClosureTask::new("sq", {
+                let (x, y) = (x.clone(), y.clone());
+                move |ctx| Ok(Context::new().with(&y, ctx.get(&x)?.powi(2)))
+            })
+            .input(&x)
+            .output(&y),
+        ));
+        let stat = p.add_capsule(Arc::new(
+            StatisticTask::new().statistic(&y, &m, Descriptor::Median),
+        ));
+        p.add_explore(
+            entry,
+            Arc::new(FullFactorial::new(vec![Factor::new(&x, 0.0, 3.0, 1.0)])),
+            model,
+        );
+        p.add_aggregate(model, stat);
+        assert!(p.validate().is_ok());
+
+        // and a scalar consumer of the aggregated variable is a mismatch
+        let mut p2 = Puzzle::new();
+        let entry = p2.add_capsule(id_task());
+        let model = p2.add_capsule(Arc::new(
+            ClosureTask::new("sq", {
+                let (x, y) = (x.clone(), y.clone());
+                move |ctx| Ok(Context::new().with(&y, ctx.get(&x)?.powi(2)))
+            })
+            .input(&x)
+            .output(&y),
+        ));
+        let scalar = p2.add_capsule(Arc::new(
+            ClosureTask::new("scalar", |_| Ok(Context::new())).input(&y),
+        ));
+        p2.add_explore(
+            entry,
+            Arc::new(FullFactorial::new(vec![Factor::new(&x, 0.0, 3.0, 1.0)])),
+            model,
+        );
+        p2.add_aggregate(model, scalar);
+        let err = p2.validate().unwrap_err().to_string();
+        assert!(err.contains("expects f64") && err.contains("list<f64>"), "{err}");
+    }
+
+    #[test]
+    fn open_flow_demotes_known_types_instead_of_inventing_mismatches() {
+        // producer (f64 x) -> middle with UNDECLARED outputs that re-emits
+        // x as a string -> consumer expecting string x. At runtime the
+        // middle task's unfiltered result wins the merge, so this runs —
+        // validation must not reject it on the stale f64 type.
+        let x = val_f64("x");
+        let x_str = val_str("x");
+        let mut p = Puzzle::new();
+        let a = p.add_capsule(Arc::new(
+            ClosureTask::new("producer", {
+                let x = x.clone();
+                move |_| Ok(Context::new().with(&x, 1.0))
+            })
+            .output(&x),
+        ));
+        let mid = p.add_capsule(Arc::new(ClosureTask::new("relabel", {
+            let x_str = x_str.clone();
+            move |_| Ok(Context::new().with(&x_str, "label".to_string()))
+        })));
+        let b = p.add_capsule(Arc::new(
+            ClosureTask::new("consumer", |_| Ok(Context::new())).input(&x_str),
+        ));
+        p.add_direct(a, mid);
+        p.add_direct(mid, b);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn context_only_sampling_opens_the_flow() {
+        // downstream of an ExplicitSampling the checker cannot enumerate
+        // variables, so missing-input errors must be suppressed
+        let x = val_f64("x");
+        let mut p = Puzzle::new();
+        let entry = p.add_capsule(id_task());
+        let model = p.add_capsule(Arc::new(
+            ClosureTask::new("consumer", |_| Ok(Context::new())).input(&x),
+        ));
+        p.add_explore(
+            entry,
+            Arc::new(ExplicitSampling::new(vec![Context::new().with(&x, 1.0)])),
+            model,
+        );
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_with_initial_context_supplies_inputs() {
+        let x = val_f64("x");
+        let mut p = Puzzle::new();
+        p.add_capsule(Arc::new(
+            ClosureTask::new("consumer", |_| Ok(Context::new())).input(&x),
+        ));
+        assert!(p.validate().is_err(), "bare validate has no x");
+        assert!(p.validate_with(&Context::new().with(&x, 2.0)).is_ok());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_v1_mutators_still_work() {
+        let mut p = Puzzle::new();
+        let a = p.capsule(id_task());
+        let b = p.capsule(id_task());
+        p.direct(a, b);
+        p.entry(a);
+        assert!(p.validate().is_ok());
     }
 }

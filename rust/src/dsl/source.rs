@@ -7,7 +7,7 @@
 
 use std::path::PathBuf;
 
-use crate::core::{Context, Val, Value, ValueType};
+use crate::core::{Context, Val, Value, ValueType, VarSpec, VarType};
 use crate::error::{Error, Result};
 
 /// Injects variables into a capsule's incoming context.
@@ -16,6 +16,14 @@ pub trait Source: Send + Sync {
     /// Produce the variables to merge (the incoming context is provided
     /// for sources parameterised by upstream data).
     fn inject(&self, incoming: &Context) -> Result<Context>;
+    /// Declared contribution for build-time wiring validation: the
+    /// variables [`Source::inject`] will merge, when they are known
+    /// without running it. `None` means the contribution cannot be
+    /// declared — validation then treats the capsule's inflow as open
+    /// (missing-input errors are suppressed, never invented).
+    fn provides(&self) -> Option<Vec<VarSpec>> {
+        None
+    }
 }
 
 /// Fixed-value source (`ConstantSource` — e.g. experiment constants).
@@ -50,6 +58,18 @@ impl Source for ConstantSource {
     fn inject(&self, _incoming: &Context) -> Result<Context> {
         Ok(self.values.clone())
     }
+
+    fn provides(&self) -> Option<Vec<VarSpec>> {
+        Some(
+            self.values
+                .names()
+                .map(|n| VarSpec {
+                    name: n.to_string(),
+                    ty: self.values.get_raw(n).and_then(Value::var_type),
+                })
+                .collect(),
+        )
+    }
 }
 
 /// CSV file source: reads numeric columns into `Vec<f64>` variables (the
@@ -72,6 +92,16 @@ impl CsvSource {
 impl Source for CsvSource {
     fn name(&self) -> &str {
         "CsvSource"
+    }
+
+    fn provides(&self) -> Option<Vec<VarSpec>> {
+        // each requested column materialises as an array variable
+        Some(
+            self.columns
+                .iter()
+                .map(|c| VarSpec::of(c, VarType::List(Box::new(VarType::F64))))
+                .collect(),
+        )
     }
 
     fn inject(&self, _incoming: &Context) -> Result<Context> {

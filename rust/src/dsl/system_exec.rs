@@ -14,7 +14,7 @@ use std::process::Command;
 use crate::care::manifest::KernelVersion;
 use crate::care::reexec::{reexecute, Packager, RemoteHost, ReexecOutcome};
 use crate::care::Archive;
-use crate::core::{Context, Val, Value};
+use crate::core::{Context, Val, Value, VarSpec, VarType};
 use crate::dsl::task::Task;
 use crate::error::{Error, Result};
 
@@ -90,15 +90,17 @@ impl Task for SystemExecTask {
         &self.name
     }
 
-    fn inputs(&self) -> Vec<String> {
-        self.inputs.clone()
+    fn input_specs(&self) -> Vec<VarSpec> {
+        // command placeholders render any value type: presence-checked,
+        // not type-checked
+        self.inputs.iter().map(VarSpec::untyped).collect()
     }
 
-    fn outputs(&self) -> Vec<String> {
+    fn output_specs(&self) -> Vec<VarSpec> {
         self.stdout_var
             .iter()
-            .chain(self.status_var.iter())
-            .cloned()
+            .map(|n| VarSpec::of(n, VarType::Str))
+            .chain(self.status_var.iter().map(|n| VarSpec::of(n, VarType::I64)))
             .collect()
     }
 

@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use crate::core::{Context, Val, ValueType};
+use crate::core::{Context, Val, VarSpec, ValueType};
 use crate::error::{Error, Result};
 
 /// The unit of delegated computation.
@@ -15,14 +15,40 @@ pub trait Task: Send + Sync {
     fn name(&self) -> &str;
 
     /// Declared input variable names (presence is validated before run).
+    /// The default derives the names from [`Task::input_specs`]; typed
+    /// tasks only implement the spec form.
     fn inputs(&self) -> Vec<String> {
-        Vec::new()
+        self.input_specs().into_iter().map(|s| s.name).collect()
     }
 
     /// Declared output variable names (the engine narrows the returned
     /// context to these, so undeclared writes never leak downstream).
+    /// The default derives the names from [`Task::output_specs`].
     fn outputs(&self) -> Vec<String> {
+        self.output_specs().into_iter().map(|s| s.name).collect()
+    }
+
+    /// Typed input interface (MoleDSL v2): name + static type of every
+    /// declared input. [`crate::dsl::Puzzle::validate`] proves each one
+    /// is supplied — with a compatible type — by upstream outputs,
+    /// sources, sampling columns or defaults, before any job is
+    /// submitted.
+    fn input_specs(&self) -> Vec<VarSpec> {
         Vec::new()
+    }
+
+    /// Typed output interface (MoleDSL v2), the supply side of the
+    /// build-time dataflow check.
+    fn output_specs(&self) -> Vec<VarSpec> {
+        Vec::new()
+    }
+
+    /// True for tasks that forward their incoming context unchanged
+    /// (entry/exit anchors). Lets validation keep precise knowledge of
+    /// the dataflow through a capsule with no declared outputs instead
+    /// of assuming it may emit anything.
+    fn passthrough(&self) -> bool {
+        false
     }
 
     /// Default values, merged below the incoming context.
@@ -81,8 +107,8 @@ type Body = dyn Fn(&Context) -> Result<Context> + Send + Sync;
 /// The `ScalaTask` analogue: a task defined by an inline closure.
 pub struct ClosureTask {
     name: String,
-    inputs: Vec<String>,
-    outputs: Vec<String>,
+    inputs: Vec<VarSpec>,
+    outputs: Vec<VarSpec>,
     defaults: Context,
     cost_hint: f64,
     body: Arc<Body>,
@@ -103,15 +129,16 @@ impl ClosureTask {
         }
     }
 
-    /// Declare an input prototype.
+    /// Declare an input prototype (name and type enter the build-time
+    /// wiring check).
     pub fn input<T: ValueType>(mut self, v: &Val<T>) -> Self {
-        self.inputs.push(v.name().to_string());
+        self.inputs.push(VarSpec::typed(v));
         self
     }
 
     /// Declare an output prototype.
     pub fn output<T: ValueType>(mut self, v: &Val<T>) -> Self {
-        self.outputs.push(v.name().to_string());
+        self.outputs.push(VarSpec::typed(v));
         self
     }
 
@@ -132,10 +159,10 @@ impl Task for ClosureTask {
     fn name(&self) -> &str {
         &self.name
     }
-    fn inputs(&self) -> Vec<String> {
+    fn input_specs(&self) -> Vec<VarSpec> {
         self.inputs.clone()
     }
-    fn outputs(&self) -> Vec<String> {
+    fn output_specs(&self) -> Vec<VarSpec> {
         self.outputs.clone()
     }
     fn defaults(&self) -> Context {
@@ -167,6 +194,9 @@ impl Task for IdentityTask {
     }
     fn run(&self, ctx: &Context) -> Result<Context> {
         Ok(ctx.clone())
+    }
+    fn passthrough(&self) -> bool {
+        true
     }
     fn cost_hint(&self) -> f64 {
         0.0

@@ -19,8 +19,13 @@ pub enum Error {
         actual: &'static str,
     },
 
-    /// Workflow graph is malformed (cycle, dangling transition, ...).
+    /// Workflow graph is malformed (cycle, dangling transition, mis-typed
+    /// or unsupplied dataflow, ...).
     InvalidWorkflow(String),
+
+    /// Experiment/CLI configuration error (bad flag value, unknown
+    /// environment, `--resume` journal mismatch, ...). Displayed verbatim.
+    Config(String),
 
     /// A task body failed.
     TaskFailed { task: String, message: String },
@@ -75,6 +80,7 @@ impl fmt::Display for Error {
                 "variable `{name}` has type {actual}, expected {expected}"
             ),
             Error::InvalidWorkflow(msg) => write!(f, "invalid workflow: {msg}"),
+            Error::Config(msg) => write!(f, "{msg}"),
             Error::TaskFailed { task, message } => {
                 write!(f, "task `{task}` failed: {message}")
             }

@@ -5,26 +5,27 @@
 use std::sync::Arc;
 
 use crate::core::Val;
-use crate::dsl::puzzle::{CapsuleId, Puzzle};
+use crate::dsl::builder::{CapsuleHandle, PuzzleBuilder};
 use crate::dsl::task::{IdentityTask, Task};
 use crate::exploration::sampling::SeedSampling;
 
-/// Wire `entry -< model >- statistic` into `puzzle`, exploring `n`
-/// independent seeds. Returns (entry, model, statistic) capsule ids so the
-/// caller can attach hooks or environments.
+/// Wire `entry -< model >- statistic` into `builder`, exploring `n`
+/// independent seeds. Returns the (entry, model, statistic) handles so the
+/// caller can attach hooks or environments before building. The entry
+/// becomes the builder's entry capsule.
 pub fn replicate(
-    puzzle: &mut Puzzle,
+    builder: &PuzzleBuilder,
     model: Arc<dyn Task>,
     seed: &Val<u32>,
     n: usize,
     statistic: Arc<dyn Task>,
-) -> (CapsuleId, CapsuleId, CapsuleId) {
-    let entry = puzzle.capsule(Arc::new(IdentityTask::new("replicate-entry")));
-    let model_c = puzzle.capsule(model);
-    let stat_c = puzzle.capsule(statistic);
-    puzzle.explore(entry, Arc::new(SeedSampling::new(seed, n)), model_c);
-    puzzle.aggregate(model_c, stat_c);
-    puzzle.entry(entry);
+) -> (CapsuleHandle, CapsuleHandle, CapsuleHandle) {
+    let entry = builder.task(IdentityTask::new("replicate-entry"));
+    let model_c = builder.capsule(model);
+    let stat_c = builder.capsule(statistic);
+    entry.explore(Arc::new(SeedSampling::new(seed, n)), &model_c);
+    model_c.aggregate(&stat_c);
+    entry.entry();
     (entry, model_c, stat_c)
 }
 
@@ -55,11 +56,15 @@ mod tests {
         .output(&out);
         let stat = StatisticTask::new().statistic(&out, &med, Descriptor::Median);
 
-        let mut p = Puzzle::new();
-        replicate(&mut p, Arc::new(model), &seed, 5, Arc::new(stat));
-        let result = MoleExecution::new(p, Arc::new(LocalEnvironment::new(4)), 42)
-            .start()
-            .unwrap();
+        let b = PuzzleBuilder::new();
+        replicate(&b, Arc::new(model), &seed, 5, Arc::new(stat));
+        let result = MoleExecution::new(
+            b.build().unwrap(),
+            Arc::new(LocalEnvironment::new(4)),
+            42,
+        )
+        .start()
+        .unwrap();
         assert_eq!(result.outputs.len(), 1);
         let m = result.outputs[0].get(&med).unwrap();
         assert!((0.0..7.0).contains(&m));

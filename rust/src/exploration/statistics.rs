@@ -1,7 +1,7 @@
 //! `StatisticTask` — aggregate replicated outputs with statistical
 //! descriptors (paper §4.4, Listing 3).
 
-use crate::core::{Context, Val};
+use crate::core::{Context, Val, VarSpec, VarType};
 use crate::dsl::task::Task;
 use crate::error::Result;
 use crate::util::stats::Descriptor;
@@ -55,12 +55,19 @@ impl Task for StatisticTask {
         &self.name
     }
 
-    fn inputs(&self) -> Vec<String> {
-        self.rules.iter().map(|r| r.input.clone()).collect()
+    fn input_specs(&self) -> Vec<VarSpec> {
+        // each rule consumes the array an aggregation barrier produced
+        self.rules
+            .iter()
+            .map(|r| VarSpec::of(&r.input, VarType::List(Box::new(VarType::F64))))
+            .collect()
     }
 
-    fn outputs(&self) -> Vec<String> {
-        self.rules.iter().map(|r| r.output.clone()).collect()
+    fn output_specs(&self) -> Vec<VarSpec> {
+        self.rules
+            .iter()
+            .map(|r| VarSpec::of(&r.output, VarType::F64))
+            .collect()
     }
 
     fn cost_hint(&self) -> f64 {

@@ -48,10 +48,13 @@ pub mod prelude {
         Broker, DispatchPolicy, EwmaPolicy, FlakyEnv, Journal, LeastInFlight,
         RoundRobin,
     };
-    pub use crate::core::{val_f64, val_i64, val_str, val_u32, Context, Val};
+    pub use crate::core::{
+        val_f64, val_i64, val_str, val_u32, Context, Val, VarSpec, VarType,
+    };
     pub use crate::dsl::{
-        CaptureHook, ClosureTask, CsvHook, DisplayHook, Hook, IdentityTask,
-        Puzzle, RowWriter, Sink, TableFormat, Task, ToStringHook,
+        CaptureHook, CapsuleHandle, ClosureTask, CsvHook, DisplayHook, Hook,
+        IdentityTask, Puzzle, PuzzleBuilder, RowWriter, Sink, TableFormat, Task,
+        ToStringHook,
     };
     pub use crate::environment::{local::LocalEnvironment, Environment, Job};
     pub use crate::exploration::{
@@ -60,7 +63,11 @@ pub mod prelude {
         StatisticTask, Sweep, UniformSampling,
     };
     pub use crate::util::{stats::Descriptor, Rng};
-    pub use crate::workflow::MoleExecution;
+    pub use crate::workflow::{
+        DirectSampling, EnvSpec, Experiment, ExplorationMethod, IslandEvolution,
+        MethodCtx, MethodOutcome, MoleExecution, Nsga2Evolution, Replication,
+        SingleRun,
+    };
     // NOTE: `crate::Result` is deliberately NOT re-exported: a glob
     // import of this prelude would otherwise shadow `std`'s two-generic
     // `Result` and break `fn main() -> Result<(), Box<dyn Error>>`

@@ -9,118 +9,20 @@
 //!   render     draw the ant world                (Figures 1–2)
 //!   envs       show the available environments
 //!
+//! Every run subcommand parses into one MoleDSL v2
+//! `molers::workflow::Experiment` (see `cli::front`) — construction,
+//! environment selection, journaling and resume validation are uniform;
+//! this file only dispatches and prints.
+//!
 //! `--env local|ssh|pbs|slurm|sge|oar|condor|egi` is the paper's
-//! one-line environment switch.
+//! one-line environment switch; an unknown name is a hard error.
 
-use std::sync::Arc;
-
-use molers::broker::{journal, policy, Broker, Journal};
-use molers::cli::Args;
-use molers::dsl::hook::{RowWriter, TableFormat};
-use molers::environment::cluster::BatchEnvironment;
-use molers::environment::egi::EgiEnvironment;
-use molers::environment::local::LocalEnvironment;
-use molers::environment::ssh::SshEnvironment;
-use molers::environment::Environment;
-use molers::evolution::{
-    Evaluator, GenerationalGA, IslandConfig, IslandSteadyGA, Nsga2Config,
-    PooledEvaluator, ReplicatedEvaluator,
-};
-use molers::exec::ThreadPool;
+use molers::broker::Broker;
+use molers::cli::{front, Args};
+use molers::evolution::Individual;
 use molers::metrics::throughput_per_hour;
-use molers::prelude::*;
-use molers::runtime::best_available_evaluator;
 use molers::sim::{render, AntParams, AntSim};
-
-fn environment(
-    name: &str,
-    nodes: usize,
-    pool: Arc<ThreadPool>,
-    seed: u64,
-) -> Arc<dyn Environment> {
-    match name {
-        "local" => Arc::new(LocalEnvironment::with_pool(pool)),
-        "ssh" => Arc::new(SshEnvironment::new("calc01", nodes, pool, seed)),
-        "pbs" => Arc::new(BatchEnvironment::pbs(nodes, pool, seed)),
-        "slurm" => Arc::new(BatchEnvironment::slurm(nodes, pool, seed)),
-        "sge" => Arc::new(BatchEnvironment::sge(nodes, pool, seed)),
-        "oar" => Arc::new(BatchEnvironment::oar(nodes, pool, seed)),
-        "condor" => Arc::new(BatchEnvironment::condor(nodes, pool, seed)),
-        "egi" => Arc::new(EgiEnvironment::new("biomed", nodes, pool, seed)),
-        other => {
-            eprintln!("unknown environment `{other}`; using local");
-            Arc::new(LocalEnvironment::with_pool(pool))
-        }
-    }
-}
-
-/// Build the execution environment for a command: `--envs SPEC` (a
-/// brokered fleet, with `--policy roundrobin|least|ewma`) wins over the
-/// single-environment `--env NAME`. Returns the broker too (when one was
-/// built) so commands can print its dispatch report.
-fn environment_from_args(
-    args: &Args,
-    default_env: &str,
-    nodes: usize,
-    pool: Arc<ThreadPool>,
-    seed: u64,
-) -> std::result::Result<(Arc<dyn Environment>, Option<Arc<Broker>>), Box<dyn std::error::Error>>
-{
-    if let Some(spec) = args.get("envs") {
-        let policy_name = args.get_or("policy", "ewma");
-        let p = policy::by_name(policy_name).ok_or_else(|| {
-            format!("unknown --policy `{policy_name}` (roundrobin|least|ewma)")
-        })?;
-        let mut builder = Broker::spec_builder(spec, pool, seed)?.policy(p);
-        if args.flag("speculate") {
-            builder = builder.speculation(molers::broker::SpeculationConfig::default());
-        }
-        let broker = Arc::new(builder.build()?);
-        let env: Arc<dyn Environment> = Arc::clone(&broker) as Arc<dyn Environment>;
-        Ok((env, Some(broker)))
-    } else {
-        Ok((
-            environment(args.get_or("env", default_env), nodes, pool, seed),
-            None,
-        ))
-    }
-}
-
-fn print_broker_report(b: &Broker) {
-    let c = b.counters();
-    println!(
-        "broker[{}]: reroutes={} speculation launched={} wins={} cancelled={} \
-         quarantine-trips={}",
-        b.policy_name(),
-        c.reroutes,
-        c.speculative_launched,
-        c.speculative_wins,
-        c.speculative_cancelled,
-        b.quarantine_trips()
-    );
-    for s in b.backend_snapshots() {
-        println!(
-            "  {:<32} completed={:<7} failed={:<5} ewma={:.1}s{}",
-            s.name,
-            s.completed,
-            s.failed,
-            s.ewma_duration_s,
-            if s.quarantined { "  [quarantined]" } else { "" }
-        );
-    }
-}
-
-fn genome_bounds() -> (Val<f64>, Val<f64>, Vec<Val<f64>>) {
-    (
-        val_f64("gDiffusionRate"),
-        val_f64("gEvaporationRate"),
-        vec![
-            val_f64("medNumberFood1"),
-            val_f64("medNumberFood2"),
-            val_f64("medNumberFood3"),
-        ],
-    )
-}
+use molers::workflow::ExperimentReport;
 
 fn main() {
     let args = match Args::from_env() {
@@ -173,519 +75,136 @@ fn main() {
 
 type CmdResult = std::result::Result<(), Box<dyn std::error::Error>>;
 
+fn print_broker_report(b: &Broker) {
+    let c = b.counters();
+    println!(
+        "broker[{}]: reroutes={} speculation launched={} wins={} cancelled={} \
+         quarantine-trips={}",
+        b.policy_name(),
+        c.reroutes,
+        c.speculative_launched,
+        c.speculative_wins,
+        c.speculative_cancelled,
+        b.quarantine_trips()
+    );
+    for s in b.backend_snapshots() {
+        println!(
+            "  {:<32} completed={:<7} failed={:<5} ewma={:.1}s{}",
+            s.name,
+            s.completed,
+            s.failed,
+            s.ewma_duration_s,
+            if s.quarantined { "  [quarantined]" } else { "" }
+        );
+    }
+}
+
+fn print_env_stats(report: &ExperimentReport) {
+    let s = &report.env_stats;
+    println!(
+        "env: submitted={} completed={} resubmissions={} failed-jobs={}",
+        s.submitted, s.completed, s.resubmissions, s.failed_jobs
+    );
+    if let Some(b) = &report.broker {
+        print_broker_report(b);
+    }
+}
+
+fn print_pareto_front(front: &[Individual], limit: usize) {
+    for ind in front.iter().take(limit) {
+        println!(
+            "  diffusion={:6.2} evaporation={:6.2} -> [{:6.1} {:6.1} {:6.1}]",
+            ind.genome[0],
+            ind.genome[1],
+            ind.objectives[0],
+            ind.objectives[1],
+            ind.objectives[2]
+        );
+    }
+}
+
 /// Listing 2: one model execution with explicit parameters.
 fn cmd_run(args: &Args) -> CmdResult {
-    let seed = args.u64("seed", 42)?;
-    let population = args.f64("population", 125.0)?;
-    let diffusion = args.f64("diffusion", 50.0)?;
-    let evaporation = args.f64("evaporation", 50.0)?;
-    let (evaluator, kind) = best_available_evaluator(1);
-    println!("evaluator: {kind}");
-    let t0 = std::time::Instant::now();
-    let fit = evaluator.evaluate(&[population, diffusion, evaporation], seed as u32)?;
+    let report = front::run(args)?.run()?;
+    let out = report
+        .outcome
+        .outputs
+        .first()
+        .ok_or("run produced no outputs")?;
     println!(
         "final-ticks-food1={} final-ticks-food2={} final-ticks-food3={}  ({:?})",
-        fit[0],
-        fit[1],
-        fit[2],
-        t0.elapsed()
+        out.get(&molers::core::val_f64("food1"))?,
+        out.get(&molers::core::val_f64("food2"))?,
+        out.get(&molers::core::val_f64("food3"))?,
+        report.wall
     );
     Ok(())
 }
 
 /// §Exploration: plain design of experiments at calibration scale — a
-/// columnar sample wave fanned through the (brokered) environment in
-/// `--chunk`-sized `evaluate_rows` jobs, `sample_block` journal
-/// checkpoints, and a `--resume` that skips already-evaluated rows while
-/// reproducing a byte-identical result file.
+/// columnar sample wave fanned through the (brokered) environment, with
+/// `sample_block` checkpoints and byte-identical resumable results.
 fn cmd_explore(args: &Args) -> CmdResult {
-    let seed = args.u64("seed", 42)?;
-    let n = args.usize("n", 1000)?;
-    let chunk = args.usize("chunk", 256)?;
-    let replications = args.usize("replications", 1)?;
-    let nodes = args.usize("nodes", 8)?;
-    let lo = args.f64("lo", 0.0)?;
-    let hi = args.f64("hi", 99.0)?;
-    let step = args.f64("step", 24.75)?;
-    let out_path = args.get_or("out", "explore.csv").to_string();
-    let format = match args.get("format") {
-        Some("csv") => TableFormat::Csv,
-        Some("jsonl") => TableFormat::Jsonl,
-        Some(other) => {
-            return Err(format!("unknown --format `{other}` (csv|jsonl)").into())
-        }
-        None if out_path.ends_with(".jsonl") => TableFormat::Jsonl,
-        None => TableFormat::Csv,
-    };
-    let pool = Arc::new(ThreadPool::default_size());
-    let (env, broker) = environment_from_args(args, "local", nodes, pool, seed)?;
-
-    let (d, e, _) = genome_bounds();
-    let sampling_name = args.get_or("sampling", "lhs").to_string();
-    let sampling: Arc<dyn Sampling> = match sampling_name.as_str() {
-        "lhs" => Arc::new(LhsSampling::new(&[(&d, lo, hi), (&e, lo, hi)], n)),
-        "sobol" => {
-            // validated here so an oversized design is a clean CLI error,
-            // not the SobolSampling constructor's panic
-            if n as u64 >= 1u64 << 32 {
-                return Err(format!(
-                    "--n {n} exceeds the Sobol sequence length (2^32 points)"
-                )
-                .into());
-            }
-            Arc::new(SobolSampling::new(&[(&d, lo, hi), (&e, lo, hi)], n))
-        }
-        "uniform" => {
-            Arc::new(UniformSampling::multi(&[(&d, lo, hi), (&e, lo, hi)], n))
-        }
-        "factorial" => {
-            // validated here so a bad value is a clean CLI error, not the
-            // Factor constructor's panic
-            if !(step.is_finite() && step > 0.0) {
-                return Err(format!(
-                    "--step expects a positive finite number, got `{step}`"
-                )
-                .into());
-            }
-            let levels = (hi - lo) / step;
-            if !levels.is_finite() || levels >= 1e6 {
-                return Err(format!(
-                    "--step {step} over [{lo}, {hi}] yields ~{levels:.0} levels \
-                     per factor — refusing a grid this size"
-                )
-                .into());
-            }
-            Arc::new(FullFactorial::new(vec![
-                Factor::new(&d, lo, hi, step),
-                Factor::new(&e, lo, hi, step),
-            ]))
-        }
-        other => {
-            return Err(format!(
-                "unknown --sampling `{other}` (lhs|sobol|uniform|factorial)"
-            )
-            .into())
-        }
-    };
-    if sampling_name != "factorial" && !(lo.is_finite() && hi.is_finite() && lo < hi)
-    {
-        return Err(format!(
-            "--lo must be below --hi (both finite) for --sampling \
-             {sampling_name} (got lo={lo}, hi={hi})"
-        )
-        .into());
-    }
-
-    let (base_eval, kind) = best_available_evaluator(2);
-    println!(
-        "evaluator: {kind}, environment: {}, sampling: {} ({} rows, chunk {chunk})",
-        env.name(),
-        sampling.name(),
-        sampling.size_hint().unwrap_or(0),
-    );
-    let evaluator: Arc<dyn Evaluator> = if replications > 1 {
-        Arc::new(ReplicatedEvaluator::new(base_eval, replications))
-    } else {
-        base_eval
-    };
-
-    // --resume restores sample_block checkpoints; the design regenerates
-    // from the sampling configuration + seed, so a journal written under
-    // ANY different design knob (sampling kind, seed, n, bounds, step,
-    // replications) describes a different design — reject it up front,
-    // before the output file is touched
-    let objective_names = ["food1", "food2", "food3"];
-    let expected_rows = sampling.size_hint().unwrap_or(0);
-    let mut resume_blocks: Option<Vec<journal::SampleBlock>> = None;
-    let journal_arc = if let Some(path) = args.get("resume") {
-        let records = Journal::load(path)?;
-        if let Some(start) = records
-            .iter()
-            .find(|r| r.get("kind").and_then(|k| k.as_str()) == Some("run_start"))
-        {
-            if let Some(s) = start.get("sampling").and_then(|v| v.as_str()) {
-                if s != sampling.name() {
-                    return Err(format!(
-                        "--resume config mismatch: journal `{path}` was written \
-                         with --sampling {s}, this run samples {}",
-                        sampling.name()
-                    )
-                    .into());
-                }
-            }
-            // the 64-bit seed is compared exactly (journaled as a string;
-            // an f64 comparison is lossy above 2^53), with a numeric
-            // fallback for journals predating seed_exact
-            let seed_matches = match start.get("seed_exact").and_then(|v| v.as_str())
-            {
-                Some(exact) => exact == seed.to_string(),
-                None => start
-                    .get("seed")
-                    .and_then(|v| v.as_f64())
-                    .is_none_or(|was| was as u64 == seed),
-            };
-            if !seed_matches {
-                return Err(format!(
-                    "--resume config mismatch: journal `{path}` was written \
-                     under a different --seed than {seed} — the designs \
-                     differ, refusing to reuse its blocks"
-                )
-                .into());
-            }
-            // numeric design knobs recorded at journal creation; a knob
-            // absent from an old journal is skipped, a present one must
-            // match exactly
-            for (key, now) in [
-                ("n", expected_rows as f64),
-                ("lo", lo),
-                ("hi", hi),
-                ("step", step),
-                ("replications", replications as f64),
-            ] {
-                if let Some(was) = start.get(key).and_then(|v| v.as_f64()) {
-                    if was != now {
-                        return Err(format!(
-                            "--resume config mismatch: journal `{path}` was \
-                             written with {key}={was}, this run has {key}={now} \
-                             — the designs differ, refusing to reuse its blocks"
-                        )
-                        .into());
-                    }
-                }
-            }
-        }
-        let blocks = journal::sample_blocks(&records);
-        // blocks must fit the design this run will generate — checked
-        // before the output file is recreated, so a refused resume never
-        // destroys previous partial results
-        for b in &blocks {
-            if b.first_row + b.objectives.len() > expected_rows
-                || b.objectives.iter().any(|r| r.len() != objective_names.len())
-            {
-                return Err(format!(
-                    "--resume journal `{path}` holds a block (rows {}..{}) that \
-                     does not fit this {expected_rows}-row design — refusing to \
-                     overwrite `{out_path}`",
-                    b.first_row,
-                    b.first_row + b.objectives.len()
-                )
-                .into());
-            }
-        }
-        println!("resuming sweep: {} checkpointed blocks", blocks.len());
-        resume_blocks = Some(blocks);
-        Some(Arc::new(Journal::append_to(path)?))
-    } else if let Some(path) = args.get("journal") {
-        Some(Arc::new(Journal::create(path)?))
-    } else {
-        None
-    };
-
-    let mut columns: Vec<&str> = vec![d.name(), e.name()];
-    columns.extend(objective_names);
-    let writer = Arc::new(RowWriter::create(&out_path, format, &columns)?);
-    let mut sweep = Sweep::new(sampling, evaluator, &objective_names)
-        .chunk(chunk)
-        .writer(writer)
-        .meta("lo", molers::util::json::Json::Num(lo))
-        .meta("hi", molers::util::json::Json::Num(hi))
-        .meta("replications", molers::util::json::Json::Num(replications as f64));
-    if sampling_name == "factorial" {
-        sweep = sweep.meta("step", molers::util::json::Json::Num(step));
-    }
-    if let Some(j) = journal_arc {
-        sweep = sweep.journal(j);
-    }
-    let t0 = std::time::Instant::now();
-    let result = sweep.run_resumable(env.as_ref(), seed, resume_blocks.as_deref())?;
-    let stats = env.stats();
+    let report = front::explore(args)?.run()?;
+    let o = &report.outcome;
     println!(
         "\nrows={} evaluated={} resumed={} wall={:?}\nvirtual makespan = {:.0} s \
          -> {:.0} evaluations/virtual-hour",
-        result.rows(),
-        result.evaluated,
-        result.resumed,
-        t0.elapsed(),
-        result.virtual_makespan,
-        throughput_per_hour(result.evaluated as u64, result.virtual_makespan),
+        o.rows,
+        o.evaluated,
+        o.resumed,
+        report.wall,
+        o.virtual_makespan,
+        throughput_per_hour(o.evaluated as u64, o.virtual_makespan),
     );
-    println!(
-        "env: submitted={} completed={} resubmissions={} failed-jobs={}",
-        stats.submitted, stats.completed, stats.resubmissions, stats.failed_jobs
-    );
-    if let Some(b) = &broker {
-        print_broker_report(b);
+    print_env_stats(&report);
+    if let Some(path) = &o.result_path {
+        println!("results: {path}");
     }
-    println!("results: {out_path}");
     Ok(())
 }
 
 /// Listing 3: replication + median through the workflow engine.
 fn cmd_replicate(args: &Args) -> CmdResult {
-    let seed = args.u64("seed", 42)?;
-    let replications = args.usize("replications", 5)?;
-    let (evaluator, kind) = best_available_evaluator(1);
-    println!("evaluator: {kind}");
-
-    let seed_val = val_u32("seed");
-    let food = [val_f64("food1"), val_f64("food2"), val_f64("food3")];
-    let med = [
-        val_f64("medNumberFood1"),
-        val_f64("medNumberFood2"),
-        val_f64("medNumberFood3"),
-    ];
-    let diffusion = args.f64("diffusion", 50.0)?;
-    let evaporation = args.f64("evaporation", 50.0)?;
-    let population = args.f64("population", 125.0)?;
-
-    let model = {
-        let (seed_c, food_c) = (seed_val.clone(), food.clone());
-        let ev = Arc::clone(&evaluator);
-        ClosureTask::new("ants", move |ctx: &Context| {
-            let s = ctx.get(&seed_c)?;
-            let fit = ev.evaluate(&[population, diffusion, evaporation], s)?;
-            let mut out = Context::new();
-            for (f, v) in food_c.iter().zip(fit) {
-                out.set(f, v);
-            }
-            Ok(out)
-        })
-        .input(&seed_val)
-        .output(&food[0])
-        .output(&food[1])
-        .output(&food[2])
-    };
-    let mut stat = StatisticTask::new();
-    for (f, m) in food.iter().zip(&med) {
-        stat = stat.statistic(f, m, Descriptor::Median);
-    }
-
-    let mut puzzle = Puzzle::new();
-    let (_, model_c, stat_c) =
-        replicate(&mut puzzle, Arc::new(model), &seed_val, replications, Arc::new(stat));
-    puzzle.hook(model_c, Arc::new(ToStringHook::new(&["food1", "food2", "food3"])));
-    puzzle.hook(
-        stat_c,
-        Arc::new(ToStringHook::new(&[
-            "medNumberFood1",
-            "medNumberFood2",
-            "medNumberFood3",
-        ])),
+    let report = front::replicate(args)?.run()?;
+    println!(
+        "jobs={} wall={:?}",
+        report.outcome.jobs, report.wall
     );
-    let env: Arc<dyn Environment> = Arc::new(LocalEnvironment::new(4));
-    let result = MoleExecution::new(puzzle, env, seed).start()?;
-    println!("jobs={} wall={:?}", result.report.jobs, result.report.wall);
     Ok(())
 }
 
 /// Listing 4: generational NSGA-II with replication-median fitness.
 fn cmd_calibrate(args: &Args) -> CmdResult {
-    let seed = args.u64("seed", 42)?;
-    let mu = args.usize("mu", 10)?;
-    let lambda = args.usize("lambda", 10)?;
-    let generations = args.usize("generations", 100)? as u32;
-    let replications = args.usize("replications", 5)?;
-    let nodes = args.usize("nodes", 8)?;
-    // --chunk N packs N genomes per evaluation job, fanned out through the
-    // pooled batch path (§Perf): worthwhile on local/ssh environments
-    let chunk = args.usize("chunk", 1)?;
-    let pool = Arc::new(ThreadPool::default_size());
-    let (env, broker) = environment_from_args(args, "local", nodes, pool, seed)?;
-
-    // --resume continues an interrupted journal; --journal starts one
-    let mut resume = None;
-    let journal_arc = if let Some(path) = args.get("resume") {
-        let records = Journal::load(path)?;
-        // the original run_start record carries the configuration; a
-        // resumed run with a different --mu/--lambda would silently
-        // corrupt the trajectory, so reject the mismatch up front
-        if let Some(start) = records
-            .iter()
-            .find(|r| r.get("kind").and_then(|k| k.as_str()) == Some("run_start"))
-        {
-            for (key, got) in [("mu", mu), ("lambda", lambda)] {
-                if let Some(want) =
-                    start.get(key).and_then(|v| v.as_f64()).map(|v| v as usize)
-                {
-                    if want != got {
-                        return Err(format!(
-                            "--resume config mismatch: journal `{path}` was \
-                             written with --{key} {want}, this run has --{key} \
-                             {got}"
-                        )
-                        .into());
-                    }
-                }
-            }
-        }
-        resume = journal::resume_state(&records);
-        let Some(state) = &resume else {
-            return Err(
-                format!("journal `{path}` holds no generation checkpoint").into()
-            );
-        };
-        println!(
-            "resuming from generation {} ({} evaluations done)",
-            state.generation, state.evaluations
-        );
-        Some(Arc::new(Journal::append_to(path)?))
-    } else if let Some(path) = args.get("journal") {
-        Some(Arc::new(Journal::create(path)?))
-    } else {
-        None
-    };
-
-    let (base, kind) = best_available_evaluator(2);
-    println!("evaluator: {kind}, environment: {}", env.name());
-    let evaluator: Arc<dyn Evaluator> = if chunk > 1 {
-        // chunked jobs carry whole batches. The evaluator gets its OWN
-        // worker pool: environment workers block while a chunk fans out,
-        // so sharing one pool could deadlock with every worker waiting
-        Arc::new(PooledEvaluator::machine_sized(Arc::new(
-            ReplicatedEvaluator::new(base, replications),
-        )))
-    } else {
-        Arc::new(ReplicatedEvaluator::new(base, replications))
-    };
-
-    let (d, e, objectives) = genome_bounds();
-    let obj_refs: Vec<&Val<f64>> = objectives.iter().collect();
-    let config = Nsga2Config::new(
-        mu,
-        &[(&d, 0.0, 99.0), (&e, 0.0, 99.0)],
-        &obj_refs,
-        0.01,
-    )?;
-    // the coordinator's own stages (variation, crowding, dominance) fan
-    // out over a dedicated pool — never the environment's (whose workers
-    // block while the coordinator joins)
-    let mut ga = GenerationalGA::new(config, evaluator, lambda)
-        .eval_chunk(chunk)
-        .coordinator_pool(Arc::new(ThreadPool::default_size()))
-        .on_generation(|g, pop| {
-            let best: f64 = (0..pop.len())
-                .map(|i| pop.objectives_row(i).iter().sum::<f64>())
-                .fold(f64::INFINITY, f64::min);
-            if g % 10 == 0 {
-                println!("Generation {g}: best objective sum {best:.1}");
-            }
-        });
-    if let Some(j) = journal_arc {
-        ga = ga.journal(j);
-    }
-    let result = ga.run_resumable(env.as_ref(), generations, seed, resume)?;
-    if let Some(b) = &broker {
-        print_broker_report(b);
+    let report = front::calibrate(args)?.run()?;
+    let o = &report.outcome;
+    if report.broker.is_some() {
+        print_env_stats(&report);
     }
     println!(
         "\nevaluations={} virtual-makespan={:.0}s pareto-front:",
-        result.evaluations, result.virtual_makespan
+        o.evaluations, o.virtual_makespan
     );
-    for ind in &result.pareto_front {
-        println!(
-            "  diffusion={:6.2} evaporation={:6.2} -> [{:6.1} {:6.1} {:6.1}]",
-            ind.genome[0],
-            ind.genome[1],
-            ind.objectives[0],
-            ind.objectives[1],
-            ind.objectives[2]
-        );
-    }
+    print_pareto_front(&o.pareto_front, usize::MAX);
     Ok(())
 }
 
 /// Listing 5 + §4.6: island NSGA-II on the (simulated) EGI.
 fn cmd_island(args: &Args) -> CmdResult {
-    let seed = args.u64("seed", 42)?;
-    let mu = args.usize("mu", 200)?;
-    let islands = args.usize("islands", 64)?;
-    let total = args.u64("total-evals", 6400)?;
-    let sample = args.usize("sample", 50)?;
-    let per_island = args.u64("evals-per-island", 100)?;
-    let nodes = args.usize("nodes", islands)?;
-    let replications = args.usize("replications", 1)?;
-    let pool = Arc::new(ThreadPool::default_size());
-    let (env, broker) = environment_from_args(args, "egi", nodes, pool, seed)?;
-
-    let (base, kind) = best_available_evaluator(2);
-    println!("evaluator: {kind}, environment: {}", env.name());
-    let evaluator: Arc<dyn Evaluator> = if replications > 1 {
-        Arc::new(ReplicatedEvaluator::new(base, replications))
-    } else {
-        base
-    };
-
-    let (d, e, objectives) = genome_bounds();
-    let obj_refs: Vec<&Val<f64>> = objectives.iter().collect();
-    let config = Nsga2Config::new(
-        mu,
-        &[(&d, 0.0, 99.0), (&e, 0.0, 99.0)],
-        &obj_refs,
-        0.01,
-    )?;
-    let mut ga = IslandSteadyGA::new(
-        config,
-        IslandConfig {
-            concurrent_islands: islands,
-            total_evaluations: total,
-            island_sample: sample,
-            evals_per_island: per_island,
-        },
-        evaluator,
-    );
-    if let Some(path) = args.get("resume") {
-        let records = Journal::load(path)?;
-        let (pop, evals) = journal::island_resume(&records).ok_or_else(|| {
-            format!("journal `{path}` holds no island archive snapshot")
-        })?;
-        println!(
-            "resuming island archive: {} individuals, {evals} evaluations done",
-            pop.len()
-        );
-        ga = ga
-            .resume_from(pop, evals)
-            .journal(Arc::new(Journal::append_to(path)?));
-    } else if let Some(path) = args.get("journal") {
-        ga = ga.journal(Arc::new(Journal::create(path)?));
-    }
-    let t0 = std::time::Instant::now();
-    let result = ga.run(
-        env.as_ref(),
-        seed,
-        Some(Arc::new(|done, evals| {
-            if done % 16 == 0 {
-                println!("Generation {done} islands merged, {evals} evaluations");
-            }
-        })),
-    )?;
-    let stats = env.stats();
+    let report = front::island(args)?.run()?;
+    let o = &report.outcome;
     println!(
         "\nislands={} evaluations={} wall={:?}\nvirtual makespan = {:.0} s \
          -> {:.0} evaluations/virtual-hour (paper headline: 200,000/h on 2,000 islands)",
-        result.generations,
-        result.evaluations,
-        t0.elapsed(),
-        result.virtual_makespan,
-        throughput_per_hour(result.evaluations, result.virtual_makespan),
+        o.generations,
+        o.evaluations,
+        report.wall,
+        o.virtual_makespan,
+        throughput_per_hour(o.evaluations, o.virtual_makespan),
     );
-    println!(
-        "env: submitted={} completed={} resubmissions={} failed-jobs={}",
-        stats.submitted, stats.completed, stats.resubmissions, stats.failed_jobs
-    );
-    if let Some(b) = &broker {
-        print_broker_report(b);
-    }
-    println!("pareto front ({} points):", result.pareto_front.len());
-    for ind in result.pareto_front.iter().take(10) {
-        println!(
-            "  diffusion={:6.2} evaporation={:6.2} -> [{:6.1} {:6.1} {:6.1}]",
-            ind.genome[0],
-            ind.genome[1],
-            ind.objectives[0],
-            ind.objectives[1],
-            ind.objectives[2]
-        );
-    }
+    print_env_stats(&report);
+    println!("pareto front ({} points):", o.pareto_front.len());
+    print_pareto_front(&o.pareto_front, 10);
     Ok(())
 }
 

@@ -1,0 +1,965 @@
+//! MoleDSL v2's single experiment entry point.
+//!
+//! An [`Experiment`] is *model + exploration method + environments +
+//! journal* — the declarative description PaPaS argues a parameter study
+//! should be, with the framework deriving the execution. Every `molers`
+//! subcommand and example constructs one of these instead of hand-wiring
+//! environment construction, journal creation, resume validation and
+//! engine plumbing (which previously existed in four inconsistent copies
+//! in `main.rs`).
+//!
+//! The [`ExplorationMethod`] trait packages each engine —
+//! [`DirectSampling`] over [`Sweep`], [`Replication`] over the puzzle
+//! scheduler, [`Nsga2Evolution`] over [`GenerationalGA`],
+//! [`IslandEvolution`] over [`IslandSteadyGA`], [`SingleRun`] over a
+//! one-capsule puzzle — behind one uniform face:
+//!
+//! * **environments**: a single named environment (unknown names are a
+//!   hard error listing the valid ones — a typo must not silently run a
+//!   campaign on the laptop), a brokered fleet from an `--envs` spec, or
+//!   any prebuilt [`Environment`];
+//! * **journal / resume**: the experiment loads the journal, lets the
+//!   method validate its `run_start` configuration *before* any output
+//!   file is touched, then hands an append journal to the engine;
+//! * **reporting**: one [`ExperimentReport`] carrying the method outcome,
+//!   environment statistics and the broker (for dispatch reports).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::broker::{journal, policy, Broker, Journal, SpeculationConfig};
+use crate::core::Context;
+use crate::dsl::builder::PuzzleBuilder;
+use crate::dsl::hook::{Hook, RowWriter, TableFormat};
+use crate::dsl::task::Task;
+use crate::environment::cluster::BatchEnvironment;
+use crate::environment::egi::EgiEnvironment;
+use crate::environment::local::LocalEnvironment;
+use crate::environment::ssh::SshEnvironment;
+use crate::environment::{EnvStats, Environment};
+use crate::error::{Error, Result};
+use crate::evolution::evaluator::Evaluator;
+use crate::evolution::generational::{GenerationalGA, Nsga2Config};
+use crate::evolution::genome::Individual;
+use crate::evolution::island::{IslandConfig, IslandSteadyGA};
+use crate::evolution::popmatrix::PopMatrix;
+use crate::exec::ThreadPool;
+use crate::exploration::replication::replicate;
+use crate::exploration::sampling::Sampling;
+use crate::exploration::sweep::Sweep;
+use crate::util::json::Json;
+use crate::workflow::MoleExecution;
+
+/// The environment names [`single_environment`] accepts.
+pub const ENV_NAMES: &[&str] = &[
+    "local", "ssh", "pbs", "slurm", "sge", "oar", "condor", "egi",
+];
+
+/// Build one named environment. Unknown names are a **hard error** — a
+/// typo'd `--env` must not quietly fall back to running the campaign on
+/// the local machine.
+pub fn single_environment(
+    name: &str,
+    nodes: usize,
+    pool: Arc<ThreadPool>,
+    seed: u64,
+) -> Result<Arc<dyn Environment>> {
+    Ok(match name {
+        "local" => Arc::new(LocalEnvironment::with_pool(pool)),
+        "ssh" => Arc::new(SshEnvironment::new("calc01", nodes, pool, seed)),
+        "pbs" => Arc::new(BatchEnvironment::pbs(nodes, pool, seed)),
+        "slurm" => Arc::new(BatchEnvironment::slurm(nodes, pool, seed)),
+        "sge" => Arc::new(BatchEnvironment::sge(nodes, pool, seed)),
+        "oar" => Arc::new(BatchEnvironment::oar(nodes, pool, seed)),
+        "condor" => Arc::new(BatchEnvironment::condor(nodes, pool, seed)),
+        "egi" => Arc::new(EgiEnvironment::new("biomed", nodes, pool, seed)),
+        other => {
+            return Err(Error::Config(format!(
+                "unknown environment `{other}` — valid names: {}",
+                ENV_NAMES.join(", ")
+            )))
+        }
+    })
+}
+
+/// Where an experiment runs.
+#[derive(Clone)]
+pub enum EnvSpec {
+    /// One named environment (`--env NAME`, `--nodes N`).
+    Single { name: String, nodes: usize },
+    /// A brokered fleet (`--envs local:8,pbs:32~0.2`, `--policy`,
+    /// `--speculate`).
+    Fleet {
+        spec: String,
+        policy: String,
+        speculate: bool,
+    },
+    /// Any prebuilt environment (examples, tests, custom brokers).
+    Provided(Arc<dyn Environment>),
+}
+
+impl Default for EnvSpec {
+    fn default() -> Self {
+        EnvSpec::Single {
+            name: "local".into(),
+            nodes: 8,
+        }
+    }
+}
+
+/// Everything a method needs to run: the environment, an open journal
+/// (append-positioned on resume), the loaded resume records (already
+/// validated by [`ExplorationMethod::validate_resume`]) and the seed.
+pub struct MethodCtx<'a> {
+    pub env: Arc<dyn Environment>,
+    pub journal: Option<Arc<Journal>>,
+    pub resume: Option<&'a [Json]>,
+    pub seed: u64,
+}
+
+/// What a method produced — the union of the engines' results; fields a
+/// method does not populate stay at their defaults.
+#[derive(Default)]
+pub struct MethodOutcome {
+    pub evaluations: u64,
+    pub virtual_makespan: f64,
+    /// Jobs executed through the workflow scheduler (puzzle methods).
+    pub jobs: u64,
+    /// Islands merged / generations run, when the engine counts them.
+    pub generations: u32,
+    pub pareto_front: Vec<Individual>,
+    /// Terminal workflow outputs (puzzle methods).
+    pub outputs: Vec<Context>,
+    /// Sweep bookkeeping.
+    pub rows: usize,
+    pub evaluated: usize,
+    pub resumed: usize,
+    /// Result file, when the method streams one.
+    pub result_path: Option<String>,
+}
+
+/// One engine behind the uniform experiment face.
+pub trait ExplorationMethod {
+    fn name(&self) -> &'static str;
+
+    /// One-line description printed before the run (evaluator backend,
+    /// sampling, ...). Empty = print nothing.
+    fn describe(&self) -> String {
+        String::new()
+    }
+
+    /// Whether this method writes checkpoints into a journal. When
+    /// false, [`Experiment::run`] refuses a `--journal` request instead
+    /// of truncating a file the method would never write to (the user
+    /// would otherwise believe the run is checkpointed).
+    fn supports_journal(&self) -> bool {
+        false
+    }
+
+    /// Validate a `--resume` journal's records against this method's
+    /// configuration. Runs before any journal is opened for append and
+    /// before any output file is touched, so a refused resume never
+    /// destroys previous results. The default refuses: resuming a method
+    /// that cannot restore state would silently restart it.
+    fn validate_resume(&self, records: &[Json], seed: u64, path: &str) -> Result<()> {
+        let _ = (records, seed);
+        Err(Error::Config(format!(
+            "`{}` does not support --resume (journal `{path}`)",
+            self.name()
+        )))
+    }
+
+    fn run(&self, ctx: MethodCtx<'_>) -> Result<MethodOutcome>;
+}
+
+/// Report of one experiment run.
+pub struct ExperimentReport {
+    pub outcome: MethodOutcome,
+    pub env_name: String,
+    pub env_stats: EnvStats,
+    /// The broker, when the experiment built one from a fleet spec.
+    pub broker: Option<Arc<Broker>>,
+    pub wall: Duration,
+}
+
+/// The single entry point: model + method + environments + journal.
+pub struct Experiment {
+    method: Box<dyn ExplorationMethod>,
+    env: EnvSpec,
+    journal: Option<String>,
+    resume: Option<String>,
+    seed: u64,
+    quiet: bool,
+}
+
+impl Experiment {
+    pub fn new(method: Box<dyn ExplorationMethod>) -> Self {
+        Experiment {
+            method,
+            env: EnvSpec::default(),
+            journal: None,
+            resume: None,
+            seed: 42,
+            quiet: false,
+        }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn env(mut self, env: EnvSpec) -> Self {
+        self.env = env;
+        self
+    }
+
+    /// Run on a prebuilt environment (shorthand for
+    /// [`EnvSpec::Provided`]).
+    pub fn on(mut self, env: Arc<dyn Environment>) -> Self {
+        self.env = EnvSpec::Provided(env);
+        self
+    }
+
+    /// Checkpoint to a fresh journal at `path`.
+    pub fn journal(mut self, path: impl Into<String>) -> Self {
+        self.journal = Some(path.into());
+        self
+    }
+
+    /// Resume from the journal at `path` (validated against the method's
+    /// configuration, then appended to).
+    pub fn resume(mut self, path: impl Into<String>) -> Self {
+        self.resume = Some(path.into());
+        self
+    }
+
+    /// Suppress the description line (library/tests use).
+    pub fn quiet(mut self) -> Self {
+        self.quiet = true;
+        self
+    }
+
+    /// Execute: build the environment, validate + open the journal, run
+    /// the method, collect the report.
+    pub fn run(&self) -> Result<ExperimentReport> {
+        let (env, broker): (Arc<dyn Environment>, Option<Arc<Broker>>) = match &self.env
+        {
+            EnvSpec::Single { name, nodes } => (
+                single_environment(
+                    name,
+                    *nodes,
+                    Arc::new(ThreadPool::default_size()),
+                    self.seed,
+                )?,
+                None,
+            ),
+            EnvSpec::Fleet {
+                spec,
+                policy: policy_name,
+                speculate,
+            } => {
+                let p = policy::by_name(policy_name).ok_or_else(|| {
+                    Error::Config(format!(
+                        "unknown --policy `{policy_name}` (roundrobin|least|ewma)"
+                    ))
+                })?;
+                let pool = Arc::new(ThreadPool::default_size());
+                let mut builder = Broker::spec_builder(spec, pool, self.seed)?.policy(p);
+                if *speculate {
+                    builder = builder.speculation(SpeculationConfig::default());
+                }
+                let broker = Arc::new(builder.build()?);
+                (Arc::clone(&broker) as Arc<dyn Environment>, Some(broker))
+            }
+            EnvSpec::Provided(e) => (Arc::clone(e), None),
+        };
+
+        if !self.quiet {
+            let d = self.method.describe();
+            if !d.is_empty() {
+                println!("{d}, environment: {}", env.name());
+            }
+        }
+
+        if self.journal.is_some() && !self.method.supports_journal() {
+            return Err(Error::Config(format!(
+                "`{}` does not write checkpoints — remove --journal",
+                self.method.name()
+            )));
+        }
+        if self.journal.is_some() && self.resume.is_some() {
+            // silently appending to the resume journal while ignoring the
+            // requested one would scatter checkpoints invisibly
+            return Err(Error::Config(
+                "--journal and --resume are mutually exclusive: a resumed \
+                 run appends its checkpoints to the resume journal"
+                    .into(),
+            ));
+        }
+        // resume records load + validate BEFORE any journal/output is
+        // opened for writing
+        let records: Option<Vec<Json>> = match &self.resume {
+            Some(path) => {
+                let records = Journal::load(path)?;
+                self.method.validate_resume(&records, self.seed, path)?;
+                Some(records)
+            }
+            None => None,
+        };
+        let journal = match (&self.resume, &self.journal) {
+            (Some(path), _) => Some(Arc::new(Journal::append_to(path)?)),
+            (None, Some(path)) => Some(Arc::new(Journal::create(path)?)),
+            (None, None) => None,
+        };
+
+        let t0 = std::time::Instant::now();
+        let outcome = self.method.run(MethodCtx {
+            env: Arc::clone(&env),
+            journal,
+            resume: records.as_deref(),
+            seed: self.seed,
+        })?;
+        Ok(ExperimentReport {
+            outcome,
+            env_name: env.name().to_string(),
+            env_stats: env.stats(),
+            broker,
+            wall: t0.elapsed(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// the five methods
+// ---------------------------------------------------------------------
+
+/// Paper Listing 2: one model execution with explicit parameters, run as
+/// a one-capsule puzzle so even `molers run` goes through the DSL and its
+/// build-time validation.
+pub struct SingleRun {
+    pub evaluator: Arc<dyn Evaluator>,
+    /// Backend label for the description line ("rust-sim", "pjrt", ...).
+    pub kind: String,
+    pub population: f64,
+    pub diffusion: f64,
+    pub evaporation: f64,
+    /// Hooks observing the model capsule.
+    pub hooks: Vec<Arc<dyn Hook>>,
+}
+
+impl ExplorationMethod for SingleRun {
+    fn name(&self) -> &'static str {
+        "run"
+    }
+
+    fn describe(&self) -> String {
+        format!("evaluator: {}", self.kind)
+    }
+
+    fn run(&self, ctx: MethodCtx<'_>) -> Result<MethodOutcome> {
+        use crate::core::{val_f64, val_u32};
+        use crate::dsl::task::ClosureTask;
+
+        let g_population = val_f64("gPopulation");
+        let g_diffusion = val_f64("gDiffusionRate");
+        let g_evaporation = val_f64("gEvaporationRate");
+        let seed = val_u32("seed");
+        let food = [val_f64("food1"), val_f64("food2"), val_f64("food3")];
+
+        let model = {
+            let (gp, gd, ge, s, f) = (
+                g_population.clone(),
+                g_diffusion.clone(),
+                g_evaporation.clone(),
+                seed.clone(),
+                food.clone(),
+            );
+            let evaluator = Arc::clone(&self.evaluator);
+            ClosureTask::new("ants", move |c: &Context| {
+                let fit = evaluator.evaluate(
+                    &[c.get(&gp)?, c.get(&gd)?, c.get(&ge)?],
+                    c.get(&s)?,
+                )?;
+                let mut out = Context::new();
+                for (fv, v) in f.iter().zip(fit) {
+                    out.set(fv, v);
+                }
+                Ok(out)
+            })
+            .input(&g_population)
+            .input(&g_diffusion)
+            .input(&g_evaporation)
+            .input(&seed)
+            .default(&g_population, self.population)
+            .default(&g_diffusion, self.diffusion)
+            .default(&g_evaporation, self.evaporation)
+            .default(&seed, ctx.seed as u32)
+            .output(&food[0])
+            .output(&food[1])
+            .output(&food[2])
+        };
+
+        let builder = PuzzleBuilder::new();
+        let capsule = builder.task(model);
+        for h in &self.hooks {
+            capsule.hook(Arc::clone(h));
+        }
+        let result = MoleExecution::new(builder.build()?, ctx.env, ctx.seed).start()?;
+        Ok(MethodOutcome {
+            evaluations: 1,
+            virtual_makespan: result.report.virtual_makespan,
+            jobs: result.report.jobs,
+            outputs: result.outputs,
+            ..MethodOutcome::default()
+        })
+    }
+}
+
+/// §Exploration: a plain design of experiments at scale — the PR-4
+/// columnar [`Sweep`] fanned through the environment in chunked
+/// `evaluate_rows` jobs, with `sample_block` checkpoints and byte-stable
+/// resumable results.
+pub struct DirectSampling {
+    pub sampling: Arc<dyn Sampling>,
+    pub evaluator: Arc<dyn Evaluator>,
+    pub kind: String,
+    /// Design column names, in sampling order (result file header).
+    pub design_columns: Vec<String>,
+    pub objective_names: Vec<String>,
+    pub chunk: usize,
+    pub out_path: String,
+    pub format: TableFormat,
+    /// Extra `run_start` fields the sampling cannot introspect (bounds,
+    /// step, replications) — validated on resume.
+    pub meta: Vec<(String, Json)>,
+}
+
+impl DirectSampling {
+    /// Numeric design knobs a resume must match: `n` plus every numeric
+    /// value in [`DirectSampling::meta`].
+    fn resume_knobs(&self) -> Vec<(String, f64)> {
+        let mut knobs = vec![(
+            "n".to_string(),
+            self.sampling.size_hint().unwrap_or(0) as f64,
+        )];
+        for (k, v) in &self.meta {
+            if let Json::Num(x) = v {
+                knobs.push((k.clone(), *x));
+            }
+        }
+        knobs
+    }
+}
+
+impl ExplorationMethod for DirectSampling {
+    fn name(&self) -> &'static str {
+        "explore"
+    }
+
+    fn supports_journal(&self) -> bool {
+        true
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "evaluator: {}, sampling: {} ({} rows, chunk {})",
+            self.kind,
+            self.sampling.name(),
+            self.sampling.size_hint().unwrap_or(0),
+            self.chunk
+        )
+    }
+
+    /// The design regenerates from `(sampling, seed)`: a journal written
+    /// under ANY different design knob (sampling kind, seed, n, bounds,
+    /// step, replications) describes a different design — reject it up
+    /// front, before the output file is touched.
+    fn validate_resume(&self, records: &[Json], seed: u64, path: &str) -> Result<()> {
+        if let Some(start) = records
+            .iter()
+            .find(|r| r.get("kind").and_then(|k| k.as_str()) == Some("run_start"))
+        {
+            if let Some(s) = start.get("sampling").and_then(|v| v.as_str()) {
+                if s != self.sampling.name() {
+                    return Err(Error::Config(format!(
+                        "--resume config mismatch: journal `{path}` was written \
+                         with --sampling {s}, this run samples {}",
+                        self.sampling.name()
+                    )));
+                }
+            }
+            // the 64-bit seed is compared exactly (journaled as a string;
+            // an f64 comparison is lossy above 2^53), with a numeric
+            // fallback for journals predating seed_exact
+            let seed_matches = match start.get("seed_exact").and_then(|v| v.as_str()) {
+                Some(exact) => exact == seed.to_string(),
+                None => start
+                    .get("seed")
+                    .and_then(|v| v.as_f64())
+                    .is_none_or(|was| was as u64 == seed),
+            };
+            if !seed_matches {
+                return Err(Error::Config(format!(
+                    "--resume config mismatch: journal `{path}` was written \
+                     under a different --seed than {seed} — the designs \
+                     differ, refusing to reuse its blocks"
+                )));
+            }
+            // numeric design knobs recorded at journal creation; a knob
+            // absent from an old journal is skipped, a present one must
+            // match exactly
+            for (key, now) in self.resume_knobs() {
+                if let Some(was) = start.get(&key).and_then(|v| v.as_f64()) {
+                    if was != now {
+                        return Err(Error::Config(format!(
+                            "--resume config mismatch: journal `{path}` was \
+                             written with {key}={was}, this run has {key}={now} \
+                             — the designs differ, refusing to reuse its blocks"
+                        )));
+                    }
+                }
+            }
+        }
+        // blocks must fit the design this run will generate — checked
+        // before the output file is recreated, so a refused resume never
+        // destroys previous partial results. Deliberately the SAME parse
+        // `run` uses (`journal::sample_blocks`): the fit check and the
+        // restore must accept exactly the same blocks, and paying one
+        // extra parse at resume startup is nothing next to a divergence
+        // that truncates the output file and then rejects a block.
+        let expected_rows = self.sampling.size_hint().unwrap_or(0);
+        for b in journal::sample_blocks(records) {
+            if b.first_row + b.objectives.len() > expected_rows
+                || b
+                    .objectives
+                    .iter()
+                    .any(|r| r.len() != self.objective_names.len())
+            {
+                return Err(Error::Config(format!(
+                    "--resume journal `{path}` holds a block (rows {}..{}) that \
+                     does not fit this {expected_rows}-row design — refusing to \
+                     overwrite `{}`",
+                    b.first_row,
+                    b.first_row + b.objectives.len(),
+                    self.out_path
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn run(&self, ctx: MethodCtx<'_>) -> Result<MethodOutcome> {
+        let resume_blocks = ctx.resume.map(journal::sample_blocks);
+        if let Some(blocks) = &resume_blocks {
+            println!("resuming sweep: {} checkpointed blocks", blocks.len());
+        }
+        let columns: Vec<&str> = self
+            .design_columns
+            .iter()
+            .chain(self.objective_names.iter())
+            .map(String::as_str)
+            .collect();
+        let writer = Arc::new(RowWriter::create(&self.out_path, self.format, &columns)?);
+        let objective_names: Vec<&str> =
+            self.objective_names.iter().map(String::as_str).collect();
+        let mut sweep = Sweep::new(
+            Arc::clone(&self.sampling),
+            Arc::clone(&self.evaluator),
+            &objective_names,
+        )
+        .chunk(self.chunk)
+        .writer(writer);
+        for (k, v) in &self.meta {
+            sweep = sweep.meta(k, v.clone());
+        }
+        if let Some(j) = ctx.journal {
+            sweep = sweep.journal(j);
+        }
+        let result =
+            sweep.run_resumable(ctx.env.as_ref(), ctx.seed, resume_blocks.as_deref())?;
+        Ok(MethodOutcome {
+            evaluations: result.evaluated as u64,
+            virtual_makespan: result.virtual_makespan,
+            rows: result.rows(),
+            evaluated: result.evaluated,
+            resumed: result.resumed,
+            result_path: Some(self.out_path.clone()),
+            ..MethodOutcome::default()
+        })
+    }
+}
+
+/// Paper Listing 3 / §4.4: replicate a stochastic model under `n`
+/// independent seeds and summarise through a statistic task — the
+/// `entry -< model >- statistic` puzzle.
+pub struct Replication {
+    pub model: Arc<dyn Task>,
+    pub seed_val: crate::core::Val<u32>,
+    pub replications: usize,
+    pub statistic: Arc<dyn Task>,
+    pub kind: String,
+    pub model_hooks: Vec<Arc<dyn Hook>>,
+    pub statistic_hooks: Vec<Arc<dyn Hook>>,
+}
+
+impl ExplorationMethod for Replication {
+    fn name(&self) -> &'static str {
+        "replicate"
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "evaluator: {}, replications: {}",
+            self.kind, self.replications
+        )
+    }
+
+    fn run(&self, ctx: MethodCtx<'_>) -> Result<MethodOutcome> {
+        let builder = PuzzleBuilder::new();
+        let (_, model_c, stat_c) = replicate(
+            &builder,
+            Arc::clone(&self.model),
+            &self.seed_val,
+            self.replications,
+            Arc::clone(&self.statistic),
+        );
+        for h in &self.model_hooks {
+            model_c.hook(Arc::clone(h));
+        }
+        for h in &self.statistic_hooks {
+            stat_c.hook(Arc::clone(h));
+        }
+        let result = MoleExecution::new(builder.build()?, ctx.env, ctx.seed).start()?;
+        Ok(MethodOutcome {
+            evaluations: self.replications as u64,
+            virtual_makespan: result.report.virtual_makespan,
+            jobs: result.report.jobs,
+            outputs: result.outputs,
+            ..MethodOutcome::default()
+        })
+    }
+}
+
+/// Paper Listing 4: generational NSGA-II over the columnar population
+/// engine, with journaled bit-identical resume.
+pub struct Nsga2Evolution {
+    pub config: Nsga2Config,
+    pub lambda: usize,
+    pub generations: u32,
+    pub eval_chunk: usize,
+    pub evaluator: Arc<dyn Evaluator>,
+    pub kind: String,
+    pub on_generation: Option<Arc<dyn Fn(u32, &PopMatrix) + Send + Sync>>,
+}
+
+impl ExplorationMethod for Nsga2Evolution {
+    fn name(&self) -> &'static str {
+        "calibrate"
+    }
+
+    fn supports_journal(&self) -> bool {
+        true
+    }
+
+    fn describe(&self) -> String {
+        format!("evaluator: {}", self.kind)
+    }
+
+    /// The journal stores the trajectory, not the configuration: a
+    /// resumed run with a different `--mu`/`--lambda` would silently
+    /// corrupt it, so reject the mismatch up front.
+    fn validate_resume(&self, records: &[Json], _seed: u64, path: &str) -> Result<()> {
+        if let Some(start) = records
+            .iter()
+            .find(|r| r.get("kind").and_then(|k| k.as_str()) == Some("run_start"))
+        {
+            for (key, got) in [("mu", self.config.mu), ("lambda", self.lambda)] {
+                if let Some(want) =
+                    start.get(key).and_then(|v| v.as_f64()).map(|v| v as usize)
+                {
+                    if want != got {
+                        return Err(Error::Config(format!(
+                            "--resume config mismatch: journal `{path}` was \
+                             written with --{key} {want}, this run has --{key} \
+                             {got}"
+                        )));
+                    }
+                }
+            }
+        }
+        if journal::resume_state(records).is_none() {
+            return Err(Error::Config(format!(
+                "journal `{path}` holds no generation checkpoint"
+            )));
+        }
+        Ok(())
+    }
+
+    fn run(&self, ctx: MethodCtx<'_>) -> Result<MethodOutcome> {
+        let resume = ctx.resume.and_then(journal::resume_state);
+        if let Some(state) = &resume {
+            println!(
+                "resuming from generation {} ({} evaluations done)",
+                state.generation, state.evaluations
+            );
+        }
+        // the coordinator's own stages (variation, crowding, dominance)
+        // fan out over a dedicated pool — never the environment's (whose
+        // workers block while the coordinator joins)
+        let mut ga = GenerationalGA::new(
+            self.config.clone(),
+            Arc::clone(&self.evaluator),
+            self.lambda,
+        )
+        .eval_chunk(self.eval_chunk)
+        .coordinator_pool(Arc::new(ThreadPool::default_size()));
+        if let Some(f) = &self.on_generation {
+            let f = Arc::clone(f);
+            ga = ga.on_generation(move |g, pop| f(g, pop));
+        }
+        if let Some(j) = ctx.journal {
+            ga = ga.journal(j);
+        }
+        let result =
+            ga.run_resumable(ctx.env.as_ref(), self.generations, ctx.seed, resume)?;
+        Ok(MethodOutcome {
+            evaluations: result.evaluations,
+            virtual_makespan: result.virtual_makespan,
+            generations: result.generations,
+            pareto_front: result.pareto_front,
+            ..MethodOutcome::default()
+        })
+    }
+}
+
+/// Paper Listing 5 + §4.6: the island model — asynchronous steady-state
+/// NSGA-II islands merging into a global archive, at grid scale.
+pub struct IslandEvolution {
+    pub config: Nsga2Config,
+    pub islands: IslandConfig,
+    pub evaluator: Arc<dyn Evaluator>,
+    pub kind: String,
+    pub on_island: Option<Arc<dyn Fn(u64, u64) + Send + Sync>>,
+}
+
+impl ExplorationMethod for IslandEvolution {
+    fn name(&self) -> &'static str {
+        "island"
+    }
+
+    fn supports_journal(&self) -> bool {
+        true
+    }
+
+    fn describe(&self) -> String {
+        format!("evaluator: {}", self.kind)
+    }
+
+    fn validate_resume(&self, records: &[Json], _seed: u64, path: &str) -> Result<()> {
+        if journal::island_resume(records).is_none() {
+            return Err(Error::Config(format!(
+                "journal `{path}` holds no island archive snapshot"
+            )));
+        }
+        Ok(())
+    }
+
+    fn run(&self, ctx: MethodCtx<'_>) -> Result<MethodOutcome> {
+        let mut ga = IslandSteadyGA::new(
+            self.config.clone(),
+            self.islands.clone(),
+            Arc::clone(&self.evaluator),
+        );
+        if let Some(records) = ctx.resume {
+            // presence was proven by validate_resume
+            let (pop, evals) = journal::island_resume(records).ok_or_else(|| {
+                Error::Config("resume journal lost its archive snapshot".into())
+            })?;
+            println!(
+                "resuming island archive: {} individuals, {evals} evaluations done",
+                pop.len()
+            );
+            ga = ga.resume_from(pop, evals);
+        }
+        if let Some(j) = ctx.journal {
+            ga = ga.journal(j);
+        }
+        let result = ga.run(ctx.env.as_ref(), ctx.seed, self.on_island.clone())?;
+        Ok(MethodOutcome {
+            evaluations: result.evaluations,
+            virtual_makespan: result.virtual_makespan,
+            generations: result.generations,
+            pareto_front: result.pareto_front,
+            ..MethodOutcome::default()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::val_f64;
+    use crate::evolution::evaluator::Zdt1Evaluator;
+    use crate::exploration::sampling::LhsSampling;
+
+    fn lhs2(n: usize) -> Arc<dyn Sampling> {
+        let x0 = val_f64("x0");
+        let x1 = val_f64("x1");
+        Arc::new(LhsSampling::new(&[(&x0, 0.0, 1.0), (&x1, 0.0, 1.0)], n))
+    }
+
+    fn explore_method(out: &std::path::Path) -> DirectSampling {
+        DirectSampling {
+            sampling: lhs2(10),
+            evaluator: Arc::new(Zdt1Evaluator { dim: 2 }),
+            kind: "zdt1".into(),
+            design_columns: vec!["x0".into(), "x1".into()],
+            objective_names: vec!["f1".into(), "f2".into()],
+            chunk: 4,
+            out_path: out.to_string_lossy().into_owned(),
+            format: TableFormat::Csv,
+            meta: vec![
+                ("lo".into(), Json::Num(0.0)),
+                ("hi".into(), Json::Num(1.0)),
+                ("replications".into(), Json::Num(1.0)),
+            ],
+        }
+    }
+
+    #[test]
+    fn unknown_environment_is_a_hard_error() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let err = single_environment("slrum", 4, pool, 1).unwrap_err().to_string();
+        assert!(err.contains("unknown environment `slrum`"), "{err}");
+        assert!(err.contains("slurm"), "lists valid names: {err}");
+    }
+
+    #[test]
+    fn experiment_runs_a_sweep_end_to_end() {
+        let dir = std::env::temp_dir();
+        let out = dir.join(format!("molers-exp-{}.csv", std::process::id()));
+        let report = Experiment::new(Box::new(explore_method(&out)))
+            .env(EnvSpec::Single {
+                name: "local".into(),
+                nodes: 2,
+            })
+            .seed(11)
+            .quiet()
+            .run()
+            .unwrap();
+        assert_eq!(report.outcome.rows, 10);
+        assert_eq!(report.outcome.evaluated, 10);
+        assert_eq!(report.env_stats.completed, report.env_stats.submitted);
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert_eq!(text.lines().count(), 11, "header + 10 rows");
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn experiment_refuses_mismatched_resume_before_touching_output() {
+        let dir = std::env::temp_dir();
+        let out = dir.join(format!("molers-exp-keep-{}.csv", std::process::id()));
+        let journal = dir.join(format!("molers-exp-j-{}.jsonl", std::process::id()));
+        std::fs::write(&out, "precious partial results\n").unwrap();
+        std::fs::write(
+            &journal,
+            "{\"kind\":\"run_start\",\"run\":\"explore\",\"seed\":1,\
+             \"sampling\":\"Sobol\",\"n\":10}\n",
+        )
+        .unwrap();
+        let err = Experiment::new(Box::new(explore_method(&out)))
+            .seed(1)
+            .quiet()
+            .resume(journal.to_string_lossy().into_owned())
+            .run()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("config mismatch"), "{err}");
+        assert_eq!(
+            std::fs::read_to_string(&out).unwrap(),
+            "precious partial results\n",
+            "refused resume must not touch the output file"
+        );
+        let _ = std::fs::remove_file(&out);
+        let _ = std::fs::remove_file(&journal);
+    }
+
+    #[test]
+    fn fleet_spec_builds_a_broker() {
+        let dir = std::env::temp_dir();
+        let out = dir.join(format!("molers-exp-fleet-{}.csv", std::process::id()));
+        let report = Experiment::new(Box::new(explore_method(&out)))
+            .env(EnvSpec::Fleet {
+                spec: "local:2,local:2".into(),
+                policy: "roundrobin".into(),
+                speculate: false,
+            })
+            .seed(3)
+            .quiet()
+            .run()
+            .unwrap();
+        assert!(report.broker.is_some());
+        assert_eq!(report.outcome.evaluated, 10);
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn journal_is_refused_by_methods_that_never_write_one() {
+        use crate::evolution::evaluator::AntSimEvaluator;
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("molers-exp-nj-{}.jsonl", std::process::id()));
+        std::fs::write(&path, "precious existing journal\n").unwrap();
+        let err = Experiment::new(Box::new(SingleRun {
+            evaluator: Arc::new(AntSimEvaluator::fast()),
+            kind: "rust-sim".into(),
+            population: 125.0,
+            diffusion: 50.0,
+            evaporation: 50.0,
+            hooks: Vec::new(),
+        }))
+        .journal(path.to_string_lossy().into_owned())
+        .quiet()
+        .run()
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("does not write checkpoints"), "{err}");
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap(),
+            "precious existing journal\n",
+            "refused --journal must not truncate the file"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn journal_plus_resume_is_rejected() {
+        let dir = std::env::temp_dir();
+        let out = dir.join(format!("molers-exp-jr-{}.csv", std::process::id()));
+        let err = Experiment::new(Box::new(explore_method(&out)))
+            .journal("/tmp/new.jsonl")
+            .resume("/tmp/old.jsonl")
+            .quiet()
+            .run()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mutually exclusive"), "{err}");
+    }
+
+    #[test]
+    fn unknown_policy_is_rejected() {
+        let dir = std::env::temp_dir();
+        let out = dir.join(format!("molers-exp-pol-{}.csv", std::process::id()));
+        let err = Experiment::new(Box::new(explore_method(&out)))
+            .env(EnvSpec::Fleet {
+                spec: "local:2".into(),
+                policy: "fastest".into(),
+                speculate: false,
+            })
+            .quiet()
+            .run()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown --policy"), "{err}");
+    }
+}

@@ -1,5 +1,13 @@
-//! Workflow execution engine (the "mole execution").
+//! Workflow execution engine (the "mole execution") and the MoleDSL v2
+//! [`Experiment`] front door every launcher subcommand and example builds
+//! on.
 
+pub mod experiment;
 mod scheduler;
 
+pub use experiment::{
+    single_environment, DirectSampling, EnvSpec, Experiment, ExperimentReport,
+    ExplorationMethod, IslandEvolution, MethodCtx, MethodOutcome, Nsga2Evolution,
+    Replication, SingleRun, ENV_NAMES,
+};
 pub use scheduler::{ExecutionReport, ExecutionResult, MoleExecution};

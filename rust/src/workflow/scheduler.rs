@@ -148,9 +148,11 @@ impl MoleExecution {
         self.start_with(Context::new())
     }
 
-    /// Run the puzzle to completion.
+    /// Run the puzzle to completion. Validation (shape + typed dataflow,
+    /// with `init`'s variables counting as supplied) runs first, so a
+    /// mis-wired puzzle is rejected before any job is submitted.
     pub fn start_with(mut self, init: Context) -> Result<ExecutionResult> {
-        self.puzzle.validate()?;
+        self.puzzle.validate_with(&init)?;
         let wall_start = std::time::Instant::now();
 
         let mut tickets: HashMap<u64, TicketInfo> = HashMap::new();
@@ -376,6 +378,7 @@ fn nearest_group(tickets: &HashMap<u64, TicketInfo>, mut t: u64) -> Option<u64> 
 mod tests {
     use super::*;
     use crate::core::{val_f64, val_u32};
+    use crate::dsl::builder::PuzzleBuilder;
     use crate::dsl::hook::CaptureHook;
     use crate::dsl::task::{ClosureTask, IdentityTask};
     use crate::environment::local::LocalEnvironment;
@@ -389,16 +392,19 @@ mod tests {
     fn single_task_workflow() {
         let x = val_f64("x");
         let y = val_f64("y");
-        let mut p = Puzzle::new();
-        let t = ClosureTask::new("sq", {
-            let (x, y) = (x.clone(), y.clone());
-            move |ctx| Ok(Context::new().with(&y, ctx.get(&x)?.powi(2)))
-        })
-        .input(&x)
-        .output(&y)
-        .default(&x, 5.0);
-        p.capsule(Arc::new(t));
-        let result = MoleExecution::new(p, local(), 1).start().unwrap();
+        let b = PuzzleBuilder::new();
+        b.task(
+            ClosureTask::new("sq", {
+                let (x, y) = (x.clone(), y.clone());
+                move |ctx| Ok(Context::new().with(&y, ctx.get(&x)?.powi(2)))
+            })
+            .input(&x)
+            .output(&y)
+            .default(&x, 5.0),
+        );
+        let result = MoleExecution::new(b.build().unwrap(), local(), 1)
+            .start()
+            .unwrap();
         assert_eq!(result.outputs.len(), 1);
         assert_eq!(result.outputs[0].get(&y).unwrap(), 25.0);
     }
@@ -408,22 +414,23 @@ mod tests {
         // entry -< model (x^2) >- collect
         let x = val_f64("x");
         let y = val_f64("y");
-        let mut p = Puzzle::new();
-        let entry = p.capsule(Arc::new(IdentityTask::new("entry")));
-        let model = p.capsule(Arc::new(
+        let b = PuzzleBuilder::new();
+        let entry = b.task(IdentityTask::new("entry"));
+        let model = b.task(
             ClosureTask::new("sq", {
                 let (x, y) = (x.clone(), y.clone());
                 move |ctx| Ok(Context::new().with(&y, ctx.get(&x)?.powi(2)))
             })
             .input(&x)
             .output(&y),
-        ));
-        let collect = p.capsule(Arc::new(IdentityTask::new("collect")));
+        );
+        let collect = b.task(IdentityTask::new("collect"));
         let sampling = FullFactorial::new(vec![Factor::new(&x, 0.0, 3.0, 1.0)]);
-        p.explore(entry, Arc::new(sampling), model);
-        p.aggregate(model, collect);
+        entry.explore(Arc::new(sampling), &model).aggregate(&collect);
 
-        let result = MoleExecution::new(p, local(), 2).start().unwrap();
+        let result = MoleExecution::new(b.build().unwrap(), local(), 2)
+            .start()
+            .unwrap();
         assert_eq!(result.outputs.len(), 1);
         let mut ys = result.outputs[0].get(&y.array()).unwrap();
         ys.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -434,15 +441,17 @@ mod tests {
     #[test]
     fn hooks_fire_per_job() {
         let seed = val_u32("seed");
-        let mut p = Puzzle::new();
-        let entry = p.capsule(Arc::new(IdentityTask::new("entry")));
-        let model = p.capsule(Arc::new(IdentityTask::new("model")));
-        let done = p.capsule(Arc::new(IdentityTask::new("done")));
+        let b = PuzzleBuilder::new();
+        let entry = b.task(IdentityTask::new("entry"));
+        let model = b.task(IdentityTask::new("model"));
+        let done = b.task(IdentityTask::new("done"));
         let capture = Arc::new(CaptureHook::new());
-        p.hook(model, capture.clone());
-        p.explore(entry, Arc::new(SeedSampling::new(&seed, 5)), model);
-        p.aggregate(model, done);
-        MoleExecution::new(p, local(), 3).start().unwrap();
+        model.hook(capture.clone());
+        entry.explore(Arc::new(SeedSampling::new(&seed, 5)), &model);
+        model.aggregate(&done);
+        MoleExecution::new(b.build().unwrap(), local(), 3)
+            .start()
+            .unwrap();
         assert_eq!(capture.len(), 5);
     }
 
@@ -451,25 +460,24 @@ mod tests {
         // entry -< mid -< leaf >- inner_agg >- outer_agg
         let a = val_f64("a");
         let b = val_f64("b");
-        let mut p = Puzzle::new();
-        let entry = p.capsule(Arc::new(IdentityTask::new("entry")));
-        let mid = p.capsule(Arc::new(IdentityTask::new("mid")));
-        let leaf = p.capsule(Arc::new(IdentityTask::new("leaf")));
-        let inner_agg = p.capsule(Arc::new(IdentityTask::new("inner_agg")));
-        let outer_agg = p.capsule(Arc::new(IdentityTask::new("outer_agg")));
-        p.explore(
-            entry,
+        let builder = PuzzleBuilder::new();
+        let entry = builder.task(IdentityTask::new("entry"));
+        let mid = builder.task(IdentityTask::new("mid"));
+        let leaf = builder.task(IdentityTask::new("leaf"));
+        let inner_agg = builder.task(IdentityTask::new("inner_agg"));
+        let outer_agg = builder.task(IdentityTask::new("outer_agg"));
+        entry.explore(
             Arc::new(FullFactorial::new(vec![Factor::new(&a, 0.0, 1.0, 1.0)])),
-            mid,
+            &mid,
         );
-        p.explore(
-            mid,
+        mid.explore(
             Arc::new(FullFactorial::new(vec![Factor::new(&b, 0.0, 2.0, 1.0)])),
-            leaf,
+            &leaf,
         );
-        p.aggregate(leaf, inner_agg);
-        p.aggregate(inner_agg, outer_agg);
-        let result = MoleExecution::new(p, local(), 4).start().unwrap();
+        leaf.aggregate(&inner_agg).aggregate(&outer_agg);
+        let result = MoleExecution::new(builder.build().unwrap(), local(), 4)
+            .start()
+            .unwrap();
         assert_eq!(result.outputs.len(), 1);
         // outer aggregation: 2 inner results, each an array of 3 b values
         let bs = result.outputs[0].get(&b.array().array()).unwrap();
@@ -479,13 +487,14 @@ mod tests {
 
     #[test]
     fn direct_chain_propagates_virtual_time() {
-        let mut p = Puzzle::new();
-        let a = p.capsule(Arc::new(IdentityTask::new("a")));
-        let b = p.capsule(Arc::new(IdentityTask::new("b")));
-        let c = p.capsule(Arc::new(IdentityTask::new("c")));
-        p.direct(a, b);
-        p.direct(b, c);
-        let result = MoleExecution::new(p, local(), 5).start().unwrap();
+        let builder = PuzzleBuilder::new();
+        let a = builder.task(IdentityTask::new("a"));
+        let b = builder.task(IdentityTask::new("b"));
+        let c = builder.task(IdentityTask::new("c"));
+        a.then(&b).then(&c);
+        let result = MoleExecution::new(builder.build().unwrap(), local(), 5)
+            .start()
+            .unwrap();
         assert_eq!(result.report.jobs, 3);
         assert_eq!(result.outputs.len(), 1);
     }
@@ -496,23 +505,24 @@ mod tests {
         // environment is a broker over two local backends sharing a pool
         let x = val_f64("x");
         let y = val_f64("y");
-        let mut p = Puzzle::new();
-        let entry = p.capsule(Arc::new(IdentityTask::new("entry")));
-        let model = p.capsule(Arc::new(
+        let b = PuzzleBuilder::new();
+        let entry = b.task(IdentityTask::new("entry"));
+        let model = b.task(
             ClosureTask::new("sq", {
                 let (x, y) = (x.clone(), y.clone());
                 move |ctx| Ok(Context::new().with(&y, ctx.get(&x)?.powi(2)))
             })
             .input(&x)
             .output(&y),
-        ));
-        let collect = p.capsule(Arc::new(IdentityTask::new("collect")));
+        );
+        let collect = b.task(IdentityTask::new("collect"));
         let sampling = FullFactorial::new(vec![Factor::new(&x, 0.0, 3.0, 1.0)]);
-        p.explore(entry, Arc::new(sampling), model);
-        p.aggregate(model, collect);
+        entry.explore(Arc::new(sampling), &model).aggregate(&collect);
 
         let pool = Arc::new(crate::exec::ThreadPool::new(2));
-        let exec = MoleExecution::with_envs(p, "local:2,local:2", pool, 2).unwrap();
+        let exec =
+            MoleExecution::with_envs(b.build().unwrap(), "local:2,local:2", pool, 2)
+                .unwrap();
         let result = exec.start().unwrap();
         assert_eq!(result.outputs.len(), 1);
         let mut ys = result.outputs[0].get(&y.array()).unwrap();
@@ -527,24 +537,23 @@ mod tests {
         // aggregate still sees every sample exactly once
         let x = val_f64("x");
         let y = val_f64("y");
-        let mut p = Puzzle::new();
-        let entry = p.capsule(Arc::new(IdentityTask::new("entry")));
-        let model = p.capsule(Arc::new(
+        let b = PuzzleBuilder::new();
+        let entry = b.task(IdentityTask::new("entry"));
+        let model = b.task(
             ClosureTask::new("double", {
                 let (x, y) = (x.clone(), y.clone());
                 move |ctx| Ok(Context::new().with(&y, ctx.get(&x)? * 2.0))
             })
             .input(&x)
             .output(&y),
-        ));
-        let collect = p.capsule(Arc::new(IdentityTask::new("collect")));
-        p.explore(
-            entry,
-            Arc::new(FullFactorial::new(vec![Factor::new(&x, 1.0, 100.0, 1.0)])),
-            model,
         );
-        p.aggregate(model, collect);
-        let mut exec = MoleExecution::new(p, local(), 9);
+        let collect = b.task(IdentityTask::new("collect"));
+        entry.explore(
+            Arc::new(FullFactorial::new(vec![Factor::new(&x, 1.0, 100.0, 1.0)])),
+            &model,
+        );
+        model.aggregate(&collect);
+        let mut exec = MoleExecution::new(b.build().unwrap(), local(), 9);
         exec.max_in_flight = 4;
         let result = exec.start().unwrap();
         assert_eq!(result.report.jobs, 2 + 100);
@@ -559,18 +568,19 @@ mod tests {
     fn context_only_explore_still_materialises() {
         use crate::exploration::sampling::ExplicitSampling;
         let x = val_f64("x");
-        let mut p = Puzzle::new();
-        let entry = p.capsule(Arc::new(IdentityTask::new("entry")));
-        let model = p.capsule(Arc::new(IdentityTask::new("model")));
-        let collect = p.capsule(Arc::new(IdentityTask::new("collect")));
+        let b = PuzzleBuilder::new();
+        let entry = b.task(IdentityTask::new("entry"));
+        let model = b.task(IdentityTask::new("model"));
+        let collect = b.task(IdentityTask::new("collect"));
         let samples = ExplicitSampling::new(vec![
             Context::new().with(&x, 1.0),
             Context::new().with(&x, 2.0),
             Context::new().with(&x, 3.0),
         ]);
-        p.explore(entry, Arc::new(samples), model);
-        p.aggregate(model, collect);
-        let result = MoleExecution::new(p, local(), 10).start().unwrap();
+        entry.explore(Arc::new(samples), &model).aggregate(&collect);
+        let result = MoleExecution::new(b.build().unwrap(), local(), 10)
+            .start()
+            .unwrap();
         let mut xs = result.outputs[0].get(&x.array()).unwrap();
         xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(xs, vec![1.0, 2.0, 3.0]);
@@ -578,13 +588,15 @@ mod tests {
 
     #[test]
     fn task_failure_aborts() {
-        let mut p = Puzzle::new();
-        p.capsule(Arc::new(ClosureTask::new("bad", |_| {
+        let b = PuzzleBuilder::new();
+        b.task(ClosureTask::new("bad", |_| {
             Err(Error::TaskFailed {
                 task: "bad".into(),
                 message: "expected".into(),
             })
-        })));
-        assert!(MoleExecution::new(p, local(), 6).start().is_err());
+        }));
+        assert!(MoleExecution::new(b.build().unwrap(), local(), 6)
+            .start()
+            .is_err());
     }
 }

@@ -122,6 +122,20 @@ fn explore_resume_rejects_mismatched_seed() {
 }
 
 #[test]
+fn unknown_env_is_a_hard_error_listing_valid_names() {
+    // a typo'd --env must NOT quietly run the campaign on the laptop
+    let out = molers()
+        .env("MOLERS_ARTIFACTS", "/nonexistent-artifacts")
+        .args(["explore", "--n", "4", "--env", "slrum"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown environment `slrum`"), "{err}");
+    assert!(err.contains("slurm"), "lists the valid names: {err}");
+}
+
+#[test]
 fn bad_option_value_is_a_clean_error() {
     let out = molers()
         .env("MOLERS_ARTIFACTS", "/nonexistent-artifacts")

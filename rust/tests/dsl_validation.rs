@@ -1,0 +1,178 @@
+//! MoleDSL v2 validation guarantees, through the public builder API: a
+//! mis-typed or mis-wired puzzle is rejected by `build()`/`validate()`
+//! before any job is submitted, with the offending capsule and variable
+//! named.
+
+use std::sync::Arc;
+
+use molers::prelude::*;
+
+fn err_of(b: &PuzzleBuilder) -> String {
+    b.build().unwrap_err().to_string()
+}
+
+#[test]
+fn missing_input_names_capsule_and_variable() {
+    let x = val_f64("gDiffusionRate");
+    let b = PuzzleBuilder::new();
+    b.task(ClosureTask::new("ants", |_| Ok(Context::new())).input(&x));
+    let err = err_of(&b);
+    assert!(err.contains("`ants`"), "{err}");
+    assert!(err.contains("`gDiffusionRate`"), "{err}");
+    assert!(err.contains("not supplied"), "{err}");
+}
+
+#[test]
+fn type_mismatch_names_both_types() {
+    let n = val_f64("n");
+    let n_str = val_str("n");
+    let b = PuzzleBuilder::new();
+    let producer = b.task(
+        ClosureTask::new("producer", {
+            let n = n.clone();
+            move |_| Ok(Context::new().with(&n, 1.0))
+        })
+        .output(&n),
+    );
+    let consumer =
+        b.task(ClosureTask::new("consumer", |_| Ok(Context::new())).input(&n_str));
+    producer.then(&consumer);
+    let err = err_of(&b);
+    assert!(err.contains("`consumer`"), "{err}");
+    assert!(err.contains("expects string"), "{err}");
+    assert!(err.contains("supplies f64"), "{err}");
+}
+
+#[test]
+fn aggregate_without_explore_is_rejected() {
+    let b = PuzzleBuilder::new();
+    let a = b.task(IdentityTask::new("model"));
+    let c = b.task(IdentityTask::new("collect"));
+    a.aggregate(&c);
+    let err = err_of(&b);
+    assert!(err.contains("no enclosing explore"), "{err}");
+    assert!(err.contains("`model`"), "{err}");
+}
+
+#[test]
+fn unreachable_capsule_is_rejected() {
+    let b = PuzzleBuilder::new();
+    let entry = b.task(IdentityTask::new("entry"));
+    let next = b.task(IdentityTask::new("next"));
+    let _orphan = b.task(IdentityTask::new("orphan"));
+    entry.then(&next);
+    let err = err_of(&b);
+    assert!(err.contains("unreachable"), "{err}");
+    assert!(err.contains("`orphan`"), "{err}");
+}
+
+#[test]
+fn cycles_are_rejected_iteratively_even_on_deep_chains() {
+    // 50k-deep chain with a back edge: the iterative traversal must
+    // neither overflow the stack nor miss the cycle
+    let b = PuzzleBuilder::new();
+    let first = b.task(IdentityTask::new("c0"));
+    let mut prev = first.clone();
+    for i in 1..50_000 {
+        let next = b.task(IdentityTask::new(format!("c{i}")));
+        prev.then(&next);
+        prev = next;
+    }
+    prev.then(&first); // the cycle
+    let err = err_of(&b);
+    assert!(err.contains("cycle"), "{err}");
+}
+
+#[test]
+fn sampling_columns_satisfy_typed_inputs() {
+    // the Listing 3 shape: a u32 seed column feeds a u32 model input,
+    // and the aggregated outputs feed a statistic's list inputs
+    let seed = val_u32("seed");
+    let out = val_f64("out");
+    let med = val_f64("med");
+    let model = ClosureTask::new("model", {
+        let (seed, out) = (seed.clone(), out.clone());
+        move |ctx| Ok(Context::new().with(&out, f64::from(ctx.get(&seed)? % 3)))
+    })
+    .input(&seed)
+    .output(&out);
+    let stat = StatisticTask::new().statistic(&out, &med, Descriptor::Median);
+
+    let b = PuzzleBuilder::new();
+    replicate(&b, Arc::new(model), &seed, 4, Arc::new(stat));
+    assert!(b.build().is_ok());
+}
+
+#[test]
+fn aggregated_scalar_consumer_is_a_type_error() {
+    // reading a replication's output as a scalar downstream of the
+    // barrier is the classic OpenMOLE `toArray` mistake — caught at build
+    let seed = val_u32("seed");
+    let out = val_f64("out");
+    let model = ClosureTask::new("model", {
+        let (seed, out) = (seed.clone(), out.clone());
+        move |ctx| Ok(Context::new().with(&out, f64::from(ctx.get(&seed)?)))
+    })
+    .input(&seed)
+    .output(&out);
+    // a scalar consumer where the statistic should be
+    let scalar = ClosureTask::new("scalar", |_| Ok(Context::new())).input(&out);
+
+    let b = PuzzleBuilder::new();
+    replicate(&b, Arc::new(model), &seed, 4, Arc::new(scalar));
+    let err = err_of(&b);
+    assert!(err.contains("`scalar`"), "{err}");
+    assert!(err.contains("expects f64"), "{err}");
+    assert!(err.contains("list<f64>"), "{err}");
+}
+
+#[test]
+fn validation_runs_before_any_job_is_submitted() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static RAN: AtomicBool = AtomicBool::new(false);
+
+    let x = val_f64("x");
+    let puzzle = {
+        let b2 = PuzzleBuilder::new();
+        let bad2 = b2.task(
+            ClosureTask::new("bad", |_| {
+                RAN.store(true, Ordering::SeqCst);
+                Ok(Context::new())
+            })
+            .input(&x),
+        );
+        let sink2 = b2.task(IdentityTask::new("sink"));
+        bad2.then(&sink2);
+        // build_with a context that satisfies x, then start WITHOUT it:
+        // start_with must re-validate against the actual initial context
+        b2.build_with(&Context::new().with(&x, 1.0)).unwrap()
+    };
+    let result = MoleExecution::new(puzzle, Arc::new(LocalEnvironment::new(1)), 1)
+        .start();
+    assert!(result.is_err(), "mis-wired start must fail");
+    assert!(
+        !RAN.load(Ordering::SeqCst),
+        "no task may run before validation rejects the puzzle"
+    );
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_puzzle_mutators_feed_the_same_validation() {
+    // the v1 shims stay for one release; they must inherit v2 validation
+    let x = val_f64("x");
+    let mut p = Puzzle::new();
+    let a = p.capsule(Arc::new(
+        ClosureTask::new("producer", {
+            let x = x.clone();
+            move |_| Ok(Context::new().with(&x, 1.0))
+        })
+        .output(&x),
+    ));
+    let b = p.capsule(Arc::new(
+        ClosureTask::new("consumer", |_| Ok(Context::new())).input(&val_str("x")),
+    ));
+    p.direct(a, b);
+    let err = p.validate().unwrap_err().to_string();
+    assert!(err.contains("expects string"), "{err}");
+}

@@ -1,0 +1,315 @@
+//! Golden equivalence: each rebuilt subcommand path (MoleDSL v2
+//! `Experiment` + `ExplorationMethod`) must produce **byte-identical**
+//! journals and result files to the direct PR-2/PR-4 engine paths it
+//! replaced. Runs use a simulated cluster over a single-worker pool, so
+//! virtual clocks and record order are deterministic.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use molers::broker::Journal;
+use molers::environment::cluster::BatchEnvironment;
+use molers::evolution::{
+    AntSimEvaluator, Evaluator, GenerationalGA, IslandConfig, IslandSteadyGA,
+    Individual, Nsga2Config, Zdt1Evaluator,
+};
+use molers::exec::ThreadPool;
+use molers::prelude::*;
+use molers::util::json::Json;
+use molers::workflow::single_environment;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("molers-eq-{}-{name}", std::process::id()))
+}
+
+/// Deterministic environment: simulated PBS (virtual time from cost
+/// hints + a seeded infra model) over ONE pool worker (sequential
+/// execution ⇒ deterministic completion order).
+fn det_env(seed: u64) -> Arc<dyn Environment> {
+    Arc::new(BatchEnvironment::pbs(2, Arc::new(ThreadPool::new(1)), seed))
+}
+
+fn lhs2(n: usize) -> Arc<dyn Sampling> {
+    let x0 = val_f64("x0");
+    let x1 = val_f64("x1");
+    Arc::new(LhsSampling::new(&[(&x0, 0.0, 1.0), (&x1, 0.0, 1.0)], n))
+}
+
+fn explore_method(out: &std::path::Path, n: usize) -> DirectSampling {
+    DirectSampling {
+        sampling: lhs2(n),
+        evaluator: Arc::new(Zdt1Evaluator { dim: 2 }),
+        kind: "zdt1".into(),
+        design_columns: vec!["x0".into(), "x1".into()],
+        objective_names: vec!["f1".into(), "f2".into()],
+        chunk: 6,
+        out_path: out.to_string_lossy().into_owned(),
+        format: TableFormat::Csv,
+        meta: vec![
+            ("lo".into(), Json::Num(0.0)),
+            ("hi".into(), Json::Num(1.0)),
+            ("replications".into(), Json::Num(1.0)),
+        ],
+    }
+}
+
+fn read(path: &std::path::Path) -> String {
+    std::fs::read_to_string(path).unwrap_or_else(|e| panic!("{path:?}: {e}"))
+}
+
+fn front_of(front: &[Individual]) -> Vec<(Vec<f64>, Vec<f64>)> {
+    front
+        .iter()
+        .map(|i| (i.genome.clone(), i.objectives.clone()))
+        .collect()
+}
+
+#[test]
+fn explore_experiment_matches_direct_sweep_byte_for_byte() {
+    let (csv_a, j_a) = (tmp("swp-a.csv"), tmp("swp-a.jsonl"));
+    let (csv_b, j_b) = (tmp("swp-b.csv"), tmp("swp-b.jsonl"));
+
+    // the direct PR-4 path
+    let writer = Arc::new(
+        RowWriter::create(&csv_a, TableFormat::Csv, &["x0", "x1", "f1", "f2"]).unwrap(),
+    );
+    Sweep::new(lhs2(20), Arc::new(Zdt1Evaluator { dim: 2 }), &["f1", "f2"])
+        .chunk(6)
+        .writer(writer)
+        .meta("lo", Json::Num(0.0))
+        .meta("hi", Json::Num(1.0))
+        .meta("replications", Json::Num(1.0))
+        .journal(Arc::new(Journal::create(&j_a).unwrap()))
+        .run(det_env(5).as_ref(), 42)
+        .unwrap();
+
+    // the same design through the Experiment front
+    Experiment::new(Box::new(explore_method(&csv_b, 20)))
+        .on(det_env(5))
+        .seed(42)
+        .journal(j_b.to_string_lossy().into_owned())
+        .quiet()
+        .run()
+        .unwrap();
+
+    assert_eq!(read(&csv_a), read(&csv_b), "result files must be byte-identical");
+    assert_eq!(read(&j_a), read(&j_b), "journals must be byte-identical");
+    for p in [&csv_a, &j_a, &csv_b, &j_b] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn explore_resume_through_experiment_reproduces_the_result_file() {
+    let (csv_a, j_a) = (tmp("res-a.csv"), tmp("res-a.jsonl"));
+    let csv_b = tmp("res-b.csv");
+
+    // full run with a journal...
+    Experiment::new(Box::new(explore_method(&csv_a, 18)))
+        .on(det_env(9))
+        .seed(7)
+        .journal(j_a.to_string_lossy().into_owned())
+        .quiet()
+        .run()
+        .unwrap();
+    // ...then a resume from that (complete) journal into a fresh output:
+    // every row restores from sample_block checkpoints, nothing
+    // re-evaluates, and the file is byte-identical
+    let report = Experiment::new(Box::new(explore_method(&csv_b, 18)))
+        .on(det_env(9))
+        .seed(7)
+        .resume(j_a.to_string_lossy().into_owned())
+        .quiet()
+        .run()
+        .unwrap();
+    assert_eq!(report.outcome.resumed, 18);
+    assert_eq!(report.outcome.evaluated, 0);
+    assert_eq!(read(&csv_a), read(&csv_b), "resumed result must be byte-identical");
+    for p in [&csv_a, &j_a, &csv_b] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+fn zdt_config(mu: usize) -> Nsga2Config {
+    let x0 = val_f64("x0");
+    let x1 = val_f64("x1");
+    let x2 = val_f64("x2");
+    let f1 = val_f64("f1");
+    let f2 = val_f64("f2");
+    Nsga2Config::new(
+        mu,
+        &[(&x0, 0.0, 1.0), (&x1, 0.0, 1.0), (&x2, 0.0, 1.0)],
+        &[&f1, &f2],
+        0.1,
+    )
+    .unwrap()
+}
+
+#[test]
+fn calibrate_experiment_matches_direct_ga_byte_for_byte() {
+    let j_a = tmp("cal-a.jsonl");
+    let j_b = tmp("cal-b.jsonl");
+
+    // the direct PR-2/PR-3 path
+    let direct = GenerationalGA::new(zdt_config(8), Arc::new(Zdt1Evaluator { dim: 3 }), 8)
+        .journal(Arc::new(Journal::create(&j_a).unwrap()))
+        .run(det_env(3).as_ref(), 4, 11)
+        .unwrap();
+
+    // the same calibration through the Experiment front
+    let report = Experiment::new(Box::new(Nsga2Evolution {
+        config: zdt_config(8),
+        lambda: 8,
+        generations: 4,
+        eval_chunk: 1,
+        evaluator: Arc::new(Zdt1Evaluator { dim: 3 }),
+        kind: "zdt1".into(),
+        on_generation: None,
+    }))
+    .on(det_env(3))
+    .seed(11)
+    .journal(j_b.to_string_lossy().into_owned())
+    .quiet()
+    .run()
+    .unwrap();
+
+    assert_eq!(
+        front_of(&direct.pareto_front),
+        front_of(&report.outcome.pareto_front),
+        "identical Pareto fronts"
+    );
+    assert_eq!(read(&j_a), read(&j_b), "journals must be byte-identical");
+    for p in [&j_a, &j_b] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn island_experiment_matches_direct_ga_byte_for_byte() {
+    let j_a = tmp("isl-a.jsonl");
+    let j_b = tmp("isl-b.jsonl");
+    let islands = IslandConfig {
+        concurrent_islands: 4,
+        total_evaluations: 64,
+        island_sample: 8,
+        evals_per_island: 16,
+    };
+
+    let direct = IslandSteadyGA::new(
+        zdt_config(16),
+        islands.clone(),
+        Arc::new(Zdt1Evaluator { dim: 3 }),
+    )
+    .journal(Arc::new(Journal::create(&j_a).unwrap()))
+    .run(det_env(8).as_ref(), 21, None)
+    .unwrap();
+
+    let report = Experiment::new(Box::new(IslandEvolution {
+        config: zdt_config(16),
+        islands,
+        evaluator: Arc::new(Zdt1Evaluator { dim: 3 }),
+        kind: "zdt1".into(),
+        on_island: None,
+    }))
+    .on(det_env(8))
+    .seed(21)
+    .journal(j_b.to_string_lossy().into_owned())
+    .quiet()
+    .run()
+    .unwrap();
+
+    assert_eq!(
+        front_of(&direct.pareto_front),
+        front_of(&report.outcome.pareto_front)
+    );
+    assert_eq!(read(&j_a), read(&j_b), "journals must be byte-identical");
+    for p in [&j_a, &j_b] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn replicate_experiment_matches_direct_puzzle() {
+    let seed = val_u32("seed");
+    let out = val_f64("out");
+    let med = val_f64("med");
+    let model = || {
+        let (s, o) = (seed.clone(), out.clone());
+        Arc::new(
+            ClosureTask::new("m", move |ctx: &Context| {
+                let v = ctx.get(&s)?;
+                Ok(Context::new().with(&o, f64::from(v % 13)))
+            })
+            .input(&seed)
+            .output(&out),
+        ) as Arc<dyn Task>
+    };
+    let stat =
+        || Arc::new(StatisticTask::new().statistic(&out, &med, Descriptor::Median));
+
+    // direct puzzle path
+    let b = PuzzleBuilder::new();
+    replicate(&b, model(), &seed, 5, stat() as Arc<dyn Task>);
+    let direct = MoleExecution::new(b.build().unwrap(), det_env(2), 31)
+        .start()
+        .unwrap();
+
+    // experiment path
+    let report = Experiment::new(Box::new(Replication {
+        model: model(),
+        seed_val: seed.clone(),
+        replications: 5,
+        statistic: stat() as Arc<dyn Task>,
+        kind: "closure".into(),
+        model_hooks: Vec::new(),
+        statistic_hooks: Vec::new(),
+    }))
+    .on(det_env(2))
+    .seed(31)
+    .quiet()
+    .run()
+    .unwrap();
+
+    assert_eq!(direct.outputs, report.outcome.outputs, "identical outputs");
+    assert_eq!(direct.report.jobs, report.outcome.jobs);
+}
+
+#[test]
+fn single_run_experiment_matches_direct_evaluation() {
+    let evaluator: Arc<dyn Evaluator> = Arc::new(AntSimEvaluator::fast());
+    let direct = evaluator.evaluate(&[125.0, 50.0, 50.0], 9).unwrap();
+
+    let report = Experiment::new(Box::new(SingleRun {
+        evaluator: Arc::clone(&evaluator),
+        kind: "rust-sim".into(),
+        population: 125.0,
+        diffusion: 50.0,
+        evaporation: 50.0,
+        hooks: Vec::new(),
+    }))
+    .env(EnvSpec::Single {
+        name: "local".into(),
+        nodes: 1,
+    })
+    .seed(9)
+    .quiet()
+    .run()
+    .unwrap();
+    let out = &report.outcome.outputs[0];
+    assert_eq!(out.get(&val_f64("food1")).unwrap(), direct[0]);
+    assert_eq!(out.get(&val_f64("food2")).unwrap(), direct[1]);
+    assert_eq!(out.get(&val_f64("food3")).unwrap(), direct[2]);
+}
+
+#[test]
+fn single_environment_rejects_typos_in_the_cli_path() {
+    // the satellite: `--env` with an unknown name is a hard error listing
+    // the valid names, not a silent local fallback
+    let err = single_environment("lcoal", 4, Arc::new(ThreadPool::new(1)), 1)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown environment `lcoal`"), "{err}");
+    for name in ["local", "ssh", "pbs", "slurm", "sge", "oar", "condor", "egi"] {
+        assert!(err.contains(name), "must list `{name}`: {err}");
+    }
+}

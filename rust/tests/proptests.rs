@@ -255,27 +255,29 @@ fn prop_random_linear_workflows_run_to_completion() {
         let ops: Vec<(bool, f64)> = (0..len)
             .map(|_| (rng.bool(0.5), rng.range(1.0, 3.0)))
             .collect();
-        let mut p = Puzzle::new();
-        let mut prev = None;
+        let builder = PuzzleBuilder::new();
+        let mut prev: Option<CapsuleHandle> = None;
         for (is_add, k) in ops.clone() {
             let x2 = x.clone();
-            let c = p.capsule(Arc::new(
+            let c = builder.task(
                 ClosureTask::new("op", move |ctx: &Context| {
                     let v = ctx.get(&x2)?;
                     Ok(Context::new().with(&x2, if is_add { v + k } else { v * k }))
                 })
                 .input(&x)
                 .output(&x),
-            ));
-            if let Some(prev) = prev {
-                p.direct(prev, c);
+            );
+            if let Some(prev) = &prev {
+                prev.then(&c);
             } else {
-                p.entry(c);
+                c.entry();
             }
             prev = Some(c);
         }
+        let init = Context::new().with(&x, 1.0);
+        let p = builder.build_with(&init).unwrap();
         let r = MoleExecution::new(p, Arc::new(LocalEnvironment::new(2)), 1)
-            .start_with(Context::new().with(&x, 1.0))
+            .start_with(init)
             .unwrap();
         let want = ops
             .iter()

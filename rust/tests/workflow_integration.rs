@@ -53,9 +53,9 @@ fn listing3_replication_on_slurm_cluster() {
     for (f, m) in food.iter().zip(&med) {
         stat = stat.statistic(f, m, Descriptor::Median);
     }
-    let mut p = Puzzle::new();
+    let b = PuzzleBuilder::new();
     let (_, model_c, _) = replicate(
-        &mut p,
+        &b,
         ant_task(&seed, &food, 150) as Arc<dyn Task>,
         &seed,
         5,
@@ -63,13 +63,16 @@ fn listing3_replication_on_slurm_cluster() {
     );
     let pool = Arc::new(ThreadPool::new(4));
     let slurm = Arc::new(BatchEnvironment::slurm(4, pool, 9));
-    p.on(model_c, slurm.clone());
     let capture = Arc::new(CaptureHook::new());
-    p.hook(model_c, capture.clone());
+    model_c.on(slurm.clone()).hook(capture.clone());
 
-    let result = MoleExecution::new(p, Arc::new(LocalEnvironment::new(2)), 42)
-        .start()
-        .unwrap();
+    let result = MoleExecution::new(
+        b.build().unwrap(),
+        Arc::new(LocalEnvironment::new(2)),
+        42,
+    )
+    .start()
+    .unwrap();
 
     assert_eq!(result.outputs.len(), 1);
     assert_eq!(capture.len(), 5, "five replications ran");
@@ -105,21 +108,24 @@ fn doe_fanout_on_egi_with_failures() {
         }),
     );
 
-    let mut p = Puzzle::new();
-    let entry = p.capsule(Arc::new(IdentityTask::new("entry")));
-    let model = p.capsule(task);
-    let agg = p.capsule(Arc::new(IdentityTask::new("agg")));
-    p.explore(
-        entry,
+    let b = PuzzleBuilder::new();
+    let entry = b.task(IdentityTask::new("entry"));
+    let model = b.capsule(task);
+    let agg = b.task(IdentityTask::new("agg"));
+    entry.explore(
         Arc::new(FullFactorial::new(vec![Factor::new(&x, 0.0, 15.0, 1.0)])),
-        model,
+        &model,
     );
-    p.aggregate(model, agg);
-    p.on(model, egi.clone());
+    model.aggregate(&agg);
+    model.on(egi.clone());
 
-    let result = MoleExecution::new(p, Arc::new(LocalEnvironment::new(2)), 3)
-        .start()
-        .unwrap();
+    let result = MoleExecution::new(
+        b.build().unwrap(),
+        Arc::new(LocalEnvironment::new(2)),
+        3,
+    )
+    .start()
+    .unwrap();
     let mut ys: Vec<f64> = result.outputs[0].get(&y.array()).unwrap();
     ys.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let want: Vec<f64> = (0..16).map(|i| f64::from(i * i)).collect();
@@ -133,12 +139,17 @@ fn ssh_and_local_agree_on_results() {
     let seed = val_u32("seed");
     let food = [val_f64("food1"), val_f64("food2"), val_f64("food3")];
     let run = |env: Arc<dyn Environment>| -> Vec<f64> {
-        let mut p = Puzzle::new();
-        let c = p.capsule(ant_task(&seed, &food, 120) as Arc<dyn Task>);
-        p.on(c, env);
-        let r = MoleExecution::new(p, Arc::new(LocalEnvironment::new(1)), 5)
-            .start_with(Context::new().with(&seed, 77))
-            .unwrap();
+        let b = PuzzleBuilder::new();
+        let c = b.capsule(ant_task(&seed, &food, 120) as Arc<dyn Task>);
+        c.on(env);
+        let init = Context::new().with(&seed, 77);
+        let r = MoleExecution::new(
+            b.build_with(&init).unwrap(),
+            Arc::new(LocalEnvironment::new(1)),
+            5,
+        )
+        .start_with(init)
+        .unwrap();
         food.iter().map(|f| r.outputs[0].get(f).unwrap()).collect()
     };
     let pool = Arc::new(ThreadPool::new(2));
@@ -161,16 +172,15 @@ fn csv_hook_records_exploration() {
         .input(&x)
         .output(&x),
     );
-    let mut p = Puzzle::new();
-    let entry = p.capsule(Arc::new(IdentityTask::new("entry")));
-    let model = p.capsule(task);
-    p.explore(
-        entry,
+    let b = PuzzleBuilder::new();
+    let entry = b.task(IdentityTask::new("entry"));
+    let model = b.capsule(task);
+    entry.explore(
         Arc::new(FullFactorial::new(vec![Factor::new(&x, 0.0, 4.0, 1.0)])),
-        model,
+        &model,
     );
-    p.hook(model, Arc::new(CsvHook::new(&path, &["x"])));
-    MoleExecution::new(p, Arc::new(LocalEnvironment::new(2)), 1)
+    model.hook(Arc::new(CsvHook::new(&path, &["x"])));
+    MoleExecution::new(b.build().unwrap(), Arc::new(LocalEnvironment::new(2)), 1)
         .start()
         .unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
@@ -188,15 +198,19 @@ fn virtual_time_chains_through_transitions() {
             ClosureTask::new(name.to_string(), |ctx: &Context| Ok(ctx.clone())).cost(20.0),
         )
     };
-    let mut p = Puzzle::new();
-    let a = p.capsule(t("a"));
-    let b = p.capsule(t("b"));
-    p.direct(a, b);
-    p.on(a, pbs.clone());
-    p.on(b, pbs.clone());
-    let r = MoleExecution::new(p, Arc::new(LocalEnvironment::new(1)), 2)
-        .start()
-        .unwrap();
+    let builder = PuzzleBuilder::new();
+    let a = builder.capsule(t("a"));
+    let b = builder.capsule(t("b"));
+    a.then(&b);
+    a.on(pbs.clone());
+    b.on(pbs.clone());
+    let r = MoleExecution::new(
+        builder.build().unwrap(),
+        Arc::new(LocalEnvironment::new(1)),
+        2,
+    )
+    .start()
+    .unwrap();
     // two 20 s jobs chained: makespan >= 40 s plus latencies
     assert!(
         r.report.virtual_makespan >= 40.0,
@@ -229,11 +243,11 @@ fn sources_inject_before_each_run() {
         })
         .output(&total),
     );
-    let mut p = Puzzle::new();
-    let c = p.capsule(task);
-    p.source(c, Arc::new(CsvSource::new(&csv, &["obs"])));
-    p.source(c, Arc::new(ConstantSource::new().with(&scale, 2.0)));
-    let r = MoleExecution::new(p, Arc::new(LocalEnvironment::new(1)), 1)
+    let b = PuzzleBuilder::new();
+    let c = b.capsule(task);
+    c.source(Arc::new(CsvSource::new(&csv, &["obs"])))
+        .source(Arc::new(ConstantSource::new().with(&scale, 2.0)));
+    let r = MoleExecution::new(b.build().unwrap(), Arc::new(LocalEnvironment::new(1)), 1)
         .start()
         .unwrap();
     assert_eq!(r.outputs[0].get(&total).unwrap(), 120.0);
