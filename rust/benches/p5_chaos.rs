@@ -1,0 +1,116 @@
+//! P5 (§Robustness): cost of the chaos harness and of surviving it.
+//!
+//! Two questions, one suite:
+//!
+//! * **`chaos_overhead`** — what does wrapping a backend in a
+//!   [`FaultyEnv`] with an *empty* [`FaultPlan`] cost? The decorator sits
+//!   on the submission hot path of every chaos test and of any `~plan`
+//!   fleet spec, so pass-through must be free: the committed acceptance
+//!   is ≤ 1.1× the bare backend (gated in CI via `bench_gate`).
+//! * **chaos mix** — a fleet where one backend drops 20% of submissions
+//!   and stretches 10% into stragglers, pushed through the broker with
+//!   its default retry policy: every job must be rescued, and the
+//!   resubmission traffic is recorded so a regression in the retry
+//!   machinery (e.g. retries silently vanishing) shows up as a metric
+//!   cliff rather than a flaky test.
+//!
+//! Knobs: `P5_CHAOS_JOBS` (default 20000; CI smoke uses fewer),
+//! `BENCH_OUT_DIR`.
+
+use std::sync::Arc;
+
+use molers::bench::Bench;
+use molers::broker::{Broker, FaultPlan, FaultyEnv};
+use molers::core::Context;
+use molers::dsl::ClosureTask;
+use molers::environment::local::LocalEnvironment;
+use molers::environment::{Environment, Job};
+use molers::exec::ThreadPool;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Submit `jobs` trivial tasks in waves of 256 and drain each wave — the
+/// engines' shape, dominated by submission + handle bookkeeping, which is
+/// exactly the path the fault decorator intercepts.
+fn run_jobs(env: &dyn Environment, jobs: usize) {
+    let task = Arc::new(ClosureTask::new("unit", |_: &Context| Ok(Context::new())).cost(1.0));
+    let mut remaining = jobs;
+    while remaining > 0 {
+        let k = remaining.min(256);
+        let handles: Vec<_> = (0..k)
+            .map(|_| env.submit(Job::new(Arc::clone(&task) as _, Context::new())))
+            .collect();
+        for h in handles {
+            h.wait().expect("no faults planned — every job completes");
+        }
+        remaining -= k;
+    }
+}
+
+fn main() {
+    let jobs = env_usize("P5_CHAOS_JOBS", 20_000);
+    let threads = std::thread::available_parallelism()
+        .map(|t| t.get())
+        .unwrap_or(4);
+    println!("{jobs} trivial jobs, waves of 256, {threads} local threads");
+
+    let mut b = Bench::new("p5_chaos").warmup(1).samples(3);
+
+    // bare backend vs the same backend behind an empty fault plan
+    let bare = LocalEnvironment::new(threads);
+    let bare_s = b.case("bare_local", || run_jobs(&bare, jobs)).median_s();
+
+    let wrapped = FaultyEnv::new(
+        Arc::new(LocalEnvironment::new(threads)),
+        FaultPlan::new(),
+        0xC0DE,
+    );
+    let wrapped_s = b
+        .case("empty_plan_passthrough", || run_jobs(&wrapped, jobs))
+        .median_s();
+    b.metric(
+        "chaos_overhead",
+        wrapped_s / bare_s,
+        "x bare submission wall time (acceptance: <= 1.1)",
+    );
+
+    // chaos mix: drops + stragglers on one of two backends, default retry
+    // policy — the broker must rescue every job
+    let chaos_jobs = (jobs / 4).max(256);
+    let pool = Arc::new(ThreadPool::new(threads));
+    let broker = Broker::from_spec(
+        &format!("local:{threads},local:{threads}~drop=0.2;delay=0.1:5"),
+        pool,
+        42,
+    )
+    .unwrap();
+    let mut wall = 0.0;
+    b.case("chaos_mix_rescue", || {
+        let t0 = std::time::Instant::now();
+        run_jobs(&broker, chaos_jobs);
+        wall = t0.elapsed().as_secs_f64();
+    });
+    let s = broker.stats();
+    assert_eq!(s.failed_jobs, 0, "default retry budget rescues everything");
+    b.metric("chaos_mix_jobs", chaos_jobs as f64, "jobs");
+    b.metric("chaos_mix_resubmissions", s.resubmissions as f64, "attempts");
+    b.metric(
+        "chaos_mix_reroutes",
+        broker.counters().reroutes as f64,
+        "jobs",
+    );
+    b.metric(
+        "chaos_mix_rescued_per_s",
+        chaos_jobs as f64 / wall.max(1e-9),
+        "jobs/s",
+    );
+
+    if let Err(e) = b.write_json() {
+        eprintln!("could not write bench json: {e}");
+    }
+}

@@ -79,6 +79,16 @@ const CHECKS: &[Check] = &[
         higher_is_better: false,
         tolerance: 2.0,
     },
+    // scale-independent ratio (wrapped/bare wall time of the same wave,
+    // measured back-to-back in one process): an empty-FaultPlan decorator
+    // on the submission path must stay within 10% of free — the
+    // §Robustness acceptance, tight on purpose
+    Check {
+        suite: "p5_chaos",
+        metric: "p5_chaos/chaos_overhead",
+        higher_is_better: false,
+        tolerance: 1.1,
+    },
 ];
 
 fn load_suite(dir: &Path, suite: &str) -> Option<Json> {

@@ -1,71 +1,419 @@
-//! Deterministic fault injection: wrap any environment so a fraction of
-//! submissions is dropped before execution (the middleware "lost" the
-//! job). This is how tests, the failover example and the `p3_broker`
-//! bench build a misbehaving backend without touching the inner
-//! environment's own failure model.
+//! Deterministic chaos injection: wrap any environment in a seeded
+//! [`FaultPlan`] so tests, benches and the failover example can replay a
+//! misbehaving grid without touching the inner environment's own failure
+//! model. Every fault is drawn from the decorator's own [`Rng`] in
+//! submission order, so a chaos run is reproducible from `(plan, seed)`.
+//!
+//! ## Fault modes
+//!
+//! * **drops** — the submission is "lost" by the middleware: the caller
+//!   sees an immediate [`Error::NodeFailure`] and the inner environment
+//!   never sees the job.
+//! * **hangs** — the job is accepted but *never* completes: the handle's
+//!   `try_wait` stays `None` forever. Only a broker-enforced
+//!   [`RetryPolicy`](crate::broker::RetryPolicy) attempt timeout or job
+//!   deadline bounds the wait.
+//! * **stragglers** — the job completes, but its virtual execution time is
+//!   stretched by a drawn delay (`delay_s × [0.5, 1.5)`), the classic
+//!   grid long-tail that speculation is meant to cut.
+//! * **crash windows** — a contiguous range of submission indices fails
+//!   terminally (the backend "crashed"), after which it recovers.
+//!
+//! ## `FaultPlan` grammar
+//!
+//! [`FaultPlan::parse`] accepts clauses separated by `;` or `,`:
+//!
+//! ```text
+//! drop=P          drop each submission with probability P
+//! hang=P          hang each submission with probability P
+//! delay=P:S       straggle with probability P by S × [0.5, 1.5) virtual s
+//! crash=START+LEN fail submissions START..START+LEN terminally
+//! ```
+//!
+//! e.g. `drop=0.2;hang=0.01;delay=0.1:60;crash=40+8`. The broker's
+//! `--envs` spec accepts the same grammar after `~` (a bare number after
+//! `~` keeps the historical drops-only meaning): `pbs:32~drop=0.2;hang=0.01`.
+//!
+//! ## Journal record kinds & retry defaults
+//!
+//! Degraded campaigns write a `degraded_rows` journal record (`rows`,
+//! `clock`, `error`) next to the usual `sample_block` checkpoints — see
+//! [`crate::broker::journal`]. The broker's time bounds default to
+//! [`RetryPolicy::default`](crate::broker::RetryPolicy): 4 attempts,
+//! 600 s per attempt, 3600 s per job, exponential backoff 30 s → 480 s
+//! with ±50 % deterministic jitter.
 
 use std::sync::{Arc, Mutex};
 
-use crate::environment::{EnvStats, Environment, Job, JobHandle};
+use crate::environment::{EnvStats, Environment, Job, JobHandle, JobWaiter};
 use crate::error::Error;
 use crate::util::Rng;
 
-/// An [`Environment`] decorator that terminally fails each submission
-/// with probability `failure_rate`, drawn from its own deterministic RNG
-/// in submission order. Failed jobs never reach the inner environment —
-/// the caller (normally the [`crate::broker::Broker`]) sees an immediate
-/// [`Error::NodeFailure`] and is expected to re-route.
-pub struct FlakyEnv {
-    name: String,
-    inner: Arc<dyn Environment>,
-    failure_rate: f64,
-    rng: Mutex<Rng>,
-    injected: Mutex<u64>,
+/// A contiguous range of submission indices during which the backend is
+/// "crashed": submissions `start..start + len` fail terminally.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CrashWindow {
+    pub start: u64,
+    pub len: u64,
 }
 
-impl FlakyEnv {
-    pub fn new(inner: Arc<dyn Environment>, failure_rate: f64, seed: u64) -> Self {
-        FlakyEnv {
-            name: format!("flaky[{:.0}%]:{}", failure_rate * 100.0, inner.name()),
+impl CrashWindow {
+    fn contains(&self, idx: u64) -> bool {
+        idx >= self.start && idx - self.start < self.len
+    }
+}
+
+/// A composable, seedable description of injectable faults (module doc
+/// has the grammar). An empty plan is a transparent pass-through.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Probability a submission is dropped before execution.
+    pub drop_rate: f64,
+    /// Probability a submission hangs forever.
+    pub hang_rate: f64,
+    /// Probability a completed job is stretched into a straggler.
+    pub straggler_rate: f64,
+    /// Mean-ish straggler stretch: the injected delay is
+    /// `straggler_delay_s × [0.5, 1.5)` virtual seconds.
+    pub straggler_delay_s: f64,
+    /// Crash-and-recover windows over the submission index sequence.
+    pub crash_windows: Vec<CrashWindow>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Drop each submission with probability `p`.
+    pub fn drops(mut self, p: f64) -> Self {
+        self.drop_rate = p.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Hang each submission with probability `p`.
+    pub fn hangs(mut self, p: f64) -> Self {
+        self.hang_rate = p.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Straggle with probability `p`, stretching virtual execution by
+    /// `delay_s × [0.5, 1.5)` seconds.
+    pub fn stragglers(mut self, p: f64, delay_s: f64) -> Self {
+        self.straggler_rate = p.clamp(0.0, 1.0);
+        self.straggler_delay_s = delay_s.max(0.0);
+        self
+    }
+
+    /// Fail submissions `start..start + len` terminally (backend crash),
+    /// then recover.
+    pub fn crash_window(mut self, start: u64, len: u64) -> Self {
+        self.crash_windows.push(CrashWindow { start, len });
+        self
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.drop_rate == 0.0
+            && self.hang_rate == 0.0
+            && self.straggler_rate == 0.0
+            && self.crash_windows.is_empty()
+    }
+
+    fn in_crash_window(&self, idx: u64) -> bool {
+        self.crash_windows.iter().any(|w| w.contains(idx))
+    }
+
+    /// Parse the clause grammar documented in the module doc. Clauses are
+    /// separated by `;` or `,`; unknown keys and malformed values are
+    /// [`Error::Config`] errors.
+    pub fn parse(spec: &str) -> crate::error::Result<FaultPlan> {
+        let bad = |msg: String| Error::Config(format!("bad fault plan `{spec}`: {msg}"));
+        let prob = |key: &str, v: &str| -> crate::error::Result<f64> {
+            let p: f64 = v
+                .parse()
+                .map_err(|_| bad(format!("`{key}` needs a probability, got `{v}`")))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(bad(format!("`{key}` probability {p} outside [0, 1]")));
+            }
+            Ok(p)
+        };
+        let mut plan = FaultPlan::new();
+        for clause in spec.split([';', ',']).filter(|c| !c.is_empty()) {
+            let (key, value) = clause
+                .split_once('=')
+                .ok_or_else(|| bad(format!("clause `{clause}` is not `key=value`")))?;
+            match key {
+                "drop" => plan.drop_rate = prob(key, value)?,
+                "hang" => plan.hang_rate = prob(key, value)?,
+                "delay" => {
+                    let (p, s) = value.split_once(':').ok_or_else(|| {
+                        bad(format!("`delay` needs `P:SECONDS`, got `{value}`"))
+                    })?;
+                    plan.straggler_rate = prob(key, p)?;
+                    plan.straggler_delay_s = s.parse().map_err(|_| {
+                        bad(format!("`delay` seconds must be a number, got `{s}`"))
+                    })?;
+                }
+                "crash" => {
+                    let (start, len) = value.split_once('+').ok_or_else(|| {
+                        bad(format!("`crash` needs `START+LEN`, got `{value}`"))
+                    })?;
+                    let parse_u64 = |t: &str| {
+                        t.parse::<u64>().map_err(|_| {
+                            bad(format!("`crash` bounds must be integers, got `{t}`"))
+                        })
+                    };
+                    plan.crash_windows.push(CrashWindow {
+                        start: parse_u64(start)?,
+                        len: parse_u64(len)?,
+                    });
+                }
+                other => return Err(bad(format!("unknown fault kind `{other}`"))),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    /// Canonical clause form, re-parseable by [`FaultPlan::parse`].
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut clauses = Vec::new();
+        if self.drop_rate > 0.0 {
+            clauses.push(format!("drop={}", self.drop_rate));
+        }
+        if self.hang_rate > 0.0 {
+            clauses.push(format!("hang={}", self.hang_rate));
+        }
+        if self.straggler_rate > 0.0 {
+            clauses.push(format!(
+                "delay={}:{}",
+                self.straggler_rate, self.straggler_delay_s
+            ));
+        }
+        for w in &self.crash_windows {
+            clauses.push(format!("crash={}+{}", w.start, w.len));
+        }
+        write!(f, "{}", clauses.join(";"))
+    }
+}
+
+/// Per-mode injection counters (see [`FaultyEnv::injected`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct InjectedFaults {
+    /// Submissions dropped before reaching the inner environment.
+    pub drops: u64,
+    /// Submissions that will never complete.
+    pub hangs: u64,
+    /// Completed jobs stretched by an injected delay.
+    pub stragglers: u64,
+    /// Submissions terminally failed inside a crash window.
+    pub crash_failures: u64,
+}
+
+impl InjectedFaults {
+    pub fn total(&self) -> u64 {
+        self.drops + self.hangs + self.stragglers + self.crash_failures
+    }
+}
+
+/// A handle that never completes: the injected "hung backend".
+struct HungJob;
+
+impl JobWaiter for HungJob {
+    fn wait(self: Box<Self>) -> crate::error::Result<(crate::core::Context, crate::environment::JobReport)> {
+        // only a broker deadline can unblock a hung job; waiting on the
+        // raw handle really does block forever, as on a real grid
+        loop {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+    }
+    fn try_wait(
+        &self,
+    ) -> Option<crate::error::Result<(crate::core::Context, crate::environment::JobReport)>> {
+        None
+    }
+}
+
+/// Wraps an inner handle, stretching the report's virtual execution time
+/// by the drawn straggler delay.
+struct DelayedJob {
+    inner: JobHandle,
+    delay_s: f64,
+}
+
+fn stretch(
+    delay_s: f64,
+    r: crate::error::Result<(crate::core::Context, crate::environment::JobReport)>,
+) -> crate::error::Result<(crate::core::Context, crate::environment::JobReport)> {
+    r.map(|(ctx, mut report)| {
+        report.exec_s += delay_s;
+        report.virtual_end += delay_s;
+        (ctx, report)
+    })
+}
+
+impl JobWaiter for DelayedJob {
+    fn wait(
+        self: Box<Self>,
+    ) -> crate::error::Result<(crate::core::Context, crate::environment::JobReport)> {
+        stretch(self.delay_s, self.inner.wait())
+    }
+    fn try_wait(
+        &self,
+    ) -> Option<crate::error::Result<(crate::core::Context, crate::environment::JobReport)>> {
+        self.inner.try_wait().map(|r| stretch(self.delay_s, r))
+    }
+}
+
+/// An [`Environment`] decorator executing a [`FaultPlan`]: faults are
+/// drawn per submission, in submission order, from a seeded [`Rng`], so
+/// any chaos run is reproducible from `(plan, seed)`.
+pub struct FaultyEnv {
+    name: String,
+    inner: Arc<dyn Environment>,
+    plan: FaultPlan,
+    rng: Mutex<Rng>,
+    submissions: Mutex<u64>,
+    injected: Mutex<InjectedFaults>,
+}
+
+impl FaultyEnv {
+    pub fn new(inner: Arc<dyn Environment>, plan: FaultPlan, seed: u64) -> Self {
+        let name = if plan.is_empty() {
+            format!("chaos[]:{}", inner.name())
+        } else {
+            format!("chaos[{plan}]:{}", inner.name())
+        };
+        FaultyEnv::named(inner, plan, seed, name)
+    }
+
+    fn named(inner: Arc<dyn Environment>, plan: FaultPlan, seed: u64, name: String) -> Self {
+        FaultyEnv {
+            name,
             inner,
-            failure_rate: failure_rate.clamp(0.0, 1.0),
+            plan,
             rng: Mutex::new(Rng::new(seed)),
-            injected: Mutex::new(0),
+            submissions: Mutex::new(0),
+            injected: Mutex::new(InjectedFaults::default()),
         }
     }
 
-    /// Submissions dropped so far.
-    pub fn injected_failures(&self) -> u64 {
+    /// Per-mode injection counters so far.
+    pub fn injected(&self) -> InjectedFaults {
         *self.injected.lock().unwrap()
+    }
+
+    /// The plan this decorator executes.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
     }
 }
 
-impl Environment for FlakyEnv {
+impl Environment for FaultyEnv {
     fn name(&self) -> &str {
         &self.name
     }
 
     fn submit(&self, job: Job) -> JobHandle {
-        let drop_it = self.rng.lock().unwrap().bool(self.failure_rate);
+        let idx = {
+            let mut s = self.submissions.lock().unwrap();
+            let i = *s;
+            *s += 1;
+            i
+        };
+        if self.plan.in_crash_window(idx) {
+            self.injected.lock().unwrap().crash_failures += 1;
+            return JobHandle::ready(Err(Error::NodeFailure {
+                node: format!("{}/<crashed>", self.name),
+                reason: format!("backend crash window (submission {idx})"),
+            }));
+        }
+        // fixed draw order per submission — drop, hang, straggle, delay —
+        // keeps the fault stream identical whatever each outcome is
+        let (drop_it, hang_it, straggle, delay_u) = {
+            let mut r = self.rng.lock().unwrap();
+            (
+                r.bool(self.plan.drop_rate),
+                r.bool(self.plan.hang_rate),
+                r.bool(self.plan.straggler_rate),
+                r.f64(),
+            )
+        };
         if drop_it {
-            *self.injected.lock().unwrap() += 1;
+            self.injected.lock().unwrap().drops += 1;
             return JobHandle::ready(Err(Error::NodeFailure {
                 node: format!("{}/<lost>", self.name),
                 reason: "submission dropped by injected fault".into(),
             }));
         }
+        if hang_it {
+            self.injected.lock().unwrap().hangs += 1;
+            return JobHandle::from_waiter(Box::new(HungJob));
+        }
+        let handle = self.inner.submit(job);
+        if straggle {
+            self.injected.lock().unwrap().stragglers += 1;
+            let delay_s = self.plan.straggler_delay_s * (0.5 + delay_u);
+            return JobHandle::from_waiter(Box::new(DelayedJob {
+                inner: handle,
+                delay_s,
+            }));
+        }
+        handle
+    }
+
+    fn stats(&self) -> EnvStats {
+        let mut s = self.inner.stats();
+        let inj = self.injected();
+        // dropped and crashed submissions never reached the inner
+        // environment: fold them back in as submitted + terminally failed
+        // so the ledger balances. Hung submissions are folded in as
+        // submitted-but-unresolved — exactly what a hung backend looks
+        // like from outside: they stay in `in_flight()` forever.
+        let lost = inj.drops + inj.crash_failures;
+        s.submitted += lost + inj.hangs;
+        s.failed_attempts += lost;
+        s.failed_jobs += lost;
+        s.injected_faults += inj.total();
+        s
+    }
+}
+
+/// The historical single-mode decorator: terminally fail each submission
+/// with probability `failure_rate`. Now a thin drops-only [`FaultPlan`]
+/// over [`FaultyEnv`], kept for the `~p` spec shorthand and existing
+/// callers.
+pub struct FlakyEnv {
+    inner: FaultyEnv,
+}
+
+impl FlakyEnv {
+    pub fn new(inner: Arc<dyn Environment>, failure_rate: f64, seed: u64) -> Self {
+        let name = format!("flaky[{:.0}%]:{}", failure_rate * 100.0, inner.name());
+        FlakyEnv {
+            inner: FaultyEnv::named(inner, FaultPlan::new().drops(failure_rate), seed, name),
+        }
+    }
+
+    /// Submissions dropped so far.
+    pub fn injected_failures(&self) -> u64 {
+        self.inner.injected().drops
+    }
+}
+
+impl Environment for FlakyEnv {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn submit(&self, job: Job) -> JobHandle {
         self.inner.submit(job)
     }
 
     fn stats(&self) -> EnvStats {
-        // the inner environment never saw the dropped jobs; add them back
-        // so this environment's ledger stays consistent
-        let mut s = self.inner.stats();
-        let injected = *self.injected.lock().unwrap();
-        s.submitted += injected;
-        s.failed_attempts += injected;
-        s.failed_jobs += injected;
-        s
+        self.inner.stats()
     }
 }
 
@@ -103,6 +451,7 @@ mod tests {
         assert_eq!(s.failed_jobs, failures);
         assert_eq!(s.completed, 200 - failures);
         assert_eq!(s.in_flight(), 0);
+        assert_eq!(s.injected_faults, failures);
     }
 
     #[test]
@@ -122,5 +471,138 @@ mod tests {
             .wait()
             .unwrap_err();
         assert!(matches!(err, Error::NodeFailure { .. }));
+    }
+
+    #[test]
+    fn plan_grammar_round_trips() {
+        let plan = FaultPlan::parse("drop=0.2;hang=0.01,delay=0.1:60;crash=40+8").unwrap();
+        assert_eq!(plan.drop_rate, 0.2);
+        assert_eq!(plan.hang_rate, 0.01);
+        assert_eq!(plan.straggler_rate, 0.1);
+        assert_eq!(plan.straggler_delay_s, 60.0);
+        assert_eq!(plan.crash_windows, vec![CrashWindow { start: 40, len: 8 }]);
+        assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
+
+        for bad in [
+            "x",
+            "drop",
+            "drop=nope",
+            "drop=1.5",
+            "delay=0.1",
+            "delay=0.1:x",
+            "crash=40",
+            "crash=a+b",
+            "warp=0.1",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn same_plan_and_seed_reproduce_the_same_fault_stream() {
+        let mk = || {
+            FaultyEnv::new(
+                Arc::new(LocalEnvironment::new(1)),
+                FaultPlan::new().drops(0.3).stragglers(0.2, 10.0),
+                99,
+            )
+        };
+        let (a, b) = (mk(), mk());
+        for _ in 0..100 {
+            let ra = a.submit(Job::new(noop(), Context::new())).wait();
+            let rb = b.submit(Job::new(noop(), Context::new())).wait();
+            assert_eq!(ra.is_ok(), rb.is_ok());
+        }
+        assert_eq!(a.injected(), b.injected());
+    }
+
+    #[test]
+    fn crash_window_fails_exact_submissions_then_recovers() {
+        let env = FaultyEnv::new(
+            Arc::new(LocalEnvironment::new(1)),
+            FaultPlan::new().crash_window(2, 3),
+            7,
+        );
+        let results: Vec<bool> = (0..8)
+            .map(|_| env.submit(Job::new(noop(), Context::new())).wait().is_ok())
+            .collect();
+        assert_eq!(
+            results,
+            vec![true, true, false, false, false, true, true, true]
+        );
+        assert_eq!(env.injected().crash_failures, 3);
+    }
+
+    #[test]
+    fn hung_job_never_completes_but_ledger_reconciles() {
+        // satellite: submitted = completed + failed + in_flight under a
+        // mixed plan, with hangs held open as in-flight
+        let env = FaultyEnv::new(
+            Arc::new(LocalEnvironment::new(2)),
+            FaultPlan::new().drops(0.2).hangs(0.15).crash_window(0, 2),
+            13,
+        );
+        let n = 60u64;
+        let handles: Vec<JobHandle> = (0..n)
+            .map(|_| env.submit(Job::new(noop(), Context::new())))
+            .collect();
+        // settle every non-hung handle; hung ones stay None forever
+        let mut completed = 0u64;
+        let mut failed = 0u64;
+        let mut pending = 0u64;
+        for h in &handles {
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+            loop {
+                match h.try_wait() {
+                    Some(Ok(_)) => {
+                        completed += 1;
+                        break;
+                    }
+                    Some(Err(_)) => {
+                        failed += 1;
+                        break;
+                    }
+                    None if std::time::Instant::now() > deadline => {
+                        pending += 1;
+                        break;
+                    }
+                    None => std::thread::sleep(std::time::Duration::from_millis(1)),
+                }
+            }
+        }
+        let inj = env.injected();
+        assert_eq!(inj.crash_failures, 2);
+        assert!(inj.hangs > 0, "expected some hangs at 15% of {n}");
+        assert_eq!(pending, inj.hangs, "every pending handle is a hang");
+        let s = env.stats();
+        assert_eq!(s.submitted, n);
+        assert_eq!(s.completed, completed);
+        assert_eq!(s.failed_jobs, failed);
+        assert_eq!(
+            s.completed + s.failed_jobs + s.in_flight(),
+            s.submitted,
+            "ledger must reconcile under injection"
+        );
+        assert_eq!(s.in_flight(), inj.hangs);
+        assert_eq!(s.injected_faults, inj.total());
+    }
+
+    #[test]
+    fn stragglers_stretch_virtual_time_only() {
+        let env = FaultyEnv::new(
+            Arc::new(LocalEnvironment::new(1)),
+            FaultPlan::new().stragglers(1.0, 40.0),
+            3,
+        );
+        let (_, report) = env.submit(Job::new(noop(), Context::new())).wait().unwrap();
+        // delay is 40 × [0.5, 1.5) virtual seconds on top of a ~0-cost task
+        assert!(
+            (20.0..60.0 + 1.0).contains(&report.exec_s),
+            "stretched exec_s = {}",
+            report.exec_s
+        );
+        assert!(report.virtual_end >= report.virtual_start + 20.0);
+        assert_eq!(env.injected().stragglers, 1);
     }
 }

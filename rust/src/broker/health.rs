@@ -8,6 +8,12 @@
 //! window is cleared, so the backend re-enters service with a clean slate
 //! and one bad century ago doesn't keep re-tripping the breaker
 //! (half-open probing).
+//!
+//! An attempt the broker abandons on a [`crate::broker::RetryPolicy`]
+//! real-time bound (attempt timeout on a hung backend) is recorded here
+//! as a failure exactly like a lost submission — a backend that hangs
+//! jobs drains its health window and trips the breaker the same way one
+//! that drops them does.
 
 use std::collections::VecDeque;
 

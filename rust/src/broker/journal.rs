@@ -24,6 +24,13 @@
 //! Island runs append `island` progress records and periodic `archive`
 //! snapshots instead; resuming seeds the archive and continues the
 //! remaining evaluation budget.
+//!
+//! Explore sweeps write `sample_block` checkpoints, and — when running
+//! with `--degraded-ok` — `degraded_rows` records naming the exact design
+//! rows whose retry budget was exhausted (their objectives are emitted as
+//! NaN/null). On `--resume` the two record kinds replay in write order
+//! (see [`sweep_events`]): a later `sample_block` covering a previously
+//! degraded row supersedes it.
 
 use std::collections::BTreeMap;
 use std::io::{BufWriter, Write};
@@ -79,6 +86,12 @@ impl Journal {
         if let Ok(text) = std::fs::read_to_string(&path) {
             if !text.is_empty() && !text.ends_with('\n') {
                 let keep = text.rfind('\n').map(|i| i + 1).unwrap_or(0);
+                eprintln!(
+                    "journal: repaired torn tail of `{}`: dropped 1 partial \
+                     record ({} bytes from byte offset {keep})",
+                    path.display(),
+                    text.len() - keep,
+                );
                 let f = std::fs::OpenOptions::new().write(true).open(&path)?;
                 f.set_len(keep as u64)?;
             }
@@ -370,8 +383,84 @@ pub fn env_stats_record(env: &str, s: &EnvStats) -> Json {
         ("failed_attempts", Json::Num(s.failed_attempts as f64)),
         ("resubmissions", Json::Num(s.resubmissions as f64)),
         ("failed_jobs", Json::Num(s.failed_jobs as f64)),
+        ("timed_out_attempts", Json::Num(s.timed_out_attempts as f64)),
+        ("injected_faults", Json::Num(s.injected_faults as f64)),
         ("virtual_makespan", Json::Num(s.virtual_makespan)),
     ])
+}
+
+/// `degraded_rows` record: the exact design rows whose retry budget was
+/// exhausted under `--degraded-ok`. Their objectives are emitted as
+/// NaN/null in the result file; on `--resume` they restore as done (NaN)
+/// unless `--retry-degraded` re-opens them.
+///
+/// ```text
+/// {"kind":"degraded_rows","rows":[512,513],"clock":88.5,"error":"..."}
+/// ```
+pub fn degraded_rows_record(rows: &[usize], clock: f64, error: &str) -> Json {
+    obj(vec![
+        ("kind", Json::Str("degraded_rows".into())),
+        (
+            "rows",
+            Json::Arr(rows.iter().map(|&r| Json::Num(r as f64)).collect()),
+        ),
+        ("clock", Json::Num(clock)),
+        ("error", Json::Str(error.into())),
+    ])
+}
+
+/// One parsed `degraded_rows` record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradedRows {
+    pub rows: Vec<usize>,
+    pub clock: f64,
+}
+
+fn parse_degraded_rows(rec: &Json) -> Option<DegradedRows> {
+    Some(DegradedRows {
+        rows: rec
+            .get("rows")?
+            .as_arr()?
+            .iter()
+            .map(|r| r.as_f64().map(|v| v as usize))
+            .collect::<Option<Vec<_>>>()?,
+        clock: rec.get("clock")?.as_f64()?,
+    })
+}
+
+/// Every well-formed `degraded_rows` record, in write order.
+pub fn degraded_rows(records: &[Json]) -> Vec<DegradedRows> {
+    records
+        .iter()
+        .filter(|r| kind(r) == Some("degraded_rows"))
+        .filter_map(parse_degraded_rows)
+        .collect()
+}
+
+/// One replayable event of a sweep journal, in write order. Order
+/// matters: a degraded row set written in one run can be superseded by a
+/// `sample_block` from a later `--retry-degraded` resume, so the restorer
+/// must apply events last-wins, not set-union.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SweepEvent {
+    Block(SampleBlock),
+    Degraded(DegradedRows),
+}
+
+/// Every well-formed `sample_block` / `degraded_rows` record of a sweep
+/// journal as one ordered event stream (malformed records are dropped —
+/// the sweep just re-evaluates those rows).
+pub fn sweep_events(records: &[Json]) -> Vec<SweepEvent> {
+    records
+        .iter()
+        .filter_map(|r| match kind(r) {
+            Some("sample_block") => parse_sample_block(r).map(SweepEvent::Block),
+            Some("degraded_rows") => {
+                parse_degraded_rows(r).map(SweepEvent::Degraded)
+            }
+            _ => None,
+        })
+        .collect()
 }
 
 /// `run_end` record.
@@ -563,7 +652,34 @@ mod tests {
     fn corrupt_middle_line_is_an_error() {
         let path = tmp("corrupt");
         std::fs::write(&path, "{\"kind\":\"run_start\"}\nnot json\n{\"kind\":\"run_end\",\"evaluations\":0,\"clock\":0}\n").unwrap();
-        assert!(Journal::load(&path).is_err());
+        let err = Journal::load(&path).unwrap_err();
+        assert!(
+            err.to_string().contains("line 2"),
+            "the error must name the corrupt line: {err}"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn degraded_rows_round_trip_in_event_order() {
+        let path = tmp("degraded");
+        let j = Journal::create(&path).unwrap();
+        j.append(&sample_block_record(0, 1, &[1.5], 1.0)).unwrap();
+        j.append(&degraded_rows_record(&[2, 3], 2.0, "job deadline"))
+            .unwrap();
+        // a later retry re-completed row 2: order must be preserved so
+        // the restorer can apply last-wins
+        j.append(&sample_block_record(2, 1, &[2.5], 3.0)).unwrap();
+        let records = Journal::load(&path).unwrap();
+        let d = degraded_rows(&records);
+        assert_eq!(d, vec![DegradedRows { rows: vec![2, 3], clock: 2.0 }]);
+        let events = sweep_events(&records);
+        assert_eq!(events.len(), 3);
+        assert!(matches!(&events[0], SweepEvent::Block(b) if b.first_row == 0));
+        assert!(
+            matches!(&events[1], SweepEvent::Degraded(d) if d.rows == vec![2, 3])
+        );
+        assert!(matches!(&events[2], SweepEvent::Block(b) if b.first_row == 2));
         let _ = std::fs::remove_file(&path);
     }
 

@@ -15,8 +15,15 @@
 //!   windowed failure rate spikes is quarantined for a cooldown and its
 //!   work re-routed (see [`health`]);
 //! * **re-routes failures**: a terminally failed attempt is re-dispatched
-//!   to another backend (up to `max_attempts`), paying a virtual
-//!   resubmission penalty;
+//!   to another backend (up to [`RetryPolicy::max_attempts`]), paying an
+//!   exponentially backed-off virtual resubmission penalty with
+//!   deterministic per-job jitter;
+//! * **enforces real-time bounds** ([`RetryPolicy`]): an attempt that
+//!   produces nothing within `attempt_timeout_s` real seconds is abandoned
+//!   as hung — health-penalised and re-routed like any infrastructure
+//!   failure — and a job past `job_deadline_s` fails terminally with
+//!   [`Error::Timeout`], so no [`JobHandle::wait`] can block forever on a
+//!   hung backend;
 //! * **speculatively resubmits stragglers** (OpenMOLE's oversubmission
 //!   trick on EGI, opt-in via [`BrokerBuilder::speculation`] /
 //!   `--speculate`): when a completed attempt's virtual duration exceeds
@@ -40,15 +47,15 @@ pub mod health;
 pub mod journal;
 pub mod policy;
 
-pub use fault::FlakyEnv;
+pub use fault::{CrashWindow, FaultPlan, FaultyEnv, FlakyEnv, InjectedFaults};
 pub use health::{CircuitConfig, Health};
-pub use journal::{Journal, ResumeState, SampleBlock};
+pub use journal::{DegradedRows, Journal, ResumeState, SampleBlock, SweepEvent};
 pub use policy::{
-    BackendView, DispatchPolicy, EwmaPolicy, LeastInFlight, RoundRobin,
+    BackendView, DispatchPolicy, EwmaPolicy, LeastInFlight, RetryPolicy, RoundRobin,
 };
 
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::core::Context;
 use crate::dsl::task::Task;
@@ -84,10 +91,8 @@ impl Default for SpeculationConfig {
 /// Broker-wide knobs.
 #[derive(Debug, Clone)]
 pub struct BrokerConfig {
-    /// Total attempts per job, first dispatch included.
-    pub max_attempts: u32,
-    /// Virtual seconds added per re-route (failure detection + brokering).
-    pub resubmit_penalty_s: f64,
+    /// Attempt counts, real-time bounds and virtual backoff.
+    pub retry: RetryPolicy,
     pub circuit: CircuitConfig,
     /// `None` disables straggler cloning.
     pub speculation: Option<SpeculationConfig>,
@@ -96,8 +101,7 @@ pub struct BrokerConfig {
 impl Default for BrokerConfig {
     fn default() -> Self {
         BrokerConfig {
-            max_attempts: 4,
-            resubmit_penalty_s: 30.0,
+            retry: RetryPolicy::default(),
             circuit: CircuitConfig::default(),
             // opt-in: the discrete-event race is post-hoc, so a clone
             // re-runs the real computation — worth it for straggler-bound
@@ -161,6 +165,8 @@ struct BrokerCore {
     backends: Vec<Backend>,
     policy: Box<dyn DispatchPolicy>,
     cfg: BrokerConfig,
+    /// Root of the deterministic backoff jitter (see [`RetryPolicy`]).
+    seed: u64,
     stats: Mutex<EnvStats>,
     counters: Mutex<BrokerCounters>,
     /// Virtual durations of completed jobs (straggler quantile input).
@@ -310,6 +316,7 @@ fn is_infrastructure_error(e: &Error) -> bool {
         Error::NodeFailure { .. }
             | Error::WallTimeExceeded(_)
             | Error::EnvironmentError { .. }
+            | Error::Timeout { .. }
             | Error::GridScale(_)
             | Error::Io(_)
     )
@@ -331,6 +338,12 @@ struct JobState {
     phase: Phase,
     attempts_made: u32,
     failed_on: Vec<usize>,
+    /// Real-time start of the current attempt (attempt-timeout clock).
+    attempt_started: Instant,
+    /// Real-time start of the job (job-deadline clock).
+    job_started: Instant,
+    /// Accumulated virtual backoff applied to re-dispatch releases.
+    virtual_delay_s: f64,
 }
 
 /// The handle the broker returns: a small state machine that re-routes
@@ -341,10 +354,71 @@ struct BrokerJob {
     task: Arc<dyn Task>,
     ctx: Context,
     base_release: f64,
+    /// Submission ordinal within this broker (jitter determinism).
+    job_index: u64,
     state: Mutex<JobState>,
 }
 
 impl BrokerJob {
+    /// Account a failed attempt (infrastructure error or timeout), then
+    /// either re-dispatch with exponential backoff or fail terminally.
+    /// The caller has already taken the attempt's handle out of the phase;
+    /// on re-dispatch a fresh `Racing` phase is installed.
+    fn retry_or_fail(
+        &self,
+        st: &mut JobState,
+        backend: usize,
+        e: Error,
+        timed_out: bool,
+    ) -> Option<Result<(Context, JobReport)>> {
+        self.core.record_attempt(backend, None);
+        st.failed_on.push(backend);
+        let retry = &self.core.cfg.retry;
+        let deadline_hit =
+            st.job_started.elapsed().as_secs_f64() >= retry.job_deadline_s;
+        {
+            let mut s = self.core.stats.lock().unwrap();
+            s.failed_attempts += 1;
+            if timed_out {
+                s.timed_out_attempts += 1;
+            }
+            if deadline_hit || st.attempts_made >= retry.max_attempts {
+                s.failed_jobs += 1;
+                return Some(Err(e));
+            }
+            s.resubmissions += 1;
+        }
+        self.core.counters.lock().unwrap().reroutes += 1;
+        st.virtual_delay_s +=
+            retry.backoff_s(st.attempts_made, self.core.seed, self.job_index);
+        let (b, h) = self.core.dispatch(
+            &self.task,
+            &self.ctx,
+            self.base_release + st.virtual_delay_s,
+            &st.failed_on,
+        );
+        st.attempts_made += 1;
+        st.attempt_started = Instant::now();
+        st.phase = Phase::Racing {
+            backend: b,
+            handle: h,
+        };
+        None
+    }
+
+    /// Which real-time bound, if any, has this job tripped?
+    fn tripped_bound(&self, st: &JobState) -> Option<(&'static str, f64)> {
+        let retry = &self.core.cfg.retry;
+        if st.job_started.elapsed().as_secs_f64() >= retry.job_deadline_s {
+            Some(("job deadline", retry.job_deadline_s))
+        } else if st.attempt_started.elapsed().as_secs_f64() >= retry.attempt_timeout_s
+        {
+            Some(("attempt timeout", retry.attempt_timeout_s))
+        } else {
+            None
+        }
+    }
+
     fn poll(&self) -> Option<Result<(Context, JobReport)>> {
         let mut st = self.state.lock().unwrap();
         let phase = std::mem::replace(&mut st.phase, Phase::Finished);
@@ -355,8 +429,18 @@ impl BrokerJob {
             })),
             Phase::Racing { backend, handle } => match handle.try_wait() {
                 None => {
-                    st.phase = Phase::Racing { backend, handle };
-                    None
+                    let Some((what, after_s)) = self.tripped_bound(&st) else {
+                        st.phase = Phase::Racing { backend, handle };
+                        return None;
+                    };
+                    // the attempt hung: abandon its handle (dropped here)
+                    // and treat the timeout as an infrastructure failure
+                    let e = Error::Timeout {
+                        environment: self.core.name.clone(),
+                        what,
+                        after_s,
+                    };
+                    self.retry_or_fail(&mut st, backend, e, true)
                 }
                 Some(Ok((ctx, report))) => {
                     self.core.record_attempt(backend, Some(&report));
@@ -380,6 +464,7 @@ impl BrokerJob {
                             spec_release,
                             &[backend],
                         );
+                        st.attempt_started = Instant::now();
                         st.phase = Phase::Speculating {
                             best: Box::new((ctx, report)),
                             spec_backend: sb,
@@ -404,33 +489,7 @@ impl BrokerJob {
                         s.failed_jobs += 1;
                         return Some(Err(e));
                     }
-                    self.core.record_attempt(backend, None);
-                    st.failed_on.push(backend);
-                    {
-                        let mut s = self.core.stats.lock().unwrap();
-                        s.failed_attempts += 1;
-                        if st.attempts_made >= self.core.cfg.max_attempts {
-                            s.failed_jobs += 1;
-                            return Some(Err(e));
-                        }
-                        s.resubmissions += 1;
-                    }
-                    self.core.counters.lock().unwrap().reroutes += 1;
-                    let release = self.base_release
-                        + self.core.cfg.resubmit_penalty_s
-                            * f64::from(st.attempts_made);
-                    let (b, h) = self.core.dispatch(
-                        &self.task,
-                        &self.ctx,
-                        release,
-                        &st.failed_on,
-                    );
-                    st.attempts_made += 1;
-                    st.phase = Phase::Racing {
-                        backend: b,
-                        handle: h,
-                    };
-                    None
+                    self.retry_or_fail(&mut st, backend, e, false)
                 }
             },
             Phase::Speculating {
@@ -439,12 +498,21 @@ impl BrokerJob {
                 handle,
             } => match handle.try_wait() {
                 None => {
-                    st.phase = Phase::Speculating {
-                        best,
-                        spec_backend,
-                        handle,
-                    };
-                    None
+                    if self.tripped_bound(&st).is_none() {
+                        st.phase = Phase::Speculating {
+                            best,
+                            spec_backend,
+                            handle,
+                        };
+                        return None;
+                    }
+                    // a hung clone never endangers the completed original:
+                    // abandon it and surface the straggler's result
+                    self.core.record_attempt(spec_backend, None);
+                    self.core.stats.lock().unwrap().timed_out_attempts += 1;
+                    let (ctx, report) = *best;
+                    self.core.record_job_success(&report, self.base_release);
+                    Some(Ok((ctx, report)))
                 }
                 Some(Ok((spec_ctx, spec_report))) => {
                     self.core.record_attempt(spec_backend, Some(&spec_report));
@@ -516,6 +584,7 @@ pub struct BrokerBuilder {
     backends: Vec<(Arc<dyn Environment>, usize)>,
     policy: Box<dyn DispatchPolicy>,
     cfg: BrokerConfig,
+    seed: u64,
 }
 
 impl BrokerBuilder {
@@ -529,13 +598,26 @@ impl BrokerBuilder {
         self
     }
 
-    pub fn max_attempts(mut self, n: u32) -> Self {
-        self.cfg.max_attempts = n.max(1);
+    /// Replace the whole retry policy (attempts, timeouts, backoff).
+    pub fn retry(mut self, retry: RetryPolicy) -> Self {
+        self.cfg.retry = retry;
         self
     }
 
+    pub fn max_attempts(mut self, n: u32) -> Self {
+        self.cfg.retry.max_attempts = n.max(1);
+        self
+    }
+
+    /// Base of the exponential virtual backoff between re-routes.
     pub fn resubmit_penalty(mut self, seconds: f64) -> Self {
-        self.cfg.resubmit_penalty_s = seconds.max(0.0);
+        self.cfg.retry.backoff_base_s = seconds.max(0.0);
+        self
+    }
+
+    /// Root of the deterministic backoff jitter.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
         self
     }
 
@@ -575,6 +657,7 @@ impl BrokerBuilder {
                     .collect(),
                 policy: self.policy,
                 cfg: self.cfg,
+                seed: self.seed,
                 stats: Mutex::new(EnvStats::default()),
                 counters: Mutex::new(BrokerCounters::default()),
                 durations: Mutex::new(Vec::new()),
@@ -597,6 +680,7 @@ impl Broker {
             backends: Vec::new(),
             policy: Box::new(EwmaPolicy::new()),
             cfg: BrokerConfig::default(),
+            seed: 0,
         }
     }
 
@@ -611,8 +695,10 @@ impl Broker {
     /// * `ssh[:host]:n`, `pbs:n`, `slurm:n`, `sge:n`, `oar:n`,
     ///   `condor:n`, `egi[:vo]:n` — the simulated remote environments.
     /// * any entry may end in `~p` (e.g. `pbs:32~0.2`) to wrap it in a
-    ///   [`FlakyEnv`] that drops fraction `p` of submissions — the
-    ///   injected-failure backends used by failover demos and tests.
+    ///   [`FlakyEnv`] that drops fraction `p` of submissions, or in a full
+    ///   [`FaultPlan`] clause list (e.g. `pbs:32~drop=0.2;hang=0.01`) for
+    ///   the composed chaos decorator — see the [`fault`] module doc for
+    ///   the grammar.
     pub fn from_spec(
         spec: &str,
         pool: Arc<ThreadPool>,
@@ -628,7 +714,7 @@ impl Broker {
         pool: Arc<ThreadPool>,
         seed: u64,
     ) -> Result<BrokerBuilder> {
-        let mut builder = Broker::builder(format!("broker[{spec}]"));
+        let mut builder = Broker::builder(format!("broker[{spec}]")).seed(seed);
         let bad = |entry: &str, why: &str| Error::EnvironmentError {
             environment: "broker".into(),
             message: format!("bad --envs entry `{entry}`: {why}"),
@@ -639,13 +725,8 @@ impl Broker {
                 continue;
             }
             let seed_i = seed.wrapping_add(0x9e37 * (i as u64 + 1));
-            let (body, flaky) = match entry.split_once('~') {
-                Some((b, p)) => (
-                    b,
-                    Some(p.parse::<f64>().map_err(|_| {
-                        bad(entry, "failure rate after `~` must be a number")
-                    })?),
-                ),
+            let (body, fault_spec) = match entry.split_once('~') {
+                Some((b, f)) => (b, Some(f)),
                 None => (entry, None),
             };
             let parts: Vec<&str> = body.split(':').collect();
@@ -741,10 +822,17 @@ impl Broker {
                     ),
                     _ => return Err(bad(entry, "unknown environment kind")),
                 };
-            let env: Arc<dyn Environment> = match flaky {
-                Some(p) => {
-                    Arc::new(FlakyEnv::new(env, p, seed_i ^ 0xF1A7))
-                }
+            let env: Arc<dyn Environment> = match fault_spec {
+                // a bare number keeps the historical drops-only meaning;
+                // anything else is the full FaultPlan clause grammar
+                Some(f) => match f.parse::<f64>() {
+                    Ok(p) => Arc::new(FlakyEnv::new(env, p, seed_i ^ 0xF1A7)),
+                    Err(_) => {
+                        let plan = FaultPlan::parse(f)
+                            .map_err(|e| bad(entry, &e.to_string()))?;
+                        Arc::new(FaultyEnv::new(env, plan, seed_i ^ 0xF1A7))
+                    }
+                },
                 None => env,
             };
             builder = builder.backend(env, capacity);
@@ -811,7 +899,11 @@ impl Environment for Broker {
     }
 
     fn submit(&self, job: Job) -> JobHandle {
-        self.core.stats.lock().unwrap().submitted += 1;
+        let job_index = {
+            let mut s = self.core.stats.lock().unwrap();
+            s.submitted += 1;
+            s.submitted - 1
+        };
         let Job {
             task,
             context,
@@ -819,15 +911,20 @@ impl Environment for Broker {
         } = job;
         let (backend, handle) =
             self.core.dispatch(&task, &context, virtual_release, &[]);
+        let now = Instant::now();
         JobHandle::from_waiter(Box::new(BrokerJob {
             core: Arc::clone(&self.core),
             task,
             ctx: context,
             base_release: virtual_release,
+            job_index,
             state: Mutex::new(JobState {
                 phase: Phase::Racing { backend, handle },
                 attempts_made: 1,
                 failed_on: Vec::new(),
+                attempt_started: now,
+                job_started: now,
+                virtual_delay_s: 0.0,
             }),
         }))
     }
@@ -1076,6 +1173,112 @@ mod tests {
         assert!(Broker::from_spec("mars:4", Arc::clone(&pool), 1).is_err());
         assert!(Broker::from_spec("pbs:abc", Arc::clone(&pool), 1).is_err());
         assert!(Broker::from_spec("pbs:4~x", Arc::clone(&pool), 1).is_err());
+        assert!(
+            Broker::from_spec("pbs:4~warp=0.5", Arc::clone(&pool), 1).is_err(),
+            "unknown fault kind"
+        );
         assert!(Broker::from_spec("", pool, 1).is_err(), "no backends");
+    }
+
+    #[test]
+    fn from_spec_fault_plan_grammar_builds_chaos_backend() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let broker =
+            Broker::from_spec("local:2,local:2~drop=0.5;delay=0.1:30", pool, 42)
+                .unwrap();
+        let snaps = broker.backend_snapshots();
+        assert!(snaps[1].name.starts_with("chaos["), "{}", snaps[1].name);
+        let results = run_all(
+            &broker,
+            (0..20).map(|_| Job::new(task(0.0), Context::new())).collect(),
+        );
+        for r in results {
+            r.unwrap(); // every drop is rescued by the healthy backend
+        }
+        assert_eq!(broker.stats().completed, 20);
+    }
+
+    fn fast_retry(max_attempts: u32, deadline_s: f64) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts,
+            attempt_timeout_s: 0.05,
+            job_deadline_s: deadline_s,
+            backoff_base_s: 1.0,
+            backoff_max_s: 4.0,
+            jitter: 0.5,
+        }
+    }
+
+    #[test]
+    fn hung_backend_times_out_reroutes_and_completes() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let hung: Arc<dyn Environment> = Arc::new(FaultyEnv::new(
+            Arc::new(LocalEnvironment::with_pool(Arc::clone(&pool))),
+            FaultPlan::new().hangs(1.0),
+            1,
+        ));
+        let broker = Broker::builder("b")
+            .backend(hung, 2)
+            .backend(
+                Arc::new(LocalEnvironment::with_pool(Arc::clone(&pool))),
+                2,
+            )
+            .policy(Box::new(RoundRobin::new()))
+            .retry(fast_retry(4, 10.0))
+            .no_speculation()
+            .build()
+            .unwrap();
+        let t0 = Instant::now();
+        let results = run_all(
+            &broker,
+            (0..10).map(|_| Job::new(task(0.0), Context::new())).collect(),
+        );
+        for r in results {
+            r.unwrap(); // every hung attempt must be rescued elsewhere
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "waits must be bounded by the attempt timeout"
+        );
+        let s = broker.stats();
+        assert_eq!(s.completed, 10);
+        assert!(s.timed_out_attempts > 0, "{s:?}");
+        assert_eq!(
+            s.failed_attempts,
+            s.resubmissions + s.failed_jobs,
+            "timeouts must keep the attempt ledger balanced: {s:?}"
+        );
+        assert_eq!(s.in_flight(), 0);
+    }
+
+    #[test]
+    fn job_deadline_bounds_wait_on_fully_hung_fleet() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let hung: Arc<dyn Environment> = Arc::new(FaultyEnv::new(
+            Arc::new(LocalEnvironment::with_pool(Arc::clone(&pool))),
+            FaultPlan::new().hangs(1.0),
+            2,
+        ));
+        let broker = Broker::builder("b")
+            .backend(hung, 1)
+            // attempts would allow retrying forever; the deadline stops it
+            .retry(fast_retry(1000, 0.2))
+            .no_speculation()
+            .build()
+            .unwrap();
+        let t0 = Instant::now();
+        let err = broker
+            .submit(Job::new(task(0.0), Context::new()))
+            .wait()
+            .unwrap_err();
+        assert!(matches!(err, Error::Timeout { .. }), "{err}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "wait() must return promptly after the deadline"
+        );
+        let s = broker.stats();
+        assert_eq!(s.failed_jobs, 1);
+        assert!(s.timed_out_attempts >= 1);
+        assert_eq!(s.in_flight(), 0);
     }
 }

@@ -9,6 +9,71 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use crate::util::rng::splitmix64;
+
+/// Time-bounded retry semantics, enforced in the broker's waiter state
+/// machine: how many attempts a job gets, how long (in **real** seconds)
+/// the broker waits on any one attempt before abandoning it as hung, how
+/// long the whole job may take across attempts, and how re-dispatches
+/// back off in **virtual** time.
+///
+/// The two timelines matter: backends here are discrete-event simulations
+/// around real local compute, and a hung job never produces a virtual
+/// report — so the only clock that can bound it is the real one. Backoff,
+/// by contrast, delays the *simulated* resubmission, so it is virtual.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts per job, the first dispatch included.
+    pub max_attempts: u32,
+    /// Real seconds to wait on one attempt before abandoning it as hung
+    /// (health-penalised and re-routed like any infrastructure failure).
+    pub attempt_timeout_s: f64,
+    /// Real seconds the whole job may take across all attempts; past it
+    /// the job fails terminally with [`crate::error::Error::Timeout`].
+    pub job_deadline_s: f64,
+    /// Base of the exponential virtual backoff: retry `k` is released
+    /// `backoff_base_s · 2^(k-1)` virtual seconds after the failure.
+    pub backoff_base_s: f64,
+    /// Ceiling on any single backoff step.
+    pub backoff_max_s: f64,
+    /// Jitter fraction in `[0, 1]`: each backoff step is scaled by a
+    /// deterministic per-`(job, attempt)` factor in `[1-j, 1+j)`, so a
+    /// wave of same-instant failures does not re-dispatch in lockstep.
+    pub jitter: f64,
+}
+
+impl Default for RetryPolicy {
+    /// 4 attempts, 600 s per attempt, 3600 s per job, backoff
+    /// 30 s → 480 s with ±50 % jitter.
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            attempt_timeout_s: 600.0,
+            job_deadline_s: 3600.0,
+            backoff_base_s: 30.0,
+            backoff_max_s: 480.0,
+            jitter: 0.5,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Virtual seconds to back off before re-dispatching after failed
+    /// attempt number `attempt` (1-based). The jitter is a pure function
+    /// of `(seed, job_index, attempt)`, so a resumed or replayed run
+    /// reproduces the exact same schedule.
+    pub fn backoff_s(&self, attempt: u32, seed: u64, job_index: u64) -> f64 {
+        let exp = 2f64.powi(attempt.saturating_sub(1).min(32) as i32);
+        let base = (self.backoff_base_s * exp).min(self.backoff_max_s.max(self.backoff_base_s));
+        let mut h = seed
+            ^ job_index.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ u64::from(attempt).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        let u = (splitmix64(&mut h) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let j = self.jitter.clamp(0.0, 1.0);
+        base * (1.0 - j + 2.0 * j * u)
+    }
+}
+
 /// A backend as the policy sees it at dispatch time.
 #[derive(Debug, Clone)]
 pub struct BackendView {
@@ -224,6 +289,27 @@ mod tests {
         // nothing completed anywhere: behave like least-loaded
         let views = vec![view(0, 3, 0.0, 0), view(1, 1, 0.0, 0)];
         assert_eq!(p.choose(&views), 1);
+    }
+
+    #[test]
+    fn backoff_is_exponential_capped_and_deterministically_jittered() {
+        let p = RetryPolicy {
+            jitter: 0.0,
+            ..RetryPolicy::default()
+        };
+        assert_eq!(p.backoff_s(1, 0, 0), 30.0);
+        assert_eq!(p.backoff_s(2, 0, 0), 60.0);
+        assert_eq!(p.backoff_s(3, 0, 0), 120.0);
+        assert_eq!(p.backoff_s(10, 0, 0), 480.0, "capped at backoff_max_s");
+
+        let j = RetryPolicy::default(); // jitter 0.5
+        let a = j.backoff_s(2, 42, 7);
+        assert_eq!(a, j.backoff_s(2, 42, 7), "same (seed, job, attempt) → same delay");
+        assert_ne!(a, j.backoff_s(2, 42, 8), "different job → different jitter");
+        assert!(
+            (30.0..90.0).contains(&a),
+            "step 2 with ±50% jitter stays in [30, 90): {a}"
+        );
     }
 
     #[test]

@@ -6,6 +6,7 @@
 
 use std::sync::Arc;
 
+use crate::broker::RetryPolicy;
 use crate::cli::Args;
 use crate::core::{val_f64, val_u32, Context, Val};
 use crate::dsl::hook::{TableFormat, ToStringHook};
@@ -31,20 +32,71 @@ fn num<T>(r: std::result::Result<T, String>) -> Result<T> {
     r.map_err(Error::Config)
 }
 
+/// `--timeout` (real seconds per job, also capping the per-attempt
+/// timeout), `--max-retries` (re-dispatches after the first attempt) and
+/// `--backoff` (base virtual seconds) over [`RetryPolicy::default`].
+/// `None` when no override flag is present.
+fn retry_overrides(args: &Args) -> Result<Option<RetryPolicy>> {
+    if args.get("timeout").is_none()
+        && args.get("max-retries").is_none()
+        && args.get("backoff").is_none()
+    {
+        return Ok(None);
+    }
+    let mut r = RetryPolicy::default();
+    if args.get("timeout").is_some() {
+        let t = num(args.f64("timeout", r.job_deadline_s))?;
+        if !(t.is_finite() && t > 0.0) {
+            return Err(Error::Config(format!(
+                "--timeout expects positive real seconds, got `{t}`"
+            )));
+        }
+        r.job_deadline_s = t;
+        r.attempt_timeout_s = r.attempt_timeout_s.min(t);
+    }
+    if args.get("max-retries").is_some() {
+        let n = num(args.usize("max-retries", 3))?;
+        r.max_attempts = n as u32 + 1;
+    }
+    if args.get("backoff").is_some() {
+        let b = num(args.f64("backoff", r.backoff_base_s))?;
+        if !(b.is_finite() && b >= 0.0) {
+            return Err(Error::Config(format!(
+                "--backoff expects non-negative virtual seconds, got `{b}`"
+            )));
+        }
+        r.backoff_base_s = b;
+        r.backoff_max_s = r.backoff_max_s.max(b);
+    }
+    Ok(Some(r))
+}
+
 /// `--envs SPEC` (a brokered fleet, with `--policy` and `--speculate`)
-/// wins over the single-environment `--env NAME`.
-fn env_spec(args: &Args, default_env: &str, nodes: usize) -> EnvSpec {
+/// wins over the single-environment `--env NAME`. Retry/deadline flags
+/// are enforced in the broker's waiter state machine, so their presence
+/// promotes a single environment to a one-backend fleet.
+fn env_spec(args: &Args, default_env: &str, nodes: usize) -> Result<EnvSpec> {
+    let retry = retry_overrides(args)?;
     if let Some(spec) = args.get("envs") {
-        EnvSpec::Fleet {
+        Ok(EnvSpec::Fleet {
             spec: spec.to_string(),
             policy: args.get_or("policy", "ewma").to_string(),
             speculate: args.flag("speculate"),
-        }
+            retry,
+        })
+    } else if retry.is_some() {
+        let name = args.get_or("env", default_env);
+        Ok(EnvSpec::Fleet {
+            spec: format!("{name}:{nodes}"),
+            policy: args.get_or("policy", "ewma").to_string(),
+            speculate: args.flag("speculate"),
+            retry,
+        })
     } else {
-        EnvSpec::Single {
+        Ok(EnvSpec::Single {
             name: args.get_or("env", default_env).to_string(),
             nodes,
-        }
+        })
     }
 }
 
@@ -90,7 +142,7 @@ pub fn run(args: &Args) -> Result<Experiment> {
         hooks: Vec::new(),
     };
     with_common(
-        Experiment::new(Box::new(method)).env(env_spec(args, "local", 1)),
+        Experiment::new(Box::new(method)).env(env_spec(args, "local", 1)?),
         args,
     )
 }
@@ -189,9 +241,11 @@ pub fn explore(args: &Args) -> Result<Experiment> {
         out_path,
         format,
         meta,
+        degraded_ok: args.flag("degraded-ok"),
+        retry_degraded: args.flag("retry-degraded"),
     };
     with_common(
-        Experiment::new(Box::new(method)).env(env_spec(args, "local", nodes)),
+        Experiment::new(Box::new(method)).env(env_spec(args, "local", nodes)?),
         args,
     )
 }
@@ -247,7 +301,7 @@ pub fn replicate(args: &Args) -> Result<Experiment> {
         ]))],
     };
     with_common(
-        Experiment::new(Box::new(method)).env(env_spec(args, "local", nodes)),
+        Experiment::new(Box::new(method)).env(env_spec(args, "local", nodes)?),
         args,
     )
 }
@@ -300,7 +354,7 @@ pub fn calibrate(args: &Args) -> Result<Experiment> {
         })),
     };
     with_common(
-        Experiment::new(Box::new(method)).env(env_spec(args, "local", nodes)),
+        Experiment::new(Box::new(method)).env(env_spec(args, "local", nodes)?),
         args,
     )
 }
@@ -346,7 +400,7 @@ pub fn island(args: &Args) -> Result<Experiment> {
         })),
     };
     with_common(
-        Experiment::new(Box::new(method)).env(env_spec(args, "egi", nodes)),
+        Experiment::new(Box::new(method)).env(env_spec(args, "egi", nodes)?),
         args,
     )
 }
@@ -380,5 +434,30 @@ mod tests {
         assert!(replicate(&parse("replicate")).is_ok());
         assert!(calibrate(&parse("calibrate")).is_ok());
         assert!(island(&parse("island")).is_ok());
+    }
+
+    #[test]
+    fn retry_flags_parse_and_reject_garbage() {
+        assert!(retry_overrides(&parse("explore")).unwrap().is_none());
+        let r = retry_overrides(&parse(
+            "explore --timeout 120 --max-retries 2 --backoff 5",
+        ))
+        .unwrap()
+        .expect("overrides present");
+        assert_eq!(r.job_deadline_s, 120.0);
+        assert_eq!(r.attempt_timeout_s, 120.0, "attempt timeout capped by deadline");
+        assert_eq!(r.max_attempts, 3, "N retries = N+1 attempts");
+        assert_eq!(r.backoff_base_s, 5.0);
+
+        for (cmd, needle) in [
+            ("explore --timeout -5 --n 4", "--timeout expects"),
+            ("explore --backoff -1 --n 4", "--backoff expects"),
+            ("explore --max-retries x --n 4", "expects an integer"),
+        ] {
+            let err = explore(&parse(cmd)).unwrap_err().to_string();
+            assert!(err.contains(needle), "`{cmd}` → {err}");
+        }
+        // retry flags promote a single env to a one-backend brokered fleet
+        assert!(explore(&parse("explore --n 4 --timeout 60")).is_ok());
     }
 }

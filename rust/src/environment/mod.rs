@@ -186,6 +186,15 @@ pub struct EnvStats {
     pub resubmissions: u64,
     /// Jobs that terminally failed (error surfaced to the caller).
     pub failed_jobs: u64,
+    /// Attempts abandoned after a broker-enforced real-time bound expired
+    /// (hung backend). Each is also counted in `failed_attempts`.
+    pub timed_out_attempts: u64,
+    /// Faults injected by a chaos decorator ([`crate::broker::fault`])
+    /// wrapped around this environment — drops, hangs, stragglers and
+    /// crash-window failures. Purely diagnostic: the injected drops and
+    /// crashes are already folded into the failure counters above so the
+    /// ledger invariants still reconcile.
+    pub injected_faults: u64,
     /// Latest virtual completion observed (the virtual makespan).
     pub virtual_makespan: f64,
     /// Total virtual core-seconds consumed.

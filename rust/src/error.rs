@@ -42,6 +42,15 @@ pub enum Error {
     /// A job failed on a remote node (simulated infrastructure fault).
     NodeFailure { node: String, reason: String },
 
+    /// A broker-enforced **real-time** bound expired: the attempt (or the
+    /// whole job) was abandoned as hung. `what` is `"attempt timeout"` or
+    /// `"job deadline"`.
+    Timeout {
+        environment: String,
+        what: &'static str,
+        after_s: f64,
+    },
+
     /// Packaging / re-execution failure (CARE/CDE substrate).
     Packaging(String),
 
@@ -95,6 +104,14 @@ impl fmt::Display for Error {
             Error::NodeFailure { node, reason } => {
                 write!(f, "job failed on node `{node}`: {reason}")
             }
+            Error::Timeout {
+                environment,
+                what,
+                after_s,
+            } => write!(
+                f,
+                "{what} of {after_s:.0} s exceeded on `{environment}`: job abandoned as hung"
+            ),
             Error::Packaging(msg) => write!(f, "packaging error: {msg}"),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::Manifest(msg) => write!(f, "artifact manifest error: {msg}"),

@@ -19,13 +19,19 @@
 //!   matrix until the row cursor reaches them, so the output file is a
 //!   pure function of the design and is byte-identical between an
 //!   uninterrupted run and a kill + `--resume` (resume rewrites the file
-//!   from the journaled prefix, then continues).
+//!   from the journaled prefix, then continues);
+//! * optionally **degrades instead of aborting** ([`Sweep::degraded_ok`],
+//!   the CLI's `--degraded-ok`): a chunk whose retry budget is exhausted
+//!   is recorded as a `degraded_rows` journal record, its rows emit
+//!   NaN/null objectives, and the sweep carries on to a `degraded` (not
+//!   failed) outcome. On resume, degraded rows stay NaN unless
+//!   [`Sweep::retry_degraded`] (`--retry-degraded`) re-opens them.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::broker::journal::{self, Journal, SampleBlock};
+use crate::broker::journal::{self, Journal, SweepEvent};
 use crate::core::Context;
 use crate::dsl::hook::RowWriter;
 use crate::dsl::task::ClosureTask;
@@ -55,6 +61,12 @@ pub struct SweepResult {
     pub evaluated: usize,
     /// Rows restored from journal checkpoints instead of re-evaluated.
     pub resumed: usize,
+    /// Rows restored from `degraded_rows` records (NaN objectives, not
+    /// re-evaluated) — a subset of the rows in `degraded`.
+    pub resumed_degraded: usize,
+    /// Every row (ascending) whose objectives are NaN because its retry
+    /// budget was exhausted, in this run or a restored one.
+    pub degraded: Vec<usize>,
     /// Latest virtual completion across checkpointed and fresh blocks.
     pub virtual_makespan: f64,
 }
@@ -62,6 +74,16 @@ pub struct SweepResult {
 impl SweepResult {
     pub fn rows(&self) -> usize {
         self.design.len()
+    }
+
+    /// `"complete"` when every row has real objectives, `"degraded"` when
+    /// some rows exhausted their retry budget.
+    pub fn outcome(&self) -> &'static str {
+        if self.degraded.is_empty() {
+            "complete"
+        } else {
+            "degraded"
+        }
     }
 
     pub fn objectives_row(&self, i: usize) -> &[f64] {
@@ -80,6 +102,8 @@ pub struct Sweep {
     writer: Option<Arc<RowWriter>>,
     max_in_flight: usize,
     meta: Vec<(String, Json)>,
+    degraded_ok: bool,
+    retry_degraded: bool,
 }
 
 impl Sweep {
@@ -97,6 +121,8 @@ impl Sweep {
             writer: None,
             max_in_flight: 4096,
             meta: Vec::new(),
+            degraded_ok: false,
+            retry_degraded: false,
         }
     }
 
@@ -134,21 +160,39 @@ impl Sweep {
         self
     }
 
+    /// Degrade instead of aborting (`--degraded-ok`): a chunk whose retry
+    /// budget is exhausted journals its rows as `degraded_rows`, emits
+    /// NaN objectives for them and the sweep keeps going.
+    pub fn degraded_ok(mut self, yes: bool) -> Self {
+        self.degraded_ok = yes;
+        self
+    }
+
+    /// On resume, re-evaluate restored `degraded_rows` instead of keeping
+    /// their NaN placeholders (`--retry-degraded`).
+    pub fn retry_degraded(mut self, yes: bool) -> Self {
+        self.retry_degraded = yes;
+        self
+    }
+
     /// Run the whole design on `env`.
     pub fn run(&self, env: &dyn Environment, seed: u64) -> Result<SweepResult> {
         self.run_resumable(env, seed, None)
     }
 
-    /// Run, optionally skipping rows already evaluated by a previous
-    /// (killed) run whose journal yielded `resume` blocks (see
-    /// [`journal::sample_blocks`]). The sweep's configuration (sampling,
-    /// seed, evaluator) must match the original run — the journal stores
-    /// objectives, not the design.
+    /// Run, optionally skipping rows already settled by a previous
+    /// (killed) run whose journal yielded `resume` events (see
+    /// [`journal::sweep_events`]): `sample_block` rows restore their
+    /// objectives, `degraded_rows` restore NaN placeholders (kept unless
+    /// [`Sweep::retry_degraded`]), applied in write order so a later
+    /// successful retry supersedes an earlier degradation. The sweep's
+    /// configuration (sampling, seed, evaluator) must match the original
+    /// run — the journal stores objectives, not the design.
     pub fn run_resumable(
         &self,
         env: &dyn Environment,
         seed: u64,
-        resume: Option<&[SampleBlock]>,
+        resume: Option<&[SweepEvent]>,
     ) -> Result<SweepResult> {
         let n_obj = self.evaluator.objectives();
         if n_obj != self.objective_names.len() {
@@ -177,31 +221,56 @@ impl Sweep {
         let dim = design.dim();
         let mut objectives = vec![0.0f64; n * n_obj];
         let mut done = vec![false; n];
+        let mut degraded = vec![false; n];
         let mut clock = 0.0f64;
-        let mut resumed = 0usize;
 
-        // restore journaled blocks (any order, any historical chunking)
-        if let Some(blocks) = resume {
-            for b in blocks {
-                for (k, row_objs) in b.objectives.iter().enumerate() {
-                    let r = b.first_row + k;
-                    if r >= n || row_objs.len() != n_obj {
-                        return Err(Error::InvalidWorkflow(format!(
-                            "journal block (row {r}, {} objectives) does not fit \
-                             this design ({n} rows, {n_obj} objectives) — was the \
-                             journal written by a different sweep?",
-                            row_objs.len()
-                        )));
+        // restore journaled events in write order (any historical
+        // chunking): last write wins, so a block that retried a formerly
+        // degraded row clears its NaN placeholder
+        if let Some(events) = resume {
+            for ev in events {
+                match ev {
+                    SweepEvent::Block(b) => {
+                        for (k, row_objs) in b.objectives.iter().enumerate() {
+                            let r = b.first_row + k;
+                            if r >= n || row_objs.len() != n_obj {
+                                return Err(Error::InvalidWorkflow(format!(
+                                    "journal block (row {r}, {} objectives) does not \
+                                     fit this design ({n} rows, {n_obj} objectives) — \
+                                     was the journal written by a different sweep?",
+                                    row_objs.len()
+                                )));
+                            }
+                            objectives[r * n_obj..(r + 1) * n_obj]
+                                .copy_from_slice(row_objs);
+                            done[r] = true;
+                            degraded[r] = false;
+                        }
+                        clock = clock.max(b.clock);
                     }
-                    objectives[r * n_obj..(r + 1) * n_obj].copy_from_slice(row_objs);
-                    if !done[r] {
-                        done[r] = true;
-                        resumed += 1;
+                    SweepEvent::Degraded(d) => {
+                        if self.retry_degraded {
+                            continue; // re-open the rows for evaluation
+                        }
+                        for &r in &d.rows {
+                            if r >= n {
+                                return Err(Error::InvalidWorkflow(format!(
+                                    "journal degraded row {r} does not fit this \
+                                     design ({n} rows) — was the journal written by \
+                                     a different sweep?"
+                                )));
+                            }
+                            objectives[r * n_obj..(r + 1) * n_obj].fill(f64::NAN);
+                            done[r] = true;
+                            degraded[r] = true;
+                        }
+                        clock = clock.max(d.clock);
                     }
                 }
-                clock = clock.max(b.clock);
             }
         }
+        let resumed_degraded = degraded.iter().filter(|&&d| d).count();
+        let resumed = done.iter().filter(|&&d| d).count() - resumed_degraded;
 
         if let Some(j) = &self.journal {
             let mut fields = vec![
@@ -213,6 +282,7 @@ impl Sweep {
                 ("n", Json::Num(n as f64)),
                 ("chunk", Json::Num(self.chunk as f64)),
                 ("resumed_rows", Json::Num(resumed as f64)),
+                ("resumed_degraded", Json::Num(resumed_degraded as f64)),
             ];
             fields.extend(self.meta.iter().map(|(k, v)| (k.as_str(), v.clone())));
             j.append(&journal::run_start(
@@ -291,7 +361,43 @@ impl Sweep {
                         idx += 1;
                         continue;
                     }
-                    Some(Err(e)) => return Err(e),
+                    Some(Err(e)) => {
+                        if !self.degraded_ok {
+                            return Err(e);
+                        }
+                        // graceful degradation: the chunk's retry budget is
+                        // spent — journal the exact failed row set, emit NaN
+                        // placeholders and carry on
+                        progressed = true;
+                        let (lo, hi, _slot, _) = in_flight.swap_remove(idx);
+                        let mut failed_rows = Vec::new();
+                        for r in lo..hi {
+                            if !done[r] {
+                                objectives[r * n_obj..(r + 1) * n_obj]
+                                    .fill(f64::NAN);
+                                done[r] = true;
+                                degraded[r] = true;
+                                failed_rows.push(r);
+                            }
+                        }
+                        if let Some(j) = &self.journal {
+                            if !failed_rows.is_empty() {
+                                j.append(&journal::degraded_rows_record(
+                                    &failed_rows,
+                                    clock,
+                                    &e.to_string(),
+                                ))?;
+                            }
+                        }
+                        self.drain_ready(
+                            &design,
+                            &objectives,
+                            &done,
+                            &mut cursor,
+                            n_obj,
+                            &mut row_buf,
+                        )?;
+                    }
                     Some(Ok((_ctx, report))) => {
                         progressed = true;
                         let (lo, hi, slot, _) = in_flight.swap_remove(idx);
@@ -300,21 +406,39 @@ impl Sweep {
                                 "explore chunk produced no results".into(),
                             )
                         })?;
-                        objectives[lo * n_obj..hi * n_obj].copy_from_slice(&objs);
-                        for d in &mut done[lo..hi] {
-                            if !*d {
-                                *d = true;
+                        // restored-degraded rows keep their NaN placeholder
+                        // (the writer may have streamed it already); the
+                        // journal checkpoints only the rows we actually keep
+                        for (k, r) in (lo..hi).enumerate() {
+                            if degraded[r] {
+                                continue;
+                            }
+                            objectives[r * n_obj..(r + 1) * n_obj]
+                                .copy_from_slice(&objs[k * n_obj..(k + 1) * n_obj]);
+                            if !done[r] {
+                                done[r] = true;
                                 evaluated += 1;
                             }
                         }
                         clock = clock.max(report.virtual_end);
                         if let Some(j) = &self.journal {
-                            j.append(&journal::sample_block_record(
-                                lo,
-                                n_obj,
-                                &objs,
-                                report.virtual_end,
-                            ))?;
+                            // one record per contiguous non-degraded run —
+                            // a single lo..hi record in the common case
+                            let mut start = lo;
+                            for r in lo..=hi {
+                                if r == hi || degraded[r] {
+                                    if r > start {
+                                        j.append(&journal::sample_block_record(
+                                            start,
+                                            n_obj,
+                                            &objs[(start - lo) * n_obj
+                                                ..(r - lo) * n_obj],
+                                            report.virtual_end,
+                                        ))?;
+                                    }
+                                    start = r + 1;
+                                }
+                            }
                         }
                         self.drain_ready(
                             &design,
@@ -340,11 +464,18 @@ impl Sweep {
             j.append(&journal::env_stats_record(env.name(), &env.stats()))?;
             j.append(&journal::run_end(evaluated as u64, clock))?;
         }
+        let degraded_rows: Vec<usize> = degraded
+            .iter()
+            .enumerate()
+            .filter_map(|(r, &d)| d.then_some(r))
+            .collect();
         Ok(SweepResult {
             design,
             objectives,
             evaluated,
             resumed,
+            resumed_degraded,
+            degraded: degraded_rows,
             virtual_makespan: clock,
         })
     }
@@ -385,6 +516,8 @@ impl Sweep {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::broker::fault::{FaultPlan, FaultyEnv};
+    use crate::broker::journal::{DegradedRows, SampleBlock};
     use crate::core::val_f64;
     use crate::environment::local::LocalEnvironment;
     use crate::evolution::evaluator::{CountingEvaluator, Zdt1Evaluator};
@@ -450,19 +583,21 @@ mod tests {
         .unwrap();
 
         // pretend the first two blocks were journaled before a kill
-        let blocks: Vec<SampleBlock> = (0..2)
-            .map(|k| SampleBlock {
-                first_row: k * 10,
-                objectives: (k * 10..(k + 1) * 10)
-                    .map(|r| full.objectives_row(r).to_vec())
-                    .collect(),
-                clock: 50.0,
+        let events: Vec<SweepEvent> = (0..2)
+            .map(|k| {
+                SweepEvent::Block(SampleBlock {
+                    first_row: k * 10,
+                    objectives: (k * 10..(k + 1) * 10)
+                        .map(|r| full.objectives_row(r).to_vec())
+                        .collect(),
+                    clock: 50.0,
+                })
             })
             .collect();
         let counting = Arc::new(CountingEvaluator::new(Zdt1Evaluator { dim: 3 }));
         let resumed = Sweep::new(lhs3(30), Arc::clone(&counting) as _, &["f1", "f2"])
             .chunk(10)
-            .run_resumable(&env, 5, Some(&blocks))
+            .run_resumable(&env, 5, Some(&events))
             .unwrap();
         assert_eq!(resumed.resumed, 20);
         assert_eq!(resumed.evaluated, 10);
@@ -483,18 +618,18 @@ mod tests {
         .run(&env, 9)
         .unwrap();
         // one journaled block that straddles the new grid
-        let blocks = [SampleBlock {
+        let events = [SweepEvent::Block(SampleBlock {
             first_row: 3,
             objectives: (3..12).map(|r| full.objectives_row(r).to_vec()).collect(),
             clock: 1.0,
-        }];
+        })];
         let resumed = Sweep::new(
             lhs3(25),
             Arc::new(Zdt1Evaluator { dim: 3 }),
             &["f1", "f2"],
         )
         .chunk(4)
-        .run_resumable(&env, 9, Some(&blocks))
+        .run_resumable(&env, 9, Some(&events))
         .unwrap();
         assert_eq!(resumed.objectives, full.objectives);
         assert_eq!(resumed.resumed, 9);
@@ -508,18 +643,121 @@ mod tests {
             .run(&env, 1)
             .is_err());
 
-        let blocks = [SampleBlock {
+        let events = [SweepEvent::Block(SampleBlock {
             first_row: 90,
             objectives: vec![vec![1.0, 2.0]; 20],
             clock: 0.0,
-        }];
+        })];
         let err = Sweep::new(lhs3(10), Arc::new(Zdt1Evaluator { dim: 3 }), &["f1", "f2"])
-            .run_resumable(&env, 1, Some(&blocks))
+            .run_resumable(&env, 1, Some(&events))
             .unwrap_err();
         assert!(
             err.to_string().contains("does not fit"),
             "unexpected error: {err}"
         );
+    }
+
+    #[test]
+    fn degraded_ok_turns_exhausted_chunks_into_nan_rows() {
+        // crash the second submission (rows 10..20) terminally
+        let plan = FaultPlan::new().crash_window(1, 1);
+        let make_env =
+            || FaultyEnv::new(Arc::new(LocalEnvironment::new(2)), plan.clone(), 0xC0);
+
+        // without the flag the failure aborts the sweep
+        let err = Sweep::new(lhs3(30), Arc::new(Zdt1Evaluator { dim: 3 }), &["f1", "f2"])
+            .chunk(10)
+            .run(&make_env(), 5)
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("crash window"),
+            "unexpected error: {err}"
+        );
+
+        let result = Sweep::new(lhs3(30), Arc::new(Zdt1Evaluator { dim: 3 }), &["f1", "f2"])
+            .chunk(10)
+            .degraded_ok(true)
+            .run(&make_env(), 5)
+            .unwrap();
+        assert_eq!(result.outcome(), "degraded");
+        assert_eq!(result.degraded, (10..20).collect::<Vec<_>>());
+        assert_eq!(result.evaluated, 20);
+        for r in 0..30 {
+            let nan = result.objectives_row(r).iter().all(|v| v.is_nan());
+            assert_eq!(nan, (10..20).contains(&r), "row {r}");
+        }
+    }
+
+    #[test]
+    fn resume_keeps_degraded_rows_unless_retry_requested() {
+        let env = LocalEnvironment::new(2);
+        let full = Sweep::new(lhs3(30), Arc::new(Zdt1Evaluator { dim: 3 }), &["f1", "f2"])
+            .chunk(10)
+            .run(&env, 5)
+            .unwrap();
+        let events = vec![
+            SweepEvent::Block(SampleBlock {
+                first_row: 0,
+                objectives: (0..10).map(|r| full.objectives_row(r).to_vec()).collect(),
+                clock: 1.0,
+            }),
+            SweepEvent::Degraded(DegradedRows {
+                rows: (10..20).collect(),
+                clock: 2.0,
+            }),
+        ];
+
+        let counting = Arc::new(CountingEvaluator::new(Zdt1Evaluator { dim: 3 }));
+        let resumed = Sweep::new(lhs3(30), Arc::clone(&counting) as _, &["f1", "f2"])
+            .chunk(10)
+            .run_resumable(&env, 5, Some(&events))
+            .unwrap();
+        assert_eq!(resumed.resumed, 10);
+        assert_eq!(resumed.resumed_degraded, 10);
+        assert_eq!(resumed.evaluated, 10);
+        assert_eq!(counting.count(), 10, "degraded rows must not re-evaluate");
+        assert_eq!(resumed.outcome(), "degraded");
+        assert!(resumed.objectives_row(12).iter().all(|v| v.is_nan()));
+
+        // --retry-degraded re-opens them on a healthy environment
+        let counting = Arc::new(CountingEvaluator::new(Zdt1Evaluator { dim: 3 }));
+        let retried = Sweep::new(lhs3(30), Arc::clone(&counting) as _, &["f1", "f2"])
+            .chunk(10)
+            .retry_degraded(true)
+            .run_resumable(&env, 5, Some(&events))
+            .unwrap();
+        assert_eq!(counting.count(), 20);
+        assert_eq!(retried.outcome(), "complete");
+        assert_eq!(retried.objectives, full.objectives);
+    }
+
+    #[test]
+    fn later_block_supersedes_earlier_degradation() {
+        let env = LocalEnvironment::new(2);
+        let full = Sweep::new(lhs3(30), Arc::new(Zdt1Evaluator { dim: 3 }), &["f1", "f2"])
+            .chunk(10)
+            .run(&env, 5)
+            .unwrap();
+        // a retry after a degradation journals a fresh block: last write wins
+        let events = vec![
+            SweepEvent::Degraded(DegradedRows {
+                rows: vec![0, 1, 2],
+                clock: 1.0,
+            }),
+            SweepEvent::Block(SampleBlock {
+                first_row: 0,
+                objectives: (0..10).map(|r| full.objectives_row(r).to_vec()).collect(),
+                clock: 2.0,
+            }),
+        ];
+        let resumed = Sweep::new(lhs3(30), Arc::new(Zdt1Evaluator { dim: 3 }), &["f1", "f2"])
+            .chunk(10)
+            .run_resumable(&env, 5, Some(&events))
+            .unwrap();
+        assert_eq!(resumed.resumed, 10);
+        assert_eq!(resumed.resumed_degraded, 0);
+        assert_eq!(resumed.outcome(), "complete");
+        assert_eq!(resumed.objectives, full.objectives);
     }
 
     #[test]

@@ -45,8 +45,8 @@ pub use error::{Error, Result};
 /// Common imports for examples and downstream users.
 pub mod prelude {
     pub use crate::broker::{
-        Broker, DispatchPolicy, EwmaPolicy, FlakyEnv, Journal, LeastInFlight,
-        RoundRobin,
+        Broker, DispatchPolicy, EwmaPolicy, FaultPlan, FaultyEnv, FlakyEnv,
+        Journal, LeastInFlight, RetryPolicy, RoundRobin,
     };
     pub use crate::core::{
         val_f64, val_i64, val_str, val_u32, Context, Val, VarSpec, VarType,

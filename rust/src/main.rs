@@ -48,13 +48,19 @@ fn main() {
                 "usage: molers <run|explore|replicate|calibrate|island|render|envs> [options]\n\
                  common options: --seed N --env local|ssh|pbs|slurm|sge|oar|condor|egi\n\
                  \x20          --envs local:8,pbs:32~0.2,egi:biomed:2000 (brokered fleet;\n\
-                 \x20          `~p` injects failures) --policy ewma|least|roundrobin\n\
+                 \x20          `~p` drops submissions; `~drop=0.2;hang=0.01;delay=0.1:30;\n\
+                 \x20          crash=10+5` composes a seeded fault plan) \n\
+                 \x20          --policy ewma|least|roundrobin\n\
                  \x20          --speculate (clone stragglers past the p95, first finish wins)\n\
+                 \x20          --timeout S (real-time job deadline) --max-retries N\n\
+                 \x20          --backoff S (virtual exponential backoff base)\n\
                  run:       --population 125 --diffusion 50 --evaporation 50\n\
                  explore:   --sampling lhs|sobol|uniform|factorial --n 200000 --chunk 256\n\
                  \x20          --lo 0 --hi 99 (--step 24.75 for factorial) --replications 1\n\
                  \x20          --out explore.csv --format csv|jsonl\n\
                  \x20          --journal sweep.jsonl (checkpoint) | --resume sweep.jsonl\n\
+                 \x20          --degraded-ok (NaN-fill rows whose retry budget is spent)\n\
+                 \x20          --retry-degraded (re-evaluate degraded rows on --resume)\n\
                  replicate: --replications 5\n\
                  calibrate: --mu 10 --lambda 10 --generations 100 --replications 5 \
                  --chunk 1\n\
@@ -102,8 +108,14 @@ fn print_broker_report(b: &Broker) {
 fn print_env_stats(report: &ExperimentReport) {
     let s = &report.env_stats;
     println!(
-        "env: submitted={} completed={} resubmissions={} failed-jobs={}",
-        s.submitted, s.completed, s.resubmissions, s.failed_jobs
+        "env: submitted={} completed={} resubmissions={} failed-jobs={} \
+         timeouts={} injected-faults={}",
+        s.submitted,
+        s.completed,
+        s.resubmissions,
+        s.failed_jobs,
+        s.timed_out_attempts,
+        s.injected_faults
     );
     if let Some(b) = &report.broker {
         print_broker_report(b);
@@ -148,8 +160,9 @@ fn cmd_explore(args: &Args) -> CmdResult {
     let report = front::explore(args)?.run()?;
     let o = &report.outcome;
     println!(
-        "\nrows={} evaluated={} resumed={} wall={:?}\nvirtual makespan = {:.0} s \
-         -> {:.0} evaluations/virtual-hour",
+        "\noutcome={} rows={} evaluated={} resumed={} wall={:?}\n\
+         virtual makespan = {:.0} s -> {:.0} evaluations/virtual-hour",
+        o.outcome(),
         o.rows,
         o.evaluated,
         o.resumed,
@@ -157,6 +170,14 @@ fn cmd_explore(args: &Args) -> CmdResult {
         o.virtual_makespan,
         throughput_per_hour(o.evaluated as u64, o.virtual_makespan),
     );
+    if !o.degraded.is_empty() {
+        println!(
+            "degraded: {} rows exhausted their retry budget (NaN objectives; \
+             journaled as degraded_rows — rerun with --resume --retry-degraded \
+             to re-evaluate them)",
+            o.degraded.len()
+        );
+    }
     print_env_stats(&report);
     if let Some(path) = &o.result_path {
         println!("results: {path}");

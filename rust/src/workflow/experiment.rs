@@ -27,7 +27,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::broker::{journal, policy, Broker, Journal, SpeculationConfig};
+use crate::broker::{journal, policy, Broker, Journal, RetryPolicy, SpeculationConfig};
 use crate::core::Context;
 use crate::dsl::builder::PuzzleBuilder;
 use crate::dsl::hook::{Hook, RowWriter, TableFormat};
@@ -88,11 +88,13 @@ pub enum EnvSpec {
     /// One named environment (`--env NAME`, `--nodes N`).
     Single { name: String, nodes: usize },
     /// A brokered fleet (`--envs local:8,pbs:32~0.2`, `--policy`,
-    /// `--speculate`).
+    /// `--speculate`, `--timeout`/`--max-retries`/`--backoff`).
     Fleet {
         spec: String,
         policy: String,
         speculate: bool,
+        /// Retry/deadline overrides; `None` keeps [`RetryPolicy::default`].
+        retry: Option<RetryPolicy>,
     },
     /// Any prebuilt environment (examples, tests, custom brokers).
     Provided(Arc<dyn Environment>),
@@ -134,8 +136,23 @@ pub struct MethodOutcome {
     pub rows: usize,
     pub evaluated: usize,
     pub resumed: usize,
+    /// Rows that exhausted their retry budget and carry NaN objectives
+    /// (`--degraded-ok`), ascending.
+    pub degraded: Vec<usize>,
     /// Result file, when the method streams one.
     pub result_path: Option<String>,
+}
+
+impl MethodOutcome {
+    /// `"complete"` when every row carries real results, `"degraded"`
+    /// when some rows exhausted their retry budget under `--degraded-ok`.
+    pub fn outcome(&self) -> &'static str {
+        if self.degraded.is_empty() {
+            "complete"
+        } else {
+            "degraded"
+        }
+    }
 }
 
 /// One engine behind the uniform experiment face.
@@ -258,6 +275,7 @@ impl Experiment {
                 spec,
                 policy: policy_name,
                 speculate,
+                retry,
             } => {
                 let p = policy::by_name(policy_name).ok_or_else(|| {
                     Error::Config(format!(
@@ -268,6 +286,9 @@ impl Experiment {
                 let mut builder = Broker::spec_builder(spec, pool, self.seed)?.policy(p);
                 if *speculate {
                     builder = builder.speculation(SpeculationConfig::default());
+                }
+                if let Some(r) = retry {
+                    builder = builder.retry(r.clone());
                 }
                 let broker = Arc::new(builder.build()?);
                 (Arc::clone(&broker) as Arc<dyn Environment>, Some(broker))
@@ -433,6 +454,12 @@ pub struct DirectSampling {
     /// Extra `run_start` fields the sampling cannot introspect (bounds,
     /// step, replications) — validated on resume.
     pub meta: Vec<(String, Json)>,
+    /// `--degraded-ok`: NaN-fill chunks whose retry budget is exhausted
+    /// instead of aborting the campaign.
+    pub degraded_ok: bool,
+    /// `--retry-degraded`: on resume, re-evaluate restored degraded rows
+    /// instead of keeping their NaN placeholders.
+    pub retry_degraded: bool,
 }
 
 impl DirectSampling {
@@ -521,38 +548,63 @@ impl ExplorationMethod for DirectSampling {
                 }
             }
         }
-        // blocks must fit the design this run will generate — checked
+        // events must fit the design this run will generate — checked
         // before the output file is recreated, so a refused resume never
         // destroys previous partial results. Deliberately the SAME parse
-        // `run` uses (`journal::sample_blocks`): the fit check and the
-        // restore must accept exactly the same blocks, and paying one
+        // `run` uses (`journal::sweep_events`): the fit check and the
+        // restore must accept exactly the same records, and paying one
         // extra parse at resume startup is nothing next to a divergence
         // that truncates the output file and then rejects a block.
         let expected_rows = self.sampling.size_hint().unwrap_or(0);
-        for b in journal::sample_blocks(records) {
-            if b.first_row + b.objectives.len() > expected_rows
-                || b
-                    .objectives
-                    .iter()
-                    .any(|r| r.len() != self.objective_names.len())
-            {
-                return Err(Error::Config(format!(
-                    "--resume journal `{path}` holds a block (rows {}..{}) that \
-                     does not fit this {expected_rows}-row design — refusing to \
-                     overwrite `{}`",
-                    b.first_row,
-                    b.first_row + b.objectives.len(),
-                    self.out_path
-                )));
+        for ev in journal::sweep_events(records) {
+            match ev {
+                journal::SweepEvent::Block(b) => {
+                    if b.first_row + b.objectives.len() > expected_rows
+                        || b
+                            .objectives
+                            .iter()
+                            .any(|r| r.len() != self.objective_names.len())
+                    {
+                        return Err(Error::Config(format!(
+                            "--resume journal `{path}` holds a block (rows \
+                             {}..{}) that does not fit this {expected_rows}-row \
+                             design — refusing to overwrite `{}`",
+                            b.first_row,
+                            b.first_row + b.objectives.len(),
+                            self.out_path
+                        )));
+                    }
+                }
+                journal::SweepEvent::Degraded(d) => {
+                    if d.rows.iter().any(|&r| r >= expected_rows) {
+                        return Err(Error::Config(format!(
+                            "--resume journal `{path}` holds degraded rows past \
+                             this {expected_rows}-row design — refusing to \
+                             overwrite `{}`",
+                            self.out_path
+                        )));
+                    }
+                }
             }
         }
         Ok(())
     }
 
     fn run(&self, ctx: MethodCtx<'_>) -> Result<MethodOutcome> {
-        let resume_blocks = ctx.resume.map(journal::sample_blocks);
-        if let Some(blocks) = &resume_blocks {
-            println!("resuming sweep: {} checkpointed blocks", blocks.len());
+        let resume_events = ctx.resume.map(journal::sweep_events);
+        if let Some(events) = &resume_events {
+            let degraded: usize = events
+                .iter()
+                .filter(|e| matches!(e, journal::SweepEvent::Degraded(_)))
+                .count();
+            if degraded > 0 {
+                println!(
+                    "resuming sweep: {} checkpointed records ({degraded} degraded)",
+                    events.len()
+                );
+            } else {
+                println!("resuming sweep: {} checkpointed blocks", events.len());
+            }
         }
         let columns: Vec<&str> = self
             .design_columns
@@ -569,7 +621,9 @@ impl ExplorationMethod for DirectSampling {
             &objective_names,
         )
         .chunk(self.chunk)
-        .writer(writer);
+        .writer(writer)
+        .degraded_ok(self.degraded_ok)
+        .retry_degraded(self.retry_degraded);
         for (k, v) in &self.meta {
             sweep = sweep.meta(k, v.clone());
         }
@@ -577,13 +631,14 @@ impl ExplorationMethod for DirectSampling {
             sweep = sweep.journal(j);
         }
         let result =
-            sweep.run_resumable(ctx.env.as_ref(), ctx.seed, resume_blocks.as_deref())?;
+            sweep.run_resumable(ctx.env.as_ref(), ctx.seed, resume_events.as_deref())?;
         Ok(MethodOutcome {
             evaluations: result.evaluated as u64,
             virtual_makespan: result.virtual_makespan,
             rows: result.rows(),
             evaluated: result.evaluated,
             resumed: result.resumed,
+            degraded: result.degraded,
             result_path: Some(self.out_path.clone()),
             ..MethodOutcome::default()
         })
@@ -824,6 +879,8 @@ mod tests {
                 ("hi".into(), Json::Num(1.0)),
                 ("replications".into(), Json::Num(1.0)),
             ],
+            degraded_ok: false,
+            retry_degraded: false,
         }
     }
 
@@ -894,6 +951,7 @@ mod tests {
                 spec: "local:2,local:2".into(),
                 policy: "roundrobin".into(),
                 speculate: false,
+                retry: None,
             })
             .seed(3)
             .quiet()
@@ -955,6 +1013,7 @@ mod tests {
                 spec: "local:2".into(),
                 policy: "fastest".into(),
                 speculate: false,
+                retry: None,
             })
             .quiet()
             .run()

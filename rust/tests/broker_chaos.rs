@@ -1,0 +1,264 @@
+//! Chaos acceptance (§Robustness tentpole): a seeded [`FaultPlan`]
+//! combining drops, hangs, stragglers and a crash window, driven through
+//! the brokered sweep stack.
+//!
+//! * when retry budgets suffice, a chaos run is **byte-identical** to the
+//!   fault-free run — the injected faults are fully absorbed by the
+//!   broker's retry/timeout machinery;
+//! * when they don't, `--degraded-ok` journals the **exact** failed row
+//!   set as `degraded_rows`, NaN-fills those rows and reports a
+//!   `degraded` (not failed) outcome;
+//! * a `--resume` after degradation restores the NaN placeholders
+//!   without re-evaluating them unless `--retry-degraded`;
+//! * a fully hung fleet can never block a sweep past its real-time job
+//!   deadline.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use molers::broker::{journal, Broker, Journal, RoundRobin};
+use molers::evolution::evaluator::{CountingEvaluator, Zdt1Evaluator};
+use molers::prelude::*;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("molers-chaos-{}-{name}", std::process::id()))
+}
+
+fn sampling(n: usize) -> Arc<dyn Sampling> {
+    let x = val_f64("x0");
+    let y = val_f64("x1");
+    Arc::new(LhsSampling::new(&[(&x, 0.0, 1.0), (&y, 0.0, 1.0)], n))
+}
+
+fn zdt2() -> Arc<dyn molers::evolution::Evaluator> {
+    Arc::new(Zdt1Evaluator { dim: 2 })
+}
+
+fn read(p: &std::path::Path) -> Vec<u8> {
+    std::fs::read(p).unwrap_or_else(|e| panic!("{p:?}: {e}"))
+}
+
+/// (a) 10k rows through a fleet of one healthy backend and one chaotic
+/// backend injecting drops, hangs, stragglers and a crash window: the
+/// retry budget suffices, so the result file is byte-identical to the
+/// fault-free run and no job is lost.
+#[test]
+fn chaos_run_with_sufficient_retry_budget_is_byte_identical_to_fault_free() {
+    let (n, chunk, seed) = (10_000usize, 64usize, 42u64);
+
+    // fault-free reference
+    let plain_csv = tmp("plain.csv");
+    let writer = Arc::new(
+        RowWriter::create(&plain_csv, TableFormat::Csv, &["x0", "x1", "f1", "f2"])
+            .unwrap(),
+    );
+    let reference = Sweep::new(sampling(n), zdt2(), &["f1", "f2"])
+        .chunk(chunk)
+        .writer(writer)
+        .run(&LocalEnvironment::new(4), seed)
+        .unwrap();
+    assert_eq!(reference.evaluated, n);
+
+    // the same sweep through a chaotic fleet
+    let plan = FaultPlan::new()
+        .drops(0.15)
+        .hangs(0.05)
+        .stragglers(0.1, 30.0)
+        .crash_window(5, 3);
+    let chaotic = Arc::new(FaultyEnv::new(
+        Arc::new(LocalEnvironment::new(2)),
+        plan,
+        0xFA11,
+    ));
+    let broker = Broker::builder("chaos-fleet")
+        .backend(Arc::new(LocalEnvironment::new(4)), 4)
+        .backend(Arc::clone(&chaotic) as Arc<dyn Environment>, 2)
+        .policy(Box::new(RoundRobin::new()))
+        .retry(RetryPolicy {
+            max_attempts: 8,
+            attempt_timeout_s: 1.0,
+            job_deadline_s: 60.0,
+            backoff_base_s: 0.1,
+            backoff_max_s: 1.0,
+            jitter: 0.5,
+        })
+        .seed(seed)
+        .build()
+        .unwrap();
+    let chaos_csv = tmp("chaos.csv");
+    let writer = Arc::new(
+        RowWriter::create(&chaos_csv, TableFormat::Csv, &["x0", "x1", "f1", "f2"])
+            .unwrap(),
+    );
+    let result = Sweep::new(sampling(n), zdt2(), &["f1", "f2"])
+        .chunk(chunk)
+        .writer(writer)
+        .run(&broker, seed)
+        .unwrap();
+
+    assert_eq!(result.evaluated, n, "every row rescued");
+    assert_eq!(result.outcome(), "complete");
+    assert_eq!(
+        read(&chaos_csv),
+        read(&plain_csv),
+        "chaos run must be byte-identical to the fault-free run"
+    );
+
+    // the crash window fired on exactly its three submissions, and the
+    // ledger reconciles with every injected fault accounted for
+    let inj = chaotic.injected();
+    assert_eq!(inj.crash_failures, 3);
+    assert!(inj.drops > 0, "15% drop rate over ~half the jobs");
+    let s = broker.stats();
+    assert_eq!(s.failed_jobs, 0);
+    assert_eq!(s.submitted, s.completed);
+    assert_eq!(s.failed_attempts, s.resubmissions + s.failed_jobs);
+    assert_eq!(s.in_flight(), 0, "no orphaned in-flight jobs");
+
+    for p in [&plain_csv, &chaos_csv] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+/// (b) + (c): a crash window on a single-backend fleet with no retry
+/// budget degrades exactly the affected rows; the journal names them, the
+/// CSV NaN-fills them, and a resume restores them without re-evaluation
+/// unless `--retry-degraded`.
+#[test]
+fn degraded_rows_are_journaled_exactly_and_resume_without_reevaluation() {
+    let (n, chunk, seed) = (60usize, 10usize, 7u64);
+
+    // fault-free reference objectives
+    let reference = Sweep::new(sampling(n), zdt2(), &["f1", "f2"])
+        .chunk(chunk)
+        .run(&LocalEnvironment::new(2), seed)
+        .unwrap();
+
+    // submissions 2 and 3 (rows 20..40) die terminally: one attempt each
+    let chaotic = Arc::new(FaultyEnv::new(
+        Arc::new(LocalEnvironment::new(2)),
+        FaultPlan::new().crash_window(2, 2),
+        0x5EED,
+    ));
+    let broker = Broker::builder("degraded-fleet")
+        .backend(chaotic as Arc<dyn Environment>, 2)
+        .max_attempts(1)
+        .seed(seed)
+        .build()
+        .unwrap();
+    let j_path = tmp("degraded.jsonl");
+    let csv = tmp("degraded.csv");
+    let writer = Arc::new(
+        RowWriter::create(&csv, TableFormat::Csv, &["x0", "x1", "f1", "f2"]).unwrap(),
+    );
+    let result = Sweep::new(sampling(n), zdt2(), &["f1", "f2"])
+        .chunk(chunk)
+        .degraded_ok(true)
+        .journal(Arc::new(Journal::create(&j_path).unwrap()))
+        .writer(writer)
+        .run(&broker, seed)
+        .unwrap();
+
+    let failed: Vec<usize> = (20..40).collect();
+    assert_eq!(result.outcome(), "degraded");
+    assert_eq!(result.degraded, failed);
+    assert_eq!(result.evaluated, 40);
+
+    // journal: the degraded_rows records name exactly the failed set
+    let records = Journal::load(&j_path).unwrap();
+    let mut journaled: Vec<usize> = journal::degraded_rows(&records)
+        .into_iter()
+        .flat_map(|d| d.rows)
+        .collect();
+    journaled.sort_unstable();
+    assert_eq!(journaled, failed, "journal names the exact failed row set");
+    assert!(records
+        .iter()
+        .any(|r| r.get("kind").and_then(|k| k.as_str()) == Some("run_end")));
+
+    // CSV: NaN in exactly the degraded rows (header + 60 data rows)
+    let text = String::from_utf8(read(&csv)).unwrap();
+    let nan_rows: Vec<usize> = text
+        .lines()
+        .skip(1)
+        .enumerate()
+        .filter_map(|(r, line)| line.contains("NaN").then_some(r))
+        .collect();
+    assert_eq!(nan_rows, failed, "NaN objectives in exactly the failed rows");
+
+    // resume WITHOUT --retry-degraded: nothing re-evaluates, NaN persists
+    let events = journal::sweep_events(&records);
+    let counting = Arc::new(CountingEvaluator::new(Zdt1Evaluator { dim: 2 }));
+    let healthy = LocalEnvironment::new(2);
+    let resumed = Sweep::new(sampling(n), Arc::clone(&counting) as _, &["f1", "f2"])
+        .chunk(chunk)
+        .degraded_ok(true)
+        .run_resumable(&healthy, seed, Some(&events))
+        .unwrap();
+    assert_eq!(counting.count(), 0, "restored rows must not re-evaluate");
+    assert_eq!(resumed.resumed, 40);
+    assert_eq!(resumed.resumed_degraded, 20);
+    assert_eq!(resumed.degraded, failed);
+    assert!(resumed.objectives_row(25).iter().all(|v| v.is_nan()));
+
+    // resume WITH --retry-degraded on a healthy environment: exactly the
+    // degraded rows re-evaluate, and the result converges to fault-free
+    let counting = Arc::new(CountingEvaluator::new(Zdt1Evaluator { dim: 2 }));
+    let retried = Sweep::new(sampling(n), Arc::clone(&counting) as _, &["f1", "f2"])
+        .chunk(chunk)
+        .retry_degraded(true)
+        .run_resumable(&healthy, seed, Some(&events))
+        .unwrap();
+    assert_eq!(counting.count(), 20, "only the degraded rows re-evaluate");
+    assert_eq!(retried.outcome(), "complete");
+    assert_eq!(retried.objectives, reference.objectives);
+
+    for p in [&j_path, &csv] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+/// (c) of the acceptance: a fleet where EVERY backend hangs EVERY job can
+/// never block the sweep past the real-time job deadline — with
+/// `--degraded-ok` it finishes (degraded) in bounded wall time.
+#[test]
+fn fully_hung_fleet_degrades_within_the_job_deadline() {
+    let hung = Arc::new(FaultyEnv::new(
+        Arc::new(LocalEnvironment::new(2)),
+        FaultPlan::new().hangs(1.0),
+        1,
+    ));
+    let broker = Broker::builder("hung-fleet")
+        .backend(hung as Arc<dyn Environment>, 2)
+        .retry(RetryPolicy {
+            max_attempts: 100,
+            attempt_timeout_s: 0.05,
+            job_deadline_s: 0.2,
+            backoff_base_s: 0.01,
+            backoff_max_s: 0.01,
+            jitter: 0.0,
+        })
+        .seed(9)
+        .build()
+        .unwrap();
+
+    let t0 = Instant::now();
+    let result = Sweep::new(sampling(8), zdt2(), &["f1", "f2"])
+        .chunk(4)
+        .degraded_ok(true)
+        .run(&broker, 3)
+        .unwrap();
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    assert_eq!(result.outcome(), "degraded");
+    assert_eq!(result.degraded, (0..8).collect::<Vec<_>>());
+    assert!(
+        elapsed < 30.0,
+        "deadline must bound the wait, took {elapsed:.1}s"
+    );
+    let s = broker.stats();
+    assert!(s.timed_out_attempts >= 2, "every attempt timed out: {s:?}");
+    assert_eq!(s.failed_jobs, 2);
+    assert_eq!(s.in_flight(), 0, "abandoned jobs must release in-flight");
+}

@@ -1,0 +1,111 @@
+//! Crash-recovery harness (§Robustness tentpole, part 4): a brokered
+//! chaos sweep is "killed" at **every** journal record boundary — the
+//! journal is truncated to each prefix of records plus a torn,
+//! half-written final line, exactly what `kill -9` leaves behind — and
+//! resumed. Every resume must produce a result file **byte-identical** to
+//! the uninterrupted reference run.
+//!
+//! This works because the design and every per-row model seed are pure
+//! functions of `(sampling, seed, row)`: whatever subset of rows the
+//! journal prefix restores, re-evaluating the rest on a different broker
+//! with different faults injected reproduces the same objectives.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use molers::broker::{journal, Broker, Journal};
+use molers::evolution::evaluator::Zdt1Evaluator;
+use molers::exec::ThreadPool;
+use molers::prelude::*;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("molers-recov-{}-{name}", std::process::id()))
+}
+
+fn sampling(n: usize) -> Arc<dyn Sampling> {
+    let x = val_f64("x0");
+    let y = val_f64("x1");
+    Arc::new(LhsSampling::new(&[(&x, 0.0, 1.0), (&y, 0.0, 1.0)], n))
+}
+
+/// A representative chaos fleet from the `--envs` FaultPlan grammar: one
+/// healthy backend plus one that drops 30% of submissions and stretches
+/// 20% into stragglers — every chunk survives via the retry budget.
+fn chaos_broker(seed: u64) -> Broker {
+    let pool = Arc::new(ThreadPool::new(2));
+    Broker::from_spec("local:2,local:2~drop=0.3;delay=0.2:10", pool, seed).unwrap()
+}
+
+fn run_sweep(
+    n: usize,
+    chunk: usize,
+    seed: u64,
+    journal_path: Option<&Path>,
+    out_path: &Path,
+    resume: Option<&[journal::SweepEvent]>,
+) -> molers::exploration::SweepResult {
+    let writer = Arc::new(
+        RowWriter::create(out_path, TableFormat::Csv, &["x0", "x1", "f1", "f2"])
+            .unwrap(),
+    );
+    let mut sweep = Sweep::new(sampling(n), Arc::new(Zdt1Evaluator { dim: 2 }), &["f1", "f2"])
+        .chunk(chunk)
+        .writer(writer);
+    if let Some(p) = journal_path {
+        sweep = sweep.journal(Arc::new(Journal::create(p).unwrap()));
+    }
+    let env = chaos_broker(seed ^ 0xC4A5);
+    sweep.run_resumable(&env, seed, resume).unwrap()
+}
+
+#[test]
+fn resume_at_every_journal_record_boundary_is_byte_identical() {
+    let (n, chunk, seed) = (60usize, 8usize, 13u64);
+    let full_j = tmp("ref.jsonl");
+    let full_csv = tmp("ref.csv");
+
+    // uninterrupted chaos reference: journal + result file
+    let reference = run_sweep(n, chunk, seed, Some(&full_j), &full_csv, None);
+    assert_eq!(reference.evaluated, n);
+    let want = std::fs::read(&full_csv).unwrap();
+
+    let text = std::fs::read_to_string(&full_j).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    // run_start + 8 sample_blocks + env_stats + run_end
+    assert_eq!(lines.len(), 3 + n.div_ceil(chunk), "journal record count");
+
+    for cut in 0..=lines.len() {
+        // kill -9 after `cut` whole records: prefix + torn half-record
+        let mut prefix = String::new();
+        for line in &lines[..cut] {
+            prefix.push_str(line);
+            prefix.push('\n');
+        }
+        prefix.push_str("{\"kind\":\"sample_blo");
+        let cut_j = tmp(&format!("cut-{cut}.jsonl"));
+        std::fs::write(&cut_j, &prefix).unwrap();
+
+        let records = Journal::load(&cut_j).unwrap();
+        let events = journal::sweep_events(&records);
+        let cut_csv = tmp(&format!("cut-{cut}.csv"));
+        let resumed = run_sweep(n, chunk, seed, None, &cut_csv, Some(&events));
+
+        assert_eq!(
+            resumed.resumed + resumed.evaluated,
+            n,
+            "cut at record {cut}: restored + fresh rows cover the design"
+        );
+        assert_eq!(
+            std::fs::read(&cut_csv).unwrap(),
+            want,
+            "cut at record {cut}: resumed CSV must be byte-identical"
+        );
+        for p in [&cut_j, &cut_csv] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    for p in [&full_j, &full_csv] {
+        let _ = std::fs::remove_file(p);
+    }
+}

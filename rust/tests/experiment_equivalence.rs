@@ -50,6 +50,8 @@ fn explore_method(out: &std::path::Path, n: usize) -> DirectSampling {
             ("hi".into(), Json::Num(1.0)),
             ("replications".into(), Json::Num(1.0)),
         ],
+        degraded_ok: false,
+        retry_degraded: false,
     }
 }
 

@@ -65,7 +65,7 @@ fn run_sweep(
     journal_path: &Path,
     out_path: &Path,
     format: TableFormat,
-    resume: Option<&[journal::SampleBlock]>,
+    resume: Option<&[journal::SweepEvent]>,
 ) -> molers::exploration::SweepResult {
     let columns = ["x0", "x1", "f1", "f2"];
     let writer = Arc::new(RowWriter::create(out_path, format, &columns).unwrap());
@@ -108,8 +108,8 @@ fn kill_and_resume_reaches_byte_identical_csv() {
 
     // resume: restored rows are not re-evaluated...
     let records = Journal::load(&cut_j).unwrap();
-    let blocks = journal::sample_blocks(&records);
-    assert_eq!(blocks.len(), 3);
+    let events = journal::sweep_events(&records);
+    assert_eq!(events.len(), 3);
     let resumed = run_sweep(
         n,
         chunk,
@@ -117,7 +117,7 @@ fn kill_and_resume_reaches_byte_identical_csv() {
         &cut_j,
         &cut_csv,
         TableFormat::Csv,
-        Some(&blocks),
+        Some(&events),
     );
     assert_eq!(resumed.resumed, kept_rows);
     assert_eq!(resumed.evaluated, n - kept_rows);
@@ -153,7 +153,7 @@ fn kill_and_resume_reaches_byte_identical_jsonl() {
 
     run_sweep(n, chunk, seed, &full_j, &full_out, TableFormat::Jsonl, None);
     killed_journal(&full_j, &cut_j, 2);
-    let blocks = journal::sample_blocks(&Journal::load(&cut_j).unwrap());
+    let events = journal::sweep_events(&Journal::load(&cut_j).unwrap());
     run_sweep(
         n,
         chunk,
@@ -161,7 +161,7 @@ fn kill_and_resume_reaches_byte_identical_jsonl() {
         &cut_j,
         &cut_out,
         TableFormat::Jsonl,
-        Some(&blocks),
+        Some(&events),
     );
     assert_eq!(
         std::fs::read(&cut_out).unwrap(),
@@ -188,13 +188,13 @@ fn resumed_rows_are_never_reevaluated_and_seeds_are_positional() {
 
     let cut_j = tmp("count-cut.jsonl");
     let kept = killed_journal(&full_j, &cut_j, 2);
-    let blocks = journal::sample_blocks(&Journal::load(&cut_j).unwrap());
+    let events = journal::sweep_events(&Journal::load(&cut_j).unwrap());
 
     let counting = Arc::new(CountingEvaluator::new(Zdt1Evaluator { dim: 2 }));
     let env = LocalEnvironment::new(2);
     let resumed = Sweep::new(sampling(n), Arc::clone(&counting) as _, &["f1", "f2"])
         .chunk(chunk)
-        .run_resumable(&env, seed, Some(&blocks))
+        .run_resumable(&env, seed, Some(&events))
         .unwrap();
     assert_eq!(counting.count() as usize, n - kept);
     assert_eq!(resumed.objectives, full.objectives);
