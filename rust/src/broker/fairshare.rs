@@ -1,0 +1,578 @@
+//! Per-tenant fair-share admission in front of a shared [`Environment`]
+//! (typically the [`Broker`](crate::broker::Broker)): the scheduling layer
+//! that lets `molers serve` run many concurrent experiments over **one**
+//! fleet without a 200k-row sweep starving a 100-row run.
+//!
+//! ## How it schedules
+//!
+//! Every tenant gets its own pending queue. Jobs submitted through a
+//! [`TenantEnv`] handle are *not* forwarded to the inner environment
+//! immediately — they wait in their tenant's queue until the pump picks
+//! them by **weighted round-robin**: the cursor visits tenants in
+//! registration order and forwards up to `weight` consecutive jobs from
+//! each non-empty queue before moving on (weight 2 = twice the share of
+//! a weight-1 tenant). At most `slots` jobs are in flight in the inner
+//! environment at once, so the inner queue stays shallow and fairness
+//! stays responsive: a small experiment's chunks interleave with a huge
+//! sweep's instead of queueing behind all of it.
+//!
+//! ## No scheduler thread
+//!
+//! The pump runs inside the callers' own polling: every
+//! [`JobHandle::try_wait`] / `wait` on a fair-share handle (and every
+//! submit) advances forwarding, matching the non-blocking `try_wait`
+//! discipline the rest of the crate uses. Dropping an unresolved handle
+//! releases its slot (and its broker in-flight accounting via the inner
+//! handle's own `Drop`).
+//!
+//! ## Cancellation
+//!
+//! A [`TenantEnv`] may carry a cancel token
+//! ([`TenantEnv::with_cancel`]). Once the token is set, new submissions
+//! and *queued* (not yet forwarded) jobs fail fast with an
+//! `EnvironmentError` mentioning "cancelled"; jobs already forwarded run
+//! to completion so the inner environment's accounting stays clean.
+//!
+//! Per-tenant [`EnvStats`] keep the crate-wide ledger invariant: once a
+//! tenant's jobs are drained, `submitted == completed + failed_jobs`
+//! (cancelled and abandoned jobs count as failed).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::core::Context;
+use crate::environment::{EnvStats, Environment, Job, JobHandle, JobReport, JobWaiter};
+use crate::error::{Error, Result};
+
+/// One job parked between submission and forwarding.
+struct PendingJob {
+    /// Taken by the pump when the job is forwarded.
+    job: Option<Job>,
+    /// The inner environment's handle, once forwarded.
+    inner: Option<JobHandle>,
+    /// Cancelled (or abandoned) before forwarding — the pump skips it.
+    cancelled: bool,
+    /// Result delivered (or written off); guards double accounting.
+    finished: bool,
+}
+
+type Slot = Arc<Mutex<PendingJob>>;
+
+struct TenantState {
+    name: String,
+    weight: u64,
+    queue: VecDeque<Slot>,
+    stats: EnvStats,
+}
+
+struct Shared {
+    tenants: Vec<TenantState>,
+    /// Weighted round-robin position.
+    cursor: usize,
+    /// Consecutive dispatches left for the cursor tenant this round.
+    burst_left: u64,
+    /// Jobs currently forwarded into the inner environment.
+    forwarded: usize,
+}
+
+/// Weighted round-robin fair-share gate over a shared environment. See
+/// the module docs for the scheduling discipline.
+pub struct FairShare {
+    inner: Arc<dyn Environment>,
+    slots: usize,
+    state: Mutex<Shared>,
+}
+
+impl FairShare {
+    /// Gate `inner` behind at most `slots` concurrently forwarded jobs.
+    /// `slots` is clamped to at least 1; a good default is the fleet's
+    /// total capacity.
+    pub fn new(inner: Arc<dyn Environment>, slots: usize) -> Arc<Self> {
+        Arc::new(FairShare {
+            inner,
+            slots: slots.max(1),
+            state: Mutex::new(Shared {
+                tenants: Vec::new(),
+                cursor: 0,
+                burst_left: 0,
+                forwarded: 0,
+            }),
+        })
+    }
+
+    /// A submission handle for `name` with round-robin `weight` (clamped
+    /// to ≥ 1). Handles for the same name share one queue and one stats
+    /// ledger; a later call may raise the weight.
+    pub fn tenant(self: &Arc<Self>, name: &str, weight: u64) -> TenantEnv {
+        let tenant = {
+            let mut st = self.state.lock().unwrap();
+            match st.tenants.iter().position(|t| t.name == name) {
+                Some(i) => {
+                    st.tenants[i].weight = st.tenants[i].weight.max(weight.max(1));
+                    i
+                }
+                None => {
+                    st.tenants.push(TenantState {
+                        name: name.to_string(),
+                        weight: weight.max(1),
+                        queue: VecDeque::new(),
+                        stats: EnvStats::default(),
+                    });
+                    st.tenants.len() - 1
+                }
+            }
+        };
+        TenantEnv {
+            fs: Arc::clone(self),
+            tenant,
+            label: format!("fair[{name}]:{}", self.inner.name()),
+            cancel: None,
+        }
+    }
+
+    /// Jobs parked in tenant queues (not yet forwarded).
+    pub fn queued(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.tenants.iter().map(|t| t.queue.len()).sum()
+    }
+
+    /// Jobs currently forwarded into the inner environment.
+    pub fn forwarded(&self) -> usize {
+        self.state.lock().unwrap().forwarded
+    }
+
+    /// Pick the next queued job by weighted round-robin. Caller holds the
+    /// state lock.
+    fn next_slot(st: &mut Shared) -> Option<Slot> {
+        let n = st.tenants.len();
+        let mut scanned = 0;
+        while scanned < n {
+            let t = st.cursor % n;
+            if st.tenants[t].queue.is_empty() {
+                st.cursor = (st.cursor + 1) % n;
+                st.burst_left = 0;
+                scanned += 1;
+                continue;
+            }
+            if st.burst_left == 0 {
+                st.burst_left = st.tenants[t].weight.max(1);
+            }
+            let slot = st.tenants[t].queue.pop_front();
+            st.burst_left -= 1;
+            if st.burst_left == 0 {
+                st.cursor = (st.cursor + 1) % n;
+            }
+            return slot;
+        }
+        None
+    }
+
+    /// Forward queued jobs while slots are free. Runs inside submit and
+    /// every handle poll; never holds the shared lock across a forward.
+    fn pump(&self) {
+        loop {
+            let slot = {
+                let mut st = self.state.lock().unwrap();
+                if st.forwarded >= self.slots {
+                    return;
+                }
+                let Some(slot) = Self::next_slot(&mut st) else {
+                    return;
+                };
+                st.forwarded += 1;
+                slot
+            };
+            let mut p = slot.lock().unwrap();
+            if p.cancelled || p.job.is_none() {
+                // written off while queued — release the slot and move on
+                drop(p);
+                self.state.lock().unwrap().forwarded -= 1;
+                continue;
+            }
+            let job = p.job.take().expect("guarded above");
+            p.inner = Some(self.inner.submit(job));
+        }
+    }
+
+    /// Account a forwarded job's terminal result and free its slot.
+    fn complete(&self, tenant: usize, res: &Result<(Context, JobReport)>) {
+        {
+            let mut st = self.state.lock().unwrap();
+            st.forwarded = st.forwarded.saturating_sub(1);
+            let s = &mut st.tenants[tenant].stats;
+            match res {
+                Ok((_, r)) => {
+                    s.completed += 1;
+                    s.virtual_cpu_s += r.exec_s;
+                    if r.virtual_end > s.virtual_makespan {
+                        s.virtual_makespan = r.virtual_end;
+                    }
+                }
+                Err(_) => {
+                    s.failed_attempts += 1;
+                    s.failed_jobs += 1;
+                }
+            }
+        }
+        self.pump();
+    }
+
+    /// Write off a job that will never deliver a result (cancelled while
+    /// queued, or its handle dropped). `held_slot` releases a forwarded
+    /// slot too.
+    fn write_off(&self, tenant: usize, held_slot: bool) {
+        {
+            let mut st = self.state.lock().unwrap();
+            if held_slot {
+                st.forwarded = st.forwarded.saturating_sub(1);
+            }
+            let s = &mut st.tenants[tenant].stats;
+            s.failed_attempts += 1;
+            s.failed_jobs += 1;
+        }
+        self.pump();
+    }
+
+    fn tenant_stats(&self, tenant: usize) -> EnvStats {
+        self.state.lock().unwrap().tenants[tenant].stats.clone()
+    }
+}
+
+fn cancelled_error(label: &str) -> Error {
+    Error::EnvironmentError {
+        environment: label.to_string(),
+        message: "cancelled: experiment cancel requested".into(),
+    }
+}
+
+/// One tenant's submission face over a [`FairShare`]. Implements
+/// [`Environment`], so a whole [`Experiment`](crate::workflow::Experiment)
+/// can run on it unchanged while its jobs share the fleet fairly.
+pub struct TenantEnv {
+    fs: Arc<FairShare>,
+    tenant: usize,
+    label: String,
+    cancel: Option<Arc<AtomicBool>>,
+}
+
+impl TenantEnv {
+    /// Attach a cancel token: once set, new submissions and still-queued
+    /// jobs fail fast (see the module docs).
+    pub fn with_cancel(mut self, token: Arc<AtomicBool>) -> Self {
+        self.cancel = Some(token);
+        self
+    }
+
+    fn is_cancelled(&self) -> bool {
+        self.cancel
+            .as_ref()
+            .is_some_and(|c| c.load(Ordering::Relaxed))
+    }
+}
+
+impl Environment for TenantEnv {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn submit(&self, job: Job) -> JobHandle {
+        {
+            let mut st = self.fs.state.lock().unwrap();
+            st.tenants[self.tenant].stats.submitted += 1;
+        }
+        if self.is_cancelled() {
+            self.fs.write_off(self.tenant, false);
+            return JobHandle::ready(Err(cancelled_error(&self.label)));
+        }
+        let slot: Slot = Arc::new(Mutex::new(PendingJob {
+            job: Some(job),
+            inner: None,
+            cancelled: false,
+            finished: false,
+        }));
+        {
+            let mut st = self.fs.state.lock().unwrap();
+            st.tenants[self.tenant].queue.push_back(Arc::clone(&slot));
+        }
+        self.fs.pump();
+        JobHandle::from_waiter(Box::new(FairJob {
+            fs: Arc::clone(&self.fs),
+            tenant: self.tenant,
+            label: self.label.clone(),
+            cancel: self.cancel.clone(),
+            slot,
+        }))
+    }
+
+    fn stats(&self) -> EnvStats {
+        self.fs.tenant_stats(self.tenant)
+    }
+}
+
+/// The waiter behind a fair-share handle: pumps on every poll, delegates
+/// to the inner handle once forwarded, fails fast when cancelled while
+/// still queued.
+struct FairJob {
+    fs: Arc<FairShare>,
+    tenant: usize,
+    label: String,
+    cancel: Option<Arc<AtomicBool>>,
+    slot: Slot,
+}
+
+impl FairJob {
+    fn poll(&self) -> Option<Result<(Context, JobReport)>> {
+        self.fs.pump();
+        if self
+            .cancel
+            .as_ref()
+            .is_some_and(|c| c.load(Ordering::Relaxed))
+        {
+            // fail fast only while queued; a forwarded job runs out so the
+            // inner environment's ledger reconciles
+            let mut p = self.slot.lock().unwrap();
+            if p.inner.is_none() && !p.finished {
+                p.cancelled = true;
+                p.finished = true;
+                p.job = None;
+                drop(p);
+                self.fs.write_off(self.tenant, false);
+                return Some(Err(cancelled_error(&self.label)));
+            }
+        }
+        let res = {
+            let p = self.slot.lock().unwrap();
+            match &p.inner {
+                Some(h) => h.try_wait(),
+                None => return None, // still queued
+            }
+        };
+        let res = res?;
+        {
+            let mut p = self.slot.lock().unwrap();
+            p.inner = None;
+            p.finished = true;
+        }
+        self.fs.complete(self.tenant, &res);
+        Some(res)
+    }
+}
+
+impl JobWaiter for FairJob {
+    fn wait(self: Box<Self>) -> Result<(Context, JobReport)> {
+        loop {
+            if let Some(r) = self.poll() {
+                return r;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    fn try_wait(&self) -> Option<Result<(Context, JobReport)>> {
+        self.poll()
+    }
+}
+
+impl Drop for FairJob {
+    /// An abandoned handle must release its slot (and write the job off)
+    /// or the gate leaks capacity for the server's lifetime.
+    fn drop(&mut self) {
+        let held_slot = {
+            let Ok(mut p) = self.slot.lock() else { return };
+            if p.finished {
+                return;
+            }
+            p.cancelled = true;
+            p.finished = true;
+            p.job = None;
+            p.inner.take().is_some() // inner handle drops here
+        };
+        self.fs.write_off(self.tenant, held_slot);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{val_str, Context};
+    use crate::dsl::task::ClosureTask;
+    use crate::environment::local::LocalEnvironment;
+    use crate::error::Result;
+
+    /// Inner env that records the submission order of each job's `tag`
+    /// context variable and completes instantly.
+    struct TagRecorder {
+        order: Mutex<Vec<String>>,
+    }
+
+    impl TagRecorder {
+        fn new() -> Arc<Self> {
+            Arc::new(TagRecorder {
+                order: Mutex::new(Vec::new()),
+            })
+        }
+    }
+
+    impl Environment for TagRecorder {
+        fn name(&self) -> &str {
+            "recorder"
+        }
+
+        fn submit(&self, job: Job) -> JobHandle {
+            let tag = job
+                .context
+                .get(&val_str("tag"))
+                .unwrap_or_else(|_| "?".into());
+            self.order.lock().unwrap().push(tag);
+            JobHandle::ready(Ok((
+                Context::new(),
+                JobReport {
+                    environment: "recorder".into(),
+                    node: "n0".into(),
+                    attempts: 1,
+                    submit_delay_s: 0.0,
+                    queue_s: 0.0,
+                    exec_s: 1.0,
+                    virtual_start: 0.0,
+                    virtual_end: 1.0,
+                    real_exec: Duration::ZERO,
+                },
+            )))
+        }
+
+        fn stats(&self) -> EnvStats {
+            EnvStats::default()
+        }
+    }
+
+    fn tagged(tag: &str) -> Job {
+        let mut ctx = Context::new();
+        ctx.set(&val_str("tag"), tag.to_string());
+        let task = ClosureTask::new("noop", |_ctx: &Context| Ok(Context::new()));
+        Job::new(Arc::new(task), ctx)
+    }
+
+    fn drain(mut handles: Vec<JobHandle>) {
+        while !handles.is_empty() {
+            handles.retain(|h| h.try_wait().is_none());
+        }
+    }
+
+    #[test]
+    fn round_robin_interleaves_a_late_small_tenant() {
+        let recorder = TagRecorder::new();
+        let fs = FairShare::new(Arc::clone(&recorder) as Arc<dyn Environment>, 1);
+        let big = fs.tenant("big", 1);
+        let small = fs.tenant("small", 1);
+
+        // the big sweep floods the gate first, then the small run arrives
+        let mut handles: Vec<JobHandle> =
+            (0..40).map(|i| big.submit(tagged(&format!("big{i}")))).collect();
+        handles.extend((0..4).map(|i| small.submit(tagged(&format!("small{i}")))));
+        drain(handles);
+
+        let order = recorder.order.lock().unwrap().clone();
+        assert_eq!(order.len(), 44);
+        // with slots=1 the forward order is pure round-robin once both
+        // queues are non-empty: small's last job must be forwarded long
+        // before big's queue drains (FIFO would put it at position 43)
+        let last_small = order.iter().position(|t| t == "small3").unwrap();
+        assert!(
+            last_small <= 10,
+            "small tenant starved: last job forwarded at {last_small} in {order:?}"
+        );
+        // per-tenant ledgers reconcile
+        assert_eq!(big.stats().completed, 40);
+        assert_eq!(small.stats().completed, 4);
+        assert_eq!(fs.queued(), 0);
+        assert_eq!(fs.forwarded(), 0);
+    }
+
+    #[test]
+    fn weights_scale_the_share() {
+        let recorder = TagRecorder::new();
+        let fs = FairShare::new(Arc::clone(&recorder) as Arc<dyn Environment>, 1);
+        let heavy = fs.tenant("heavy", 3);
+        let light = fs.tenant("light", 1);
+
+        let mut handles: Vec<JobHandle> =
+            (0..12).map(|i| heavy.submit(tagged(&format!("h{i}")))).collect();
+        handles.extend((0..12).map(|i| light.submit(tagged(&format!("l{i}")))));
+        drain(handles);
+
+        let order = recorder.order.lock().unwrap().clone();
+        // among the first 8 forwards, heavy gets ~3x light's share
+        let heavy_early =
+            order[..8].iter().filter(|t| t.starts_with('h')).count();
+        assert_eq!(heavy_early, 6, "3:1 weighting in {order:?}");
+    }
+
+    #[test]
+    fn cancel_fails_queued_jobs_fast_and_ledger_reconciles() {
+        let recorder = TagRecorder::new();
+        let fs = FairShare::new(Arc::clone(&recorder) as Arc<dyn Environment>, 1);
+        let token = Arc::new(AtomicBool::new(false));
+        let t = fs.tenant("t", 1).with_cancel(Arc::clone(&token));
+
+        let mut handles: Vec<JobHandle> =
+            (0..6).map(|i| t.submit(tagged(&format!("j{i}")))).collect();
+        token.store(true, Ordering::Relaxed);
+        // wait newest-first: with slots=1 only j0 was forwarded, so the
+        // five still-queued jobs must all fail fast
+        handles.reverse();
+        let mut errors = 0;
+        for h in handles {
+            if h.wait().is_err() {
+                errors += 1;
+            }
+        }
+        assert_eq!(errors, 5, "queued jobs must fail fast on cancel");
+        // post-cancel submissions fail immediately
+        assert!(t.submit(tagged("late")).wait().is_err());
+        let s = t.stats();
+        assert_eq!(s.submitted, 7);
+        assert_eq!(s.completed + s.failed_jobs, 7, "ledger reconciles: {s:?}");
+        assert_eq!(fs.forwarded(), 0);
+    }
+
+    #[test]
+    fn dropped_handles_release_their_slots() {
+        let recorder = TagRecorder::new();
+        let fs = FairShare::new(Arc::clone(&recorder) as Arc<dyn Environment>, 2);
+        let t = fs.tenant("t", 1);
+        let handles: Vec<JobHandle> =
+            (0..5).map(|i| t.submit(tagged(&format!("j{i}")))).collect();
+        drop(handles);
+        assert_eq!(fs.forwarded(), 0, "abandoned handles must free slots");
+        let s = t.stats();
+        assert_eq!(s.submitted, 5);
+        assert_eq!(s.completed + s.failed_jobs, 5);
+        // the gate still works afterwards
+        assert!(t.submit(tagged("after")).wait().is_ok());
+    }
+
+    /// Two real sweep-shaped workloads over one local environment: both
+    /// complete and per-tenant stats stay separate.
+    #[test]
+    fn real_environment_end_to_end() {
+        let inner = Arc::new(LocalEnvironment::new(2));
+        let fs = FairShare::new(inner as Arc<dyn Environment>, 2);
+        let a = fs.tenant("a", 1);
+        let b = fs.tenant("b", 2);
+        let job = || {
+            let task = ClosureTask::new("work", |_ctx: &Context| Ok(Context::new()));
+            Job::new(Arc::new(task), Context::new())
+        };
+        let ha: Vec<JobHandle> = (0..10).map(|_| a.submit(job())).collect();
+        let hb: Vec<JobHandle> = (0..10).map(|_| b.submit(job())).collect();
+        let results: Vec<Result<_>> =
+            ha.into_iter().chain(hb).map(JobHandle::wait).collect();
+        assert!(results.iter().all(|r| r.is_ok()));
+        assert_eq!(a.stats().completed, 10);
+        assert_eq!(b.stats().completed, 10);
+        assert_eq!(fs.queued(), 0);
+        assert_eq!(fs.forwarded(), 0);
+    }
+}

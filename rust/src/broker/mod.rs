@@ -42,11 +42,13 @@
 //! The [`journal`] module provides the JSONL checkpoint stream that makes
 //! brokered runs resumable after a kill.
 
+pub mod fairshare;
 pub mod fault;
 pub mod health;
 pub mod journal;
 pub mod policy;
 
+pub use fairshare::{FairShare, TenantEnv};
 pub use fault::{CrashWindow, FaultPlan, FaultyEnv, FlakyEnv, InjectedFaults};
 pub use health::{CircuitConfig, Health};
 pub use journal::{DegradedRows, Journal, ResumeState, SampleBlock, SweepEvent};
@@ -930,7 +932,17 @@ impl Environment for Broker {
     }
 
     fn stats(&self) -> EnvStats {
-        self.core.stats.lock().unwrap().clone()
+        let mut s = self.core.stats.lock().unwrap().clone();
+        // injected-fault counts live in the chaos decorators wrapped
+        // around individual backends, never in the broker's own ledger —
+        // fold them in so end-of-run summaries see real numbers
+        s.injected_faults = self
+            .core
+            .backends
+            .iter()
+            .map(|b| b.env.stats().injected_faults)
+            .sum();
+        s
     }
 }
 

@@ -35,8 +35,9 @@ fn num<T>(r: std::result::Result<T, String>) -> Result<T> {
 /// `--timeout` (real seconds per job, also capping the per-attempt
 /// timeout), `--max-retries` (re-dispatches after the first attempt) and
 /// `--backoff` (base virtual seconds) over [`RetryPolicy::default`].
-/// `None` when no override flag is present.
-fn retry_overrides(args: &Args) -> Result<Option<RetryPolicy>> {
+/// `None` when no override flag is present. Public so `molers serve` can
+/// apply the same overrides to its shared fleet.
+pub fn retry_overrides(args: &Args) -> Result<Option<RetryPolicy>> {
     if args.get("timeout").is_none()
         && args.get("max-retries").is_none()
         && args.get("backoff").is_none()
@@ -114,6 +115,22 @@ fn with_common(mut exp: Experiment, args: &Args) -> Result<Experiment> {
         exp = exp.journal(path);
     }
     Ok(exp)
+}
+
+/// Dispatch a method name to its subcommand front — the server-side
+/// entry for client submissions, so a wire payload builds exactly the
+/// [`Experiment`] the equivalent CLI invocation would.
+pub fn by_name(method: &str, args: &Args) -> Result<Experiment> {
+    match method {
+        "run" => run(args),
+        "explore" => explore(args),
+        "replicate" => replicate(args),
+        "calibrate" => calibrate(args),
+        "island" => island(args),
+        other => Err(Error::Config(format!(
+            "unknown method `{other}` (run|explore|replicate|calibrate|island)"
+        ))),
+    }
 }
 
 /// The calibration genome: (diffusion, evaporation) bounds and the three

@@ -94,6 +94,17 @@ impl Args {
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
+
+    /// Every `--key value` option, in sorted key order — lets the thin
+    /// client forward its parsed options over the wire verbatim.
+    pub fn options(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.options.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    /// Every bare `--flag`, in parse order.
+    pub fn flag_names(&self) -> &[String] {
+        &self.flags
+    }
 }
 
 #[cfg(test)]
@@ -145,5 +156,23 @@ mod tests {
     fn positional_args() {
         let a = parse("render out.ppm --ticks 100");
         assert_eq!(a.positional(), &["out.ppm".to_string()]);
+    }
+
+    #[test]
+    fn options_and_flags_are_enumerable() {
+        let a = parse("client submit explore --n 200 --chunk 8 --degraded-ok");
+        let opts: Vec<(String, String)> = a
+            .options()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        assert_eq!(
+            opts,
+            vec![
+                ("chunk".to_string(), "8".to_string()),
+                ("n".to_string(), "200".to_string())
+            ]
+        );
+        assert_eq!(a.flag_names(), &["degraded-ok".to_string()]);
+        assert_eq!(a.positional(), &["submit".to_string(), "explore".to_string()]);
     }
 }

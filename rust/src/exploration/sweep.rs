@@ -43,6 +43,12 @@ use crate::exploration::sampling::Sampling;
 use crate::util::json::Json;
 use crate::util::rng::{splitmix64, Rng};
 
+/// Incremental completion callback `(done_rows, total_rows)` — invoked
+/// once after the resume restore pass and after every settled chunk
+/// (evaluated or degraded). `molers serve` streams these to watching
+/// clients; callbacks must be cheap and must not block.
+pub type ProgressFn = Arc<dyn Fn(u64, u64) + Send + Sync>;
+
 /// The model seed of design row `row` under sweep seed `seed` — a pure
 /// function, so any subset of rows can be (re-)evaluated in any order, on
 /// any backend, in any chunking, and produce identical objectives.
@@ -104,6 +110,7 @@ pub struct Sweep {
     meta: Vec<(String, Json)>,
     degraded_ok: bool,
     retry_degraded: bool,
+    progress: Option<ProgressFn>,
 }
 
 impl Sweep {
@@ -123,6 +130,7 @@ impl Sweep {
             meta: Vec::new(),
             degraded_ok: false,
             retry_degraded: false,
+            progress: None,
         }
     }
 
@@ -172,6 +180,12 @@ impl Sweep {
     /// their NaN placeholders (`--retry-degraded`).
     pub fn retry_degraded(mut self, yes: bool) -> Self {
         self.retry_degraded = yes;
+        self
+    }
+
+    /// Observe incremental completion — see [`ProgressFn`].
+    pub fn on_progress(mut self, f: ProgressFn) -> Self {
+        self.progress = Some(f);
         self
     }
 
@@ -271,6 +285,10 @@ impl Sweep {
         }
         let resumed_degraded = degraded.iter().filter(|&&d| d).count();
         let resumed = done.iter().filter(|&&d| d).count() - resumed_degraded;
+        let mut done_rows = resumed + resumed_degraded;
+        if let Some(p) = &self.progress {
+            p(done_rows as u64, n as u64);
+        }
 
         if let Some(j) = &self.journal {
             let mut fields = vec![
@@ -389,6 +407,10 @@ impl Sweep {
                                 ))?;
                             }
                         }
+                        done_rows += failed_rows.len();
+                        if let Some(p) = &self.progress {
+                            p(done_rows as u64, n as u64);
+                        }
                         self.drain_ready(
                             &design,
                             &objectives,
@@ -409,6 +431,7 @@ impl Sweep {
                         // restored-degraded rows keep their NaN placeholder
                         // (the writer may have streamed it already); the
                         // journal checkpoints only the rows we actually keep
+                        let mut newly = 0usize;
                         for (k, r) in (lo..hi).enumerate() {
                             if degraded[r] {
                                 continue;
@@ -418,7 +441,12 @@ impl Sweep {
                             if !done[r] {
                                 done[r] = true;
                                 evaluated += 1;
+                                newly += 1;
                             }
+                        }
+                        done_rows += newly;
+                        if let Some(p) = &self.progress {
+                            p(done_rows as u64, n as u64);
                         }
                         clock = clock.max(report.virtual_end);
                         if let Some(j) = &self.journal {

@@ -36,6 +36,7 @@ pub mod exploration;
 pub mod gridscale;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 pub mod workflow;
@@ -45,8 +46,8 @@ pub use error::{Error, Result};
 /// Common imports for examples and downstream users.
 pub mod prelude {
     pub use crate::broker::{
-        Broker, DispatchPolicy, EwmaPolicy, FaultPlan, FaultyEnv, FlakyEnv,
-        Journal, LeastInFlight, RetryPolicy, RoundRobin,
+        Broker, DispatchPolicy, EwmaPolicy, FairShare, FaultPlan, FaultyEnv,
+        FlakyEnv, Journal, LeastInFlight, RetryPolicy, RoundRobin, TenantEnv,
     };
     pub use crate::core::{
         val_f64, val_i64, val_str, val_u32, Context, Val, VarSpec, VarType,

@@ -8,6 +8,8 @@
 //!   island     island NSGA-II on a remote env    (Listing 5)
 //!   render     draw the ant world                (Figures 1–2)
 //!   envs       show the available environments
+//!   serve      multi-tenant experiment daemon    (JSONL over TCP)
+//!   client     thin client for a running daemon
 //!
 //! Every run subcommand parses into one MoleDSL v2
 //! `molers::workflow::Experiment` (see `cli::front`) — construction,
@@ -40,12 +42,15 @@ fn main() {
         Some("island") => cmd_island(&args),
         Some("render") => cmd_render(&args),
         Some("envs") => cmd_envs(),
+        Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand `{o}`\n");
             }
             eprintln!(
-                "usage: molers <run|explore|replicate|calibrate|island|render|envs> [options]\n\
+                "usage: molers <run|explore|replicate|calibrate|island|render|envs|serve|client> \
+                 [options]\n\
                  common options: --seed N --env local|ssh|pbs|slurm|sge|oar|condor|egi\n\
                  \x20          --envs local:8,pbs:32~0.2,egi:biomed:2000 (brokered fleet;\n\
                  \x20          `~p` drops submissions; `~drop=0.2;hang=0.01;delay=0.1:30;\n\
@@ -68,7 +73,12 @@ fn main() {
                  island:    --islands 2000 --total-evals 200000 --sample 50 \
                  --evals-per-island 100 --nodes 2000\n\
                  \x20          --journal run.jsonl | --resume run.jsonl\n\
-                 render:    --ticks 400 --out world.ppm"
+                 render:    --ticks 400 --out world.ppm\n\
+                 serve:     --addr 127.0.0.1:4268 --state-dir molers-serve --envs local:8\n\
+                 \x20          --max-running 4 --max-queued 64 --slots 0 (0 = fleet capacity)\n\
+                 client:    submit <method> [method options] --tenant NAME --weight W |\n\
+                 \x20          list | status --id N | watch --id N | cancel --id N |\n\
+                 \x20          result --id N | ping | shutdown  (--addr HOST:PORT)"
             );
             std::process::exit(2);
         }
@@ -199,9 +209,7 @@ fn cmd_replicate(args: &Args) -> CmdResult {
 fn cmd_calibrate(args: &Args) -> CmdResult {
     let report = front::calibrate(args)?.run()?;
     let o = &report.outcome;
-    if report.broker.is_some() {
-        print_env_stats(&report);
-    }
+    print_env_stats(&report);
     println!(
         "\nevaluations={} virtual-makespan={:.0}s pareto-front:",
         o.evaluations, o.virtual_makespan
@@ -253,6 +261,20 @@ fn cmd_render(args: &Args) -> CmdResult {
             sim.remaining()
         );
     }
+    Ok(())
+}
+
+/// `molers serve`: the multi-tenant experiment daemon (see
+/// `molers::serve` for the protocol and state-directory layout).
+fn cmd_serve(args: &Args) -> CmdResult {
+    let cfg = molers::serve::ServeConfig::from_args(args)?;
+    molers::serve::serve(cfg)?;
+    Ok(())
+}
+
+/// `molers client`: one request line to a running daemon.
+fn cmd_client(args: &Args) -> CmdResult {
+    molers::serve::client::cmd_client(args)?;
     Ok(())
 }
 

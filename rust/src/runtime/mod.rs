@@ -15,6 +15,11 @@ use crate::evolution::evaluator::{AntSimEvaluator, Evaluator};
 
 /// The production evaluator if artifacts are built, otherwise the
 /// pure-Rust twin — so every example/bench degrades gracefully.
+///
+/// `MOLERS_SIM_TICKS=N` overrides the rust-sim tick count (default 1000):
+/// a low-fidelity knob for integration tests that drive whole CLI or
+/// server runs. Deterministic for a given value, so a reference run and a
+/// resumed/served run under the same setting stay byte-identical.
 pub fn best_available_evaluator(workers: usize) -> (Arc<dyn Evaluator>, &'static str) {
     if ArtifactManifest::available() {
         match PjrtEvaluator::from_default_artifacts(workers) {
@@ -22,5 +27,12 @@ pub fn best_available_evaluator(workers: usize) -> (Arc<dyn Evaluator>, &'static
             Err(e) => eprintln!("pjrt unavailable ({e}); falling back to rust sim"),
         }
     }
-    (Arc::new(AntSimEvaluator::new()), "rust-sim")
+    let mut sim = AntSimEvaluator::new();
+    if let Some(ticks) = std::env::var("MOLERS_SIM_TICKS")
+        .ok()
+        .and_then(|v| v.trim().parse::<u32>().ok())
+    {
+        sim.max_ticks = ticks.max(1);
+    }
+    (Arc::new(sim), "rust-sim")
 }

@@ -1,0 +1,162 @@
+//! `molers client` — the thin client: build one request line from the
+//! CLI, send it over TCP, print the response line(s). No engine code
+//! runs client-side; every response is the server's own JSONL, echoed
+//! verbatim (scripts pipe it straight into a JSON parser).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use crate::cli::Args;
+use crate::error::{Error, Result};
+use crate::serve::protocol::{obj, DEFAULT_ADDR};
+use crate::util::json::{self, Json};
+
+/// Options the client consumes itself (addressing + submission identity)
+/// — everything else is forwarded to the server as a method option.
+const CLIENT_KEYS: &[&str] = &["addr", "id", "tenant", "weight"];
+
+/// Dispatch `molers client <action> ...`.
+pub fn cmd_client(args: &Args) -> Result<()> {
+    let Some(action) = args.positional().first() else {
+        return Err(Error::Config(
+            "client requires an action \
+             (submit|list|status|watch|cancel|result|ping|shutdown)"
+                .into(),
+        ));
+    };
+    let addr = args.get_or("addr", DEFAULT_ADDR).to_string();
+    match action.as_str() {
+        "submit" => submit(&addr, args),
+        "status" | "cancel" | "result" => {
+            one_shot(&addr, &obj(vec![
+                ("cmd", Json::Str(action.clone())),
+                ("id", Json::Num(require_id(args)? as f64)),
+            ])
+            .to_string())
+        }
+        "list" | "ping" | "shutdown" => {
+            one_shot(&addr, &obj(vec![("cmd", Json::Str(action.clone()))]).to_string())
+        }
+        "watch" => watch(&addr, require_id(args)?),
+        other => Err(Error::Config(format!(
+            "unknown client action `{other}` \
+             (submit|list|status|watch|cancel|result|ping|shutdown)"
+        ))),
+    }
+}
+
+fn require_id(args: &Args) -> Result<u64> {
+    if args.get("id").is_none() {
+        return Err(Error::Config("this action requires --id N".into()));
+    }
+    args.u64("id", 0).map_err(Error::Config)
+}
+
+/// `molers client submit <method> --opt v --flag`: forward the parsed
+/// method options verbatim as the wire payload.
+fn submit(addr: &str, args: &Args) -> Result<()> {
+    let Some(run) = args.positional().get(1) else {
+        return Err(Error::Config(
+            "client submit requires a method \
+             (run|explore|replicate|calibrate|island)"
+                .into(),
+        ));
+    };
+    let options: Json = Json::Obj(
+        args.options()
+            .filter(|(k, _)| !CLIENT_KEYS.contains(k))
+            .map(|(k, v)| (k.to_string(), Json::Str(v.to_string())))
+            .collect(),
+    );
+    let flags = Json::Arr(
+        args.flag_names()
+            .iter()
+            .filter(|f| !CLIENT_KEYS.contains(&f.as_str()))
+            .map(|f| Json::Str(f.clone()))
+            .collect(),
+    );
+    let line = obj(vec![
+        ("cmd", Json::Str("submit".into())),
+        ("run", Json::Str(run.clone())),
+        ("tenant", Json::Str(args.get_or("tenant", "default").to_string())),
+        (
+            "weight",
+            Json::Num(args.u64("weight", 1).map_err(Error::Config)? as f64),
+        ),
+        ("options", options),
+        ("flags", flags),
+    ])
+    .to_string();
+    one_shot(addr, &line)
+}
+
+/// Send one request line, print the one response line, surface
+/// `{"ok":false}` as a CLI error.
+fn one_shot(addr: &str, line: &str) -> Result<()> {
+    let mut stream = TcpStream::connect(addr).map_err(|e| connect_error(addr, &e))?;
+    writeln!(stream, "{line}")?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp)?;
+    let resp = resp.trim_end();
+    if resp.is_empty() {
+        return Err(Error::Config(format!(
+            "server at {addr} closed the connection without a response"
+        )));
+    }
+    println!("{resp}");
+    check_ok(resp)
+}
+
+/// Stream `watch` events until the experiment reaches a terminal state.
+fn watch(addr: &str, id: u64) -> Result<()> {
+    let mut stream = TcpStream::connect(addr).map_err(|e| connect_error(addr, &e))?;
+    writeln!(
+        stream,
+        "{}",
+        obj(vec![
+            ("cmd", Json::Str("watch".into())),
+            ("id", Json::Num(id as f64)),
+        ])
+    )?;
+    stream.flush()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        println!("{line}");
+        check_ok(&line)?;
+        if let Ok(ev) = json::parse(&line) {
+            if ev.get("event").and_then(Json::as_str) == Some("state")
+                && matches!(
+                    ev.get("state").and_then(Json::as_str),
+                    Some("done" | "degraded" | "failed" | "cancelled")
+                )
+            {
+                return Ok(());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn check_ok(line: &str) -> Result<()> {
+    if let Ok(v) = json::parse(line) {
+        if v.get("ok") == Some(&Json::Bool(false)) {
+            let msg = v
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("server error")
+                .to_string();
+            return Err(Error::Config(msg));
+        }
+    }
+    Ok(())
+}
+
+fn connect_error(addr: &str, e: &std::io::Error) -> Error {
+    Error::EnvironmentError {
+        environment: "client".into(),
+        message: format!("cannot connect to molers serve at {addr}: {e}"),
+    }
+}

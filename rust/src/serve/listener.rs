@@ -1,0 +1,141 @@
+//! The TCP front: bind, accept, and speak the JSONL protocol — one
+//! thread per connection, one JSON object per line in both directions.
+//!
+//! `watch` is the only streaming command: the connection subscribes to
+//! the experiment's registry events *before* snapshotting its state (so
+//! no transition can fall between snapshot and subscription), then
+//! forwards `state`/`progress` lines until a terminal state arrives.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::serve::protocol::{self, err, obj, ok};
+use crate::serve::registry::ExpRecord;
+use crate::serve::scheduler::{ServeConfig, Server};
+use crate::util::json::Json;
+
+/// Run the daemon: build the [`Server`], start its scheduler, bind the
+/// listen address (writing the bound address to `<state-dir>/addr` so
+/// `--addr 127.0.0.1:0` is discoverable), and accept forever.
+pub fn serve(cfg: ServeConfig) -> Result<()> {
+    let server = Server::new(cfg)?;
+    server.start();
+    let listener = TcpListener::bind(&server.config().addr)?;
+    let actual = listener.local_addr()?;
+    let dir = server.registry().dir().to_path_buf();
+    std::fs::write(dir.join("addr"), format!("{actual}\n"))?;
+    println!(
+        "molers serve: listening on {actual} (state dir {})",
+        dir.display()
+    );
+    let _ = std::io::stdout().flush();
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { continue };
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || {
+            let _ = handle_conn(&server, stream);
+        });
+    }
+    Ok(())
+}
+
+/// One connection: read request lines until EOF, answer each.
+fn handle_conn(server: &Arc<Server>, stream: TcpStream) -> std::io::Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match protocol::parse_request(&line) {
+            Ok(r) => r,
+            Err(e) => {
+                writeln!(out, "{}", err(&e.to_string()))?;
+                continue;
+            }
+        };
+        match req.cmd.as_str() {
+            "shutdown" => {
+                writeln!(out, "{}", ok(vec![("shutdown", Json::Bool(true))]))?;
+                out.flush()?;
+                // journals are flushed per record; exiting here is the
+                // crash the restart path is built to survive anyway
+                std::process::exit(0);
+            }
+            "watch" => {
+                let Some(id) = req.id else {
+                    writeln!(out, "{}", err("`watch` requires `id`"))?;
+                    continue;
+                };
+                watch(server, &mut out, id)?;
+            }
+            _ => {
+                writeln!(out, "{}", server.handle(&req))?;
+            }
+        }
+        out.flush()?;
+    }
+    Ok(())
+}
+
+/// Stream an experiment's events until it reaches a terminal state.
+fn watch(server: &Arc<Server>, out: &mut TcpStream, id: u64) -> std::io::Result<()> {
+    // subscribe FIRST: any transition after this snapshot arrives as an
+    // event, so the terminal state can never slip between the two
+    let rx = server.registry().subscribe(id);
+    let Some(rec) = server.registry().get(id) else {
+        writeln!(out, "{}", err(&format!("unknown experiment id {id}")))?;
+        return Ok(());
+    };
+    writeln!(out, "{}", state_event(&rec))?;
+    out.flush()?;
+    if rec.state.is_terminal() {
+        return Ok(());
+    }
+    loop {
+        match rx.recv_timeout(Duration::from_millis(300)) {
+            Ok(ev) => {
+                let terminal = ev.get("event").and_then(Json::as_str) == Some("state")
+                    && ev
+                        .get("state")
+                        .and_then(Json::as_str)
+                        .and_then(crate::serve::registry::ExpState::parse)
+                        .is_some_and(|s| s.is_terminal());
+                writeln!(out, "{ev}")?;
+                out.flush()?;
+                if terminal {
+                    return Ok(());
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                // belt-and-braces: if the sender side was somehow torn
+                // down between events, fall back to polling the registry
+                if let Some(rec) = server.registry().get(id) {
+                    if rec.state.is_terminal() {
+                        writeln!(out, "{}", state_event(&rec))?;
+                        out.flush()?;
+                        return Ok(());
+                    }
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
+        }
+    }
+}
+
+/// An experiment's current state as one `{"event":"state",...}` line.
+fn state_event(rec: &ExpRecord) -> String {
+    let mut fields = vec![
+        ("event", Json::Str("state".into())),
+        ("id", Json::Num(rec.id as f64)),
+        ("state", Json::Str(rec.state.as_str().into())),
+    ];
+    if let Some(e) = &rec.error {
+        fields.push(("error", Json::Str(e.clone())));
+    }
+    obj(fields).to_string()
+}

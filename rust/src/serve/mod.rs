@@ -1,0 +1,77 @@
+//! `molers serve` — a multi-tenant experiment service over one shared
+//! broker (ROADMAP item 1, the "production traffic" jump): a persistent
+//! daemon that accepts [`Experiment`](crate::workflow::Experiment)
+//! submissions from many concurrent clients, runs them over **one**
+//! fleet + thread pool, streams progress back, and survives its own
+//! death by replaying journals.
+//!
+//! ## Wire protocol
+//!
+//! One JSON object per line over TCP — the same dependency-free line
+//! format as the [journal](crate::broker::journal). Requests:
+//!
+//! ```text
+//! {"cmd":"submit","run":"explore","tenant":"alice","weight":2,
+//!  "options":{"n":"200","chunk":"8","sampling":"sobol"},
+//!  "flags":["degraded-ok"]}
+//! {"cmd":"list"}
+//! {"cmd":"status","id":3}
+//! {"cmd":"watch","id":3}
+//! {"cmd":"cancel","id":3}
+//! {"cmd":"result","id":3}
+//! {"cmd":"ping"}
+//! {"cmd":"shutdown"}
+//! ```
+//!
+//! Every response is one `{"ok":true,...}` / `{"ok":false,"error":...}`
+//! line; `watch` instead streams `{"event":"state"|"progress",...}` lines
+//! until the experiment reaches a terminal state. Submission options are
+//! the method's own CLI options, verbatim — the server builds the same
+//! [`Experiment`](crate::workflow::Experiment) that `molers <run> ...`
+//! would, via [`front::by_name`](crate::cli::front::by_name). Fleet and
+//! persistence options (`--envs`, `--out`, `--journal`, ...) are
+//! server-owned and stripped from submissions.
+//!
+//! ## Admission control and fair scheduling
+//!
+//! Submissions are validated (a bad method/option is rejected with the
+//! CLI's own error before an id is allocated), then admitted into a
+//! bounded queue — a saturated server answers
+//! `{"ok":false,"error":"server saturated: ..."}` instead of queueing
+//! unboundedly. At most `max_running` experiments execute concurrently,
+//! and their jobs meet at a [`FairShare`](crate::broker::FairShare) gate
+//! in front of the shared broker: weighted round-robin across tenants'
+//! pending chunks, so a 200k-row sweep cannot starve a 100-row run (see
+//! [`crate::broker::fairshare`] for the discipline).
+//!
+//! ## Restart survival
+//!
+//! The state directory is the source of truth:
+//!
+//! ```text
+//! <dir>/server.jsonl        submissions + terminal states (replayed)
+//! <dir>/addr                the bound listen address (for tests/scripts)
+//! <dir>/exp-N.jsonl         per-experiment checkpoint journal
+//! <dir>/exp-N.csv           explore result file
+//! <dir>/exp-N.result.jsonl  terminal summary + pareto points
+//! ```
+//!
+//! On restart every non-terminal experiment is re-enqueued: methods with
+//! a usable checkpoint resume from their own journal (the PR 2/4/6
+//! machinery — an explore resumes to a byte-identical result file),
+//! methods whose journal holds no checkpoint restart from scratch under
+//! the same seed, and failures during restoration mark the experiment
+//! `degraded` rather than losing it silently. Experiments are keyed by a
+//! monotone id, so two experiments never collide on journal or result
+//! file names.
+
+pub mod client;
+pub mod listener;
+pub mod protocol;
+pub mod registry;
+pub mod scheduler;
+
+pub use listener::serve;
+pub use protocol::{Request, DEFAULT_ADDR};
+pub use registry::{ExpRecord, ExpState, Registry};
+pub use scheduler::{ServeConfig, Server};

@@ -1,0 +1,150 @@
+//! Request parsing and response building for the JSONL wire protocol
+//! (grammar in the [module docs](crate::serve)). One JSON object per
+//! line, both directions; responses always carry an `ok` field.
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+/// Default listen address. `--addr 127.0.0.1:0` binds an ephemeral port
+/// (written to `<state-dir>/addr` for scripts to discover).
+pub const DEFAULT_ADDR: &str = "127.0.0.1:4268";
+
+/// One parsed request line.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub cmd: String,
+    /// Experiment id, for `status`/`watch`/`cancel`/`result`.
+    pub id: Option<u64>,
+    /// Fair-share tenant name (`"default"` when absent).
+    pub tenant: String,
+    /// Fair-share weight (clamped to ≥ 1).
+    pub weight: u64,
+    /// Method name for `submit` (`run|explore|replicate|calibrate|island`).
+    pub run: Option<String>,
+    /// Method CLI options, key → value (non-string values are allowed on
+    /// the wire and stringified).
+    pub options: Vec<(String, String)>,
+    /// Method CLI flags.
+    pub flags: Vec<String>,
+}
+
+/// Parse one request line. Unknown fields are ignored — older clients
+/// keep working against newer servers.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let v = json::parse(line)
+        .map_err(|e| Error::Config(format!("bad request line: {e}")))?;
+    let cmd = v
+        .get("cmd")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Config("request is missing `cmd`".into()))?
+        .to_string();
+    let mut options = Vec::new();
+    if let Some(obj) = v.get("options").and_then(Json::as_obj) {
+        for (k, val) in obj {
+            let s = match val {
+                Json::Str(s) => s.clone(),
+                other => other.to_string(),
+            };
+            options.push((k.clone(), s));
+        }
+    }
+    let mut flags = Vec::new();
+    if let Some(arr) = v.get("flags").and_then(Json::as_arr) {
+        for f in arr {
+            if let Some(s) = f.as_str() {
+                flags.push(s.to_string());
+            }
+        }
+    }
+    Ok(Request {
+        cmd,
+        id: v.get("id").and_then(Json::as_f64).map(|f| f as u64),
+        tenant: v
+            .get("tenant")
+            .and_then(Json::as_str)
+            .unwrap_or("default")
+            .to_string(),
+        weight: v
+            .get("weight")
+            .and_then(Json::as_f64)
+            .map(|f| f as u64)
+            .unwrap_or(1)
+            .max(1),
+        run: v.get("run").and_then(Json::as_str).map(str::to_string),
+        options,
+        flags,
+    })
+}
+
+/// Build a JSON object from `(key, value)` pairs.
+pub fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        fields
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
+    )
+}
+
+/// An `{"ok":true,...}` response line (no trailing newline).
+pub fn ok(mut fields: Vec<(&str, Json)>) -> String {
+    fields.insert(0, ("ok", Json::Bool(true)));
+    obj(fields).to_string()
+}
+
+/// An `{"ok":false,"error":...}` response line (no trailing newline).
+pub fn err(msg: &str) -> String {
+    obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.to_string())),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_round_trips() {
+        let line = "{\"cmd\":\"submit\",\"run\":\"explore\",\"tenant\":\"alice\",\
+                    \"weight\":2,\"options\":{\"n\":\"200\",\"chunk\":8},\
+                    \"flags\":[\"degraded-ok\"]}";
+        let r = parse_request(line).unwrap();
+        assert_eq!(r.cmd, "submit");
+        assert_eq!(r.run.as_deref(), Some("explore"));
+        assert_eq!(r.tenant, "alice");
+        assert_eq!(r.weight, 2);
+        assert_eq!(
+            r.options,
+            vec![
+                ("chunk".to_string(), "8".to_string()),
+                ("n".to_string(), "200".to_string())
+            ],
+            "numeric option values are stringified"
+        );
+        assert_eq!(r.flags, vec!["degraded-ok".to_string()]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let r = parse_request("{\"cmd\":\"list\"}").unwrap();
+        assert_eq!(r.tenant, "default");
+        assert_eq!(r.weight, 1);
+        assert!(r.id.is_none());
+        assert!(parse_request("{\"id\":3}").is_err(), "cmd is mandatory");
+        assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn responses_are_single_json_lines() {
+        let line = ok(vec![("id", Json::Num(3.0))]);
+        assert_eq!(line, "{\"id\":3,\"ok\":true}");
+        assert!(!line.contains('\n'));
+        let line = err("server saturated: 4 queued");
+        assert_eq!(
+            line,
+            "{\"error\":\"server saturated: 4 queued\",\"ok\":false}"
+        );
+    }
+}

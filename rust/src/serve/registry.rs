@@ -1,0 +1,489 @@
+//! The server's experiment table: id allocation, state transitions, the
+//! `server.jsonl` meta-journal that makes them replayable, and the event
+//! fan-out behind `watch`.
+//!
+//! Two record kinds are journaled (same line format as every other
+//! journal in the crate):
+//!
+//! ```text
+//! {"kind":"exp","id":3,"tenant":"alice","weight":2,"run":"explore",
+//!  "argv":["explore","--n","200"]}                       at submission
+//! {"kind":"exp_state","id":3,"state":"done","summary":{...}}  terminal only
+//! ```
+//!
+//! Intermediate states (`running`, progress) are deliberately *not*
+//! journaled: on replay a non-terminal experiment simply returns to
+//! `queued` and the scheduler re-runs it — resuming from its own
+//! per-experiment checkpoint journal where one exists. Terminal records
+//! win over re-submissions, so a finished experiment is never re-run.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+
+use crate::broker::journal::Journal;
+use crate::error::Result;
+use crate::serve::protocol::obj;
+use crate::util::json::Json;
+
+/// Lifecycle of one served experiment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExpState {
+    Queued,
+    Running,
+    Done,
+    /// Finished, but some rows carry NaN objectives (`--degraded-ok`) or
+    /// the run was restored without a usable checkpoint after a restart.
+    Degraded,
+    Failed,
+    Cancelled,
+}
+
+impl ExpState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ExpState::Queued => "queued",
+            ExpState::Running => "running",
+            ExpState::Done => "done",
+            ExpState::Degraded => "degraded",
+            ExpState::Failed => "failed",
+            ExpState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "queued" => ExpState::Queued,
+            "running" => ExpState::Running,
+            "done" => ExpState::Done,
+            "degraded" => ExpState::Degraded,
+            "failed" => ExpState::Failed,
+            "cancelled" => ExpState::Cancelled,
+            _ => return None,
+        })
+    }
+
+    /// No further transitions once reached.
+    pub fn is_terminal(self) -> bool {
+        matches!(
+            self,
+            ExpState::Done | ExpState::Degraded | ExpState::Failed | ExpState::Cancelled
+        )
+    }
+}
+
+/// One experiment's full record.
+#[derive(Debug, Clone)]
+pub struct ExpRecord {
+    pub id: u64,
+    pub tenant: String,
+    pub weight: u64,
+    /// Method name (`run|explore|replicate|calibrate|island`).
+    pub run: String,
+    /// Sanitized CLI argv the server re-parses to build the experiment
+    /// (journaled, so a restart rebuilds the identical configuration).
+    pub argv: Vec<String>,
+    pub state: ExpState,
+    /// States visited, in order (`["queued","running","done"]`).
+    pub history: Vec<&'static str>,
+    pub error: Option<String>,
+    /// Terminal summary (evaluations, outcome, tenant env stats, ...).
+    pub summary: Option<Json>,
+    /// Progress in the method's natural unit.
+    pub done: u64,
+    pub total: u64,
+    /// Replayed from `server.jsonl` after a daemon restart.
+    pub restored: bool,
+}
+
+struct Inner {
+    records: BTreeMap<u64, ExpRecord>,
+    next_id: u64,
+}
+
+/// The experiment table + meta-journal + watch subscriptions.
+pub struct Registry {
+    dir: PathBuf,
+    journal: Journal,
+    inner: Mutex<Inner>,
+    watchers: Mutex<Vec<(u64, Sender<Json>)>>,
+}
+
+impl Registry {
+    /// Open (or create) a state directory, replaying `server.jsonl`:
+    /// terminal experiments come back as-is, non-terminal ones return to
+    /// `queued` with `restored` set so the scheduler re-runs them from
+    /// their own checkpoint journals.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join("server.jsonl");
+        let mut records: BTreeMap<u64, ExpRecord> = BTreeMap::new();
+        let mut next_id = 1u64;
+        if path.exists() {
+            for rec in Journal::load(&path)? {
+                let id = match rec.get("id").and_then(Json::as_f64) {
+                    Some(f) => f as u64,
+                    None => continue,
+                };
+                match rec.get("kind").and_then(Json::as_str) {
+                    Some("exp") => {
+                        let argv = rec
+                            .get("argv")
+                            .and_then(Json::as_arr)
+                            .map(|a| {
+                                a.iter()
+                                    .filter_map(Json::as_str)
+                                    .map(str::to_string)
+                                    .collect()
+                            })
+                            .unwrap_or_default();
+                        records.insert(
+                            id,
+                            ExpRecord {
+                                id,
+                                tenant: rec
+                                    .get("tenant")
+                                    .and_then(Json::as_str)
+                                    .unwrap_or("default")
+                                    .to_string(),
+                                weight: rec
+                                    .get("weight")
+                                    .and_then(Json::as_f64)
+                                    .map(|f| f as u64)
+                                    .unwrap_or(1)
+                                    .max(1),
+                                run: rec
+                                    .get("run")
+                                    .and_then(Json::as_str)
+                                    .unwrap_or("")
+                                    .to_string(),
+                                argv,
+                                state: ExpState::Queued,
+                                history: vec!["queued"],
+                                error: None,
+                                summary: None,
+                                done: 0,
+                                total: 0,
+                                restored: true,
+                            },
+                        );
+                        next_id = next_id.max(id + 1);
+                    }
+                    Some("exp_state") => {
+                        if let Some(r) = records.get_mut(&id) {
+                            if let Some(state) = rec
+                                .get("state")
+                                .and_then(Json::as_str)
+                                .and_then(ExpState::parse)
+                            {
+                                r.state = state;
+                                r.history = vec!["queued", "running", state.as_str()];
+                            }
+                            r.error = rec
+                                .get("error")
+                                .and_then(Json::as_str)
+                                .map(str::to_string);
+                            r.summary = rec.get("summary").cloned();
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        let journal = Journal::append_to(&path)?;
+        Ok(Registry {
+            dir,
+            journal,
+            inner: Mutex::new(Inner { records, next_id }),
+            watchers: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Per-experiment file paths — keyed by the unique id, so concurrent
+    /// experiments can never collide on names.
+    pub fn csv_path(&self, id: u64) -> String {
+        self.dir.join(format!("exp-{id}.csv")).to_string_lossy().into_owned()
+    }
+
+    pub fn journal_path(&self, id: u64) -> String {
+        self.dir.join(format!("exp-{id}.jsonl")).to_string_lossy().into_owned()
+    }
+
+    pub fn result_path(&self, id: u64) -> String {
+        self.dir
+            .join(format!("exp-{id}.result.jsonl"))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    /// Register a new experiment (journaled), returning its id.
+    pub fn submit(
+        &self,
+        tenant: &str,
+        weight: u64,
+        run: &str,
+        argv: Vec<String>,
+    ) -> Result<u64> {
+        let id = {
+            let mut inner = self.inner.lock().unwrap();
+            let id = inner.next_id;
+            inner.next_id += 1;
+            inner.records.insert(
+                id,
+                ExpRecord {
+                    id,
+                    tenant: tenant.to_string(),
+                    weight: weight.max(1),
+                    run: run.to_string(),
+                    argv: argv.clone(),
+                    state: ExpState::Queued,
+                    history: vec!["queued"],
+                    error: None,
+                    summary: None,
+                    done: 0,
+                    total: 0,
+                    restored: false,
+                },
+            );
+            id
+        };
+        self.journal.append(&obj(vec![
+            ("kind", Json::Str("exp".into())),
+            ("id", Json::Num(id as f64)),
+            ("tenant", Json::Str(tenant.to_string())),
+            ("weight", Json::Num(weight.max(1) as f64)),
+            ("run", Json::Str(run.to_string())),
+            (
+                "argv",
+                Json::Arr(argv.into_iter().map(Json::Str).collect()),
+            ),
+        ]))?;
+        self.emit_state(id, ExpState::Queued, None);
+        Ok(id)
+    }
+
+    /// Mark an experiment running (not journaled — a replayed run returns
+    /// to `queued` and is re-run).
+    pub fn set_running(&self, id: u64) {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(r) = inner.records.get_mut(&id) {
+                if r.state.is_terminal() {
+                    return;
+                }
+                r.state = ExpState::Running;
+                r.history.push("running");
+            }
+        }
+        self.emit_state(id, ExpState::Running, None);
+    }
+
+    /// Record a terminal state (journaled). A second terminal transition
+    /// is ignored — cancel/finish races resolve to whichever lands first.
+    pub fn finish(
+        &self,
+        id: u64,
+        state: ExpState,
+        error: Option<String>,
+        summary: Option<Json>,
+    ) -> Result<()> {
+        debug_assert!(state.is_terminal());
+        {
+            let mut inner = self.inner.lock().unwrap();
+            let Some(r) = inner.records.get_mut(&id) else {
+                return Ok(());
+            };
+            if r.state.is_terminal() {
+                return Ok(());
+            }
+            r.state = state;
+            r.history.push(state.as_str());
+            r.error = error.clone();
+            r.summary = summary.clone();
+        }
+        let mut fields = vec![
+            ("kind", Json::Str("exp_state".into())),
+            ("id", Json::Num(id as f64)),
+            ("state", Json::Str(state.as_str().into())),
+        ];
+        if let Some(e) = &error {
+            fields.push(("error", Json::Str(e.clone())));
+        }
+        if let Some(s) = summary {
+            fields.push(("summary", s));
+        }
+        self.journal.append(&obj(fields))?;
+        self.emit_state(id, state, error);
+        Ok(())
+    }
+
+    /// Update progress and notify watchers.
+    pub fn progress(&self, id: u64, done: u64, total: u64) {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(r) = inner.records.get_mut(&id) {
+                r.done = done;
+                r.total = total;
+            }
+        }
+        self.emit(
+            id,
+            obj(vec![
+                ("event", Json::Str("progress".into())),
+                ("id", Json::Num(id as f64)),
+                ("done", Json::Num(done as f64)),
+                ("total", Json::Num(total as f64)),
+            ]),
+        );
+    }
+
+    pub fn get(&self, id: u64) -> Option<ExpRecord> {
+        self.inner.lock().unwrap().records.get(&id).cloned()
+    }
+
+    pub fn list(&self) -> Vec<ExpRecord> {
+        self.inner.lock().unwrap().records.values().cloned().collect()
+    }
+
+    /// Ids still queued (ascending) — the scheduler's restart re-enqueue.
+    pub fn queued_ids(&self) -> Vec<u64> {
+        self.inner
+            .lock()
+            .unwrap()
+            .records
+            .values()
+            .filter(|r| r.state == ExpState::Queued)
+            .map(|r| r.id)
+            .collect()
+    }
+
+    /// Experiments not yet terminal (admission-control pressure).
+    pub fn active_count(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .records
+            .values()
+            .filter(|r| !r.state.is_terminal())
+            .count()
+    }
+
+    /// Subscribe to an experiment's events. The receiver gets every
+    /// `state`/`progress` event emitted after this call; dead receivers
+    /// are pruned on the next emit.
+    pub fn subscribe(&self, id: u64) -> Receiver<Json> {
+        let (tx, rx) = channel();
+        self.watchers.lock().unwrap().push((id, tx));
+        rx
+    }
+
+    fn emit_state(&self, id: u64, state: ExpState, error: Option<String>) {
+        let mut fields = vec![
+            ("event", Json::Str("state".into())),
+            ("id", Json::Num(id as f64)),
+            ("state", Json::Str(state.as_str().into())),
+        ];
+        if let Some(e) = error {
+            fields.push(("error", Json::Str(e)));
+        }
+        self.emit(id, obj(fields));
+    }
+
+    fn emit(&self, id: u64, event: Json) {
+        let mut ws = self.watchers.lock().unwrap();
+        ws.retain(|(wid, tx)| *wid != id || tx.send(event.clone()).is_ok());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "molers-registry-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn replay_restores_terminal_and_requeues_unfinished() {
+        let dir = tmp_dir("replay");
+        {
+            let reg = Registry::open(&dir).unwrap();
+            let a = reg
+                .submit("alice", 1, "explore", vec!["explore".into(), "--n".into(), "9".into()])
+                .unwrap();
+            let b = reg.submit("bob", 2, "calibrate", vec!["calibrate".into()]).unwrap();
+            reg.set_running(a);
+            reg.set_running(b);
+            reg.finish(b, ExpState::Done, None, Some(Json::Num(1.0))).unwrap();
+            assert_eq!(a, 1);
+            assert_eq!(b, 2);
+        }
+        // "restart": replay the same directory
+        let reg = Registry::open(&dir).unwrap();
+        let a = reg.get(1).unwrap();
+        assert_eq!(a.state, ExpState::Queued, "unfinished run returns to queued");
+        assert!(a.restored);
+        assert_eq!(a.argv, vec!["explore", "--n", "9"]);
+        let b = reg.get(2).unwrap();
+        assert_eq!(b.state, ExpState::Done, "terminal record wins");
+        assert_eq!(b.summary, Some(Json::Num(1.0)));
+        assert_eq!(reg.queued_ids(), vec![1]);
+        // ids continue past the replayed maximum
+        let c = reg.submit("carol", 1, "run", vec!["run".into()]).unwrap();
+        assert_eq!(c, 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn double_finish_keeps_the_first_terminal_state() {
+        let dir = tmp_dir("double");
+        let reg = Registry::open(&dir).unwrap();
+        let id = reg.submit("t", 1, "run", vec!["run".into()]).unwrap();
+        reg.finish(id, ExpState::Cancelled, Some("cancelled".into()), None).unwrap();
+        reg.finish(id, ExpState::Failed, Some("late error".into()), None).unwrap();
+        let r = reg.get(id).unwrap();
+        assert_eq!(r.state, ExpState::Cancelled);
+        assert_eq!(r.error.as_deref(), Some("cancelled"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn watchers_receive_events_after_subscribing() {
+        let dir = tmp_dir("watch");
+        let reg = Registry::open(&dir).unwrap();
+        let id = reg.submit("t", 1, "run", vec!["run".into()]).unwrap();
+        let rx = reg.subscribe(id);
+        reg.set_running(id);
+        reg.progress(id, 3, 10);
+        reg.finish(id, ExpState::Done, None, None).unwrap();
+        let kinds: Vec<String> = rx
+            .try_iter()
+            .map(|e| {
+                format!(
+                    "{}:{}",
+                    e.get("event").and_then(Json::as_str).unwrap_or("?"),
+                    e.get("state")
+                        .or_else(|| e.get("done"))
+                        .map(|v| v.to_string())
+                        .unwrap_or_default()
+                )
+            })
+            .collect();
+        assert_eq!(
+            kinds,
+            vec!["state:\"running\"", "progress:3", "state:\"done\""]
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

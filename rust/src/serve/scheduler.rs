@@ -1,0 +1,700 @@
+//! The server core: one shared fleet, admission control, the experiment
+//! scheduler, and request handling.
+//!
+//! All submissions execute over **one** broker + thread pool behind a
+//! [`FairShare`] gate — each experiment runs on its tenant's
+//! [`TenantEnv`](crate::broker::TenantEnv), so concurrent campaigns share
+//! the fleet by weighted round-robin instead of FIFO job order. At most
+//! `max_running` experiments execute concurrently (each gets a runner
+//! thread; the fair gate interleaves their chunks), and at most
+//! `max_queued` wait behind them — past that, submissions are rejected
+//! with a reason instead of queueing unboundedly.
+//!
+//! Lock order: `sched` before the registry's interior locks. The fair
+//! gate has its own ordering (see [`crate::broker::fairshare`]) and is
+//! never called with `sched` held.
+
+use std::collections::{HashMap, VecDeque};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::broker::{journal, policy, Broker, FairShare, Journal, RetryPolicy};
+use crate::cli::{front, Args};
+use crate::environment::{EnvStats, Environment};
+use crate::error::{Error, Result};
+use crate::serve::protocol::{self, err, obj, ok, Request, DEFAULT_ADDR};
+use crate::serve::registry::{ExpRecord, ExpState, Registry};
+use crate::util::json::Json;
+
+/// Options/flags a submission may NOT carry: the server owns the fleet,
+/// persistence and addressing. Rejecting silently would let a client
+/// believe e.g. `--envs` took effect, so these are stripped *and* the
+/// strip is part of the documented protocol (see [`crate::serve`]).
+const SERVER_OWNED: &[&str] = &[
+    "out",
+    "journal",
+    "resume",
+    "env",
+    "envs",
+    "policy",
+    "addr",
+    "tenant",
+    "weight",
+    "id",
+    "state-dir",
+    "max-running",
+    "max-queued",
+    "slots",
+    "speculate",
+    "timeout",
+    "max-retries",
+    "backoff",
+];
+
+/// `molers serve` configuration (parsed from CLI flags).
+#[derive(Clone)]
+pub struct ServeConfig {
+    pub addr: String,
+    pub state_dir: String,
+    /// Fleet spec shared by every experiment (`--envs local:8,pbs:32`).
+    pub envs: String,
+    pub policy: String,
+    /// Fair-share gate width; `0` = the fleet's total capacity.
+    pub slots: usize,
+    /// Experiments executing concurrently.
+    pub max_running: usize,
+    /// Experiments waiting behind them before submissions are rejected.
+    pub max_queued: usize,
+    pub seed: u64,
+    pub retry: Option<RetryPolicy>,
+}
+
+impl ServeConfig {
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let n = |r: std::result::Result<usize, String>| r.map_err(Error::Config);
+        Ok(ServeConfig {
+            addr: args.get_or("addr", DEFAULT_ADDR).to_string(),
+            state_dir: args.get_or("state-dir", "molers-serve").to_string(),
+            envs: args.get_or("envs", "local:8").to_string(),
+            policy: args.get_or("policy", "ewma").to_string(),
+            slots: n(args.usize("slots", 0))?,
+            max_running: n(args.usize("max-running", 4))?.max(1),
+            max_queued: n(args.usize("max-queued", 64))?,
+            seed: args.u64("seed", 42).map_err(Error::Config)?,
+            retry: front::retry_overrides(args)?,
+        })
+    }
+}
+
+struct Sched {
+    queue: VecDeque<u64>,
+    running: usize,
+}
+
+/// The daemon: shared fleet + fair gate + registry + scheduler.
+pub struct Server {
+    registry: Arc<Registry>,
+    broker: Arc<Broker>,
+    fair: Arc<FairShare>,
+    cfg: ServeConfig,
+    sched: Mutex<Sched>,
+    wake: Condvar,
+    cancels: Mutex<HashMap<u64, Arc<AtomicBool>>>,
+}
+
+impl Server {
+    /// Build the shared fleet, open (replaying) the state directory, and
+    /// re-enqueue every experiment that was unfinished at the last
+    /// shutdown.
+    pub fn new(cfg: ServeConfig) -> Result<Arc<Server>> {
+        let pool = Arc::new(crate::exec::ThreadPool::default_size());
+        let p = policy::by_name(&cfg.policy).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown --policy `{}` (roundrobin|least|ewma)",
+                cfg.policy
+            ))
+        })?;
+        let mut builder = Broker::spec_builder(&cfg.envs, pool, cfg.seed)?.policy(p);
+        if let Some(r) = &cfg.retry {
+            builder = builder.retry(r.clone());
+        }
+        let broker = Arc::new(builder.build()?);
+        let slots = if cfg.slots > 0 {
+            cfg.slots
+        } else {
+            broker
+                .backend_snapshots()
+                .iter()
+                .map(|b| b.capacity)
+                .sum::<usize>()
+                .max(1)
+        };
+        let fair = FairShare::new(Arc::clone(&broker) as Arc<dyn Environment>, slots);
+        let registry = Arc::new(Registry::open(&cfg.state_dir)?);
+        let queue: VecDeque<u64> = registry.queued_ids().into_iter().collect();
+        Ok(Arc::new(Server {
+            registry,
+            broker,
+            fair,
+            cfg,
+            sched: Mutex::new(Sched { queue, running: 0 }),
+            wake: Condvar::new(),
+            cancels: Mutex::new(HashMap::new()),
+        }))
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Start the scheduler thread: pops queued experiments and runs up to
+    /// `max_running` of them on runner threads. Daemon-style — lives for
+    /// the whole process.
+    pub fn start(self: &Arc<Self>) {
+        let server = Arc::clone(self);
+        std::thread::spawn(move || loop {
+            let id = {
+                let mut sched = server.sched.lock().unwrap();
+                loop {
+                    if sched.running < server.cfg.max_running {
+                        if let Some(id) = sched.queue.pop_front() {
+                            sched.running += 1;
+                            break id;
+                        }
+                    }
+                    sched = server.wake.wait(sched).unwrap();
+                }
+            };
+            let runner = Arc::clone(&server);
+            std::thread::spawn(move || {
+                runner.run_one(id);
+                let mut sched = runner.sched.lock().unwrap();
+                sched.running -= 1;
+                drop(sched);
+                runner.wake.notify_all();
+            });
+        });
+    }
+
+    // -- request handling ---------------------------------------------
+
+    /// Handle every single-response command (`watch` streams and is
+    /// driven by the listener via [`Server::registry`]).
+    pub fn handle(&self, req: &Request) -> String {
+        match req.cmd.as_str() {
+            "submit" => self.submit(req),
+            "list" => self.list(),
+            "status" => self.with_id(req, |s, id| s.status(id)),
+            "cancel" => self.with_id(req, |s, id| s.cancel(id)),
+            "result" => self.with_id(req, |s, id| s.result(id)),
+            "ping" => ok(vec![("pong", Json::Bool(true))]),
+            other => err(&format!(
+                "unknown cmd `{other}` \
+                 (submit|list|status|watch|cancel|result|ping|shutdown)"
+            )),
+        }
+    }
+
+    fn with_id(&self, req: &Request, f: impl Fn(&Self, u64) -> String) -> String {
+        match req.id {
+            Some(id) => f(self, id),
+            None => err(&format!("`{}` requires `id`", req.cmd)),
+        }
+    }
+
+    /// Validate, admit, journal, enqueue — in that order, so a rejected
+    /// submission allocates no id and leaves no trace.
+    fn submit(&self, req: &Request) -> String {
+        let Some(run) = &req.run else {
+            return err("submit requires `run` (run|explore|replicate|calibrate|island)");
+        };
+        let argv = sanitize_argv(run, &req.options, &req.flags);
+        // build the experiment once now purely for validation: a bad
+        // method or option gets the CLI front's own error message back
+        let parsed = match Args::parse(argv.iter().cloned()) {
+            Ok(a) => a,
+            Err(e) => return err(&e),
+        };
+        if let Err(e) = front::by_name(run, &parsed) {
+            return err(&e.to_string());
+        }
+
+        let mut sched = self.sched.lock().unwrap();
+        if sched.queue.len() >= self.cfg.max_queued {
+            return err(&format!(
+                "server saturated: {} experiments queued (max {}) — retry later",
+                sched.queue.len(),
+                self.cfg.max_queued
+            ));
+        }
+        let id = match self.registry.submit(&req.tenant, req.weight, run, argv) {
+            Ok(id) => id,
+            Err(e) => return err(&e.to_string()),
+        };
+        sched.queue.push_back(id);
+        drop(sched);
+        self.cancels
+            .lock()
+            .unwrap()
+            .insert(id, Arc::new(AtomicBool::new(false)));
+        self.wake.notify_all();
+        ok(vec![
+            ("id", Json::Num(id as f64)),
+            ("state", Json::Str("queued".into())),
+        ])
+    }
+
+    fn list(&self) -> String {
+        let rows = self
+            .registry
+            .list()
+            .into_iter()
+            .map(|r| {
+                obj(vec![
+                    ("id", Json::Num(r.id as f64)),
+                    ("run", Json::Str(r.run)),
+                    ("tenant", Json::Str(r.tenant)),
+                    ("state", Json::Str(r.state.as_str().into())),
+                    ("done", Json::Num(r.done as f64)),
+                    ("total", Json::Num(r.total as f64)),
+                ])
+            })
+            .collect();
+        ok(vec![("experiments", Json::Arr(rows))])
+    }
+
+    fn status(&self, id: u64) -> String {
+        let Some(r) = self.registry.get(id) else {
+            return err(&format!("unknown experiment id {id}"));
+        };
+        let mut fields = vec![
+            ("id", Json::Num(r.id as f64)),
+            ("run", Json::Str(r.run)),
+            ("tenant", Json::Str(r.tenant)),
+            ("state", Json::Str(r.state.as_str().into())),
+            (
+                "history",
+                Json::Arr(r.history.iter().map(|s| Json::Str((*s).into())).collect()),
+            ),
+            ("done", Json::Num(r.done as f64)),
+            ("total", Json::Num(r.total as f64)),
+            ("restored", Json::Bool(r.restored)),
+            // fleet-wide environment stats, including the broker-enforced
+            // timeout count and chaos-injected fault count
+            ("fleet", env_stats_json(&self.broker.stats())),
+        ];
+        if let Some(e) = r.error {
+            fields.push(("error", Json::Str(e)));
+        }
+        if let Some(s) = r.summary {
+            fields.push(("summary", s));
+        }
+        ok(fields)
+    }
+
+    fn cancel(&self, id: u64) -> String {
+        let Some(r) = self.registry.get(id) else {
+            return err(&format!("unknown experiment id {id}"));
+        };
+        if r.state.is_terminal() {
+            return err(&format!("experiment {id} is already {}", r.state.as_str()));
+        }
+        self.cancel_token(id).store(true, Ordering::SeqCst);
+        // still queued → finish it here; running → the runner observes the
+        // token (queued fair-share jobs fail fast) and finishes it
+        let was_queued = {
+            let mut sched = self.sched.lock().unwrap();
+            let before = sched.queue.len();
+            sched.queue.retain(|&q| q != id);
+            sched.queue.len() != before
+        };
+        if was_queued {
+            if let Err(e) = self.registry.finish(
+                id,
+                ExpState::Cancelled,
+                Some("cancelled while queued".into()),
+                None,
+            ) {
+                return err(&e.to_string());
+            }
+            return ok(vec![
+                ("id", Json::Num(id as f64)),
+                ("state", Json::Str("cancelled".into())),
+            ]);
+        }
+        ok(vec![
+            ("id", Json::Num(id as f64)),
+            ("state", Json::Str("cancelling".into())),
+        ])
+    }
+
+    fn result(&self, id: u64) -> String {
+        let Some(r) = self.registry.get(id) else {
+            return err(&format!("unknown experiment id {id}"));
+        };
+        if !matches!(r.state, ExpState::Done | ExpState::Degraded) {
+            return err(&format!(
+                "experiment {id} is {} — results exist once it is done or degraded",
+                r.state.as_str()
+            ));
+        }
+        let path = if r.run == "explore" {
+            self.registry.csv_path(id)
+        } else {
+            self.registry.result_path(id)
+        };
+        match std::fs::read_to_string(&path) {
+            Ok(content) => ok(vec![
+                ("id", Json::Num(id as f64)),
+                ("path", Json::Str(path)),
+                ("content", Json::Str(content)),
+            ]),
+            Err(e) => err(&format!("result file `{path}` unreadable: {e}")),
+        }
+    }
+
+    // -- execution ----------------------------------------------------
+
+    fn cancel_token(&self, id: u64) -> Arc<AtomicBool> {
+        Arc::clone(
+            self.cancels
+                .lock()
+                .unwrap()
+                .entry(id)
+                .or_insert_with(|| Arc::new(AtomicBool::new(false))),
+        )
+    }
+
+    /// Run one experiment to a terminal state. Never panics the runner:
+    /// every failure path lands in [`Registry::finish`].
+    fn run_one(&self, id: u64) {
+        let Some(rec) = self.registry.get(id) else {
+            return;
+        };
+        if rec.state.is_terminal() {
+            return;
+        }
+        let token = self.cancel_token(id);
+        if token.load(Ordering::SeqCst) {
+            let _ = self.registry.finish(
+                id,
+                ExpState::Cancelled,
+                Some("cancelled while queued".into()),
+                None,
+            );
+            return;
+        }
+        self.registry.set_running(id);
+        match self.execute(&rec, Arc::clone(&token)) {
+            Ok(report) => {
+                let state = if report.outcome.degraded.is_empty() {
+                    ExpState::Done
+                } else {
+                    ExpState::Degraded
+                };
+                if let Err(e) = self.write_result_file(&rec, &report) {
+                    let _ = self.registry.finish(
+                        id,
+                        ExpState::Degraded,
+                        Some(format!("result file write failed: {e}")),
+                        Some(summary_json(&report)),
+                    );
+                    return;
+                }
+                let _ = self
+                    .registry
+                    .finish(id, state, None, Some(summary_json(&report)));
+            }
+            Err(e) => {
+                let (state, msg) = if token.load(Ordering::SeqCst) {
+                    (ExpState::Cancelled, format!("cancelled: {e}"))
+                } else if rec.restored {
+                    // a restored run that cannot re-execute is degraded,
+                    // not silently lost
+                    (ExpState::Degraded, format!("restore failed: {e}"))
+                } else {
+                    (ExpState::Failed, e.to_string())
+                };
+                let _ = self.registry.finish(id, state, Some(msg), None);
+            }
+        }
+    }
+
+    /// Build the experiment from the journaled argv and run it on this
+    /// tenant's fair-share environment, streaming progress into the
+    /// registry.
+    fn execute(
+        &self,
+        rec: &ExpRecord,
+        token: Arc<AtomicBool>,
+    ) -> Result<crate::workflow::ExperimentReport> {
+        let mut argv = rec.argv.clone();
+        if rec.run == "explore" {
+            argv.push("--out".into());
+            argv.push(self.registry.csv_path(rec.id));
+        }
+        if matches!(rec.run.as_str(), "explore" | "calibrate" | "island") {
+            let jpath = self.registry.journal_path(rec.id);
+            let resume = rec.restored && usable_checkpoint(&rec.run, &jpath);
+            argv.push(if resume { "--resume" } else { "--journal" }.into());
+            argv.push(jpath);
+        }
+        let args = Args::parse(argv).map_err(Error::Config)?;
+        let exp = front::by_name(&rec.run, &args)?;
+        let tenant_env = self
+            .fair
+            .tenant(&rec.tenant, rec.weight)
+            .with_cancel(token);
+        let registry = Arc::clone(&self.registry);
+        let id = rec.id;
+        exp.on(Arc::new(tenant_env))
+            .on_progress(Arc::new(move |done, total| {
+                registry.progress(id, done, total)
+            }))
+            .quiet()
+            .run()
+    }
+
+    /// `exp-N.result.jsonl`: one summary line, then one line per pareto
+    /// point (evolution methods). Explore results live in `exp-N.csv`,
+    /// written by the sweep itself.
+    fn write_result_file(
+        &self,
+        rec: &ExpRecord,
+        report: &crate::workflow::ExperimentReport,
+    ) -> Result<()> {
+        if rec.run == "explore" {
+            return Ok(());
+        }
+        let mut out = String::new();
+        out.push_str(&summary_json(report).to_string());
+        out.push('\n');
+        for ind in &report.outcome.pareto_front {
+            out.push_str(
+                &obj(vec![
+                    (
+                        "genome",
+                        Json::Arr(ind.genome.iter().map(|&g| Json::Num(g)).collect()),
+                    ),
+                    (
+                        "objectives",
+                        Json::Arr(ind.objectives.iter().map(|&o| Json::Num(o)).collect()),
+                    ),
+                ])
+                .to_string(),
+            );
+            out.push('\n');
+        }
+        std::fs::write(self.registry.result_path(rec.id), out)?;
+        Ok(())
+    }
+}
+
+/// Rebuild a CLI argv from a wire submission, dropping server-owned
+/// options (the strip is part of the protocol contract).
+pub(crate) fn sanitize_argv(
+    run: &str,
+    options: &[(String, String)],
+    flags: &[String],
+) -> Vec<String> {
+    let mut argv = vec![run.to_string()];
+    for (k, v) in options {
+        if !SERVER_OWNED.contains(&k.as_str()) {
+            argv.push(format!("--{k}"));
+            argv.push(v.clone());
+        }
+    }
+    for f in flags {
+        if !SERVER_OWNED.contains(&f.as_str()) {
+            argv.push(format!("--{f}"));
+        }
+    }
+    argv
+}
+
+/// Does this method's journal hold a checkpoint its `--resume` path will
+/// accept? An unreadable or checkpoint-less journal means the restored
+/// run re-executes from scratch (same seed) rather than failing resume
+/// validation forever.
+fn usable_checkpoint(run: &str, jpath: &str) -> bool {
+    if !Path::new(jpath).exists() {
+        return false;
+    }
+    let Ok(records) = Journal::load(jpath) else {
+        return false;
+    };
+    match run {
+        // the sweep tolerates any prefix of its own journal (including
+        // an empty one)
+        "explore" => true,
+        "calibrate" => journal::resume_state(&records).is_some(),
+        "island" => journal::island_resume(&records).is_some(),
+        _ => false,
+    }
+}
+
+/// [`EnvStats`] as a JSON object — the `status` surface for fleet health,
+/// including timed-out attempts and chaos-injected faults.
+pub(crate) fn env_stats_json(s: &EnvStats) -> Json {
+    protocol::obj(vec![
+        ("submitted", Json::Num(s.submitted as f64)),
+        ("completed", Json::Num(s.completed as f64)),
+        ("failed_attempts", Json::Num(s.failed_attempts as f64)),
+        ("resubmissions", Json::Num(s.resubmissions as f64)),
+        ("failed_jobs", Json::Num(s.failed_jobs as f64)),
+        ("timed_out_attempts", Json::Num(s.timed_out_attempts as f64)),
+        ("injected_faults", Json::Num(s.injected_faults as f64)),
+        ("in_flight", Json::Num(s.in_flight() as f64)),
+        ("virtual_makespan", Json::Num(s.virtual_makespan)),
+        ("virtual_cpu_s", Json::Num(s.virtual_cpu_s)),
+    ])
+}
+
+/// One-line terminal summary: outcome + counters + the tenant's own
+/// environment ledger.
+fn summary_json(report: &crate::workflow::ExperimentReport) -> Json {
+    let o = &report.outcome;
+    obj(vec![
+        ("outcome", Json::Str(o.outcome().into())),
+        ("evaluations", Json::Num(o.evaluations as f64)),
+        ("rows", Json::Num(o.rows as f64)),
+        ("resumed", Json::Num(o.resumed as f64)),
+        ("degraded_rows", Json::Num(o.degraded.len() as f64)),
+        ("generations", Json::Num(o.generations as f64)),
+        ("pareto_points", Json::Num(o.pareto_front.len() as f64)),
+        ("virtual_makespan", Json::Num(o.virtual_makespan)),
+        ("wall_s", Json::Num(report.wall.as_secs_f64())),
+        ("env", env_stats_json(&report.env_stats)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn config_defaults_and_overrides() {
+        let cfg = ServeConfig::from_args(&parse("serve")).unwrap();
+        assert_eq!(cfg.addr, DEFAULT_ADDR);
+        assert_eq!(cfg.envs, "local:8");
+        assert_eq!(cfg.max_running, 4);
+        assert_eq!(cfg.max_queued, 64);
+        assert!(cfg.retry.is_none());
+
+        let cfg = ServeConfig::from_args(&parse(
+            "serve --addr 127.0.0.1:0 --envs local:2 --max-running 1 \
+             --max-queued 1 --timeout 30",
+        ))
+        .unwrap();
+        assert_eq!(cfg.addr, "127.0.0.1:0");
+        assert_eq!(cfg.max_running, 1);
+        assert_eq!(cfg.max_queued, 1);
+        assert!(cfg.retry.is_some(), "retry flags reach the shared fleet");
+    }
+
+    #[test]
+    fn sanitize_strips_server_owned_options() {
+        let argv = sanitize_argv(
+            "explore",
+            &[
+                ("n".into(), "100".into()),
+                ("envs".into(), "pbs:64".into()),
+                ("out".into(), "/etc/passwd".into()),
+                ("journal".into(), "steal.jsonl".into()),
+            ],
+            &["degraded-ok".into(), "speculate".into()],
+        );
+        assert_eq!(argv, vec!["explore", "--n", "100", "--degraded-ok"]);
+    }
+
+    #[test]
+    fn submit_validates_before_admitting() {
+        let dir = std::env::temp_dir().join(format!(
+            "molers-sched-validate-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            state_dir: dir.to_string_lossy().into_owned(),
+            envs: "local:2".into(),
+            policy: "ewma".into(),
+            slots: 0,
+            max_running: 1,
+            max_queued: 4,
+            seed: 1,
+            retry: None,
+        };
+        let server = Server::new(cfg).unwrap();
+        // no scheduler started: submissions stay queued, nothing executes
+        let bad = protocol::parse_request(
+            "{\"cmd\":\"submit\",\"run\":\"warp\"}",
+        )
+        .unwrap();
+        let resp = server.handle(&bad);
+        assert!(resp.contains("unknown method `warp`"), "{resp}");
+        let bad = protocol::parse_request(
+            "{\"cmd\":\"submit\",\"run\":\"explore\",\"options\":{\"sampling\":\"warp\"}}",
+        )
+        .unwrap();
+        let resp = server.handle(&bad);
+        assert!(resp.contains("unknown --sampling"), "{resp}");
+        assert!(
+            server.registry().list().is_empty(),
+            "rejected submissions allocate no id"
+        );
+
+        let good = protocol::parse_request(
+            "{\"cmd\":\"submit\",\"run\":\"explore\",\"options\":{\"n\":\"8\"}}",
+        )
+        .unwrap();
+        let resp = server.handle(&good);
+        assert!(resp.contains("\"ok\":true"), "{resp}");
+        assert!(resp.contains("\"id\":1"), "{resp}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn saturation_rejects_with_reason() {
+        let dir = std::env::temp_dir().join(format!(
+            "molers-sched-saturate-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            state_dir: dir.to_string_lossy().into_owned(),
+            envs: "local:2".into(),
+            policy: "ewma".into(),
+            slots: 0,
+            max_running: 1,
+            max_queued: 1,
+            seed: 1,
+            retry: None,
+        };
+        let server = Server::new(cfg).unwrap();
+        let sub = protocol::parse_request(
+            "{\"cmd\":\"submit\",\"run\":\"explore\",\"options\":{\"n\":\"8\"}}",
+        )
+        .unwrap();
+        // scheduler not started → the first submission occupies the queue
+        assert!(server.handle(&sub).contains("\"ok\":true"));
+        let resp = server.handle(&sub);
+        assert!(resp.contains("server saturated"), "{resp}");
+        // cancelling the queued one frees the slot
+        let cancel = protocol::parse_request("{\"cmd\":\"cancel\",\"id\":1}").unwrap();
+        let resp = server.handle(&cancel);
+        assert!(resp.contains("\"state\":\"cancelled\""), "{resp}");
+        assert!(server.handle(&sub).contains("\"ok\":true"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

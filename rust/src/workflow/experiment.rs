@@ -46,7 +46,7 @@ use crate::evolution::popmatrix::PopMatrix;
 use crate::exec::ThreadPool;
 use crate::exploration::replication::replicate;
 use crate::exploration::sampling::Sampling;
-use crate::exploration::sweep::Sweep;
+use crate::exploration::sweep::{ProgressFn, Sweep};
 use crate::util::json::Json;
 use crate::workflow::MoleExecution;
 
@@ -117,6 +117,10 @@ pub struct MethodCtx<'a> {
     pub journal: Option<Arc<Journal>>,
     pub resume: Option<&'a [Json]>,
     pub seed: u64,
+    /// Incremental completion observer (`molers serve` streams these to
+    /// watching clients). Methods report their natural unit of progress:
+    /// sweeps report rows, evolutions report generations or evaluations.
+    pub progress: Option<ProgressFn>,
 }
 
 /// What a method produced — the union of the engines' results; fields a
@@ -207,6 +211,7 @@ pub struct Experiment {
     resume: Option<String>,
     seed: u64,
     quiet: bool,
+    progress: Option<ProgressFn>,
 }
 
 impl Experiment {
@@ -218,6 +223,7 @@ impl Experiment {
             resume: None,
             seed: 42,
             quiet: false,
+            progress: None,
         }
     }
 
@@ -254,6 +260,13 @@ impl Experiment {
     /// Suppress the description line (library/tests use).
     pub fn quiet(mut self) -> Self {
         self.quiet = true;
+        self
+    }
+
+    /// Observe incremental completion (`(done, total)` in the method's
+    /// natural unit — see [`MethodCtx::progress`]).
+    pub fn on_progress(mut self, f: ProgressFn) -> Self {
+        self.progress = Some(f);
         self
     }
 
@@ -340,6 +353,7 @@ impl Experiment {
             journal,
             resume: records.as_deref(),
             seed: self.seed,
+            progress: self.progress.clone(),
         })?;
         Ok(ExperimentReport {
             outcome,
@@ -426,7 +440,11 @@ impl ExplorationMethod for SingleRun {
         for h in &self.hooks {
             capsule.hook(Arc::clone(h));
         }
+        let progress = ctx.progress.clone();
         let result = MoleExecution::new(builder.build()?, ctx.env, ctx.seed).start()?;
+        if let Some(p) = &progress {
+            p(1, 1);
+        }
         Ok(MethodOutcome {
             evaluations: 1,
             virtual_makespan: result.report.virtual_makespan,
@@ -627,6 +645,9 @@ impl ExplorationMethod for DirectSampling {
         for (k, v) in &self.meta {
             sweep = sweep.meta(k, v.clone());
         }
+        if let Some(p) = ctx.progress.clone() {
+            sweep = sweep.on_progress(p);
+        }
         if let Some(j) = ctx.journal {
             sweep = sweep.journal(j);
         }
@@ -685,7 +706,11 @@ impl ExplorationMethod for Replication {
         for h in &self.statistic_hooks {
             stat_c.hook(Arc::clone(h));
         }
+        let progress = ctx.progress.clone();
         let result = MoleExecution::new(builder.build()?, ctx.env, ctx.seed).start()?;
+        if let Some(p) = &progress {
+            p(self.replications as u64, self.replications as u64);
+        }
         Ok(MethodOutcome {
             evaluations: self.replications as u64,
             virtual_makespan: result.report.virtual_makespan,
@@ -769,9 +794,18 @@ impl ExplorationMethod for Nsga2Evolution {
         )
         .eval_chunk(self.eval_chunk)
         .coordinator_pool(Arc::new(ThreadPool::default_size()));
-        if let Some(f) = &self.on_generation {
-            let f = Arc::clone(f);
-            ga = ga.on_generation(move |g, pop| f(g, pop));
+        if self.on_generation.is_some() || ctx.progress.is_some() {
+            let cb = self.on_generation.clone();
+            let progress = ctx.progress.clone();
+            let total = self.generations as u64;
+            ga = ga.on_generation(move |g, pop| {
+                if let Some(f) = &cb {
+                    f(g, pop);
+                }
+                if let Some(p) = &progress {
+                    p(g as u64, total);
+                }
+            });
         }
         if let Some(j) = ctx.journal {
             ga = ga.journal(j);
@@ -840,7 +874,23 @@ impl ExplorationMethod for IslandEvolution {
         if let Some(j) = ctx.journal {
             ga = ga.journal(j);
         }
-        let result = ga.run(ctx.env.as_ref(), ctx.seed, self.on_island.clone())?;
+        let on_island: Option<Arc<dyn Fn(u64, u64) + Send + Sync>> =
+            if self.on_island.is_some() || ctx.progress.is_some() {
+                let cb = self.on_island.clone();
+                let progress = ctx.progress.clone();
+                let total = self.islands.total_evaluations;
+                Some(Arc::new(move |done, evals| {
+                    if let Some(f) = &cb {
+                        f(done, evals);
+                    }
+                    if let Some(p) = &progress {
+                        p(evals.min(total), total);
+                    }
+                }))
+            } else {
+                None
+            };
+        let result = ga.run(ctx.env.as_ref(), ctx.seed, on_island)?;
         Ok(MethodOutcome {
             evaluations: result.evaluations,
             virtual_makespan: result.virtual_makespan,

@@ -135,6 +135,109 @@ fn unknown_env_is_a_hard_error_listing_valid_names() {
     assert!(err.contains("slurm"), "lists the valid names: {err}");
 }
 
+/// Kill the daemon on drop so a failing assertion never leaks it.
+struct KillOnDrop(std::process::Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+#[test]
+fn client_round_trips_against_a_live_daemon() {
+    let dir = std::env::temp_dir().join(format!("molers-cli-serve-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut daemon = KillOnDrop(
+        molers()
+            .env("MOLERS_ARTIFACTS", "/nonexistent-artifacts")
+            .env("MOLERS_SIM_TICKS", "40")
+            .args(["serve", "--addr", "127.0.0.1:0", "--envs", "local:2", "--state-dir"])
+            .arg(&dir)
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .unwrap(),
+    );
+    // ephemeral port: discover the bound address from the state dir
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    let addr = loop {
+        if let Ok(text) = std::fs::read_to_string(dir.join("addr")) {
+            let addr = text.trim().to_string();
+            if !addr.is_empty() && std::net::TcpStream::connect(&addr).is_ok() {
+                break addr;
+            }
+        }
+        assert!(std::time::Instant::now() < deadline, "daemon never came up");
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    };
+    let client = |args: &[&str]| {
+        molers()
+            .args(["client"])
+            .args(args)
+            .args(["--addr", &addr])
+            .output()
+            .unwrap()
+    };
+
+    let out = client(&["ping"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("\"pong\":true"));
+
+    let out = client(&[
+        "submit", "explore", "--n", "8", "--chunk", "4", "--tenant", "alice",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("\"ok\":true") && text.contains("\"id\":1"), "{text}");
+
+    // watch streams state events and exits when the run lands
+    let out = client(&["watch", "--id", "1"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("\"state\":\"done\""), "{text}");
+
+    let out = client(&["status", "--id", "1"]);
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("\"state\":\"done\""), "{text}");
+    assert!(text.contains("\"tenant\":\"alice\""), "{text}");
+
+    // the sweep's CSV comes back over the wire
+    let out = client(&["result", "--id", "1"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(
+        String::from_utf8_lossy(&out.stdout).contains("gDiffusionRate"),
+        "result payload missing the design columns"
+    );
+
+    // server-side errors surface as a non-zero client exit
+    let out = client(&["status", "--id", "99"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown experiment"));
+
+    let out = client(&["shutdown"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let status = daemon.0.wait().unwrap();
+    assert!(status.success(), "shutdown exits the daemon cleanly");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn client_without_a_daemon_is_a_clean_error() {
+    let out = molers()
+        // a port from the ephemeral range nothing is listening on
+        .args(["client", "ping", "--addr", "127.0.0.1:1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("cannot connect to molers serve"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
 #[test]
 fn bad_option_value_is_a_clean_error() {
     let out = molers()

@@ -1,0 +1,359 @@
+//! End-to-end tests for `molers serve`: drive the real daemon binary
+//! over TCP the way a client would — concurrent multi-tenant sweeps,
+//! admission control, cancellation, kill -9 + restart resume.
+//!
+//! Every test uses `MOLERS_ARTIFACTS=/nonexistent-artifacts` (force the
+//! deterministic rust-sim evaluator) and `MOLERS_SIM_TICKS` (cut the
+//! per-evaluation cost so debug-mode CI stays fast). Each test gets its
+//! own state dir + an ephemeral port discovered via `<dir>/addr`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use molers::util::json::{self, Json};
+
+const SIM_TICKS: &str = "40";
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("molers-serve-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A running daemon; killed on drop so a failing test never leaks it.
+struct Daemon {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Spawn `molers serve` on an ephemeral port and wait until it accepts.
+fn start_server(dir: &Path, extra: &[&str]) -> Daemon {
+    let addr_file = dir.join("addr");
+    let _ = std::fs::remove_file(&addr_file);
+    let child = Command::new(env!("CARGO_BIN_EXE_molers"))
+        .env("MOLERS_ARTIFACTS", "/nonexistent-artifacts")
+        .env("MOLERS_SIM_TICKS", SIM_TICKS)
+        .args(["serve", "--addr", "127.0.0.1:0", "--state-dir"])
+        .arg(dir)
+        .args(extra)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn molers serve");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let addr = loop {
+        if let Ok(text) = std::fs::read_to_string(&addr_file) {
+            let addr = text.trim().to_string();
+            if !addr.is_empty() && TcpStream::connect(&addr).is_ok() {
+                break addr;
+            }
+        }
+        assert!(Instant::now() < deadline, "daemon never came up");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    Daemon { child, addr }
+}
+
+/// One request line → one response line, parsed.
+fn request(addr: &str, line: &str) -> Json {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    writeln!(stream, "{line}").unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    json::parse(resp.trim_end()).unwrap_or_else(|e| panic!("bad response `{resp}`: {e}"))
+}
+
+fn submit(addr: &str, run: &str, tenant: &str, options: &[(&str, &str)]) -> u64 {
+    let opts: String = options
+        .iter()
+        .map(|(k, v)| format!("\"{k}\":\"{v}\""))
+        .collect::<Vec<_>>()
+        .join(",");
+    let resp = request(
+        addr,
+        &format!(
+            "{{\"cmd\":\"submit\",\"run\":\"{run}\",\"tenant\":\"{tenant}\",\
+             \"options\":{{{opts}}}}}"
+        ),
+    );
+    assert_eq!(
+        resp.get("ok"),
+        Some(&Json::Bool(true)),
+        "submit rejected: {resp}"
+    );
+    resp.get("id").and_then(Json::as_f64).expect("id") as u64
+}
+
+fn status(addr: &str, id: u64) -> Json {
+    request(addr, &format!("{{\"cmd\":\"status\",\"id\":{id}}}"))
+}
+
+fn state_of(status: &Json) -> String {
+    status
+        .get("state")
+        .and_then(Json::as_str)
+        .unwrap_or("?")
+        .to_string()
+}
+
+fn is_terminal(state: &str) -> bool {
+    matches!(state, "done" | "degraded" | "failed" | "cancelled")
+}
+
+/// Poll until the experiment reaches a terminal state; returns the final
+/// status object.
+fn wait_terminal(addr: &str, id: u64, timeout: Duration) -> Json {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let s = status(addr, id);
+        if is_terminal(&state_of(&s)) {
+            return s;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "experiment {id} never finished: {s}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn fair_share_lets_a_small_calibrate_finish_under_a_big_sweep() {
+    let dir = tmp_dir("fair");
+    let daemon = start_server(&dir, &["--envs", "local:2", "--max-running", "2"]);
+    let addr = &daemon.addr;
+
+    // the hog: a 240-row sweep in 2-row chunks floods the gate with 120
+    // pending jobs...
+    let big = submit(
+        addr,
+        "explore",
+        "hog",
+        &[("n", "240"), ("chunk", "2"), ("sampling", "sobol"), ("seed", "9")],
+    );
+    // ...then a small calibration arrives late on another tenant
+    let small = submit(
+        addr,
+        "calibrate",
+        "quick",
+        &[
+            ("mu", "4"),
+            ("lambda", "4"),
+            ("generations", "2"),
+            ("replications", "1"),
+        ],
+    );
+
+    let small_status = wait_terminal(addr, small, Duration::from_secs(120));
+    assert_eq!(state_of(&small_status), "done", "{small_status}");
+    // the fair gate's whole point: the small tenant finished while the
+    // hog's sweep was still in flight (FIFO job order would have parked
+    // every calibrate job behind the 120 queued sweep chunks)
+    let big_now = state_of(&status(addr, big));
+    assert!(
+        !is_terminal(&big_now),
+        "the 240-row sweep (state `{big_now}`) finished before the \
+         4-genome calibrate — fair share is not interleaving tenants"
+    );
+    assert_eq!(
+        small_status.get("history"),
+        Some(&Json::Arr(vec![
+            Json::Str("queued".into()),
+            Json::Str("running".into()),
+            Json::Str("done".into()),
+        ])),
+    );
+    // satellite: fleet health (timeouts + injected faults) on `status`
+    let fleet = small_status.get("fleet").expect("fleet stats");
+    assert!(fleet.get("timed_out_attempts").is_some(), "{small_status}");
+    assert!(fleet.get("injected_faults").is_some(), "{small_status}");
+
+    let big_status = wait_terminal(addr, big, Duration::from_secs(120));
+    assert_eq!(state_of(&big_status), "done", "{big_status}");
+    assert!(dir.join(format!("exp-{big}.csv")).exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn admission_control_rejects_when_saturated_and_cancel_frees_the_queue() {
+    let dir = tmp_dir("admission");
+    let daemon = start_server(
+        &dir,
+        &["--envs", "local:1", "--max-running", "1", "--max-queued", "1"],
+    );
+    let addr = &daemon.addr;
+
+    let running = submit(addr, "explore", "a", &[("n", "400"), ("chunk", "2")]);
+    // give the scheduler a beat to move #1 from the queue into running so
+    // #2 occupies the single queue slot
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while state_of(&status(addr, running)) == "queued" {
+        assert!(Instant::now() < deadline, "experiment 1 never started");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let queued = submit(addr, "explore", "b", &[("n", "8"), ("chunk", "4")]);
+
+    let resp = request(
+        addr,
+        "{\"cmd\":\"submit\",\"run\":\"explore\",\"options\":{\"n\":\"8\"}}",
+    );
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp}");
+    let msg = resp.get("error").and_then(Json::as_str).unwrap_or("");
+    assert!(msg.contains("server saturated"), "{resp}");
+
+    // a bad submission is rejected with the CLI front's own error and
+    // allocates no id even under saturation
+    let resp = request(
+        addr,
+        "{\"cmd\":\"submit\",\"run\":\"explore\",\"options\":{\"sampling\":\"warp\"}}",
+    );
+    let msg = resp.get("error").and_then(Json::as_str).unwrap_or("");
+    assert!(msg.contains("unknown --sampling"), "{resp}");
+
+    // cancelling the queued experiment frees the slot immediately
+    let resp = request(addr, &format!("{{\"cmd\":\"cancel\",\"id\":{queued}}}"));
+    assert_eq!(resp.get("state"), Some(&Json::Str("cancelled".into())), "{resp}");
+    submit(addr, "explore", "c", &[("n", "8"), ("chunk", "4")]);
+
+    // cancelling the running one makes its queued fair-share jobs fail
+    // fast; the experiment lands in `cancelled`, not `failed`
+    let resp = request(addr, &format!("{{\"cmd\":\"cancel\",\"id\":{running}}}"));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+    let s = wait_terminal(addr, running, Duration::from_secs(120));
+    assert_eq!(state_of(&s), "cancelled", "{s}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn kill_dash_nine_then_restart_resumes_to_a_byte_identical_result() {
+    let dir = tmp_dir("kill");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ref_csv = dir.join("reference.csv");
+    let sweep: &[(&str, &str)] = &[
+        ("n", "120"),
+        ("chunk", "4"),
+        ("sampling", "sobol"),
+        ("seed", "9"),
+    ];
+
+    // reference: the same sweep through the plain CLI, same fleet shape
+    let out = Command::new(env!("CARGO_BIN_EXE_molers"))
+        .env("MOLERS_ARTIFACTS", "/nonexistent-artifacts")
+        .env("MOLERS_SIM_TICKS", SIM_TICKS)
+        .args(["explore", "--envs", "local:2", "--out"])
+        .arg(&ref_csv)
+        .args(sweep.iter().flat_map(|(k, v)| [format!("--{k}"), v.to_string()]))
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let reference = std::fs::read(&ref_csv).unwrap();
+
+    // served run: SIGKILL the daemon once the first checkpoint lands
+    let state = tmp_dir("kill-state");
+    let mut daemon = start_server(&state, &["--envs", "local:2"]);
+    let id = submit(&daemon.addr, "explore", "alice", sweep);
+    let journal = state.join(format!("exp-{id}.jsonl"));
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        if std::fs::read_to_string(&journal)
+            .map(|t| t.contains("\"kind\":\"sample_block\""))
+            .unwrap_or(false)
+        {
+            break;
+        }
+        assert!(Instant::now() < deadline, "no checkpoint ever appeared");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    daemon.child.kill().unwrap();
+    let _ = daemon.child.wait();
+    drop(daemon);
+
+    // restart on the same state dir: the unfinished experiment is
+    // re-enqueued and resumes from its own journal
+    let daemon = start_server(&state, &["--envs", "local:2"]);
+    let s = wait_terminal(&daemon.addr, id, Duration::from_secs(120));
+    assert_eq!(state_of(&s), "done", "{s}");
+    assert_eq!(s.get("restored"), Some(&Json::Bool(true)), "{s}");
+    let served = std::fs::read(state.join(format!("exp-{id}.csv"))).unwrap();
+    assert_eq!(
+        served, reference,
+        "resumed result file differs from the uninterrupted reference run"
+    );
+    // `result` serves the same bytes over the wire
+    let resp = request(&daemon.addr, &format!("{{\"cmd\":\"result\",\"id\":{id}}}"));
+    assert_eq!(
+        resp.get("content").and_then(Json::as_str),
+        Some(String::from_utf8(reference).unwrap().as_str())
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&state);
+}
+
+#[test]
+fn concurrent_experiments_never_share_a_journal() {
+    let dir = tmp_dir("journals");
+    let daemon = start_server(&dir, &["--envs", "local:2", "--max-running", "2"]);
+    let addr = &daemon.addr;
+    let a = submit(
+        addr,
+        "explore",
+        "alice",
+        &[("n", "40"), ("chunk", "4"), ("seed", "7")],
+    );
+    let b = submit(
+        addr,
+        "explore",
+        "bob",
+        &[("n", "40"), ("chunk", "4"), ("seed", "8")],
+    );
+    assert_eq!(state_of(&wait_terminal(addr, a, Duration::from_secs(120))), "done");
+    assert_eq!(state_of(&wait_terminal(addr, b, Duration::from_secs(120))), "done");
+
+    // each experiment owns exactly one journal, keyed by id, and each
+    // parses cleanly with its OWN run header — two concurrent sweeps
+    // under one server dir never interleaved records
+    for (id, seed) in [(a, "7"), (b, "8")] {
+        let records =
+            molers::broker::Journal::load(dir.join(format!("exp-{id}.jsonl"))).unwrap();
+        let starts: Vec<&Json> = records
+            .iter()
+            .filter(|r| r.get("kind").and_then(Json::as_str) == Some("run_start"))
+            .collect();
+        assert_eq!(starts.len(), 1, "exp-{id}: one run_start");
+        assert_eq!(
+            starts[0].get("seed_exact").and_then(Json::as_str),
+            Some(seed),
+            "exp-{id} journaled another experiment's seed"
+        );
+        assert_eq!(
+            records
+                .iter()
+                .filter(|r| r.get("kind").and_then(Json::as_str) == Some("run_end"))
+                .count(),
+            1,
+            "exp-{id}: one run_end"
+        );
+    }
+    // the server meta-journal has both submissions and both terminal states
+    let meta = molers::broker::Journal::load(dir.join("server.jsonl")).unwrap();
+    let kinds = |k: &str| {
+        meta.iter()
+            .filter(|r| r.get("kind").and_then(Json::as_str) == Some(k))
+            .count()
+    };
+    assert_eq!(kinds("exp"), 2);
+    assert_eq!(kinds("exp_state"), 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
