@@ -1,0 +1,122 @@
+//! P6 (§Durability): what does fsync-per-record durability cost?
+//!
+//! Two surfaces, one suite:
+//!
+//! * **submit-ack latency** — `Registry::submit` under
+//!   `--durability always` journals and `fdatasync`s the submission
+//!   before acknowledging; under `os` it only flushes. The per-ack
+//!   microcosts are reported as informational metrics.
+//! * **sweep throughput** — an end-to-end journaled sweep under `always`
+//!   vs `os`. Checkpoints land once per chunk, so the fsync cost is
+//!   amortized over chunk evaluation: the committed acceptance is
+//!   **`fsync_overhead` ≤ 3×** the `os` wall time (gated in CI via
+//!   `bench_gate`).
+//!
+//! Knobs: `P6_SUBMITS` (default 1000), `P6_N` (default 600, sweep rows;
+//! CI smoke uses fewer), `BENCH_OUT_DIR`.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use molers::bench::Bench;
+use molers::broker::{Durability, Journal};
+use molers::environment::local::LocalEnvironment;
+use molers::evolution::evaluator::Zdt1Evaluator;
+use molers::prelude::*;
+use molers::serve::Registry;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("molers-p6-{}-{name}", std::process::id()))
+}
+
+/// A daemon's submission burst: open a state dir under the given policy
+/// and register `count` experiments — each one journaled (and, under
+/// `always`, fsync'd) before `submit` returns, exactly the serve ack
+/// path.
+fn submit_burst(dir: &Path, durability: Durability, count: usize) {
+    let _ = std::fs::remove_dir_all(dir);
+    let reg = Registry::open_with(dir, durability).unwrap();
+    for _ in 0..count {
+        reg.submit("bench", 1, "run", vec!["run".into()], None).unwrap();
+    }
+}
+
+/// One journaled sweep: n rows in `chunk`-row blocks over a local
+/// environment, checkpointing every block under the given policy.
+fn run_sweep(n: usize, chunk: usize, durability: Durability, tag: &str) {
+    let x = val_f64("x0");
+    let y = val_f64("x1");
+    let sampling = Arc::new(LhsSampling::new(&[(&x, 0.0, 1.0), (&y, 0.0, 1.0)], n));
+    let out = tmp(&format!("{tag}.csv"));
+    let jpath = tmp(&format!("{tag}.jsonl"));
+    let writer = Arc::new(
+        RowWriter::create(&out, TableFormat::Csv, &["x0", "x1", "f1", "f2"]).unwrap(),
+    );
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(4);
+    let env = LocalEnvironment::new(threads);
+    Sweep::new(sampling, Arc::new(Zdt1Evaluator { dim: 2 }), &["f1", "f2"])
+        .chunk(chunk)
+        .writer(writer)
+        .journal(Arc::new(Journal::create_with(&jpath, durability).unwrap()))
+        .run_resumable(&env, 17, None)
+        .unwrap();
+}
+
+fn main() {
+    let submits = env_usize("P6_SUBMITS", 1000);
+    let n = env_usize("P6_N", 600);
+    let chunk = 8usize;
+    println!("{submits} submit acks; {n}-row sweep in {chunk}-row chunks");
+
+    let mut b = Bench::new("p6_durability").warmup(1).samples(3);
+
+    let ack_dir = tmp("ack");
+    let always_ack = b
+        .case("submit_ack_always", || {
+            submit_burst(&ack_dir, Durability::Always, submits)
+        })
+        .median_s();
+    let os_ack = b
+        .case("submit_ack_os", || submit_burst(&ack_dir, Durability::Os, submits))
+        .median_s();
+    b.metric(
+        "submit_ack_always_us",
+        always_ack / submits as f64 * 1e6,
+        "us/ack (journal + fdatasync before the ack)",
+    );
+    b.metric(
+        "submit_ack_os_us",
+        os_ack / submits as f64 * 1e6,
+        "us/ack (journal flush only)",
+    );
+
+    let always_s = b
+        .case("sweep_always", || run_sweep(n, chunk, Durability::Always, "alw"))
+        .median_s();
+    let os_s = b
+        .case("sweep_os", || run_sweep(n, chunk, Durability::Os, "os"))
+        .median_s();
+    b.metric(
+        "fsync_overhead",
+        always_s / os_s,
+        "x os-durability sweep wall time (acceptance: <= 3.0)",
+    );
+    b.metric("sweep_rows_per_s_always", n as f64 / always_s.max(1e-9), "rows/s");
+
+    for t in ["ack", "alw.csv", "alw.jsonl", "os.csv", "os.jsonl"] {
+        let p = tmp(t);
+        let _ = std::fs::remove_dir_all(&p);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    if let Err(e) = b.write_json() {
+        eprintln!("could not write bench json: {e}");
+    }
+}

@@ -553,6 +553,58 @@ mod tests {
         assert!(t.submit(tagged("after")).wait().is_ok());
     }
 
+    /// The cancel/Drop race: tenant A is cancelled while it still has
+    /// queued jobs, in the same window where tenant B's handle is
+    /// dropped mid-poll (after forwarding, before resolution). Both
+    /// tenants' slots must come back — a leak here would wedge the
+    /// shared gate for every other tenant.
+    #[test]
+    fn cancel_and_drop_race_releases_both_slots() {
+        let recorder = TagRecorder::new();
+        let fs = FairShare::new(Arc::clone(&recorder) as Arc<dyn Environment>, 2);
+        let token = Arc::new(AtomicBool::new(false));
+        let a = fs.tenant("a", 1).with_cancel(Arc::clone(&token));
+        let b = fs.tenant("b", 1);
+
+        // fill both slots (one per tenant), then queue more behind them
+        let a_handles: Vec<JobHandle> =
+            (0..4).map(|i| a.submit(tagged(&format!("a{i}")))).collect();
+        let b_handles: Vec<JobHandle> =
+            (0..4).map(|i| b.submit(tagged(&format!("b{i}")))).collect();
+
+        // b's first handle was forwarded (its slot is held); poll it once
+        // so the pump advances, then drop ALL of b's handles mid-flight
+        let _ = b_handles[0].try_wait();
+        drop(b_handles);
+        // and cancel a while its later jobs are still queued
+        token.store(true, Ordering::Relaxed);
+        let mut cancelled = 0;
+        for h in a_handles {
+            if h.wait().is_err() {
+                cancelled += 1;
+            }
+        }
+        assert!(
+            cancelled >= 3,
+            "still-queued jobs must fail fast on cancel, got {cancelled}"
+        );
+
+        // both tenants' slots are back and the ledgers reconcile
+        assert_eq!(fs.forwarded(), 0, "a leaked slot wedges the gate");
+        assert_eq!(fs.queued(), 0);
+        let sa = a.stats();
+        assert_eq!(sa.submitted, 4);
+        assert_eq!(sa.completed + sa.failed_jobs, 4, "tenant a ledger: {sa:?}");
+        let sb = b.stats();
+        assert_eq!(sb.submitted, 4);
+        assert_eq!(sb.completed + sb.failed_jobs, 4, "tenant b ledger: {sb:?}");
+
+        // the gate still schedules a third tenant afterwards
+        let c = fs.tenant("c", 1);
+        assert!(c.submit(tagged("after")).wait().is_ok());
+        assert_eq!(fs.forwarded(), 0);
+    }
+
     /// Two real sweep-shaped workloads over one local environment: both
     /// complete and per-tenant stats stay separate.
     #[test]

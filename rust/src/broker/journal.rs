@@ -50,6 +50,105 @@ use crate::util::Rng;
 /// to be irrelevant beside the checkpoint data itself.
 const WRITE_BUFFER_BYTES: usize = 1 << 20;
 
+/// When an appended record becomes *durable* — the power-loss contract
+/// of a [`Journal`], orthogonal to the flush-per-record process-crash
+/// contract (every policy survives a `kill -9`; they differ on what a
+/// host power cut can take back).
+///
+/// `molers serve` journals its meta-journal with [`Durability::Always`]
+/// (an acknowledged submission survives power loss); per-experiment
+/// checkpoint journals default to [`Durability::Os`] (a lost checkpoint
+/// merely re-evaluates rows) unless `--durability` says otherwise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Durability {
+    /// `fdatasync` after every record: the append call returns only once
+    /// the record is on stable storage.
+    Always,
+    /// `fdatasync` every N records (and on [`Journal::sync`]): bounded
+    /// power-loss window, amortised sync cost.
+    Batch(usize),
+    /// Flush into the OS page cache only: survives process death, not
+    /// power loss. The pre-durability behaviour.
+    Os,
+}
+
+impl Durability {
+    /// Parse a `--durability` value: `always`, `os`, `batch` (default
+    /// window 64) or `batch:N`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "always" => Some(Durability::Always),
+            "os" => Some(Durability::Os),
+            "batch" => Some(Durability::Batch(64)),
+            _ => {
+                let n: usize = s.strip_prefix("batch:")?.parse().ok()?;
+                if n == 0 {
+                    None
+                } else {
+                    Some(Durability::Batch(n))
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Durability {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Durability::Always => write!(f, "always"),
+            Durability::Batch(n) => write!(f, "batch:{n}"),
+            Durability::Os => write!(f, "os"),
+        }
+    }
+}
+
+/// Write `contents` to `path` atomically and durably: a temp file in the
+/// same directory is written, `fdatasync`'d, renamed over `path`, and
+/// the directory entry itself is fsync'd — a reader (or a restart after
+/// power loss) sees either the old file or the complete new one, never a
+/// partial write.
+pub fn atomic_write(path: impl AsRef<Path>, contents: &[u8]) -> Result<()> {
+    let path = path.as_ref();
+    let dir = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or("atomic");
+    let tmp = dir.join(format!(".{name}.tmp.{}", std::process::id()));
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(contents)?;
+        f.sync_data()?;
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e.into());
+    }
+    fsync_dir(&dir);
+    Ok(())
+}
+
+/// Best-effort directory fsync — makes a just-completed rename/create/
+/// unlink in `dir` durable. Failure is swallowed: some filesystems
+/// refuse to open directories, and the data-loss window it leaves is the
+/// pre-durability status quo, not a new error path.
+pub fn fsync_dir(dir: impl AsRef<Path>) {
+    if let Ok(d) = std::fs::File::open(dir.as_ref()) {
+        let _ = d.sync_all();
+    }
+}
+
+/// Best-effort file fsync by path (used to pin an already-written result
+/// file to stable storage before its terminal state is journaled).
+pub fn fsync_file(path: impl AsRef<Path>) {
+    if let Ok(f) = std::fs::File::open(path.as_ref()) {
+        let _ = f.sync_data();
+    }
+}
+
 /// Append-only JSONL checkpoint writer. Clone-free and lock-cheap: one
 /// record per line assembled in a [`BufWriter`] (see
 /// [`WRITE_BUFFER_BYTES`]), explicitly flushed once per checkpoint —
@@ -60,21 +159,41 @@ const WRITE_BUFFER_BYTES: usize = 1 << 20;
 /// repairs it before continuing).
 pub struct Journal {
     path: PathBuf,
-    file: Mutex<BufWriter<std::fs::File>>,
+    durability: Durability,
+    file: Mutex<Writer>,
+}
+
+/// The locked writer state: the assembly buffer plus the count of
+/// records flushed to the OS but not yet fsync'd (for
+/// [`Durability::Batch`]).
+struct Writer {
+    buf: BufWriter<std::fs::File>,
+    unsynced: usize,
 }
 
 impl Journal {
-    /// Start a fresh journal (truncates an existing file).
+    /// Start a fresh journal (truncates an existing file) with the
+    /// default [`Durability::Os`] policy.
     pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        Self::create_with(path, Durability::Os)
+    }
+
+    /// Start a fresh journal with an explicit [`Durability`] policy.
+    pub fn create_with(path: impl AsRef<Path>, durability: Durability) -> Result<Self> {
         let path = path.as_ref().to_path_buf();
         let file = std::fs::File::create(&path)?;
         Ok(Journal {
             path,
-            file: Mutex::new(BufWriter::with_capacity(WRITE_BUFFER_BYTES, file)),
+            durability,
+            file: Mutex::new(Writer {
+                buf: BufWriter::with_capacity(WRITE_BUFFER_BYTES, file),
+                unsynced: 0,
+            }),
         })
     }
 
-    /// Continue an existing journal (used by `--resume`).
+    /// Continue an existing journal (used by `--resume`) with the
+    /// default [`Durability::Os`] policy.
     ///
     /// A process killed mid-write leaves an unterminated final line;
     /// appending onto it would weld the fragment to the next record and
@@ -82,18 +201,31 @@ impl Journal {
     /// fatal). So the torn tail is truncated first — the same fragment
     /// `load` already ignores.
     pub fn append_to(path: impl AsRef<Path>) -> Result<Self> {
+        Self::append_to_with(path, Durability::Os)
+    }
+
+    /// Continue an existing journal with an explicit [`Durability`]
+    /// policy (torn-tail repair as in [`Journal::append_to`]).
+    pub fn append_to_with(path: impl AsRef<Path>, durability: Durability) -> Result<Self> {
         let path = path.as_ref().to_path_buf();
-        if let Ok(text) = std::fs::read_to_string(&path) {
-            if !text.is_empty() && !text.ends_with('\n') {
-                let keep = text.rfind('\n').map(|i| i + 1).unwrap_or(0);
+        // bytes, not read_to_string: a power cut can leave a non-UTF-8
+        // tail, which must not silently skip the repair
+        if let Ok(bytes) = std::fs::read(&path) {
+            if !bytes.is_empty() && bytes.last() != Some(&b'\n') {
+                let keep = bytes
+                    .iter()
+                    .rposition(|&b| b == b'\n')
+                    .map(|i| i + 1)
+                    .unwrap_or(0);
                 eprintln!(
                     "journal: repaired torn tail of `{}`: dropped 1 partial \
                      record ({} bytes from byte offset {keep})",
                     path.display(),
-                    text.len() - keep,
+                    bytes.len() - keep,
                 );
                 let f = std::fs::OpenOptions::new().write(true).open(&path)?;
                 f.set_len(keep as u64)?;
+                f.sync_data()?;
             }
         }
         let file = std::fs::OpenOptions::new()
@@ -102,7 +234,11 @@ impl Journal {
             .open(&path)?;
         Ok(Journal {
             path,
-            file: Mutex::new(BufWriter::with_capacity(WRITE_BUFFER_BYTES, file)),
+            durability,
+            file: Mutex::new(Writer {
+                buf: BufWriter::with_capacity(WRITE_BUFFER_BYTES, file),
+                unsynced: 0,
+            }),
         })
     }
 
@@ -110,21 +246,56 @@ impl Journal {
         &self.path
     }
 
-    /// Append one record as a line and flush it to disk: the record is
+    pub fn durability(&self) -> Durability {
+        self.durability
+    }
+
+    /// Append one record as a line, flush it to the OS, and make it
+    /// durable per the journal's [`Durability`] policy: the record is
     /// assembled in the writer's buffer (buffer-sized writes, not one
-    /// syscall per formatted fragment), then explicitly flushed so the
-    /// checkpoint is durable before the engine continues.
+    /// syscall per formatted fragment), flushed, and — under `always`,
+    /// or when a `batch` window fills — `fdatasync`'d before this call
+    /// returns, so an acknowledgement sent after `append` can never
+    /// refer to a record a power cut takes back.
     pub fn append(&self, record: &Json) -> Result<()> {
-        let mut f = self.file.lock().unwrap();
-        writeln!(f, "{record}")?;
-        f.flush()?;
+        let mut w = self.file.lock().unwrap();
+        writeln!(w.buf, "{record}")?;
+        w.buf.flush()?;
+        match self.durability {
+            Durability::Always => w.buf.get_ref().sync_data()?,
+            Durability::Batch(n) => {
+                w.unsynced += 1;
+                if w.unsynced >= n {
+                    w.buf.get_ref().sync_data()?;
+                    w.unsynced = 0;
+                }
+            }
+            Durability::Os => {}
+        }
+        Ok(())
+    }
+
+    /// Flush and `fdatasync` unconditionally — a checkpoint boundary
+    /// under [`Durability::Batch`]/[`Durability::Os`], a no-op cost on
+    /// top of [`Durability::Always`].
+    pub fn sync(&self) -> Result<()> {
+        let mut w = self.file.lock().unwrap();
+        w.buf.flush()?;
+        w.buf.get_ref().sync_data()?;
+        w.unsynced = 0;
         Ok(())
     }
 
     /// Parse a journal back into records. A torn final line (the process
     /// died mid-write) is dropped; corruption anywhere else is an error.
+    ///
+    /// A power cut can leave *arbitrary* bytes in the tail (zeros,
+    /// garbage), so the file is decoded lossily: invalid UTF-8 becomes
+    /// replacement characters, which fail JSON parsing — dropped when
+    /// they sit on the final line, a loud error anywhere earlier.
     pub fn load(path: impl AsRef<Path>) -> Result<Vec<Json>> {
-        let text = std::fs::read_to_string(path.as_ref())?;
+        let bytes = std::fs::read(path.as_ref())?;
+        let text = String::from_utf8_lossy(&bytes);
         let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
         let mut records = Vec::with_capacity(lines.len());
         for (i, line) in lines.iter().enumerate() {
@@ -749,6 +920,66 @@ mod tests {
         let blocks = sample_blocks(&[bad, good]);
         assert_eq!(blocks.len(), 1, "type-corrupted block must be dropped");
         assert_eq!(blocks[0].first_row, 0);
+    }
+
+    #[test]
+    fn durability_parses_and_round_trips() {
+        assert_eq!(Durability::parse("always"), Some(Durability::Always));
+        assert_eq!(Durability::parse("os"), Some(Durability::Os));
+        assert_eq!(Durability::parse("batch"), Some(Durability::Batch(64)));
+        assert_eq!(Durability::parse("batch:7"), Some(Durability::Batch(7)));
+        for bad in ["", "batch:0", "batch:x", "fsync", "Always"] {
+            assert_eq!(Durability::parse(bad), None, "`{bad}` must be rejected");
+        }
+        for d in [Durability::Always, Durability::Batch(7), Durability::Os] {
+            assert_eq!(Durability::parse(&d.to_string()), Some(d));
+        }
+    }
+
+    #[test]
+    fn every_durability_policy_appends_loadable_records() {
+        for (tag, d) in [
+            ("always", Durability::Always),
+            ("batch", Durability::Batch(2)),
+            ("os", Durability::Os),
+        ] {
+            let path = tmp(&format!("dur-{tag}"));
+            let j = Journal::create_with(&path, d).unwrap();
+            assert_eq!(j.durability(), d);
+            for i in 0..5 {
+                j.append(&run_end(i, i as f64)).unwrap();
+            }
+            j.sync().unwrap();
+            assert_eq!(Journal::load(&path).unwrap().len(), 5);
+            // reopening for append honours the policy too
+            let j2 = Journal::append_to_with(&path, d).unwrap();
+            j2.append(&run_end(5, 5.0)).unwrap();
+            drop(j2);
+            assert_eq!(Journal::load(&path).unwrap().len(), 6);
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    #[test]
+    fn atomic_write_replaces_content_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join(format!(
+            "molers-atomic-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("addr");
+        atomic_write(&path, b"127.0.0.1:1\n").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"127.0.0.1:1\n");
+        atomic_write(&path, b"127.0.0.1:2\n").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"127.0.0.1:2\n");
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains("tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files must not survive: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -51,7 +51,7 @@ pub mod policy;
 pub use fairshare::{FairShare, TenantEnv};
 pub use fault::{CrashWindow, FaultPlan, FaultyEnv, FlakyEnv, InjectedFaults};
 pub use health::{CircuitConfig, Health};
-pub use journal::{DegradedRows, Journal, ResumeState, SampleBlock, SweepEvent};
+pub use journal::{DegradedRows, Durability, Journal, ResumeState, SampleBlock, SweepEvent};
 pub use policy::{
     BackendView, DispatchPolicy, EwmaPolicy, LeastInFlight, RetryPolicy, RoundRobin,
 };

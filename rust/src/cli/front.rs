@@ -102,10 +102,10 @@ fn env_spec(args: &Args, default_env: &str, nodes: usize) -> Result<EnvSpec> {
 }
 
 /// Apply the flags every subcommand shares: `--seed`, `--journal`,
-/// `--resume`. Both paths are forwarded verbatim — the `Experiment`
-/// rejects the `--journal` + `--resume` combination (and `--journal` on
-/// methods that never checkpoint) with a clear error instead of the CLI
-/// silently dropping a flag.
+/// `--resume`, `--durability`. Both paths are forwarded verbatim — the
+/// `Experiment` rejects the `--journal` + `--resume` combination (and
+/// `--journal` on methods that never checkpoint) with a clear error
+/// instead of the CLI silently dropping a flag.
 fn with_common(mut exp: Experiment, args: &Args) -> Result<Experiment> {
     exp = exp.seed(num(args.u64("seed", 42))?);
     if let Some(path) = args.get("resume") {
@@ -113,6 +113,14 @@ fn with_common(mut exp: Experiment, args: &Args) -> Result<Experiment> {
     }
     if let Some(path) = args.get("journal") {
         exp = exp.journal(path);
+    }
+    if let Some(d) = args.get("durability") {
+        let d = crate::broker::Durability::parse(d).ok_or_else(|| {
+            Error::Config(format!(
+                "invalid --durability `{d}` (always|batch[:N]|os)"
+            ))
+        })?;
+        exp = exp.durability(d);
     }
     Ok(exp)
 }

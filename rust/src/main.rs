@@ -64,6 +64,7 @@ fn main() {
                  \x20          --lo 0 --hi 99 (--step 24.75 for factorial) --replications 1\n\
                  \x20          --out explore.csv --format csv|jsonl\n\
                  \x20          --journal sweep.jsonl (checkpoint) | --resume sweep.jsonl\n\
+                 \x20          --durability always|batch[:N]|os (when checkpoints hit disk)\n\
                  \x20          --degraded-ok (NaN-fill rows whose retry budget is spent)\n\
                  \x20          --retry-degraded (re-evaluate degraded rows on --resume)\n\
                  replicate: --replications 5\n\
@@ -76,16 +77,29 @@ fn main() {
                  render:    --ticks 400 --out world.ppm\n\
                  serve:     --addr 127.0.0.1:4268 --state-dir molers-serve --envs local:8\n\
                  \x20          --max-running 4 --max-queued 64 --slots 0 (0 = fleet capacity)\n\
-                 client:    submit <method> [method options] --tenant NAME --weight W |\n\
-                 \x20          list | status --id N | watch --id N | cancel --id N |\n\
-                 \x20          result --id N | ping | shutdown  (--addr HOST:PORT)"
+                 \x20          --durability always|batch[:N]|os (default always: fsync\n\
+                 \x20          before acknowledging) --max-conns 256 --conn-timeout 30\n\
+                 client:    submit <method> [method options] --tenant NAME --weight W\n\
+                 \x20          [--dedup-key K (idempotent retry)] |\n\
+                 \x20          list | status --id N | watch --id N [--after-seq S] |\n\
+                 \x20          cancel --id N | result --id N | ping [--retries N] |\n\
+                 \x20          shutdown  (--addr HOST:PORT; exit 3 = cannot connect)"
             );
             std::process::exit(2);
         }
     };
     if let Err(e) = result {
         eprintln!("error: {e}");
-        std::process::exit(1);
+        // connect-level client failures get their own exit code so
+        // scripts can tell "daemon unreachable" from "request rejected"
+        let connect = e
+            .downcast_ref::<molers::error::Error>()
+            .is_some_and(|e| matches!(
+                e,
+                molers::error::Error::EnvironmentError { environment, .. }
+                    if environment == "client"
+            ));
+        std::process::exit(if connect { 3 } else { 1 });
     }
 }
 

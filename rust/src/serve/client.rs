@@ -2,18 +2,34 @@
 //! CLI, send it over TCP, print the response line(s). No engine code
 //! runs client-side; every response is the server's own JSONL, echoed
 //! verbatim (scripts pipe it straight into a JSON parser).
+//!
+//! Robustness surface: a connect failure maps to one clear line (exit
+//! code 3 — see `main`), `ping` retries with backoff so scripts can
+//! await daemon startup (`--retries`), `submit --dedup-key K` makes a
+//! retried submission idempotent, and `watch` auto-reconnects with the
+//! last seen `seq` as `after_seq` — a killed connection resumes the
+//! event stream gap-free.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 use crate::cli::Args;
 use crate::error::{Error, Result};
 use crate::serve::protocol::{obj, DEFAULT_ADDR};
 use crate::util::json::{self, Json};
 
-/// Options the client consumes itself (addressing + submission identity)
-/// — everything else is forwarded to the server as a method option.
-const CLIENT_KEYS: &[&str] = &["addr", "id", "tenant", "weight"];
+/// Options the client consumes itself (addressing + submission identity
+/// + retry/resume knobs) — everything else is forwarded to the server
+/// as a method option.
+const CLIENT_KEYS: &[&str] = &["addr", "id", "tenant", "weight", "dedup-key", "retries", "after-seq"];
+
+/// Connect attempts for `ping` (override with `--retries`).
+const PING_RETRIES: usize = 5;
+/// Consecutive failed reconnects before `watch` gives up.
+const WATCH_RETRIES: usize = 5;
+/// First retry backoff; doubles per attempt.
+const BACKOFF_MS: u64 = 100;
 
 /// Dispatch `molers client <action> ...`.
 pub fn cmd_client(args: &Args) -> Result<()> {
@@ -34,10 +50,11 @@ pub fn cmd_client(args: &Args) -> Result<()> {
             ])
             .to_string())
         }
-        "list" | "ping" | "shutdown" => {
+        "list" | "shutdown" => {
             one_shot(&addr, &obj(vec![("cmd", Json::Str(action.clone()))]).to_string())
         }
-        "watch" => watch(&addr, require_id(args)?),
+        "ping" => ping(&addr, args),
+        "watch" => watch(&addr, require_id(args)?, args),
         other => Err(Error::Config(format!(
             "unknown client action `{other}` \
              (submit|list|status|watch|cancel|result|ping|shutdown)"
@@ -52,8 +69,16 @@ fn require_id(args: &Args) -> Result<u64> {
     args.u64("id", 0).map_err(Error::Config)
 }
 
+/// Is this a connect-level failure (daemon not up yet / unreachable)
+/// rather than a protocol-level one?
+fn is_connect_error(e: &Error) -> bool {
+    matches!(e, Error::EnvironmentError { environment, .. } if environment == "client")
+}
+
 /// `molers client submit <method> --opt v --flag`: forward the parsed
-/// method options verbatim as the wire payload.
+/// method options verbatim as the wire payload. `--dedup-key K` rides
+/// as a dedicated wire field — retrying the same submit after a lost
+/// response returns the original experiment id instead of double-running.
 fn submit(addr: &str, args: &Args) -> Result<()> {
     let Some(run) = args.positional().get(1) else {
         return Err(Error::Config(
@@ -75,7 +100,7 @@ fn submit(addr: &str, args: &Args) -> Result<()> {
             .map(|f| Json::Str(f.clone()))
             .collect(),
     );
-    let line = obj(vec![
+    let mut fields = vec![
         ("cmd", Json::Str("submit".into())),
         ("run", Json::Str(run.clone())),
         ("tenant", Json::Str(args.get_or("tenant", "default").to_string())),
@@ -85,9 +110,38 @@ fn submit(addr: &str, args: &Args) -> Result<()> {
         ),
         ("options", options),
         ("flags", flags),
-    ])
-    .to_string();
+    ];
+    if let Some(k) = args.get("dedup-key") {
+        fields.push(("dedup_key", Json::Str(k.to_string())));
+    }
+    let line = obj(fields).to_string();
     one_shot(addr, &line)
+}
+
+/// `molers client ping [--retries N]`: retry connect failures with
+/// doubling backoff so scripts can await a daemon that is still
+/// starting. Protocol errors are never retried.
+fn ping(addr: &str, args: &Args) -> Result<()> {
+    let attempts = args
+        .usize("retries", PING_RETRIES)
+        .map_err(Error::Config)?
+        .max(1);
+    let line = obj(vec![("cmd", Json::Str("ping".into()))]).to_string();
+    let mut backoff = Duration::from_millis(BACKOFF_MS);
+    let mut last = None;
+    for attempt in 0..attempts {
+        if attempt > 0 {
+            std::thread::sleep(backoff);
+            backoff *= 2;
+        }
+        match one_shot(addr, &line) {
+            Err(e) if is_connect_error(&e) && attempt + 1 < attempts => last = Some(e),
+            other => return other,
+        }
+    }
+    Err(last.unwrap_or_else(|| {
+        Error::Config("ping retries exhausted".into())
+    }))
 }
 
 /// Send one request line, print the one response line, surface
@@ -109,35 +163,81 @@ fn one_shot(addr: &str, line: &str) -> Result<()> {
     check_ok(resp)
 }
 
-/// Stream `watch` events until the experiment reaches a terminal state.
-fn watch(addr: &str, id: u64) -> Result<()> {
+/// Stream `watch` events until the experiment reaches a terminal state,
+/// reconnecting on a dropped connection with `after_seq` set to the
+/// last seen seq — the server replays the missed tail, so the printed
+/// stream stays gap-free across daemon hiccups and network drops.
+fn watch(addr: &str, id: u64, args: &Args) -> Result<()> {
+    // an explicit starting point lets a restarted *client* process
+    // resume someone else's interrupted stream
+    let mut last_seq: Option<u64> = match args.get("after-seq") {
+        Some(_) => Some(args.u64("after-seq", 0).map_err(Error::Config)?),
+        None => None,
+    };
+    let mut failures = 0usize;
+    let mut backoff = Duration::from_millis(BACKOFF_MS);
+    loop {
+        match watch_once(addr, id, &mut last_seq) {
+            Ok(true) => return Ok(()),
+            Ok(false) => {
+                // mid-stream drop: reconnect and replay from last_seq
+                failures = 0;
+                backoff = Duration::from_millis(BACKOFF_MS);
+            }
+            Err(e) if is_connect_error(&e) => {
+                failures += 1;
+                if failures >= WATCH_RETRIES {
+                    return Err(e);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+        std::thread::sleep(backoff);
+        backoff = (backoff * 2).min(Duration::from_secs(2));
+    }
+}
+
+/// One watch connection. `Ok(true)` = terminal state seen; `Ok(false)`
+/// = the stream dropped mid-flight (reconnect); `Err` = connect failure
+/// or an explicit `{"ok":false}` from the server (fatal).
+fn watch_once(addr: &str, id: u64, last_seq: &mut Option<u64>) -> Result<bool> {
     let mut stream = TcpStream::connect(addr).map_err(|e| connect_error(addr, &e))?;
-    writeln!(
-        stream,
-        "{}",
-        obj(vec![
-            ("cmd", Json::Str("watch".into())),
-            ("id", Json::Num(id as f64)),
-        ])
-    )?;
-    stream.flush()?;
+    let mut fields = vec![
+        ("cmd", Json::Str("watch".into())),
+        ("id", Json::Num(id as f64)),
+    ];
+    if let Some(seq) = *last_seq {
+        fields.push(("after_seq", Json::Num(seq as f64)));
+    }
+    if writeln!(stream, "{}", obj(fields)).is_err() || stream.flush().is_err() {
+        return Ok(false);
+    }
     let reader = BufReader::new(stream);
     for line in reader.lines() {
-        let line = line?;
+        let Ok(line) = line else {
+            return Ok(false);
+        };
         println!("{line}");
         check_ok(&line)?;
         if let Ok(ev) = json::parse(&line) {
+            if let Some(seq) = ev.get("seq").and_then(Json::as_f64) {
+                let seq = seq as u64;
+                if last_seq.map(|s| seq > s).unwrap_or(true) {
+                    *last_seq = Some(seq);
+                }
+            }
             if ev.get("event").and_then(Json::as_str) == Some("state")
                 && matches!(
                     ev.get("state").and_then(Json::as_str),
                     Some("done" | "degraded" | "failed" | "cancelled")
                 )
             {
-                return Ok(());
+                return Ok(true);
             }
         }
     }
-    Ok(())
+    // EOF without a terminal state: the server went away mid-stream
+    Ok(false)
 }
 
 fn check_ok(line: &str) -> Result<()> {

@@ -1,21 +1,35 @@
 //! The TCP front: bind, accept, and speak the JSONL protocol — one
 //! thread per connection, one JSON object per line in both directions.
 //!
+//! Hardened against hostile clients: per-connection read/write timeouts
+//! (`--conn-timeout`), a request-line byte cap, a connection-count
+//! limit that sheds load with `{"ok":false,"error":"server busy"}`
+//! (`--max-conns`), and malformed lines answered with an error line
+//! instead of a killed thread — one slow, garbage-spewing or
+//! half-closed connection never stops well-behaved tenants.
+//!
 //! `watch` is the only streaming command: the connection subscribes to
 //! the experiment's registry events *before* snapshotting its state (so
 //! no transition can fall between snapshot and subscription), then
-//! forwards `state`/`progress` lines until a terminal state arrives.
+//! forwards seq-numbered `state`/`progress` lines until a terminal
+//! state arrives. With `after_seq`, the bounded event log's missed tail
+//! is replayed first — a reconnecting client resumes gap-free.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::broker::journal;
 use crate::error::Result;
-use crate::serve::protocol::{self, err, obj, ok};
-use crate::serve::registry::ExpRecord;
+use crate::serve::protocol::{self, err, obj};
+use crate::serve::registry::{ExpRecord, ExpState};
 use crate::serve::scheduler::{ServeConfig, Server};
 use crate::util::json::Json;
+
+/// Longest request line a client may send (bytes, newline included).
+const MAX_LINE: usize = 64 * 1024;
 
 /// Run the daemon: build the [`Server`], start its scheduler, bind the
 /// listen address (writing the bound address to `<state-dir>/addr` so
@@ -26,44 +40,118 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
     let listener = TcpListener::bind(&server.config().addr)?;
     let actual = listener.local_addr()?;
     let dir = server.registry().dir().to_path_buf();
-    std::fs::write(dir.join("addr"), format!("{actual}\n"))?;
+    // temp + rename + dir fsync: a concurrently-starting client reads
+    // either nothing or the complete address, never a partial line
+    journal::atomic_write(dir.join("addr"), format!("{actual}\n").as_bytes())?;
     println!(
         "molers serve: listening on {actual} (state dir {})",
         dir.display()
     );
     let _ = std::io::stdout().flush();
+    let conns = Arc::new(AtomicUsize::new(0));
     for stream in listener.incoming() {
         let Ok(stream) = stream else { continue };
+        let max = server.config().max_conns;
+        if max > 0 && conns.load(Ordering::SeqCst) >= max {
+            shed(stream);
+            continue;
+        }
+        conns.fetch_add(1, Ordering::SeqCst);
+        let guard = ConnGuard(Arc::clone(&conns));
         let server = Arc::clone(&server);
         std::thread::spawn(move || {
+            let _guard = guard;
             let _ = handle_conn(&server, stream);
         });
     }
     Ok(())
 }
 
+/// Decrements the live-connection count however the handler exits.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Refuse a connection past `--max-conns` with one error line. The
+/// short write timeout keeps a full-socket-buffer attacker from
+/// stalling the accept loop.
+fn shed(mut stream: TcpStream) {
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+    let _ = writeln!(stream, "{}", err("server busy"));
+}
+
 /// One connection: read request lines until EOF, answer each.
 fn handle_conn(server: &Arc<Server>, stream: TcpStream) -> std::io::Result<()> {
-    let reader = BufReader::new(stream.try_clone()?);
+    let t = server.config().conn_timeout_s;
+    let timeout = if t > 0.0 {
+        Some(Duration::from_secs_f64(t))
+    } else {
+        None
+    };
+    stream.set_read_timeout(timeout)?;
+    stream.set_write_timeout(timeout)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+    loop {
+        let mut buf = Vec::new();
+        // cap the read: a newline-less flood fills at most MAX_LINE + 1
+        // bytes of memory, then gets an error instead of a thread
+        let n = match (&mut reader)
+            .take((MAX_LINE + 1) as u64)
+            .read_until(b'\n', &mut buf)
+        {
+            Ok(n) => n,
+            // a stalled client tripped the read timeout: close quietly
+            Err(_) => return Ok(()),
+        };
+        if n == 0 {
+            return Ok(());
         }
-        let req = match protocol::parse_request(&line) {
+        let complete = buf.last() == Some(&b'\n');
+        if !complete && buf.len() > MAX_LINE {
+            writeln!(
+                out,
+                "{}",
+                err(&format!("request line exceeds {MAX_LINE} bytes"))
+            )?;
+            return Ok(());
+        }
+        let Ok(line) = String::from_utf8(buf) else {
+            writeln!(out, "{}", err("request line is not valid UTF-8"))?;
+            out.flush()?;
+            if complete {
+                continue;
+            }
+            return Ok(());
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            if complete {
+                continue;
+            }
+            return Ok(());
+        }
+        let req = match protocol::parse_request(line) {
             Ok(r) => r,
             Err(e) => {
                 writeln!(out, "{}", err(&e.to_string()))?;
-                continue;
+                out.flush()?;
+                if complete {
+                    continue;
+                }
+                return Ok(());
             }
         };
         match req.cmd.as_str() {
             "shutdown" => {
-                writeln!(out, "{}", ok(vec![("shutdown", Json::Bool(true))]))?;
+                writeln!(out, "{}", protocol::ok(vec![("shutdown", Json::Bool(true))]))?;
                 out.flush()?;
-                // journals are flushed per record; exiting here is the
-                // crash the restart path is built to survive anyway
+                // journals are synced per the durability policy; exiting
+                // here is the crash the restart path survives anyway
                 std::process::exit(0);
             }
             "watch" => {
@@ -71,40 +159,66 @@ fn handle_conn(server: &Arc<Server>, stream: TcpStream) -> std::io::Result<()> {
                     writeln!(out, "{}", err("`watch` requires `id`"))?;
                     continue;
                 };
-                watch(server, &mut out, id)?;
+                watch(server, &mut out, id, req.after_seq)?;
             }
             _ => {
                 writeln!(out, "{}", server.handle(&req))?;
             }
         }
         out.flush()?;
+        if !complete {
+            // the line arrived without a newline right before EOF —
+            // answered, nothing more can follow
+            return Ok(());
+        }
     }
-    Ok(())
 }
 
 /// Stream an experiment's events until it reaches a terminal state.
-fn watch(server: &Arc<Server>, out: &mut TcpStream, id: u64) -> std::io::Result<()> {
-    // subscribe FIRST: any transition after this snapshot arrives as an
-    // event, so the terminal state can never slip between the two
-    let rx = server.registry().subscribe(id);
+fn watch(
+    server: &Arc<Server>,
+    out: &mut TcpStream,
+    id: u64,
+    after_seq: Option<u64>,
+) -> std::io::Result<()> {
+    // subscribe FIRST: any transition after the snapshot/replay below
+    // arrives on the live channel, so no event can slip between the two
+    let sub = server.registry().subscribe(id, after_seq);
     let Some(rec) = server.registry().get(id) else {
         writeln!(out, "{}", err(&format!("unknown experiment id {id}")))?;
         return Ok(());
     };
-    writeln!(out, "{}", state_event(&rec))?;
-    out.flush()?;
-    if rec.state.is_terminal() {
-        return Ok(());
+    if after_seq.is_none() || sub.gap {
+        // fresh watch — or the bounded log evicted the requested tail:
+        // synthesize a snapshot carrying the newest assigned seq, which
+        // is a valid resume point for the next reconnect
+        writeln!(out, "{}", state_event(&rec, sub.last_seq))?;
+        out.flush()?;
+        if rec.state.is_terminal() {
+            return Ok(());
+        }
+    } else {
+        for ev in &sub.replay {
+            let terminal = is_terminal_state_event(ev);
+            writeln!(out, "{ev}")?;
+            if terminal {
+                out.flush()?;
+                return Ok(());
+            }
+        }
+        out.flush()?;
+        if rec.state.is_terminal() {
+            // the terminal transition predates `after_seq` (the client
+            // already saw it) — restate it so this watch still ends
+            writeln!(out, "{}", state_event(&rec, sub.last_seq))?;
+            out.flush()?;
+            return Ok(());
+        }
     }
     loop {
-        match rx.recv_timeout(Duration::from_millis(300)) {
+        match sub.rx.recv_timeout(Duration::from_millis(300)) {
             Ok(ev) => {
-                let terminal = ev.get("event").and_then(Json::as_str) == Some("state")
-                    && ev
-                        .get("state")
-                        .and_then(Json::as_str)
-                        .and_then(crate::serve::registry::ExpState::parse)
-                        .is_some_and(|s| s.is_terminal());
+                let terminal = is_terminal_state_event(&ev);
                 writeln!(out, "{ev}")?;
                 out.flush()?;
                 if terminal {
@@ -116,7 +230,8 @@ fn watch(server: &Arc<Server>, out: &mut TcpStream, id: u64) -> std::io::Result<
                 // down between events, fall back to polling the registry
                 if let Some(rec) = server.registry().get(id) {
                     if rec.state.is_terminal() {
-                        writeln!(out, "{}", state_event(&rec))?;
+                        let seq = server.registry().last_seq();
+                        writeln!(out, "{}", state_event(&rec, seq))?;
                         out.flush()?;
                         return Ok(());
                     }
@@ -127,12 +242,25 @@ fn watch(server: &Arc<Server>, out: &mut TcpStream, id: u64) -> std::io::Result<
     }
 }
 
-/// An experiment's current state as one `{"event":"state",...}` line.
-fn state_event(rec: &ExpRecord) -> String {
+/// Is this a `state` event naming a terminal state?
+fn is_terminal_state_event(ev: &Json) -> bool {
+    ev.get("event").and_then(Json::as_str) == Some("state")
+        && ev
+            .get("state")
+            .and_then(Json::as_str)
+            .and_then(ExpState::parse)
+            .is_some_and(|s| s.is_terminal())
+}
+
+/// An experiment's current state as one `{"event":"state",...}` line,
+/// stamped with an explicit seq (snapshots are synthesized, not drawn
+/// from the event log, so they carry the caller's resume point).
+fn state_event(rec: &ExpRecord, seq: u64) -> String {
     let mut fields = vec![
         ("event", Json::Str("state".into())),
         ("id", Json::Num(rec.id as f64)),
         ("state", Json::Str(rec.state.as_str().into())),
+        ("seq", Json::Num(seq as f64)),
     ];
     if let Some(e) = &rec.error {
         fields.push(("error", Json::Str(e.clone())));

@@ -13,10 +13,10 @@
 //! ```text
 //! {"cmd":"submit","run":"explore","tenant":"alice","weight":2,
 //!  "options":{"n":"200","chunk":"8","sampling":"sobol"},
-//!  "flags":["degraded-ok"]}
+//!  "flags":["degraded-ok"],"dedup_key":"sweep-2026-08"}
 //! {"cmd":"list"}
 //! {"cmd":"status","id":3}
-//! {"cmd":"watch","id":3}
+//! {"cmd":"watch","id":3,"after_seq":41}
 //! {"cmd":"cancel","id":3}
 //! {"cmd":"result","id":3}
 //! {"cmd":"ping"}
@@ -32,6 +32,38 @@
 //! persistence options (`--envs`, `--out`, `--journal`, ...) are
 //! server-owned and stripped from submissions.
 //!
+//! ### Idempotent submission
+//!
+//! `submit` takes an optional `dedup_key` (per tenant). The registry
+//! journals the key with the experiment, so retrying a submit whose
+//! response was lost — or retrying against a *restarted* daemon —
+//! returns the original experiment id with `"deduped":true` and the
+//! experiment's current state, instead of double-running the work. The
+//! check-and-insert is atomic: two racing retries can never both
+//! register.
+//!
+//! ### Resumable watch streams
+//!
+//! Every `watch` event carries a monotone `seq` (global across
+//! experiments). A reconnecting watcher sends `after_seq` with the last
+//! seq it saw; the server replays the missed transitions from a bounded
+//! in-memory event log before streaming live ones — gap-free across
+//! connection drops. When the requested tail has been evicted from the
+//! log, the server falls back to a fresh state snapshot (stamped with
+//! the newest seq, which is again a valid resume point).
+//! `molers client watch` does the reconnect dance automatically, with
+//! backoff.
+//!
+//! ### Hostile clients
+//!
+//! The listener enforces per-connection read/write timeouts
+//! (`--conn-timeout`, default 30 s), caps request lines at 64 KiB,
+//! sheds connections past `--max-conns` (default 256) with
+//! `{"ok":false,"error":"server busy"}`, and answers garbage bytes or
+//! malformed JSON with an error line — a slow-loris, a binary-spewing
+//! or a half-closed connection never pins a thread or stops
+//! well-behaved tenants.
+//!
 //! ## Admission control and fair scheduling
 //!
 //! Submissions are validated (a bad method/option is rejected with the
@@ -44,17 +76,34 @@
 //! pending chunks, so a 200k-row sweep cannot starve a 100-row run (see
 //! [`crate::broker::fairshare`] for the discipline).
 //!
-//! ## Restart survival
+//! ## Restart survival and durability
 //!
 //! The state directory is the source of truth:
 //!
 //! ```text
-//! <dir>/server.jsonl        submissions + terminal states (replayed)
-//! <dir>/addr                the bound listen address (for tests/scripts)
+//! <dir>/server.jsonl        meta-journal segment 0 (submissions +
+//!                           terminal states; replayed on start)
+//! <dir>/server.N.jsonl      later meta-journal segments (N ≥ 1)
+//! <dir>/addr                the bound listen address, written
+//!                           atomically (temp + rename + dir fsync)
 //! <dir>/exp-N.jsonl         per-experiment checkpoint journal
-//! <dir>/exp-N.csv           explore result file
-//! <dir>/exp-N.result.jsonl  terminal summary + pareto points
+//! <dir>/exp-N.csv           explore result file (fsync'd before the
+//!                           terminal state that advertises it)
+//! <dir>/exp-N.result.jsonl  terminal summary + pareto points (written
+//!                           atomically)
 //! ```
+//!
+//! Journal appends obey the server's [`Durability`](crate::broker::Durability)
+//! policy (`--durability`, default `always`): the daemon acknowledges a
+//! submission or terminal state only after `fdatasync`, so an
+//! acknowledged record survives power loss — `batch:N` bounds the loss
+//! window instead, `os` restores the flush-only behaviour. Replay folds
+//! every segment in order; when more than one exists at startup the
+//! folded table is compacted into a single snapshot segment
+//! (`server.(max+1).jsonl`, atomic write, then the old segments are
+//! deleted), and a long run rolls the same way — replay cost stays
+//! O(live experiments), not O(history), and a crash between any two
+//! steps replays idempotently.
 //!
 //! On restart every non-terminal experiment is re-enqueued: methods with
 //! a usable checkpoint resume from their own journal (the PR 2/4/6
@@ -73,5 +122,5 @@ pub mod scheduler;
 
 pub use listener::serve;
 pub use protocol::{Request, DEFAULT_ADDR};
-pub use registry::{ExpRecord, ExpState, Registry};
+pub use registry::{ExpRecord, ExpState, Registry, WatchSub};
 pub use scheduler::{ServeConfig, Server};

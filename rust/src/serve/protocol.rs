@@ -26,6 +26,13 @@ pub struct Request {
     pub options: Vec<(String, String)>,
     /// Method CLI flags.
     pub flags: Vec<String>,
+    /// Client-supplied idempotency key for `submit`: retrying a submit
+    /// whose response was lost returns the original experiment id
+    /// instead of double-running. Scoped per tenant.
+    pub dedup_key: Option<String>,
+    /// For `watch`: replay buffered events with `seq` strictly greater
+    /// than this before streaming live ones (reconnect resume point).
+    pub after_seq: Option<u64>,
 }
 
 /// Parse one request line. Unknown fields are ignored — older clients
@@ -73,6 +80,11 @@ pub fn parse_request(line: &str) -> Result<Request> {
         run: v.get("run").and_then(Json::as_str).map(str::to_string),
         options,
         flags,
+        dedup_key: v
+            .get("dedup_key")
+            .and_then(Json::as_str)
+            .map(str::to_string),
+        after_seq: v.get("after_seq").and_then(Json::as_f64).map(|f| f as u64),
     })
 }
 
@@ -124,6 +136,19 @@ mod tests {
             "numeric option values are stringified"
         );
         assert_eq!(r.flags, vec!["degraded-ok".to_string()]);
+        assert!(r.dedup_key.is_none());
+    }
+
+    #[test]
+    fn dedup_key_and_after_seq_parse() {
+        let r = parse_request(
+            "{\"cmd\":\"submit\",\"run\":\"explore\",\"dedup_key\":\"job-7\"}",
+        )
+        .unwrap();
+        assert_eq!(r.dedup_key.as_deref(), Some("job-7"));
+        assert!(r.after_seq.is_none());
+        let r = parse_request("{\"cmd\":\"watch\",\"id\":3,\"after_seq\":41}").unwrap();
+        assert_eq!(r.after_seq, Some(41));
     }
 
     #[test]

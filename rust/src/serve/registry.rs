@@ -1,13 +1,13 @@
 //! The server's experiment table: id allocation, state transitions, the
-//! `server.jsonl` meta-journal that makes them replayable, and the event
-//! fan-out behind `watch`.
+//! segmented `server.jsonl` meta-journal that makes them replayable, and
+//! the seq-numbered event fan-out behind `watch`.
 //!
 //! Two record kinds are journaled (same line format as every other
 //! journal in the crate):
 //!
 //! ```text
 //! {"kind":"exp","id":3,"tenant":"alice","weight":2,"run":"explore",
-//!  "argv":["explore","--n","200"]}                       at submission
+//!  "argv":["explore","--n","200"],"dedup_key":"job-7"}    at submission
 //! {"kind":"exp_state","id":3,"state":"done","summary":{...}}  terminal only
 //! ```
 //!
@@ -16,16 +16,53 @@
 //! `queued` and the scheduler re-runs it — resuming from its own
 //! per-experiment checkpoint journal where one exists. Terminal records
 //! win over re-submissions, so a finished experiment is never re-run.
+//!
+//! # Segments and compaction
+//!
+//! The meta-journal is a sequence of segments: `server.jsonl` (segment
+//! 0, the name a fresh directory starts with) followed by
+//! `server.N.jsonl` for N ≥ 1. Replay folds every segment in ascending
+//! order. Startup compaction: when more than one segment exists, the
+//! folded table is rewritten as a single snapshot segment
+//! (`server.(max+1).jsonl`, written atomically via temp + rename) and
+//! the old segments are deleted — so a long-lived daemon's replay stays
+//! O(live experiments), not O(history). A long *run* also rolls: after
+//! `roll_every` appends the same snapshot-then-delete step runs in
+//! place. A crash at any point between those steps is safe because
+//! replay is idempotent: a snapshot's `exp` line re-inserts the record
+//! and its `exp_state` line re-applies the terminal state.
+//!
+//! # Durability
+//!
+//! Appends go through [`Journal`] under a [`Durability`] policy
+//! (default [`Durability::Always`] for the server: `sync_data` per
+//! record *before* the daemon acknowledges, so an acknowledged
+//! submission or terminal state survives power loss).
+//!
+//! # Events
+//!
+//! Every emitted `state`/`progress` event carries a monotone `seq`
+//! (global across experiments, starting at 1). The registry keeps a
+//! bounded in-memory log of recent events; [`Registry::subscribe`] with
+//! `after_seq` replays the missed tail to a reconnecting watcher — or
+//! flags a `gap` when the tail has been evicted, in which case the
+//! caller re-snapshots.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Mutex;
 
-use crate::broker::journal::Journal;
+use crate::broker::journal::{self, Durability, Journal};
 use crate::error::Result;
 use crate::serve::protocol::obj;
 use crate::util::json::Json;
+
+/// Appends between mid-run meta-journal rolls.
+const DEFAULT_ROLL_EVERY: usize = 4096;
+/// Bounded event-log capacity (evicted seqs force watchers to
+/// re-snapshot instead of replaying).
+const EVENT_BUF_CAP: usize = 1024;
 
 /// Lifecycle of one served experiment.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -84,6 +121,9 @@ pub struct ExpRecord {
     /// Sanitized CLI argv the server re-parses to build the experiment
     /// (journaled, so a restart rebuilds the identical configuration).
     pub argv: Vec<String>,
+    /// Client-supplied idempotency key (journaled, so dedup survives a
+    /// restart too).
+    pub dedup_key: Option<String>,
     pub state: ExpState,
     /// States visited, in order (`["queued","running","done"]`).
     pub history: Vec<&'static str>,
@@ -93,116 +133,329 @@ pub struct ExpRecord {
     /// Progress in the method's natural unit.
     pub done: u64,
     pub total: u64,
-    /// Replayed from `server.jsonl` after a daemon restart.
+    /// Replayed from the meta-journal after a daemon restart.
     pub restored: bool,
 }
 
 struct Inner {
     records: BTreeMap<u64, ExpRecord>,
+    /// `(tenant, dedup_key)` → experiment id.
+    dedup: HashMap<(String, String), u64>,
     next_id: u64,
+}
+
+/// The open meta-journal segment plus its roll bookkeeping.
+struct MetaJournal {
+    journal: Journal,
+    seg_no: u64,
+    appended: usize,
+}
+
+/// Seq-numbered event log + live watch subscriptions.
+struct Events {
+    /// Next seq to assign (first event gets 1).
+    next_seq: u64,
+    /// Highest seq evicted from `buf` (0 = nothing evicted yet).
+    evicted_through: u64,
+    buf: VecDeque<Json>,
+    watchers: Vec<(u64, Sender<Json>)>,
+}
+
+/// One watch subscription: the live channel plus whatever the bounded
+/// event log could replay for `after_seq`.
+pub struct WatchSub {
+    pub rx: Receiver<Json>,
+    /// Buffered events for this experiment with `seq > after_seq`, in
+    /// order. Empty when subscribing without a resume point.
+    pub replay: Vec<Json>,
+    /// `after_seq` predates the bounded log — the caller must
+    /// re-snapshot instead of trusting `replay` to be complete.
+    pub gap: bool,
+    /// Highest seq assigned before this subscription (for seeding a
+    /// fresh watcher's resume point).
+    pub last_seq: u64,
 }
 
 /// The experiment table + meta-journal + watch subscriptions.
 pub struct Registry {
     dir: PathBuf,
-    journal: Journal,
+    durability: Durability,
+    roll_every: usize,
+    meta: Mutex<MetaJournal>,
     inner: Mutex<Inner>,
-    watchers: Mutex<Vec<(u64, Sender<Json>)>>,
+    events: Mutex<Events>,
+}
+
+/// Segment N's file name (`server.jsonl` for N = 0).
+fn seg_name(n: u64) -> String {
+    if n == 0 {
+        "server.jsonl".to_string()
+    } else {
+        format!("server.{n}.jsonl")
+    }
+}
+
+/// All meta-journal segments in `dir`, ascending by segment number.
+fn meta_segments(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let mut segs = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if name == "server.jsonl" {
+            segs.push((0u64, entry.path()));
+        } else if let Some(mid) = name
+            .strip_prefix("server.")
+            .and_then(|s| s.strip_suffix(".jsonl"))
+        {
+            if let Ok(n) = mid.parse::<u64>() {
+                segs.push((n, entry.path()));
+            }
+        }
+    }
+    segs.sort_by_key(|(n, _)| *n);
+    Ok(segs)
+}
+
+/// Fold one segment's records into the table (tolerates a torn tail —
+/// [`Journal::load`] drops incomplete last lines).
+fn replay_segment(
+    path: &Path,
+    records: &mut BTreeMap<u64, ExpRecord>,
+    dedup: &mut HashMap<(String, String), u64>,
+    next_id: &mut u64,
+) -> Result<()> {
+    for rec in Journal::load(path)? {
+        let id = match rec.get("id").and_then(Json::as_f64) {
+            Some(f) => f as u64,
+            None => continue,
+        };
+        match rec.get("kind").and_then(Json::as_str) {
+            Some("exp") => {
+                let argv = rec
+                    .get("argv")
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(Json::as_str)
+                            .map(str::to_string)
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                let tenant = rec
+                    .get("tenant")
+                    .and_then(Json::as_str)
+                    .unwrap_or("default")
+                    .to_string();
+                let dedup_key = rec
+                    .get("dedup_key")
+                    .and_then(Json::as_str)
+                    .map(str::to_string);
+                if let Some(k) = &dedup_key {
+                    dedup.insert((tenant.clone(), k.clone()), id);
+                }
+                records.insert(
+                    id,
+                    ExpRecord {
+                        id,
+                        tenant,
+                        weight: rec
+                            .get("weight")
+                            .and_then(Json::as_f64)
+                            .map(|f| f as u64)
+                            .unwrap_or(1)
+                            .max(1),
+                        run: rec
+                            .get("run")
+                            .and_then(Json::as_str)
+                            .unwrap_or("")
+                            .to_string(),
+                        argv,
+                        dedup_key,
+                        state: ExpState::Queued,
+                        history: vec!["queued"],
+                        error: None,
+                        summary: None,
+                        done: 0,
+                        total: 0,
+                        restored: true,
+                    },
+                );
+                *next_id = (*next_id).max(id + 1);
+            }
+            Some("exp_state") => {
+                if let Some(r) = records.get_mut(&id) {
+                    if let Some(state) = rec
+                        .get("state")
+                        .and_then(Json::as_str)
+                        .and_then(ExpState::parse)
+                    {
+                        r.state = state;
+                        r.history = vec!["queued", "running", state.as_str()];
+                    }
+                    r.error = rec
+                        .get("error")
+                        .and_then(Json::as_str)
+                        .map(str::to_string);
+                    r.summary = rec.get("summary").cloned();
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+/// The journal line registering an experiment.
+fn exp_json(r: &ExpRecord) -> Json {
+    let mut fields = vec![
+        ("kind", Json::Str("exp".into())),
+        ("id", Json::Num(r.id as f64)),
+        ("tenant", Json::Str(r.tenant.clone())),
+        ("weight", Json::Num(r.weight as f64)),
+        ("run", Json::Str(r.run.clone())),
+        (
+            "argv",
+            Json::Arr(r.argv.iter().cloned().map(Json::Str).collect()),
+        ),
+    ];
+    if let Some(k) = &r.dedup_key {
+        fields.push(("dedup_key", Json::Str(k.clone())));
+    }
+    obj(fields)
+}
+
+/// The journal line recording a terminal state.
+fn exp_state_json(r: &ExpRecord) -> Json {
+    let mut fields = vec![
+        ("kind", Json::Str("exp_state".into())),
+        ("id", Json::Num(r.id as f64)),
+        ("state", Json::Str(r.state.as_str().into())),
+    ];
+    if let Some(e) = &r.error {
+        fields.push(("error", Json::Str(e.clone())));
+    }
+    if let Some(s) = &r.summary {
+        fields.push(("summary", s.clone()));
+    }
+    obj(fields)
+}
+
+/// The folded table as snapshot-segment bytes: one `exp` line per
+/// record, plus an `exp_state` line where the state is terminal.
+fn snapshot_body(records: &BTreeMap<u64, ExpRecord>) -> String {
+    let mut body = String::new();
+    for r in records.values() {
+        body.push_str(&exp_json(r).to_string());
+        body.push('\n');
+        if r.state.is_terminal() {
+            body.push_str(&exp_state_json(r).to_string());
+            body.push('\n');
+        }
+    }
+    body
 }
 
 impl Registry {
-    /// Open (or create) a state directory, replaying `server.jsonl`:
-    /// terminal experiments come back as-is, non-terminal ones return to
-    /// `queued` with `restored` set so the scheduler re-runs them from
-    /// their own checkpoint journals.
+    /// Open (or create) a state directory with the server's defaults:
+    /// fsync-per-record durability (an acknowledged record survives
+    /// power loss) and the standard roll threshold. Replays every
+    /// meta-journal segment: terminal experiments come back as-is,
+    /// non-terminal ones return to `queued` with `restored` set so the
+    /// scheduler re-runs them from their own checkpoint journals.
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        Self::open_tuned(dir, Durability::Always, DEFAULT_ROLL_EVERY)
+    }
+
+    /// [`Registry::open`] with an explicit durability policy.
+    pub fn open_with(dir: impl AsRef<Path>, durability: Durability) -> Result<Self> {
+        Self::open_tuned(dir, durability, DEFAULT_ROLL_EVERY)
+    }
+
+    /// Fully-tuned open (tests use a tiny `roll_every` to exercise
+    /// segment rolls without thousands of submissions).
+    pub fn open_tuned(
+        dir: impl AsRef<Path>,
+        durability: Durability,
+        roll_every: usize,
+    ) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir)?;
-        let path = dir.join("server.jsonl");
+        journal::fsync_dir(&dir);
+        let mut segs = meta_segments(&dir)?;
         let mut records: BTreeMap<u64, ExpRecord> = BTreeMap::new();
+        let mut dedup: HashMap<(String, String), u64> = HashMap::new();
         let mut next_id = 1u64;
-        if path.exists() {
-            for rec in Journal::load(&path)? {
-                let id = match rec.get("id").and_then(Json::as_f64) {
-                    Some(f) => f as u64,
-                    None => continue,
-                };
-                match rec.get("kind").and_then(Json::as_str) {
-                    Some("exp") => {
-                        let argv = rec
-                            .get("argv")
-                            .and_then(Json::as_arr)
-                            .map(|a| {
-                                a.iter()
-                                    .filter_map(Json::as_str)
-                                    .map(str::to_string)
-                                    .collect()
-                            })
-                            .unwrap_or_default();
-                        records.insert(
-                            id,
-                            ExpRecord {
-                                id,
-                                tenant: rec
-                                    .get("tenant")
-                                    .and_then(Json::as_str)
-                                    .unwrap_or("default")
-                                    .to_string(),
-                                weight: rec
-                                    .get("weight")
-                                    .and_then(Json::as_f64)
-                                    .map(|f| f as u64)
-                                    .unwrap_or(1)
-                                    .max(1),
-                                run: rec
-                                    .get("run")
-                                    .and_then(Json::as_str)
-                                    .unwrap_or("")
-                                    .to_string(),
-                                argv,
-                                state: ExpState::Queued,
-                                history: vec!["queued"],
-                                error: None,
-                                summary: None,
-                                done: 0,
-                                total: 0,
-                                restored: true,
-                            },
-                        );
-                        next_id = next_id.max(id + 1);
-                    }
-                    Some("exp_state") => {
-                        if let Some(r) = records.get_mut(&id) {
-                            if let Some(state) = rec
-                                .get("state")
-                                .and_then(Json::as_str)
-                                .and_then(ExpState::parse)
-                            {
-                                r.state = state;
-                                r.history = vec!["queued", "running", state.as_str()];
-                            }
-                            r.error = rec
-                                .get("error")
-                                .and_then(Json::as_str)
-                                .map(str::to_string);
-                            r.summary = rec.get("summary").cloned();
-                        }
-                    }
-                    _ => {}
-                }
-            }
+        for (_, path) in &segs {
+            replay_segment(path, &mut records, &mut dedup, &mut next_id)?;
         }
-        let journal = Journal::append_to(&path)?;
+        // startup compaction: fold multiple segments into one snapshot
+        let (seg_no, path) = if segs.len() > 1 {
+            let new_no = segs.last().unwrap().0 + 1;
+            let snap = dir.join(seg_name(new_no));
+            journal::atomic_write(&snap, snapshot_body(&records).as_bytes())?;
+            // the snapshot is durable — history is now redundant
+            for (_, old) in &segs {
+                let _ = std::fs::remove_file(old);
+            }
+            journal::fsync_dir(&dir);
+            (new_no, snap)
+        } else if let Some((n, p)) = segs.pop() {
+            (n, p)
+        } else {
+            (0, dir.join(seg_name(0)))
+        };
+        let jour = Journal::append_to_with(&path, durability)?;
         Ok(Registry {
             dir,
-            journal,
-            inner: Mutex::new(Inner { records, next_id }),
-            watchers: Mutex::new(Vec::new()),
+            durability,
+            roll_every: roll_every.max(1),
+            meta: Mutex::new(MetaJournal {
+                journal: jour,
+                seg_no,
+                appended: 0,
+            }),
+            inner: Mutex::new(Inner {
+                records,
+                dedup,
+                next_id,
+            }),
+            events: Mutex::new(Events {
+                next_seq: 1,
+                evicted_through: 0,
+                buf: VecDeque::new(),
+                watchers: Vec::new(),
+            }),
         })
     }
 
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// Append to the meta-journal, rolling to a fresh snapshot segment
+    /// once this one has grown past the threshold. Lock order is always
+    /// meta → inner (briefly, for the snapshot); callers hold neither.
+    fn append_meta(&self, rec: &Json) -> Result<()> {
+        let mut m = self.meta.lock().unwrap();
+        m.journal.append(rec)?;
+        m.appended += 1;
+        if m.appended >= self.roll_every {
+            let body = {
+                let inner = self.inner.lock().unwrap();
+                snapshot_body(&inner.records)
+            };
+            let new_no = m.seg_no + 1;
+            let snap = self.dir.join(seg_name(new_no));
+            journal::atomic_write(&snap, body.as_bytes())?;
+            let old = self.dir.join(seg_name(m.seg_no));
+            let _ = std::fs::remove_file(&old);
+            journal::fsync_dir(&self.dir);
+            m.journal = Journal::append_to_with(&snap, self.durability)?;
+            m.seg_no = new_no;
+            m.appended = 0;
+        }
+        Ok(())
     }
 
     /// Per-experiment file paths — keyed by the unique id, so concurrent
@@ -222,50 +475,67 @@ impl Registry {
             .into_owned()
     }
 
-    /// Register a new experiment (journaled), returning its id.
+    /// An existing experiment for `(tenant, dedup_key)`, if any — the
+    /// fast path a retried submit takes before admission control.
+    pub fn dedup_lookup(&self, tenant: &str, key: &str) -> Option<u64> {
+        self.inner
+            .lock()
+            .unwrap()
+            .dedup
+            .get(&(tenant.to_string(), key.to_string()))
+            .copied()
+    }
+
+    /// Register a new experiment (journaled durably before returning),
+    /// returning `(id, fresh)`. When `dedup_key` matches an earlier
+    /// submission by the same tenant, the original id comes back with
+    /// `fresh = false` and nothing is journaled or enqueued — the
+    /// check-and-insert is atomic under the table lock, so two racing
+    /// retries can never both register.
     pub fn submit(
         &self,
         tenant: &str,
         weight: u64,
         run: &str,
         argv: Vec<String>,
-    ) -> Result<u64> {
-        let id = {
+        dedup_key: Option<&str>,
+    ) -> Result<(u64, bool)> {
+        let rec = {
             let mut inner = self.inner.lock().unwrap();
+            if let Some(k) = dedup_key {
+                if let Some(&id) =
+                    inner.dedup.get(&(tenant.to_string(), k.to_string()))
+                {
+                    return Ok((id, false));
+                }
+            }
             let id = inner.next_id;
             inner.next_id += 1;
-            inner.records.insert(
+            let rec = ExpRecord {
                 id,
-                ExpRecord {
-                    id,
-                    tenant: tenant.to_string(),
-                    weight: weight.max(1),
-                    run: run.to_string(),
-                    argv: argv.clone(),
-                    state: ExpState::Queued,
-                    history: vec!["queued"],
-                    error: None,
-                    summary: None,
-                    done: 0,
-                    total: 0,
-                    restored: false,
-                },
-            );
-            id
+                tenant: tenant.to_string(),
+                weight: weight.max(1),
+                run: run.to_string(),
+                argv,
+                dedup_key: dedup_key.map(str::to_string),
+                state: ExpState::Queued,
+                history: vec!["queued"],
+                error: None,
+                summary: None,
+                done: 0,
+                total: 0,
+                restored: false,
+            };
+            if let Some(k) = dedup_key {
+                inner.dedup.insert((tenant.to_string(), k.to_string()), id);
+            }
+            inner.records.insert(id, rec.clone());
+            rec
         };
-        self.journal.append(&obj(vec![
-            ("kind", Json::Str("exp".into())),
-            ("id", Json::Num(id as f64)),
-            ("tenant", Json::Str(tenant.to_string())),
-            ("weight", Json::Num(weight.max(1) as f64)),
-            ("run", Json::Str(run.to_string())),
-            (
-                "argv",
-                Json::Arr(argv.into_iter().map(Json::Str).collect()),
-            ),
-        ]))?;
+        let id = rec.id;
+        self.append_meta(&exp_json(&rec))?;
         self.emit_state(id, ExpState::Queued, None);
-        Ok(id)
+        Ok((id, true))
     }
 
     /// Mark an experiment running (not journaled — a replayed run returns
@@ -284,8 +554,9 @@ impl Registry {
         self.emit_state(id, ExpState::Running, None);
     }
 
-    /// Record a terminal state (journaled). A second terminal transition
-    /// is ignored — cancel/finish races resolve to whichever lands first.
+    /// Record a terminal state (journaled durably before returning). A
+    /// second terminal transition is ignored — cancel/finish races
+    /// resolve to whichever lands first.
     pub fn finish(
         &self,
         id: u64,
@@ -294,7 +565,7 @@ impl Registry {
         summary: Option<Json>,
     ) -> Result<()> {
         debug_assert!(state.is_terminal());
-        {
+        let rec = {
             let mut inner = self.inner.lock().unwrap();
             let Some(r) = inner.records.get_mut(&id) else {
                 return Ok(());
@@ -305,20 +576,10 @@ impl Registry {
             r.state = state;
             r.history.push(state.as_str());
             r.error = error.clone();
-            r.summary = summary.clone();
-        }
-        let mut fields = vec![
-            ("kind", Json::Str("exp_state".into())),
-            ("id", Json::Num(id as f64)),
-            ("state", Json::Str(state.as_str().into())),
-        ];
-        if let Some(e) = &error {
-            fields.push(("error", Json::Str(e.clone())));
-        }
-        if let Some(s) = summary {
-            fields.push(("summary", s));
-        }
-        self.journal.append(&obj(fields))?;
+            r.summary = summary;
+            r.clone()
+        };
+        self.append_meta(&exp_state_json(&rec))?;
         self.emit_state(id, state, error);
         Ok(())
     }
@@ -376,11 +637,49 @@ impl Registry {
 
     /// Subscribe to an experiment's events. The receiver gets every
     /// `state`/`progress` event emitted after this call; dead receivers
-    /// are pruned on the next emit.
-    pub fn subscribe(&self, id: u64) -> Receiver<Json> {
+    /// are pruned on the next emit. With `after_seq`, buffered events
+    /// newer than that seq come back in [`WatchSub::replay`] — or
+    /// [`WatchSub::gap`] is set when the bounded log has already evicted
+    /// part of the requested tail. Subscription and replay extraction
+    /// are atomic under the event lock, so no event can fall between
+    /// the replayed tail and the live channel.
+    pub fn subscribe(&self, id: u64, after_seq: Option<u64>) -> WatchSub {
+        let mut ev = self.events.lock().unwrap();
         let (tx, rx) = channel();
-        self.watchers.lock().unwrap().push((id, tx));
-        rx
+        let last_seq = ev.next_seq - 1;
+        let (replay, gap) = match after_seq {
+            None => (Vec::new(), false),
+            Some(after) => {
+                let gap = after < ev.evicted_through;
+                let replay = ev
+                    .buf
+                    .iter()
+                    .filter(|e| {
+                        e.get("id").and_then(Json::as_f64).map(|f| f as u64)
+                            == Some(id)
+                            && e.get("seq")
+                                .and_then(Json::as_f64)
+                                .map(|f| f as u64)
+                                .unwrap_or(0)
+                                > after
+                    })
+                    .cloned()
+                    .collect();
+                (replay, gap)
+            }
+        };
+        ev.watchers.push((id, tx));
+        WatchSub {
+            rx,
+            replay,
+            gap,
+            last_seq,
+        }
+    }
+
+    /// Highest seq assigned so far (0 = no events yet).
+    pub fn last_seq(&self) -> u64 {
+        self.events.lock().unwrap().next_seq - 1
     }
 
     fn emit_state(&self, id: u64, state: ExpState, error: Option<String>) {
@@ -395,9 +694,27 @@ impl Registry {
         self.emit(id, obj(fields));
     }
 
-    fn emit(&self, id: u64, event: Json) {
-        let mut ws = self.watchers.lock().unwrap();
-        ws.retain(|(wid, tx)| *wid != id || tx.send(event.clone()).is_ok());
+    /// Stamp the next seq onto the event, log it, fan it out.
+    fn emit(&self, id: u64, mut event: Json) {
+        let mut ev = self.events.lock().unwrap();
+        let seq = ev.next_seq;
+        ev.next_seq += 1;
+        if let Json::Obj(m) = &mut event {
+            m.insert("seq".to_string(), Json::Num(seq as f64));
+        }
+        ev.buf.push_back(event.clone());
+        while ev.buf.len() > EVENT_BUF_CAP {
+            if let Some(old) = ev.buf.pop_front() {
+                let s = old
+                    .get("seq")
+                    .and_then(Json::as_f64)
+                    .map(|f| f as u64)
+                    .unwrap_or(0);
+                ev.evicted_through = ev.evicted_through.max(s);
+            }
+        }
+        ev.watchers
+            .retain(|(wid, tx)| *wid != id || tx.send(event.clone()).is_ok());
     }
 }
 
@@ -419,10 +736,18 @@ mod tests {
         let dir = tmp_dir("replay");
         {
             let reg = Registry::open(&dir).unwrap();
-            let a = reg
-                .submit("alice", 1, "explore", vec!["explore".into(), "--n".into(), "9".into()])
+            let (a, _) = reg
+                .submit(
+                    "alice",
+                    1,
+                    "explore",
+                    vec!["explore".into(), "--n".into(), "9".into()],
+                    None,
+                )
                 .unwrap();
-            let b = reg.submit("bob", 2, "calibrate", vec!["calibrate".into()]).unwrap();
+            let (b, _) = reg
+                .submit("bob", 2, "calibrate", vec!["calibrate".into()], None)
+                .unwrap();
             reg.set_running(a);
             reg.set_running(b);
             reg.finish(b, ExpState::Done, None, Some(Json::Num(1.0))).unwrap();
@@ -440,7 +765,7 @@ mod tests {
         assert_eq!(b.summary, Some(Json::Num(1.0)));
         assert_eq!(reg.queued_ids(), vec![1]);
         // ids continue past the replayed maximum
-        let c = reg.submit("carol", 1, "run", vec!["run".into()]).unwrap();
+        let (c, _) = reg.submit("carol", 1, "run", vec!["run".into()], None).unwrap();
         assert_eq!(c, 3);
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -449,7 +774,7 @@ mod tests {
     fn double_finish_keeps_the_first_terminal_state() {
         let dir = tmp_dir("double");
         let reg = Registry::open(&dir).unwrap();
-        let id = reg.submit("t", 1, "run", vec!["run".into()]).unwrap();
+        let (id, _) = reg.submit("t", 1, "run", vec!["run".into()], None).unwrap();
         reg.finish(id, ExpState::Cancelled, Some("cancelled".into()), None).unwrap();
         reg.finish(id, ExpState::Failed, Some("late error".into()), None).unwrap();
         let r = reg.get(id).unwrap();
@@ -462,13 +787,15 @@ mod tests {
     fn watchers_receive_events_after_subscribing() {
         let dir = tmp_dir("watch");
         let reg = Registry::open(&dir).unwrap();
-        let id = reg.submit("t", 1, "run", vec!["run".into()]).unwrap();
-        let rx = reg.subscribe(id);
+        let (id, _) = reg.submit("t", 1, "run", vec!["run".into()], None).unwrap();
+        let sub = reg.subscribe(id, None);
+        assert!(sub.replay.is_empty());
         reg.set_running(id);
         reg.progress(id, 3, 10);
         reg.finish(id, ExpState::Done, None, None).unwrap();
-        let kinds: Vec<String> = rx
-            .try_iter()
+        let events: Vec<Json> = sub.rx.try_iter().collect();
+        let kinds: Vec<String> = events
+            .iter()
             .map(|e| {
                 format!(
                     "{}:{}",
@@ -484,6 +811,158 @@ mod tests {
             kinds,
             vec!["state:\"running\"", "progress:3", "state:\"done\""]
         );
+        // every event carries a strictly increasing seq
+        let seqs: Vec<u64> = events
+            .iter()
+            .map(|e| e.get("seq").and_then(Json::as_f64).unwrap() as u64)
+            .collect();
+        assert!(seqs.windows(2).all(|w| w[1] > w[0]));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dedup_key_returns_the_original_id_even_across_restart() {
+        let dir = tmp_dir("dedup");
+        {
+            let reg = Registry::open(&dir).unwrap();
+            let (a, fresh) = reg
+                .submit("alice", 1, "run", vec!["run".into()], Some("job-7"))
+                .unwrap();
+            assert!(fresh);
+            let (a2, fresh2) = reg
+                .submit("alice", 1, "run", vec!["run".into()], Some("job-7"))
+                .unwrap();
+            assert_eq!(a2, a, "same tenant + key dedups");
+            assert!(!fresh2);
+            // a different tenant's identical key is a different namespace
+            let (b, fresh3) = reg
+                .submit("bob", 1, "run", vec!["run".into()], Some("job-7"))
+                .unwrap();
+            assert_ne!(b, a);
+            assert!(fresh3);
+            assert_eq!(reg.dedup_lookup("alice", "job-7"), Some(a));
+            assert_eq!(reg.dedup_lookup("alice", "other"), None);
+        }
+        // the key is journaled: a restarted daemon still dedups
+        let reg = Registry::open(&dir).unwrap();
+        let (a3, fresh4) = reg
+            .submit("alice", 1, "run", vec!["run".into()], Some("job-7"))
+            .unwrap();
+        assert_eq!(a3, 1);
+        assert!(!fresh4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn subscribe_with_after_seq_replays_the_missed_tail() {
+        let dir = tmp_dir("afterseq");
+        let reg = Registry::open(&dir).unwrap();
+        let (id, _) = reg.submit("t", 1, "run", vec!["run".into()], None).unwrap();
+        let first = reg.subscribe(id, None);
+        reg.set_running(id);
+        let seen: Vec<Json> = first.rx.try_iter().collect();
+        let last = seen
+            .last()
+            .and_then(|e| e.get("seq"))
+            .and_then(Json::as_f64)
+            .unwrap() as u64;
+        // "the connection dropped": more transitions land meanwhile
+        reg.progress(id, 5, 10);
+        reg.finish(id, ExpState::Done, None, None).unwrap();
+        let sub = reg.subscribe(id, Some(last));
+        assert!(!sub.gap);
+        let replayed: Vec<&str> = sub
+            .replay
+            .iter()
+            .map(|e| e.get("event").and_then(Json::as_str).unwrap())
+            .collect();
+        assert_eq!(replayed, vec!["progress", "state"], "missed tail replays");
+        let seqs: Vec<u64> = sub
+            .replay
+            .iter()
+            .map(|e| e.get("seq").and_then(Json::as_f64).unwrap() as u64)
+            .collect();
+        assert!(seqs.iter().all(|&s| s > last));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn roll_compacts_segments_and_replay_folds_them() {
+        let dir = tmp_dir("roll");
+        {
+            // tiny roll threshold: every few appends rewrites a snapshot
+            let reg = Registry::open_tuned(&dir, Durability::Os, 3).unwrap();
+            for i in 0..5 {
+                let (id, _) = reg
+                    .submit("t", 1, "run", vec!["run".into()], None)
+                    .unwrap();
+                assert_eq!(id, i + 1);
+            }
+            reg.finish(2, ExpState::Done, None, Some(Json::Num(2.0))).unwrap();
+            reg.finish(4, ExpState::Failed, Some("boom".into()), None).unwrap();
+        }
+        let segs = meta_segments(&dir).unwrap();
+        assert!(
+            !segs.is_empty(),
+            "at least one live segment remains after rolls"
+        );
+        // a reopened registry folds whatever segments exist back into
+        // the identical table
+        let reg = Registry::open_tuned(&dir, Durability::Os, 4096).unwrap();
+        assert_eq!(reg.list().len(), 5);
+        assert_eq!(reg.get(2).unwrap().state, ExpState::Done);
+        assert_eq!(reg.get(2).unwrap().summary, Some(Json::Num(2.0)));
+        assert_eq!(reg.get(4).unwrap().state, ExpState::Failed);
+        assert_eq!(reg.get(4).unwrap().error.as_deref(), Some("boom"));
+        assert_eq!(reg.queued_ids(), vec![1, 3, 5]);
+        // rolls delete superseded segments as they go
+        let segs = meta_segments(&dir).unwrap();
+        assert_eq!(segs.len(), 1, "a roll leaves a single live snapshot");
+        // and ids keep climbing past everything replayed
+        let (next, _) = reg.submit("t", 1, "run", vec!["run".into()], None).unwrap();
+        assert_eq!(next, 6);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn startup_compaction_folds_a_crash_torn_segment_pair() {
+        // a crash between snapshot-write and old-segment-delete leaves
+        // two overlapping segments on disk — exactly what this builds
+        let dir = tmp_dir("compact");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("server.jsonl"),
+            "{\"kind\":\"exp\",\"id\":1,\"tenant\":\"t\",\"weight\":1,\
+             \"run\":\"run\",\"argv\":[\"run\"],\"dedup_key\":\"k1\"}\n\
+             {\"kind\":\"exp\",\"id\":2,\"tenant\":\"t\",\"weight\":1,\
+             \"run\":\"run\",\"argv\":[\"run\"]}\n\
+             {\"kind\":\"exp_state\",\"id\":1,\"state\":\"done\"}\n",
+        )
+        .unwrap();
+        // the snapshot segment re-states everything (replay idempotence)
+        std::fs::write(
+            dir.join("server.1.jsonl"),
+            "{\"kind\":\"exp\",\"id\":1,\"tenant\":\"t\",\"weight\":1,\
+             \"run\":\"run\",\"argv\":[\"run\"],\"dedup_key\":\"k1\"}\n\
+             {\"kind\":\"exp_state\",\"id\":1,\"state\":\"done\"}\n\
+             {\"kind\":\"exp\",\"id\":2,\"tenant\":\"t\",\"weight\":1,\
+             \"run\":\"run\",\"argv\":[\"run\"]}\n",
+        )
+        .unwrap();
+        let reg = Registry::open_with(&dir, Durability::Os).unwrap();
+        assert_eq!(reg.get(1).unwrap().state, ExpState::Done);
+        assert_eq!(reg.get(2).unwrap().state, ExpState::Queued);
+        assert_eq!(reg.dedup_lookup("t", "k1"), Some(1));
+        let segs = meta_segments(&dir).unwrap();
+        assert_eq!(segs.len(), 1, "compaction folded both into one snapshot");
+        assert_eq!(segs[0].0, 2, "snapshot numbers past the newest segment");
+        // the folded snapshot replays to the same table again
+        drop(reg);
+        let reg = Registry::open_with(&dir, Durability::Os).unwrap();
+        assert_eq!(reg.get(1).unwrap().state, ExpState::Done);
+        assert_eq!(reg.queued_ids(), vec![2]);
+        let (next, _) = reg.submit("t", 1, "run", vec!["run".into()], None).unwrap();
+        assert_eq!(next, 3);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

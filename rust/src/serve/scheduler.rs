@@ -19,7 +19,7 @@ use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-use crate::broker::{journal, policy, Broker, FairShare, Journal, RetryPolicy};
+use crate::broker::{journal, policy, Broker, Durability, FairShare, Journal, RetryPolicy};
 use crate::cli::{front, Args};
 use crate::environment::{EnvStats, Environment};
 use crate::error::{Error, Result};
@@ -50,6 +50,12 @@ const SERVER_OWNED: &[&str] = &[
     "timeout",
     "max-retries",
     "backoff",
+    "durability",
+    "max-conns",
+    "conn-timeout",
+    "dedup-key",
+    "after-seq",
+    "retries",
 ];
 
 /// `molers serve` configuration (parsed from CLI flags).
@@ -68,11 +74,25 @@ pub struct ServeConfig {
     pub max_queued: usize,
     pub seed: u64,
     pub retry: Option<RetryPolicy>,
+    /// How eagerly journals reach stable storage before the daemon
+    /// acknowledges (`--durability always|batch[:N]|os`, default
+    /// `always` — an acknowledged record survives power loss).
+    pub durability: Durability,
+    /// Concurrent connections before the listener sheds load with
+    /// `server busy` (`--max-conns`, `0` = unlimited).
+    pub max_conns: usize,
+    /// Per-connection read/write timeout in seconds (`--conn-timeout`,
+    /// `0` = none). Watch streams are exempt from the read side.
+    pub conn_timeout_s: f64,
 }
 
 impl ServeConfig {
     pub fn from_args(args: &Args) -> Result<Self> {
         let n = |r: std::result::Result<usize, String>| r.map_err(Error::Config);
+        let d = args.get_or("durability", "always").to_string();
+        let durability = Durability::parse(&d).ok_or_else(|| {
+            Error::Config(format!("invalid --durability `{d}` (always|batch[:N]|os)"))
+        })?;
         Ok(ServeConfig {
             addr: args.get_or("addr", DEFAULT_ADDR).to_string(),
             state_dir: args.get_or("state-dir", "molers-serve").to_string(),
@@ -83,6 +103,9 @@ impl ServeConfig {
             max_queued: n(args.usize("max-queued", 64))?,
             seed: args.u64("seed", 42).map_err(Error::Config)?,
             retry: front::retry_overrides(args)?,
+            durability,
+            max_conns: n(args.usize("max-conns", 256))?,
+            conn_timeout_s: args.f64("conn-timeout", 30.0).map_err(Error::Config)?,
         })
     }
 }
@@ -131,7 +154,7 @@ impl Server {
                 .max(1)
         };
         let fair = FairShare::new(Arc::clone(&broker) as Arc<dyn Environment>, slots);
-        let registry = Arc::new(Registry::open(&cfg.state_dir)?);
+        let registry = Arc::new(Registry::open_with(&cfg.state_dir, cfg.durability)?);
         let queue: VecDeque<u64> = registry.queued_ids().into_iter().collect();
         Ok(Arc::new(Server {
             registry,
@@ -208,11 +231,18 @@ impl Server {
     }
 
     /// Validate, admit, journal, enqueue — in that order, so a rejected
-    /// submission allocates no id and leaves no trace.
+    /// submission allocates no id and leaves no trace. A known
+    /// `dedup_key` short-circuits everything (including the saturation
+    /// check — a retried submission's work is already admitted).
     fn submit(&self, req: &Request) -> String {
         let Some(run) = &req.run else {
             return err("submit requires `run` (run|explore|replicate|calibrate|island)");
         };
+        if let Some(k) = &req.dedup_key {
+            if let Some(id) = self.registry.dedup_lookup(&req.tenant, k) {
+                return self.dedup_response(id);
+            }
+        }
         let argv = sanitize_argv(run, &req.options, &req.flags);
         // build the experiment once now purely for validation: a bad
         // method or option gets the CLI front's own error message back
@@ -232,10 +262,22 @@ impl Server {
                 self.cfg.max_queued
             ));
         }
-        let id = match self.registry.submit(&req.tenant, req.weight, run, argv) {
-            Ok(id) => id,
+        let (id, fresh) = match self.registry.submit(
+            &req.tenant,
+            req.weight,
+            run,
+            argv,
+            req.dedup_key.as_deref(),
+        ) {
+            Ok(v) => v,
             Err(e) => return err(&e.to_string()),
         };
+        if !fresh {
+            // a racing retry lost the check-and-insert — same answer as
+            // the fast path above
+            drop(sched);
+            return self.dedup_response(id);
+        }
         sched.queue.push_back(id);
         drop(sched);
         self.cancels
@@ -246,6 +288,21 @@ impl Server {
         ok(vec![
             ("id", Json::Num(id as f64)),
             ("state", Json::Str("queued".into())),
+        ])
+    }
+
+    /// The response a deduplicated submit gets: the original id, its
+    /// *current* state, and an explicit `deduped` marker.
+    fn dedup_response(&self, id: u64) -> String {
+        let state = self
+            .registry
+            .get(id)
+            .map(|r| r.state.as_str())
+            .unwrap_or("queued");
+        ok(vec![
+            ("id", Json::Num(id as f64)),
+            ("state", Json::Str(state.into())),
+            ("deduped", Json::Bool(true)),
         ])
     }
 
@@ -397,6 +454,11 @@ impl Server {
                 } else {
                     ExpState::Degraded
                 };
+                // explore writes its own CSV — push it to stable storage
+                // before the terminal state that advertises it
+                if rec.run == "explore" {
+                    journal::fsync_file(self.registry.csv_path(id));
+                }
                 if let Err(e) = self.write_result_file(&rec, &report) {
                     let _ = self.registry.finish(
                         id,
@@ -443,6 +505,10 @@ impl Server {
             let resume = rec.restored && usable_checkpoint(&rec.run, &jpath);
             argv.push(if resume { "--resume" } else { "--journal" }.into());
             argv.push(jpath);
+            // the per-experiment checkpoint journal inherits the
+            // server's durability policy
+            argv.push("--durability".into());
+            argv.push(self.cfg.durability.to_string());
         }
         let args = Args::parse(argv).map_err(Error::Config)?;
         let exp = front::by_name(&rec.run, &args)?;
@@ -490,7 +556,9 @@ impl Server {
             );
             out.push('\n');
         }
-        std::fs::write(self.registry.result_path(rec.id), out)?;
+        // temp + fsync + rename: a crash mid-write can never leave a
+        // half result file behind a terminal state
+        journal::atomic_write(self.registry.result_path(rec.id), out.as_bytes())?;
         Ok(())
     }
 }
@@ -589,16 +657,26 @@ mod tests {
         assert_eq!(cfg.max_running, 4);
         assert_eq!(cfg.max_queued, 64);
         assert!(cfg.retry.is_none());
+        assert_eq!(cfg.durability, Durability::Always, "serve defaults to fsync");
+        assert_eq!(cfg.max_conns, 256);
+        assert_eq!(cfg.conn_timeout_s, 30.0);
 
         let cfg = ServeConfig::from_args(&parse(
             "serve --addr 127.0.0.1:0 --envs local:2 --max-running 1 \
-             --max-queued 1 --timeout 30",
+             --max-queued 1 --timeout 30 --durability batch:16 \
+             --max-conns 3 --conn-timeout 5",
         ))
         .unwrap();
         assert_eq!(cfg.addr, "127.0.0.1:0");
         assert_eq!(cfg.max_running, 1);
         assert_eq!(cfg.max_queued, 1);
         assert!(cfg.retry.is_some(), "retry flags reach the shared fleet");
+        assert_eq!(cfg.durability, Durability::Batch(16));
+        assert_eq!(cfg.max_conns, 3);
+        assert_eq!(cfg.conn_timeout_s, 5.0);
+
+        let bad = ServeConfig::from_args(&parse("serve --durability sometimes"));
+        assert!(bad.unwrap_err().to_string().contains("--durability"));
     }
 
     #[test]
@@ -633,6 +711,9 @@ mod tests {
             max_queued: 4,
             seed: 1,
             retry: None,
+            durability: Durability::Os,
+            max_conns: 256,
+            conn_timeout_s: 30.0,
         };
         let server = Server::new(cfg).unwrap();
         // no scheduler started: submissions stay queued, nothing executes
@@ -680,6 +761,9 @@ mod tests {
             max_queued: 1,
             seed: 1,
             retry: None,
+            durability: Durability::Os,
+            max_conns: 256,
+            conn_timeout_s: 30.0,
         };
         let server = Server::new(cfg).unwrap();
         let sub = protocol::parse_request(

@@ -27,7 +27,9 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::broker::{journal, policy, Broker, Journal, RetryPolicy, SpeculationConfig};
+use crate::broker::{
+    journal, policy, Broker, Durability, Journal, RetryPolicy, SpeculationConfig,
+};
 use crate::core::Context;
 use crate::dsl::builder::PuzzleBuilder;
 use crate::dsl::hook::{Hook, RowWriter, TableFormat};
@@ -209,6 +211,7 @@ pub struct Experiment {
     env: EnvSpec,
     journal: Option<String>,
     resume: Option<String>,
+    durability: Durability,
     seed: u64,
     quiet: bool,
     progress: Option<ProgressFn>,
@@ -221,6 +224,7 @@ impl Experiment {
             env: EnvSpec::default(),
             journal: None,
             resume: None,
+            durability: Durability::Os,
             seed: 42,
             quiet: false,
             progress: None,
@@ -254,6 +258,14 @@ impl Experiment {
     /// configuration, then appended to).
     pub fn resume(mut self, path: impl Into<String>) -> Self {
         self.resume = Some(path.into());
+        self
+    }
+
+    /// How eagerly checkpoint records reach stable storage (see
+    /// [`Durability`]). Default: [`Durability::Os`] — the historical
+    /// behaviour, flush-to-OS per record.
+    pub fn durability(mut self, d: Durability) -> Self {
+        self.durability = d;
         self
     }
 
@@ -342,8 +354,12 @@ impl Experiment {
             None => None,
         };
         let journal = match (&self.resume, &self.journal) {
-            (Some(path), _) => Some(Arc::new(Journal::append_to(path)?)),
-            (None, Some(path)) => Some(Arc::new(Journal::create(path)?)),
+            (Some(path), _) => {
+                Some(Arc::new(Journal::append_to_with(path, self.durability)?))
+            }
+            (None, Some(path)) => {
+                Some(Arc::new(Journal::create_with(path, self.durability)?))
+            }
             (None, None) => None,
         };
 

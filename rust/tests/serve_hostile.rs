@@ -1,0 +1,377 @@
+//! Hostile-client and protocol-robustness harness for `molers serve`
+//! (§Durable-by-construction tentpole, parts 2–4): drive the real daemon
+//! binary with garbage-spewing, oversized, slow-loris and half-closed
+//! connections while a well-behaved tenant keeps working; shed past
+//! `--max-conns`; prove `dedup_key` idempotency end-to-end (including
+//! across a kill -9 restart); and prove a killed `watch` client resumes
+//! gap-free with `after_seq`.
+
+use std::collections::BTreeSet;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use molers::util::json::{self, Json};
+
+const SIM_TICKS: &str = "40";
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("molers-hostile-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A running daemon; killed on drop so a failing test never leaks it.
+struct Daemon {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Spawn `molers serve` on an ephemeral port and wait until it accepts.
+fn start_server(dir: &Path, extra: &[&str]) -> Daemon {
+    let addr_file = dir.join("addr");
+    let _ = std::fs::remove_file(&addr_file);
+    let child = Command::new(env!("CARGO_BIN_EXE_molers"))
+        .env("MOLERS_ARTIFACTS", "/nonexistent-artifacts")
+        .env("MOLERS_SIM_TICKS", SIM_TICKS)
+        .args(["serve", "--addr", "127.0.0.1:0", "--state-dir"])
+        .arg(dir)
+        .args(extra)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn molers serve");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let addr = loop {
+        if let Ok(text) = std::fs::read_to_string(&addr_file) {
+            let addr = text.trim().to_string();
+            if !addr.is_empty() && TcpStream::connect(&addr).is_ok() {
+                break addr;
+            }
+        }
+        assert!(Instant::now() < deadline, "daemon never came up");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    Daemon { child, addr }
+}
+
+/// One request line → one response line, parsed.
+fn request(addr: &str, line: &str) -> Json {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    writeln!(stream, "{line}").unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    json::parse(resp.trim_end()).unwrap_or_else(|e| panic!("bad response `{resp}`: {e}"))
+}
+
+fn ping_ok(addr: &str) {
+    let resp = request(addr, "{\"cmd\":\"ping\"}");
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+}
+
+fn state_of(status: &Json) -> String {
+    status
+        .get("state")
+        .and_then(Json::as_str)
+        .unwrap_or("?")
+        .to_string()
+}
+
+fn is_terminal(state: &str) -> bool {
+    matches!(state, "done" | "degraded" | "failed" | "cancelled")
+}
+
+fn wait_terminal(addr: &str, id: u64, timeout: Duration) -> Json {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let s = request(addr, &format!("{{\"cmd\":\"status\",\"id\":{id}}}"));
+        if is_terminal(&state_of(&s)) {
+            return s;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "experiment {id} never finished: {s}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn hostile_connections_never_stop_a_well_behaved_tenant() {
+    let dir = tmp_dir("hostile");
+    let daemon = start_server(&dir, &["--envs", "local:2", "--conn-timeout", "1"]);
+    let addr = &daemon.addr;
+
+    // a slow loris: half a request line, then silence — parked in the
+    // background while the real work below proceeds
+    let mut loris = TcpStream::connect(addr).unwrap();
+    loris.write_all(b"{\"cmd\":\"pi").unwrap();
+    loris.flush().unwrap();
+
+    // a half-closed connection: never sends a byte
+    let half = TcpStream::connect(addr).unwrap();
+    half.shutdown(Shutdown::Write).unwrap();
+
+    // binary garbage gets an error line AND the connection stays usable
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"\xfe\xff\x00 binary \xff\n").unwrap();
+        s.flush().unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(
+            line.contains("\"ok\":false") && line.contains("UTF-8"),
+            "garbage line answered: {line}"
+        );
+        // same connection, now well-behaved: still served
+        writeln!(s, "{{\"cmd\":\"ping\"}}").unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true"), "{line}");
+    }
+
+    // malformed JSON gets the parse error, not a dropped thread
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "{{this is not json").unwrap();
+        let mut r = BufReader::new(s);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":false"), "{line}");
+    }
+
+    // a newline-less flood is cut off at the line cap with an error
+    // (exactly cap + 1 bytes, so the whole flood is consumed and the
+    // error line comes back before the server closes)
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&vec![b'a'; 64 * 1024 + 1]).unwrap();
+        s.flush().unwrap();
+        let mut r = BufReader::new(s);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(
+            line.contains("request line exceeds"),
+            "flood answered: {line}"
+        );
+    }
+
+    // meanwhile the well-behaved tenant's submission runs to completion
+    let resp = request(
+        addr,
+        "{\"cmd\":\"submit\",\"run\":\"explore\",\"tenant\":\"good\",\
+         \"options\":{\"n\":\"8\",\"chunk\":\"4\"}}",
+    );
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+    let id = resp.get("id").and_then(Json::as_f64).unwrap() as u64;
+    let done = wait_terminal(addr, id, Duration::from_secs(120));
+    assert_eq!(state_of(&done), "done", "{done}");
+
+    // the loris has been timed out by now (read timeout 1 s): EOF or a
+    // reset, never a hung daemon thread
+    loris.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut sink = Vec::new();
+    let _ = loris.read_to_end(&mut sink);
+
+    // the half-closed connection was unwound the same way
+    drop(half);
+    ping_ok(addr);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn connections_past_the_cap_are_shed_with_server_busy() {
+    let dir = tmp_dir("shed");
+    let daemon = start_server(
+        &dir,
+        &["--envs", "local:1", "--max-conns", "1", "--conn-timeout", "30"],
+    );
+    let addr = &daemon.addr;
+
+    // occupy the single slot with an idle (but accepted) connection
+    let hog = TcpStream::connect(addr).unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+
+    // the next connection is shed with one error line, not queued
+    let over = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(over);
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("server busy"), "shed response: {line}");
+
+    // releasing the slot restores service
+    drop(hog);
+    std::thread::sleep(Duration::from_millis(300));
+    ping_ok(addr);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn dedup_key_is_idempotent_end_to_end_and_across_restart() {
+    let dir = tmp_dir("dedup");
+    let submit_line = "{\"cmd\":\"submit\",\"run\":\"explore\",\"tenant\":\"alice\",\
+         \"options\":{\"n\":\"8\",\"chunk\":\"4\"},\"dedup_key\":\"job-1\"}";
+    let first;
+    {
+        let daemon = start_server(&dir, &["--envs", "local:2"]);
+        let addr = &daemon.addr;
+        let resp = request(addr, submit_line);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        first = resp.get("id").and_then(Json::as_f64).unwrap() as u64;
+        assert_eq!(resp.get("deduped"), None, "fresh submit is not a dup");
+
+        // the client's response "was lost": the retry returns the same id
+        let retry = request(addr, submit_line);
+        assert_eq!(
+            retry.get("id").and_then(Json::as_f64).unwrap() as u64,
+            first
+        );
+        assert_eq!(retry.get("deduped"), Some(&Json::Bool(true)), "{retry}");
+
+        // a different tenant's identical key is a different namespace
+        let other = request(
+            addr,
+            "{\"cmd\":\"submit\",\"run\":\"explore\",\"tenant\":\"bob\",\
+             \"options\":{\"n\":\"8\",\"chunk\":\"4\"},\"dedup_key\":\"job-1\"}",
+        );
+        assert_ne!(
+            other.get("id").and_then(Json::as_f64).unwrap() as u64,
+            first
+        );
+
+        let done = wait_terminal(addr, first, Duration::from_secs(120));
+        assert_eq!(state_of(&done), "done", "{done}");
+        // daemon killed here (Drop = kill -9)
+    }
+
+    // the key was journaled with the submission: a restarted daemon
+    // still answers the retry with the original id — and never re-runs
+    // the finished experiment
+    let daemon = start_server(&dir, &["--envs", "local:2"]);
+    let addr = &daemon.addr;
+    let retry = request(addr, submit_line);
+    assert_eq!(
+        retry.get("id").and_then(Json::as_f64).unwrap() as u64,
+        first,
+        "{retry}"
+    );
+    assert_eq!(retry.get("deduped"), Some(&Json::Bool(true)), "{retry}");
+    assert_eq!(
+        retry.get("state"),
+        Some(&Json::Str("done".into())),
+        "the dedup response carries the original's current state: {retry}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Read `{"event":...}` lines off a watch stream, recording seqs, until
+/// `limit` events have been seen, a terminal state arrives, or the
+/// stream ends. Returns whether a terminal state was seen.
+fn drain_watch(
+    reader: &mut BufReader<TcpStream>,
+    seqs: &mut BTreeSet<u64>,
+    limit: usize,
+) -> bool {
+    let mut seen = 0usize;
+    let mut line = String::new();
+    while seen < limit {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return false,
+            Ok(_) => {}
+        }
+        let ev = json::parse(line.trim_end())
+            .unwrap_or_else(|e| panic!("bad watch line `{line}`: {e}"));
+        assert_ne!(
+            ev.get("ok"),
+            Some(&Json::Bool(false)),
+            "watch rejected: {ev}"
+        );
+        let seq = ev.get("seq").and_then(Json::as_f64).expect("seq on every event") as u64;
+        seqs.insert(seq);
+        seen += 1;
+        if ev.get("event").and_then(Json::as_str) == Some("state")
+            && is_terminal(&state_of(&ev))
+        {
+            return true;
+        }
+    }
+    false
+}
+
+#[test]
+fn a_killed_watch_client_resumes_gap_free_with_after_seq() {
+    let dir = tmp_dir("watchgap");
+    let daemon = start_server(&dir, &["--envs", "local:2"]);
+    let addr = &daemon.addr;
+
+    let resp = request(
+        addr,
+        "{\"cmd\":\"submit\",\"run\":\"explore\",\"tenant\":\"w\",\
+         \"options\":{\"n\":\"240\",\"chunk\":\"2\",\"sampling\":\"sobol\"}}",
+    );
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+    let id = resp.get("id").and_then(Json::as_f64).unwrap() as u64;
+
+    // first watcher: read a handful of events, then die mid-stream
+    // (dropping the socket is what kill -9 on the client looks like)
+    let mut seqs = BTreeSet::new();
+    let terminal_early = {
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "{{\"cmd\":\"watch\",\"id\":{id}}}").unwrap();
+        s.flush().unwrap();
+        let mut r = BufReader::new(s);
+        drain_watch(&mut r, &mut seqs, 5)
+    };
+    assert!(!seqs.is_empty(), "first watch saw events");
+
+    // reconnect with after_seq = last seen: the server replays the
+    // missed tail, then streams live until terminal
+    if !terminal_early {
+        let after = *seqs.iter().max().unwrap();
+        let deadline = Instant::now() + Duration::from_secs(120);
+        let mut done = false;
+        while !done {
+            assert!(Instant::now() < deadline, "watch never reached terminal");
+            let mut s = TcpStream::connect(addr).unwrap();
+            let resume_from = *seqs.iter().max().unwrap();
+            writeln!(
+                s,
+                "{{\"cmd\":\"watch\",\"id\":{id},\"after_seq\":{resume_from}}}"
+            )
+            .unwrap();
+            s.flush().unwrap();
+            let mut r = BufReader::new(s);
+            done = drain_watch(&mut r, &mut seqs, usize::MAX);
+        }
+        assert!(
+            *seqs.iter().max().unwrap() > after,
+            "the reconnected stream advanced past the drop point"
+        );
+    }
+
+    // gap-free: the union of both connections' seqs is contiguous —
+    // nothing between the first event seen and the terminal state was
+    // skipped by the drop/reconnect
+    let (lo, hi) = (*seqs.iter().min().unwrap(), *seqs.iter().max().unwrap());
+    assert_eq!(
+        hi - lo + 1,
+        seqs.len() as u64,
+        "seq union has holes: {seqs:?}"
+    );
+    let done = wait_terminal(addr, id, Duration::from_secs(60));
+    assert_eq!(state_of(&done), "done", "{done}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,276 @@
+//! Power-loss harness for the serve layer (§Durable-by-construction
+//! tentpole, part 4): the server's meta-journal (`server.jsonl`) and a
+//! per-experiment checkpoint journal (`exp-N.jsonl`) are cut at **every
+//! byte offset** — optionally with garbage welded onto the tail, exactly
+//! what a power cut mid-`write(2)` leaves behind — and the recovery path
+//! is driven over each wreck.
+//!
+//! The contract under test:
+//!
+//! * `Registry::open` never errors on a torn journal: it recovers every
+//!   record whose line made it to disk in full (= every record the
+//!   daemon *acknowledged* under `--durability always`), including
+//!   terminal states and dedup keys, and keeps allocating ids past the
+//!   recovered maximum.
+//! * An explore whose checkpoint journal was cut at any byte resumes to
+//!   a result file **byte-identical** to the uninterrupted reference run
+//!   (extending `chaos_recovery.rs` from record-boundary cuts to
+//!   arbitrary byte cuts, through the same `--resume` front the serve
+//!   scheduler uses after a restart).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use molers::cli::{front, Args};
+use molers::serve::{ExpState, Registry};
+use molers::util::json::{self, Json};
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("molers-srv-recov-{}-{name}", std::process::id()))
+}
+
+/// In debug builds stride the byte offsets so `cargo test` stays quick;
+/// release CI walks every single byte.
+fn stride() -> usize {
+    if cfg!(debug_assertions) {
+        13
+    } else {
+        1
+    }
+}
+
+/// Every cut offset: strided interior points plus both endpoints.
+fn cuts(len: usize) -> Vec<usize> {
+    let mut cs: Vec<usize> = (0..=len).step_by(stride()).collect();
+    if cs.last() != Some(&len) {
+        cs.push(len);
+    }
+    cs
+}
+
+/// Fold a (possibly torn) meta-journal the way `Registry` replay does:
+/// lossy decode, every complete line applies, a final line that fails to
+/// parse is the torn tail and is dropped. Returns `(id -> state,
+/// (tenant, dedup_key) -> id)`.
+#[allow(clippy::type_complexity)]
+fn fold_expected(
+    bytes: &[u8],
+) -> (BTreeMap<u64, String>, BTreeMap<(String, String), u64>) {
+    let text = String::from_utf8_lossy(bytes);
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    let mut states: BTreeMap<u64, String> = BTreeMap::new();
+    let mut dedup: BTreeMap<(String, String), u64> = BTreeMap::new();
+    for (i, line) in lines.iter().enumerate() {
+        let Ok(rec) = json::parse(line) else {
+            assert_eq!(
+                i + 1,
+                lines.len(),
+                "a cut can only tear the final journal line"
+            );
+            break;
+        };
+        let id = rec.get("id").and_then(Json::as_f64).unwrap() as u64;
+        match rec.get("kind").and_then(Json::as_str) {
+            Some("exp") => {
+                states.insert(id, "queued".to_string());
+                if let Some(k) = rec.get("dedup_key").and_then(Json::as_str) {
+                    let tenant = rec
+                        .get("tenant")
+                        .and_then(Json::as_str)
+                        .unwrap()
+                        .to_string();
+                    dedup.insert((tenant, k.to_string()), id);
+                }
+            }
+            Some("exp_state") => {
+                let s = rec.get("state").and_then(Json::as_str).unwrap();
+                states.insert(id, s.to_string());
+            }
+            _ => panic!("unexpected record kind in {line}"),
+        }
+    }
+    (states, dedup)
+}
+
+/// Tails a power cut can weld onto the last sector: nothing, a torn
+/// half-record, NUL padding, and raw non-UTF-8 garbage.
+const TAILS: &[&[u8]] = &[
+    b"",
+    b"{\"kind\":\"exp\",\"id\":9,\"tena",
+    b"\x00\x00\x00\x00\x00\x00",
+    b"\xff\xfe\x00\xffgarbage\xff",
+];
+
+#[test]
+fn meta_journal_recovers_at_every_byte_cut_with_any_tail() {
+    // reference daemon life: three submissions (two with dedup keys),
+    // two of them reaching terminal states — all under the server's
+    // default fsync-per-record durability
+    let ref_dir = tmp("meta-ref");
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    {
+        let reg = Registry::open(&ref_dir).unwrap();
+        let (a, fresh) = reg
+            .submit(
+                "alice",
+                2,
+                "explore",
+                vec!["explore".into(), "--n".into(), "9".into()],
+                Some("k-alpha"),
+            )
+            .unwrap();
+        assert!(fresh);
+        let (b, _) = reg
+            .submit("bob", 1, "calibrate", vec!["calibrate".into()], None)
+            .unwrap();
+        let (c, _) = reg
+            .submit("carol", 1, "run", vec!["run".into()], Some("k-carol"))
+            .unwrap();
+        assert_eq!((a, b, c), (1, 2, 3));
+        reg.set_running(a);
+        reg.set_running(b);
+        reg.finish(a, ExpState::Done, None, Some(Json::Num(9.0))).unwrap();
+        reg.finish(b, ExpState::Failed, Some("boom".into()), None).unwrap();
+    }
+    let bytes = std::fs::read(ref_dir.join("server.jsonl")).unwrap();
+    assert_eq!(
+        String::from_utf8_lossy(&bytes).lines().count(),
+        5,
+        "3 exp + 2 exp_state records"
+    );
+
+    let scratch = tmp("meta-cut");
+    for cut in cuts(bytes.len()) {
+        for tail in TAILS {
+            let mut wreck = bytes[..cut].to_vec();
+            wreck.extend_from_slice(tail);
+            let (states, dedup) = fold_expected(&wreck);
+
+            let _ = std::fs::remove_dir_all(&scratch);
+            std::fs::create_dir_all(&scratch).unwrap();
+            std::fs::write(scratch.join("server.jsonl"), &wreck).unwrap();
+
+            // recovery must never error, whatever the wreck looks like
+            let reg = Registry::open(&scratch)
+                .unwrap_or_else(|e| panic!("cut {cut} tail {tail:?}: open failed: {e}"));
+            let got: BTreeMap<u64, String> = reg
+                .list()
+                .iter()
+                .map(|r| (r.id, r.state.as_str().to_string()))
+                .collect();
+            assert_eq!(
+                got, states,
+                "cut {cut} tail {tail:?}: recovered table != complete-line fold"
+            );
+            for ((tenant, key), id) in &dedup {
+                assert_eq!(
+                    reg.dedup_lookup(tenant, key),
+                    Some(*id),
+                    "cut {cut}: journaled dedup key survives the crash"
+                );
+            }
+            assert_eq!(reg.dedup_lookup("alice", "never-submitted"), None);
+
+            // ids keep climbing past everything recovered — and the
+            // repaired journal accepts new durable appends
+            let expect_next = states.keys().max().copied().unwrap_or(0) + 1;
+            let (next, fresh) = reg
+                .submit("probe", 1, "run", vec!["run".into()], None)
+                .unwrap();
+            assert!(fresh);
+            assert_eq!(next, expect_next, "cut {cut} tail {tail:?}");
+        }
+    }
+
+    // the untouched full journal recovers error + summary verbatim
+    let reg = Registry::open(&ref_dir).unwrap();
+    assert_eq!(reg.get(1).unwrap().state, ExpState::Done);
+    assert_eq!(reg.get(1).unwrap().summary, Some(Json::Num(9.0)));
+    assert_eq!(reg.get(2).unwrap().state, ExpState::Failed);
+    assert_eq!(reg.get(2).unwrap().error.as_deref(), Some("boom"));
+    assert_eq!(reg.get(3).unwrap().state, ExpState::Queued);
+
+    for d in [&ref_dir, &scratch] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+fn explore_args(out: &Path, journal_flag: &str, jpath: &Path) -> Args {
+    let argv = [
+        "explore",
+        "--n",
+        "6",
+        "--chunk",
+        "2",
+        "--sampling",
+        "sobol",
+        "--seed",
+        "11",
+        journal_flag,
+        &jpath.to_string_lossy(),
+        "--out",
+        &out.to_string_lossy(),
+        "--durability",
+        "always",
+    ];
+    Args::parse(argv.iter().map(|s| s.to_string())).unwrap()
+}
+
+#[test]
+fn explore_journal_resumes_byte_identically_from_every_byte_cut() {
+    // keep the per-row model tiny: this test's cost is cuts × resumes
+    std::env::set_var("MOLERS_SIM_TICKS", "10");
+    std::env::set_var("MOLERS_ARTIFACTS", "/nonexistent-artifacts");
+
+    let ref_csv = tmp("exp-ref.csv");
+    let ref_j = tmp("exp-ref.jsonl");
+    for p in [&ref_csv, &ref_j] {
+        let _ = std::fs::remove_file(p);
+    }
+    // uninterrupted reference under fsync-per-record durability — the
+    // same `--journal`/`--durability` argv the serve scheduler builds
+    let report = front::explore(&explore_args(&ref_csv, "--journal", &ref_j))
+        .unwrap()
+        .quiet()
+        .run()
+        .unwrap();
+    assert_eq!(report.outcome.rows, 6);
+    let want = std::fs::read(&ref_csv).unwrap();
+    let bytes = std::fs::read(&ref_j).unwrap();
+    assert!(
+        String::from_utf8_lossy(&bytes).lines().count() >= 5,
+        "run_start + 3 sample blocks + trailer records"
+    );
+
+    let cut_csv = tmp("exp-cut.csv");
+    let cut_j = tmp("exp-cut.jsonl");
+    for cut in cuts(bytes.len()) {
+        // alternate the welded tail so both pure truncation and a
+        // garbage sector are exercised at interleaved offsets
+        let tail: &[u8] = if cut % 2 == 0 { b"" } else { b"{\"kind\":\"sa\x00\xff" };
+        let mut wreck = bytes[..cut].to_vec();
+        wreck.extend_from_slice(tail);
+        std::fs::write(&cut_j, &wreck).unwrap();
+        let _ = std::fs::remove_file(&cut_csv);
+
+        let resumed = front::explore(&explore_args(&cut_csv, "--resume", &cut_j))
+            .unwrap()
+            .quiet()
+            .run()
+            .unwrap_or_else(|e| panic!("cut {cut}: resume failed: {e}"));
+        assert_eq!(
+            resumed.outcome.resumed + resumed.outcome.evaluated,
+            6,
+            "cut {cut}: restored + fresh rows cover the design"
+        );
+        assert_eq!(
+            std::fs::read(&cut_csv).unwrap(),
+            want,
+            "cut {cut}: resumed CSV must be byte-identical to the reference"
+        );
+    }
+
+    for p in [&ref_csv, &ref_j, &cut_csv, &cut_j] {
+        let _ = std::fs::remove_file(p);
+    }
+}
