@@ -1,0 +1,173 @@
+//! P7 (§Out-of-core tentpole): the streaming explore wave against a
+//! memory-budgeted [`RowStore`]. The same block loop the streaming sweep
+//! runs — regenerate a sobol window with `sample_into_block`, evaluate
+//! it, `write_rows` the objectives into the store, then fold every block
+//! back out in strict row order with `copy_rows` — is timed twice: once
+//! over the contiguous in-RAM backing, once over the chunk-paged spill
+//! backing under a budget far below the result-set size. Gated in CI:
+//! `spill_overhead` (spilled / in-RAM wall time, acceptance ≤ 1.5×) and
+//! `spill_wave_allocations` (heap allocations across steady-state spilled
+//! waves, acceptance 0 — the slot arena is recycled, page-outs serialise
+//! through one retained byte buffer).
+//!
+//! Knobs: `P7_N` (design rows, default 200000; CI smoke uses a small
+//! value), `P7_CHUNK` (rows per block, default 4096), `P7_BUDGET`
+//! (resident bytes for the spilled store, default 4 MiB),
+//! `BENCH_OUT_DIR`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use molers::bench::Bench;
+use molers::core::val_f64;
+use molers::evolution::{Evaluator, RowsView, Zdt1Evaluator};
+use molers::exploration::{row_seed, RowStore, SampleMatrix, Sampling, SobolSampling};
+use molers::util::Rng;
+
+/// Counting global allocator (see `p2_scale`): the zero-allocation claim
+/// is measured, not asserted.
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let n = env_usize("P7_N", 200_000);
+    let chunk = env_usize("P7_CHUNK", 4096).max(1);
+    let budget = env_usize("P7_BUDGET", 4 << 20) as u64;
+    let dim = 4;
+    let n_obj = 2;
+    println!(
+        "design: {n} rows x {dim} dims, block {chunk}, budget {budget} B \
+         (result set {} B)",
+        n * n_obj * 8
+    );
+
+    let mut b = Bench::new("p7_outofcore").warmup(1).samples(3);
+
+    let vals: Vec<_> = (0..dim).map(|d| val_f64(&format!("x{d}"))).collect();
+    let spec: Vec<_> = vals.iter().map(|v| (v, 0.0, 1.0)).collect();
+    let sobol = SobolSampling::new(&spec, n);
+    let eval = Zdt1Evaluator { dim };
+    let seeds: Vec<u32> = (0..n).map(|r| row_seed(42, r)).collect();
+
+    let spill_dir = std::env::temp_dir().join(format!("molers-bench-p7-{}", std::process::id()));
+
+    // the streaming wave: window-sampled design, block evaluation,
+    // write_rows into the store, then an ordered copy_rows fold-back —
+    // every buffer recycled across waves
+    let wave = |store: &mut RowStore,
+                window: &mut SampleMatrix,
+                obj: &mut Vec<f64>,
+                read: &mut Vec<f64>,
+                rng: &mut Rng|
+     -> f64 {
+        store.clear();
+        store.grow_rows(n);
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + chunk).min(n);
+            window.clear();
+            sobol.sample_into_block(window, lo..hi, rng).unwrap();
+            obj.clear();
+            obj.resize((hi - lo) * n_obj, 0.0);
+            eval.evaluate_rows(
+                RowsView::new(window.rows_slice(0, hi - lo), dim),
+                &seeds[lo..hi],
+                &mut obj[..],
+            )
+            .unwrap();
+            store.write_rows(lo, obj);
+            lo = hi;
+        }
+        let mut acc = 0.0;
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + chunk).min(n);
+            store.copy_rows(lo, hi, read);
+            acc += read.iter().sum::<f64>();
+            lo = hi;
+        }
+        acc
+    };
+
+    let mut window = SampleMatrix::new(sobol.columns());
+    let mut obj = vec![0.0f64; chunk * n_obj];
+    let mut read = vec![0.0f64; chunk * n_obj];
+    let mut rng = Rng::new(150_604_182);
+
+    let mut ram = RowStore::ram_with_capacity(n_obj, n);
+    let ram_s = {
+        let m = b.case("wave_ram", || {
+            std::hint::black_box(wave(&mut ram, &mut window, &mut obj, &mut read, &mut rng));
+        });
+        m.median_s()
+    };
+
+    let mut spill = RowStore::spilled(n_obj, &spill_dir, budget, chunk).unwrap();
+    let spill_s = {
+        let m = b.case("wave_spill", || {
+            std::hint::black_box(wave(&mut spill, &mut window, &mut obj, &mut read, &mut rng));
+        });
+        m.median_s()
+    };
+
+    // steady-state allocation count (outside b.case, whose bookkeeping
+    // allocates): the spill arena is warm, so waves must be alloc-free
+    let before = ALLOCATIONS.load(Ordering::Relaxed);
+    for _ in 0..3 {
+        std::hint::black_box(wave(&mut spill, &mut window, &mut obj, &mut read, &mut rng));
+    }
+    let wave_allocs = ALLOCATIONS.load(Ordering::Relaxed) - before;
+
+    b.metric("spill_overhead", spill_s / ram_s, "x (spilled / in-RAM wave)");
+    b.metric(
+        "spill_wave_allocations",
+        wave_allocs as f64,
+        "allocs in 3 steady-state spilled waves (acceptance: 0)",
+    );
+    b.metric(
+        "peak_resident_bytes",
+        spill.peak_resident_bytes() as f64,
+        "bytes resident under the budget",
+    );
+    b.metric("outofcore_rows_per_s", n as f64 / spill_s, "rows/s");
+    b.metric("outofcore_rows", n as f64, "rows");
+
+    drop(spill);
+    let _ = std::fs::remove_dir_all(&spill_dir);
+
+    if let Err(e) = b.write_json() {
+        eprintln!("could not write bench json: {e}");
+    }
+}

@@ -100,6 +100,25 @@ const CHECKS: &[Check] = &[
         higher_is_better: false,
         tolerance: 2.5,
     },
+    // scale-independent ratio (spilled/in-RAM wall time of the same
+    // streaming wave, measured back-to-back in one process): chunk-paged
+    // spilling must stay within 1.5× of contiguous RAM — the §Out-of-core
+    // acceptance (baseline 1.0 × tolerance 1.5)
+    Check {
+        suite: "p7_outofcore",
+        metric: "p7_outofcore/spill_overhead",
+        higher_is_better: false,
+        tolerance: 1.5,
+    },
+    // baseline 0, so the bound is exactly zero steady-state allocations
+    // at any design size or budget: the arena-recycled spill path never
+    // allocates per wave — load-bearing even in CI's reduced mode
+    Check {
+        suite: "p7_outofcore",
+        metric: "p7_outofcore/spill_wave_allocations",
+        higher_is_better: false,
+        tolerance: 2.0,
+    },
 ];
 
 fn load_suite(dir: &Path, suite: &str) -> Option<Json> {

@@ -31,6 +31,21 @@
 //! NaN/null). On `--resume` the two record kinds replay in write order
 //! (see [`sweep_events`]): a later `sample_block` covering a previously
 //! degraded row supersedes it.
+//!
+//! # Segments and compaction
+//!
+//! A per-run journal can roll: `exp.jsonl` (segment 0) is continued by
+//! `exp.1.jsonl`, `exp.2.jsonl`, ... once a segment passes `roll_every`
+//! appends ([`Journal::create_rolling`] / [`Journal::append_to_rolling`]),
+//! so one file never grows without bound under a long campaign.
+//! [`Journal::load_segmented`] folds every segment in ascending order —
+//! and reads a legacy single-file journal unchanged, since that is just
+//! segment 0. On resume, [`Journal::compact_segments`] rewrites a
+//! multi-segment history as one snapshot segment (see
+//! [`compact_records`]): superseded `generation`/`archive` checkpoints
+//! drop, sweep events fold last-wins into their final per-row state. The
+//! same snapshot-then-delete step `molers serve` applies to its
+//! meta-journal (`serve::registry`).
 
 use std::collections::BTreeMap;
 use std::io::{BufWriter, Write};
@@ -49,6 +64,10 @@ use crate::util::Rng;
 /// syscall per `write_fmt` fragment (a number, a comma...), small enough
 /// to be irrelevant beside the checkpoint data itself.
 const WRITE_BUFFER_BYTES: usize = 1 << 20;
+
+/// Default appends per journal segment before a roll (the same threshold
+/// the serve meta-journal uses).
+pub const DEFAULT_ROLL_EVERY: usize = 4096;
 
 /// When an appended record becomes *durable* — the power-loss contract
 /// of a [`Journal`], orthogonal to the flush-per-record process-crash
@@ -131,6 +150,66 @@ pub fn atomic_write(path: impl AsRef<Path>, contents: &[u8]) -> Result<()> {
     Ok(())
 }
 
+/// Path of journal segment `n` for base path `base`: segment 0 IS the
+/// base (`exp.jsonl`), segment N ≥ 1 is a numbered sibling
+/// (`exp.N.jsonl` — the number sits before the extension so shell globs
+/// like `exp*.jsonl` still match).
+pub fn seg_path(base: &Path, n: u64) -> PathBuf {
+    if n == 0 {
+        return base.to_path_buf();
+    }
+    let name = match (
+        base.file_stem().and_then(|s| s.to_str()),
+        base.extension().and_then(|s| s.to_str()),
+    ) {
+        (Some(stem), Some(ext)) => format!("{stem}.{n}.{ext}"),
+        _ => format!(
+            "{}.{n}",
+            base.file_name().and_then(|s| s.to_str()).unwrap_or("journal")
+        ),
+    };
+    base.with_file_name(name)
+}
+
+/// Every on-disk segment of the journal at `base`, ascending by segment
+/// number. A plain single-file journal is one segment (number 0); a
+/// missing journal is the empty list.
+pub fn journal_segments(base: &Path) -> Vec<(u64, PathBuf)> {
+    let mut segs = Vec::new();
+    if base.is_file() {
+        segs.push((0u64, base.to_path_buf()));
+    }
+    if let (Some(stem), Some(ext)) = (
+        base.file_stem().and_then(|s| s.to_str()),
+        base.extension().and_then(|s| s.to_str()),
+    ) {
+        let dir = match base.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+            _ => PathBuf::from("."),
+        };
+        let prefix = format!("{stem}.");
+        let suffix = format!(".{ext}");
+        if let Ok(entries) = std::fs::read_dir(&dir) {
+            for entry in entries.flatten() {
+                let name = entry.file_name();
+                let Some(name) = name.to_str() else { continue };
+                if let Some(mid) = name
+                    .strip_prefix(&prefix)
+                    .and_then(|s| s.strip_suffix(&suffix))
+                {
+                    if let Ok(n) = mid.parse::<u64>() {
+                        if n > 0 {
+                            segs.push((n, entry.path()));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    segs.sort_by_key(|(n, _)| *n);
+    segs
+}
+
 /// Best-effort directory fsync — makes a just-completed rename/create/
 /// unlink in `dir` durable. Failure is swallowed: some filesystems
 /// refuse to open directories, and the data-loss window it leaves is the
@@ -158,17 +237,26 @@ pub fn fsync_file(path: impl AsRef<Path>) {
 /// loader tolerates a torn final line, and [`Journal::append_to`]
 /// repairs it before continuing).
 pub struct Journal {
+    /// Segment-0 (base) path — the journal's identity even when appends
+    /// currently land in a higher-numbered segment.
     path: PathBuf,
     durability: Durability,
+    /// Appends per segment before a roll; 0 = never roll (the plain
+    /// single-file constructors).
+    roll_every: usize,
     file: Mutex<Writer>,
 }
 
 /// The locked writer state: the assembly buffer plus the count of
 /// records flushed to the OS but not yet fsync'd (for
-/// [`Durability::Batch`]).
+/// [`Durability::Batch`]) and the roll bookkeeping.
 struct Writer {
     buf: BufWriter<std::fs::File>,
     unsynced: usize,
+    /// Records appended into the current segment.
+    appended: usize,
+    /// Segment number the appends currently land in.
+    seg_no: u64,
 }
 
 impl Journal {
@@ -180,14 +268,42 @@ impl Journal {
 
     /// Start a fresh journal with an explicit [`Durability`] policy.
     pub fn create_with(path: impl AsRef<Path>, durability: Durability) -> Result<Self> {
+        Self::create_tuned(path, durability, 0)
+    }
+
+    /// Start a fresh *rolling* journal: the file rolls to numbered
+    /// segments (see [`seg_path`]) every `roll_every` appends. Stale
+    /// segments of a previous journal with the same base name are
+    /// deleted first — they would otherwise replay into this run.
+    pub fn create_rolling(
+        path: impl AsRef<Path>,
+        durability: Durability,
+        roll_every: usize,
+    ) -> Result<Self> {
+        for (n, seg) in journal_segments(path.as_ref()) {
+            if n > 0 {
+                let _ = std::fs::remove_file(seg);
+            }
+        }
+        Self::create_tuned(path, durability, roll_every)
+    }
+
+    fn create_tuned(
+        path: impl AsRef<Path>,
+        durability: Durability,
+        roll_every: usize,
+    ) -> Result<Self> {
         let path = path.as_ref().to_path_buf();
         let file = std::fs::File::create(&path)?;
         Ok(Journal {
             path,
             durability,
+            roll_every,
             file: Mutex::new(Writer {
                 buf: BufWriter::with_capacity(WRITE_BUFFER_BYTES, file),
                 unsynced: 0,
+                appended: 0,
+                seg_no: 0,
             }),
         })
     }
@@ -208,36 +324,44 @@ impl Journal {
     /// policy (torn-tail repair as in [`Journal::append_to`]).
     pub fn append_to_with(path: impl AsRef<Path>, durability: Durability) -> Result<Self> {
         let path = path.as_ref().to_path_buf();
-        // bytes, not read_to_string: a power cut can leave a non-UTF-8
-        // tail, which must not silently skip the repair
-        if let Ok(bytes) = std::fs::read(&path) {
-            if !bytes.is_empty() && bytes.last() != Some(&b'\n') {
-                let keep = bytes
-                    .iter()
-                    .rposition(|&b| b == b'\n')
-                    .map(|i| i + 1)
-                    .unwrap_or(0);
-                eprintln!(
-                    "journal: repaired torn tail of `{}`: dropped 1 partial \
-                     record ({} bytes from byte offset {keep})",
-                    path.display(),
-                    bytes.len() - keep,
-                );
-                let f = std::fs::OpenOptions::new().write(true).open(&path)?;
-                f.set_len(keep as u64)?;
-                f.sync_data()?;
-            }
-        }
-        let file = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(&path)?;
+        let file = open_append_repaired(&path)?;
         Ok(Journal {
             path,
             durability,
+            roll_every: 0,
             file: Mutex::new(Writer {
                 buf: BufWriter::with_capacity(WRITE_BUFFER_BYTES, file),
                 unsynced: 0,
+                appended: 0,
+                seg_no: 0,
+            }),
+        })
+    }
+
+    /// Continue a possibly-segmented journal: appends land in the
+    /// highest existing segment (torn-tail repaired) and roll onward
+    /// from there every `roll_every` records. A legacy single-file
+    /// journal is just segment 0, so it is continued — and starts
+    /// rolling — transparently.
+    pub fn append_to_rolling(
+        path: impl AsRef<Path>,
+        durability: Durability,
+        roll_every: usize,
+    ) -> Result<Self> {
+        let base = path.as_ref().to_path_buf();
+        let (seg_no, seg) = journal_segments(&base)
+            .pop()
+            .unwrap_or((0, base.clone()));
+        let file = open_append_repaired(&seg)?;
+        Ok(Journal {
+            path: base,
+            durability,
+            roll_every,
+            file: Mutex::new(Writer {
+                buf: BufWriter::with_capacity(WRITE_BUFFER_BYTES, file),
+                unsynced: 0,
+                appended: 0,
+                seg_no,
             }),
         })
     }
@@ -271,6 +395,22 @@ impl Journal {
                 }
             }
             Durability::Os => {}
+        }
+        w.appended += 1;
+        if self.roll_every > 0 && w.appended >= self.roll_every {
+            // seal this segment (its records must be durable before the
+            // next segment claims the tail of the stream) and roll
+            w.buf.get_ref().sync_data()?;
+            let next = w.seg_no + 1;
+            let file = std::fs::File::create(seg_path(&self.path, next))?;
+            match self.path.parent() {
+                Some(p) if !p.as_os_str().is_empty() => fsync_dir(p),
+                _ => fsync_dir("."),
+            }
+            w.buf = BufWriter::with_capacity(WRITE_BUFFER_BYTES, file);
+            w.seg_no = next;
+            w.appended = 0;
+            w.unsynced = 0;
         }
         Ok(())
     }
@@ -312,6 +452,194 @@ impl Journal {
         }
         Ok(records)
     }
+
+    /// Load a possibly-segmented journal: every segment's records folded
+    /// in ascending segment order. A legacy single-file journal loads
+    /// identically to [`Journal::load`]; a missing one errors the same
+    /// way.
+    pub fn load_segmented(base: impl AsRef<Path>) -> Result<Vec<Json>> {
+        let base = base.as_ref();
+        let segs = journal_segments(base);
+        if segs.is_empty() {
+            return Self::load(base);
+        }
+        let mut records = Vec::new();
+        for (_, seg) in &segs {
+            records.extend(Self::load(seg)?);
+        }
+        Ok(records)
+    }
+
+    /// Load a possibly-segmented journal and, when more than one segment
+    /// exists, rewrite the history as a single compacted snapshot
+    /// segment (see [`compact_records`]) — atomically written as segment
+    /// max+1, then the old segments are deleted. Returns the records the
+    /// surviving layout replays to. A single-file journal is returned
+    /// as-is: the legacy layout keeps working untouched.
+    pub fn compact_segments(base: impl AsRef<Path>) -> Result<Vec<Json>> {
+        let base = base.as_ref();
+        let segs = journal_segments(base);
+        if segs.is_empty() {
+            return Self::load(base);
+        }
+        let mut records = Vec::new();
+        for (_, seg) in &segs {
+            records.extend(Self::load(seg)?);
+        }
+        if segs.len() <= 1 {
+            return Ok(records);
+        }
+        let compacted = compact_records(&records);
+        let mut body = String::new();
+        for r in &compacted {
+            body.push_str(&r.to_string());
+            body.push('\n');
+        }
+        let snap = seg_path(base, segs.last().unwrap().0 + 1);
+        atomic_write(&snap, body.as_bytes())?;
+        for (_, old) in &segs {
+            let _ = std::fs::remove_file(old);
+        }
+        match base.parent() {
+            Some(p) if !p.as_os_str().is_empty() => fsync_dir(p),
+            _ => fsync_dir("."),
+        }
+        Ok(compacted)
+    }
+}
+
+/// Torn-tail repair + open-for-append of one journal segment (see
+/// [`Journal::append_to`] for the contract).
+fn open_append_repaired(path: &Path) -> Result<std::fs::File> {
+    // bytes, not read_to_string: a power cut can leave a non-UTF-8
+    // tail, which must not silently skip the repair
+    if let Ok(bytes) = std::fs::read(path) {
+        if !bytes.is_empty() && bytes.last() != Some(&b'\n') {
+            let keep = bytes
+                .iter()
+                .rposition(|&b| b == b'\n')
+                .map(|i| i + 1)
+                .unwrap_or(0);
+            eprintln!(
+                "journal: repaired torn tail of `{}`: dropped 1 partial \
+                 record ({} bytes from byte offset {keep})",
+                path.display(),
+                bytes.len() - keep,
+            );
+            let f = std::fs::OpenOptions::new().write(true).open(path)?;
+            f.set_len(keep as u64)?;
+            f.sync_data()?;
+        }
+    }
+    Ok(std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?)
+}
+
+/// Fold a journal's records to the minimal set that replays to the same
+/// state — the startup-compaction step of [`Journal::compact_segments`]:
+///
+/// * `generation` / `archive` / `island` — only the last of each kind
+///   matters to a resume; earlier checkpoints drop.
+/// * `sample_block` / `degraded_rows` — replayed last-wins into the
+///   final per-row state, then re-emitted as one `sample_block` per
+///   contiguous completed run plus one `degraded_rows` record (clocks
+///   collapse to the stream's maximum, which is all a resume reads).
+/// * everything else (`run_start`, `env_stats`, `run_end`, unknown
+///   kinds) — kept verbatim in order, so resume validation against
+///   `run_start` fields is unaffected.
+pub fn compact_records(records: &[Json]) -> Vec<Json> {
+    let last_of = |k: &str| records.iter().rposition(|r| kind(r) == Some(k));
+    let last_generation = last_of("generation");
+    let last_archive = last_of("archive");
+    let last_island = last_of("island");
+    let mut out = Vec::new();
+    let mut sweep_emitted = false;
+    for (i, r) in records.iter().enumerate() {
+        match kind(r) {
+            Some("generation") if Some(i) != last_generation => {}
+            Some("archive") if Some(i) != last_archive => {}
+            Some("island") if Some(i) != last_island => {}
+            Some("sample_block") | Some("degraded_rows") => {
+                if !sweep_emitted {
+                    sweep_emitted = true;
+                    out.extend(fold_sweep_state(records));
+                }
+            }
+            _ => out.push(r.clone()),
+        }
+    }
+    out
+}
+
+/// The final per-row state of a sweep-event stream, re-emitted as
+/// records (see [`compact_records`]).
+fn fold_sweep_state(records: &[Json]) -> Vec<Json> {
+    enum Row {
+        Done(Vec<f64>),
+        Degraded,
+    }
+    let mut state: BTreeMap<usize, Row> = BTreeMap::new();
+    let mut clock = 0.0f64;
+    for ev in sweep_events(records) {
+        match ev {
+            SweepEvent::Block(b) => {
+                for (k, objs) in b.objectives.into_iter().enumerate() {
+                    if objs.is_empty() {
+                        continue; // nothing restorable; the row re-evaluates
+                    }
+                    state.insert(b.first_row + k, Row::Done(objs));
+                }
+                clock = clock.max(b.clock);
+            }
+            SweepEvent::Degraded(d) => {
+                for r in d.rows {
+                    state.insert(r, Row::Degraded);
+                }
+                clock = clock.max(d.clock);
+            }
+        }
+    }
+    let mut out = Vec::new();
+    let mut degraded: Vec<usize> = Vec::new();
+    // contiguous completed runs of equal objective width become one
+    // block each; the BTreeMap iterates rows ascending
+    let mut run_start: Option<usize> = None;
+    let mut run_next = 0usize;
+    let mut n_obj = 0usize;
+    let mut flat: Vec<f64> = Vec::new();
+    let mut flush =
+        |start: &mut Option<usize>, flat: &mut Vec<f64>, n_obj: usize, out: &mut Vec<Json>| {
+            if let Some(s) = start.take() {
+                out.push(sample_block_record(s, n_obj, flat, clock));
+                flat.clear();
+            }
+        };
+    for (row, st) in &state {
+        match st {
+            Row::Degraded => {
+                flush(&mut run_start, &mut flat, n_obj, &mut out);
+                degraded.push(*row);
+            }
+            Row::Done(objs) => {
+                if run_start.is_some() && (*row != run_next || objs.len() != n_obj) {
+                    flush(&mut run_start, &mut flat, n_obj, &mut out);
+                }
+                if run_start.is_none() {
+                    run_start = Some(*row);
+                    n_obj = objs.len();
+                }
+                flat.extend_from_slice(objs);
+                run_next = row + 1;
+            }
+        }
+    }
+    flush(&mut run_start, &mut flat, n_obj, &mut out);
+    if !degraded.is_empty() {
+        out.push(degraded_rows_record(&degraded, clock, "compacted"));
+    }
+    out
 }
 
 fn obj(pairs: Vec<(&str, Json)>) -> Json {
@@ -958,6 +1286,151 @@ mod tests {
             assert_eq!(Journal::load(&path).unwrap().len(), 6);
             let _ = std::fs::remove_file(&path);
         }
+    }
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "molers-journal-seg-{}-{name}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn rolling_journal_rolls_and_replays_across_segments() {
+        let dir = tmp_dir("roll");
+        let base = dir.join("exp.jsonl");
+        {
+            let j = Journal::create_rolling(&base, Durability::Os, 3).unwrap();
+            for i in 0..8 {
+                j.append(&run_end(i, i as f64)).unwrap();
+            }
+        }
+        assert!(base.is_file());
+        assert!(seg_path(&base, 1).is_file(), "first roll segment");
+        assert!(seg_path(&base, 2).is_file(), "second roll segment");
+        assert_eq!(Journal::load(&base).unwrap().len(), 3, "base holds one window");
+        let all = Journal::load_segmented(&base).unwrap();
+        assert_eq!(all.len(), 8, "folded replay sees every record");
+        for (i, r) in all.iter().enumerate() {
+            assert_eq!(r.get("evaluations").unwrap().as_f64().unwrap() as usize, i);
+        }
+        // appending continues in the highest segment and rolls onward
+        {
+            let j = Journal::append_to_rolling(&base, Durability::Os, 3).unwrap();
+            for i in 8..12 {
+                j.append(&run_end(i, i as f64)).unwrap();
+            }
+        }
+        assert_eq!(Journal::load_segmented(&base).unwrap().len(), 12);
+        assert!(seg_path(&base, 3).is_file(), "roll continued past reopen");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compact_segments_folds_sweep_history_last_wins() {
+        let dir = tmp_dir("compact");
+        let base = dir.join("exp.jsonl");
+        {
+            let j = Journal::create_rolling(&base, Durability::Os, 2).unwrap();
+            j.append(&run_start("explore", 9, vec![("n", Json::Num(6.0))]))
+                .unwrap();
+            j.append(&sample_block_record(0, 2, &[1.0, 2.0, 3.0, 4.0], 1.0))
+                .unwrap();
+            j.append(&degraded_rows_record(&[1, 4], 2.0, "deadline")).unwrap();
+            // row 1 later re-completed: it must survive compaction as done
+            j.append(&sample_block_record(1, 2, &[9.0, 8.0], 3.0)).unwrap();
+            j.append(&env_stats_record("local", &EnvStats::default())).unwrap();
+        }
+        assert!(journal_segments(&base).len() > 1, "history must be segmented");
+        let records = Journal::compact_segments(&base).unwrap();
+        // the surviving layout is a single snapshot segment
+        let segs = journal_segments(&base);
+        assert_eq!(segs.len(), 1, "old segments deleted: {segs:?}");
+        assert!(segs[0].0 > 0, "snapshot takes a fresh segment number");
+        assert_eq!(Journal::load_segmented(&base).unwrap().len(), records.len());
+        // replayed state: rows 0..2 done (row 1 with the LATER values),
+        // row 4 degraded; run_start/env_stats kept for validation
+        assert_eq!(kind(&records[0]), Some("run_start"));
+        let events = sweep_events(&records);
+        let mut done: Vec<(usize, Vec<f64>)> = Vec::new();
+        let mut degraded: Vec<usize> = Vec::new();
+        for ev in events {
+            match ev {
+                SweepEvent::Block(b) => {
+                    for (k, o) in b.objectives.into_iter().enumerate() {
+                        done.push((b.first_row + k, o));
+                    }
+                }
+                SweepEvent::Degraded(d) => degraded.extend(d.rows),
+            }
+        }
+        done.sort_by_key(|(r, _)| *r);
+        assert_eq!(
+            done,
+            vec![(0, vec![1.0, 2.0]), (1, vec![9.0, 8.0])],
+            "last-wins per row"
+        );
+        assert_eq!(degraded, vec![4]);
+        assert!(
+            records.iter().any(|r| kind(r) == Some("env_stats")),
+            "non-sweep records pass through"
+        );
+        // the compacted journal continues accepting appends
+        let j = Journal::append_to_rolling(&base, Durability::Os, 2).unwrap();
+        j.append(&run_end(4, 3.0)).unwrap();
+        drop(j);
+        assert!(Journal::load_segmented(&base)
+            .unwrap()
+            .iter()
+            .any(|r| kind(r) == Some("run_end")));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_single_file_journals_load_and_compact_unchanged() {
+        let dir = tmp_dir("legacy");
+        let base = dir.join("old.jsonl");
+        {
+            let j = Journal::create(&base).unwrap();
+            j.append(&run_start("explore", 1, vec![])).unwrap();
+            j.append(&sample_block_record(0, 1, &[1.5], 1.0)).unwrap();
+        }
+        let before = std::fs::read(&base).unwrap();
+        let via_load = Journal::load(&base).unwrap();
+        let via_seg = Journal::load_segmented(&base).unwrap();
+        assert_eq!(via_load.len(), via_seg.len());
+        let compacted = Journal::compact_segments(&base).unwrap();
+        assert_eq!(compacted.len(), 2);
+        assert_eq!(
+            std::fs::read(&base).unwrap(),
+            before,
+            "a single-file journal must not be rewritten"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn seg_path_numbers_sit_before_the_extension() {
+        let base = PathBuf::from("/state/exp-3.jsonl");
+        assert_eq!(seg_path(&base, 0), base);
+        assert_eq!(seg_path(&base, 2), PathBuf::from("/state/exp-3.2.jsonl"));
+        // and a neighbouring journal's segments never alias: exp-31's
+        // names don't parse as exp-3 segments
+        let dir = tmp_dir("alias");
+        let a = dir.join("exp-3.jsonl");
+        std::fs::write(&a, "").unwrap();
+        std::fs::write(dir.join("exp-31.jsonl"), "").unwrap();
+        std::fs::write(dir.join("exp-3.1.jsonl"), "").unwrap();
+        let segs = journal_segments(&a);
+        assert_eq!(
+            segs.iter().map(|(n, _)| *n).collect::<Vec<_>>(),
+            vec![0, 1],
+            "{segs:?}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

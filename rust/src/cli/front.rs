@@ -32,6 +32,31 @@ fn num<T>(r: std::result::Result<T, String>) -> Result<T> {
     r.map_err(Error::Config)
 }
 
+/// Parse a byte count with an optional `k`/`m`/`g` suffix (powers of
+/// 1024), e.g. `--mem-budget 64m`. Public so `molers serve` rejects a
+/// bad client-supplied budget at submission time with the same message.
+pub fn parse_bytes(flag: &str, s: &str) -> Result<u64> {
+    let t = s.trim().to_ascii_lowercase();
+    let (digits, mult) = match t.chars().last() {
+        Some('k') => (&t[..t.len() - 1], 1u64 << 10),
+        Some('m') => (&t[..t.len() - 1], 1u64 << 20),
+        Some('g') => (&t[..t.len() - 1], 1u64 << 30),
+        _ => (t.as_str(), 1),
+    };
+    let n: u64 = digits.trim().parse().map_err(|_| {
+        Error::Config(format!("{flag} expects BYTES[k|m|g], got `{s}`"))
+    })?;
+    let bytes = n.checked_mul(mult).ok_or_else(|| {
+        Error::Config(format!("{flag} `{s}` overflows a 64-bit byte count"))
+    })?;
+    if bytes == 0 {
+        return Err(Error::Config(format!(
+            "{flag} expects a positive byte count, got `{s}`"
+        )));
+    }
+    Ok(bytes)
+}
+
 /// `--timeout` (real seconds per job, also capping the per-attempt
 /// timeout), `--max-retries` (re-dispatches after the first attempt) and
 /// `--backoff` (base virtual seconds) over [`RetryPolicy::default`].
@@ -256,6 +281,14 @@ pub fn explore(args: &Args) -> Result<Experiment> {
     if sampling_name == "factorial" {
         meta.push(("step".to_string(), Json::Num(step)));
     }
+    // Out-of-core knobs. Deliberately NOT journaled as resume knobs: a
+    // budget bounds memory, never the design, so a journal written under
+    // any budget (or none) must resume under any other.
+    let mem_budget = match args.get("mem-budget") {
+        Some(s) => Some(parse_bytes("--mem-budget", s)?),
+        None => None,
+    };
+    let spill_dir = args.get("spill-dir").map(str::to_string);
     let method = DirectSampling {
         sampling,
         evaluator,
@@ -268,6 +301,8 @@ pub fn explore(args: &Args) -> Result<Experiment> {
         meta,
         degraded_ok: args.flag("degraded-ok"),
         retry_degraded: args.flag("retry-degraded"),
+        mem_budget,
+        spill_dir,
     };
     with_common(
         Experiment::new(Box::new(method)).env(env_spec(args, "local", nodes)?),
@@ -446,6 +481,8 @@ mod tests {
             ("explore --sampling factorial --step -1", "--step expects"),
             ("explore --sampling lhs --lo 5 --hi 1", "--lo must be below"),
             ("explore --seed notanumber", "expects an integer"),
+            ("explore --mem-budget 12q", "expects BYTES"),
+            ("explore --mem-budget 0", "positive byte count"),
         ] {
             let err = explore(&parse(cmd)).unwrap_err().to_string();
             assert!(err.contains(needle), "`{cmd}` → {err}");
@@ -459,6 +496,22 @@ mod tests {
         assert!(replicate(&parse("replicate")).is_ok());
         assert!(calibrate(&parse("calibrate")).is_ok());
         assert!(island(&parse("island")).is_ok());
+    }
+
+    #[test]
+    fn mem_budget_parses_binary_suffixes() {
+        assert_eq!(parse_bytes("--mem-budget", "64").unwrap(), 64);
+        assert_eq!(parse_bytes("--mem-budget", "64k").unwrap(), 64 << 10);
+        assert_eq!(parse_bytes("--mem-budget", "2M").unwrap(), 2 << 20);
+        assert_eq!(parse_bytes("--mem-budget", "1g").unwrap(), 1 << 30);
+        for bad in ["", "12q", "0", "99999999999g"] {
+            assert!(parse_bytes("--mem-budget", bad).is_err(), "`{bad}`");
+        }
+        // the out-of-core knobs reach the method and the front still builds
+        assert!(explore(&parse(
+            "explore --n 8 --sampling sobol --mem-budget 1m --spill-dir /tmp"
+        ))
+        .is_ok());
     }
 
     #[test]

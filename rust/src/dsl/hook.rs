@@ -199,6 +199,170 @@ pub enum TableFormat {
     Jsonl,
 }
 
+/// One column's streaming summary — what [`RowWriter::stats`] reports
+/// after a run without ever holding the result set in memory.
+#[derive(Debug, Clone)]
+pub struct ColumnSummary {
+    pub name: String,
+    /// Finite observations (NaN/inf rows — e.g. degraded placeholders —
+    /// are excluded from every statistic).
+    pub count: u64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Median estimate: exact up to 5 observations, a P² sketch beyond.
+    pub median: f64,
+}
+
+/// P² single-quantile sketch (Jain & Chlamtac 1985): five markers track
+/// the running quantile estimate in O(1) state and O(1) work per
+/// observation — the piece that lets a 10M-row explore report a median
+/// without sorting (or even retaining) 10M values.
+struct P2Quantile {
+    p: f64,
+    count: usize,
+    /// Marker heights (sorted once the first five observations arrive).
+    q: [f64; 5],
+    /// Marker positions (1-based ranks).
+    n: [f64; 5],
+    /// Desired marker positions.
+    desired: [f64; 5],
+}
+
+impl P2Quantile {
+    fn new(p: f64) -> Self {
+        P2Quantile {
+            p,
+            count: 0,
+            q: [0.0; 5],
+            n: [1.0, 2.0, 3.0, 4.0, 5.0],
+            desired: [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0],
+        }
+    }
+
+    fn observe(&mut self, x: f64) {
+        if self.count < 5 {
+            self.q[self.count] = x;
+            self.count += 1;
+            if self.count == 5 {
+                self.q.sort_by(f64::total_cmp);
+            }
+            return;
+        }
+        self.count += 1;
+        // locate the cell, stretching the extreme markers as needed
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x < self.q[1] {
+            0
+        } else if x < self.q[2] {
+            1
+        } else if x < self.q[3] {
+            2
+        } else if x <= self.q[4] {
+            3
+        } else {
+            self.q[4] = x;
+            3
+        };
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        let dn = [0.0, self.p / 2.0, self.p, (1.0 + self.p) / 2.0, 1.0];
+        for (d, inc) in self.desired.iter_mut().zip(dn) {
+            *d += inc;
+        }
+        // nudge the three interior markers toward their desired ranks
+        for i in 1..4 {
+            let d = self.desired[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let s = d.signum();
+                let parabolic = self.parabolic(i, s);
+                self.q[i] = if self.q[i - 1] < parabolic && parabolic < self.q[i + 1] {
+                    parabolic
+                } else {
+                    self.linear(i, s)
+                };
+                self.n[i] += s;
+            }
+        }
+    }
+
+    /// Piecewise-parabolic height estimate for marker `i` moved by `d`.
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (q, n) = (&self.q, &self.n);
+        q[i] + d / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + d * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+    }
+
+    fn value(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if self.count < 5 {
+            // exact small-sample quantile (no allocation: fixed array)
+            let mut v = self.q;
+            let v = &mut v[..self.count];
+            v.sort_by(f64::total_cmp);
+            return v[((self.count - 1) as f64 * self.p).round() as usize];
+        }
+        self.q[2]
+    }
+}
+
+/// Streaming statistics of one column: count, Welford mean, min/max and
+/// the P² median sketch. Constant state, no per-row allocation.
+struct ColumnStats {
+    count: u64,
+    mean: f64,
+    min: f64,
+    max: f64,
+    median: P2Quantile,
+}
+
+impl ColumnStats {
+    fn new() -> Self {
+        ColumnStats {
+            count: 0,
+            mean: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            median: P2Quantile::new(0.5),
+        }
+    }
+
+    fn observe(&mut self, x: f64) {
+        if !x.is_finite() {
+            return; // degraded NaN placeholders must not poison the run summary
+        }
+        self.count += 1;
+        self.mean += (x - self.mean) / self.count as f64;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.median.observe(x);
+    }
+
+    fn summary(&self, name: &str) -> ColumnSummary {
+        ColumnSummary {
+            name: name.to_string(),
+            count: self.count,
+            mean: if self.count == 0 { f64::NAN } else { self.mean },
+            min: if self.count == 0 { f64::NAN } else { self.min },
+            max: if self.count == 0 { f64::NAN } else { self.max },
+            median: self.median.value(),
+        }
+    }
+}
+
 /// Streaming CSV/JSONL result writer (§Exploration): one line per design
 /// row, written in row order through a buffered file. Two entry points:
 ///
@@ -212,10 +376,16 @@ pub enum TableFormat {
 /// same `{}` formatting the journal uses), so a result file rebuilt from
 /// journaled objectives is byte-identical to one written live — the
 /// property `molers explore --resume` relies on.
+///
+/// Every appended row also folds into per-column streaming statistics
+/// ([`RowWriter::stats`]) — constant memory however long the run, which
+/// is what gives the out-of-core explore path an end-of-run summary
+/// without retaining a single result row.
 pub struct RowWriter {
     format: TableFormat,
     columns: Vec<String>,
     file: Mutex<std::io::BufWriter<std::fs::File>>,
+    stats: Mutex<Vec<ColumnStats>>,
 }
 
 impl RowWriter {
@@ -241,11 +411,22 @@ impl RowWriter {
             format,
             columns: columns.iter().map(|s| s.to_string()).collect(),
             file: Mutex::new(file),
+            stats: Mutex::new(columns.iter().map(|_| ColumnStats::new()).collect()),
         })
     }
 
     pub fn columns(&self) -> &[String] {
         &self.columns
+    }
+
+    /// Per-column streaming summary of every row appended so far.
+    pub fn stats(&self) -> Vec<ColumnSummary> {
+        let stats = self.stats.lock().unwrap();
+        self.columns
+            .iter()
+            .zip(stats.iter())
+            .map(|(name, s)| s.summary(name))
+            .collect()
     }
 
     /// Append one row; `values` must carry one value per column.
@@ -285,6 +466,11 @@ impl RowWriter {
                 }
                 writeln!(f, "}}")?;
             }
+        }
+        drop(f);
+        let mut stats = self.stats.lock().unwrap();
+        for (s, &v) in stats.iter_mut().zip(values) {
+            s.observe(v);
         }
         Ok(())
     }
@@ -435,6 +621,59 @@ mod tests {
         w.flush().unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text, "a,b\n1.5,2.5\n");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn row_writer_streams_column_statistics() {
+        let path = std::env::temp_dir()
+            .join(format!("molers-roww-stats-{}.csv", std::process::id()));
+        let w = RowWriter::create(&path, TableFormat::Csv, &["x", "f"]).unwrap();
+        // a deterministic but shuffled sequence: x = 0..=1000 scrambled,
+        // f carries NaNs that must be excluded
+        let mut xs: Vec<f64> = (0..=1000).map(f64::from).collect();
+        let mut s = 12345u64;
+        for i in (1..xs.len()).rev() {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            xs.swap(i, (s >> 33) as usize % (i + 1));
+        }
+        for (i, &x) in xs.iter().enumerate() {
+            let f = if i % 10 == 0 { f64::NAN } else { x * 2.0 };
+            w.append_row(&[x, f]).unwrap();
+        }
+        let stats = w.stats();
+        assert_eq!(stats[0].name, "x");
+        assert_eq!(stats[0].count, 1001);
+        assert_eq!(stats[0].min, 0.0);
+        assert_eq!(stats[0].max, 1000.0);
+        assert!((stats[0].mean - 500.0).abs() < 1e-9, "mean {}", stats[0].mean);
+        assert!(
+            (stats[0].median - 500.0).abs() < 25.0,
+            "P^2 median estimate {} too far from 500",
+            stats[0].median
+        );
+        assert_eq!(stats[1].count, 1001 - 101, "NaN rows excluded");
+        assert!(stats[1].min >= 2.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn column_statistics_are_exact_for_small_samples() {
+        let path = std::env::temp_dir()
+            .join(format!("molers-roww-small-{}.csv", std::process::id()));
+        let w = RowWriter::create(&path, TableFormat::Csv, &["x"]).unwrap();
+        let empty = w.stats();
+        assert_eq!(empty[0].count, 0);
+        assert!(empty[0].median.is_nan() && empty[0].mean.is_nan());
+        for v in [5.0, 1.0, 3.0] {
+            w.append_row(&[v]).unwrap();
+        }
+        let stats = w.stats();
+        assert_eq!(stats[0].count, 3);
+        assert_eq!(stats[0].min, 1.0);
+        assert_eq!(stats[0].max, 5.0);
+        assert_eq!(stats[0].median, 3.0, "small samples are exact");
+        assert!((stats[0].mean - 3.0).abs() < 1e-12);
         let _ = std::fs::remove_file(&path);
     }
 

@@ -16,8 +16,8 @@ pub mod task;
 
 pub use builder::{CapsuleHandle, PuzzleBuilder};
 pub use hook::{
-    CaptureHook, CsvHook, DisplayHook, Hook, RowWriter, Sink, TableFormat,
-    ToStringHook,
+    CaptureHook, ColumnSummary, CsvHook, DisplayHook, Hook, RowWriter, Sink,
+    TableFormat, ToStringHook,
 };
 pub use puzzle::{Capsule, CapsuleId, Puzzle, Transition};
 pub use source::{ConstantSource, CsvSource, Source};

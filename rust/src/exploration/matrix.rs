@@ -13,9 +13,21 @@
 //! [`SampleMatrix::context_row`] materialises one sample as a context when
 //! a workflow capsule actually needs it, which is how the scheduler
 //! streams a 200k-row design without ever holding 200k cloned contexts.
+//!
+//! Since the out-of-core refactor the matrix owns its rows through a
+//! [`RowStore`] instead of a raw `Vec<f64>`: the default backing is the
+//! same contiguous in-RAM vector as before (every accessor below is
+//! unchanged), but [`SampleMatrix::spilled`] builds a matrix whose rows
+//! page to disk under a `--mem-budget` resident cap — read and written
+//! through the block API ([`SampleMatrix::write_rows`] /
+//! [`SampleMatrix::copy_rows`]), which is how a 10M-row campaign fits in
+//! fixed memory.
+
+use std::path::Path;
 
 use crate::core::{Context, Value};
 use crate::error::{Error, Result};
+use crate::exploration::rowstore::RowStore;
 
 /// Runtime type of one design column. Values are stored as `f64` either
 /// way (`u32` round-trips exactly through `f64`); the kind decides what a
@@ -58,8 +70,7 @@ impl Column {
 #[derive(Debug, Clone)]
 pub struct SampleMatrix {
     columns: Vec<Column>,
-    rows: usize,
-    data: Vec<f64>,
+    store: RowStore,
     /// Index scratch (LHS stratum shuffles, factorial level counts) —
     /// recycled across dimensions and waves.
     pub idx_scratch: Vec<usize>,
@@ -69,24 +80,42 @@ pub struct SampleMatrix {
 
 impl SampleMatrix {
     pub fn new(columns: Vec<Column>) -> Self {
+        let store = RowStore::ram(columns.len());
         SampleMatrix {
             columns,
-            rows: 0,
-            data: Vec::new(),
+            store,
             idx_scratch: Vec::new(),
             u64_scratch: Vec::new(),
         }
     }
 
     pub fn with_capacity(columns: Vec<Column>, rows: usize) -> Self {
-        let dim = columns.len();
+        let store = RowStore::ram_with_capacity(columns.len(), rows);
         SampleMatrix {
             columns,
-            rows: 0,
-            data: Vec::with_capacity(rows * dim),
+            store,
             idx_scratch: Vec::new(),
             u64_scratch: Vec::new(),
         }
+    }
+
+    /// Matrix whose rows page to a scratch file under `spill_dir`, keeping
+    /// at most `mem_budget` bytes of row storage resident (see
+    /// [`RowStore::spilled`]). Contiguous accessors panic on this backing;
+    /// use [`SampleMatrix::write_rows`] / [`SampleMatrix::copy_rows`].
+    pub fn spilled(
+        columns: Vec<Column>,
+        spill_dir: &Path,
+        mem_budget: u64,
+        rows_per_chunk: usize,
+    ) -> Result<Self> {
+        let store = RowStore::spilled(columns.len(), spill_dir, mem_budget, rows_per_chunk)?;
+        Ok(SampleMatrix {
+            columns,
+            store,
+            idx_scratch: Vec::new(),
+            u64_scratch: Vec::new(),
+        })
     }
 
     pub fn columns(&self) -> &[Column] {
@@ -105,55 +134,75 @@ impl SampleMatrix {
 
     /// Number of sample rows.
     pub fn len(&self) -> usize {
-        self.rows
+        self.store.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.rows == 0
+        self.store.is_empty()
+    }
+
+    /// `true` when rows live in the chunk-paged file-backed store.
+    pub fn is_spilled(&self) -> bool {
+        self.store.is_spilled()
+    }
+
+    /// Float capacity of the retained row arena (asserts the
+    /// clear-and-regrow wave discipline never reallocates).
+    pub fn capacity_floats(&self) -> usize {
+        self.store.capacity_floats()
+    }
+
+    /// High-water mark of resident row-storage bytes.
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.store.peak_resident_bytes()
     }
 
     /// Drop all rows, keeping capacity (and scratch) for the next wave.
     pub fn clear(&mut self) {
-        self.rows = 0;
-        self.data.clear();
+        self.store.clear();
     }
 
     /// Append `n` zero-filled rows (about to be written by a sampling);
     /// returns the index of the first new row. Reuses capacity.
     pub fn grow_rows(&mut self, n: usize) -> usize {
-        let first = self.rows;
-        self.rows += n;
-        self.data.resize(self.rows * self.dim(), 0.0);
-        first
+        self.store.grow_rows(n)
     }
 
     /// Append one row.
     pub fn push_row(&mut self, row: &[f64]) {
         debug_assert_eq!(row.len(), self.dim());
-        self.data.extend_from_slice(row);
-        self.rows += 1;
+        self.store.push_row(row);
     }
 
     pub fn row(&self, i: usize) -> &[f64] {
-        let d = self.dim();
-        &self.data[i * d..(i + 1) * d]
+        self.store.row(i)
     }
 
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
-        let d = self.dim();
-        &mut self.data[i * d..(i + 1) * d]
+        self.store.row_mut(i)
     }
 
     /// Rows `lo..hi` as one contiguous row-major slice — the shape an
     /// `evaluate_rows` chunk job consumes.
     pub fn rows_slice(&self, lo: usize, hi: usize) -> &[f64] {
-        let d = self.dim();
-        &self.data[lo * d..hi * d]
+        self.store.rows_slice(lo, hi)
     }
 
     /// The whole matrix, row-major.
     pub fn data(&self) -> &[f64] {
-        &self.data
+        self.store.data()
+    }
+
+    /// Overwrite contiguous rows starting at `first_row` — works on either
+    /// backing (the spill-safe write path).
+    pub fn write_rows(&mut self, first_row: usize, data: &[f64]) {
+        self.store.write_rows(first_row, data);
+    }
+
+    /// Copy rows `lo..hi` into the caller's recycled buffer — works on
+    /// either backing (the spill-safe read path).
+    pub fn copy_rows(&mut self, lo: usize, hi: usize, out: &mut Vec<f64>) {
+        self.store.copy_rows(lo, hi, out);
     }
 
     /// Materialise row `i` as a context merged over `base` (the DSL edge:
@@ -173,7 +222,7 @@ impl SampleMatrix {
     /// Materialise the whole design as contexts (legacy edge adapter —
     /// allocates one context per row; the streaming paths never call it).
     pub fn to_contexts(&self, base: &Context) -> Vec<Context> {
-        (0..self.rows).map(|i| self.context_row(i, base)).collect()
+        (0..self.len()).map(|i| self.context_row(i, base)).collect()
     }
 
     /// Error unless `expected` describes this matrix's columns (the
@@ -247,13 +296,30 @@ mod tests {
         assert_eq!(first, 0);
         assert_eq!(m.len(), 8);
         m.row_mut(7)[0] = 3.0;
-        let cap = m.data.capacity();
+        let cap = m.capacity_floats();
         m.clear();
         assert!(m.is_empty());
         let first = m.grow_rows(8);
         assert_eq!(first, 0);
         assert_eq!(m.row(7)[0], 0.0, "grown rows are zeroed");
-        assert_eq!(m.data.capacity(), cap, "clear+grow must not reallocate");
+        assert_eq!(m.capacity_floats(), cap, "clear+grow must not reallocate");
+    }
+
+    #[test]
+    fn spilled_matrix_round_trips_rows_through_the_block_api() {
+        let dir = std::env::temp_dir().join(format!("molers-matrix-spill-{}", std::process::id()));
+        let mut m = SampleMatrix::spilled(xy(), &dir, 4 * 2 * 8, 4).unwrap();
+        assert!(m.is_spilled());
+        m.grow_rows(10);
+        m.write_rows(6, &[1.5, 7.0, 2.5, 9.0]);
+        let mut buf = Vec::new();
+        m.copy_rows(6, 8, &mut buf);
+        assert_eq!(buf, &[1.5, 7.0, 2.5, 9.0]);
+        m.copy_rows(0, 1, &mut buf);
+        assert_eq!(buf, &[0.0, 0.0], "unwritten rows read as zeros");
+        assert!(m.peak_resident_bytes() > 0);
+        drop(m);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -3,11 +3,13 @@
 
 pub mod matrix;
 pub mod replication;
+pub mod rowstore;
 pub mod sampling;
 pub mod statistics;
 pub mod sweep;
 
 pub use matrix::{Column, ColumnKind, SampleMatrix};
+pub use rowstore::RowStore;
 pub use replication::replicate;
 pub use sampling::{
     ExplicitSampling, Factor, FullFactorial, LhsSampling, ProductSampling,

@@ -1,0 +1,636 @@
+//! Pluggable row storage (§Out-of-core tentpole): a [`RowStore`] owns the
+//! row-major `f64` rows behind [`SampleMatrix`](crate::exploration::SampleMatrix)
+//! and the explore result path, with two backings:
+//!
+//! * **Ram** — one contiguous `Vec<f64>`, exactly the layout every PR-4
+//!   hot path was built on. `clear`/`grow_rows` never release capacity, so
+//!   the zero-allocation steady-state wave discipline is unchanged.
+//! * **Spill** — a chunk-paged, file-backed store under `--spill-dir` with
+//!   a `--mem-budget` resident cap. Rows are grouped into fixed-size
+//!   chunks; at most `max(2, mem_budget / chunk_bytes)` chunks are
+//!   resident at a time in **arena-recycled** slot buffers (allocated once
+//!   on first use, never freed, never reallocated), so after warm-up a
+//!   spilled wave performs zero heap allocations — page-outs serialise
+//!   through one recycled byte buffer into a single scratch file that is
+//!   deleted on drop. Least-recently-used chunks are evicted first; clean
+//!   chunks are dropped without I/O, dirty chunks are written back at
+//!   `chunk_index × chunk_bytes` so the file is positionally addressable
+//!   and never compacted.
+//!
+//! The store tracks a **resident-bytes high-water mark**
+//! ([`RowStore::peak_resident_bytes`]) — the observability hook behind the
+//! `peak-resident-bytes` line in every end-of-run summary and the serve
+//! `status` fleet object. The spill file is scratch, not durability:
+//! crash recovery still comes from the checkpoint journal + positionally
+//! pure regeneration, which is why the file can be unlinked on drop.
+//!
+//! Contiguous accessors (`data`, `rows_slice`, `row`, `row_mut`) are only
+//! valid on the Ram backing and panic on Spill with a clear message; the
+//! streaming paths use the block API ([`RowStore::write_rows`] /
+//! [`RowStore::copy_rows`]) which works on either backing.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Error, Result};
+
+/// Default rows per spill chunk when the caller has no natural block size.
+pub const DEFAULT_ROWS_PER_CHUNK: usize = 4096;
+
+/// Monotone scratch-file counter: spill files are
+/// `rowstore-{pid}-{counter}.bin`, unique within and across stores of one
+/// process.
+static SPILL_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// One resident chunk buffer. `data` is allocated once at
+/// `rows_per_chunk × width` and recycled for every chunk this slot ever
+/// holds.
+#[derive(Debug)]
+struct Slot {
+    data: Vec<f64>,
+    chunk: usize,
+    dirty: bool,
+    last_use: u64,
+}
+
+#[derive(Debug)]
+struct Spill {
+    path: PathBuf,
+    file: File,
+    rows_per_chunk: usize,
+    /// Resident cap: at most this many slots are ever allocated.
+    cap: usize,
+    slots: Vec<Slot>,
+    /// chunk index → resident slot index (capacity retained across `clear`).
+    chunk_slot: Vec<Option<u32>>,
+    /// chunk has been written to the spill file at least once (unwritten
+    /// chunks page in as zeros, matching `Vec::resize` semantics).
+    on_disk: Vec<bool>,
+    /// Recycled serialisation buffer, `chunk_bytes` long.
+    byte_buf: Vec<u8>,
+    tick: u64,
+    resident_bytes: u64,
+    peak_resident_bytes: u64,
+}
+
+#[derive(Debug)]
+enum Backing {
+    Ram(Vec<f64>),
+    Spill(Box<Spill>),
+}
+
+/// Row-major `f64` row storage with a pluggable backing — see the module
+/// docs for the Ram/Spill contract.
+#[derive(Debug)]
+pub struct RowStore {
+    width: usize,
+    rows: usize,
+    backing: Backing,
+    /// Ram-backing high-water mark (Spill tracks its own).
+    ram_peak_bytes: u64,
+}
+
+impl Clone for RowStore {
+    /// The Ram backing clones like the `Vec<f64>` it wraps; a spilled
+    /// store cannot be cloned (the scratch file is single-owner) and
+    /// panics — no streaming path ever clones row storage.
+    fn clone(&self) -> Self {
+        match &self.backing {
+            Backing::Ram(data) => RowStore {
+                width: self.width,
+                rows: self.rows,
+                backing: Backing::Ram(data.clone()),
+                ram_peak_bytes: self.ram_peak_bytes,
+            },
+            Backing::Spill(_) => panic!("RowStore: the spilled backing cannot be cloned"),
+        }
+    }
+}
+
+impl RowStore {
+    /// Contiguous in-RAM backing (the default, and the only backing that
+    /// supports the contiguous slice accessors).
+    pub fn ram(width: usize) -> Self {
+        RowStore {
+            width,
+            rows: 0,
+            backing: Backing::Ram(Vec::new()),
+            ram_peak_bytes: 0,
+        }
+    }
+
+    /// In-RAM backing with capacity for `rows` rows preallocated.
+    pub fn ram_with_capacity(width: usize, rows: usize) -> Self {
+        let data = Vec::with_capacity(rows * width);
+        let peak = (data.capacity() * 8) as u64;
+        RowStore {
+            width,
+            rows: 0,
+            backing: Backing::Ram(data),
+            ram_peak_bytes: peak,
+        }
+    }
+
+    /// Chunk-paged file-backed backing: rows are paged to a scratch file
+    /// under `spill_dir`, keeping at most `max(2, mem_budget / chunk_bytes)`
+    /// chunks of `rows_per_chunk` rows resident. A zero-width store never
+    /// touches the filesystem (there are no bytes to spill) and degrades
+    /// to the Ram backing.
+    pub fn spilled(
+        width: usize,
+        spill_dir: &Path,
+        mem_budget: u64,
+        rows_per_chunk: usize,
+    ) -> Result<Self> {
+        if width == 0 {
+            return Ok(RowStore::ram(0));
+        }
+        let rows_per_chunk = rows_per_chunk.max(1);
+        std::fs::create_dir_all(spill_dir).map_err(|e| {
+            Error::EnvironmentError(format!(
+                "cannot create spill dir {}: {e}",
+                spill_dir.display()
+            ))
+        })?;
+        let name = format!(
+            "rowstore-{}-{}.bin",
+            std::process::id(),
+            SPILL_COUNTER.fetch_add(1, Ordering::Relaxed)
+        );
+        let path = spill_dir.join(name);
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .map_err(|e| {
+                Error::EnvironmentError(format!(
+                    "cannot create spill file {}: {e}",
+                    path.display()
+                ))
+            })?;
+        let chunk_bytes = (rows_per_chunk * width * 8) as u64;
+        let cap = ((mem_budget / chunk_bytes) as usize).max(2);
+        Ok(RowStore {
+            width,
+            rows: 0,
+            backing: Backing::Spill(Box::new(Spill {
+                path,
+                file,
+                rows_per_chunk,
+                cap,
+                slots: Vec::new(),
+                chunk_slot: Vec::new(),
+                on_disk: Vec::new(),
+                byte_buf: Vec::new(),
+                tick: 0,
+                resident_bytes: 0,
+                peak_resident_bytes: 0,
+            })),
+            ram_peak_bytes: 0,
+        })
+    }
+
+    /// Floats per row.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    pub fn is_spilled(&self) -> bool {
+        matches!(self.backing, Backing::Spill(_))
+    }
+
+    /// Bytes of row storage currently resident in RAM.
+    pub fn resident_bytes(&self) -> u64 {
+        match &self.backing {
+            Backing::Ram(data) => (data.capacity() * 8) as u64,
+            Backing::Spill(s) => s.resident_bytes,
+        }
+    }
+
+    /// High-water mark of [`RowStore::resident_bytes`] over the store's
+    /// lifetime — the per-run memory observability number.
+    pub fn peak_resident_bytes(&self) -> u64 {
+        match &self.backing {
+            Backing::Ram(_) => self.ram_peak_bytes.max(self.resident_bytes()),
+            Backing::Spill(s) => s.peak_resident_bytes,
+        }
+    }
+
+    /// Float capacity of the retained arena (Ram: the vec's capacity;
+    /// Spill: the sum of the allocated slot buffers) — lets callers assert
+    /// the clear-and-regrow path never reallocates.
+    pub fn capacity_floats(&self) -> usize {
+        match &self.backing {
+            Backing::Ram(data) => data.capacity(),
+            Backing::Spill(s) => s.slots.iter().map(|sl| sl.data.len()).sum(),
+        }
+    }
+
+    /// Drop all rows, keeping every retained buffer (Ram capacity, spill
+    /// slot arena, chunk maps) for the next wave.
+    pub fn clear(&mut self) {
+        self.rows = 0;
+        match &mut self.backing {
+            Backing::Ram(data) => data.clear(),
+            Backing::Spill(s) => {
+                for slot in &mut s.slots {
+                    slot.chunk = usize::MAX;
+                    slot.dirty = false;
+                }
+                s.chunk_slot.clear();
+                s.on_disk.clear();
+            }
+        }
+    }
+
+    /// Append `n` zero-filled rows; returns the index of the first new
+    /// row. Reuses retained capacity.
+    pub fn grow_rows(&mut self, n: usize) -> usize {
+        let first = self.rows;
+        self.rows += n;
+        match &mut self.backing {
+            Backing::Ram(data) => {
+                data.resize(self.rows * self.width, 0.0);
+                self.ram_peak_bytes = self.ram_peak_bytes.max((data.capacity() * 8) as u64);
+            }
+            Backing::Spill(s) => {
+                let chunks = self.rows.div_ceil(s.rows_per_chunk);
+                if s.chunk_slot.len() < chunks {
+                    s.chunk_slot.resize(chunks, None);
+                    s.on_disk.resize(chunks, false);
+                }
+            }
+        }
+        first
+    }
+
+    /// Append one row.
+    pub fn push_row(&mut self, row: &[f64]) {
+        debug_assert_eq!(row.len(), self.width);
+        let first = self.grow_rows(1);
+        self.write_rows(first, row);
+    }
+
+    /// Overwrite the contiguous rows starting at `first_row` with
+    /// `data` (`data.len()` must be a whole number of rows, all of which
+    /// must already exist). Works on either backing; on Spill this is the
+    /// paged write path.
+    pub fn write_rows(&mut self, first_row: usize, data: &[f64]) {
+        if self.width == 0 {
+            debug_assert!(data.is_empty());
+            return;
+        }
+        debug_assert_eq!(data.len() % self.width, 0);
+        let n = data.len() / self.width;
+        assert!(
+            first_row + n <= self.rows,
+            "RowStore::write_rows: rows {first_row}..{} out of bounds (len {})",
+            first_row + n,
+            self.rows
+        );
+        match &mut self.backing {
+            Backing::Ram(ram) => {
+                let lo = first_row * self.width;
+                ram[lo..lo + data.len()].copy_from_slice(data);
+            }
+            Backing::Spill(s) => {
+                let width = self.width;
+                let mut row = first_row;
+                let mut off = 0;
+                while row < first_row + n {
+                    let chunk = row / s.rows_per_chunk;
+                    let chunk_lo = chunk * s.rows_per_chunk;
+                    let in_chunk = row - chunk_lo;
+                    let take = (s.rows_per_chunk - in_chunk).min(first_row + n - row);
+                    // a write covering the whole chunk needs no page-in
+                    let whole = in_chunk == 0 && take == s.rows_per_chunk;
+                    let slot = s.slot_for_chunk(chunk, width, !whole);
+                    let buf = &mut s.slots[slot].data[in_chunk * width..(in_chunk + take) * width];
+                    buf.copy_from_slice(&data[off..off + take * width]);
+                    s.slots[slot].dirty = true;
+                    row += take;
+                    off += take * width;
+                }
+            }
+        }
+    }
+
+    /// Copy rows `lo..hi` into `out` (resized to `(hi - lo) × width`).
+    /// Works on either backing; on Spill this is the paged read path and
+    /// `out` is the caller's recycled buffer.
+    pub fn copy_rows(&mut self, lo: usize, hi: usize, out: &mut Vec<f64>) {
+        assert!(lo <= hi && hi <= self.rows, "RowStore::copy_rows: rows {lo}..{hi} out of bounds");
+        out.clear();
+        out.resize((hi - lo) * self.width, 0.0);
+        if self.width == 0 {
+            return;
+        }
+        match &mut self.backing {
+            Backing::Ram(ram) => {
+                out.copy_from_slice(&ram[lo * self.width..hi * self.width]);
+            }
+            Backing::Spill(s) => {
+                let width = self.width;
+                let mut row = lo;
+                let mut off = 0;
+                while row < hi {
+                    let chunk = row / s.rows_per_chunk;
+                    let chunk_lo = chunk * s.rows_per_chunk;
+                    let in_chunk = row - chunk_lo;
+                    let take = (s.rows_per_chunk - in_chunk).min(hi - row);
+                    let slot = s.slot_for_chunk(chunk, width, true);
+                    let buf = &s.slots[slot].data[in_chunk * width..(in_chunk + take) * width];
+                    out[off..off + take * width].copy_from_slice(buf);
+                    row += take;
+                    off += take * width;
+                }
+            }
+        }
+    }
+
+    fn ram(&self) -> &Vec<f64> {
+        match &self.backing {
+            Backing::Ram(data) => data,
+            Backing::Spill(_) => panic!(
+                "RowStore: contiguous slice access requires the in-RAM backing \
+                 (spilled stores are read through copy_rows)"
+            ),
+        }
+    }
+
+    fn ram_mut(&mut self) -> &mut Vec<f64> {
+        match &mut self.backing {
+            Backing::Ram(data) => data,
+            Backing::Spill(_) => panic!(
+                "RowStore: contiguous slice access requires the in-RAM backing \
+                 (spilled stores are written through write_rows)"
+            ),
+        }
+    }
+
+    /// The whole store, row-major. **Ram backing only.**
+    pub fn data(&self) -> &[f64] {
+        self.ram()
+    }
+
+    /// Rows `lo..hi` as one contiguous slice. **Ram backing only.**
+    pub fn rows_slice(&self, lo: usize, hi: usize) -> &[f64] {
+        &self.ram()[lo * self.width..hi * self.width]
+    }
+
+    /// Row `i`. **Ram backing only.**
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.ram()[i * self.width..(i + 1) * self.width]
+    }
+
+    /// Row `i`, mutable. **Ram backing only.**
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        let w = self.width;
+        &mut self.ram_mut()[i * w..(i + 1) * w]
+    }
+}
+
+impl Spill {
+    /// Resident slot holding `chunk`, paging it in (or zero-filling, for a
+    /// chunk never written to disk) after evicting the least-recently-used
+    /// slot when the arena is at its cap. `need_load` is false when the
+    /// caller is about to overwrite the whole chunk.
+    fn slot_for_chunk(&mut self, chunk: usize, width: usize, need_load: bool) -> usize {
+        self.tick += 1;
+        if let Some(slot) = self.chunk_slot[chunk] {
+            let slot = slot as usize;
+            self.slots[slot].last_use = self.tick;
+            return slot;
+        }
+        let chunk_floats = self.rows_per_chunk * width;
+        let slot = if self.slots.len() < self.cap {
+            // arena growth: counted once per slot, never again
+            self.slots.push(Slot {
+                data: vec![0.0; chunk_floats],
+                chunk: usize::MAX,
+                dirty: false,
+                last_use: 0,
+            });
+            if self.byte_buf.is_empty() {
+                self.byte_buf = vec![0u8; chunk_floats * 8];
+            }
+            self.resident_bytes = (self.slots.len() * chunk_floats * 8 + self.byte_buf.len()) as u64;
+            self.peak_resident_bytes = self.peak_resident_bytes.max(self.resident_bytes);
+            self.slots.len() - 1
+        } else {
+            let victim = self
+                .slots
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, s)| s.last_use)
+                .map(|(i, _)| i)
+                .expect("spill arena has at least two slots");
+            let old_chunk = self.slots[victim].chunk;
+            if old_chunk != usize::MAX {
+                if self.slots[victim].dirty {
+                    self.write_chunk(victim, old_chunk);
+                }
+                self.chunk_slot[old_chunk] = None;
+            }
+            victim
+        };
+        self.slots[slot].chunk = chunk;
+        self.slots[slot].dirty = false;
+        self.slots[slot].last_use = self.tick;
+        self.chunk_slot[chunk] = Some(slot as u32);
+        if need_load && self.on_disk[chunk] {
+            self.read_chunk(slot, chunk);
+        } else {
+            self.slots[slot].data.fill(0.0);
+        }
+        slot
+    }
+
+    fn write_chunk(&mut self, slot: usize, chunk: usize) {
+        let data = &self.slots[slot].data;
+        for (i, v) in data.iter().enumerate() {
+            self.byte_buf[i * 8..(i + 1) * 8].copy_from_slice(&v.to_le_bytes());
+        }
+        let offset = (chunk * self.byte_buf.len()) as u64;
+        self.file
+            .seek(SeekFrom::Start(offset))
+            .and_then(|_| self.file.write_all(&self.byte_buf))
+            .unwrap_or_else(|e| {
+                panic!("RowStore: spill write to {} failed: {e}", self.path.display())
+            });
+        self.on_disk[chunk] = true;
+    }
+
+    fn read_chunk(&mut self, slot: usize, chunk: usize) {
+        let offset = (chunk * self.byte_buf.len()) as u64;
+        self.file
+            .seek(SeekFrom::Start(offset))
+            .and_then(|_| self.file.read_exact(&mut self.byte_buf))
+            .unwrap_or_else(|e| {
+                panic!("RowStore: spill read from {} failed: {e}", self.path.display())
+            });
+        let mut eight = [0u8; 8];
+        for (i, v) in self.slots[slot].data.iter_mut().enumerate() {
+            eight.copy_from_slice(&self.byte_buf[i * 8..(i + 1) * 8]);
+            *v = f64::from_le_bytes(eight);
+        }
+    }
+}
+
+impl Drop for Spill {
+    fn drop(&mut self) {
+        // scratch, not durability — recovery comes from the journal
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("molers-rowstore-{}-{name}", std::process::id()));
+        let _ = std::fs::create_dir_all(&d);
+        d
+    }
+
+    /// Deterministic pseudo-random fill so spill/ram equivalence covers
+    /// non-trivial patterns without an RNG dependency.
+    fn v(row: usize, col: usize) -> f64 {
+        ((row * 31 + col * 7 + 1) as f64).sin() * 1e3
+    }
+
+    #[test]
+    fn spill_round_trips_like_ram() {
+        let dir = tmp_dir("roundtrip");
+        let width = 3;
+        let rows = 257; // many chunks of 16, plus a partial tail
+        let mut ram = RowStore::ram(width);
+        // budget of 2 chunks forces constant eviction traffic
+        let mut spill = RowStore::spilled(width, &dir, 2 * 16 * width as u64 * 8, 16).unwrap();
+        ram.grow_rows(rows);
+        spill.grow_rows(rows);
+        assert!(spill.is_spilled() && !ram.is_spilled());
+
+        // interleaved writes, deliberately out of order and chunk-straddling
+        let mut buf = Vec::new();
+        for start in [200, 0, 96, 15, 250, 48] {
+            let n = (rows - start).min(23);
+            buf.clear();
+            for r in start..start + n {
+                for c in 0..width {
+                    buf.push(v(r, c));
+                }
+            }
+            ram.write_rows(start, &buf);
+            spill.write_rows(start, &buf);
+        }
+
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for (lo, hi) in [(0, rows), (10, 20), (90, 130), (255, 257), (5, 5)] {
+            ram.copy_rows(lo, hi, &mut a);
+            spill.copy_rows(lo, hi, &mut b);
+            assert_eq!(a, b, "rows {lo}..{hi} must match the ram backing");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resident_bytes_stay_under_the_budget() {
+        let dir = tmp_dir("budget");
+        let (width, rpc) = (4, 8);
+        let chunk_bytes = (rpc * width * 8) as u64;
+        let budget = 3 * chunk_bytes;
+        let mut s = RowStore::spilled(width, &dir, budget, rpc).unwrap();
+        s.grow_rows(40 * rpc);
+        let mut buf = vec![1.5; rpc * width];
+        for chunk in 0..40 {
+            s.write_rows(chunk * rpc, &buf);
+        }
+        for chunk in (0..40).rev() {
+            s.copy_rows(chunk * rpc, chunk * rpc + 1, &mut buf);
+            assert_eq!(buf[0], 1.5);
+        }
+        // arena = cap slots + one chunk-sized byte buffer
+        assert!(s.peak_resident_bytes() <= budget + chunk_bytes);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn clear_and_regrow_keeps_the_arena() {
+        let dir = tmp_dir("reuse");
+        let mut s = RowStore::spilled(2, &dir, 4 * 8 * 2 * 8, 8).unwrap();
+        s.grow_rows(64);
+        let mut buf = vec![2.0; 8 * 2];
+        for chunk in 0..8 {
+            s.write_rows(chunk * 8, &buf);
+        }
+        let cap = s.capacity_floats();
+        assert!(cap > 0);
+        s.clear();
+        assert!(s.is_empty());
+        s.grow_rows(64);
+        // rows grown after clear read back as zeros, like Vec::resize
+        s.copy_rows(30, 34, &mut buf);
+        assert!(buf.iter().all(|&x| x == 0.0));
+        for chunk in 0..8 {
+            s.write_rows(chunk * 8, &[3.0; 16]);
+        }
+        assert_eq!(s.capacity_floats(), cap, "clear+regrow must not grow the arena");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn drop_removes_the_spill_file() {
+        let dir = tmp_dir("drop");
+        let path = {
+            let mut s = RowStore::spilled(1, &dir, 1024, 4).unwrap();
+            s.grow_rows(64);
+            s.write_rows(0, &[1.0; 64]);
+            // force a page-out so the file definitely exists with content
+            let mut buf = Vec::new();
+            s.copy_rows(60, 64, &mut buf);
+            match &s.backing {
+                Backing::Spill(sp) => sp.path.clone(),
+                Backing::Ram(_) => unreachable!(),
+            }
+        };
+        assert!(!path.exists(), "spill scratch must be unlinked on drop");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn zero_width_spill_degrades_to_ram() {
+        let dir = tmp_dir("zerow");
+        let mut s = RowStore::spilled(0, &dir, 1024, 4).unwrap();
+        assert!(!s.is_spilled());
+        s.grow_rows(5);
+        assert_eq!(s.len(), 5);
+        let mut out = vec![9.0];
+        s.copy_rows(0, 5, &mut out);
+        assert!(out.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    #[should_panic(expected = "contiguous slice access")]
+    fn contiguous_access_panics_on_spill() {
+        let dir = tmp_dir("panic");
+        let mut s = RowStore::spilled(1, &dir, 1024, 4).unwrap();
+        s.grow_rows(1);
+        let _ = s.data();
+    }
+}

@@ -15,6 +15,7 @@
 //! Sobol) clamp the floating-point mapping so a value can never round up
 //! onto `hi`.
 
+use std::ops::Range;
 use std::sync::Arc;
 
 use crate::core::{Context, Val};
@@ -56,6 +57,34 @@ pub trait Sampling: Send + Sync {
         let _ = (out, rng);
         Err(Error::InvalidWorkflow(format!(
             "sampling `{}` has no columnar path",
+            self.name()
+        )))
+    }
+
+    /// Whether [`Sampling::sample_into_block`] is implemented — true for
+    /// samplings whose row `i` is a pure function of `i` (Sobol's
+    /// gray-code state is reconstructible at any index, a factorial grid
+    /// is a mixed-radix decode), false for sequential-RNG designs (LHS,
+    /// uniform) that only exist as a whole.
+    fn supports_blocks(&self) -> bool {
+        false
+    }
+
+    /// Block-ranged columnar path (§Out-of-core): append rows
+    /// `rows.start..rows.end` *of the full design* to `out`, bit-identical
+    /// to the same rows of one whole-design [`Sampling::sample_into`]
+    /// call. Because `row_seed` is position-pure too, a streaming sweep
+    /// can regenerate any window of a 10M-row design without ever
+    /// materialising it.
+    fn sample_into_block(
+        &self,
+        out: &mut SampleMatrix,
+        rows: Range<usize>,
+        rng: &mut Rng,
+    ) -> Result<()> {
+        let _ = (out, rows, rng);
+        Err(Error::InvalidWorkflow(format!(
+            "sampling `{}` has no block-ranged path",
             self.name()
         )))
     }
@@ -196,7 +225,23 @@ impl Sampling for FullFactorial {
         Some(self.size())
     }
 
-    fn sample_into(&self, out: &mut SampleMatrix, _rng: &mut Rng) -> Result<()> {
+    fn sample_into(&self, out: &mut SampleMatrix, rng: &mut Rng) -> Result<()> {
+        self.sample_into_block(out, 0..self.size(), rng)
+    }
+
+    fn supports_blocks(&self) -> bool {
+        true
+    }
+
+    /// Row `r` of a factorial grid is a mixed-radix decode of `r` — any
+    /// block of the design regenerates independently, bit-identical to the
+    /// whole-design path (which is this method over `0..size()`).
+    fn sample_into_block(
+        &self,
+        out: &mut SampleMatrix,
+        rows: Range<usize>,
+        _rng: &mut Rng,
+    ) -> Result<()> {
         out.check_columns_iter(
             self.factors.iter().map(|f| (f.name.as_str(), ColumnKind::F64)),
             self.name(),
@@ -206,9 +251,18 @@ impl Sampling for FullFactorial {
         counts.clear();
         counts.extend(self.factors.iter().map(Factor::level_count));
         let total = counts.iter().fold(1usize, |acc, &c| acc.saturating_mul(c));
-        let start = out.grow_rows(total);
-        for r in 0..total {
-            let row = out.row_mut(start + r);
+        if rows.end > total {
+            out.idx_scratch = counts;
+            return Err(Error::InvalidWorkflow(format!(
+                "block {}..{} out of range: `{}` design has {total} rows",
+                rows.start,
+                rows.end,
+                self.name()
+            )));
+        }
+        let start = out.grow_rows(rows.len());
+        for (w, r) in rows.enumerate() {
+            let row = out.row_mut(start + w);
             // mixed-radix decode, last factor least significant (fastest)
             let mut rem = r;
             for d in (0..self.factors.len()).rev() {
@@ -438,18 +492,55 @@ impl Sampling for SobolSampling {
         Some(self.n)
     }
 
-    fn sample_into(&self, out: &mut SampleMatrix, _rng: &mut Rng) -> Result<()> {
+    fn sample_into(&self, out: &mut SampleMatrix, rng: &mut Rng) -> Result<()> {
+        self.sample_into_block(out, 0..self.n, rng)
+    }
+
+    fn supports_blocks(&self) -> bool {
+        true
+    }
+
+    /// Sobol state at index `i` is the XOR of direction vectors `v[k]`
+    /// over the set bits `k` of `gray(i) = i ^ (i >> 1)` — so any block
+    /// seeks to its first row in O(dim · 32) and then gray-steps, emitting
+    /// exactly the rows the whole-design path (this method over `0..n`)
+    /// would.
+    fn sample_into_block(
+        &self,
+        out: &mut SampleMatrix,
+        rows: Range<usize>,
+        _rng: &mut Rng,
+    ) -> Result<()> {
         out.check_columns_iter(
             self.dims.iter().map(|(n, _, _)| (n.as_str(), ColumnKind::F64)),
             self.name(),
         )?;
-        let start = out.grow_rows(self.n);
+        if rows.end > self.n {
+            return Err(Error::InvalidWorkflow(format!(
+                "block {}..{} out of range: `{}` design has {} rows",
+                rows.start,
+                rows.end,
+                self.name(),
+                self.n
+            )));
+        }
+        let start = out.grow_rows(rows.len());
         let mut state = std::mem::take(&mut out.u64_scratch);
         state.clear();
         state.resize(self.dims.len(), 0);
         const SCALE: f64 = 1.0 / (1u64 << SOBOL_BITS) as f64;
-        for i in 0..self.n {
-            if i > 0 {
+        let first = rows.start;
+        // seek: fold in v[k] for every set bit k of gray(first)
+        let g = (first as u64) ^ ((first as u64) >> 1);
+        for k in 0..SOBOL_BITS {
+            if (g >> k) & 1 == 1 {
+                for (x, v) in state.iter_mut().zip(&self.directions) {
+                    *x ^= u64::from(v[k]);
+                }
+            }
+        }
+        for (w, i) in rows.enumerate() {
+            if i > first {
                 // Gray-code step: flip direction vector c, where c is the
                 // index of the lowest set bit of i (= the first zero bit
                 // of i-1, per Joe–Kuo)
@@ -458,7 +549,7 @@ impl Sampling for SobolSampling {
                     *x ^= u64::from(v[c]);
                 }
             }
-            let row = out.row_mut(start + i);
+            let row = out.row_mut(start + w);
             for (d, (_, lo, hi)) in self.dims.iter().enumerate() {
                 row[d] = unit_to_range(state[d] as f64 * SCALE, *lo, *hi);
             }
@@ -826,6 +917,64 @@ mod tests {
         s.sample_into(&mut a, &mut Rng::new(1)).unwrap();
         s.sample_into(&mut b, &mut Rng::new(999)).unwrap();
         assert_eq!(a.data(), b.data(), "Sobol designs depend only on (dims, n)");
+    }
+
+    #[test]
+    fn sobol_blocks_match_the_whole_design() {
+        // the block seek (XOR of v[k] over gray(first)'s set bits) must be
+        // bit-identical to gray-stepping from the origin
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let z = val_f64("z");
+        let s = SobolSampling::new(&[(&x, 0.0, 1.0), (&y, -3.0, 5.0), (&z, 10.0, 11.0)], 100);
+        assert!(s.supports_blocks());
+        let mut whole = SampleMatrix::new(s.columns());
+        s.sample_into(&mut whole, &mut Rng::new(0)).unwrap();
+        let mut rng = Rng::new(7);
+        for (lo, hi) in [(0, 1), (1, 7), (7, 64), (63, 65), (64, 100), (99, 100), (42, 42)] {
+            let mut block = SampleMatrix::new(s.columns());
+            s.sample_into_block(&mut block, lo..hi, &mut rng).unwrap();
+            assert_eq!(block.len(), hi - lo);
+            assert_eq!(
+                block.data(),
+                whole.rows_slice(lo, hi),
+                "block {lo}..{hi} diverged from the whole design"
+            );
+        }
+        assert!(s.sample_into_block(&mut SampleMatrix::new(s.columns()), 90..101, &mut rng).is_err());
+    }
+
+    #[test]
+    fn factorial_blocks_match_the_whole_design() {
+        let x = val_f64("x");
+        let y = val_f64("y");
+        let s = FullFactorial::new(vec![
+            Factor::new(&x, 0.0, 1.0, 0.25),
+            Factor::new(&y, 0.0, 6.0, 1.0),
+        ]);
+        assert!(s.supports_blocks());
+        let n = s.size();
+        assert_eq!(n, 35);
+        let mut whole = SampleMatrix::new(s.columns());
+        s.sample_into(&mut whole, &mut Rng::new(0)).unwrap();
+        let mut rng = Rng::new(8);
+        for (lo, hi) in [(0, 5), (5, 6), (6, 20), (20, 35), (34, 35)] {
+            let mut block = SampleMatrix::new(s.columns());
+            s.sample_into_block(&mut block, lo..hi, &mut rng).unwrap();
+            assert_eq!(block.data(), whole.rows_slice(lo, hi), "block {lo}..{hi}");
+        }
+        assert!(s.sample_into_block(&mut SampleMatrix::new(s.columns()), 30..36, &mut rng).is_err());
+    }
+
+    #[test]
+    fn sequential_samplings_refuse_the_block_path() {
+        let x = val_f64("x");
+        let lhs = LhsSampling::new(&[(&x, 0.0, 1.0)], 8);
+        assert!(!lhs.supports_blocks());
+        let mut m = SampleMatrix::new(lhs.columns());
+        let err = lhs.sample_into_block(&mut m, 0..4, &mut Rng::new(0));
+        assert!(err.is_err(), "LHS designs only exist as a whole");
+        assert!(!UniformSampling::new(&x, 0.0, 1.0, 4).supports_blocks());
     }
 
     #[test]

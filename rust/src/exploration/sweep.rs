@@ -26,8 +26,22 @@
 //!   NaN/null objectives, and the sweep carries on to a `degraded` (not
 //!   failed) outcome. On resume, degraded rows stay NaN unless
 //!   [`Sweep::retry_degraded`] (`--retry-degraded`) re-opens them.
+//!
+//! §Out-of-core: with [`Sweep::mem_budget`]/[`Sweep::spill_dir`]
+//! (`--mem-budget`/`--spill-dir`) the sweep runs a **bounded-window
+//! streaming loop** instead of materialising the design. The sampling
+//! must support [`Sampling::sample_into_block`] (Sobol, factorial): each
+//! chunk's design rows are regenerated on demand into a recycled window
+//! matrix, completed objectives land in a chunk-paged spilled
+//! [`RowStore`] whose resident set is capped by the budget, and the
+//! in-order drain regenerates each block once more when the row cursor
+//! reaches it — so a 10M-row campaign holds O(budget) resident bytes, and
+//! every invariant above (byte-identical resume, position-pure seeds,
+//! chunking independence) holds unchanged because both modes write the
+//! same journal records and the same result file.
 
 use std::collections::VecDeque;
+use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -39,6 +53,7 @@ use crate::environment::{Environment, Job, JobHandle};
 use crate::error::{Error, Result};
 use crate::evolution::evaluator::{Evaluator, RowsView};
 use crate::exploration::matrix::SampleMatrix;
+use crate::exploration::rowstore::RowStore;
 use crate::exploration::sampling::Sampling;
 use crate::util::json::Json;
 use crate::util::rng::{splitmix64, Rng};
@@ -58,10 +73,16 @@ pub fn row_seed(seed: u64, row: usize) -> u32 {
 }
 
 /// Outcome of a sweep.
+///
+/// In streaming (out-of-core) mode the result set is never held: `design`
+/// is an empty matrix (columns only) and `objectives` is empty — the
+/// result file written through the [`RowWriter`] is the product, and the
+/// counters/`peak_resident_bytes` summarise the run.
 pub struct SweepResult {
-    /// The (regenerated) design.
+    /// The (regenerated) design; columns-only in streaming mode.
     pub design: SampleMatrix,
-    /// Row-major objective matrix, `design.len() × n_obj`.
+    /// Row-major objective matrix, `design.len() × n_obj` (empty in
+    /// streaming mode).
     pub objectives: Vec<f64>,
     /// Rows evaluated by this run.
     pub evaluated: usize,
@@ -75,11 +96,18 @@ pub struct SweepResult {
     pub degraded: Vec<usize>,
     /// Latest virtual completion across checkpointed and fresh blocks.
     pub virtual_makespan: f64,
+    /// High-water mark of resident row-storage bytes (design + objectives
+    /// in the default mode; spilled-store arena + window matrices in
+    /// streaming mode).
+    pub peak_resident_bytes: u64,
+    /// Total design rows — equals `design.len()` in the default mode, and
+    /// carries the count in streaming mode where the design is not held.
+    total_rows: usize,
 }
 
 impl SweepResult {
     pub fn rows(&self) -> usize {
-        self.design.len()
+        self.total_rows
     }
 
     /// `"complete"` when every row has real objectives, `"degraded"` when
@@ -111,7 +139,12 @@ pub struct Sweep {
     degraded_ok: bool,
     retry_degraded: bool,
     progress: Option<ProgressFn>,
+    mem_budget: Option<u64>,
+    spill_dir: Option<PathBuf>,
 }
+
+/// Default resident budget when only `--spill-dir` is given: 256 MiB.
+const DEFAULT_MEM_BUDGET: u64 = 256 << 20;
 
 impl Sweep {
     pub fn new(
@@ -131,6 +164,8 @@ impl Sweep {
             degraded_ok: false,
             retry_degraded: false,
             progress: None,
+            mem_budget: None,
+            spill_dir: None,
         }
     }
 
@@ -189,6 +224,24 @@ impl Sweep {
         self
     }
 
+    /// Cap resident row storage at `bytes` (`--mem-budget`), switching the
+    /// sweep into the bounded-window streaming mode (see the module docs).
+    /// `None` leaves the default fully-materialised mode unless
+    /// [`Sweep::spill_dir`] is set.
+    pub fn mem_budget(mut self, bytes: Option<u64>) -> Self {
+        self.mem_budget = bytes;
+        self
+    }
+
+    /// Directory for the objective store's spill file (`--spill-dir`);
+    /// setting it switches the sweep into streaming mode (with the
+    /// default 256 MiB budget unless [`Sweep::mem_budget`] tightens it).
+    /// `None` with a budget set spills under the system temp dir.
+    pub fn spill_dir(mut self, dir: Option<PathBuf>) -> Self {
+        self.spill_dir = dir;
+        self
+    }
+
     /// Run the whole design on `env`.
     pub fn run(&self, env: &dyn Environment, seed: u64) -> Result<SweepResult> {
         self.run_resumable(env, seed, None)
@@ -220,6 +273,9 @@ impl Sweep {
                 "sweep needs a columnar sampling; `{}` is context-only",
                 self.sampling.name()
             )));
+        }
+        if self.mem_budget.is_some() || self.spill_dir.is_some() {
+            return self.run_streaming(env, seed, resume, n_obj);
         }
 
         // the design regenerates deterministically from (sampling, seed)
@@ -497,6 +553,9 @@ impl Sweep {
             .enumerate()
             .filter_map(|(r, &d)| d.then_some(r))
             .collect();
+        let peak_resident_bytes =
+            (design.peak_resident_bytes()).max((design.len() * dim * 8) as u64)
+                + (objectives.capacity() * 8) as u64;
         Ok(SweepResult {
             design,
             objectives,
@@ -505,6 +564,319 @@ impl Sweep {
             resumed_degraded,
             degraded: degraded_rows,
             virtual_makespan: clock,
+            peak_resident_bytes,
+            total_rows: n,
+        })
+    }
+
+    /// §Out-of-core bounded-window streaming loop: same contract as the
+    /// default path in [`Sweep::run_resumable`] — same journal records,
+    /// same byte-identical result file — but the design is regenerated
+    /// block by block ([`Sampling::sample_into_block`]) and completed
+    /// objectives land in a chunk-paged spilled [`RowStore`], so resident
+    /// row storage stays bounded by the `--mem-budget` regardless of `n`.
+    fn run_streaming(
+        &self,
+        env: &dyn Environment,
+        seed: u64,
+        resume: Option<&[SweepEvent]>,
+        n_obj: usize,
+    ) -> Result<SweepResult> {
+        if !self.sampling.supports_blocks() {
+            return Err(Error::Config(format!(
+                "--mem-budget/--spill-dir need a block-capable sampling \
+                 (sobol, factorial); `{}` only exists as a whole design",
+                self.sampling.name()
+            )));
+        }
+        let n = self.sampling.size_hint().ok_or_else(|| {
+            Error::Config(format!(
+                "--mem-budget/--spill-dir need a sampling with a known \
+                 size; `{}` reports none",
+                self.sampling.name()
+            ))
+        })?;
+        if n == 0 {
+            return Err(Error::InvalidWorkflow(format!(
+                "sampling `{}` produced no samples",
+                self.sampling.name()
+            )));
+        }
+        let columns = self.sampling.columns();
+        let dim = columns.len();
+        let mem_budget = self.mem_budget.unwrap_or(DEFAULT_MEM_BUDGET);
+        let tmp_dir;
+        let spill_dir = match &self.spill_dir {
+            Some(d) => d.as_path(),
+            None => {
+                tmp_dir = std::env::temp_dir();
+                tmp_dir.as_path()
+            }
+        };
+
+        let mut st = StreamState {
+            sampling: self.sampling.as_ref(),
+            writer: self.writer.as_deref(),
+            objectives: RowStore::spilled(n_obj, spill_dir, mem_budget, self.chunk)?,
+            done: BitVec::new(n),
+            degraded: BitVec::new(n),
+            cursor: 0,
+            n,
+            chunk: self.chunk,
+            drain_window: SampleMatrix::new(columns),
+            drain_lo: usize::MAX,
+            obj_buf: Vec::new(),
+            row_buf: Vec::with_capacity(dim + n_obj),
+            flat_buf: Vec::new(),
+            rng: Rng::new(seed),
+        };
+        st.objectives.grow_rows(n);
+        let nan_row = vec![f64::NAN; n_obj];
+        let mut clock = 0.0f64;
+
+        // restore journaled events in write order — identical semantics to
+        // the default path, writing through the paged store
+        if let Some(events) = resume {
+            for ev in events {
+                match ev {
+                    SweepEvent::Block(b) => {
+                        st.flat_buf.clear();
+                        for (k, row_objs) in b.objectives.iter().enumerate() {
+                            let r = b.first_row + k;
+                            if r >= n || row_objs.len() != n_obj {
+                                return Err(Error::InvalidWorkflow(format!(
+                                    "journal block (row {r}, {} objectives) does not \
+                                     fit this design ({n} rows, {n_obj} objectives) — \
+                                     was the journal written by a different sweep?",
+                                    row_objs.len()
+                                )));
+                            }
+                            st.flat_buf.extend_from_slice(row_objs);
+                        }
+                        st.objectives.write_rows(b.first_row, &st.flat_buf);
+                        for k in 0..b.objectives.len() {
+                            st.done.set(b.first_row + k);
+                            st.degraded.unset(b.first_row + k);
+                        }
+                        clock = clock.max(b.clock);
+                    }
+                    SweepEvent::Degraded(d) => {
+                        if self.retry_degraded {
+                            continue; // re-open the rows for evaluation
+                        }
+                        for &r in &d.rows {
+                            if r >= n {
+                                return Err(Error::InvalidWorkflow(format!(
+                                    "journal degraded row {r} does not fit this \
+                                     design ({n} rows) — was the journal written by \
+                                     a different sweep?"
+                                )));
+                            }
+                            st.objectives.write_rows(r, &nan_row);
+                            st.done.set(r);
+                            st.degraded.set(r);
+                        }
+                        clock = clock.max(d.clock);
+                    }
+                }
+            }
+        }
+        let resumed_degraded = st.degraded.count();
+        let resumed = st.done.count() - resumed_degraded;
+        let mut done_rows = st.done.count();
+        if let Some(p) = &self.progress {
+            p(done_rows as u64, n as u64);
+        }
+
+        if let Some(j) = &self.journal {
+            let mut fields = vec![
+                ("sampling", Json::Str(self.sampling.name().into())),
+                ("seed_exact", Json::Str(seed.to_string())),
+                ("n", Json::Num(n as f64)),
+                ("chunk", Json::Num(self.chunk as f64)),
+                ("resumed_rows", Json::Num(resumed as f64)),
+                ("resumed_degraded", Json::Num(resumed_degraded as f64)),
+            ];
+            fields.extend(self.meta.iter().map(|(k, v)| (k.as_str(), v.clone())));
+            j.append(&journal::run_start(
+                if resume.is_some() { "explore-resume" } else { "explore" },
+                seed,
+                fields,
+            ))?;
+        }
+        if let Some(w) = &self.writer {
+            if w.columns().len() != dim + n_obj {
+                return Err(Error::InvalidWorkflow(format!(
+                    "result writer has {} columns, sweep produces {} (design) + \
+                     {n_obj} (objectives)",
+                    w.columns().len(),
+                    dim
+                )));
+            }
+        }
+        st.drain()?;
+
+        // chunk grid over the not-yet-done rows
+        let mut pending: VecDeque<(usize, usize)> = VecDeque::new();
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + self.chunk).min(n);
+            if (lo..hi).any(|r| !st.done.get(r)) {
+                pending.push_back((lo, hi));
+            }
+            lo = hi;
+        }
+
+        // the bounded window: in-flight chunks hold owned genome +
+        // objective copies, so their count is capped by the budget too
+        let bytes_per_block = (self.chunk * (dim + n_obj) * 8).max(1);
+        let window_blocks = (mem_budget as usize / bytes_per_block)
+            .clamp(2, self.max_in_flight.max(2));
+
+        type Slot = Arc<Mutex<Option<Vec<f64>>>>;
+        let mut in_flight: Vec<(usize, usize, Slot, JobHandle)> = Vec::new();
+        let mut evaluated = 0usize;
+        let cost = self.evaluator.nominal_cost_s();
+        let mut sub_window = SampleMatrix::new(self.sampling.columns());
+        let mut sub_rng = Rng::new(seed);
+
+        while !pending.is_empty() || !in_flight.is_empty() {
+            while in_flight.len() < window_blocks {
+                let Some((lo, hi)) = pending.pop_front() else { break };
+                let rows_n = hi - lo;
+                sub_window.clear();
+                self.sampling
+                    .sample_into_block(&mut sub_window, lo..hi, &mut sub_rng)?;
+                let chunk_genomes = sub_window.data().to_vec();
+                let chunk_seeds: Vec<u32> = (lo..hi).map(|r| row_seed(seed, r)).collect();
+                let evaluator = Arc::clone(&self.evaluator);
+                let slot: Slot = Arc::new(Mutex::new(None));
+                let out_slot = Arc::clone(&slot);
+                let task = ClosureTask::new("explore", move |_ctx: &Context| {
+                    let mut objs = vec![0.0; rows_n * n_obj];
+                    evaluator.evaluate_rows(
+                        RowsView::new(&chunk_genomes, dim),
+                        &chunk_seeds,
+                        &mut objs,
+                    )?;
+                    *out_slot.lock().unwrap() = Some(objs);
+                    Ok(Context::new())
+                })
+                .cost(cost * rows_n as f64);
+                let handle = env.submit(Job::new(Arc::new(task), Context::new()));
+                in_flight.push((lo, hi, slot, handle));
+            }
+
+            let mut progressed = false;
+            let mut idx = 0;
+            while idx < in_flight.len() {
+                match in_flight[idx].3.try_wait() {
+                    None => {
+                        idx += 1;
+                        continue;
+                    }
+                    Some(Err(e)) => {
+                        if !self.degraded_ok {
+                            return Err(e);
+                        }
+                        progressed = true;
+                        let (lo, hi, _slot, _) = in_flight.swap_remove(idx);
+                        let mut failed_rows = Vec::new();
+                        for r in lo..hi {
+                            if !st.done.get(r) {
+                                st.objectives.write_rows(r, &nan_row);
+                                st.done.set(r);
+                                st.degraded.set(r);
+                                failed_rows.push(r);
+                            }
+                        }
+                        if let Some(j) = &self.journal {
+                            if !failed_rows.is_empty() {
+                                j.append(&journal::degraded_rows_record(
+                                    &failed_rows,
+                                    clock,
+                                    &e.to_string(),
+                                ))?;
+                            }
+                        }
+                        done_rows += failed_rows.len();
+                        if let Some(p) = &self.progress {
+                            p(done_rows as u64, n as u64);
+                        }
+                        st.drain()?;
+                    }
+                    Some(Ok((_ctx, report))) => {
+                        progressed = true;
+                        let (lo, hi, slot, _) = in_flight.swap_remove(idx);
+                        let objs = slot.lock().unwrap().take().ok_or_else(|| {
+                            Error::Evolution("explore chunk produced no results".into())
+                        })?;
+                        // store + journal one segment per contiguous
+                        // non-degraded run (restored-degraded rows keep
+                        // their NaN placeholder)
+                        let mut start = lo;
+                        for r in lo..=hi {
+                            if r == hi || st.degraded.get(r) {
+                                if r > start {
+                                    let seg =
+                                        &objs[(start - lo) * n_obj..(r - lo) * n_obj];
+                                    st.objectives.write_rows(start, seg);
+                                    if let Some(j) = &self.journal {
+                                        j.append(&journal::sample_block_record(
+                                            start,
+                                            n_obj,
+                                            seg,
+                                            report.virtual_end,
+                                        ))?;
+                                    }
+                                }
+                                start = r + 1;
+                            }
+                        }
+                        let mut newly = 0usize;
+                        for r in lo..hi {
+                            if !st.degraded.get(r) && !st.done.get(r) {
+                                st.done.set(r);
+                                evaluated += 1;
+                                newly += 1;
+                            }
+                        }
+                        done_rows += newly;
+                        if let Some(p) = &self.progress {
+                            p(done_rows as u64, n as u64);
+                        }
+                        clock = clock.max(report.virtual_end);
+                        st.drain()?;
+                    }
+                }
+            }
+            if !progressed && !in_flight.is_empty() {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+
+        debug_assert_eq!(st.cursor, n, "all rows drained");
+        if let Some(w) = &self.writer {
+            w.flush()?;
+        }
+        if let Some(j) = &self.journal {
+            j.append(&journal::env_stats_record(env.name(), &env.stats()))?;
+            j.append(&journal::run_end(evaluated as u64, clock))?;
+        }
+        let degraded_rows: Vec<usize> =
+            (0..n).filter(|&r| st.degraded.get(r)).collect();
+        let peak_resident_bytes = st.objectives.peak_resident_bytes()
+            + ((sub_window.capacity_floats() + st.drain_window.capacity_floats()) * 8) as u64;
+        Ok(SweepResult {
+            design: SampleMatrix::new(self.sampling.columns()),
+            objectives: Vec::new(),
+            evaluated,
+            resumed,
+            resumed_degraded,
+            degraded: degraded_rows,
+            virtual_makespan: clock,
+            peak_resident_bytes,
+            total_rows: n,
         })
     }
 
@@ -532,6 +904,111 @@ impl Sweep {
             row_buf.extend_from_slice(&objectives[r * n_obj..(r + 1) * n_obj]);
             w.append_row(row_buf)?;
             *cursor += 1;
+            wrote = true;
+        }
+        if wrote {
+            w.flush()?;
+        }
+        Ok(())
+    }
+}
+
+/// Minimal bit vector for the streaming sweep's per-row done/degraded
+/// flags — one bit per row, so a 10M-row campaign spends ~2.5 MB on
+/// bookkeeping instead of two 10 MB `Vec<bool>`s.
+struct BitVec {
+    words: Vec<u64>,
+    ones: usize,
+}
+
+impl BitVec {
+    fn new(n: usize) -> Self {
+        BitVec { words: vec![0; n.div_ceil(64)], ones: 0 }
+    }
+
+    fn get(&self, i: usize) -> bool {
+        (self.words[i / 64] & (1u64 << (i % 64))) != 0
+    }
+
+    fn set(&mut self, i: usize) {
+        let w = &mut self.words[i / 64];
+        let m = 1u64 << (i % 64);
+        if *w & m == 0 {
+            *w |= m;
+            self.ones += 1;
+        }
+    }
+
+    fn unset(&mut self, i: usize) {
+        let w = &mut self.words[i / 64];
+        let m = 1u64 << (i % 64);
+        if *w & m != 0 {
+            *w &= !m;
+            self.ones -= 1;
+        }
+    }
+
+    fn count(&self) -> usize {
+        self.ones
+    }
+}
+
+/// Mutable state of one streaming sweep: the spilled objective store, the
+/// per-row flags, and the in-order drain cursor with its recycled window.
+///
+/// The drain regenerates each block's design at most once per visit (the
+/// window is keyed by block start), so steady-state draining costs one
+/// `sample_into_block` per block plus paged reads from the objective
+/// store — never a whole-design materialisation.
+struct StreamState<'a> {
+    sampling: &'a dyn Sampling,
+    writer: Option<&'a RowWriter>,
+    objectives: RowStore,
+    done: BitVec,
+    degraded: BitVec,
+    cursor: usize,
+    n: usize,
+    chunk: usize,
+    drain_window: SampleMatrix,
+    /// First row resident in `drain_window`; `usize::MAX` = nothing cached.
+    drain_lo: usize,
+    obj_buf: Vec<f64>,
+    row_buf: Vec<f64>,
+    flat_buf: Vec<f64>,
+    rng: Rng,
+}
+
+impl StreamState<'_> {
+    /// Advance the in-order cursor over done rows, regenerating each
+    /// drained block's design once and appending design + objective rows
+    /// to the writer. Without a writer this only advances the cursor.
+    fn drain(&mut self) -> Result<()> {
+        let Some(w) = self.writer else {
+            while self.cursor < self.n && self.done.get(self.cursor) {
+                self.cursor += 1;
+            }
+            return Ok(());
+        };
+        let mut wrote = false;
+        while self.cursor < self.n && self.done.get(self.cursor) {
+            let r = self.cursor;
+            let blk_lo = r - r % self.chunk;
+            let blk_hi = (blk_lo + self.chunk).min(self.n);
+            if self.drain_lo != blk_lo {
+                self.drain_window.clear();
+                self.sampling.sample_into_block(
+                    &mut self.drain_window,
+                    blk_lo..blk_hi,
+                    &mut self.rng,
+                )?;
+                self.drain_lo = blk_lo;
+            }
+            self.objectives.copy_rows(r, r + 1, &mut self.obj_buf);
+            self.row_buf.clear();
+            self.row_buf.extend_from_slice(self.drain_window.row(r - blk_lo));
+            self.row_buf.extend_from_slice(&self.obj_buf);
+            w.append_row(&self.row_buf)?;
+            self.cursor += 1;
             wrote = true;
         }
         if wrote {
@@ -804,5 +1281,114 @@ mod tests {
         let b = make().run(&env, 3).unwrap();
         assert_eq!(a.design.data(), b.design.data());
         assert_eq!(a.objectives, b.objectives);
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "molers-sweep-stream-{}-{name}",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn streaming_sweep_writes_a_byte_identical_result_file() {
+        use crate::dsl::hook::TableFormat;
+        let env = LocalEnvironment::new(2);
+        let x = val_f64("x0");
+        let y = val_f64("x1");
+        let sampling = || -> Arc<dyn Sampling> {
+            Arc::new(SobolSampling::new(&[(&x, 0.0, 1.0), (&y, 0.0, 1.0)], 103))
+        };
+        let cols = ["x0", "x1", "f1", "f2"];
+
+        let plain_out = tmp("plain.csv");
+        let plain_writer =
+            Arc::new(RowWriter::create(&plain_out, TableFormat::Csv, &cols).unwrap());
+        let plain = Sweep::new(sampling(), Arc::new(Zdt1Evaluator { dim: 2 }), &["f1", "f2"])
+            .chunk(16)
+            .writer(Arc::clone(&plain_writer))
+            .run(&env, 11)
+            .unwrap();
+
+        // a budget of one chunk of objectives: everything pages through the
+        // spill file, yet the result file must not change by one byte
+        let spill_dir = tmp("spill");
+        let stream_out = tmp("stream.csv");
+        let stream_writer =
+            Arc::new(RowWriter::create(&stream_out, TableFormat::Csv, &cols).unwrap());
+        let streamed = Sweep::new(sampling(), Arc::new(Zdt1Evaluator { dim: 2 }), &["f1", "f2"])
+            .chunk(16)
+            .writer(Arc::clone(&stream_writer))
+            .mem_budget(Some(16 * 2 * 8))
+            .spill_dir(Some(spill_dir.clone()))
+            .run(&env, 11)
+            .unwrap();
+        assert_eq!(streamed.rows(), 103);
+        assert_eq!(streamed.evaluated, 103);
+        assert_eq!(streamed.outcome(), plain.outcome());
+        assert!(streamed.peak_resident_bytes > 0);
+
+        let plain_bytes = std::fs::read(&plain_out).unwrap();
+        let stream_bytes = std::fs::read(&stream_out).unwrap();
+        assert_eq!(plain_bytes, stream_bytes, "spilled run diverged");
+        let _ = std::fs::remove_file(&plain_out);
+        let _ = std::fs::remove_file(&stream_out);
+        let _ = std::fs::remove_dir_all(&spill_dir);
+    }
+
+    #[test]
+    fn streaming_sweep_resumes_and_degrades_like_the_default_path() {
+        let env = LocalEnvironment::new(2);
+        let x = val_f64("x0");
+        let y = val_f64("x1");
+        let sampling = || -> Arc<dyn Sampling> {
+            Arc::new(SobolSampling::new(&[(&x, 0.0, 1.0), (&y, 0.0, 1.0)], 30))
+        };
+        let spill_dir = tmp("resume-spill");
+        let stream = |events: Option<&[SweepEvent]>, counting: &Arc<CountingEvaluator<Zdt1Evaluator>>| {
+            Sweep::new(sampling(), Arc::clone(counting) as _, &["f1", "f2"])
+                .chunk(10)
+                .mem_budget(Some(10 * 2 * 8))
+                .spill_dir(Some(spill_dir.clone()))
+                .run_resumable(&env, 5, events)
+                .unwrap()
+        };
+
+        let full_eval = Arc::new(CountingEvaluator::new(Zdt1Evaluator { dim: 2 }));
+        let full = Sweep::new(sampling(), Arc::clone(&full_eval) as _, &["f1", "f2"])
+            .chunk(10)
+            .run(&env, 5)
+            .unwrap();
+
+        let events = vec![
+            SweepEvent::Block(SampleBlock {
+                first_row: 0,
+                objectives: (0..10).map(|r| full.objectives_row(r).to_vec()).collect(),
+                clock: 1.0,
+            }),
+            SweepEvent::Degraded(DegradedRows {
+                rows: (10..20).collect(),
+                clock: 2.0,
+            }),
+        ];
+        let counting = Arc::new(CountingEvaluator::new(Zdt1Evaluator { dim: 2 }));
+        let resumed = stream(Some(&events), &counting);
+        assert_eq!(resumed.resumed, 10);
+        assert_eq!(resumed.resumed_degraded, 10);
+        assert_eq!(resumed.evaluated, 10);
+        assert_eq!(counting.count(), 10, "restored rows must not re-evaluate");
+        assert_eq!(resumed.outcome(), "degraded");
+        assert_eq!(resumed.degraded, (10..20).collect::<Vec<_>>());
+
+        // a sequential sampling cannot stream: the error names the limit
+        let err = Sweep::new(lhs3(10), Arc::new(Zdt1Evaluator { dim: 3 }), &["f1", "f2"])
+            .mem_budget(Some(1 << 20))
+            .run(&env, 1)
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("block-capable"),
+            "unexpected error: {err}"
+        );
+        let _ = std::fs::remove_dir_all(&spill_dir);
     }
 }

@@ -67,6 +67,9 @@ fn main() {
                  \x20          --durability always|batch[:N]|os (when checkpoints hit disk)\n\
                  \x20          --degraded-ok (NaN-fill rows whose retry budget is spent)\n\
                  \x20          --retry-degraded (re-evaluate degraded rows on --resume)\n\
+                 \x20          --mem-budget BYTES[k|m|g] (out-of-core: stream the design in\n\
+                 \x20          bounded windows, spill completed rows to disk; sobol/factorial)\n\
+                 \x20          --spill-dir DIR (where spilled row chunks page; default tmp)\n\
                  replicate: --replications 5\n\
                  calibrate: --mu 10 --lambda 10 --generations 100 --replications 5 \
                  --chunk 1\n\
@@ -194,6 +197,21 @@ fn cmd_explore(args: &Args) -> CmdResult {
         o.virtual_makespan,
         throughput_per_hour(o.evaluated as u64, o.virtual_makespan),
     );
+    if o.peak_resident_bytes > 0 {
+        println!(
+            "peak resident rows = {:.1} MiB",
+            o.peak_resident_bytes as f64 / (1024.0 * 1024.0)
+        );
+    }
+    if !o.column_stats.is_empty() {
+        println!("columns (streamed; NaN excluded):");
+        for c in &o.column_stats {
+            println!(
+                "  {:<20} n={:<8} mean={:<12.4} min={:<12.4} max={:<12.4} p50~{:.4}",
+                c.name, c.count, c.mean, c.min, c.max, c.median
+            );
+        }
+    }
     if !o.degraded.is_empty() {
         println!(
             "degraded: {} rows exhausted their retry budget (NaN objectives; \

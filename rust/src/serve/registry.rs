@@ -475,6 +475,16 @@ impl Registry {
             .into_owned()
     }
 
+    /// Where a budgeted explore pages its out-of-core rows. Under the
+    /// state dir (never a client-chosen path), keyed by id like every
+    /// other per-experiment file.
+    pub fn spill_dir(&self, id: u64) -> String {
+        self.dir
+            .join(format!("exp-{id}.spill"))
+            .to_string_lossy()
+            .into_owned()
+    }
+
     /// An existing experiment for `(tenant, dedup_key)`, if any — the
     /// fast path a retried submit takes before admission control.
     pub fn dedup_lookup(&self, tenant: &str, key: &str) -> Option<u64> {

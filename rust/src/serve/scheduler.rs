@@ -56,6 +56,9 @@ const SERVER_OWNED: &[&str] = &[
     "dedup-key",
     "after-seq",
     "retries",
+    // the server owns disk layout: a budgeted explore spills under the
+    // state dir (`--mem-budget` itself stays client-suppliable)
+    "spill-dir",
 ];
 
 /// `molers serve` configuration (parsed from CLI flags).
@@ -499,6 +502,13 @@ impl Server {
         if rec.run == "explore" {
             argv.push("--out".into());
             argv.push(self.registry.csv_path(rec.id));
+            // a budgeted explore pages rows out of core — under the state
+            // dir, never a client-chosen path (`spill-dir` is stripped at
+            // submission)
+            if argv.iter().any(|a| a == "--mem-budget") {
+                argv.push("--spill-dir".into());
+                argv.push(self.registry.spill_dir(rec.id));
+            }
         }
         if matches!(rec.run.as_str(), "explore" | "calibrate" | "island") {
             let jpath = self.registry.journal_path(rec.id);
@@ -593,7 +603,9 @@ fn usable_checkpoint(run: &str, jpath: &str) -> bool {
     if !Path::new(jpath).exists() {
         return false;
     }
-    let Ok(records) = Journal::load(jpath) else {
+    // segmented-aware: a rolled per-run journal replays across segments,
+    // a legacy single-file journal loads unchanged
+    let Ok(records) = Journal::load_segmented(jpath) else {
         return false;
     };
     match run {
@@ -633,6 +645,7 @@ fn summary_json(report: &crate::workflow::ExperimentReport) -> Json {
         ("rows", Json::Num(o.rows as f64)),
         ("resumed", Json::Num(o.resumed as f64)),
         ("degraded_rows", Json::Num(o.degraded.len() as f64)),
+        ("peak_resident_bytes", Json::Num(o.peak_resident_bytes as f64)),
         ("generations", Json::Num(o.generations as f64)),
         ("pareto_points", Json::Num(o.pareto_front.len() as f64)),
         ("virtual_makespan", Json::Num(o.virtual_makespan)),
@@ -688,10 +701,16 @@ mod tests {
                 ("envs".into(), "pbs:64".into()),
                 ("out".into(), "/etc/passwd".into()),
                 ("journal".into(), "steal.jsonl".into()),
+                ("spill-dir".into(), "/etc".into()),
+                ("mem-budget".into(), "1m".into()),
             ],
             &["degraded-ok".into(), "speculate".into()],
         );
-        assert_eq!(argv, vec!["explore", "--n", "100", "--degraded-ok"]);
+        assert_eq!(
+            argv,
+            vec!["explore", "--n", "100", "--mem-budget", "1m", "--degraded-ok"],
+            "spill-dir is server-owned; mem-budget stays client-suppliable"
+        );
     }
 
     #[test]

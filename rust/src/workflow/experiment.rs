@@ -32,7 +32,7 @@ use crate::broker::{
 };
 use crate::core::Context;
 use crate::dsl::builder::PuzzleBuilder;
-use crate::dsl::hook::{Hook, RowWriter, TableFormat};
+use crate::dsl::hook::{ColumnSummary, Hook, RowWriter, TableFormat};
 use crate::dsl::task::Task;
 use crate::environment::cluster::BatchEnvironment;
 use crate::environment::egi::EgiEnvironment;
@@ -147,6 +147,11 @@ pub struct MethodOutcome {
     pub degraded: Vec<usize>,
     /// Result file, when the method streams one.
     pub result_path: Option<String>,
+    /// High-water mark of resident row-storage bytes (sweep methods; 0
+    /// when the method does not track it).
+    pub peak_resident_bytes: u64,
+    /// Per-column streaming summary of the result file (sweep methods).
+    pub column_stats: Vec<ColumnSummary>,
 }
 
 impl MethodOutcome {
@@ -344,10 +349,12 @@ impl Experiment {
             ));
         }
         // resume records load + validate BEFORE any journal/output is
-        // opened for writing
+        // opened for writing (or the segment history rewritten). Both
+        // layouts load: a legacy single-file journal and a rolled
+        // multi-segment one (`exp.jsonl`, `exp.1.jsonl`, ...).
         let records: Option<Vec<Json>> = match &self.resume {
             Some(path) => {
-                let records = Journal::load(path)?;
+                let records = Journal::load_segmented(path)?;
                 self.method.validate_resume(&records, self.seed, path)?;
                 Some(records)
             }
@@ -355,11 +362,21 @@ impl Experiment {
         };
         let journal = match (&self.resume, &self.journal) {
             (Some(path), _) => {
-                Some(Arc::new(Journal::append_to_with(path, self.durability)?))
+                // validated: fold a multi-segment history into one
+                // compacted snapshot, then append (and keep rolling)
+                // from the surviving segment
+                Journal::compact_segments(path)?;
+                Some(Arc::new(Journal::append_to_rolling(
+                    path,
+                    self.durability,
+                    journal::DEFAULT_ROLL_EVERY,
+                )?))
             }
-            (None, Some(path)) => {
-                Some(Arc::new(Journal::create_with(path, self.durability)?))
-            }
+            (None, Some(path)) => Some(Arc::new(Journal::create_rolling(
+                path,
+                self.durability,
+                journal::DEFAULT_ROLL_EVERY,
+            )?)),
             (None, None) => None,
         };
 
@@ -494,6 +511,15 @@ pub struct DirectSampling {
     /// `--retry-degraded`: on resume, re-evaluate restored degraded rows
     /// instead of keeping their NaN placeholders.
     pub retry_degraded: bool,
+    /// `--mem-budget`: cap on resident row-storage bytes. Switches the
+    /// sweep to the out-of-core streaming engine (chunk-paged objective
+    /// spill + block-regenerated design). Deliberately NOT a resume
+    /// knob: budgets bound memory, not the design, so a journal written
+    /// under any budget (or none) resumes under any other.
+    pub mem_budget: Option<u64>,
+    /// `--spill-dir`: where the streaming engine pages objective chunks
+    /// (default: the system temp dir). Implies streaming mode.
+    pub spill_dir: Option<String>,
 }
 
 impl DirectSampling {
@@ -655,9 +681,11 @@ impl ExplorationMethod for DirectSampling {
             &objective_names,
         )
         .chunk(self.chunk)
-        .writer(writer)
+        .writer(Arc::clone(&writer))
         .degraded_ok(self.degraded_ok)
-        .retry_degraded(self.retry_degraded);
+        .retry_degraded(self.retry_degraded)
+        .mem_budget(self.mem_budget)
+        .spill_dir(self.spill_dir.clone().map(std::path::PathBuf::from));
         for (k, v) in &self.meta {
             sweep = sweep.meta(k, v.clone());
         }
@@ -677,6 +705,8 @@ impl ExplorationMethod for DirectSampling {
             resumed: result.resumed,
             degraded: result.degraded,
             result_path: Some(self.out_path.clone()),
+            peak_resident_bytes: result.peak_resident_bytes,
+            column_stats: writer.stats(),
             ..MethodOutcome::default()
         })
     }
@@ -947,6 +977,8 @@ mod tests {
             ],
             degraded_ok: false,
             retry_degraded: false,
+            mem_budget: None,
+            spill_dir: None,
         }
     }
 

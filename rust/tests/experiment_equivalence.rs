@@ -52,6 +52,8 @@ fn explore_method(out: &std::path::Path, n: usize) -> DirectSampling {
         ],
         degraded_ok: false,
         retry_degraded: false,
+        mem_budget: None,
+        spill_dir: None,
     }
 }
 

@@ -1,0 +1,245 @@
+//! Out-of-core explore acceptance (§Exploration at memory-bounded
+//! scale): a sobol sweep under `--mem-budget` streams the design in
+//! bounded windows and spills completed rows to disk, yet must produce a
+//! result file **byte-identical** to the unspilled reference — including
+//! after a `kill -9` at *every* block boundary followed by `--resume`,
+//! and across both journal layouts (legacy single-file and segmented).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use molers::broker::{journal, Durability, Journal};
+use molers::evolution::evaluator::Zdt1Evaluator;
+use molers::exploration::{Sampling, SobolSampling, Sweep};
+use molers::prelude::*;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("molers-ooc-{}-{name}", std::process::id()))
+}
+
+fn sampling(n: usize) -> Arc<dyn Sampling> {
+    let x = val_f64("x0");
+    let y = val_f64("x1");
+    Arc::new(SobolSampling::new(&[(&x, 0.0, 1.0), (&y, 0.0, 1.0)], n))
+}
+
+/// Simulate `kill -9`: keep the journal's `run_start` plus the first
+/// `keep_blocks` checkpoints, then a torn half-written line.
+fn killed_journal(full: &Path, cut: &Path, keep_blocks: usize) -> usize {
+    let text = std::fs::read_to_string(full).unwrap();
+    let mut out = String::new();
+    let mut kept_rows = 0;
+    let mut blocks = 0;
+    for line in text.lines() {
+        let is_block = line.contains("\"kind\":\"sample_block\"");
+        if is_block && blocks >= keep_blocks {
+            continue;
+        }
+        if line.contains("\"kind\":\"env_stats\"") || line.contains("\"kind\":\"run_end\"") {
+            continue;
+        }
+        if is_block {
+            blocks += 1;
+            let rec = molers::util::json::parse(line).unwrap();
+            kept_rows += rec.get("rows").unwrap().as_usize().unwrap();
+        }
+        out.push_str(line);
+        out.push('\n');
+    }
+    out.push_str("{\"kind\":\"sample_blo"); // torn mid-write
+    std::fs::write(cut, out).unwrap();
+    kept_rows
+}
+
+/// One explore run. `budget: Some(_)` takes the streaming out-of-core
+/// path (spilling under `spill`, or the temp dir); `None` is the
+/// in-RAM reference path.
+#[allow(clippy::too_many_arguments)]
+fn run_explore(
+    n: usize,
+    chunk: usize,
+    seed: u64,
+    out_path: &Path,
+    budget: Option<u64>,
+    spill: Option<&Path>,
+    j: Option<Journal>,
+    resume: Option<&[journal::SweepEvent]>,
+) -> molers::exploration::SweepResult {
+    let columns = ["x0", "x1", "f1", "f2"];
+    let writer = Arc::new(RowWriter::create(out_path, TableFormat::Csv, &columns).unwrap());
+    let env = LocalEnvironment::new(2);
+    let mut sweep = Sweep::new(sampling(n), Arc::new(Zdt1Evaluator { dim: 2 }), &["f1", "f2"])
+        .chunk(chunk)
+        .writer(writer)
+        .mem_budget(budget)
+        .spill_dir(spill.map(Path::to_path_buf));
+    if let Some(j) = j {
+        sweep = sweep.journal(Arc::new(j));
+    }
+    sweep.run_resumable(&env, seed, resume).unwrap()
+}
+
+#[test]
+fn spilled_sobol_matches_unspilled_reference_byte_for_byte() {
+    let (n, chunk, seed) = (512, 8, 5u64);
+    let ref_csv = tmp("ref.csv");
+    let ooc_csv = tmp("ooc.csv");
+    let spill = tmp("spill-dir");
+
+    let reference = run_explore(n, chunk, seed, &ref_csv, None, None, None, None);
+    assert_eq!(reference.evaluated, n);
+    let want = std::fs::read(&ref_csv).unwrap();
+
+    // a budget far below the design size: the full objective set is
+    // n * 4 columns * 8 bytes = 16 KiB, the budget allows 1 KiB resident
+    let spilled = run_explore(
+        n,
+        chunk,
+        seed,
+        &ooc_csv,
+        Some(1024),
+        Some(&spill),
+        None,
+        None,
+    );
+    assert_eq!(spilled.evaluated, n);
+    assert_eq!(spilled.rows(), n);
+    assert_eq!(
+        std::fs::read(&ooc_csv).unwrap(),
+        want,
+        "spilled CSV must be byte-identical to the in-RAM reference"
+    );
+
+    // the budget bounds resident storage: the high-water mark stays far
+    // below materialising the design + objectives in RAM
+    let full_bytes = (n * 4 * 8) as u64;
+    assert!(spilled.peak_resident_bytes > 0, "high-water mark recorded");
+    assert!(
+        spilled.peak_resident_bytes < full_bytes / 2,
+        "peak {} must stay well under the {} bytes an in-RAM run holds",
+        spilled.peak_resident_bytes,
+        full_bytes
+    );
+
+    let _ = std::fs::remove_dir_all(&spill);
+    for p in [&ref_csv, &ooc_csv] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn spilled_kill_and_resume_at_every_block_boundary_is_byte_identical() {
+    let (n, chunk, seed) = (48, 8, 7u64);
+    let blocks = n / chunk;
+    let ref_csv = tmp("bnd-ref.csv");
+    let full_j = tmp("bnd-full.jsonl");
+    let full_csv = tmp("bnd-full.csv");
+
+    // unspilled reference bytes, then a full *spilled* run with a legacy
+    // single-file journal to harvest checkpoints from
+    run_explore(n, chunk, seed, &ref_csv, None, None, None, None);
+    let want = std::fs::read(&ref_csv).unwrap();
+    run_explore(
+        n,
+        chunk,
+        seed,
+        &full_csv,
+        Some(512),
+        None,
+        Some(Journal::create(&full_j).unwrap()),
+        None,
+    );
+    assert_eq!(std::fs::read(&full_csv).unwrap(), want);
+
+    for keep in 0..=blocks {
+        let cut_j = tmp(&format!("bnd-cut-{keep}.jsonl"));
+        let cut_csv = tmp(&format!("bnd-cut-{keep}.csv"));
+        let kept_rows = killed_journal(&full_j, &cut_j, keep);
+        let events = journal::sweep_events(&Journal::load(&cut_j).unwrap());
+        assert_eq!(events.len(), keep.min(blocks));
+
+        let resumed = run_explore(
+            n,
+            chunk,
+            seed,
+            &cut_csv,
+            Some(512),
+            None,
+            Some(Journal::append_to(&cut_j).unwrap()),
+            Some(&events),
+        );
+        assert_eq!(resumed.resumed, kept_rows, "kill after {keep} blocks");
+        assert_eq!(resumed.evaluated, n - kept_rows);
+        assert_eq!(
+            std::fs::read(&cut_csv).unwrap(),
+            want,
+            "resume after {keep} checkpointed blocks must be byte-identical"
+        );
+        for p in [&cut_j, &cut_csv] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    for p in [&ref_csv, &full_j, &full_csv] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn spilled_resume_replays_a_segmented_journal() {
+    let (n, chunk, seed) = (30, 6, 11u64);
+    let ref_csv = tmp("seg-ref.csv");
+    let seg_j = tmp("seg.jsonl");
+    let res_csv = tmp("seg-res.csv");
+
+    run_explore(n, chunk, seed, &ref_csv, None, None, None, None);
+    let want = std::fs::read(&ref_csv).unwrap();
+
+    // a rolling journal: run_start + 5 blocks + env_stats + run_end
+    // across roll_every=3 spreads the history over several segments
+    run_explore(
+        n,
+        chunk,
+        seed,
+        &tmp("seg-full.csv"),
+        Some(512),
+        None,
+        Some(Journal::create_rolling(&seg_j, Durability::Os, 3).unwrap()),
+        None,
+    );
+    let segments = journal::journal_segments(&seg_j);
+    assert!(
+        segments.len() > 1,
+        "rolling journal must have split: {segments:?}"
+    );
+
+    // the segmented layout replays as one history: every row restores,
+    // nothing re-evaluates, bytes match the reference
+    let records = Journal::load_segmented(&seg_j).unwrap();
+    let events = journal::sweep_events(&records);
+    let resumed = run_explore(
+        n,
+        chunk,
+        seed,
+        &res_csv,
+        Some(512),
+        None,
+        Some(Journal::append_to_rolling(&seg_j, Durability::Os, 3).unwrap()),
+        Some(&events),
+    );
+    assert_eq!(resumed.resumed, n);
+    assert_eq!(resumed.evaluated, 0);
+    assert_eq!(
+        std::fs::read(&res_csv).unwrap(),
+        want,
+        "segmented resume must be byte-identical"
+    );
+
+    // re-list: the resume run may have rolled further segments
+    for (_, p) in journal::journal_segments(&seg_j) {
+        let _ = std::fs::remove_file(p);
+    }
+    for p in [&ref_csv, &res_csv, &tmp("seg-full.csv")] {
+        let _ = std::fs::remove_file(p);
+    }
+}
