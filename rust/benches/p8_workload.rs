@@ -1,0 +1,136 @@
+//! P8 (§Workload): cost of the synthetic-workload replay harness.
+//!
+//! Two questions, one suite:
+//!
+//! * **`replay_overhead`** — what does pushing a trace through the full
+//!   harness (broker fleet + fair-share gate + lane threads + pacing)
+//!   cost over running the exact same experiments directly, one after
+//!   another? With one lane the harness adds only bookkeeping, so the
+//!   ratio must stay near 1 (committed acceptance: ≤ 1.5× via
+//!   `bench_gate`, loose for noisy CI runners).
+//! * **concurrent replay** — a two-tenant mix over four lanes: every job
+//!   must complete, and the weight-normalised Jain fairness index and
+//!   evaluation throughput are recorded so a scheduling regression shows
+//!   up as a metric cliff rather than a flaky test.
+//!
+//! Knobs: `P8_JOBS` (default 24; CI smoke uses fewer), `P8_ROWS`
+//! (explore design-size ceiling, default 64), `BENCH_OUT_DIR`.
+
+use molers::bench::Bench;
+use molers::cli::{front, Args};
+use molers::workflow::EnvSpec;
+use molers::workload::{replay_local, ReplayConfig, ReplaySummary, TraceSpec};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    // pin the deterministic rust-sim evaluator with cheap evaluations:
+    // the suite measures harness overhead, not model cost
+    std::env::set_var("MOLERS_ARTIFACTS", "/nonexistent-artifacts");
+    std::env::set_var("MOLERS_SIM_TICKS", "5");
+
+    let jobs = env_usize("P8_JOBS", 24);
+    let rows = env_usize("P8_ROWS", 64).max(8);
+    let threads = std::thread::available_parallelism()
+        .map(|t| t.get())
+        .unwrap_or(4);
+    let workdir = std::env::temp_dir().join(format!("molers-p8-{}", std::process::id()));
+    std::fs::create_dir_all(&workdir).expect("bench workdir");
+    println!("{jobs} explore jobs, rows {}..{rows}, {threads} local threads", rows / 2);
+
+    let mut b = Bench::new("p8_workload").warmup(1).samples(3);
+
+    let spec = TraceSpec::parse(&format!(
+        "jobs={jobs};tenants=solo:1;mix=explore:1;rows={}..{rows};chunk=16",
+        rows / 2
+    ))
+    .unwrap();
+    let trace = spec.generate(8);
+
+    // baseline: the very same experiments, run back-to-back with no
+    // harness — same env capacity, same seeds, same result files
+    let direct_s = b
+        .case("direct_sequential", || {
+            for job in &trace.jobs {
+                let mut argv: Vec<String> = vec![job.run.clone()];
+                argv.extend(job.argv.iter().cloned());
+                argv.push("--seed".into());
+                argv.push(job.seed.to_string());
+                let out = workdir.join(format!("direct-{}.csv", job.idx));
+                argv.push("--out".into());
+                argv.push(out.to_string_lossy().into_owned());
+                let args = Args::parse(argv).expect("generated argv parses");
+                front::by_name(&job.run, &args)
+                    .expect("generated job builds")
+                    .env(EnvSpec::Single {
+                        name: "local".into(),
+                        nodes: threads,
+                    })
+                    .quiet()
+                    .run()
+                    .expect("direct run completes");
+                let _ = std::fs::remove_file(out);
+            }
+        })
+        .median_s();
+
+    // the same trace through the full harness, one lane — pure overhead
+    let cfg = ReplayConfig {
+        envs: format!("local:{threads}"),
+        lanes: 1,
+        workdir: workdir.clone(),
+        ..ReplayConfig::default()
+    };
+    let replay_s = b
+        .case("replay_lane1", || {
+            let records = replay_local(&trace, &cfg).expect("replay completes");
+            assert!(records.iter().all(|r| r.ok), "no faults planned");
+        })
+        .median_s();
+    b.metric(
+        "replay_overhead",
+        replay_s / direct_s.max(1e-9),
+        "x direct sequential wall time (acceptance: <= 1.5)",
+    );
+
+    // two tenants over four lanes: completion + fairness + throughput
+    let mspec = TraceSpec::parse(&format!(
+        "jobs={jobs};tenants=alice:2,bob:1;mix=explore:1;rows={}..{rows};chunk=16",
+        rows / 2
+    ))
+    .unwrap();
+    let mtrace = mspec.generate(9);
+    let mcfg = ReplayConfig {
+        envs: format!("local:{threads}"),
+        lanes: 4,
+        workdir: workdir.clone(),
+        ..ReplayConfig::default()
+    };
+    let mut summary: Option<ReplaySummary> = None;
+    b.case("replay_lanes4_two_tenants", || {
+        let records = replay_local(&mtrace, &mcfg).expect("replay completes");
+        summary = Some(ReplaySummary::from_records(&records).with_weights(&mspec.tenants));
+    });
+    let s = summary.expect("case ran");
+    assert_eq!(s.failed, 0, "every job completes");
+    b.metric(
+        "fairness_jain",
+        s.fairness,
+        "weight-normalised Jain index (1.0 = proportional shares)",
+    );
+    b.metric(
+        "throughput_eval_per_s",
+        s.evaluations as f64 / s.makespan_s.max(1e-9),
+        "eval/s",
+    );
+
+    let _ = std::fs::remove_dir_all(&workdir);
+    if let Err(e) = b.write_json() {
+        eprintln!("could not write bench json: {e}");
+    }
+}

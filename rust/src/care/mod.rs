@@ -17,4 +17,4 @@ pub mod reexec;
 
 pub use archive::Archive;
 pub use manifest::{Dependency, DependencyKind, KernelVersion, Manifest};
-pub use reexec::{Packager, ReexecOutcome, RemoteHost};
+pub use reexec::{fleet_success_rate, reexecute, Packager, ReexecOutcome, RemoteHost};

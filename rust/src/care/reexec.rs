@@ -235,6 +235,64 @@ mod tests {
     }
 
     #[test]
+    fn bare_execution_succeeds_on_exact_deployment() {
+        // every dependency deployed at the exact recorded version → native run
+        let host = RemoteHost::new("twin", KernelVersion(3, 10, 0))
+            .with_software("/lib/libc.so.6", "2.17")
+            .with_software("/usr/bin/java", "1.8");
+        assert_eq!(
+            reexecute(&app(), Packager::None, &host),
+            ReexecOutcome::Success { overhead: 0 }
+        );
+    }
+
+    #[test]
+    fn cde_same_or_newer_kernel_pays_ptrace_baseline() {
+        // no emulation needed: ptrace interposition only, never the PRoot cost
+        let same = RemoteHost::new("same", KernelVersion(3, 10, 0));
+        assert_eq!(
+            reexecute(&app(), Packager::Cde, &same),
+            ReexecOutcome::Success { overhead: 2 }
+        );
+        let newer = RemoteHost::new("newer", KernelVersion(4, 4, 0));
+        assert_eq!(
+            reexecute(&app(), Packager::Care, &newer),
+            ReexecOutcome::Success { overhead: 2 }
+        );
+    }
+
+    #[test]
+    fn care_emulation_costs_more_than_interposition() {
+        let old = RemoteHost::new("old", KernelVersion(2, 6, 32));
+        let new = RemoteHost::new("new", KernelVersion(4, 4, 0));
+        let emulated = match reexecute(&app(), Packager::Care, &old) {
+            ReexecOutcome::Success { overhead } => overhead,
+            other => panic!("expected success: {other:?}"),
+        };
+        let native = match reexecute(&app(), Packager::Care, &new) {
+            ReexecOutcome::Success { overhead } => overhead,
+            other => panic!("expected success: {other:?}"),
+        };
+        assert!(emulated > native, "{emulated} vs {native}");
+    }
+
+    #[test]
+    fn data_file_dependency_is_presence_only() {
+        // a DataFile has no version: any deployed copy satisfies bare
+        // execution, absence is still a hard failure
+        let m = Manifest::new("ants", "./ants", KernelVersion(3, 10, 0))
+            .with(Dependency::data("/data/landscape.csv"));
+        let with = RemoteHost::new("h", KernelVersion(3, 10, 0))
+            .with_software("/data/landscape.csv", "whatever");
+        assert!(reexecute(&m, Packager::None, &with).is_success());
+        let without = RemoteHost::new("h", KernelVersion(3, 10, 0));
+        assert!(matches!(
+            reexecute(&m, Packager::None, &without),
+            ReexecOutcome::MissingDependency(p) if p == "/data/landscape.csv"
+        ));
+    }
+
+    #[test]
     fn fleet_ranking_care_ge_cde_gt_none() {
         let m = app();
         let mut rng = crate::util::Rng::new(7);

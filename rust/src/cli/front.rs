@@ -100,8 +100,10 @@ pub fn retry_overrides(args: &Args) -> Result<Option<RetryPolicy>> {
 /// `--envs SPEC` (a brokered fleet, with `--policy` and `--speculate`)
 /// wins over the single-environment `--env NAME`. Retry/deadline flags
 /// are enforced in the broker's waiter state machine, so their presence
-/// promotes a single environment to a one-backend fleet.
-fn env_spec(args: &Args, default_env: &str, nodes: usize) -> Result<EnvSpec> {
+/// promotes a single environment to a one-backend fleet. Public so
+/// `molers reexec` can interpret env-override flags exactly the way the
+/// original subcommand would have.
+pub fn env_spec(args: &Args, default_env: &str, nodes: usize) -> Result<EnvSpec> {
     let retry = retry_overrides(args)?;
     if let Some(spec) = args.get("envs") {
         Ok(EnvSpec::Fleet {
@@ -148,6 +150,49 @@ fn with_common(mut exp: Experiment, args: &Args) -> Result<Experiment> {
         exp = exp.durability(d);
     }
     Ok(exp)
+}
+
+/// Flags that select *where* a run executes or *how* it persists, not
+/// *what* it computes. A provenance manifest strips these from the
+/// recorded argv: the env fleet is recorded structurally (and compat-
+/// checked at reexec time), persistence is deliberately absent (`molers
+/// reexec` must reproduce the result **without** the original journal),
+/// and `--seed`/`--out` are re-injected from dedicated manifest fields.
+const NON_METHOD_KEYS: &[&str] = &[
+    "out",
+    "journal",
+    "resume",
+    "durability",
+    "spill-dir",
+    "seed",
+    "env",
+    "envs",
+    "nodes",
+    "policy",
+    "speculate",
+    "timeout",
+    "max-retries",
+    "backoff",
+];
+
+/// The method-configuration argv a provenance manifest records: every
+/// option and flag of the original invocation except [`NON_METHOD_KEYS`].
+/// Options come out sorted by key (the `Args` iteration order), so the
+/// recorded argv is canonical regardless of the original flag order.
+pub fn provenance_argv(args: &Args) -> Vec<String> {
+    let mut argv = Vec::new();
+    for (k, v) in args.options() {
+        if !NON_METHOD_KEYS.contains(&k) {
+            argv.push(format!("--{k}"));
+            argv.push(v.to_string());
+        }
+    }
+    for f in args.flag_names() {
+        if !NON_METHOD_KEYS.contains(&f.as_str()) {
+            argv.push(format!("--{f}"));
+        }
+    }
+    argv
 }
 
 /// Dispatch a method name to its subcommand front — the server-side
@@ -537,5 +582,24 @@ mod tests {
         }
         // retry flags promote a single env to a one-backend brokered fleet
         assert!(explore(&parse("explore --n 4 --timeout 60")).is_ok());
+    }
+
+    #[test]
+    fn provenance_argv_keeps_method_knobs_drops_env_and_persistence() {
+        let args = parse(
+            "explore --chunk 16 --n 64 --envs local:2 --policy least --seed 9 \
+             --journal j.jsonl --out x.csv --durability always --spill-dir /tmp \
+             --degraded-ok --speculate",
+        );
+        assert_eq!(
+            provenance_argv(&args),
+            vec!["--chunk", "16", "--n", "64", "--degraded-ok"],
+            "env/persistence/seed/out are recorded structurally, not in argv"
+        );
+        // canonical: options sort by key regardless of invocation order
+        assert_eq!(
+            provenance_argv(&parse("explore --n 8 --chunk 4")),
+            provenance_argv(&parse("explore --chunk 4 --n 8")),
+        );
     }
 }

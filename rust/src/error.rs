@@ -66,6 +66,12 @@ pub enum Error {
     /// GridScale command construction/parsing error.
     GridScale(String),
 
+    /// A provenance check failed (`molers reexec`): a tampered result
+    /// file, a digest that does not reproduce, a mismatched env fleet or
+    /// build. `kind` is a stable machine-matchable label; the check must
+    /// fail **loudly and named**, never degrade to a generic error.
+    Provenance { kind: &'static str, message: String },
+
     Json { offset: usize, message: String },
 
     Io(std::io::Error),
@@ -117,6 +123,9 @@ impl fmt::Display for Error {
             Error::Manifest(msg) => write!(f, "artifact manifest error: {msg}"),
             Error::Evolution(msg) => write!(f, "evolution error: {msg}"),
             Error::GridScale(msg) => write!(f, "gridscale error: {msg}"),
+            Error::Provenance { kind, message } => {
+                write!(f, "provenance error [{kind}]: {message}")
+            }
             Error::Json { offset, message } => {
                 write!(f, "json parse error at byte {offset}: {message}")
             }
@@ -186,6 +195,20 @@ mod tests {
             }
             .to_string(),
             "json parse error at byte 3: bad"
+        );
+    }
+
+    #[test]
+    fn provenance_errors_are_named() {
+        let e = Error::Provenance {
+            kind: "result-tampered",
+            message: "digest mismatch on `out.csv`".into(),
+        };
+        // the kind label is part of the display contract: scripts (and
+        // the CI acceptance step) grep for it
+        assert_eq!(
+            e.to_string(),
+            "provenance error [result-tampered]: digest mismatch on `out.csv`"
         );
     }
 

@@ -112,4 +112,4 @@ pub trait Shell: Send + Sync {
 }
 
 pub use adapters::{CondorAdapter, GliteAdapter, OarAdapter, PbsAdapter, SgeAdapter, SlurmAdapter};
-pub use shell::SimShell;
+pub use shell::{tokenize, SimShell};

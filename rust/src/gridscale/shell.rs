@@ -119,11 +119,55 @@ impl SimShell {
     }
 }
 
+/// Split a command line into tokens, honouring single- and double-quoted
+/// segments (`qsub -N 'ants sweep' "/data/run dir/job.sh"`): quotes
+/// group characters — including whitespace — into one token and are not
+/// themselves part of it. An unterminated quote is a hard error, not a
+/// silently truncated command.
+pub fn tokenize(command: &str) -> Result<Vec<String>> {
+    let mut tokens = Vec::new();
+    let mut cur = String::new();
+    let mut in_token = false;
+    let mut quote: Option<char> = None;
+    for c in command.chars() {
+        match quote {
+            Some(q) if c == q => quote = None,
+            Some(_) => cur.push(c),
+            None => match c {
+                '\'' | '"' => {
+                    quote = Some(c);
+                    in_token = true; // `''` is a real (empty) token
+                }
+                c if c.is_whitespace() => {
+                    if in_token {
+                        tokens.push(std::mem::take(&mut cur));
+                        in_token = false;
+                    }
+                }
+                c => {
+                    cur.push(c);
+                    in_token = true;
+                }
+            },
+        }
+    }
+    if quote.is_some() {
+        return Err(Error::GridScale(format!(
+            "unterminated quote in command `{command}`"
+        )));
+    }
+    if in_token {
+        tokens.push(cur);
+    }
+    Ok(tokens)
+}
+
 impl Shell for SimShell {
     fn execute(&self, command: &str) -> Result<CommandOutput> {
-        let tokens: Vec<&str> = command.split_whitespace().collect();
-        let tool = *tokens
+        let tokens = tokenize(command)?;
+        let tool = tokens
             .first()
+            .map(String::as_str)
             .ok_or_else(|| Error::GridScale("empty command".into()))?;
         let ok = |stdout: String| {
             Ok(CommandOutput {
@@ -141,20 +185,20 @@ impl Shell for SimShell {
                 // the job id is the first non-flag argument (skipping flag values)
                 let mut id_arg = None;
                 let mut skip_next = false;
-                for t in &tokens[1..] {
+                for t in tokens[1..].iter().map(String::as_str) {
                     if skip_next {
                         skip_next = false;
                         continue;
                     }
                     if t.starts_with('-') {
-                        skip_next = matches!(*t, "-j" | "-o" | "-format" | "-f");
+                        skip_next = matches!(t, "-j" | "-o" | "-format" | "-f");
                         // `-f <id>` / `-j <id>` carry the id as the value
-                        if matches!(*t, "-j" | "-f") {
+                        if matches!(t, "-j" | "-f") {
                             skip_next = false;
                         }
                         continue;
                     }
-                    id_arg = Some(*t);
+                    id_arg = Some(t);
                     break;
                 }
                 let id_arg =
@@ -168,6 +212,7 @@ impl Shell for SimShell {
                 let id_arg = tokens
                     .iter()
                     .skip(1)
+                    .map(String::as_str)
                     .find(|t| !t.starts_with('-'))
                     .ok_or_else(|| Error::GridScale("no job id".into()))?;
                 let id = self.extract_id(id_arg)?;
@@ -243,5 +288,45 @@ mod tests {
         let sh = shell(Flavor::Slurm);
         let id = submit_via(&SlurmAdapter, &sh);
         sh.execute(&SlurmAdapter.cancel_command(&id)).unwrap();
+    }
+
+    #[test]
+    fn tokenizer_splits_plain_words() {
+        assert_eq!(
+            tokenize("qstat -f 123.headnode").unwrap(),
+            vec!["qstat", "-f", "123.headnode"]
+        );
+        assert_eq!(tokenize("   qdel   7  ").unwrap(), vec!["qdel", "7"]);
+        assert!(tokenize("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn tokenizer_keeps_quoted_whitespace_together() {
+        assert_eq!(
+            tokenize("qsub -N 'ants sweep' \"/data/run dir/job.sh\"").unwrap(),
+            vec!["qsub", "-N", "ants sweep", "/data/run dir/job.sh"]
+        );
+        // quote splices mid-token, opposite quote kind is literal inside
+        assert_eq!(
+            tokenize("echo pre'mid dle'post \"it's\"").unwrap(),
+            vec!["echo", "premid dlepost", "it's"]
+        );
+        // an explicitly empty argument survives as an empty token
+        assert_eq!(tokenize("cmd '' x").unwrap(), vec!["cmd", "", "x"]);
+    }
+
+    #[test]
+    fn tokenizer_rejects_unterminated_quote() {
+        let err = tokenize("qsub '/tmp/my job.sh").unwrap_err();
+        assert!(err.to_string().contains("unterminated quote"));
+    }
+
+    #[test]
+    fn submit_accepts_script_path_with_spaces() {
+        let sh = shell(Flavor::Pbs);
+        let out = sh.execute("qsub '/tmp/my job dir/run me.sh'").unwrap();
+        let id = PbsAdapter.parse_submit(&out.stdout).unwrap();
+        let st = sh.execute(&PbsAdapter.status_command(&id)).unwrap();
+        PbsAdapter.parse_status(&st.stdout).unwrap();
     }
 }

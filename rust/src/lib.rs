@@ -35,11 +35,13 @@ pub mod exec;
 pub mod exploration;
 pub mod gridscale;
 pub mod metrics;
+pub mod provenance;
 pub mod runtime;
 pub mod serve;
 pub mod sim;
 pub mod util;
 pub mod workflow;
+pub mod workload;
 
 pub use error::{Error, Result};
 

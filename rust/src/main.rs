@@ -10,6 +10,9 @@
 //!   envs       show the available environments
 //!   serve      multi-tenant experiment daemon    (JSONL over TCP)
 //!   client     thin client for a running daemon
+//!   reexec     re-run a manifest, assert byte-identical output
+//!   workload   synthetic trace generator + replay harness
+//!   version    crate version + git build hash
 //!
 //! Every run subcommand parses into one MoleDSL v2
 //! `molers::workflow::Experiment` (see `cli::front`) — construction,
@@ -23,6 +26,7 @@ use molers::broker::Broker;
 use molers::cli::{front, Args};
 use molers::evolution::Individual;
 use molers::metrics::throughput_per_hour;
+use molers::provenance;
 use molers::sim::{render, AntParams, AntSim};
 use molers::workflow::ExperimentReport;
 
@@ -34,6 +38,10 @@ fn main() {
             std::process::exit(2);
         }
     };
+    if args.flag("version") {
+        println!("{}", provenance::build_info());
+        return;
+    }
     let result = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("explore") => cmd_explore(&args),
@@ -44,13 +52,19 @@ fn main() {
         Some("envs") => cmd_envs(),
         Some("serve") => cmd_serve(&args),
         Some("client") => cmd_client(&args),
+        Some("reexec") => cmd_reexec(&args),
+        Some("workload") => cmd_workload(&args),
+        Some("version") => {
+            println!("{}", provenance::build_info());
+            Ok(())
+        }
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand `{o}`\n");
             }
             eprintln!(
-                "usage: molers <run|explore|replicate|calibrate|island|render|envs|serve|client> \
-                 [options]\n\
+                "usage: molers <run|explore|replicate|calibrate|island|render|envs|serve|\
+                 client|reexec|workload|version> [options]\n\
                  common options: --seed N --env local|ssh|pbs|slurm|sge|oar|condor|egi\n\
                  \x20          --envs local:8,pbs:32~0.2,egi:biomed:2000 (brokered fleet;\n\
                  \x20          `~p` drops submissions; `~drop=0.2;hang=0.01;delay=0.1:30;\n\
@@ -86,7 +100,17 @@ fn main() {
                  \x20          [--dedup-key K (idempotent retry)] |\n\
                  \x20          list | status --id N | watch --id N [--after-seq S] |\n\
                  \x20          cancel --id N | result --id N | ping [--retries N] |\n\
-                 \x20          shutdown  (--addr HOST:PORT; exit 3 = cannot connect)"
+                 \x20          shutdown  (--addr HOST:PORT; exit 3 = cannot connect)\n\
+                 reexec:    <run.manifest.json> [--out PATH | --keep] [--ignore-compat]\n\
+                 \x20          (re-runs from the manifest alone and asserts a\n\
+                 \x20          byte-identical, digest-verified result file)\n\
+                 workload:  run [--trace SPEC] [--envs local:8 --policy ewma --fault PLAN\n\
+                 \x20          --lanes 4] | replay --addr HOST:PORT [--poll-ms 100]\n\
+                 \x20          common: --seed N --time-scale R (0 = full speed)\n\
+                 \x20          --emit trace.jsonl --out records.jsonl --allow-failures\n\
+                 \x20          SPEC: jobs=40;arrival=poisson:2|uniform:S|burst:N:GAP;\n\
+                 \x20          tenants=alice:3,bob:1;mix=explore:0.8,calibrate:0.2;\n\
+                 \x20          rows=16..256;chunk=16 (see molers::workload docs)"
             );
             std::process::exit(2);
         }
@@ -184,7 +208,8 @@ fn cmd_run(args: &Args) -> CmdResult {
 /// columnar sample wave fanned through the (brokered) environment, with
 /// `sample_block` checkpoints and byte-identical resumable results.
 fn cmd_explore(args: &Args) -> CmdResult {
-    let report = front::explore(args)?.run()?;
+    let exp = front::explore(args)?;
+    let report = exp.run()?;
     let o = &report.outcome;
     println!(
         "\noutcome={} rows={} evaluated={} resumed={} wall={:?}\n\
@@ -223,6 +248,9 @@ fn cmd_explore(args: &Args) -> CmdResult {
     print_env_stats(&report);
     if let Some(path) = &o.result_path {
         println!("results: {path}");
+        if let Some(m) = provenance::emit_for_cli("explore", args, &exp, path)? {
+            println!("manifest: {m}  (verify with `molers reexec {m}`)");
+        }
     }
     Ok(())
 }
@@ -239,7 +267,8 @@ fn cmd_replicate(args: &Args) -> CmdResult {
 
 /// Listing 4: generational NSGA-II with replication-median fitness.
 fn cmd_calibrate(args: &Args) -> CmdResult {
-    let report = front::calibrate(args)?.run()?;
+    let exp = front::calibrate(args)?;
+    let report = exp.run()?;
     let o = &report.outcome;
     print_env_stats(&report);
     println!(
@@ -247,12 +276,14 @@ fn cmd_calibrate(args: &Args) -> CmdResult {
         o.evaluations, o.virtual_makespan
     );
     print_pareto_front(&o.pareto_front, usize::MAX);
+    emit_front_manifest("calibrate", args, &exp, &o.pareto_front)?;
     Ok(())
 }
 
 /// Listing 5 + §4.6: island NSGA-II on the (simulated) EGI.
 fn cmd_island(args: &Args) -> CmdResult {
-    let report = front::island(args)?.run()?;
+    let exp = front::island(args)?;
+    let report = exp.run()?;
     let o = &report.outcome;
     println!(
         "\nislands={} evaluations={} wall={:?}\nvirtual makespan = {:.0} s \
@@ -266,6 +297,27 @@ fn cmd_island(args: &Args) -> CmdResult {
     print_env_stats(&report);
     println!("pareto front ({} points):", o.pareto_front.len());
     print_pareto_front(&o.pareto_front, 10);
+    emit_front_manifest("island", args, &exp, &o.pareto_front)?;
+    Ok(())
+}
+
+/// Evolution methods return their pareto front in memory; `--out` makes
+/// it durable (the deterministic front-file format shared with serve and
+/// reexec) and provenance-complete: the manifest digests that file.
+fn emit_front_manifest(
+    run: &str,
+    args: &Args,
+    exp: &molers::workflow::Experiment,
+    front: &[Individual],
+) -> CmdResult {
+    let Some(path) = args.get("out") else {
+        return Ok(());
+    };
+    provenance::write_front_file(std::path::Path::new(path), front)?;
+    println!("front: {path}");
+    if let Some(m) = provenance::emit_for_cli(run, args, exp, path)? {
+        println!("manifest: {m}  (verify with `molers reexec {m}`)");
+    }
     Ok(())
 }
 
@@ -307,6 +359,31 @@ fn cmd_serve(args: &Args) -> CmdResult {
 /// `molers client`: one request line to a running daemon.
 fn cmd_client(args: &Args) -> CmdResult {
     molers::serve::client::cmd_client(args)?;
+    Ok(())
+}
+
+/// `molers reexec <manifest>`: reproduce a recorded run and assert a
+/// byte-identical result (see `molers::provenance`).
+fn cmd_reexec(args: &Args) -> CmdResult {
+    let manifest = args.positional().first().ok_or(
+        "reexec needs a manifest path: molers reexec <run.manifest.json>",
+    )?;
+    let r = provenance::reexec(manifest, args)?;
+    println!(
+        "reproduced {}: sha256:{} ({} bytes) evaluations={} \
+         packaging-overhead={}% wall={:?}",
+        r.run, r.sha256, r.bytes, r.evaluations, r.overhead_pct, r.wall
+    );
+    if let Some(p) = r.regenerated {
+        println!("regenerated: {}", p.display());
+    }
+    Ok(())
+}
+
+/// `molers workload run|replay`: synthetic traces through the real
+/// execution stack (see `molers::workload`).
+fn cmd_workload(args: &Args) -> CmdResult {
+    molers::workload::cmd(args)?;
     Ok(())
 }
 

@@ -1,0 +1,601 @@
+//! The run-manifest data model: build/env description, file digests,
+//! JSON (de)serialisation and atomic emission. Grammar in [`crate::provenance`].
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::broker::{journal, RetryPolicy};
+use crate::cli::{front, Args};
+use crate::error::{Error, Result};
+use crate::evolution::genome::Individual;
+use crate::util::hash;
+use crate::util::json::{self, Json};
+use crate::workflow::experiment::{EnvSpec, Experiment};
+
+/// `kind` field of every run manifest.
+pub const MANIFEST_KIND: &str = "molers-run-manifest";
+/// Current manifest schema version.
+pub const MANIFEST_VERSION: u64 = 1;
+
+/// The build that produced a result: crate version + baked-in git hash.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BuildInfo {
+    pub crate_version: String,
+    pub git_hash: String,
+}
+
+impl BuildInfo {
+    /// The single-string build id manifests compare (`0.1.0+4f2a91c`).
+    pub fn id(&self) -> String {
+        format!("{}+{}", self.crate_version, self.git_hash)
+    }
+}
+
+impl std::fmt::Display for BuildInfo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "molers {} (git {})", self.crate_version, self.git_hash)
+    }
+}
+
+/// A file pinned by content digest. `path` is a bare file name resolved
+/// relative to the manifest's directory.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FileDigest {
+    pub path: String,
+    pub sha256: String,
+    pub bytes: u64,
+}
+
+impl FileDigest {
+    /// Digest `full_path`, recording only its file name.
+    pub fn of(full_path: &Path) -> Result<FileDigest> {
+        let (sha256, bytes) = hash::sha256_file(full_path).map_err(Error::Io)?;
+        Ok(FileDigest {
+            path: full_path
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_else(|| full_path.to_string_lossy().into_owned()),
+            sha256,
+            bytes,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("path", Json::Str(self.path.clone())),
+            ("sha256", Json::Str(self.sha256.clone())),
+            ("bytes", Json::Num(self.bytes as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<FileDigest> {
+        Ok(FileDigest {
+            path: str_field(v, "path")?,
+            sha256: str_field(v, "sha256")?,
+            bytes: num_field(v, "bytes")? as u64,
+        })
+    }
+}
+
+/// The environment a run executed on, in manifest-recordable form —
+/// everything `molers reexec` needs to rebuild the same [`EnvSpec`],
+/// and everything the compat check compares. [`EnvSpec::Provided`] has
+/// no spec to record, so library runs on hand-built environments emit
+/// no manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EnvDesc {
+    Single {
+        name: String,
+        nodes: usize,
+    },
+    Fleet {
+        spec: String,
+        policy: String,
+        speculate: bool,
+        retry: Option<RetryPolicy>,
+    },
+}
+
+impl EnvDesc {
+    pub fn from_spec(spec: &EnvSpec) -> Option<EnvDesc> {
+        match spec {
+            EnvSpec::Single { name, nodes } => Some(EnvDesc::Single {
+                name: name.clone(),
+                nodes: *nodes,
+            }),
+            EnvSpec::Fleet {
+                spec,
+                policy,
+                speculate,
+                retry,
+            } => Some(EnvDesc::Fleet {
+                spec: spec.clone(),
+                policy: policy.clone(),
+                speculate: *speculate,
+                retry: retry.clone(),
+            }),
+            EnvSpec::Provided(_) => None,
+        }
+    }
+
+    pub fn to_env_spec(&self) -> EnvSpec {
+        match self {
+            EnvDesc::Single { name, nodes } => EnvSpec::Single {
+                name: name.clone(),
+                nodes: *nodes,
+            },
+            EnvDesc::Fleet {
+                spec,
+                policy,
+                speculate,
+                retry,
+            } => EnvSpec::Fleet {
+                spec: spec.clone(),
+                policy: policy.clone(),
+                speculate: *speculate,
+                retry: retry.clone(),
+            },
+        }
+    }
+
+    /// One canonical string per distinct fleet configuration — the
+    /// "version" of the `env:fleet` dependency in the care compat check,
+    /// so any drift (spec, policy, speculation, retry numbers) surfaces
+    /// as a version skew.
+    pub fn canonical(&self) -> String {
+        match self {
+            EnvDesc::Single { name, nodes } => format!("single:{name}:{nodes}"),
+            EnvDesc::Fleet {
+                spec,
+                policy,
+                speculate,
+                retry,
+            } => {
+                let retry = match retry {
+                    None => "default".to_string(),
+                    Some(r) => format!(
+                        "{}:{}:{}:{}:{}:{}",
+                        r.max_attempts,
+                        r.attempt_timeout_s,
+                        r.job_deadline_s,
+                        r.backoff_base_s,
+                        r.backoff_max_s,
+                        r.jitter
+                    ),
+                };
+                format!(
+                    "fleet:{spec}|policy={policy}|speculate={}|retry={retry}",
+                    if *speculate { "on" } else { "off" }
+                )
+            }
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            EnvDesc::Single { name, nodes } => obj(vec![
+                ("mode", Json::Str("single".into())),
+                ("name", Json::Str(name.clone())),
+                ("nodes", Json::Num(*nodes as f64)),
+            ]),
+            EnvDesc::Fleet {
+                spec,
+                policy,
+                speculate,
+                retry,
+            } => obj(vec![
+                ("mode", Json::Str("fleet".into())),
+                ("spec", Json::Str(spec.clone())),
+                ("policy", Json::Str(policy.clone())),
+                ("speculate", Json::Bool(*speculate)),
+                (
+                    "retry",
+                    match retry {
+                        None => Json::Null,
+                        Some(r) => obj(vec![
+                            ("max_attempts", Json::Num(r.max_attempts as f64)),
+                            ("attempt_timeout_s", Json::Num(r.attempt_timeout_s)),
+                            ("job_deadline_s", Json::Num(r.job_deadline_s)),
+                            ("backoff_base_s", Json::Num(r.backoff_base_s)),
+                            ("backoff_max_s", Json::Num(r.backoff_max_s)),
+                            ("jitter", Json::Num(r.jitter)),
+                        ]),
+                    },
+                ),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<EnvDesc> {
+        match str_field(v, "mode")?.as_str() {
+            "single" => Ok(EnvDesc::Single {
+                name: str_field(v, "name")?,
+                nodes: num_field(v, "nodes")? as usize,
+            }),
+            "fleet" => {
+                let retry = match v.get("retry") {
+                    None | Some(Json::Null) => None,
+                    Some(r) => Some(RetryPolicy {
+                        max_attempts: num_field(r, "max_attempts")? as u32,
+                        attempt_timeout_s: num_field(r, "attempt_timeout_s")?,
+                        job_deadline_s: num_field(r, "job_deadline_s")?,
+                        backoff_base_s: num_field(r, "backoff_base_s")?,
+                        backoff_max_s: num_field(r, "backoff_max_s")?,
+                        jitter: num_field(r, "jitter")?,
+                    }),
+                };
+                Ok(EnvDesc::Fleet {
+                    spec: str_field(v, "spec")?,
+                    policy: str_field(v, "policy")?,
+                    speculate: matches!(v.get("speculate"), Some(Json::Bool(true))),
+                    retry,
+                })
+            }
+            other => Err(malformed(format!("unknown env mode `{other}`"))),
+        }
+    }
+}
+
+/// One complete run manifest — see the grammar in [`crate::provenance`].
+#[derive(Debug, Clone)]
+pub struct RunManifest {
+    pub run: String,
+    /// Method-configuration argv (env/persistence/seed/out stripped).
+    pub argv: Vec<String>,
+    pub seed: u64,
+    pub build: BuildInfo,
+    /// Kernel release of the recording host.
+    pub host_kernel: String,
+    /// `none` | `cde` | `care` — how the reexec compat check models
+    /// dependency shipping. Emitted manifests record `none` (exact-match
+    /// provenance); `cde`/`care` exercise the kernel rule in tests.
+    pub packager: String,
+    pub env: EnvDesc,
+    pub result: FileDigest,
+    pub journal: Vec<FileDigest>,
+}
+
+impl RunManifest {
+    /// Digest the result file (and any journal segments) and assemble a
+    /// manifest for the current build on the current host.
+    pub fn describe(
+        run: &str,
+        argv: Vec<String>,
+        seed: u64,
+        env: EnvDesc,
+        result_path: &str,
+        journal_base: Option<&str>,
+    ) -> Result<RunManifest> {
+        let result = FileDigest::of(Path::new(result_path))?;
+        let mut journal_digests = Vec::new();
+        if let Some(base) = journal_base {
+            for (_, seg) in journal::journal_segments(Path::new(base)) {
+                journal_digests.push(FileDigest::of(&seg)?);
+            }
+        }
+        Ok(RunManifest {
+            run: run.to_string(),
+            argv,
+            seed,
+            build: super::build_info(),
+            host_kernel: super::host_kernel(),
+            packager: "none".to_string(),
+            env,
+            result,
+            journal: journal_digests,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("kind", Json::Str(MANIFEST_KIND.into())),
+            ("version", Json::Num(MANIFEST_VERSION as f64)),
+            ("run", Json::Str(self.run.clone())),
+            (
+                "argv",
+                Json::Arr(self.argv.iter().cloned().map(Json::Str).collect()),
+            ),
+            // decimal string: a u64 seed does not survive an f64 Num
+            ("seed_exact", Json::Str(self.seed.to_string())),
+            (
+                "build",
+                obj(vec![
+                    ("crate_version", Json::Str(self.build.crate_version.clone())),
+                    ("git_hash", Json::Str(self.build.git_hash.clone())),
+                ]),
+            ),
+            ("host_kernel", Json::Str(self.host_kernel.clone())),
+            ("packager", Json::Str(self.packager.clone())),
+            ("env", self.env.to_json()),
+            ("result", self.result.to_json()),
+            (
+                "journal",
+                Json::Arr(self.journal.iter().map(FileDigest::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<RunManifest> {
+        let kind = str_field(v, "kind")?;
+        if kind != MANIFEST_KIND {
+            return Err(malformed(format!(
+                "kind `{kind}` is not `{MANIFEST_KIND}`"
+            )));
+        }
+        let version = num_field(v, "version")? as u64;
+        if version != MANIFEST_VERSION {
+            return Err(malformed(format!(
+                "manifest version {version} (this build understands {MANIFEST_VERSION})"
+            )));
+        }
+        let argv = v
+            .get("argv")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| malformed("missing `argv` array".into()))?
+            .iter()
+            .map(|a| {
+                a.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| malformed("non-string argv entry".into()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let seed = str_field(v, "seed_exact")?
+            .parse::<u64>()
+            .map_err(|_| malformed("`seed_exact` is not a u64".into()))?;
+        let build_v = v
+            .get("build")
+            .ok_or_else(|| malformed("missing `build`".into()))?;
+        let env_v = v
+            .get("env")
+            .ok_or_else(|| malformed("missing `env`".into()))?;
+        let result_v = v
+            .get("result")
+            .ok_or_else(|| malformed("missing `result`".into()))?;
+        let journal = match v.get("journal") {
+            None => Vec::new(),
+            Some(j) => j
+                .as_arr()
+                .ok_or_else(|| malformed("`journal` is not an array".into()))?
+                .iter()
+                .map(FileDigest::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        };
+        Ok(RunManifest {
+            run: str_field(v, "run")?,
+            argv,
+            seed,
+            build: BuildInfo {
+                crate_version: str_field(build_v, "crate_version")?,
+                git_hash: str_field(build_v, "git_hash")?,
+            },
+            host_kernel: str_field(v, "host_kernel")?,
+            packager: str_field(v, "packager")?,
+            env: EnvDesc::from_json(env_v)?,
+            result: FileDigest::from_json(result_v)?,
+            journal,
+        })
+    }
+
+    /// Load + parse, every failure a named `[manifest-malformed]` error.
+    pub fn load(path: &str) -> Result<RunManifest> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            malformed(format!("cannot read `{path}`: {e}"))
+        })?;
+        let v = json::parse(&text)
+            .map_err(|e| malformed(format!("`{path}`: {e}")))?;
+        RunManifest::from_json(&v)
+    }
+
+    /// Write atomically (temp + fsync + rename): a crash mid-write never
+    /// leaves a half manifest next to a complete result.
+    pub fn write(&self, path: &str) -> Result<()> {
+        let mut text = self.to_json().to_string();
+        text.push('\n');
+        journal::atomic_write(path, text.as_bytes())
+    }
+}
+
+/// Where the CLI puts a run's manifest: next to the result file.
+pub fn manifest_path_for(result_path: &str) -> String {
+    format!("{result_path}.manifest.json")
+}
+
+/// Write the deterministic pareto-front result file evolution methods
+/// advertise under `--out`: one `{"genome":…,"objectives":…}` line per
+/// pareto point, no timestamps or wall times — the digestable artifact
+/// `molers reexec` asserts against. Shared by the CLI fronts and
+/// `molers serve` so both produce byte-identical files for equal fronts.
+pub fn write_front_file(path: &Path, front: &[Individual]) -> Result<()> {
+    let mut out = String::new();
+    for ind in front {
+        let line = obj(vec![
+            (
+                "genome",
+                Json::Arr(ind.genome.iter().map(|&g| Json::Num(g)).collect()),
+            ),
+            (
+                "objectives",
+                Json::Arr(ind.objectives.iter().map(|&o| Json::Num(o)).collect()),
+            ),
+        ]);
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    journal::atomic_write(path, out.as_bytes())
+}
+
+/// Emit the manifest for a CLI run that produced `result_path`: derive
+/// the recorded argv/env/seed from the parsed invocation and the built
+/// experiment, write `<result_path>.manifest.json`, return its path.
+/// Runs on a [`EnvSpec::Provided`] environment have nothing recordable
+/// and return `Ok(None)`.
+pub fn emit_for_cli(
+    run: &str,
+    args: &Args,
+    exp: &Experiment,
+    result_path: &str,
+) -> Result<Option<String>> {
+    let Some(env) = EnvDesc::from_spec(exp.env_spec()) else {
+        return Ok(None);
+    };
+    let argv = front::provenance_argv(args);
+    let journal_base = args.get("resume").or_else(|| args.get("journal"));
+    let m = RunManifest::describe(
+        run,
+        argv,
+        exp.seed_value(),
+        env,
+        result_path,
+        journal_base,
+    )?;
+    let path = manifest_path_for(result_path);
+    m.write(&path)?;
+    Ok(Some(path))
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        fields
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+fn malformed(message: String) -> Error {
+    Error::Provenance {
+        kind: "manifest-malformed",
+        message,
+    }
+}
+
+fn str_field(v: &Json, key: &str) -> Result<String> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| malformed(format!("missing or non-string `{key}`")))
+}
+
+fn num_field(v: &Json, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| malformed(format!("missing or non-numeric `{key}`")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunManifest {
+        RunManifest {
+            run: "explore".into(),
+            argv: vec!["--n".into(), "64".into(), "--chunk".into(), "16".into()],
+            seed: u64::MAX - 7, // exercise the above-2^53 range
+            build: BuildInfo {
+                crate_version: "0.1.0".into(),
+                git_hash: "4f2a91c".into(),
+            },
+            host_kernel: "6.18.5-fc".into(),
+            packager: "none".into(),
+            env: EnvDesc::Fleet {
+                spec: "local:8,pbs:32~drop=0.2".into(),
+                policy: "ewma".into(),
+                speculate: true,
+                retry: Some(RetryPolicy::default()),
+            },
+            result: FileDigest {
+                path: "sweep.csv".into(),
+                sha256: "ab".repeat(32),
+                bytes: 4096,
+            },
+            journal: vec![FileDigest {
+                path: "sweep.jsonl".into(),
+                sha256: "cd".repeat(32),
+                bytes: 512,
+            }],
+        }
+    }
+
+    #[test]
+    fn manifest_json_roundtrips_exactly() {
+        let m = sample();
+        let back = RunManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.run, m.run);
+        assert_eq!(back.argv, m.argv);
+        assert_eq!(back.seed, m.seed, "u64 seed survives via seed_exact string");
+        assert_eq!(back.build, m.build);
+        assert_eq!(back.env, m.env);
+        assert_eq!(back.result, m.result);
+        assert_eq!(back.journal, m.journal);
+        // serialisation is canonical (BTreeMap key order): stable bytes
+        assert_eq!(back.to_json().to_string(), m.to_json().to_string());
+    }
+
+    #[test]
+    fn from_json_names_every_malformation() {
+        for (doc, needle) in [
+            ("{}", "missing or non-string `kind`"),
+            (r#"{"kind":"other"}"#, "is not `molers-run-manifest`"),
+            (
+                r#"{"kind":"molers-run-manifest","version":9}"#,
+                "manifest version 9",
+            ),
+        ] {
+            let err = RunManifest::from_json(&json::parse(doc).unwrap()).unwrap_err();
+            let msg = err.to_string();
+            assert!(
+                msg.starts_with("provenance error [manifest-malformed]"),
+                "{msg}"
+            );
+            assert!(msg.contains(needle), "`{doc}` → {msg}");
+        }
+    }
+
+    #[test]
+    fn env_desc_roundtrips_and_canonicalises() {
+        let single = EnvDesc::Single {
+            name: "pbs".into(),
+            nodes: 32,
+        };
+        assert_eq!(single.canonical(), "single:pbs:32");
+        assert_eq!(EnvDesc::from_json(&single.to_json()).unwrap(), single);
+
+        let fleet = EnvDesc::Fleet {
+            spec: "local:4~0.2".into(),
+            policy: "least".into(),
+            speculate: false,
+            retry: None,
+        };
+        assert_eq!(EnvDesc::from_json(&fleet.to_json()).unwrap(), fleet);
+        // distinct configurations → distinct canonical strings
+        let mut other = fleet.clone();
+        if let EnvDesc::Fleet { retry, .. } = &mut other {
+            *retry = Some(RetryPolicy::default());
+        }
+        assert_ne!(fleet.canonical(), other.canonical());
+        // EnvSpec round-trip preserves the canonical form
+        let back = EnvDesc::from_spec(&fleet.to_env_spec()).unwrap();
+        assert_eq!(back.canonical(), fleet.canonical());
+    }
+
+    #[test]
+    fn front_file_is_deterministic_and_digestable() {
+        let dir = std::env::temp_dir();
+        let p1 = dir.join(format!("molers-front-a-{}.jsonl", std::process::id()));
+        let p2 = dir.join(format!("molers-front-b-{}.jsonl", std::process::id()));
+        let front = vec![Individual::new(vec![1.5, 2.0], vec![0.25, -0.0])];
+        write_front_file(&p1, &front).unwrap();
+        write_front_file(&p2, &front).unwrap();
+        let (d1, _) = hash::sha256_file(&p1).unwrap();
+        let (d2, _) = hash::sha256_file(&p2).unwrap();
+        assert_eq!(d1, d2, "equal fronts digest identically");
+        let text = std::fs::read_to_string(&p1).unwrap();
+        assert_eq!(
+            text,
+            "{\"genome\":[1.5,2],\"objectives\":[0.25,-0]}\n",
+            "no wall times or timestamps in the provenance artifact"
+        );
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p2);
+    }
+}

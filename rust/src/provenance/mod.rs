@@ -1,0 +1,117 @@
+//! Provenance-complete runs: every experiment that produces a result
+//! file also produces a **run manifest** proving where the result came
+//! from, and `molers reexec <manifest>` re-runs the experiment *from the
+//! manifest alone* and asserts byte-identical output (ROADMAP item 5;
+//! the retrospective-provenance queries of arXiv:1311.4610 — "which
+//! configuration produced this file?", "can it be reproduced here?" —
+//! become greppable JSON plus one command).
+//!
+//! # Manifest JSON grammar
+//!
+//! One JSON object, written atomically (temp + fsync + rename) next to
+//! the result file it describes (`<result>.manifest.json` from the CLI,
+//! `exp-N.manifest.json` under a `molers serve` state dir):
+//!
+//! ```json
+//! {
+//!   "kind": "molers-run-manifest",
+//!   "version": 1,
+//!   "run": "explore",
+//!   "argv": ["--chunk", "16", "--n", "64"],
+//!   "seed_exact": "7",
+//!   "build": {"crate_version": "0.1.0", "git_hash": "4f2a91c"},
+//!   "host_kernel": "6.18.5",
+//!   "packager": "none",
+//!   "env": {"mode": "single", "name": "local", "nodes": 8},
+//!   "result": {"path": "sweep.csv", "sha256": "9f86d08…", "bytes": 4096},
+//!   "journal": [{"path": "sweep.jsonl", "sha256": "a665a4…", "bytes": 512}]
+//! }
+//! ```
+//!
+//! * `argv` holds **method configuration only** — environment selection,
+//!   persistence flags, `--seed` and `--out` are stripped (see
+//!   [`crate::cli::front::provenance_argv`]) and recorded structurally,
+//!   so a reexec never touches the original journal or output.
+//! * `seed_exact` is a decimal string: a u64 does not survive a JSON
+//!   `Num` (f64) round-trip above 2⁵³.
+//! * `env` is either `{"mode":"single","name":…,"nodes":N}` or
+//!   `{"mode":"fleet","spec":…,"policy":…,"speculate":bool,"retry":…}`
+//!   where `retry` is `null` (defaults) or the full
+//!   [`RetryPolicy`](crate::broker::RetryPolicy) field set — fault plans
+//!   ride inside `spec` (`local:8,pbs:32~drop=0.2`) exactly as typed.
+//! * `result.path` and `journal[].path` are file names resolved relative
+//!   to the manifest's own directory, so a results directory can be
+//!   archived or moved wholesale.
+//! * `sha256` digests are computed by the dependency-free
+//!   [`crate::util::hash`] implementation (NIST-vector tested).
+//!
+//! # Reexec semantics
+//!
+//! `molers reexec <manifest>` performs, in order:
+//!
+//! 1. **Tamper check** — if the recorded result file still exists, its
+//!    digest must match; otherwise the run fails with the named error
+//!    `provenance error [result-tampered]`.
+//! 2. **Compatibility check** — the env fleet + build recorded in the
+//!    manifest are modelled as a [`care::Manifest`](crate::care::Manifest)
+//!    (the molers build and the fleet spec are "dependencies" of the
+//!    result) and checked against the current host with
+//!    [`care::reexecute`](crate::care::reexecute): a different build is
+//!    `[build-mismatch]` (the silent-error case of §3.1 — same command,
+//!    different binary, different bytes), a different fleet requested via
+//!    override flags is `[env-fleet-mismatch]`, and a `cde`-packaged
+//!    manifest on an older kernel is `[kernel-too-old]`.
+//! 3. **Re-run** — the experiment is rebuilt through the same CLI front
+//!    as the original invocation (`front::by_name`), with the recorded
+//!    env spec and seed, writing to a scratch output path. No journal is
+//!    created or read.
+//! 4. **Digest assertion** — the regenerated file's SHA-256 must equal
+//!    `result.sha256` byte for byte, else `[digest-mismatch]` (the
+//!    regenerated file is kept for forensic diffing).
+//!
+//! All failures are named [`Error::Provenance`](crate::error::Error)
+//! variants — a provenance violation is never a silent success.
+
+mod manifest;
+mod reexec;
+
+pub use manifest::{
+    emit_for_cli, manifest_path_for, write_front_file, BuildInfo, EnvDesc, FileDigest,
+    RunManifest, MANIFEST_KIND, MANIFEST_VERSION,
+};
+pub use reexec::{reexec, ReexecOptions, ReexecReport};
+
+/// Crate version + git hash of the running binary. The git hash is baked
+/// in at compile time via `MOLERS_GIT_HASH` (CI exports it; local builds
+/// without it report `unknown`), so every manifest pins the exact build
+/// that produced its result.
+pub fn build_info() -> BuildInfo {
+    BuildInfo {
+        crate_version: env!("CARGO_PKG_VERSION").to_string(),
+        git_hash: option_env!("MOLERS_GIT_HASH").unwrap_or("unknown").to_string(),
+    }
+}
+
+/// The kernel release of the machine we are running on (records into
+/// manifests; compared by the CDE/CARE kernel rule at reexec time).
+/// `unknown` off Linux — the compat check treats an unparseable kernel
+/// as "skip the kernel axis", never as a spurious failure.
+pub fn host_kernel() -> String {
+    std::fs::read_to_string("/proc/sys/kernel/osrelease")
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|_| "unknown".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_info_is_populated() {
+        let b = build_info();
+        assert!(!b.crate_version.is_empty());
+        assert!(!b.git_hash.is_empty());
+        // the id is what manifests and `molers --version` both print
+        assert_eq!(b.id(), format!("{}+{}", b.crate_version, b.git_hash));
+    }
+}

@@ -1,0 +1,341 @@
+//! `molers reexec <manifest>`: re-run an experiment from its manifest
+//! alone and assert byte-identical output. Semantics in
+//! [`crate::provenance`]; every failure is a named
+//! [`Error::Provenance`] — tampering, fleet drift or a non-reproducing
+//! digest can never look like success.
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use crate::care::{
+    self, Dependency, DependencyKind, KernelVersion, Packager, ReexecOutcome,
+    RemoteHost,
+};
+use crate::cli::{front, Args};
+use crate::error::{Error, Result};
+use crate::util::hash;
+
+use super::manifest::{write_front_file, EnvDesc, RunManifest};
+
+/// How a reexec was asked to behave (all flags of the subcommand).
+#[derive(Default)]
+pub struct ReexecOptions {
+    /// Keep the regenerated file here instead of a scratch path.
+    pub out: Option<String>,
+    /// Keep the scratch file even on success.
+    pub keep: bool,
+    /// Downgrade compat failures to warnings — the digest assertion
+    /// remains the arbiter.
+    pub ignore_compat: bool,
+}
+
+impl ReexecOptions {
+    pub fn from_args(args: &Args) -> ReexecOptions {
+        ReexecOptions {
+            out: args.get("out").map(str::to_string),
+            keep: args.flag("keep"),
+            ignore_compat: args.flag("ignore-compat"),
+        }
+    }
+}
+
+/// What a successful reexec proved.
+pub struct ReexecReport {
+    pub run: String,
+    /// The digest both files share.
+    pub sha256: String,
+    pub bytes: u64,
+    /// Where the regenerated file lives (`None` when it was a scratch
+    /// file removed after the successful comparison).
+    pub regenerated: Option<PathBuf>,
+    /// Care-modelled packaging overhead (percent; 0 for bare reexec).
+    pub overhead_pct: u32,
+    pub evaluations: u64,
+    pub wall: Duration,
+}
+
+/// Re-execute the run described by `manifest_path`. `args` is the full
+/// `reexec` command line: `--out`/`--keep`/`--ignore-compat` plus any
+/// env-override flags, which are *checked* against the manifest (a
+/// different fleet is a named error, not a silent relocation).
+pub fn reexec(manifest_path: &str, args: &Args) -> Result<ReexecReport> {
+    let started = Instant::now();
+    let opts = ReexecOptions::from_args(args);
+    let m = RunManifest::load(manifest_path)?;
+    let dir = Path::new(manifest_path)
+        .parent()
+        .filter(|p| !p.as_os_str().is_empty())
+        .map(Path::to_path_buf)
+        .unwrap_or_else(|| PathBuf::from("."));
+
+    // 1. tamper check — the recorded result, when still present, must
+    //    digest to what the manifest claims
+    let original = dir.join(&m.result.path);
+    if original.exists() {
+        let (hex, bytes) = hash::sha256_file(&original).map_err(Error::Io)?;
+        if hex != m.result.sha256 {
+            return Err(Error::Provenance {
+                kind: "result-tampered",
+                message: format!(
+                    "`{}` digests sha256:{hex} ({bytes} bytes) but its manifest \
+                     records sha256:{} ({} bytes) — the file changed after the run",
+                    original.display(),
+                    m.result.sha256,
+                    m.result.bytes
+                ),
+            });
+        }
+    }
+
+    // 2. env-fleet + build compatibility via the care decision logic
+    let overhead_pct = match compat_check(&m, args) {
+        Ok(o) => o,
+        Err(e) if opts.ignore_compat => {
+            eprintln!("warning: {e} (--ignore-compat: digest assertion decides)");
+            0
+        }
+        Err(e) => return Err(e),
+    };
+
+    // 3. re-run from the manifest alone: recorded argv + seed + env,
+    //    scratch output, no journal
+    let scratch = match &opts.out {
+        Some(p) => PathBuf::from(p),
+        None => std::env::temp_dir().join(format!(
+            "molers-reexec-{}-{}",
+            std::process::id(),
+            m.result.path
+        )),
+    };
+    let _ = std::fs::remove_file(&scratch);
+    let mut argv: Vec<String> = vec![m.run.clone()];
+    argv.extend(m.argv.iter().cloned());
+    argv.push("--seed".into());
+    argv.push(m.seed.to_string());
+    if m.run == "explore" {
+        // the sweep streams its own result file; evolution methods get a
+        // front file written below from the returned pareto front
+        argv.push("--out".into());
+        argv.push(scratch.to_string_lossy().into_owned());
+    }
+    let rerun = Args::parse(argv).map_err(Error::Config)?;
+    let exp = front::by_name(&m.run, &rerun)?
+        .env(m.env.to_env_spec())
+        .quiet();
+    let report = exp.run()?;
+    let regenerated = match &report.outcome.result_path {
+        Some(p) => PathBuf::from(p),
+        None => {
+            write_front_file(&scratch, &report.outcome.pareto_front)?;
+            scratch.clone()
+        }
+    };
+
+    // 4. the digest assertion — byte-identical or a named failure
+    let (hex, bytes) = hash::sha256_file(&regenerated).map_err(Error::Io)?;
+    if hex != m.result.sha256 {
+        return Err(Error::Provenance {
+            kind: "digest-mismatch",
+            message: format!(
+                "reexec of `{manifest_path}` produced sha256:{hex} ({bytes} bytes) \
+                 at `{}`, manifest records sha256:{} ({} bytes) — regenerated file \
+                 kept for diffing",
+                regenerated.display(),
+                m.result.sha256,
+                m.result.bytes
+            ),
+        });
+    }
+    let keep = opts.out.is_some() || opts.keep;
+    if !keep {
+        let _ = std::fs::remove_file(&regenerated);
+    }
+    Ok(ReexecReport {
+        run: m.run,
+        sha256: hex,
+        bytes,
+        regenerated: keep.then_some(regenerated),
+        overhead_pct,
+        evaluations: report.outcome.evaluations,
+        wall: started.elapsed(),
+    })
+}
+
+/// Model the manifest as a [`care::Manifest`] — the molers build and the
+/// env fleet are the "dependencies" of the result — and check it against
+/// the current host with [`care::reexecute`]. Returns the modelled
+/// overhead on success, a named provenance error otherwise.
+fn compat_check(m: &RunManifest, args: &Args) -> Result<u32> {
+    let packager = match m.packager.as_str() {
+        "none" => Packager::None,
+        "cde" => Packager::Cde,
+        "care" => Packager::Care,
+        other => {
+            return Err(Error::Provenance {
+                kind: "manifest-malformed",
+                message: format!("unknown packager `{other}` (none|cde|care)"),
+            })
+        }
+    };
+    // unparseable kernel strings (non-Linux hosts) collapse both sides to
+    // 0.0.0: the kernel axis is skipped, never a spurious failure
+    let (packaged_on, current) = match (
+        KernelVersion::parse(&m.host_kernel),
+        KernelVersion::parse(&super::host_kernel()),
+    ) {
+        (Some(p), Some(c)) => (p, c),
+        _ => (KernelVersion(0, 0, 0), KernelVersion(0, 0, 0)),
+    };
+    let app = care::Manifest::new("molers", format!("molers {}", m.run), packaged_on)
+        .with(Dependency {
+            kind: DependencyKind::Executable,
+            path: "bin:molers".into(),
+            version: Some(m.build.id()),
+        })
+        .with(Dependency {
+            kind: DependencyKind::DataFile,
+            path: "env:fleet".into(),
+            version: Some(m.env.canonical()),
+        });
+    let effective = effective_env(m, args)?;
+    let host = RemoteHost::new("reexec-host", current)
+        .with_software("bin:molers", &super::build_info().id())
+        .with_software("env:fleet", &effective.canonical());
+    match care::reexecute(&app, packager, &host) {
+        ReexecOutcome::Success { overhead } => Ok(overhead),
+        ReexecOutcome::SilentError(msg) if msg.starts_with("bin:molers") => {
+            Err(Error::Provenance {
+                kind: "build-mismatch",
+                message: format!(
+                    "this binary is not the build that produced the result \
+                     ({msg}) — results would not be comparable; rebuild the \
+                     recorded version or pass --ignore-compat"
+                ),
+            })
+        }
+        ReexecOutcome::SilentError(msg) => Err(Error::Provenance {
+            kind: "env-fleet-mismatch",
+            message: format!(
+                "{msg} — reexec runs on the recorded fleet (drop the env \
+                 override flags or pass --ignore-compat)"
+            ),
+        }),
+        ReexecOutcome::MissingDependency(path) => Err(Error::Provenance {
+            kind: "missing-dependency",
+            message: format!("`{path}` is not available on this host"),
+        }),
+        ReexecOutcome::KernelTooOld { host, required } => Err(Error::Provenance {
+            kind: "kernel-too-old",
+            message: format!(
+                "manifest was packaged on kernel {required} without syscall \
+                 emulation; this host runs {host}"
+            ),
+        }),
+    }
+}
+
+/// The fleet this reexec would run on: the manifest's, unless the user
+/// passed env-override flags — those are interpreted exactly as the
+/// original subcommand would have ([`front::env_spec`]) and then
+/// *compared*, not silently applied.
+fn effective_env(m: &RunManifest, args: &Args) -> Result<EnvDesc> {
+    let overridden = ["env", "envs", "nodes", "policy", "timeout", "max-retries", "backoff"]
+        .iter()
+        .any(|k| args.get(k).is_some())
+        || args.flag("speculate");
+    if !overridden {
+        return Ok(m.env.clone());
+    }
+    let (default_env, default_nodes) = match &m.env {
+        EnvDesc::Single { name, nodes } => (name.clone(), *nodes),
+        EnvDesc::Fleet { .. } => ("local".to_string(), 8),
+    };
+    let nodes = args.usize("nodes", default_nodes).map_err(Error::Config)?;
+    let spec = front::env_spec(args, &default_env, nodes)?;
+    EnvDesc::from_spec(&spec).ok_or_else(|| Error::Config(
+        "env override did not resolve to a recordable spec".into(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::provenance::manifest::{BuildInfo, FileDigest};
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    fn manifest(env: EnvDesc) -> RunManifest {
+        RunManifest {
+            run: "explore".into(),
+            argv: vec!["--n".into(), "8".into()],
+            seed: 7,
+            build: crate::provenance::build_info(),
+            host_kernel: crate::provenance::host_kernel(),
+            packager: "none".into(),
+            env,
+            result: FileDigest {
+                path: "x.csv".into(),
+                sha256: "00".repeat(32),
+                bytes: 0,
+            },
+            journal: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn compat_accepts_same_build_same_fleet() {
+        let m = manifest(EnvDesc::Single {
+            name: "local".into(),
+            nodes: 2,
+        });
+        assert_eq!(compat_check(&m, &parse("reexec m.json")).unwrap(), 0);
+        // a redundant override equal to the record is also fine
+        assert!(compat_check(&m, &parse("reexec m.json --env local --nodes 2")).is_ok());
+    }
+
+    #[test]
+    fn env_override_mismatch_is_named() {
+        let m = manifest(EnvDesc::Single {
+            name: "local".into(),
+            nodes: 2,
+        });
+        let err = compat_check(&m, &parse("reexec m.json --envs local:4"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.starts_with("provenance error [env-fleet-mismatch]"), "{err}");
+    }
+
+    #[test]
+    fn build_mismatch_is_named() {
+        let mut m = manifest(EnvDesc::Single {
+            name: "local".into(),
+            nodes: 2,
+        });
+        m.build = BuildInfo {
+            crate_version: "0.0.0-other".into(),
+            git_hash: "deadbee".into(),
+        };
+        let err = compat_check(&m, &parse("reexec m.json")).unwrap_err().to_string();
+        assert!(err.starts_with("provenance error [build-mismatch]"), "{err}");
+    }
+
+    #[test]
+    fn cde_kernel_rule_applies_to_manifests() {
+        // a cde-packaged manifest recorded on a (fictional) newer kernel
+        // must refuse to reexec on this older host — the §3.1 rule
+        let mut m = manifest(EnvDesc::Single {
+            name: "local".into(),
+            nodes: 2,
+        });
+        m.packager = "cde".into();
+        m.host_kernel = "9999.0.0".into();
+        let err = compat_check(&m, &parse("reexec m.json")).unwrap_err().to_string();
+        assert!(err.starts_with("provenance error [kernel-too-old]"), "{err}");
+        // care emulates its way through the same gap
+        m.packager = "care".into();
+        let overhead = compat_check(&m, &parse("reexec m.json")).unwrap();
+        assert!(overhead > 0, "emulation is modelled as non-free");
+    }
+}

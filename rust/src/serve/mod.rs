@@ -91,6 +91,15 @@
 //!                           terminal state that advertises it)
 //! <dir>/exp-N.result.jsonl  terminal summary + pareto points (written
 //!                           atomically)
+//! <dir>/exp-N.front.jsonl   durable pareto front for evolution methods
+//!                           (the deterministic format `molers reexec`
+//!                           digests — no wall times)
+//! <dir>/exp-N.manifest.json provenance manifest (see
+//!                           [`crate::provenance`]), written atomically
+//!                           before the terminal state that advertises
+//!                           it; `status`/`result` responses carry its
+//!                           path as `"manifest"` once present, and
+//!                           `molers reexec <path>` reproduces the run
 //! ```
 //!
 //! Journal appends obey the server's [`Durability`](crate::broker::Durability)

@@ -475,6 +475,24 @@ impl Registry {
             .into_owned()
     }
 
+    /// Provenance manifest written next to the result once the
+    /// experiment reaches `done`/`degraded` (see `crate::provenance`).
+    pub fn manifest_path(&self, id: u64) -> String {
+        self.dir
+            .join(format!("exp-{id}.manifest.json"))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    /// Durable pareto front for evolution methods, in the deterministic
+    /// front-file format shared with the CLI and `molers reexec`.
+    pub fn front_path(&self, id: u64) -> String {
+        self.dir
+            .join(format!("exp-{id}.front.jsonl"))
+            .to_string_lossy()
+            .into_owned()
+    }
+
     /// Where a budgeted explore pages its out-of-core rows. Under the
     /// state dir (never a client-chosen path), keyed by id like every
     /// other per-experiment file.

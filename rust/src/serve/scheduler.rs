@@ -23,6 +23,7 @@ use crate::broker::{journal, policy, Broker, Durability, FairShare, Journal, Ret
 use crate::cli::{front, Args};
 use crate::environment::{EnvStats, Environment};
 use crate::error::{Error, Result};
+use crate::provenance::{self, EnvDesc, RunManifest};
 use crate::serve::protocol::{self, err, obj, ok, Request, DEFAULT_ADDR};
 use crate::serve::registry::{ExpRecord, ExpState, Registry};
 use crate::util::json::Json;
@@ -354,6 +355,11 @@ impl Server {
         if let Some(s) = r.summary {
             fields.push(("summary", s));
         }
+        // provenance: advertised only once the file is durably in place
+        let mpath = self.registry.manifest_path(id);
+        if Path::new(&mpath).exists() {
+            fields.push(("manifest", Json::Str(mpath)));
+        }
         ok(fields)
     }
 
@@ -409,11 +415,18 @@ impl Server {
             self.registry.result_path(id)
         };
         match std::fs::read_to_string(&path) {
-            Ok(content) => ok(vec![
-                ("id", Json::Num(id as f64)),
-                ("path", Json::Str(path)),
-                ("content", Json::Str(content)),
-            ]),
+            Ok(content) => {
+                let mut fields = vec![
+                    ("id", Json::Num(id as f64)),
+                    ("path", Json::Str(path)),
+                    ("content", Json::Str(content)),
+                ];
+                let mpath = self.registry.manifest_path(id);
+                if Path::new(&mpath).exists() {
+                    fields.push(("manifest", Json::Str(mpath)));
+                }
+                ok(fields)
+            }
             Err(e) => err(&format!("result file `{path}` unreadable: {e}")),
         }
     }
@@ -467,6 +480,18 @@ impl Server {
                         id,
                         ExpState::Degraded,
                         Some(format!("result file write failed: {e}")),
+                        Some(summary_json(&report)),
+                    );
+                    return;
+                }
+                // provenance manifest (and the durable pareto front it
+                // digests) land atomically BEFORE the terminal state, so
+                // a `done` status never advertises a missing manifest
+                if let Err(e) = self.write_manifest(&rec, &report) {
+                    let _ = self.registry.finish(
+                        id,
+                        ExpState::Degraded,
+                        Some(format!("manifest write failed: {e}")),
                         Some(summary_json(&report)),
                     );
                     return;
@@ -570,6 +595,52 @@ impl Server {
         // half result file behind a terminal state
         journal::atomic_write(self.registry.result_path(rec.id), out.as_bytes())?;
         Ok(())
+    }
+
+    /// Provenance for a finished experiment: persist the deterministic
+    /// result artifact (evolution methods get `exp-N.front.jsonl`; the
+    /// explore sweep already wrote `exp-N.csv`), digest it together with
+    /// the journal segments, and write `exp-N.manifest.json` atomically.
+    /// `run`/`replicate` have no deterministic result artifact and emit
+    /// no manifest.
+    fn write_manifest(
+        &self,
+        rec: &ExpRecord,
+        report: &crate::workflow::ExperimentReport,
+    ) -> Result<Option<String>> {
+        let result_path = match rec.run.as_str() {
+            "explore" => self.registry.csv_path(rec.id),
+            "calibrate" | "island" => {
+                let p = self.registry.front_path(rec.id);
+                provenance::write_front_file(
+                    Path::new(&p),
+                    &report.outcome.pareto_front,
+                )?;
+                p
+            }
+            _ => return Ok(None),
+        };
+        let args = Args::parse(rec.argv.iter().cloned()).map_err(Error::Config)?;
+        let seed = args.u64("seed", 42).map_err(Error::Config)?;
+        // the server's shared fleet is the recorded environment — exactly
+        // what a reexec must rebuild (speculation is not a serve flag)
+        let env = EnvDesc::Fleet {
+            spec: self.cfg.envs.clone(),
+            policy: self.cfg.policy.clone(),
+            speculate: false,
+            retry: self.cfg.retry.clone(),
+        };
+        let m = RunManifest::describe(
+            &rec.run,
+            front::provenance_argv(&args),
+            seed,
+            env,
+            &result_path,
+            Some(self.registry.journal_path(rec.id)).as_deref(),
+        )?;
+        let path = self.registry.manifest_path(rec.id);
+        m.write(&path)?;
+        Ok(Some(path))
     }
 }
 

@@ -1,9 +1,11 @@
-//! Dependency-free utility substrates: RNG, JSON, statistics.
+//! Dependency-free utility substrates: RNG, JSON, statistics, hashing.
 
+pub mod hash;
 pub mod json;
 pub mod rng;
 pub mod stats;
 
+pub use hash::{sha256_file, sha256_hex, Sha256};
 pub use json::Json;
 pub use rng::Rng;
 pub use stats::Descriptor;

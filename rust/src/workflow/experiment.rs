@@ -287,6 +287,18 @@ impl Experiment {
         self
     }
 
+    /// The resolved environment specification — what a provenance
+    /// manifest records so `molers reexec` can rebuild the same fleet.
+    pub fn env_spec(&self) -> &EnvSpec {
+        &self.env
+    }
+
+    /// The effective seed (`--seed` or the default) — recorded in the
+    /// provenance manifest and re-injected verbatim at reexec time.
+    pub fn seed_value(&self) -> u64 {
+        self.seed
+    }
+
     /// Execute: build the environment, validate + open the journal, run
     /// the method, collect the report.
     pub fn run(&self) -> Result<ExperimentReport> {

@@ -1,0 +1,138 @@
+//! # Synthetic workload generation and replay (`molers workload`)
+//!
+//! The serve daemon, the broker and the fair-share gate are exercised in
+//! production by *mixes* of experiments — many tenants, bursty arrivals,
+//! heavy-tailed sizes — but every test and bench so far drove them with
+//! hand-written job lists. This module closes that gap: a **seeded
+//! generator** of synthetic experiment traces plus two replay harnesses
+//! that push a trace through the real execution stack and score the
+//! outcome (latency distribution, makespan, throughput, Jain fairness).
+//!
+//! ## Trace-spec grammar (`--trace`)
+//!
+//! A spec is `key=value` pairs joined by `;`. Every key is optional;
+//! unknown keys are errors. Defaults in brackets.
+//!
+//! ```text
+//! spec    := entry (';' entry)*
+//! entry   := 'jobs'    '=' INT                       [16]
+//!          | 'arrival' '=' arrival                   [uniform:0]
+//!          | 'tenants' '=' tenant (',' tenant)*      [alice:2,bob:1]
+//!          | 'mix'     '=' method (',' method)*      [explore:1]
+//!          | 'rows'    '=' INT '..' INT              [32..128]
+//!          | 'chunk'   '=' INT                       [16]
+//! arrival := 'uniform' ':' SPACING_S                 fixed spacing
+//!          | 'poisson' ':' RATE_PER_S                exponential gaps
+//!          | 'burst'   ':' SIZE [':' GAP_S]          SIZE at once
+//! tenant  := NAME ':' WEIGHT                         fair-share weight
+//! method  := ('explore'|'calibrate'|'replicate') ':' WEIGHT
+//! ```
+//!
+//! Example: `jobs=40;arrival=poisson:2;tenants=alice:3,bob:1;`
+//! `mix=explore:0.8,calibrate:0.2;rows=16..256;chunk=16`.
+//!
+//! Generation is **deterministic** in `(spec, seed)`: job order, release
+//! times, tenant/method assignment, per-job design sizes (log-uniform
+//! over `rows`) and per-job seeds all derive from one root [`Rng`]
+//! stream, so a trace can be regenerated anywhere from five words of
+//! description. `--emit` writes the trace as JSONL (one job per line,
+//! seeds as exact decimal strings) for archival or external replay.
+//!
+//! ## Replay harnesses
+//!
+//! * `molers workload run` — **in-process**: one brokered fleet
+//!   (`--envs`, `--policy`, optional `--fault` overlay) behind a
+//!   [`FairShare`](crate::broker::FairShare) gate, `--lanes` concurrent
+//!   experiment runners; the serve daemon's execution shape without TCP.
+//! * `molers workload replay --addr HOST:PORT` — **against a live
+//!   daemon**: submits each job under its tenant/weight at its scaled
+//!   release time and polls to terminal states.
+//!
+//! `--time-scale R` maps virtual trace seconds to real seconds (`R`
+//! virtual per real; `0` = as fast as the lanes allow). Both harnesses
+//! produce per-job [`JobRecord`]s (`--out` JSONL) and a
+//! [`ReplaySummary`] scorecard; `benches/p8_workload.rs` tracks the
+//! replay harness's overhead over direct sequential execution.
+//!
+//! [`Rng`]: crate::util::Rng
+
+mod replay;
+mod trace;
+
+pub use replay::{
+    overlay_faults, replay_local, replay_remote, JobRecord, ReplayConfig,
+    ReplaySummary, TenantSummary,
+};
+pub use trace::{Arrival, Trace, TraceJob, TraceSpec};
+
+use std::time::Duration;
+
+use crate::cli::Args;
+use crate::error::{Error, Result};
+
+/// The `molers workload <run|replay>` subcommand: generate the trace,
+/// optionally `--emit` it, replay it, print the scorecard and optionally
+/// `--out` the per-job records.
+pub fn cmd(args: &Args) -> Result<()> {
+    let mode = args.positional().first().map(String::as_str);
+    let spec_text = args.get_or("trace", "");
+    let spec = TraceSpec::parse(spec_text)?;
+    let seed = args.u64("seed", 42).map_err(Error::Config)?;
+    let trace = spec.generate(seed);
+    if let Some(path) = args.get("emit") {
+        std::fs::write(path, trace.to_jsonl()).map_err(Error::Io)?;
+        println!("trace: {} jobs -> {path}", trace.jobs.len());
+    }
+    let time_scale = args.f64("time-scale", 0.0).map_err(Error::Config)?;
+    let records = match mode {
+        Some("run") => {
+            let workdir = std::env::temp_dir()
+                .join(format!("molers-workload-{}", std::process::id()));
+            std::fs::create_dir_all(&workdir).map_err(Error::Io)?;
+            let cfg = ReplayConfig {
+                envs: args.get_or("envs", "local:8").to_string(),
+                policy: args.get_or("policy", "ewma").to_string(),
+                fault: args.get("fault").map(str::to_string),
+                lanes: args.usize("lanes", 4).map_err(Error::Config)?,
+                time_scale,
+                seed,
+                workdir: workdir.clone(),
+                ..ReplayConfig::default()
+            };
+            let records = replay_local(&trace, &cfg);
+            let _ = std::fs::remove_dir_all(&workdir);
+            records?
+        }
+        Some("replay") => {
+            let addr = args.get("addr").ok_or_else(|| {
+                Error::Config("workload replay needs --addr HOST:PORT".into())
+            })?;
+            let poll = args.u64("poll-ms", 100).map_err(Error::Config)?;
+            replay_remote(&trace, addr, time_scale, Duration::from_millis(poll))?
+        }
+        None if args.get("emit").is_some() => return Ok(()),
+        other => {
+            return Err(Error::Config(format!(
+                "workload expects `run` or `replay`{}",
+                other.map(|o| format!(", got `{o}`")).unwrap_or_default()
+            )))
+        }
+    };
+    if let Some(path) = args.get("out") {
+        let mut body = String::new();
+        for r in &records {
+            body.push_str(&r.to_json().to_string());
+            body.push('\n');
+        }
+        std::fs::write(path, body).map_err(Error::Io)?;
+    }
+    let summary = ReplaySummary::from_records(&records).with_weights(&spec.tenants);
+    print!("{summary}");
+    if summary.failed > 0 && !args.flag("allow-failures") {
+        return Err(Error::Config(format!(
+            "{} of {} jobs failed (pass --allow-failures to score anyway)",
+            summary.failed, summary.jobs
+        )));
+    }
+    Ok(())
+}

@@ -1,0 +1,586 @@
+//! Replay a generated [`Trace`] — in-process through a brokered fleet
+//! behind the fair-share gate (`workload run`), or against a live
+//! `molers serve` daemon over TCP (`workload replay`) — and summarise
+//! per-job latency, makespan, throughput and tenant fairness.
+
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::broker::{policy, Broker, FairShare, RetryPolicy};
+use crate::cli::{front, Args};
+use crate::environment::Environment;
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+use super::trace::{Trace, TraceJob};
+
+/// Knobs of an in-process replay.
+pub struct ReplayConfig {
+    /// Fleet spec (`local:8,pbs:32`), optionally overlaid with faults.
+    pub envs: String,
+    pub policy: String,
+    /// Fault plan (`drop=0.1;hang=0.01`) appended to every backend that
+    /// does not already carry one — chaos as an overlay, not a rewrite.
+    pub fault: Option<String>,
+    /// Concurrent experiment lanes (the serve daemon's `max_running`
+    /// analogue).
+    pub lanes: usize,
+    /// Virtual seconds replayed per real second; `0` = ignore release
+    /// times and go as fast as the lanes allow.
+    pub time_scale: f64,
+    /// Broker seed (fault injection and backend simulation).
+    pub seed: u64,
+    /// Retry policy of the brokered fleet (deadlines, backoff) — part of
+    /// the env spec a fault overlay is measured against.
+    pub retry: RetryPolicy,
+    /// Where explore jobs write their (discarded) result files.
+    pub workdir: PathBuf,
+    /// Keep per-job result files instead of deleting them on completion.
+    pub keep: bool,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig {
+            envs: "local:8".into(),
+            policy: "ewma".into(),
+            fault: None,
+            lanes: 4,
+            time_scale: 0.0,
+            seed: 42,
+            retry: RetryPolicy::default(),
+            workdir: std::env::temp_dir(),
+            keep: false,
+        }
+    }
+}
+
+/// Append `fault` to every backend of `spec` that has no `~plan` of its
+/// own. Backends are comma-separated; a plan's own separators (`;`, `:`)
+/// never collide with the backend separator.
+pub fn overlay_faults(spec: &str, fault: Option<&str>) -> String {
+    let Some(fault) = fault.filter(|f| !f.is_empty()) else {
+        return spec.to_string();
+    };
+    spec.split(',')
+        .map(|b| {
+            if b.contains('~') {
+                b.to_string()
+            } else {
+                format!("{b}~{fault}")
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// What happened to one replayed job. Times are real seconds from replay
+/// start; `latency` (sojourn) is `done_s - release_s`.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub idx: usize,
+    pub tenant: String,
+    pub run: String,
+    /// Nominal size from the trace (expected evaluations).
+    pub size: usize,
+    pub release_s: f64,
+    pub start_s: f64,
+    pub done_s: f64,
+    pub evaluations: u64,
+    pub ok: bool,
+    pub error: Option<String>,
+}
+
+impl JobRecord {
+    pub fn latency_s(&self) -> f64 {
+        (self.done_s - self.release_s).max(0.0)
+    }
+
+    /// One `--out` JSONL line.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("idx".to_string(), Json::Num(self.idx as f64));
+        m.insert("tenant".to_string(), Json::Str(self.tenant.clone()));
+        m.insert("run".to_string(), Json::Str(self.run.clone()));
+        m.insert("size".to_string(), Json::Num(self.size as f64));
+        m.insert("release_s".to_string(), Json::Num(self.release_s));
+        m.insert("start_s".to_string(), Json::Num(self.start_s));
+        m.insert("done_s".to_string(), Json::Num(self.done_s));
+        m.insert("latency_s".to_string(), Json::Num(self.latency_s()));
+        m.insert(
+            "evaluations".to_string(),
+            Json::Num(self.evaluations as f64),
+        );
+        m.insert("ok".to_string(), Json::Bool(self.ok));
+        if let Some(e) = &self.error {
+            m.insert("error".to_string(), Json::Str(e.clone()));
+        }
+        Json::Obj(m)
+    }
+}
+
+/// Replay the trace in-process: one brokered fleet + fair-share gate
+/// shared by `lanes` concurrent experiment runners, exactly the serve
+/// daemon's execution shape without the TCP layer. Records come back in
+/// job order.
+pub fn replay_local(trace: &Trace, cfg: &ReplayConfig) -> Result<Vec<JobRecord>> {
+    let pool = Arc::new(crate::exec::ThreadPool::default_size());
+    let spec = overlay_faults(&cfg.envs, cfg.fault.as_deref());
+    let p = policy::by_name(&cfg.policy).ok_or_else(|| {
+        Error::Config(format!(
+            "unknown --policy `{}` (roundrobin|least|ewma)",
+            cfg.policy
+        ))
+    })?;
+    let broker = Arc::new(
+        Broker::spec_builder(&spec, pool, cfg.seed)?
+            .policy(p)
+            .retry(cfg.retry.clone())
+            .build()?,
+    );
+    let slots = broker
+        .backend_snapshots()
+        .iter()
+        .map(|b| b.capacity)
+        .sum::<usize>()
+        .max(1);
+    let fair = FairShare::new(Arc::clone(&broker) as Arc<dyn Environment>, slots);
+
+    let t0 = Instant::now();
+    let next = AtomicUsize::new(0);
+    let records: Mutex<Vec<Option<JobRecord>>> =
+        Mutex::new(vec![None; trace.jobs.len()]);
+    let lanes = cfg.lanes.max(1);
+    std::thread::scope(|s| {
+        for _ in 0..lanes.min(trace.jobs.len().max(1)) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                let Some(job) = trace.jobs.get(i) else { break };
+                // pace the lane to the job's release time; a job whose
+                // release has passed (all lanes busy) starts late — that
+                // queueing delay is exactly what the latency metric sees
+                let release_s = if cfg.time_scale > 0.0 {
+                    job.at_s / cfg.time_scale
+                } else {
+                    0.0
+                };
+                let elapsed = t0.elapsed().as_secs_f64();
+                if release_s > elapsed {
+                    std::thread::sleep(Duration::from_secs_f64(release_s - elapsed));
+                }
+                let rec = run_job(job, &fair, cfg, release_s, &t0);
+                records.lock().unwrap()[i] = Some(rec);
+            });
+        }
+    });
+    Ok(records
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("every lane writes its slot"))
+        .collect())
+}
+
+/// Build and run one trace job through the shared fair-share gate.
+fn run_job(
+    job: &TraceJob,
+    fair: &Arc<FairShare>,
+    cfg: &ReplayConfig,
+    release_s: f64,
+    t0: &Instant,
+) -> JobRecord {
+    let start_s = t0.elapsed().as_secs_f64();
+    let mut argv: Vec<String> = vec![job.run.clone()];
+    argv.extend(job.argv.iter().cloned());
+    argv.push("--seed".into());
+    argv.push(job.seed.to_string());
+    let out = (job.run == "explore").then(|| {
+        let p = cfg.workdir.join(format!("job-{}.csv", job.idx));
+        argv.push("--out".into());
+        argv.push(p.to_string_lossy().into_owned());
+        p
+    });
+    let tenant: Arc<dyn Environment> =
+        Arc::new(fair.tenant(&job.tenant, job.weight));
+    let result = Args::parse(argv)
+        .map_err(Error::Config)
+        .and_then(|a| front::by_name(&job.run, &a))
+        .map(|exp| exp.on(tenant).quiet())
+        .and_then(|exp| exp.run());
+    let done_s = t0.elapsed().as_secs_f64();
+    if let Some(p) = out {
+        if !cfg.keep {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+    let (evaluations, ok, error) = match result {
+        Ok(report) => (report.outcome.evaluations, true, None),
+        Err(e) => (0, false, Some(e.to_string())),
+    };
+    JobRecord {
+        idx: job.idx,
+        tenant: job.tenant.clone(),
+        run: job.run.clone(),
+        size: job.size,
+        release_s,
+        start_s,
+        done_s,
+        evaluations,
+        ok,
+        error,
+    }
+}
+
+/// One-shot request against a serve daemon (`addr` as `host:port`).
+fn request(addr: &str, line: &str) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr).map_err(Error::Io)?;
+    stream
+        .write_all(format!("{line}\n").as_bytes())
+        .map_err(Error::Io)?;
+    let mut reply = String::new();
+    BufReader::new(&mut stream)
+        .read_line(&mut reply)
+        .map_err(Error::Io)?;
+    let v = json::parse(reply.trim()).map_err(|e| {
+        Error::Config(format!("bad response from {addr}: {e}"))
+    })?;
+    if v.get("ok").and_then(Json::as_bool) == Some(true) {
+        Ok(v)
+    } else {
+        Err(Error::Config(format!(
+            "server error: {}",
+            v.get("error").and_then(Json::as_str).unwrap_or("unknown")
+        )))
+    }
+}
+
+/// Replay the trace against a live serve daemon: submit each job at its
+/// (scaled) release time under its tenant/weight, then poll `status`
+/// until every experiment reaches a terminal state. Server-side start
+/// times are not exposed, so `start_s` records the submission instant.
+pub fn replay_remote(
+    trace: &Trace,
+    addr: &str,
+    time_scale: f64,
+    poll: Duration,
+) -> Result<Vec<JobRecord>> {
+    let t0 = Instant::now();
+    let mut pending: Vec<(u64, usize, f64, f64)> = Vec::new(); // (id, idx, release, submit)
+    let mut records: Vec<Option<JobRecord>> = vec![None; trace.jobs.len()];
+    for (i, job) in trace.jobs.iter().enumerate() {
+        let release_s = if time_scale > 0.0 {
+            job.at_s / time_scale
+        } else {
+            0.0
+        };
+        let elapsed = t0.elapsed().as_secs_f64();
+        if release_s > elapsed {
+            std::thread::sleep(Duration::from_secs_f64(release_s - elapsed));
+        }
+        let mut options: Vec<(String, Json)> = job
+            .argv
+            .chunks(2)
+            .filter_map(|kv| match kv {
+                [k, v] => Some((
+                    k.trim_start_matches("--").to_string(),
+                    Json::Str(v.clone()),
+                )),
+                _ => None,
+            })
+            .collect();
+        options.push(("seed".to_string(), Json::Str(job.seed.to_string())));
+        let submit = Json::Obj(
+            [
+                ("cmd".to_string(), Json::Str("submit".into())),
+                ("run".to_string(), Json::Str(job.run.clone())),
+                ("tenant".to_string(), Json::Str(job.tenant.clone())),
+                ("weight".to_string(), Json::Num(job.weight as f64)),
+                (
+                    "options".to_string(),
+                    Json::Obj(options.into_iter().collect()),
+                ),
+                (
+                    "dedup_key".to_string(),
+                    Json::Str(format!("workload-{}-{}", trace.seed, job.idx)),
+                ),
+            ]
+            .into_iter()
+            .collect(),
+        );
+        let reply = request(addr, &submit.to_string())?;
+        let id = reply
+            .get("id")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| Error::Config("submit reply missing `id`".into()))?
+            as u64;
+        pending.push((id, i, release_s, t0.elapsed().as_secs_f64()));
+    }
+
+    // poll round-robin until every submission is terminal
+    while !pending.is_empty() {
+        let mut still = Vec::with_capacity(pending.len());
+        for (id, idx, release_s, submit_s) in pending {
+            let status = request(addr, &format!("{{\"cmd\":\"status\",\"id\":{id}}}"))?;
+            let state = status
+                .get("state")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string();
+            let terminal =
+                matches!(state.as_str(), "done" | "degraded" | "failed" | "cancelled");
+            if !terminal {
+                still.push((id, idx, release_s, submit_s));
+                continue;
+            }
+            let job = &trace.jobs[idx];
+            let evaluations = status
+                .get("summary")
+                .and_then(|s| s.get("evaluations"))
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0) as u64;
+            let ok = matches!(state.as_str(), "done" | "degraded");
+            records[idx] = Some(JobRecord {
+                idx,
+                tenant: job.tenant.clone(),
+                run: job.run.clone(),
+                size: job.size,
+                release_s,
+                start_s: submit_s,
+                done_s: t0.elapsed().as_secs_f64(),
+                evaluations,
+                ok,
+                error: (!ok).then(|| {
+                    status
+                        .get("error")
+                        .and_then(Json::as_str)
+                        .unwrap_or(&state)
+                        .to_string()
+                }),
+            });
+        }
+        pending = still;
+        if !pending.is_empty() {
+            std::thread::sleep(poll);
+        }
+    }
+    Ok(records
+        .into_iter()
+        .map(|r| r.expect("polled to terminal"))
+        .collect())
+}
+
+/// Per-tenant share of a replay.
+#[derive(Debug, Clone)]
+pub struct TenantSummary {
+    pub name: String,
+    pub weight: u64,
+    pub jobs: usize,
+    pub evaluations: u64,
+}
+
+/// The replay scorecard: completion, latency distribution, makespan,
+/// throughput and Jain's fairness index over weight-normalised per-tenant
+/// evaluation throughput (1.0 = perfectly proportional shares).
+#[derive(Debug, Clone)]
+pub struct ReplaySummary {
+    pub jobs: usize,
+    pub ok: usize,
+    pub failed: usize,
+    pub makespan_s: f64,
+    pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p95_latency_s: f64,
+    pub max_latency_s: f64,
+    pub evaluations: u64,
+    pub fairness: f64,
+    pub per_tenant: Vec<TenantSummary>,
+}
+
+impl ReplaySummary {
+    pub fn from_records(records: &[JobRecord]) -> ReplaySummary {
+        let mut latencies: Vec<f64> =
+            records.iter().map(JobRecord::latency_s).collect();
+        latencies.sort_by(|a, b| a.total_cmp(b));
+        let pct = |p: f64| -> f64 {
+            if latencies.is_empty() {
+                return 0.0;
+            }
+            let i = ((latencies.len() as f64 - 1.0) * p).round() as usize;
+            latencies[i.min(latencies.len() - 1)]
+        };
+        let mut tenants: Vec<TenantSummary> = Vec::new();
+        for r in records {
+            match tenants.iter_mut().find(|t| t.name == r.tenant) {
+                Some(t) => {
+                    t.jobs += 1;
+                    t.evaluations += r.evaluations;
+                }
+                None => tenants.push(TenantSummary {
+                    name: r.tenant.clone(),
+                    weight: 1,
+                    jobs: 1,
+                    evaluations: r.evaluations,
+                }),
+            }
+        }
+        ReplaySummary {
+            jobs: records.len(),
+            ok: records.iter().filter(|r| r.ok).count(),
+            failed: records.iter().filter(|r| !r.ok).count(),
+            makespan_s: records.iter().map(|r| r.done_s).fold(0.0, f64::max),
+            mean_latency_s: if latencies.is_empty() {
+                0.0
+            } else {
+                latencies.iter().sum::<f64>() / latencies.len() as f64
+            },
+            p50_latency_s: pct(0.50),
+            p95_latency_s: pct(0.95),
+            max_latency_s: latencies.last().copied().unwrap_or(0.0),
+            evaluations: records.iter().map(|r| r.evaluations).sum(),
+            fairness: 1.0, // recomputed by with_weights
+            per_tenant: tenants,
+        }
+    }
+
+    /// Attach the trace's tenant weights and compute Jain's index
+    /// `J = (Σx)² / (n·Σx²)` over `x_t = evaluations_t / weight_t`.
+    pub fn with_weights(mut self, weights: &[(String, u64)]) -> ReplaySummary {
+        for t in &mut self.per_tenant {
+            if let Some((_, w)) = weights.iter().find(|(n, _)| *n == t.name) {
+                t.weight = (*w).max(1);
+            }
+        }
+        let xs: Vec<f64> = self
+            .per_tenant
+            .iter()
+            .map(|t| t.evaluations as f64 / t.weight as f64)
+            .collect();
+        let n = xs.len() as f64;
+        let sum: f64 = xs.iter().sum();
+        let sumsq: f64 = xs.iter().map(|x| x * x).sum();
+        self.fairness = if xs.len() < 2 || sumsq == 0.0 {
+            1.0
+        } else {
+            (sum * sum) / (n * sumsq)
+        };
+        self
+    }
+}
+
+impl std::fmt::Display for ReplaySummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "jobs: {} ok, {} failed / {} total",
+            self.ok, self.failed, self.jobs
+        )?;
+        writeln!(
+            f,
+            "makespan: {:.2}s  evaluations: {}  throughput: {:.1} eval/s",
+            self.makespan_s,
+            self.evaluations,
+            if self.makespan_s > 0.0 {
+                self.evaluations as f64 / self.makespan_s
+            } else {
+                0.0
+            }
+        )?;
+        writeln!(
+            f,
+            "latency: mean {:.2}s  p50 {:.2}s  p95 {:.2}s  max {:.2}s",
+            self.mean_latency_s, self.p50_latency_s, self.p95_latency_s,
+            self.max_latency_s
+        )?;
+        writeln!(f, "fairness (Jain, weight-normalised): {:.3}", self.fairness)?;
+        for t in &self.per_tenant {
+            writeln!(
+                f,
+                "  tenant {} (weight {}): {} jobs, {} evaluations",
+                t.name, t.weight, t.jobs, t.evaluations
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_overlay_respects_existing_plans() {
+        assert_eq!(overlay_faults("local:8", None), "local:8");
+        assert_eq!(
+            overlay_faults("local:8,pbs:32", Some("drop=0.1;hang=0.01")),
+            "local:8~drop=0.1;hang=0.01,pbs:32~drop=0.1;hang=0.01"
+        );
+        // a backend with its own plan is left alone
+        assert_eq!(
+            overlay_faults("local:8~drop=0.5,pbs:4", Some("hang=0.2")),
+            "local:8~drop=0.5,pbs:4~hang=0.2"
+        );
+        assert_eq!(overlay_faults("local:2", Some("")), "local:2");
+    }
+
+    #[test]
+    fn summary_statistics_are_correct() {
+        let rec = |idx, tenant: &str, release, done, evals, ok| JobRecord {
+            idx,
+            tenant: tenant.into(),
+            run: "explore".into(),
+            size: evals as usize,
+            release_s: release,
+            start_s: release,
+            done_s: done,
+            evaluations: evals,
+            ok,
+            error: None,
+        };
+        let records = vec![
+            rec(0, "a", 0.0, 2.0, 60, true),
+            rec(1, "a", 1.0, 2.0, 60, true),
+            rec(2, "b", 0.0, 4.0, 60, true),
+            rec(3, "b", 2.0, 3.0, 0, false),
+        ];
+        let s = ReplaySummary::from_records(&records)
+            .with_weights(&[("a".into(), 2), ("b".into(), 1)]);
+        assert_eq!((s.jobs, s.ok, s.failed), (4, 3, 1));
+        assert_eq!(s.makespan_s, 4.0);
+        assert_eq!(s.evaluations, 180);
+        // latencies: [2, 1, 4, 1] → sorted [1, 1, 2, 4]
+        assert_eq!(s.mean_latency_s, 2.0);
+        assert_eq!(s.p50_latency_s, 2.0);
+        assert_eq!(s.max_latency_s, 4.0);
+        // x_a = 120/2 = 60, x_b = 60/1 = 60 → perfectly fair
+        assert!((s.fairness - 1.0).abs() < 1e-12, "{}", s.fairness);
+        // starve b entirely → fairness drops to 1/n = 0.5
+        let skew = vec![rec(0, "a", 0.0, 1.0, 100, true), rec(1, "b", 0.0, 1.0, 0, true)];
+        let s = ReplaySummary::from_records(&skew)
+            .with_weights(&[("a".into(), 1), ("b".into(), 1)]);
+        assert!((s.fairness - 0.5).abs() < 1e-12, "{}", s.fairness);
+    }
+
+    #[test]
+    fn job_records_serialise_to_jsonl() {
+        let r = JobRecord {
+            idx: 3,
+            tenant: "alice".into(),
+            run: "explore".into(),
+            size: 32,
+            release_s: 1.0,
+            start_s: 1.5,
+            done_s: 2.5,
+            evaluations: 32,
+            ok: true,
+            error: None,
+        };
+        let line = r.to_json().to_string();
+        assert!(line.contains("\"idx\":3"), "{line}");
+        assert!(line.contains("\"latency_s\":1.5"), "{line}");
+        assert!(!line.contains("error"), "{line}");
+    }
+}

@@ -1,0 +1,436 @@
+//! Trace specification + seeded generation. Grammar in
+//! [`crate::workload`]; determinism contract: `(spec, seed)` fully
+//! determines the generated trace, byte for byte.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::Rng;
+
+/// How job releases are spaced over virtual time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arrival {
+    /// Fixed spacing in seconds (`uniform:0` = everything at t=0).
+    Uniform { spacing_s: f64 },
+    /// Poisson process: exponential inter-arrivals with the given rate
+    /// (jobs per second) — the WfCommons-style heavy-traffic shape.
+    Poisson { rate_per_s: f64 },
+    /// Groups of `size` simultaneous releases, `gap_s` apart.
+    Burst { size: usize, gap_s: f64 },
+}
+
+/// A parsed `--trace` specification.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSpec {
+    pub jobs: usize,
+    pub arrival: Arrival,
+    /// `(tenant, fair-share weight)` — jobs are assigned by weighted pick.
+    pub tenants: Vec<(String, u64)>,
+    /// `(method, weight)` job mix over `explore|calibrate|replicate`.
+    pub mix: Vec<(String, f64)>,
+    /// Explore design-size range, sampled log-uniformly (heavy-tailed
+    /// size distributions are the realistic case).
+    pub rows: (usize, usize),
+    /// `--chunk` forwarded to generated explore jobs.
+    pub chunk: usize,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec {
+            jobs: 16,
+            arrival: Arrival::Uniform { spacing_s: 0.0 },
+            tenants: vec![("alice".into(), 2), ("bob".into(), 1)],
+            mix: vec![("explore".into(), 1.0)],
+            rows: (32, 128),
+            chunk: 16,
+        }
+    }
+}
+
+fn bad(field: &str, got: &str) -> Error {
+    Error::Config(format!("bad trace spec field `{field}`: `{got}`"))
+}
+
+impl TraceSpec {
+    /// Parse `k=v;k=v;…` over the defaults. Unknown keys are hard errors
+    /// (a typo'd knob must not silently generate a different workload).
+    pub fn parse(s: &str) -> Result<TraceSpec> {
+        let mut spec = TraceSpec::default();
+        for part in s.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| bad("(entry)", part))?;
+            match key.trim() {
+                "jobs" => {
+                    spec.jobs = value.parse().map_err(|_| bad("jobs", value))?;
+                    if spec.jobs == 0 {
+                        return Err(bad("jobs", value));
+                    }
+                }
+                "arrival" => spec.arrival = parse_arrival(value)?,
+                "tenants" => {
+                    spec.tenants = value
+                        .split(',')
+                        .map(|t| {
+                            let (name, w) =
+                                t.split_once(':').ok_or_else(|| bad("tenants", t))?;
+                            let w: u64 =
+                                w.parse().map_err(|_| bad("tenants", t))?;
+                            if name.is_empty() || w == 0 {
+                                return Err(bad("tenants", t));
+                            }
+                            Ok((name.to_string(), w))
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    if spec.tenants.is_empty() {
+                        return Err(bad("tenants", value));
+                    }
+                }
+                "mix" => {
+                    spec.mix = value
+                        .split(',')
+                        .map(|m| {
+                            let (run, w) =
+                                m.split_once(':').ok_or_else(|| bad("mix", m))?;
+                            if !matches!(run, "explore" | "calibrate" | "replicate") {
+                                return Err(Error::Config(format!(
+                                    "trace mix method `{run}` \
+                                     (explore|calibrate|replicate)"
+                                )));
+                            }
+                            let w: f64 = w.parse().map_err(|_| bad("mix", m))?;
+                            if !(w.is_finite() && w > 0.0) {
+                                return Err(bad("mix", m));
+                            }
+                            Ok((run.to_string(), w))
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    if spec.mix.is_empty() {
+                        return Err(bad("mix", value));
+                    }
+                }
+                "rows" => {
+                    let (lo, hi) =
+                        value.split_once("..").ok_or_else(|| bad("rows", value))?;
+                    let lo: usize = lo.parse().map_err(|_| bad("rows", value))?;
+                    let hi: usize = hi.parse().map_err(|_| bad("rows", value))?;
+                    if lo == 0 || hi < lo {
+                        return Err(bad("rows", value));
+                    }
+                    spec.rows = (lo, hi);
+                }
+                "chunk" => {
+                    spec.chunk = value.parse().map_err(|_| bad("chunk", value))?;
+                    if spec.chunk == 0 {
+                        return Err(bad("chunk", value));
+                    }
+                }
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown trace spec key `{other}` \
+                         (jobs|arrival|tenants|mix|rows|chunk)"
+                    )))
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Generate the trace: seeded, deterministic, sorted by release time.
+    pub fn generate(&self, seed: u64) -> Trace {
+        let mut rng = Rng::new(seed ^ 0x776f_726b_6c6f_6164); // "workload"
+        let tenant_total: u64 = self.tenants.iter().map(|(_, w)| w).sum();
+        let mix_total: f64 = self.mix.iter().map(|(_, w)| w).sum();
+        let mut at = 0.0f64;
+        let mut jobs = Vec::with_capacity(self.jobs);
+        for idx in 0..self.jobs {
+            // release time
+            match &self.arrival {
+                Arrival::Uniform { spacing_s } => {
+                    if idx > 0 {
+                        at += spacing_s;
+                    }
+                }
+                Arrival::Poisson { rate_per_s } => {
+                    if idx > 0 && *rate_per_s > 0.0 {
+                        at += rng.exponential(1.0 / rate_per_s);
+                    }
+                }
+                Arrival::Burst { size, gap_s } => {
+                    if idx > 0 && idx % size.max(&1) == 0 {
+                        at += gap_s;
+                    }
+                }
+            }
+            // weighted tenant pick
+            let mut t = rng.next_u64() % tenant_total;
+            let (tenant, weight) = self
+                .tenants
+                .iter()
+                .find(|(_, w)| {
+                    if t < *w {
+                        true
+                    } else {
+                        t -= w;
+                        false
+                    }
+                })
+                .expect("weighted pick in range")
+                .clone();
+            // weighted method pick
+            let mut m = rng.f64() * mix_total;
+            let run = self
+                .mix
+                .iter()
+                .find(|(_, w)| {
+                    if m < *w {
+                        true
+                    } else {
+                        m -= w;
+                        false
+                    }
+                })
+                .map(|(r, _)| r.clone())
+                .unwrap_or_else(|| self.mix[0].0.clone());
+            // log-uniform size in the rows range
+            let (lo, hi) = self.rows;
+            let n = if lo == hi {
+                lo
+            } else {
+                let u = rng.range((lo as f64).ln(), (hi as f64).ln()).exp();
+                (u.round() as usize).clamp(lo, hi)
+            };
+            let job_seed = rng.next_u64();
+            let (argv, size) = method_argv(&run, n, self.chunk, &mut rng);
+            jobs.push(TraceJob {
+                idx,
+                at_s: at,
+                tenant,
+                weight,
+                run,
+                argv,
+                seed: job_seed,
+                size,
+            });
+        }
+        Trace { seed, jobs }
+    }
+}
+
+fn parse_arrival(value: &str) -> Result<Arrival> {
+    let mut it = value.split(':');
+    let kind = it.next().unwrap_or_default();
+    match kind {
+        "uniform" => {
+            let s: f64 = it
+                .next()
+                .unwrap_or("0")
+                .parse()
+                .map_err(|_| bad("arrival", value))?;
+            if !(s.is_finite() && s >= 0.0) {
+                return Err(bad("arrival", value));
+            }
+            Ok(Arrival::Uniform { spacing_s: s })
+        }
+        "poisson" => {
+            let r: f64 = it
+                .next()
+                .ok_or_else(|| bad("arrival", value))?
+                .parse()
+                .map_err(|_| bad("arrival", value))?;
+            if !(r.is_finite() && r > 0.0) {
+                return Err(bad("arrival", value));
+            }
+            Ok(Arrival::Poisson { rate_per_s: r })
+        }
+        "burst" => {
+            let size: usize = it
+                .next()
+                .ok_or_else(|| bad("arrival", value))?
+                .parse()
+                .map_err(|_| bad("arrival", value))?;
+            let gap: f64 = it
+                .next()
+                .unwrap_or("1")
+                .parse()
+                .map_err(|_| bad("arrival", value))?;
+            if size == 0 || !(gap.is_finite() && gap >= 0.0) {
+                return Err(bad("arrival", value));
+            }
+            Ok(Arrival::Burst { size, gap_s: gap })
+        }
+        _ => Err(bad("arrival", value)),
+    }
+}
+
+/// The method options one generated job submits, plus its nominal size
+/// (expected evaluations) for reporting.
+fn method_argv(run: &str, n: usize, chunk: usize, rng: &mut Rng) -> (Vec<String>, usize) {
+    match run {
+        "explore" => {
+            let sampling = if rng.bool(0.5) { "lhs" } else { "sobol" };
+            (
+                vec![
+                    "--n".into(),
+                    n.to_string(),
+                    "--chunk".into(),
+                    chunk.to_string(),
+                    "--sampling".into(),
+                    sampling.into(),
+                ],
+                n,
+            )
+        }
+        "calibrate" => {
+            // scale generations with the size draw, keep populations small
+            let generations = (n / 16).clamp(2, 8);
+            (
+                vec![
+                    "--mu".into(),
+                    "8".into(),
+                    "--lambda".into(),
+                    "8".into(),
+                    "--generations".into(),
+                    generations.to_string(),
+                    "--replications".into(),
+                    "1".into(),
+                ],
+                8 + 8 * generations,
+            )
+        }
+        "replicate" => {
+            let reps = 3 + rng.usize(5);
+            (
+                vec!["--replications".into(), reps.to_string()],
+                reps,
+            )
+        }
+        other => unreachable!("mix validated at parse time: `{other}`"),
+    }
+}
+
+/// One generated experiment submission.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceJob {
+    pub idx: usize,
+    /// Virtual release time (seconds from trace start).
+    pub at_s: f64,
+    pub tenant: String,
+    pub weight: u64,
+    pub run: String,
+    /// Method options (`--key value` pairs, no seed/out/env flags).
+    pub argv: Vec<String>,
+    /// Per-job seed (deterministically derived from the trace seed).
+    pub seed: u64,
+    /// Nominal size in evaluations (for reporting).
+    pub size: usize,
+}
+
+impl TraceJob {
+    /// One JSONL line (`--emit` format).
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("idx".to_string(), Json::Num(self.idx as f64));
+        m.insert("at_s".to_string(), Json::Num(self.at_s));
+        m.insert("tenant".to_string(), Json::Str(self.tenant.clone()));
+        m.insert("weight".to_string(), Json::Num(self.weight as f64));
+        m.insert("run".to_string(), Json::Str(self.run.clone()));
+        m.insert(
+            "argv".to_string(),
+            Json::Arr(self.argv.iter().cloned().map(Json::Str).collect()),
+        );
+        m.insert("seed_exact".to_string(), Json::Str(self.seed.to_string()));
+        m.insert("size".to_string(), Json::Num(self.size as f64));
+        Json::Obj(m)
+    }
+}
+
+/// A generated trace: the seed it came from + its jobs in release order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub seed: u64,
+    pub jobs: Vec<TraceJob>,
+}
+
+impl Trace {
+    /// The `--emit` artifact: one JSON line per job.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for j in &self.jobs {
+            out.push_str(&j.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_overrides_defaults_and_rejects_garbage() {
+        let spec = TraceSpec::parse(
+            "jobs=40;arrival=poisson:2;tenants=a:3,b:1;mix=explore:0.8,calibrate:0.2;\
+             rows=16..256;chunk=8",
+        )
+        .unwrap();
+        assert_eq!(spec.jobs, 40);
+        assert_eq!(spec.arrival, Arrival::Poisson { rate_per_s: 2.0 });
+        assert_eq!(spec.tenants, vec![("a".into(), 3), ("b".into(), 1)]);
+        assert_eq!(spec.rows, (16, 256));
+        assert_eq!(spec.chunk, 8);
+        assert_eq!(TraceSpec::parse("").unwrap(), TraceSpec::default());
+
+        for bad in [
+            "jobs=0",
+            "jobs=x",
+            "arrival=warp:1",
+            "arrival=poisson:-1",
+            "tenants=a:0",
+            "mix=island:1",
+            "mix=explore:0",
+            "rows=0..4",
+            "rows=9..3",
+            "chunk=0",
+            "turbo=1",
+        ] {
+            assert!(TraceSpec::parse(bad).is_err(), "`{bad}` should be rejected");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_in_spec_and_seed() {
+        let spec = TraceSpec::parse("jobs=24;arrival=poisson:4;rows=8..64").unwrap();
+        let a = spec.generate(7);
+        let b = spec.generate(7);
+        assert_eq!(a, b, "same spec+seed → identical trace");
+        assert_eq!(a.to_jsonl(), b.to_jsonl());
+        let c = spec.generate(8);
+        assert_ne!(a, c, "different seed → different trace");
+    }
+
+    #[test]
+    fn generated_jobs_respect_the_spec() {
+        let spec = TraceSpec::parse(
+            "jobs=50;arrival=burst:10:5;tenants=x:1;mix=explore:1;rows=8..32",
+        )
+        .unwrap();
+        let t = spec.generate(1);
+        assert_eq!(t.jobs.len(), 50);
+        for j in &t.jobs {
+            assert_eq!(j.tenant, "x");
+            assert_eq!(j.run, "explore");
+            assert!((8..=32).contains(&j.size), "size {} in rows range", j.size);
+            // release times: 5 bursts of 10, 5 s apart
+            let burst = j.idx / 10;
+            assert_eq!(j.at_s, burst as f64 * 5.0, "job {} release", j.idx);
+        }
+        // release order is non-decreasing for every arrival process
+        let spec = TraceSpec::parse("jobs=30;arrival=poisson:3").unwrap();
+        let t = spec.generate(3);
+        for w in t.jobs.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s);
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! End-to-end provenance: run a real experiment, emit its manifest, and
+//! prove `reexec` reproduces the result byte-for-byte from the manifest
+//! alone — then prove every way the chain can break is a *named*
+//! provenance error, never a silent success.
+//!
+//! All tests pin `MOLERS_ARTIFACTS=/nonexistent-artifacts` (deterministic
+//! rust-sim evaluator) and a small `MOLERS_SIM_TICKS`, exactly like the
+//! serve e2e suite.
+
+use std::path::PathBuf;
+
+use molers::cli::{front, Args};
+use molers::provenance;
+
+fn pin_env() {
+    std::env::set_var("MOLERS_ARTIFACTS", "/nonexistent-artifacts");
+    std::env::set_var("MOLERS_SIM_TICKS", "6");
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("molers-prov-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn parse(argv: &[&str]) -> Args {
+    Args::parse(argv.iter().map(|s| s.to_string())).unwrap()
+}
+
+/// Run an explore sweep to `out` and emit its manifest; returns the
+/// manifest path.
+fn explore_with_manifest(out: &std::path::Path, seed: &str) -> String {
+    let args = parse(&[
+        "explore",
+        "--n",
+        "48",
+        "--chunk",
+        "16",
+        "--seed",
+        seed,
+        "--out",
+        out.to_str().unwrap(),
+    ]);
+    let exp = front::by_name("explore", &args).unwrap().quiet();
+    let report = exp.run().unwrap();
+    let result_path = report.outcome.result_path.clone().expect("explore writes --out");
+    provenance::emit_for_cli("explore", &args, &exp, &result_path)
+        .unwrap()
+        .expect("concrete env spec → manifest")
+}
+
+#[test]
+fn explore_reexec_is_byte_identical_without_original_artifacts() {
+    pin_env();
+    let dir = tmp_dir("roundtrip");
+    let out = dir.join("sweep.csv");
+    let manifest = explore_with_manifest(&out, "11");
+
+    // the manifest is enough: delete the original result AND never hand
+    // reexec a journal — the digest assertion still has the recorded hash
+    let recorded = std::fs::read(&out).unwrap();
+    std::fs::remove_file(&out).unwrap();
+    let rep = provenance::reexec(&manifest, &parse(&["reexec", &manifest])).unwrap();
+    assert_eq!(rep.run, "explore");
+    assert!(rep.evaluations >= 48, "{}", rep.evaluations);
+    assert!(rep.regenerated.is_none(), "scratch file is cleaned up");
+
+    // --out keeps the regenerated file, byte-identical to the original
+    let kept = dir.join("regen.csv");
+    let rx = parse(&["reexec", &manifest, "--out", kept.to_str().unwrap()]);
+    let rep = provenance::reexec(&manifest, &rx).unwrap();
+    assert_eq!(rep.regenerated.as_deref(), Some(kept.as_path()));
+    assert_eq!(std::fs::read(&kept).unwrap(), recorded);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tampered_result_is_a_named_error() {
+    pin_env();
+    let dir = tmp_dir("tamper");
+    let out = dir.join("sweep.csv");
+    let manifest = explore_with_manifest(&out, "13");
+
+    let mut bytes = std::fs::read(&out).unwrap();
+    bytes.extend_from_slice(b"# one extra row\n");
+    std::fs::write(&out, bytes).unwrap();
+
+    let err = provenance::reexec(&manifest, &parse(&["reexec", &manifest]))
+        .unwrap_err()
+        .to_string();
+    assert!(err.starts_with("provenance error [result-tampered]"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn env_override_mismatch_is_named_and_ignorable() {
+    pin_env();
+    let dir = tmp_dir("envovr");
+    let out = dir.join("sweep.csv");
+    let manifest = explore_with_manifest(&out, "17");
+
+    // a different fleet than the record → named refusal
+    let rx = parse(&["reexec", &manifest, "--envs", "local:2,local:2"]);
+    let err = provenance::reexec(&manifest, &rx).unwrap_err().to_string();
+    assert!(err.starts_with("provenance error [env-fleet-mismatch]"), "{err}");
+
+    // --ignore-compat downgrades the refusal; the run still happens on
+    // the *recorded* fleet, so the digest assertion passes
+    let rx = parse(&[
+        "reexec",
+        &manifest,
+        "--envs",
+        "local:2,local:2",
+        "--ignore-compat",
+    ]);
+    provenance::reexec(&manifest, &rx).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn patched_build_record_is_a_named_error() {
+    pin_env();
+    let dir = tmp_dir("build");
+    let out = dir.join("sweep.csv");
+    let manifest = explore_with_manifest(&out, "19");
+
+    let text = std::fs::read_to_string(&manifest).unwrap();
+    let ours = format!("\"crate_version\":\"{}\"", env!("CARGO_PKG_VERSION"));
+    assert!(text.contains(&ours), "{text}");
+    std::fs::write(
+        &manifest,
+        text.replace(&ours, "\"crate_version\":\"0.0.0-elsewhere\""),
+    )
+    .unwrap();
+
+    let err = provenance::reexec(&manifest, &parse(&["reexec", &manifest]))
+        .unwrap_err()
+        .to_string();
+    assert!(err.starts_with("provenance error [build-mismatch]"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn calibrate_front_reexec_roundtrip() {
+    pin_env();
+    let dir = tmp_dir("calibrate");
+    let args = parse(&[
+        "calibrate",
+        "--mu",
+        "6",
+        "--lambda",
+        "6",
+        "--generations",
+        "2",
+        "--replications",
+        "1",
+        "--seed",
+        "23",
+    ]);
+    let exp = front::by_name("calibrate", &args).unwrap().quiet();
+    let report = exp.run().unwrap();
+    assert!(!report.outcome.pareto_front.is_empty());
+
+    // the CLI writes the durable front file, then the manifest over it
+    let front_path = dir.join("front.jsonl");
+    provenance::write_front_file(&front_path, &report.outcome.pareto_front).unwrap();
+    let manifest = provenance::emit_for_cli(
+        "calibrate",
+        &args,
+        &exp,
+        front_path.to_str().unwrap(),
+    )
+    .unwrap()
+    .expect("concrete env spec → manifest");
+
+    let rep = provenance::reexec(&manifest, &parse(&["reexec", &manifest])).unwrap();
+    assert_eq!(rep.run, "calibrate");
+    assert!(rep.evaluations > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn garbage_manifest_is_named_malformed() {
+    pin_env();
+    let dir = tmp_dir("malformed");
+    let path = dir.join("x.manifest.json");
+    std::fs::write(&path, "{\"kind\":\"something-else\"}").unwrap();
+    let p = path.to_str().unwrap().to_string();
+    let err = provenance::reexec(&p, &parse(&["reexec", &p]))
+        .unwrap_err()
+        .to_string();
+    assert!(err.starts_with("provenance error [manifest-malformed]"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,192 @@
+//! Workload generator end-to-end: deterministic trace generation, an
+//! in-process replay through broker + fair-share, and a remote replay
+//! against a live `molers serve` daemon — which doubles as the proof
+//! that the daemon's provenance manifests reexec byte-identically.
+//!
+//! `MOLERS_ARTIFACTS`/`MOLERS_SIM_TICKS` are pinned to the same values
+//! the daemon is spawned with, so the in-process reexec at the end runs
+//! the same evaluator the daemon did.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use molers::broker::RetryPolicy;
+use molers::cli::Args;
+use molers::util::json::Json;
+use molers::workload::{replay_local, replay_remote, ReplayConfig, ReplaySummary, TraceSpec};
+
+const SIM_TICKS: &str = "40";
+
+fn pin_env() {
+    std::env::set_var("MOLERS_ARTIFACTS", "/nonexistent-artifacts");
+    std::env::set_var("MOLERS_SIM_TICKS", SIM_TICKS);
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("molers-wl-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn trace_generation_is_deterministic_and_on_spec() {
+    let spec = TraceSpec::parse(
+        "jobs=12;arrival=poisson:2;tenants=alice:3,bob:1;mix=explore:3,replicate:1;rows=16..64",
+    )
+    .unwrap();
+    let a = spec.generate(9);
+    let b = spec.generate(9);
+    assert_eq!(a.to_jsonl(), b.to_jsonl(), "same seed → same trace");
+    assert_ne!(
+        a.to_jsonl(),
+        spec.generate(10).to_jsonl(),
+        "different seed → different trace"
+    );
+    assert_eq!(a.jobs.len(), 12);
+    assert!(a.jobs.iter().all(|j| j.tenant == "alice" || j.tenant == "bob"));
+    assert!(a.jobs.iter().all(|j| j.run == "explore" || j.run == "replicate"));
+    let mut at = 0.0;
+    for j in &a.jobs {
+        assert!(j.at_s >= at, "release times are monotone");
+        at = j.at_s;
+    }
+}
+
+#[test]
+fn local_replay_completes_every_job() {
+    pin_env();
+    let dir = tmp_dir("local");
+    let spec =
+        TraceSpec::parse("jobs=6;arrival=uniform:0;mix=explore:1;rows=16..32;chunk=8").unwrap();
+    let trace = spec.generate(3);
+    let cfg = ReplayConfig {
+        lanes: 2,
+        workdir: dir.clone(),
+        ..ReplayConfig::default()
+    };
+    let records = replay_local(&trace, &cfg).unwrap();
+    assert_eq!(records.len(), 6);
+    for r in &records {
+        assert!(r.ok, "job {} failed: {:?}", r.idx, r.error);
+        assert!(r.evaluations > 0);
+        assert!(r.done_s >= r.start_s);
+    }
+    let summary = ReplaySummary::from_records(&records).with_weights(&spec.tenants);
+    assert_eq!((summary.jobs, summary.ok, summary.failed), (6, 6, 0));
+    assert!(summary.fairness > 0.0 && summary.fairness <= 1.0 + 1e-12);
+    assert!(summary.makespan_s > 0.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fault_overlay_still_completes_under_retries() {
+    pin_env();
+    let dir = tmp_dir("fault");
+    let spec = TraceSpec::parse("jobs=4;mix=explore:1;rows=16..24;chunk=8").unwrap();
+    let trace = spec.generate(5);
+    let cfg = ReplayConfig {
+        envs: "local:4,local:4".into(),
+        fault: Some("drop=0.05".into()),
+        lanes: 2,
+        retry: RetryPolicy {
+            backoff_base_s: 0.01,
+            backoff_max_s: 0.05,
+            ..RetryPolicy::default()
+        },
+        workdir: dir.clone(),
+        ..ReplayConfig::default()
+    };
+    let records = replay_local(&trace, &cfg).unwrap();
+    assert_eq!(records.iter().filter(|r| r.ok).count(), 4, "retries absorb drops");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------- daemon
+
+/// A running daemon; killed on drop so a failing test never leaks it.
+struct Daemon {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn start_server(dir: &Path) -> Daemon {
+    let addr_file = dir.join("addr");
+    let _ = std::fs::remove_file(&addr_file);
+    let child = Command::new(env!("CARGO_BIN_EXE_molers"))
+        .env("MOLERS_ARTIFACTS", "/nonexistent-artifacts")
+        .env("MOLERS_SIM_TICKS", SIM_TICKS)
+        .args(["serve", "--addr", "127.0.0.1:0", "--state-dir"])
+        .arg(dir)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn molers serve");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let addr = loop {
+        if let Ok(text) = std::fs::read_to_string(&addr_file) {
+            let addr = text.trim().to_string();
+            if !addr.is_empty() && std::net::TcpStream::connect(&addr).is_ok() {
+                break addr;
+            }
+        }
+        assert!(Instant::now() < deadline, "daemon never came up");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    Daemon { child, addr }
+}
+
+fn request(addr: &str, line: &str) -> Json {
+    use std::io::{BufRead, BufReader, Write};
+    let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+    writeln!(stream, "{line}").unwrap();
+    let mut resp = String::new();
+    BufReader::new(stream).read_line(&mut resp).unwrap();
+    molers::util::json::parse(resp.trim_end()).expect("json response")
+}
+
+#[test]
+fn remote_replay_drives_a_live_daemon_and_its_manifests_reexec() {
+    pin_env();
+    let dir = tmp_dir("remote");
+    let daemon = start_server(&dir);
+
+    let spec = TraceSpec::parse(
+        "jobs=4;arrival=uniform:0;tenants=alice:2,bob:1;mix=explore:1;rows=16..32;chunk=8",
+    )
+    .unwrap();
+    let trace = spec.generate(7);
+    let records =
+        replay_remote(&trace, &daemon.addr, 0.0, Duration::from_millis(50)).unwrap();
+    assert_eq!(records.len(), 4);
+    for r in &records {
+        assert!(r.ok, "job {} failed: {:?}", r.idx, r.error);
+        assert!(r.evaluations > 0);
+    }
+
+    // satellite: once terminal, status advertises the provenance manifest
+    let status = request(&daemon.addr, "{\"cmd\":\"status\",\"id\":1}");
+    let manifest = status
+        .get("manifest")
+        .and_then(Json::as_str)
+        .expect("terminal explore status carries `manifest`")
+        .to_string();
+    assert!(Path::new(&manifest).exists(), "{manifest}");
+
+    // acceptance: the daemon's manifest reexecs byte-identically in-process
+    let args = Args::parse(["reexec".to_string(), manifest.clone()]).unwrap();
+    let rep = molers::provenance::reexec(&manifest, &args).unwrap();
+    assert_eq!(rep.run, "explore");
+    assert!(rep.evaluations > 0);
+
+    drop(daemon);
+    let _ = std::fs::remove_dir_all(&dir);
+}
